@@ -1,0 +1,55 @@
+//! Memory-footprint demo (the Table 8 accounting, interactive form):
+//! exact byte accounting for weights + optimizer state across methods and
+//! model sizes, demonstrating QES's d-independent optimizer state.
+//!
+//! Run: `cargo run --release --example memory_footprint`
+
+use qes::model::ParamStore;
+use qes::opt::{EsHyper, LatticeOptimizer, QesFullResidual, QuzoOptimizer, SeedReplayQes};
+use qes::quant::Format;
+use qes::runtime::Manifest;
+use qes::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::load("artifacts/manifest.json")?;
+    println!(
+        "{:<8} {:<6} {:>12} {:>14} {:>14} {:>14}",
+        "model", "fmt", "weights", "quzo state", "full-res state", "qes state"
+    );
+    for size in man.configs.keys() {
+        for fmt in [Format::Int4, Format::Int8, Format::W8A8] {
+            let store = ParamStore::from_manifest(&man, size, fmt)?;
+            let d = store.lattice_dim();
+            let hyper = EsHyper { pairs: 25, k_window: 50, ..Default::default() };
+            let quzo = QuzoOptimizer::new(d, fmt.qmax(), hyper.clone());
+            let full = QesFullResidual::new(d, fmt.qmax(), hyper.clone());
+            // fill replay history to K for honest worst-case accounting
+            let mut replay = SeedReplayQes::new(d, fmt.qmax(), hyper.clone());
+            let mut s2 = store.clone();
+            let mut rng = qes::rng::SplitMix64::new(1);
+            for _ in 0..hyper.k_window {
+                let spec = qes::opt::PopulationSpec {
+                    gen_seed: rng.next_u64(),
+                    pairs: hyper.pairs,
+                    sigma: 0.01,
+                };
+                replay.update(&mut s2, &spec, &vec![0.0; spec.n_members()])?;
+            }
+            println!(
+                "{:<8} {:<6} {:>12} {:>14} {:>14} {:>14}",
+                size,
+                fmt.name(),
+                human_bytes(store.weight_bytes()),
+                human_bytes(quzo.state_bytes()),
+                human_bytes(full.state_bytes()),
+                human_bytes(replay.state_bytes()),
+            );
+        }
+    }
+    println!(
+        "\nQES's optimizer state is K*(seed + population rewards) — constant in d.\n\
+         The full-residual oracle pays 2 bytes (FP16) per lattice parameter.\n\
+         A QAT-style first-order pipeline pays 16 bytes/param (w,g,m,v in fp32)."
+    );
+    Ok(())
+}

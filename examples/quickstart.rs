@@ -1,0 +1,82 @@
+//! Quickstart: the whole QES pipeline in one minute on the nano backbone.
+//!
+//! 1. initialize + briefly pretrain an fp32 base model on Countdown,
+//! 2. post-training-quantize it to INT4 (symmetric per-channel grid),
+//! 3. fine-tune DIRECTLY on the integer lattice with QES (Algorithm 2:
+//!    accumulated error feedback + stateless seed replay),
+//! 4. report accuracy and the optimizer-state footprint.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first)
+
+use qes::coordinator::{
+    eval_problems, finetune_gen, pretrain_gen, EngineSet, FinetuneCfg, PretrainCfg, Session,
+    Variant,
+};
+use qes::model::{init::init_fp, ParamStore};
+use qes::opt::EsHyper;
+use qes::quant::Format;
+use qes::runtime::Manifest;
+use qes::tasks::gen_task;
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::load("artifacts/manifest.json")?;
+
+    // --- 1. base model ---
+    println!("== pretraining a base model (fp32, 600 Adam steps) ==");
+    let fp_session = Session::new(&man, "nano", Format::Fp32, EngineSet::pretrain())?;
+    let task = gen_task("countdown", fp_session.cfg.s_prompt, fp_session.cfg.t_dec)?;
+    let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32)?;
+    init_fp(&mut fp, 1);
+    let loss = pretrain_gen(
+        &fp_session,
+        task.as_ref(),
+        &mut fp,
+        &PretrainCfg { steps: 600, verbose: false, ..Default::default() },
+    )?;
+    println!("   final pretraining loss: {:.3}", loss);
+
+    // --- 2. quantize ---
+    println!("== PTQ to INT4 (symmetric per-output-channel grid) ==");
+    let mut q = ParamStore::quantize_from(&fp, &man, Format::Int4, None)?;
+    println!(
+        "   {} lattice params in [-7, 7], packed weights: {}",
+        q.lattice_dim(),
+        qes::util::human_bytes(q.weight_bytes())
+    );
+
+    // --- 3. QES fine-tuning on the lattice ---
+    println!("== QES fine-tuning (stateless seed replay) ==");
+    let session = Session::new(&man, "nano", Format::Int4, EngineSet::gen_only())?;
+    let evalset = eval_problems(task.as_ref(), 64, 42);
+    let base_acc =
+        qes::coordinator::eval_accuracy_gen(&session, task.as_ref(), &q, &evalset)?;
+    let cfg = FinetuneCfg {
+        hyper: EsHyper { sigma: 0.02, alpha: 0.1, gamma: 0.97, pairs: 8, k_window: 8 },
+        gens: 30,
+        tau: 0.0,
+        batches_per_gen: 2,
+        train_pool: 128,
+        eval_every: 10,
+        eval_n: 64,
+        seed: 42,
+        verbose: true,
+    };
+    let log = finetune_gen(&session, task.as_ref(), &mut q, Variant::Qes, &cfg, None)?;
+
+    // --- 4. report ---
+    println!("\n== results ==");
+    println!("   base INT4 accuracy:      {:.2}%", base_acc);
+    println!("   after QES fine-tuning:   {:.2}%", log.final_acc);
+    println!(
+        "   optimizer state:         {} (vs {} for an fp16-residual oracle)",
+        qes::util::human_bytes(log.optimizer_state_bytes),
+        qes::util::human_bytes(2 * q.lattice_dim() as u64),
+    );
+    println!(
+        "   mean rollout {:.0} ms / update {:.0} ms per generation",
+        log.mean_rollout_ms(),
+        log.mean_update_ms()
+    );
+    Ok(())
+}

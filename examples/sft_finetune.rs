@@ -1,0 +1,65 @@
+//! SFT example: k-shot classification fine-tuning on the W8 lattice
+//! (the Table 1 setting) — QES vs QuZO on SNLI-syn, fitness = -CE on the
+//! 16-shot train batches (LM-BFF verbalizer protocol).
+//!
+//! Run: `cargo run --release --example sft_finetune`
+
+use qes::coordinator::{
+    finetune_cls, pretrain_cls, EngineSet, FinetuneCfg, PretrainCfg, Session, Variant,
+};
+use qes::model::{init::init_fp, ParamStore};
+use qes::opt::EsHyper;
+use qes::quant::Format;
+use qes::runtime::Manifest;
+use qes::tasks::cls_task;
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::load("artifacts/manifest.json")?;
+    let task = cls_task("snli")?;
+
+    println!("== LM-warmup of the backbone (fp32) ==");
+    let fp_session = Session::new(&man, "nano", Format::Fp32, EngineSet {
+        grad: true,
+        cls: true,
+        ..Default::default()
+    })?;
+    let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32)?;
+    init_fp(&mut fp, 3);
+    pretrain_cls(
+        &fp_session,
+        task.as_ref(),
+        &mut fp,
+        &PretrainCfg { steps: 200, verbose: false, ..Default::default() },
+    )?;
+
+    println!("== quantize to W8 (the paper's SFT backbone precision) ==");
+    let q0 = ParamStore::quantize_from(&fp, &man, Format::Int8, None)?;
+    let session = Session::new(&man, "nano", Format::Int8, EngineSet::cls_only())?;
+
+    let cfg = FinetuneCfg {
+        hyper: EsHyper { sigma: 0.02, alpha: 0.3, gamma: 0.95, pairs: 8, k_window: 8 },
+        gens: 120,
+        tau: 0.0,
+        batches_per_gen: 1,
+        train_pool: 0,
+        eval_every: 30,
+        eval_n: 96,
+        seed: 42,
+        verbose: true,
+    };
+    for (name, variant) in [("QES", Variant::Qes), ("QuZO", Variant::Quzo)] {
+        let mut store = q0.clone();
+        let log = finetune_cls(
+            &session, task.as_ref(), &mut store, variant, &cfg, 16, None,
+        )?;
+        println!(
+            "{}: final eval accuracy {:.2}% (fitness {:.4} -> {:.4}), state {}",
+            name,
+            log.final_acc,
+            log.entries.first().map(|e| e.mean_reward).unwrap_or(0.0),
+            log.entries.last().map(|e| e.mean_reward).unwrap_or(0.0),
+            qes::util::human_bytes(log.optimizer_state_bytes)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,161 @@
+"""AOT pipeline: lower every exported L2 function to HLO *text* + manifest.
+
+HLO text (NOT ``lowered.compiler_ir('hlo')`` protos, NOT ``.serialize()``) is
+the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the rust crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs (under ``artifacts/``):
+
+* ``{config}_{format}_{fn}.hlo.txt`` — one module per exported function;
+* ``manifest.json`` — the contract with the Rust runtime: model configs,
+  per-format parameter layouts (names, dtypes, shapes, init hints) and, per
+  artifact, the exact positional input/output specs the Rust side marshals.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--sizes nano,micro]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS
+from . import model as M
+
+FORMATS = ("wq", "w8a8", "fp")
+FNS = ("gen", "loss", "cls")          # + "grad" for fp
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"int32": "i32", "float32": "f32", "int8": "i8"}[jnp.dtype(dt).name]
+
+
+def param_arg_structs(cfg, fmt):
+    structs = []
+    for name, dt, shape in M.flat_args_for(cfg, fmt):
+        jdt = {"i8": jnp.int8, "f32": jnp.float32}[dt]
+        structs.append(jax.ShapeDtypeStruct(shape, jdt))
+    return structs
+
+
+def param_manifest(cfg, fmt):
+    """Per-format parameter layout with kinds + init hints for the Rust side."""
+    specs = {s.name: s for s in M.param_specs(cfg)}
+    out = []
+    for name, dt, shape in M.flat_args_for(cfg, fmt):
+        base = name[:-2] if name.endswith((".q", ".s")) else name
+        spec = specs[base]
+        if name.endswith(".q"):
+            kind = "lattice_q"
+        elif name.endswith(".s"):
+            kind = "scale"
+        else:
+            kind = "lattice_as_fp" if spec.kind == "lattice" else "fp"
+        entry = {"name": name, "dtype": dt, "shape": list(shape), "kind": kind}
+        if kind in ("fp", "lattice_as_fp"):
+            entry["init"] = list(spec.init)
+        out.append(entry)
+    return out
+
+
+def lower_one(cfg, fmt, which):
+    fn = M.exported_fn(cfg, fmt, which)
+    data = M.example_data_args(cfg, which)
+    args = [s for _, s in data] + param_arg_structs(cfg, fmt)
+    lowered = jax.jit(fn).lower(*args)
+    out_shapes = jax.eval_shape(fn, *args)
+    outputs = [
+        {"dtype": _dtype_name(o.dtype), "shape": list(o.shape)}
+        for o in jax.tree_util.tree_leaves(out_shapes)
+    ]
+    data_inputs = [
+        {"name": n, "dtype": _dtype_name(s.dtype), "shape": list(s.shape)}
+        for n, s in data
+    ]
+    return to_hlo_text(lowered), data_inputs, outputs
+
+
+def build(out_dir: str, sizes, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "configs": {},
+        "params": {},
+        "artifacts": [],
+    }
+    for size in sizes:
+        cfg = CONFIGS[size]
+        manifest["configs"][size] = {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "s_prompt": cfg.s_prompt,
+            "t_dec": cfg.t_dec,
+            "s_train": cfg.s_train,
+            "b_gen": cfg.b_gen,
+            "b_train": cfg.b_train,
+            "lattice_params": cfg.lattice_param_count(),
+        }
+        manifest["params"][size] = {
+            fmt: param_manifest(cfg, fmt) for fmt in FORMATS
+        }
+        for fmt in FORMATS:
+            fns = FNS + (("grad",) if fmt == "fp" else ())
+            for which in fns:
+                fname = f"{size}_{fmt}_{which}.hlo.txt"
+                if verbose:
+                    print(f"[aot] lowering {fname} ...", flush=True)
+                text, data_inputs, outputs = lower_one(cfg, fmt, which)
+                path = os.path.join(out_dir, fname)
+                with open(path, "w") as f:
+                    f.write(text)
+                manifest["artifacts"].append({
+                    "file": fname,
+                    "config": size,
+                    "format": fmt,
+                    "fn": which,
+                    "data_inputs": data_inputs,
+                    "n_param_inputs": len(M.flat_args_for(cfg, fmt)),
+                    "outputs": outputs,
+                    "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                })
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"[aot] wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="nano,micro,small",
+                    help="comma-separated subset of " + ",".join(CONFIGS))
+    args = ap.parse_args()
+    sizes = [s for s in args.sizes.split(",") if s]
+    unknown = [s for s in sizes if s not in CONFIGS]
+    if unknown:
+        sys.exit(f"unknown sizes: {unknown}")
+    build(args.out_dir, sizes)
+
+
+if __name__ == "__main__":
+    main()

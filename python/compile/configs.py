@@ -1,0 +1,56 @@
+"""Model-family configuration — the single source of truth for shapes.
+
+The Rust coordinator never reads this file; it reads the ``manifest.json``
+that ``aot.py`` derives from it. Sizes are scaled for the single-core CPU
+PJRT testbed (see DESIGN.md §2 substitutions): they stand in for the paper's
+Qwen2.5-1.5B/-3B and Llama-3.1-8B backbones. The *lattice geometry* —
+which is what QES's mechanisms act on — is preserved exactly.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int          # token vocabulary (char-level; mirrors rust tokenizer)
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    s_prompt: int       # fixed (left-padded) prompt length for generation
+    t_dec: int          # decode steps in the `gen` artifact
+    s_train: int        # sequence length for the `loss`/`cls`/`grad` artifacts
+    b_gen: int          # generation batch (problems per PJRT call)
+    b_train: int        # training/loss batch
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def s_total(self) -> int:
+        return self.s_prompt + self.t_dec
+
+    def lattice_param_count(self) -> int:
+        """Number of integer-lattice (quantized) parameters."""
+        per_layer = 4 * self.d_model * self.d_model + 2 * self.d_model * self.d_ff
+        return self.n_layers * per_layer
+
+
+# Char-level vocabulary is defined by the Rust tokenizer; both sides agree on
+# its size. 48 symbols cover digits, operators, separators and a small
+# letterset for the SFT templates.
+VOCAB = 48
+
+CONFIGS = {
+    # paper analog: RoBERTa-large (SFT backbone) — smallest, fastest
+    "nano": ModelConfig("nano", VOCAB, 48, 2, 3, 96, 16, 12, 32, 8, 8),
+    # paper analog: Qwen2.5-1.5B
+    "micro": ModelConfig("micro", VOCAB, 96, 3, 4, 192, 24, 16, 48, 8, 8),
+    # paper analog: Qwen2.5-3B
+    "small": ModelConfig("small", VOCAB, 160, 5, 5, 320, 24, 16, 48, 8, 8),
+    # paper analog: Llama-3.1-8B (scaling case study, Table 5)
+    "base": ModelConfig("base", VOCAB, 256, 6, 8, 512, 24, 20, 48, 8, 8),
+}

@@ -1,0 +1,24 @@
+"""Layer-1 Pallas kernels for QES.
+
+The compute hot-spot of QES rollouts is the quantized linear layer:
+dequantize an integer-lattice weight tensor with per-output-channel scales
+and multiply. Two variants are provided:
+
+- ``quant_matmul``: weights on the INT-B lattice (stored as int8), activations
+  in FP32. Used for the paper's INT4/INT8 formats (the bit-width only changes
+  the lattice *range*, which the Rust coordinator enforces; the dequant math
+  ``w * s`` is identical).
+- ``w8a8_matmul``: additionally quantizes the activations to INT8 with a
+  dynamic per-tensor absmax scale, emulating the paper's W8A8 format.
+
+All kernels run under ``interpret=True`` so they lower to plain HLO and run
+on the CPU PJRT client (real-TPU lowering would emit a Mosaic custom-call the
+CPU plugin cannot execute). Correctness is pinned against the pure-jnp
+oracles in :mod:`ref` by the pytest suite.
+"""
+
+from .quant_matmul import quant_matmul
+from .w8a8_matmul import w8a8_matmul
+from . import ref
+
+__all__ = ["quant_matmul", "w8a8_matmul", "ref"]

@@ -1,0 +1,81 @@
+"""Weight-only quantized matmul as a Pallas kernel.
+
+Computes ``x @ (q * scale)`` where ``q`` is an int8 lattice tensor and
+``scale`` a per-output-channel f32 vector — the forward hot-spot of every
+quantized linear layer in the QES backbone (paper §4.1: GPTQ-style symmetric
+per-channel grids).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks output tiles
+(M/bm, N/bn) with an inner accumulation loop over K/bk. Each step brings an
+int8 weight tile HBM→VMEM, dequantizes it once in VMEM (the analog of CUDA's
+dequant-into-shared-memory idiom), and feeds the f32 tile to the MXU. The
+accumulator lives in the output ref across the k-steps of one (m, n) tile.
+
+CPU execution uses ``interpret=True`` — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, q_ref, s_ref, o_ref, *, n_k: int):
+    """One (m, n, k) grid step: o[m,n] += x[m,k] @ dequant(q[k,n])."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = q_ref[...].astype(jnp.float32) * s_ref[...][None, :]
+    o_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (block shapes must tile
+    the array exactly so the interpret path and the BlockSpec agree)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def quant_matmul(x, q, scale, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """``x @ (q.astype(f32) * scale)`` via a tiled Pallas kernel.
+
+    Args:
+      x: f32[M, K] activations.
+      q: int8[K, N] lattice weights.
+      scale: f32[N] per-output-channel scales.
+      bm/bn/bk: tile-size *targets*; actual tiles are the largest divisors
+        of each dimension not exceeding the target.
+
+    Returns:
+      f32[M, N].
+    """
+    m, k = x.shape
+    k2, n = q.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert scale.shape == (n,), f"scale must be [{n}], got {scale.shape}"
+
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, q, scale)

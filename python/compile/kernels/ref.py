@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+These are the ground truth the Pallas kernels are pinned against. They are
+deliberately written in the most obvious way possible — no tiling, no
+cleverness — so that a mismatch always indicts the kernel.
+
+Quantization convention (matches the paper, Appendix A.1, and the Rust
+``quant`` module):
+
+* symmetric, per-output-channel grid;
+* scale ``s_j = max_i |W_ij| / (2^{B-1} - 1)``;
+* lattice range ``[-(2^{B-1}-1), 2^{B-1}-1]`` (note: -8 is *excluded* for
+  INT4, keeping the grid symmetric);
+* dequantization ``W_ij = q_ij * s_j``.
+
+Weights are stored as int8 regardless of B; the lattice *range* is enforced
+by the caller (the Rust coordinator's boundary gating, Eq. 4 of the paper).
+"""
+
+import jax.numpy as jnp
+
+# INT8 activation grid for W8A8 (symmetric, per-tensor, dynamic).
+A8_QMAX = 127.0
+
+
+def dequant(q, scale):
+    """Dequantize a lattice tensor.
+
+    Args:
+      q: int8[K, N] lattice values.
+      scale: f32[N] per-output-channel scales.
+
+    Returns:
+      f32[K, N] dequantized weights.
+    """
+    return q.astype(jnp.float32) * scale[None, :]
+
+
+def quant_matmul_ref(x, q, scale):
+    """Oracle for the weight-only quantized matmul.
+
+    Args:
+      x: f32[M, K] activations.
+      q: int8[K, N] lattice weights.
+      scale: f32[N] per-channel scales.
+
+    Returns:
+      f32[M, N] = x @ dequant(q, scale).
+    """
+    return jnp.matmul(x, dequant(q, scale), preferred_element_type=jnp.float32)
+
+
+def quantize_act_ref(x):
+    """Dynamic symmetric per-tensor INT8 quantization of activations.
+
+    Returns (q, s) with q = round(x / s) clipped to [-127, 127] and
+    s = absmax(x) / 127 (with a floor to avoid division by zero on an
+    all-zero tensor).
+    """
+    absmax = jnp.max(jnp.abs(x))
+    s = jnp.maximum(absmax, 1e-8) / A8_QMAX
+    q = jnp.clip(jnp.round(x / s), -A8_QMAX, A8_QMAX)
+    return q, s
+
+
+def w8a8_matmul_ref(x, q, scale):
+    """Oracle for the W8A8 matmul: quantize activations dynamically to INT8,
+    multiply on the integer grid (emulated in f32, which is exact for
+    products of integers up to 2^24), and dequantize.
+
+    Args:
+      x: f32[M, K] activations.
+      q: int8[K, N] lattice weights.
+      scale: f32[N] per-channel weight scales.
+
+    Returns:
+      f32[M, N].
+    """
+    xq, xs = quantize_act_ref(x)
+    acc = jnp.matmul(xq, q.astype(jnp.float32), preferred_element_type=jnp.float32)
+    return acc * xs * scale[None, :]

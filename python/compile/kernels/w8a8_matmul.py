@@ -1,0 +1,95 @@
+"""W8A8 quantized matmul as a Pallas kernel.
+
+The paper's W8A8 format (LLM-Compressor) quantizes *both* weights and
+activations to INT8. Weights use the static symmetric per-channel grid the
+Rust coordinator maintains; activations are quantized dynamically per tensor
+with an absmax scale at every layer invocation.
+
+The kernel is split in two phases so the activation scale is a true
+per-tensor absmax (a single fused kernel could only see one tile at a time):
+
+1. ``_absmax``: a tiny jnp reduction producing the dynamic scale ``xs``.
+2. ``_kernel``: tiled integer-grid matmul — quantize the x tile in VMEM,
+   multiply against the int8 weight tile (accumulated in f32, exact for
+   int8×int8 sums up to 2^24), and dequantize with ``xs * scale`` on the
+   final k-step.
+
+On a real TPU the absmax pass fuses into the preceding layer's epilogue; we
+keep it explicit for clarity under interpret=True.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import A8_QMAX
+
+
+def _kernel(x_ref, q_ref, s_ref, xs_ref, o_ref, *, n_k: int):
+    """One (m, n, k) grid step of the integer-grid matmul."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xs = xs_ref[0]
+    xq = jnp.clip(jnp.round(x_ref[...] / xs), -A8_QMAX, A8_QMAX)
+    o_ref[...] += jnp.dot(
+        xq, q_ref[...].astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] *= xs * s_ref[...][None, :]
+
+
+def _pick_block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def w8a8_matmul(x, q, scale, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """W8A8 matmul: dynamic per-tensor INT8 activations × per-channel INT8
+    weights, f32 accumulation.
+
+    Args:
+      x: f32[M, K] activations.
+      q: int8[K, N] lattice weights.
+      scale: f32[N] per-channel weight scales.
+
+    Returns:
+      f32[M, N].
+    """
+    m, k = x.shape
+    k2, n = q.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert scale.shape == (n,), f"scale must be [{n}], got {scale.shape}"
+
+    # Phase 1: dynamic activation scale (per tensor).
+    xs = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / A8_QMAX
+    xs = jnp.reshape(xs, (1,))
+
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, q, scale, xs)

@@ -1,0 +1,405 @@
+"""Layer-2: the QES backbone as JAX functions, AOT-lowered to HLO.
+
+A GPT-style decoder whose linear layers live on the integer lattice and are
+executed through the L1 Pallas kernels (``quant_matmul`` / ``w8a8_matmul``).
+Embeddings, layer norms and the (weight-tied) LM head stay FP32, following
+the LLM-QAT convention the paper adopts (§A.1).
+
+Three weight *formats* are compiled (DESIGN.md §3):
+
+* ``wq``   — int8 lattice weights + per-channel scales, FP activations.
+             Serves both INT4 and INT8: the bit-width only changes the
+             lattice *range*, which the Rust coordinator enforces.
+* ``w8a8`` — same weights, activations dynamically quantized to INT8 inside
+             the kernel.
+* ``fp``   — plain f32 weights; used by the MeZO / first-order baselines and
+             by pretraining (the ``grad`` artifact).
+
+Four *functions* are exported per (config, format):
+
+* ``gen``  — batched autoregressive generation: prefill + ``lax.scan`` decode
+             with an in-graph KV cache, gumbel-noise sampling (τ=0 ⇒ greedy).
+             One PJRT call per rollout batch — Python is never on the
+             request path, and neither is a per-token round-trip.
+* ``loss`` — teacher-forced masked cross-entropy + correct-token count.
+* ``cls``  — verbalizer-token classification (LM-BFF style): softmax over a
+             class-token subset at a per-example position.
+* ``grad`` — (fp only) loss + gradients for every parameter; powers the
+             in-repo pretraining pipeline and the FO/STE baselines.
+
+Sequence convention: prompts are LEFT-padded to a fixed length; explicit
+``pos_ids`` and a key ``mask`` are inputs everywhere, so padding never
+affects positional semantics. Left-padding makes decode-time cache writes
+uniform across the batch (slot ``s_prompt + step`` for everyone).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import quant_matmul, w8a8_matmul
+
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# Parameter specification
+# ---------------------------------------------------------------------------
+
+class ParamSpec:
+    """A single named parameter tensor.
+
+    kind: 'fp'      — always-FP32 tensor (embeddings, norms)
+          'lattice' — quantized linear weight; materialized as one f32 arg in
+                      the fp format, or as (int8 q, f32 per-channel scale)
+                      in the quantized formats.
+    """
+
+    def __init__(self, name, shape, kind, init):
+        self.name = name
+        self.shape = tuple(shape)
+        self.kind = kind
+        self.init = init  # ('normal', std) | ('zeros',) | ('ones',)
+
+    def __repr__(self):
+        return f"ParamSpec({self.name}, {self.shape}, {self.kind})"
+
+
+def param_specs(cfg: ModelConfig):
+    """The canonical, ordered parameter list. The Rust side mirrors this
+    order via the manifest; never reorder without bumping the manifest."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    std = 0.06
+    specs = [
+        ParamSpec("tok_emb", (v, d), "fp", ("normal", std)),
+        ParamSpec("pos_emb", (cfg.s_total if cfg.s_total > cfg.s_train else cfg.s_train, d),
+                  "fp", ("normal", std)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        specs += [
+            ParamSpec(p + "ln1.g", (d,), "fp", ("ones",)),
+            ParamSpec(p + "ln1.b", (d,), "fp", ("zeros",)),
+            ParamSpec(p + "attn.wq", (d, d), "lattice", ("normal", std)),
+            ParamSpec(p + "attn.wk", (d, d), "lattice", ("normal", std)),
+            ParamSpec(p + "attn.wv", (d, d), "lattice", ("normal", std)),
+            ParamSpec(p + "attn.wo", (d, d), "lattice", ("normal", std)),
+            ParamSpec(p + "ln2.g", (d,), "fp", ("ones",)),
+            ParamSpec(p + "ln2.b", (d,), "fp", ("zeros",)),
+            ParamSpec(p + "mlp.w1", (d, f), "lattice", ("normal", std)),
+            ParamSpec(p + "mlp.w2", (f, d), "lattice", ("normal", std)),
+        ]
+    specs += [
+        ParamSpec("lnf.g", (d,), "fp", ("ones",)),
+        ParamSpec("lnf.b", (d,), "fp", ("zeros",)),
+    ]
+    return specs
+
+
+def flat_args_for(cfg: ModelConfig, fmt: str):
+    """The flattened (name, dtype, shape) argument layout for params under a
+    given format — exactly what the manifest records and Rust marshals."""
+    out = []
+    for s in param_specs(cfg):
+        if s.kind == "lattice" and fmt in ("wq", "w8a8"):
+            out.append((s.name + ".q", "i8", s.shape))
+            out.append((s.name + ".s", "f32", (s.shape[1],)))
+        else:
+            out.append((s.name, "f32", s.shape))
+    return out
+
+
+def unflatten_params(cfg: ModelConfig, fmt: str, args):
+    """Rebuild {name: tensor | (q, s)} from the flat positional args."""
+    params = {}
+    it = iter(args)
+    for s in param_specs(cfg):
+        if s.kind == "lattice" and fmt in ("wq", "w8a8"):
+            q = next(it)
+            sc = next(it)
+            params[s.name] = (q, sc)
+        else:
+            params[s.name] = next(it)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Model internals
+# ---------------------------------------------------------------------------
+
+def _linear(x, w, fmt):
+    """Apply a (possibly quantized) linear layer to x[..., K]."""
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    if fmt == "fp":
+        y = jnp.matmul(x2, w, preferred_element_type=jnp.float32)
+    elif fmt == "wq":
+        q, s = w
+        y = quant_matmul(x2, q, s)
+    elif fmt == "w8a8":
+        q, s = w
+        y = w8a8_matmul(x2, q, s)
+    else:
+        raise ValueError(fmt)
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _split_heads(x, n_heads):
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _attend(q, k, v, bias):
+    """q[B,H,Sq,dh] x k,v[B,H,Sk,dh] with additive bias[B,1,Sq,Sk]."""
+    dh = q.shape[-1]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+    att = jax.nn.softmax(logits + bias, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", att, v)
+
+
+def _block_full(cfg, fmt, p, i, h, bias):
+    """Full-sequence transformer block (prefill / training)."""
+    pre = f"layers.{i}."
+    x = _layernorm(h, p[pre + "ln1.g"], p[pre + "ln1.b"])
+    q = _split_heads(_linear(x, p[pre + "attn.wq"], fmt), cfg.n_heads)
+    k = _split_heads(_linear(x, p[pre + "attn.wk"], fmt), cfg.n_heads)
+    v = _split_heads(_linear(x, p[pre + "attn.wv"], fmt), cfg.n_heads)
+    a = _merge_heads(_attend(q, k, v, bias))
+    h = h + _linear(a, p[pre + "attn.wo"], fmt)
+    x = _layernorm(h, p[pre + "ln2.g"], p[pre + "ln2.b"])
+    x = _linear(x, p[pre + "mlp.w1"], fmt)
+    x = jax.nn.gelu(x)
+    h = h + _linear(x, p[pre + "mlp.w2"], fmt)
+    return h, k, v
+
+
+def _embed(cfg, p, tokens, pos_ids):
+    te = p["tok_emb"][tokens]          # [B,S,D]
+    pe = p["pos_emb"][pos_ids]         # [B,S,D]
+    return te + pe
+
+
+def _logits(cfg, p, h):
+    h = _layernorm(h, p["lnf.g"], p["lnf.b"])
+    return jnp.matmul(h, p["tok_emb"].T, preferred_element_type=jnp.float32)
+
+
+def forward(cfg, fmt, p, tokens, pos_ids, mask):
+    """Full-sequence forward.
+
+    Args:
+      tokens: i32[B,S]; pos_ids: i32[B,S]; mask: f32[B,S] (1=real, 0=pad).
+
+    Returns:
+      logits f32[B,S,V], per-layer (k, v) for cache priming.
+    """
+    b, s = tokens.shape
+    causal = jnp.tril(jnp.ones((s, s), dtype=jnp.float32))
+    keymask = mask[:, None, None, :]                        # [B,1,1,S]
+    bias = jnp.where((causal[None, None] * keymask) > 0, 0.0, NEG_INF)
+    h = _embed(cfg, p, tokens, pos_ids)
+    kvs = []
+    for i in range(cfg.n_layers):
+        h, k, v = _block_full(cfg, fmt, p, i, h, bias)
+        kvs.append((k, v))
+    return _logits(cfg, p, h), kvs
+
+
+# ---------------------------------------------------------------------------
+# Exported functions
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg: ModelConfig, fmt: str):
+    """(tokens, pos_ids, mask, targets, loss_mask, *params) ->
+    (sum_ce f32, n_tokens f32, n_correct f32)."""
+
+    def loss_fn(tokens, pos_ids, mask, targets, loss_mask, *args):
+        p = unflatten_params(cfg, fmt, args)
+        logits, _ = forward(cfg, fmt, p, tokens, pos_ids, mask)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        sum_ce = jnp.sum(nll * loss_mask)
+        n_tok = jnp.sum(loss_mask)
+        pred = jnp.argmax(logits, axis=-1)
+        n_correct = jnp.sum((pred == targets).astype(jnp.float32) * loss_mask)
+        return sum_ce, n_tok, n_correct
+
+    return loss_fn
+
+
+def make_cls_fn(cfg: ModelConfig, fmt: str):
+    """Verbalizer classification (LM-BFF): score class tokens at cls_pos.
+
+    (tokens, pos_ids, mask, cls_pos i32[B], class_ids i32[C], labels i32[B],
+     *params) -> (sum_ce, n_correct, scores f32[B,C])
+    """
+
+    def cls_fn(tokens, pos_ids, mask, cls_pos, class_ids, labels, *args):
+        p = unflatten_params(cfg, fmt, args)
+        logits, _ = forward(cfg, fmt, p, tokens, pos_ids, mask)   # [B,S,V]
+        at = jnp.take_along_axis(
+            logits, cls_pos[:, None, None].astype(jnp.int32), axis=1
+        )[:, 0, :]                                                # [B,V]
+        scores = at[:, class_ids]                                 # [B,C]
+        logp = jax.nn.log_softmax(scores, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        pred = jnp.argmax(scores, axis=-1)
+        n_correct = jnp.sum((pred == labels).astype(jnp.float32))
+        return jnp.sum(nll), n_correct, scores
+
+    return cls_fn
+
+
+def make_grad_fn(cfg: ModelConfig):
+    """FP-only: (tokens, pos_ids, mask, targets, loss_mask, *params) ->
+    (mean_loss, *grads) in canonical param order."""
+    loss_fn = make_loss_fn(cfg, "fp")
+    n_params = len(flat_args_for(cfg, "fp"))
+
+    def mean_loss(tokens, pos_ids, mask, targets, loss_mask, *args):
+        sum_ce, n_tok, _ = loss_fn(tokens, pos_ids, mask, targets, loss_mask, *args)
+        return sum_ce / jnp.maximum(n_tok, 1.0)
+
+    def grad_fn(tokens, pos_ids, mask, targets, loss_mask, *args):
+        argnums = tuple(range(5, 5 + n_params))
+        loss, grads = jax.value_and_grad(mean_loss, argnums=argnums)(
+            tokens, pos_ids, mask, targets, loss_mask, *args
+        )
+        return (loss,) + tuple(grads)
+
+    return grad_fn
+
+
+def make_gen_fn(cfg: ModelConfig, fmt: str):
+    """Batched autoregressive generation, fully in-graph.
+
+    (prompt i32[B,Sp] (LEFT-padded), prompt_len i32[B], tau f32[],
+     gumbel f32[B,T,V], *params) -> tokens i32[B,T]
+
+    Sampling: argmax(logits + tau * gumbel) == sampling from softmax(l/tau);
+    tau = 0 is greedy. The KV cache is carried through a lax.scan; thanks to
+    left-padding every example writes cache slot `s_prompt + t` at step t.
+    """
+    sp, t_dec, st = cfg.s_prompt, cfg.t_dec, cfg.s_total
+
+    def gen_fn(prompt, prompt_len, tau, gumbel, *args):
+        p = unflatten_params(cfg, fmt, args)
+        b = prompt.shape[0]
+        pad = sp - prompt_len                                  # [B]
+        slots = jnp.arange(sp)[None, :]                        # [1,Sp]
+        mask = (slots >= pad[:, None]).astype(jnp.float32)     # [B,Sp]
+        pos_ids = jnp.maximum(slots - pad[:, None], 0).astype(jnp.int32)
+
+        logits, kvs = forward(cfg, fmt, p, prompt, pos_ids, mask)
+        last = logits[:, -1, :]                                # [B,V]
+
+        # Pad caches and mask to the full decode horizon.
+        def padcache(x):                                       # [B,H,Sp,dh] -> [B,H,St,dh]
+            return jnp.pad(x, ((0, 0), (0, 0), (0, t_dec), (0, 0)))
+
+        ks = [padcache(k) for k, _ in kvs]
+        vs = [padcache(v) for _, v in kvs]
+        keymask0 = jnp.pad(mask, ((0, 0), (0, t_dec)))         # [B,St]
+
+        def step(carry, g_t):
+            ks, vs, keymask, last_logits, t = carry
+            nxt = jnp.argmax(last_logits + tau * g_t, axis=-1).astype(jnp.int32)  # [B]
+            slot = sp + t
+            pos = (prompt_len + t).astype(jnp.int32)           # [B]
+            h = p["tok_emb"][nxt] + p["pos_emb"][pos]          # [B,D]
+            h = h[:, None, :]                                  # [B,1,D]
+            keymask = keymask.at[:, slot].set(1.0)
+            new_ks, new_vs = [], []
+            for i in range(cfg.n_layers):
+                pre = f"layers.{i}."
+                x = _layernorm(h, p[pre + "ln1.g"], p[pre + "ln1.b"])
+                qh = _split_heads(_linear(x, p[pre + "attn.wq"], fmt), cfg.n_heads)
+                kh = _split_heads(_linear(x, p[pre + "attn.wk"], fmt), cfg.n_heads)
+                vh = _split_heads(_linear(x, p[pre + "attn.wv"], fmt), cfg.n_heads)
+                k_cache = jax.lax.dynamic_update_slice_in_dim(ks[i], kh, slot, axis=2)
+                v_cache = jax.lax.dynamic_update_slice_in_dim(vs[i], vh, slot, axis=2)
+                bias = jnp.where(keymask[:, None, None, :] > 0, 0.0, NEG_INF)
+                a = _merge_heads(_attend(qh, k_cache, v_cache, bias))
+                h = h + _linear(a, p[pre + "attn.wo"], fmt)
+                x = _layernorm(h, p[pre + "ln2.g"], p[pre + "ln2.b"])
+                x = jax.nn.gelu(_linear(x, p[pre + "mlp.w1"], fmt))
+                h = h + _linear(x, p[pre + "mlp.w2"], fmt)
+                new_ks.append(k_cache)
+                new_vs.append(v_cache)
+            logits_t = _logits(cfg, p, h)[:, 0, :]             # [B,V]
+            return (new_ks, new_vs, keymask, logits_t, t + 1), nxt
+
+        gumbel_t = jnp.transpose(gumbel, (1, 0, 2))            # [T,B,V]
+        (_, _, _, _, _), toks = jax.lax.scan(
+            step, (ks, vs, keymask0, last, 0), gumbel_t
+        )
+        return (jnp.transpose(toks, (1, 0)),)                  # i32[B,T]
+
+    return gen_fn
+
+
+# ---------------------------------------------------------------------------
+# Wrappers returning tuple outputs (AOT requires tuple returns)
+# ---------------------------------------------------------------------------
+
+def exported_fn(cfg: ModelConfig, fmt: str, which: str):
+    if which == "gen":
+        return make_gen_fn(cfg, fmt)
+    if which == "loss":
+        f = make_loss_fn(cfg, fmt)
+        return lambda *a: tuple(f(*a))
+    if which == "cls":
+        f = make_cls_fn(cfg, fmt)
+        return lambda *a: tuple(f(*a))
+    if which == "grad":
+        assert fmt == "fp", "grad artifact exists only in fp format"
+        return make_grad_fn(cfg)
+    raise ValueError(which)
+
+
+def example_data_args(cfg: ModelConfig, which: str):
+    """ShapeDtypeStructs for the *data* (non-param) inputs, in order."""
+    i32, f32 = jnp.int32, jnp.float32
+    b, bt, sp, t, st, v, c = (
+        cfg.b_gen, cfg.b_train, cfg.s_prompt, cfg.t_dec, cfg.s_train,
+        cfg.vocab, 8,
+    )
+    S = jax.ShapeDtypeStruct
+    if which == "gen":
+        return [
+            ("prompt", S((b, sp), i32)),
+            ("prompt_len", S((b,), i32)),
+            ("tau", S((), f32)),
+            ("gumbel", S((b, t, v), f32)),
+        ]
+    if which in ("loss", "grad"):
+        return [
+            ("tokens", S((bt, st), i32)),
+            ("pos_ids", S((bt, st), i32)),
+            ("mask", S((bt, st), f32)),
+            ("targets", S((bt, st), i32)),
+            ("loss_mask", S((bt, st), f32)),
+        ]
+    if which == "cls":
+        return [
+            ("tokens", S((bt, st), i32)),
+            ("pos_ids", S((bt, st), i32)),
+            ("mask", S((bt, st), f32)),
+            ("cls_pos", S((bt,), i32)),
+            ("class_ids", S((c,), i32)),
+            ("labels", S((bt,), i32)),
+        ]
+    raise ValueError(which)

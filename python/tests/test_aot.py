@@ -1,0 +1,108 @@
+"""AOT pipeline tests: manifest consistency and HLO-text properties.
+
+These pin the contract between python/compile/aot.py and the Rust runtime
+(rust/src/runtime/manifest.rs): argument ordering, shapes, and the HLO-text
+interchange invariants.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import CONFIGS
+from compile import model as M
+from compile.aot import lower_one, param_manifest, to_hlo_text
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestManifestContract:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = os.path.join(ARTIFACTS, "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("run `make artifacts` first")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_every_artifact_file_exists(self, manifest):
+        for a in manifest["artifacts"]:
+            p = os.path.join(ARTIFACTS, a["file"])
+            assert os.path.exists(p), a["file"]
+            assert os.path.getsize(p) > 1000
+
+    def test_param_layout_matches_model(self, manifest):
+        for size, fmts in manifest["params"].items():
+            cfg = CONFIGS[size]
+            for fmt, entries in fmts.items():
+                flat = M.flat_args_for(cfg, fmt)
+                assert len(entries) == len(flat), (size, fmt)
+                for e, (name, dt, shape) in zip(entries, flat):
+                    assert e["name"] == name
+                    assert e["dtype"] == dt
+                    assert tuple(e["shape"]) == tuple(shape)
+
+    def test_artifact_input_counts(self, manifest):
+        for a in manifest["artifacts"]:
+            cfg = CONFIGS[a["config"]]
+            data = M.example_data_args(cfg, a["fn"])
+            assert len(a["data_inputs"]) == len(data), a["file"]
+            assert a["n_param_inputs"] == len(M.flat_args_for(cfg, a["format"]))
+
+    def test_lattice_param_counts(self, manifest):
+        for size, c in manifest["configs"].items():
+            assert c["lattice_params"] == CONFIGS[size].lattice_param_count()
+
+    def test_gen_outputs_token_grid(self, manifest):
+        for a in manifest["artifacts"]:
+            if a["fn"] != "gen":
+                continue
+            cfg = CONFIGS[a["config"]]
+            (out,) = a["outputs"]
+            assert out["dtype"] == "i32"
+            assert out["shape"] == [cfg.b_gen, cfg.t_dec]
+
+
+class TestHloText:
+    def test_hlo_text_parses_as_entry_module(self):
+        cfg = CONFIGS["nano"]
+        text, _, _ = lower_one(cfg, "fp", "loss")
+        assert text.startswith("HloModule"), text[:60]
+        assert "ENTRY" in text
+
+    def test_param_manifest_kinds(self):
+        cfg = CONFIGS["nano"]
+        wq = param_manifest(cfg, "wq")
+        kinds = {e["kind"] for e in wq}
+        assert kinds == {"fp", "lattice_q", "scale"}
+        fp = param_manifest(cfg, "fp")
+        kinds = {e["kind"] for e in fp}
+        assert kinds == {"fp", "lattice_as_fp"}
+        # every lattice_q is immediately followed by its scale
+        for i, e in enumerate(wq):
+            if e["kind"] == "lattice_q":
+                assert wq[i + 1]["kind"] == "scale"
+                assert wq[i + 1]["name"] == e["name"][:-2] + ".s"
+
+    def test_to_hlo_text_roundtrips_simple_fn(self):
+        def f(x):
+            return (x * 2.0 + 1.0,)
+
+        lowered = jax.jit(f).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+        text = to_hlo_text(lowered)
+        assert "HloModule" in text
+
+    def test_init_hints_present_for_fp(self):
+        cfg = CONFIGS["nano"]
+        fp = param_manifest(cfg, "fp")
+        for e in fp:
+            assert "init" in e, e["name"]
+            assert e["init"][0] in ("normal", "ones", "zeros")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-q"]))

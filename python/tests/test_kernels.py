@@ -1,0 +1,167 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Every test pins a Pallas kernel against its pure-jnp oracle from
+``compile.kernels.ref``. Hypothesis sweeps shapes (including degenerate and
+non-power-of-two dims) and value ranges (including the INT4 lattice subset
+and boundary values ±127).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant_matmul, w8a8_matmul, ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def _mk(rng, m, k, n, qlo, qhi, xscale=1.0):
+    x = jnp.asarray(rng.normal(size=(m, k)).astype("float32") * xscale)
+    q = jnp.asarray(rng.integers(qlo, qhi + 1, size=(k, n)).astype("int8"))
+    s = jnp.asarray((rng.random(n).astype("float32") + 0.05) * 0.04)
+    return x, q, s
+
+
+class TestQuantMatmul:
+    def test_exact_small(self):
+        rng = np.random.default_rng(1)
+        x, q, s = _mk(rng, 4, 8, 8, -7, 7)
+        np.testing.assert_allclose(
+            quant_matmul(x, q, s), ref.quant_matmul_ref(x, q, s), rtol=1e-6, atol=1e-6
+        )
+
+    def test_identity_scale_integer_inputs_is_exact(self):
+        # Integer activations + unit scales: result must be bit-exact.
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.integers(-3, 4, size=(8, 16)).astype("float32"))
+        q = jnp.asarray(rng.integers(-7, 8, size=(16, 8)).astype("int8"))
+        s = jnp.ones(8, dtype=jnp.float32)
+        got = np.asarray(quant_matmul(x, q, s))
+        want = np.asarray(x) @ np.asarray(q, dtype=np.float32)
+        assert (got == want).all()
+
+    def test_zero_weights(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(8, 16)).astype("float32"))
+        q = jnp.zeros((16, 8), dtype=jnp.int8)
+        s = jnp.ones(8, dtype=jnp.float32)
+        assert float(jnp.max(jnp.abs(quant_matmul(x, q, s)))) == 0.0
+
+    def test_per_channel_scale_applied_to_correct_axis(self):
+        # Column j scaled by s_j: doubling s_j must double only column j.
+        rng = np.random.default_rng(4)
+        x, q, s = _mk(rng, 4, 8, 6, -7, 7)
+        base = np.asarray(quant_matmul(x, q, s))
+        s2 = np.asarray(s).copy()
+        s2[2] *= 2.0
+        bumped = np.asarray(quant_matmul(x, q, jnp.asarray(s2)))
+        np.testing.assert_allclose(bumped[:, 2], base[:, 2] * 2.0, rtol=1e-6)
+        np.testing.assert_allclose(np.delete(bumped, 2, 1), np.delete(base, 2, 1), rtol=1e-6)
+
+    @given(
+        m=st.integers(1, 48),
+        k=st.integers(1, 96),
+        n=st.integers(1, 96),
+        qmax=st.sampled_from([1, 7, 127]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_on_random_shapes(self, m, k, n, qmax, seed):
+        rng = np.random.default_rng(seed)
+        x, q, s = _mk(rng, m, k, n, -qmax, qmax)
+        np.testing.assert_allclose(
+            quant_matmul(x, q, s), ref.quant_matmul_ref(x, q, s), rtol=1e-5, atol=1e-5
+        )
+
+    @given(
+        bm=st.sampled_from([1, 3, 8, 64, 256]),
+        bk=st.sampled_from([1, 4, 32, 256]),
+        bn=st.sampled_from([2, 16, 128]),
+    )
+    def test_block_shape_invariance(self, bm, bk, bn):
+        # Result must not depend on tiling choices.
+        rng = np.random.default_rng(7)
+        x, q, s = _mk(rng, 24, 36, 20, -7, 7)
+        got = quant_matmul(x, q, s, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(
+            got, ref.quant_matmul_ref(x, q, s), rtol=1e-5, atol=1e-5
+        )
+
+    def test_int8_boundary_values(self):
+        rng = np.random.default_rng(8)
+        x, q, s = _mk(rng, 4, 8, 4, -127, 127)
+        np.testing.assert_allclose(
+            quant_matmul(x, q, s), ref.quant_matmul_ref(x, q, s), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestW8A8Matmul:
+    def test_matches_ref_small(self):
+        rng = np.random.default_rng(11)
+        x, q, s = _mk(rng, 8, 32, 16, -127, 127)
+        np.testing.assert_allclose(
+            w8a8_matmul(x, q, s), ref.w8a8_matmul_ref(x, q, s), rtol=1e-4, atol=1e-4
+        )
+
+    def test_close_to_fp_matmul_for_wellscaled_inputs(self):
+        # W8A8 introduces activation-quantization error bounded by xs/2 per
+        # element; the result must stay within that envelope of the FP ref.
+        rng = np.random.default_rng(12)
+        x, q, s = _mk(rng, 16, 64, 32, -127, 127)
+        fp = np.asarray(ref.quant_matmul_ref(x, q, s))
+        got = np.asarray(w8a8_matmul(x, q, s))
+        absmax = float(np.max(np.abs(np.asarray(x))))
+        xs = absmax / 127.0
+        # per-element bound: K * (xs/2) * max|w_deq| — loose but indicative
+        bound = 64 * (xs / 2) * float(np.max(np.abs(np.asarray(q) * np.asarray(s)[None, :])))
+        assert np.max(np.abs(got - fp)) <= bound
+
+    def test_all_zero_activations(self):
+        q = jnp.ones((16, 8), dtype=jnp.int8)
+        s = jnp.ones(8, dtype=jnp.float32)
+        x = jnp.zeros((4, 16), dtype=jnp.float32)
+        out = np.asarray(w8a8_matmul(x, q, s))
+        assert np.all(out == 0.0)
+
+    @given(
+        m=st.integers(1, 32),
+        k=st.integers(1, 64),
+        n=st.integers(1, 64),
+        seed=st.integers(0, 2**31 - 1),
+        xscale=st.sampled_from([1e-3, 1.0, 50.0]),
+    )
+    def test_matches_ref_on_random_shapes(self, m, k, n, seed, xscale):
+        rng = np.random.default_rng(seed)
+        x, q, s = _mk(rng, m, k, n, -127, 127, xscale=xscale)
+        np.testing.assert_allclose(
+            w8a8_matmul(x, q, s), ref.w8a8_matmul_ref(x, q, s), rtol=1e-4, atol=1e-4
+        )
+
+    def test_scale_invariance_of_quant_grid(self):
+        # Scaling x by c scales the output by ~c (up to requantization noise).
+        rng = np.random.default_rng(13)
+        x, q, s = _mk(rng, 8, 32, 16, -127, 127)
+        a = np.asarray(w8a8_matmul(x, q, s))
+        b = np.asarray(w8a8_matmul(x * 4.0, q, s))
+        np.testing.assert_allclose(b, a * 4.0, rtol=1e-4, atol=1e-4)
+
+
+class TestRefInternals:
+    def test_quantize_act_ref_range(self):
+        rng = np.random.default_rng(21)
+        x = jnp.asarray(rng.normal(size=(32, 32)).astype("float32") * 10)
+        xq, xs = ref.quantize_act_ref(x)
+        assert float(jnp.max(jnp.abs(xq))) <= 127.0
+        # round-trip error bounded by half a grid step
+        assert float(jnp.max(jnp.abs(xq * xs - x))) <= float(xs) / 2 + 1e-6
+
+    def test_dequant_shape(self):
+        q = jnp.zeros((8, 4), dtype=jnp.int8)
+        s = jnp.ones(4, dtype=jnp.float32)
+        assert ref.dequant(q, s).shape == (8, 4)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-q"]))

@@ -1,0 +1,241 @@
+"""L2 model correctness: shapes, padding semantics, KV-cache fidelity,
+gradient sanity, and format consistency."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import CONFIGS
+from compile import model as M
+
+CFG = CONFIGS["nano"]
+
+
+def init_params(fmt, seed=0, scale_mag=0.01):
+    rng = np.random.default_rng(seed)
+    args = []
+    for name, dt, shape in M.flat_args_for(CFG, fmt):
+        if dt == "i8":
+            args.append(jnp.asarray(rng.integers(-7, 8, size=shape, dtype=np.int8)))
+        elif name.endswith(".s"):
+            args.append(jnp.asarray((rng.random(shape).astype("float32") + 0.5) * scale_mag))
+        else:
+            args.append(jnp.asarray(rng.normal(0, 0.06, size=shape).astype("float32")))
+    return args
+
+
+def full_mask_inputs(rng, b, s):
+    tokens = jnp.asarray(rng.integers(1, CFG.vocab, size=(b, s)), dtype=jnp.int32)
+    pos = jnp.tile(jnp.arange(s, dtype=jnp.int32)[None, :], (b, 1))
+    mask = jnp.ones((b, s), dtype=jnp.float32)
+    return tokens, pos, mask
+
+
+class TestForward:
+    def test_logit_shape(self):
+        rng = np.random.default_rng(1)
+        p = M.unflatten_params(CFG, "wq", init_params("wq"))
+        tokens, pos, mask = full_mask_inputs(rng, 2, CFG.s_train)
+        logits, kvs = M.forward(CFG, "wq", p, tokens, pos, mask)
+        assert logits.shape == (2, CFG.s_train, CFG.vocab)
+        assert len(kvs) == CFG.n_layers
+
+    def test_causality(self):
+        # Changing a future token must not affect past logits.
+        rng = np.random.default_rng(2)
+        p = M.unflatten_params(CFG, "wq", init_params("wq"))
+        tokens, pos, mask = full_mask_inputs(rng, 1, 16)
+        la, _ = M.forward(CFG, "wq", p, tokens, pos, mask)
+        t2 = np.array(tokens)
+        t2[0, 10] = (t2[0, 10] + 1) % CFG.vocab
+        lb, _ = M.forward(CFG, "wq", p, jnp.asarray(t2), pos, mask)
+        np.testing.assert_allclose(la[0, :10], lb[0, :10], rtol=1e-5, atol=1e-6)
+        assert not np.allclose(la[0, 10:], lb[0, 10:])
+
+    def test_left_pad_equals_unpadded(self):
+        # A left-padded sequence with correct pos_ids/mask must produce the
+        # same final-position logits as the unpadded sequence.
+        rng = np.random.default_rng(3)
+        p = M.unflatten_params(CFG, "wq", init_params("wq"))
+        s_real, pad = 10, 6
+        tokens, pos, mask = full_mask_inputs(rng, 1, s_real)
+        la, _ = M.forward(CFG, "wq", p, tokens, pos, mask)
+        padded = jnp.concatenate(
+            [jnp.zeros((1, pad), jnp.int32), tokens], axis=1)
+        pos_p = jnp.concatenate(
+            [jnp.zeros((1, pad), jnp.int32), pos], axis=1)
+        mask_p = jnp.concatenate(
+            [jnp.zeros((1, pad), jnp.float32), mask], axis=1)
+        lb, _ = M.forward(CFG, "wq", p, padded, pos_p, mask_p)
+        np.testing.assert_allclose(la[0, -1], lb[0, -1], rtol=1e-4, atol=1e-5)
+
+    def test_fp_matches_dequantized_wq(self):
+        # Running fp format with W = q*s must equal the wq format exactly
+        # (same float ops, modulo association: tolerate tiny eps).
+        rng = np.random.default_rng(4)
+        wq_args = init_params("wq")
+        fp_args = []
+        it = iter(wq_args)
+        for spec in M.param_specs(CFG):
+            if spec.kind == "lattice":
+                q = next(it); s = next(it)
+                fp_args.append(q.astype(jnp.float32) * s[None, :])
+            else:
+                fp_args.append(next(it))
+        tokens, pos, mask = full_mask_inputs(rng, 2, 12)
+        la, _ = M.forward(CFG, "wq", M.unflatten_params(CFG, "wq", wq_args),
+                          tokens, pos, mask)
+        lb, _ = M.forward(CFG, "fp", M.unflatten_params(CFG, "fp", fp_args),
+                          tokens, pos, mask)
+        np.testing.assert_allclose(la, lb, rtol=1e-4, atol=1e-5)
+
+
+class TestGen:
+    def _gen(self, fmt, prompt, plen, tau, gumbel, params):
+        fn = M.exported_fn(CFG, fmt, "gen")
+        return jax.jit(fn)(prompt, plen, tau, gumbel, *params)[0]
+
+    def test_greedy_matches_full_recompute_with_padding(self):
+        rng = np.random.default_rng(5)
+        args = init_params("wq")
+        p = M.unflatten_params(CFG, "wq", args)
+        B, Sp = CFG.b_gen, CFG.s_prompt
+        lens = np.array([Sp, Sp - 3, 5, Sp - 1] * (B // 4), dtype=np.int32)
+        prompt = np.zeros((B, Sp), dtype=np.int32)
+        for i, L in enumerate(lens):
+            prompt[i, Sp - L:] = rng.integers(1, CFG.vocab, size=L)
+        gumbel = jnp.zeros((B, CFG.t_dec, CFG.vocab), jnp.float32)
+        out = np.array(self._gen("wq", jnp.asarray(prompt), jnp.asarray(lens),
+                                 jnp.float32(0.0), gumbel, args))
+        # manual: full forward on the growing, still-left-padded sequence
+        seq = prompt.copy()
+        manual = []
+        for t in range(4):
+            S = seq.shape[1]
+            pad = Sp - lens
+            slots = np.arange(S)[None, :]
+            mask = (slots >= pad[:, None]).astype("float32")
+            pos = np.maximum(slots - pad[:, None], 0).astype("int32")
+            logits, _ = M.forward(CFG, "wq", p, jnp.asarray(seq),
+                                  jnp.asarray(pos), jnp.asarray(mask))
+            nxt = np.argmax(np.asarray(logits[:, -1, :]), axis=-1).astype("int32")
+            manual.append(nxt)
+            seq = np.concatenate([seq, nxt[:, None]], axis=1)
+        manual = np.stack(manual, axis=1)
+        assert (out[:, :4] == manual).all()
+
+    def test_tau_zero_deterministic(self):
+        rng = np.random.default_rng(6)
+        args = init_params("wq")
+        B, Sp = CFG.b_gen, CFG.s_prompt
+        prompt = jnp.asarray(rng.integers(1, CFG.vocab, size=(B, Sp)), dtype=jnp.int32)
+        lens = jnp.full((B,), Sp, dtype=jnp.int32)
+        g1 = jnp.asarray(rng.gumbel(size=(B, CFG.t_dec, CFG.vocab)).astype("float32"))
+        g2 = jnp.asarray(rng.gumbel(size=(B, CFG.t_dec, CFG.vocab)).astype("float32"))
+        a = self._gen("wq", prompt, lens, jnp.float32(0.0), g1, args)
+        b = self._gen("wq", prompt, lens, jnp.float32(0.0), g2, args)
+        assert (np.array(a) == np.array(b)).all()
+
+    def test_tau_changes_samples(self):
+        rng = np.random.default_rng(7)
+        args = init_params("wq")
+        B, Sp = CFG.b_gen, CFG.s_prompt
+        prompt = jnp.asarray(rng.integers(1, CFG.vocab, size=(B, Sp)), dtype=jnp.int32)
+        lens = jnp.full((B,), Sp, dtype=jnp.int32)
+        g = jnp.asarray(rng.gumbel(size=(B, CFG.t_dec, CFG.vocab)).astype("float32"))
+        a = self._gen("wq", prompt, lens, jnp.float32(0.0), g, args)
+        b = self._gen("wq", prompt, lens, jnp.float32(5.0), g, args)
+        assert (np.array(a) != np.array(b)).any()
+
+
+class TestLossGrad:
+    def _loss_inputs(self, rng):
+        b, s = CFG.b_train, CFG.s_train
+        tokens = jnp.asarray(rng.integers(1, CFG.vocab, size=(b, s)), dtype=jnp.int32)
+        pos = jnp.tile(jnp.arange(s, dtype=jnp.int32)[None, :], (b, 1))
+        mask = jnp.ones((b, s), jnp.float32)
+        targets = jnp.asarray(rng.integers(1, CFG.vocab, size=(b, s)), dtype=jnp.int32)
+        lmask = jnp.ones((b, s), jnp.float32)
+        return tokens, pos, mask, targets, lmask
+
+    def test_loss_finite_and_near_uniform_at_init(self):
+        rng = np.random.default_rng(8)
+        args = init_params("wq", scale_mag=0.001)
+        fn = M.exported_fn(CFG, "wq", "loss")
+        sum_ce, n_tok, n_corr = jax.jit(fn)(*self._loss_inputs(rng), *args)
+        mean = float(sum_ce) / float(n_tok)
+        # near-random init => CE close to log(V)
+        assert abs(mean - np.log(CFG.vocab)) < 1.0
+        assert 0 <= float(n_corr) <= float(n_tok)
+
+    def test_loss_mask_excludes_positions(self):
+        rng = np.random.default_rng(9)
+        args = init_params("wq")
+        fn = jax.jit(M.exported_fn(CFG, "wq", "loss"))
+        tokens, pos, mask, targets, lmask = self._loss_inputs(rng)
+        full = fn(tokens, pos, mask, targets, lmask, *args)
+        half_mask = np.array(lmask)
+        half_mask[:, : CFG.s_train // 2] = 0.0
+        half = fn(tokens, pos, mask, targets, jnp.asarray(half_mask), *args)
+        assert float(half[1]) == pytest.approx(float(full[1]) / 2)
+        assert float(half[0]) < float(full[0])
+
+    def test_grad_descends(self):
+        rng = np.random.default_rng(10)
+        args = init_params("fp")
+        gfn = jax.jit(M.exported_fn(CFG, "fp", "grad"))
+        inputs = self._loss_inputs(rng)
+        out = gfn(*inputs, *args)
+        loss0, grads = out[0], out[1:]
+        assert len(grads) == len(args)
+        lr = 0.5
+        new_args = [a - lr * g for a, g in zip(args, grads)]
+        loss1 = gfn(*inputs, *new_args)[0]
+        assert float(loss1) < float(loss0)
+
+    def test_cls_correct_counting(self):
+        rng = np.random.default_rng(11)
+        args = init_params("wq")
+        fn = jax.jit(M.exported_fn(CFG, "wq", "cls"))
+        b, s = CFG.b_train, CFG.s_train
+        tokens = jnp.asarray(rng.integers(1, CFG.vocab, size=(b, s)), dtype=jnp.int32)
+        pos = jnp.tile(jnp.arange(s, dtype=jnp.int32)[None, :], (b, 1))
+        mask = jnp.ones((b, s), jnp.float32)
+        cls_pos = jnp.full((b,), s - 1, dtype=jnp.int32)
+        class_ids = jnp.asarray([3, 5, 7, 9, 11, 13, 15, 17], dtype=jnp.int32)
+        labels = jnp.asarray(rng.integers(0, 8, size=(b,)), dtype=jnp.int32)
+        sum_ce, n_corr, scores = fn(tokens, pos, mask, cls_pos, class_ids, labels, *args)
+        assert scores.shape == (b, 8)
+        # recompute correctness from the returned scores
+        pred = np.argmax(np.asarray(scores), axis=-1)
+        assert float(n_corr) == float((pred == np.asarray(labels)).sum())
+
+
+class TestParamLayout:
+    def test_flat_args_roundtrip(self):
+        flat = M.flat_args_for(CFG, "wq")
+        # every lattice tensor contributes exactly (q, s)
+        n_lat = sum(1 for s in M.param_specs(CFG) if s.kind == "lattice")
+        n_fp = sum(1 for s in M.param_specs(CFG) if s.kind == "fp")
+        assert len(flat) == 2 * n_lat + n_fp
+
+    def test_fp_layout(self):
+        flat = M.flat_args_for(CFG, "fp")
+        assert len(flat) == len(M.param_specs(CFG))
+        assert all(dt == "f32" for _, dt, _ in flat)
+
+    def test_lattice_param_count_matches_config(self):
+        total = 0
+        for s in M.param_specs(CFG):
+            if s.kind == "lattice":
+                n = 1
+                for d in s.shape:
+                    n *= d
+                total += n
+        assert total == CFG.lattice_param_count()
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-q"]))

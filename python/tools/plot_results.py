@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Render the experiment CSVs under results/ into figures (matplotlib).
+
+Usage: python python/tools/plot_results.py [results_dir] [out_dir]
+
+Produces:
+  fig2.png — training curves (QuZO vs QES vs Full-Residual)
+  fig3.png — discrete-grid optimization toy (§5 temporal equivalence)
+  table9.png — replay overhead vs window K
+"""
+
+import csv
+import os
+import sys
+
+
+def read_csv(path):
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    return rows
+
+
+def main():
+    results = sys.argv[1] if len(sys.argv) > 1 else "results"
+    out = sys.argv[2] if len(sys.argv) > 2 else "results"
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        print("matplotlib not available; skipping plots")
+        return 0
+
+    # ---- Figure 2: training curves ----
+    series = {}
+    for name in ["quzo", "qes", "qes_full_residual"]:
+        p = os.path.join(results, f"fig2_{name}.csv")
+        if os.path.exists(p):
+            rows = read_csv(p)
+            series[name] = (
+                [int(r["gen"]) for r in rows],
+                [float(r["mean_reward"]) for r in rows],
+            )
+    if series:
+        plt.figure(figsize=(7, 4))
+        colors = {"quzo": "tab:orange", "qes": "tab:green",
+                  "qes_full_residual": "tab:blue"}
+        for name, (x, y) in series.items():
+            plt.plot(x, y, label=name, color=colors.get(name))
+        plt.xlabel("generation")
+        plt.ylabel("mean rollout reward")
+        plt.title("Figure 2: Countdown training curves")
+        plt.legend()
+        plt.tight_layout()
+        plt.savefig(os.path.join(out, "fig2.png"), dpi=120)
+        print("wrote fig2.png")
+
+    # ---- Figure 3: toy grid optimization ----
+    p = os.path.join(results, "fig3.csv")
+    if os.path.exists(p):
+        rows = read_csv(p)
+        x = [int(r["step"]) for r in rows]
+        plt.figure(figsize=(7, 4))
+        for col, style in [
+            ("continuous", "-"),
+            ("naive_round", "--"),
+            ("stochastic_round", ":"),
+            ("qes", "-."),
+        ]:
+            plt.plot(x, [float(r[col]) for r in rows], style, label=col)
+        plt.xlabel("step")
+        plt.ylabel("w")
+        plt.title("Figure 3: optimization on a discrete grid")
+        plt.legend()
+        plt.tight_layout()
+        plt.savefig(os.path.join(out, "fig3.png"), dpi=120)
+        print("wrote fig3.png")
+
+    # ---- Table 9: replay overhead vs K ----
+    p = os.path.join(results, "table9.csv")
+    if os.path.exists(p):
+        rows = [r for r in read_csv(p) if r["variant"] == "seed-replay"]
+        if rows:
+            ks = [int(r["k"]) for r in rows]
+            ov = [float(r["overhead"]) for r in rows]
+            plt.figure(figsize=(6, 4))
+            plt.plot(ks, ov, "o-")
+            plt.axhline(1.0, color="gray", ls="--", label="full-residual oracle")
+            plt.xlabel("replay window K")
+            plt.ylabel("total time vs oracle")
+            plt.title("Table 9: replay overhead vs K")
+            plt.legend()
+            plt.tight_layout()
+            plt.savefig(os.path.join(out, "table9.png"), dpi=120)
+            print("wrote table9.png")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

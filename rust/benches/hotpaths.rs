@@ -1,0 +1,122 @@
+//! L3 hot-path micro-benchmarks: delta regeneration, gradient accumulation,
+//! QES updates (full-residual vs replay at several K), perturbation
+//! materialization, f16 conversion, and the QuZO update — the §Perf
+//! baseline table in EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench hotpaths` (needs `make artifacts`).
+
+use qes::model::{init::init_fp, ParamStore};
+use qes::opt::{
+    accumulate_grad, apply_perturbation, EsHyper, LatticeOptimizer, PopulationSpec,
+    QesFullResidual, QuzoOptimizer, SeedReplayQes,
+};
+use qes::quant::Format;
+use qes::rng::{NoiseStream, SplitMix64};
+use qes::runtime::Manifest;
+use qes::util::bench::{black_box, Bench};
+
+fn quant_store(size: &str) -> ParamStore {
+    let man = Manifest::load("artifacts/manifest.json").expect("run `make artifacts`");
+    let mut fp = ParamStore::from_manifest(&man, size, Format::Fp32).unwrap();
+    init_fp(&mut fp, 3);
+    ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap()
+}
+
+fn main() {
+    let store = quant_store("nano");
+    let d = store.lattice_dim();
+    let micro = quant_store("micro");
+    let dm = micro.lattice_dim();
+    println!("lattice dims: nano d={} micro d={}", d, dm);
+
+    let mut b = Bench::new("L3 hot paths");
+
+    // raw delta stream throughput
+    b.run("delta_stream/1M elems", || {
+        let mut s = NoiseStream::new(7, 0.02, 1.0);
+        let mut acc = 0i64;
+        for _ in 0..1_000_000 {
+            acc += s.next_delta() as i64;
+        }
+        black_box(acc);
+    });
+    b.run("pair_delta_stream/1M elems", || {
+        let mut s = NoiseStream::new(7, 0.02, 1.0);
+        let mut acc = 0i64;
+        for _ in 0..1_000_000 {
+            let (p, m) = s.next_pair_deltas();
+            acc += (p + m) as i64;
+        }
+        black_box(acc);
+    });
+
+    // gradient accumulation (pairs=8 => 8 streams over d)
+    let spec = PopulationSpec { gen_seed: 3, pairs: 8, sigma: 0.02 };
+    let fitness: Vec<f32> = (0..16).map(|i| (i as f32 - 7.5) / 16.0).collect();
+    let mut g = vec![0.0f32; d];
+    b.run(&format!("accumulate_grad/nano d={} p=8", d), || {
+        accumulate_grad(&spec, &fitness, &mut g);
+        black_box(g[0]);
+    });
+    let mut gm = vec![0.0f32; dm];
+    b.run(&format!("accumulate_grad/micro d={} p=8", dm), || {
+        accumulate_grad(&spec, &fitness, &mut gm);
+        black_box(gm[0]);
+    });
+
+    // perturbation materialization (rollout side)
+    b.run("apply_perturbation/nano", || {
+        black_box(apply_perturbation(&store, &spec, 0, 7));
+    });
+    b.run("apply_perturbation/micro", || {
+        black_box(apply_perturbation(&micro, &spec, 0, 7));
+    });
+
+    // optimizer updates
+    let hyper = EsHyper { sigma: 0.02, alpha: 0.08, gamma: 0.98, pairs: 8, k_window: 8 };
+    {
+        let mut s = store.clone();
+        let mut opt = QesFullResidual::new(d, 7, hyper.clone());
+        let mut rng = SplitMix64::new(5);
+        b.run("update/full_residual/nano", || {
+            let sp = PopulationSpec { gen_seed: rng.next_u64(), pairs: 8, sigma: 0.02 };
+            opt.update(&mut s, &sp, &fitness).unwrap();
+        });
+    }
+    for k in [2usize, 8, 16] {
+        let mut s = store.clone();
+        let mut opt =
+            SeedReplayQes::new(d, 7, EsHyper { k_window: k, ..hyper.clone() });
+        let mut rng = SplitMix64::new(5);
+        // warm the history to K so the steady-state cost is measured
+        for _ in 0..k {
+            let sp = PopulationSpec { gen_seed: rng.next_u64(), pairs: 8, sigma: 0.02 };
+            opt.update(&mut s, &sp, &fitness).unwrap();
+        }
+        b.run(&format!("update/seed_replay K={}/nano", k), || {
+            let sp = PopulationSpec { gen_seed: rng.next_u64(), pairs: 8, sigma: 0.02 };
+            opt.update(&mut s, &sp, &fitness).unwrap();
+        });
+    }
+    {
+        let mut s = store.clone();
+        let mut opt = QuzoOptimizer::new(d, 7, hyper.clone());
+        let mut rng = SplitMix64::new(5);
+        b.run("update/quzo/nano", || {
+            let sp = PopulationSpec { gen_seed: rng.next_u64(), pairs: 8, sigma: 0.02 };
+            opt.update(&mut s, &sp, &fitness).unwrap();
+        });
+    }
+
+    // f16 conversions (residual storage cost)
+    let xs: Vec<f32> = (0..65536).map(|i| (i as f32 / 65536.0) - 0.5).collect();
+    b.run("f16 roundtrip/64k elems", || {
+        let mut acc = 0f32;
+        for &x in &xs {
+            acc += qes::util::f16::f16_bits_to_f32(qes::util::f16::f32_to_f16_bits(x));
+        }
+        black_box(acc);
+    });
+
+    b.report();
+}

@@ -1,0 +1,72 @@
+//! Replay-vs-rollout ratio benchmark — the Table 9 trade-off, measured at
+//! the generation level: one full ES generation (rollout of 2N members +
+//! update) for the full-residual oracle vs seed replay at several K.
+//!
+//! Run: `cargo bench --bench replay`
+
+use qes::coordinator::{eval_problems, finetune_gen, EngineSet, FinetuneCfg, Session, Variant};
+use qes::model::{init::init_fp, ParamStore};
+use qes::opt::EsHyper;
+use qes::quant::Format;
+use qes::runtime::Manifest;
+use qes::tasks::gen_task;
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::load("artifacts/manifest.json")?;
+    let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32)?;
+    init_fp(&mut fp, 3);
+    let q0 = ParamStore::quantize_from(&fp, &man, Format::Int4, None)?;
+    let session = Session::new(&man, "nano", Format::Int4, EngineSet::gen_only())?;
+    let task = gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec)?;
+    let _ = eval_problems(task.as_ref(), 8, 1);
+
+    println!(
+        "{:<24} {:>14} {:>14} {:>10}",
+        "variant", "rollout ms/gen", "update ms/gen", "overhead"
+    );
+    let base_cfg = FinetuneCfg {
+        hyper: EsHyper { sigma: 0.02, alpha: 0.08, gamma: 0.98, pairs: 8, k_window: 8 },
+        gens: 8,
+        tau: 0.0,
+        batches_per_gen: 2,
+        train_pool: 64,
+        eval_every: 0,
+        eval_n: 8,
+        seed: 42,
+        verbose: false,
+    };
+
+    let mut store = q0.clone();
+    let oracle = finetune_gen(
+        &session, task.as_ref(), &mut store, Variant::QesFullResidual, &base_cfg, None,
+    )?;
+    let oracle_total = oracle.mean_rollout_ms() + oracle.mean_update_ms();
+    println!(
+        "{:<24} {:>14.1} {:>14.1} {:>9.2}x",
+        "full-residual (oracle)",
+        oracle.mean_rollout_ms(),
+        oracle.mean_update_ms(),
+        1.0
+    );
+
+    for k in [2usize, 4, 8, 16] {
+        let mut cfg = base_cfg.clone();
+        cfg.hyper.k_window = k;
+        // run k warmup gens first so history is full
+        cfg.gens = k + 8;
+        let mut store = q0.clone();
+        let log = finetune_gen(&session, task.as_ref(), &mut store, Variant::Qes, &cfg, None)?;
+        // steady-state: last 8 generations only
+        let tail: Vec<_> = log.entries.iter().rev().take(8).collect();
+        let roll = tail.iter().map(|e| e.rollout_ms).sum::<f64>() / tail.len() as f64;
+        let upd = tail.iter().map(|e| e.update_ms).sum::<f64>() / tail.len() as f64;
+        println!(
+            "{:<24} {:>14.1} {:>14.1} {:>9.2}x",
+            format!("seed-replay K={}", k),
+            roll,
+            upd,
+            (roll + upd) / oracle_total
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Rollout-path benchmarks: PJRT execution of the AOT artifacts (gen /
+//! loss / cls) plus literal marshalling — the per-member cost that
+//! dominates each ES generation (Table 9's rollout column).
+//!
+//! Run: `cargo bench --bench rollout`
+
+use qes::coordinator::{ClsBatch, GenBatch, LmBatch, EngineSet, Session};
+use qes::coordinator::eval_problems;
+use qes::model::{init::init_fp, ParamStore};
+use qes::quant::Format;
+use qes::rng::SplitMix64;
+use qes::runtime::{param_literals, Manifest};
+use qes::tasks::{cls_task, gen_task};
+use qes::util::bench::{black_box, Bench};
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::load("artifacts/manifest.json")?;
+    let mut b = Bench::new("rollout path (PJRT)");
+
+    for size in ["nano", "micro"] {
+        let mut fp = ParamStore::from_manifest(&man, size, Format::Fp32)?;
+        init_fp(&mut fp, 3);
+        for fmt in [Format::Int4, Format::W8A8] {
+            let q = ParamStore::quantize_from(&fp, &man, fmt, None)?;
+            let session = Session::new(&man, size, fmt, EngineSet {
+                gen: true,
+                loss: true,
+                cls: true,
+                ..Default::default()
+            })?;
+            let task = gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec)?;
+            let problems = eval_problems(task.as_ref(), session.cfg.b_gen, 1);
+            let batch = GenBatch::build(&session.cfg, problems);
+
+            b.run(&format!("gen/{}/{} (b={} t={})", size, fmt.name(),
+                session.cfg.b_gen, session.cfg.t_dec), || {
+                black_box(session.generate(&q, None, &batch, 0.0, None).unwrap());
+            });
+
+            let ct = cls_task("snli")?;
+            let mut rng = SplitMix64::new(2);
+            let exs: Vec<_> =
+                (0..session.cfg.b_train).map(|_| ct.sample(&mut rng, true)).collect();
+            let cb = ClsBatch::build(&session.cfg, &exs, &ct.verbalizers());
+            b.run(&format!("cls/{}/{}", size, fmt.name()), || {
+                black_box(session.cls_eval(&q, None, &cb).unwrap());
+            });
+
+            let pairs: Vec<(String, String)> = (0..session.cfg.b_train)
+                .map(|_| task.supervised(&mut rng))
+                .collect();
+            let lm = LmBatch::build(&session.cfg, &pairs);
+            b.run(&format!("loss/{}/{}", size, fmt.name()), || {
+                black_box(session.lm_loss(&q, None, &lm).unwrap());
+            });
+
+            // marshalling only: how much of the per-call cost is literals?
+            b.run(&format!("param_literals/{}/{}", size, fmt.name()), || {
+                black_box(param_literals(&q, None).unwrap());
+            });
+        }
+    }
+    b.report();
+    Ok(())
+}

@@ -1,0 +1,238 @@
+//! Host-side batch encoding: task text -> the exact tensors the AOT
+//! artifacts expect.
+//!
+//! Conventions (mirrors python/compile/model.py):
+//! * generation prompts are LEFT-padded to `s_prompt` (uniform cache slots);
+//! * loss/cls sequences are RIGHT-padded to `s_train` with explicit
+//!   `pos_ids` and key `mask`, so padding never leaks into attention.
+
+use crate::rng::SplitMix64;
+use crate::runtime::manifest::ModelConfig;
+use crate::tasks::{tokenizer, ClsExample, GenProblem};
+
+/// A generation rollout batch, padded to exactly `b_gen` rows.
+#[derive(Debug, Clone)]
+pub struct GenBatch {
+    pub prompt: Vec<i32>,   // [b_gen, s_prompt], left-padded
+    pub lens: Vec<i32>,     // [b_gen]
+    pub problems: Vec<GenProblem>,
+    /// Rows beyond this are padding duplicates and must not be scored.
+    pub n_real: usize,
+}
+
+impl GenBatch {
+    /// Build from up to `b_gen` problems (panics if a prompt exceeds the
+    /// budget — task constructors are sized to prevent that).
+    pub fn build(cfg: &ModelConfig, problems: Vec<GenProblem>) -> GenBatch {
+        assert!(!problems.is_empty() && problems.len() <= cfg.b_gen);
+        let n_real = problems.len();
+        let mut padded = problems.clone();
+        while padded.len() < cfg.b_gen {
+            padded.push(problems[0].clone());
+        }
+        let (b, sp) = (cfg.b_gen, cfg.s_prompt);
+        let mut prompt = vec![tokenizer::PAD as i32; b * sp];
+        let mut lens = vec![0i32; b];
+        for (i, p) in padded.iter().enumerate() {
+            let ids = tokenizer::encode(&p.prompt);
+            assert!(
+                ids.len() <= sp,
+                "prompt {:?} ({} tokens) exceeds s_prompt {}",
+                p.prompt,
+                ids.len(),
+                sp
+            );
+            let off = sp - ids.len();
+            for (j, &t) in ids.iter().enumerate() {
+                prompt[i * sp + off + j] = t as i32;
+            }
+            lens[i] = ids.len() as i32;
+        }
+        GenBatch { prompt, lens, problems: padded, n_real }
+    }
+}
+
+/// Gumbel noise tensor for sampled decoding, derived from a seed;
+/// all-zeros (greedy) when `tau == 0` callers pass `None`.
+pub fn gumbel_noise(cfg: &ModelConfig, seed: Option<u64>) -> Vec<f32> {
+    let n = cfg.b_gen * cfg.t_dec * cfg.vocab;
+    match seed {
+        None => vec![0.0; n],
+        Some(s) => {
+            let mut rng = SplitMix64::new(s ^ 0x6775_6d62_656c_2121);
+            (0..n).map(|_| rng.gumbel()).collect()
+        }
+    }
+}
+
+/// A classification batch, padded to exactly `b_train` rows.
+#[derive(Debug, Clone)]
+pub struct ClsBatch {
+    pub tokens: Vec<i32>,    // [b_train, s_train], right-padded
+    pub pos_ids: Vec<i32>,   // [b_train, s_train]
+    pub mask: Vec<f32>,      // [b_train, s_train]
+    pub cls_pos: Vec<i32>,   // [b_train]
+    pub class_ids: Vec<i32>, // [8] (artifact-fixed width; unused slots repeat)
+    pub labels: Vec<i32>,    // [b_train]
+    pub n_real: usize,
+}
+
+impl ClsBatch {
+    pub fn build(cfg: &ModelConfig, examples: &[ClsExample], verbalizers: &[u8]) -> ClsBatch {
+        assert!(!examples.is_empty() && examples.len() <= cfg.b_train);
+        let n_real = examples.len();
+        let (b, st) = (cfg.b_train, cfg.s_train);
+        let mut tokens = vec![tokenizer::PAD as i32; b * st];
+        let mut pos_ids = vec![0i32; b * st];
+        let mut mask = vec![0.0f32; b * st];
+        let mut cls_pos = vec![0i32; b];
+        let mut labels = vec![0i32; b];
+        for i in 0..b {
+            let ex = &examples[i.min(n_real - 1)];
+            let ids = tokenizer::encode(&ex.text);
+            assert!(ids.len() <= st, "cls text {:?} exceeds s_train {}", ex.text, st);
+            for (j, &t) in ids.iter().enumerate() {
+                tokens[i * st + j] = t as i32;
+                pos_ids[i * st + j] = j as i32;
+                mask[i * st + j] = 1.0;
+            }
+            cls_pos[i] = (ids.len() - 1) as i32; // the '>' position
+            labels[i] = ex.label as i32;
+        }
+        // artifact takes a fixed 8-wide class-id vector
+        let mut class_ids = vec![verbalizers[0] as i32; 8];
+        for (c, &v) in verbalizers.iter().enumerate().take(8) {
+            class_ids[c] = v as i32;
+        }
+        ClsBatch { tokens, pos_ids, mask, cls_pos, class_ids, labels, n_real }
+    }
+}
+
+/// A teacher-forced LM batch (pretraining / loss eval).
+#[derive(Debug, Clone)]
+pub struct LmBatch {
+    pub tokens: Vec<i32>,
+    pub pos_ids: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub targets: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+}
+
+impl LmBatch {
+    /// Build from (prompt, completion) pairs: loss on completion tokens
+    /// only (the usual SFT masking).
+    pub fn build(cfg: &ModelConfig, pairs: &[(String, String)]) -> LmBatch {
+        assert!(!pairs.is_empty() && pairs.len() <= cfg.b_train);
+        let (b, st) = (cfg.b_train, cfg.s_train);
+        let mut tokens = vec![tokenizer::PAD as i32; b * st];
+        let mut pos_ids = vec![0i32; b * st];
+        let mut mask = vec![0.0f32; b * st];
+        let mut targets = vec![tokenizer::PAD as i32; b * st];
+        let mut loss_mask = vec![0.0f32; b * st];
+        for i in 0..b {
+            let (p, c) = &pairs[i.min(pairs.len() - 1)];
+            let pids = tokenizer::encode(p);
+            let cids = tokenizer::encode(c);
+            let full: Vec<u8> = pids.iter().chain(cids.iter()).copied().collect();
+            assert!(full.len() <= st, "sequence {:?}{:?} exceeds s_train {}", p, c, st);
+            for (j, &t) in full.iter().enumerate() {
+                tokens[i * st + j] = t as i32;
+                pos_ids[i * st + j] = j as i32;
+                mask[i * st + j] = 1.0;
+            }
+            // targets[j] = tokens[j+1]; loss only where the TARGET is a
+            // completion token.
+            for j in 0..full.len().saturating_sub(1) {
+                targets[i * st + j] = full[j + 1] as i32;
+                if j + 1 >= pids.len() {
+                    loss_mask[i * st + j] = 1.0;
+                }
+            }
+        }
+        LmBatch { tokens, pos_ids, mask, targets, loss_mask }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use crate::tasks::{gen_task, ProblemKey};
+
+    fn cfg() -> ModelConfig {
+        Manifest::load("artifacts/manifest.json").unwrap().config("nano").unwrap().clone()
+    }
+
+    #[test]
+    fn gen_batch_left_padded() {
+        let cfg = cfg();
+        let t = gen_task("countdown", cfg.s_prompt, cfg.t_dec).unwrap();
+        let mut rng = SplitMix64::new(1);
+        let problems: Vec<_> = (0..3).map(|_| t.sample(&mut rng)).collect();
+        let b = GenBatch::build(&cfg, problems);
+        assert_eq!(b.n_real, 3);
+        assert_eq!(b.prompt.len(), cfg.b_gen * cfg.s_prompt);
+        // row 0: leading pads then prompt; last token is ':'
+        let row0 = &b.prompt[..cfg.s_prompt];
+        let len0 = b.lens[0] as usize;
+        assert!(row0[..cfg.s_prompt - len0].iter().all(|&t| t == 0));
+        assert_eq!(row0[cfg.s_prompt - 1], tokenizer::tok(':') as i32);
+        // padding rows duplicate problem 0
+        if let (ProblemKey::Countdown { target: t0, .. }, ProblemKey::Countdown { target: tp, .. }) =
+            (&b.problems[0].key, &b.problems[cfg.b_gen - 1].key)
+        {
+            assert_eq!(t0, tp);
+        }
+    }
+
+    #[test]
+    fn gumbel_deterministic_and_greedy_zero() {
+        let cfg = cfg();
+        assert!(gumbel_noise(&cfg, None).iter().all(|&x| x == 0.0));
+        let a = gumbel_noise(&cfg, Some(5));
+        let b = gumbel_noise(&cfg, Some(5));
+        assert_eq!(a, b);
+        assert!(gumbel_noise(&cfg, Some(6)) != a);
+    }
+
+    #[test]
+    fn cls_batch_positions() {
+        let cfg = cfg();
+        let task = crate::tasks::cls_task("snli").unwrap();
+        let mut rng = SplitMix64::new(2);
+        let exs: Vec<_> = (0..4).map(|_| task.sample(&mut rng, true)).collect();
+        let b = ClsBatch::build(&cfg, &exs, &task.verbalizers());
+        assert_eq!(b.n_real, 4);
+        for i in 0..4 {
+            let cp = b.cls_pos[i] as usize;
+            assert_eq!(b.tokens[i * cfg.s_train + cp], tokenizer::tok('>') as i32);
+            assert_eq!(b.mask[i * cfg.s_train + cp], 1.0);
+            if cp + 1 < cfg.s_train {
+                assert_eq!(b.mask[i * cfg.s_train + cp + 1], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn lm_batch_masks_prompt() {
+        let cfg = cfg();
+        let pairs = vec![("3,4,5=17:".to_string(), "3*4+5;".to_string())];
+        let b = LmBatch::build(&cfg, &pairs);
+        let st = cfg.s_train;
+        let plen = 9;
+        // loss mask zero where target is still inside the prompt
+        for j in 0..plen - 1 {
+            assert_eq!(b.loss_mask[j], 0.0, "j={}", j);
+        }
+        // and one on the completion region
+        let full_len = plen + 6;
+        for j in plen - 1..full_len - 1 {
+            assert_eq!(b.loss_mask[j], 1.0, "j={}", j);
+            assert_eq!(b.targets[j], b.tokens[j + 1]);
+        }
+        // nothing beyond the sequence
+        for j in full_len..st {
+            assert_eq!(b.loss_mask.get(j).copied().unwrap_or(0.0), 0.0);
+        }
+    }
+}

@@ -1,0 +1,473 @@
+//! The ES generation loop — the paper's training procedure (§3, §A.3).
+//!
+//! Per generation: sample a rollout problem batch (common across members —
+//! common random numbers cut fitness variance), evaluate all 2N antithetic
+//! members, rank-normalize rewards, and hand (gen_seed, fitness) to the
+//! optimizer. Rollout and update wall-clock are measured separately — they
+//! are Table 9's two columns.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::encode::{ClsBatch, GenBatch};
+use crate::coordinator::pool::{Job, WorkerPool};
+use crate::coordinator::rollout::{
+    eval_accuracy_cls, eval_accuracy_gen, eval_member_cls, eval_member_gen,
+};
+use crate::coordinator::session::Session;
+use crate::model::ParamStore;
+use crate::opt::{
+    normalize_fitness, EsHyper, LatticeOptimizer, MezoOptimizer, PopulationSpec,
+    QesFullResidual, QuzoOptimizer, SeedReplayQes,
+};
+use crate::rng::SplitMix64;
+use crate::tasks::{ClsTask, GenProblem, GenTask};
+
+/// Which optimizer drives the run (paper method names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// QES with Stateless Seed Replay (Algorithm 2) — the paper's method.
+    Qes,
+    /// QES with explicit FP16 residuals (Algorithm 1) — the oracle.
+    QesFullResidual,
+    /// QuZO: stateless stochastic-rounding ZO (primary baseline).
+    Quzo,
+    /// QES with the adaptive-K extension (paper §6 future work).
+    QesAdaptive,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Result<Variant> {
+        Ok(match s {
+            "qes" => Variant::Qes,
+            "qes-full" | "full-residual" => Variant::QesFullResidual,
+            "quzo" => Variant::Quzo,
+            "qes-adaptive" => Variant::QesAdaptive,
+            other => {
+                anyhow::bail!("unknown variant {:?} (qes|qes-full|quzo|qes-adaptive)", other)
+            }
+        })
+    }
+
+    pub fn build(self, d: usize, qmax: i8, hyper: EsHyper) -> Box<dyn LatticeOptimizer> {
+        match self {
+            Variant::Qes => Box::new(SeedReplayQes::new(d, qmax, hyper)),
+            Variant::QesFullResidual => Box::new(QesFullResidual::new(d, qmax, hyper)),
+            Variant::Quzo => Box::new(QuzoOptimizer::new(d, qmax, hyper)),
+            Variant::QesAdaptive => {
+                let k0 = hyper.k_window;
+                Box::new(crate::opt::AdaptiveReplayQes::new(
+                    d,
+                    qmax,
+                    hyper,
+                    (k0 / 4).max(1),
+                    k0 * 4,
+                ))
+            }
+        }
+    }
+}
+
+/// One generation's telemetry.
+#[derive(Debug, Clone)]
+pub struct GenLog {
+    pub gen: usize,
+    pub mean_reward: f32,
+    pub best_reward: f32,
+    pub eval_acc: Option<f32>,
+    pub update_ratio: f64,
+    pub boundary_ratio: f64,
+    pub rollout_ms: f64,
+    pub update_ms: f64,
+}
+
+#[derive(Debug, Default)]
+pub struct RunLog {
+    pub entries: Vec<GenLog>,
+    pub final_acc: f32,
+    pub optimizer_state_bytes: u64,
+}
+
+impl RunLog {
+    pub fn mean_rollout_ms(&self) -> f64 {
+        crate::util::mean(&self.entries.iter().map(|e| e.rollout_ms as f32).collect::<Vec<_>>())
+            as f64
+    }
+    pub fn mean_update_ms(&self) -> f64 {
+        crate::util::mean(&self.entries.iter().map(|e| e.update_ms as f32).collect::<Vec<_>>())
+            as f64
+    }
+
+    /// Dump the reward/eval curves as CSV (Fig. 2 series).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("gen,mean_reward,best_reward,eval_acc,update_ratio,boundary_ratio,rollout_ms,update_ms\n");
+        for e in &self.entries {
+            s.push_str(&format!(
+                "{},{:.4},{:.4},{},{:.6},{:.6},{:.2},{:.2}\n",
+                e.gen,
+                e.mean_reward,
+                e.best_reward,
+                e.eval_acc.map(|a| format!("{:.2}", a)).unwrap_or_default(),
+                e.update_ratio,
+                e.boundary_ratio,
+                e.rollout_ms,
+                e.update_ms
+            ));
+        }
+        s
+    }
+}
+
+/// Run configuration for a fine-tuning run.
+#[derive(Debug, Clone)]
+pub struct FinetuneCfg {
+    pub hyper: EsHyper,
+    pub gens: usize,
+    /// Decode-sampling temperature during training rollouts (0 = greedy).
+    pub tau: f32,
+    /// Rollout batches (of b_gen problems) per member per generation —
+    /// fitness granularity is 1/(b_gen * batches).
+    pub batches_per_gen: usize,
+    /// Fixed training-pool size (problems are drawn from a persistent pool,
+    /// like the paper's GSM8K train split, so the fitness signal has a
+    /// consistent direction across generations).
+    pub train_pool: usize,
+    /// Evaluate greedy accuracy every this many generations (0 = only at end).
+    pub eval_every: usize,
+    pub eval_n: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for FinetuneCfg {
+    fn default() -> Self {
+        FinetuneCfg {
+            hyper: EsHyper::default(),
+            gens: 60,
+            tau: 0.7,
+            batches_per_gen: 2,
+            train_pool: 256,
+            eval_every: 0,
+            eval_n: 64,
+            seed: 42,
+            verbose: false,
+        }
+    }
+}
+
+/// Sample a fixed eval problem set (disjoint seed space from training).
+pub fn eval_problems(task: &dyn GenTask, n: usize, seed: u64) -> Vec<GenProblem> {
+    let mut rng = SplitMix64::new(seed ^ 0x6576_616c_5f73_6574);
+    (0..n).map(|_| task.sample(&mut rng)).collect()
+}
+
+/// Fine-tune a quantized store with an ES-family optimizer on a reasoning
+/// task. `pool` distributes members when Some; otherwise inline.
+#[allow(clippy::too_many_arguments)]
+pub fn finetune_gen(
+    session: &Session,
+    task: &dyn GenTask,
+    store: &mut ParamStore,
+    variant: Variant,
+    cfg: &FinetuneCfg,
+    pool: Option<&WorkerPool>,
+) -> Result<RunLog> {
+    let qmax = store.format.qmax();
+    let d = store.lattice_dim();
+    let mut opt = variant.build(d, qmax, cfg.hyper.clone());
+    let mut master = SplitMix64::new(cfg.seed);
+    let mut problem_rng = SplitMix64::new(cfg.seed ^ 0x70_726f_62);
+    let evalset = eval_problems(task, cfg.eval_n, cfg.seed);
+    // persistent training pool (the paper's "training split")
+    let pool_problems: Vec<GenProblem> =
+        (0..cfg.train_pool).map(|_| task.sample(&mut problem_rng)).collect();
+    let mut log = RunLog::default();
+
+    for gen in 0..cfg.gens {
+        let gen_seed = master.next_u64();
+        let spec = PopulationSpec { gen_seed, pairs: cfg.hyper.pairs, sigma: cfg.hyper.sigma };
+        let n_members = spec.n_members();
+        // draw this generation's batches from the fixed pool (common across
+        // members — common random numbers)
+        let mut batch_rng = SplitMix64::new(gen_seed ^ 0x6261_7463_68);
+        let batches: Vec<GenBatch> = (0..cfg.batches_per_gen.max(1))
+            .map(|_| {
+                let problems: Vec<GenProblem> = (0..session.cfg.b_gen)
+                    .map(|_| {
+                        pool_problems[batch_rng.below(pool_problems.len() as u64) as usize]
+                            .clone()
+                    })
+                    .collect();
+                GenBatch::build(&session.cfg, problems)
+            })
+            .collect();
+
+        // --- rollout phase ---
+        let t0 = Instant::now();
+        let mut raw = vec![0.0f32; n_members];
+        match pool {
+            Some(p) if p.n_workers() > 1 => {
+                let snapshot = Arc::new(store.clone());
+                let w = p.n_workers();
+                for batch in &batches {
+                    let ab = Arc::new(batch.clone());
+                    let jobs: Vec<Job> = (0..w)
+                        .map(|i| Job::EvalGen {
+                            snapshot: snapshot.clone(),
+                            gen_seed,
+                            pairs: spec.pairs,
+                            sigma: spec.sigma,
+                            members: (0..n_members).filter(|m| m % w == i).collect(),
+                            batch: ab.clone(),
+                            tau: cfg.tau,
+                        })
+                        .collect();
+                    for r in p.run_round(jobs, n_members)? {
+                        raw[r.member] += r.reward? / batches.len() as f32;
+                    }
+                }
+            }
+            _ => {
+                for m in 0..n_members {
+                    for batch in &batches {
+                        raw[m] += eval_member_gen(
+                            session, task, store, &spec, m, batch, cfg.tau, qmax,
+                        )? / batches.len() as f32;
+                    }
+                }
+            }
+        }
+        let rollout_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // --- update phase ---
+        let fitness = normalize_fitness(&raw);
+        let t1 = Instant::now();
+        let stats = opt.update(store, &spec, &fitness)?;
+        let update_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+        let eval_acc = if cfg.eval_every > 0 && (gen + 1) % cfg.eval_every == 0 {
+            Some(eval_accuracy_gen(session, task, store, &evalset)?)
+        } else {
+            None
+        };
+        let entry = GenLog {
+            gen,
+            mean_reward: crate::util::mean(&raw),
+            best_reward: raw.iter().cloned().fold(f32::MIN, f32::max),
+            eval_acc,
+            update_ratio: stats.update_ratio(),
+            boundary_ratio: stats.boundary_hit_ratio(),
+            rollout_ms,
+            update_ms,
+        };
+        if cfg.verbose {
+            println!(
+                "[{} gen {:>4}] reward {:.3} (best {:.3}) upd {:.4}% roll {:.0}ms upd {:.0}ms{}",
+                opt.name(),
+                gen,
+                entry.mean_reward,
+                entry.best_reward,
+                100.0 * entry.update_ratio,
+                rollout_ms,
+                update_ms,
+                entry.eval_acc.map(|a| format!(" eval {:.1}%", a)).unwrap_or_default()
+            );
+        }
+        log.entries.push(entry);
+    }
+    log.final_acc = eval_accuracy_gen(session, task, store, &evalset)?;
+    log.optimizer_state_bytes = opt.state_bytes();
+    Ok(log)
+}
+
+/// Fine-tune on an SFT task: fitness = -CE on the k-shot train batches;
+/// accuracy reported on a held-out eval set.
+#[allow(clippy::too_many_arguments)]
+pub fn finetune_cls(
+    session: &Session,
+    task: &dyn ClsTask,
+    store: &mut ParamStore,
+    variant: Variant,
+    cfg: &FinetuneCfg,
+    k_shot: usize,
+    pool: Option<&WorkerPool>,
+) -> Result<RunLog> {
+    let qmax = store.format.qmax();
+    let d = store.lattice_dim();
+    let mut opt = variant.build(d, qmax, cfg.hyper.clone());
+    let mut master = SplitMix64::new(cfg.seed);
+    let (train_batches, eval_batches) = build_cls_sets(session, task, k_shot, cfg)?;
+    let train_arc = Arc::new(train_batches);
+    let mut log = RunLog::default();
+
+    for gen in 0..cfg.gens {
+        let gen_seed = master.next_u64();
+        let spec = PopulationSpec { gen_seed, pairs: cfg.hyper.pairs, sigma: cfg.hyper.sigma };
+        let n_members = spec.n_members();
+
+        let t0 = Instant::now();
+        let mut raw = vec![0.0f32; n_members];
+        match pool {
+            Some(p) if p.n_workers() > 1 => {
+                let snapshot = Arc::new(store.clone());
+                let w = p.n_workers();
+                let jobs: Vec<Job> = (0..w)
+                    .map(|i| Job::EvalCls {
+                        snapshot: snapshot.clone(),
+                        gen_seed,
+                        pairs: spec.pairs,
+                        sigma: spec.sigma,
+                        members: (0..n_members).filter(|m| m % w == i).collect(),
+                        batches: train_arc.clone(),
+                    })
+                    .collect();
+                for r in p.run_round(jobs, n_members)? {
+                    raw[r.member] = r.reward?;
+                }
+            }
+            _ => {
+                for m in 0..n_members {
+                    raw[m] = eval_member_cls(session, store, &spec, m, &train_arc, qmax)?;
+                }
+            }
+        }
+        let rollout_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let fitness = normalize_fitness(&raw);
+        let t1 = Instant::now();
+        let stats = opt.update(store, &spec, &fitness)?;
+        let update_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+        let eval_acc = if cfg.eval_every > 0 && (gen + 1) % cfg.eval_every == 0 {
+            Some(eval_accuracy_cls(session, store, &eval_batches)?)
+        } else {
+            None
+        };
+        if cfg.verbose && (gen % 10 == 0 || eval_acc.is_some()) {
+            println!(
+                "[{} gen {:>4}] fitness {:.4}{}",
+                opt.name(),
+                gen,
+                crate::util::mean(&raw),
+                eval_acc.map(|a| format!(" eval {:.1}%", a)).unwrap_or_default()
+            );
+        }
+        log.entries.push(GenLog {
+            gen,
+            mean_reward: crate::util::mean(&raw),
+            best_reward: raw.iter().cloned().fold(f32::MIN, f32::max),
+            eval_acc,
+            update_ratio: stats.update_ratio(),
+            boundary_ratio: stats.boundary_hit_ratio(),
+            rollout_ms,
+            update_ms,
+        });
+    }
+    log.final_acc = eval_accuracy_cls(session, store, &eval_batches)?;
+    log.optimizer_state_bytes = opt.state_bytes();
+    Ok(log)
+}
+
+/// MeZO on an fp store (Table 1's FP32 zeroth-order baseline): SPSA with
+/// continuous perturbations, fitness = -CE on the k-shot batches.
+pub fn finetune_cls_mezo(
+    session: &Session,
+    task: &dyn ClsTask,
+    store: &mut ParamStore,
+    cfg: &FinetuneCfg,
+    k_shot: usize,
+) -> Result<RunLog> {
+    let mut opt = MezoOptimizer::new(cfg.hyper.clone());
+    let mut master = SplitMix64::new(cfg.seed);
+    let (train_batches, eval_batches) = build_cls_sets(session, task, k_shot, cfg)?;
+    let mut log = RunLog::default();
+
+    for gen in 0..cfg.gens {
+        let gen_seed = master.next_u64();
+        let spec = PopulationSpec { gen_seed, pairs: cfg.hyper.pairs, sigma: cfg.hyper.sigma };
+        let t0 = Instant::now();
+        let mut raw = vec![0.0f32; spec.n_members()];
+        for m in 0..spec.n_members() {
+            let perturbed = MezoOptimizer::perturb_fp(store, &spec, m);
+            // evaluate by temporarily swapping in the perturbed tensors
+            let mut loss = 0.0f32;
+            let saved = swap_fp_lattice(store, &perturbed);
+            for b in train_batches.iter() {
+                let (ce, _) = session.cls_eval(store, None, b)?;
+                loss += ce;
+            }
+            restore_fp_lattice(store, saved);
+            raw[m] = -loss / train_batches.len() as f32;
+        }
+        let rollout_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = Instant::now();
+        opt.update_fp(store, &spec, &raw)?;
+        let update_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let eval_acc = if cfg.eval_every > 0 && (gen + 1) % cfg.eval_every == 0 {
+            Some(eval_accuracy_cls(session, store, &eval_batches)?)
+        } else {
+            None
+        };
+        log.entries.push(GenLog {
+            gen,
+            mean_reward: crate::util::mean(&raw),
+            best_reward: raw.iter().cloned().fold(f32::MIN, f32::max),
+            eval_acc,
+            update_ratio: 0.0,
+            boundary_ratio: 0.0,
+            rollout_ms,
+            update_ms,
+        });
+    }
+    log.final_acc = eval_accuracy_cls(session, store, &eval_batches)?;
+    log.optimizer_state_bytes = opt.state_bytes();
+    Ok(log)
+}
+
+/// Build k-shot train batches + a held-out eval set for an SFT task.
+fn build_cls_sets(
+    session: &Session,
+    task: &dyn ClsTask,
+    k_shot: usize,
+    cfg: &FinetuneCfg,
+) -> Result<(Vec<ClsBatch>, Vec<ClsBatch>)> {
+    let mcfg = &session.cfg;
+    let verb = task.verbalizers();
+    let mut rng = SplitMix64::new(cfg.seed ^ 0x6b73_686f_74);
+    // k examples per class (k-shot protocol)
+    let mut train = Vec::new();
+    let mut per_class = vec![0usize; task.n_classes()];
+    while per_class.iter().any(|&c| c < k_shot) {
+        let ex = task.sample(&mut rng, true);
+        if per_class[ex.label] < k_shot {
+            per_class[ex.label] += 1;
+            train.push(ex);
+        }
+    }
+    let train_batches: Vec<ClsBatch> =
+        train.chunks(mcfg.b_train).map(|c| ClsBatch::build(mcfg, c, &verb)).collect();
+    let eval: Vec<_> = (0..cfg.eval_n).map(|_| task.sample(&mut rng, false)).collect();
+    let eval_batches: Vec<ClsBatch> =
+        eval.chunks(mcfg.b_train).map(|c| ClsBatch::build(mcfg, c, &verb)).collect();
+    Ok((train_batches, eval_batches))
+}
+
+fn swap_fp_lattice(store: &mut ParamStore, values: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let lat: Vec<usize> = store.lattice_indices().to_vec();
+    let mut saved = Vec::with_capacity(lat.len());
+    for (k, &i) in lat.iter().enumerate() {
+        let dst = store.entries[i].data.as_f32_mut();
+        saved.push(dst.to_vec());
+        dst.copy_from_slice(&values[k]);
+    }
+    saved
+}
+
+fn restore_fp_lattice(store: &mut ParamStore, saved: Vec<Vec<f32>>) {
+    let lat: Vec<usize> = store.lattice_indices().to_vec();
+    for (k, &i) in lat.iter().enumerate() {
+        store.entries[i].data.as_f32_mut().copy_from_slice(&saved[k]);
+    }
+}

@@ -1,0 +1,27 @@
+//! Layer-3 coordinator: the ES leader, worker pool, batch encoders and the
+//! pretrain / fine-tune drivers (the paper's training system).
+//!
+//! Topology (mirrors the paper's rollout/update split, §4.6):
+//!
+//! ```text
+//!   leader ──seed──▶ workers (own PJRT engines) ──rewards──▶ leader
+//!     │                                                        │
+//!     └── optimizer.update(gen_seed, fitness) ── lattice store ┘
+//! ```
+
+pub mod encode;
+pub mod finetune;
+pub mod pool;
+pub mod pretrain;
+pub mod rollout;
+pub mod session;
+
+pub use encode::{ClsBatch, GenBatch, LmBatch};
+pub use finetune::{
+    eval_problems, finetune_cls, finetune_cls_mezo, finetune_gen, FinetuneCfg, GenLog, RunLog,
+    Variant,
+};
+pub use pool::{Job, MemberResult, WorkerPool};
+pub use pretrain::{pretrain_cls, pretrain_gen, PretrainCfg};
+pub use rollout::{eval_accuracy_cls, eval_accuracy_gen};
+pub use session::{EngineSet, Session};

@@ -1,0 +1,165 @@
+//! Worker pool: the leader/worker topology of the paper's rollout phase.
+//!
+//! Each worker thread owns its own PJRT client + compiled engines (the
+//! `xla` client is `Rc`-based and cannot cross threads) and evaluates the
+//! population members assigned to it against a broadcast snapshot of the
+//! current lattice. On the single-core CI testbed the default is one
+//! worker; the topology is exercised by tests with `workers = 2`.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::coordinator::encode::{ClsBatch, GenBatch};
+use crate::coordinator::rollout::{eval_member_cls, eval_member_gen};
+use crate::coordinator::session::{EngineSet, Session};
+use crate::model::ParamStore;
+use crate::quant::Format;
+use crate::runtime::Manifest;
+use crate::tasks::gen_task;
+
+/// Work order broadcast to a worker for one generation.
+pub enum Job {
+    EvalGen {
+        snapshot: Arc<ParamStore>,
+        gen_seed: u64,
+        pairs: usize,
+        sigma: f32,
+        members: Vec<usize>,
+        batch: Arc<GenBatch>,
+        tau: f32,
+    },
+    EvalCls {
+        snapshot: Arc<ParamStore>,
+        gen_seed: u64,
+        pairs: usize,
+        sigma: f32,
+        members: Vec<usize>,
+        batches: Arc<Vec<ClsBatch>>,
+    },
+    Shutdown,
+}
+
+pub struct MemberResult {
+    pub member: usize,
+    pub reward: Result<f32>,
+}
+
+pub struct WorkerPool {
+    senders: Vec<Sender<Job>>,
+    results: Receiver<MemberResult>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers, each compiling its own engines for
+    /// (size, format) and reconstructing `task_name` for rewards.
+    pub fn spawn(
+        n: usize,
+        manifest_path: &str,
+        size: &str,
+        format: Format,
+        task_name: Option<&str>,
+        set: EngineSet,
+    ) -> Result<WorkerPool> {
+        let (res_tx, res_rx) = channel::<MemberResult>();
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for w in 0..n {
+            let (tx, rx) = channel::<Job>();
+            senders.push(tx);
+            let res_tx = res_tx.clone();
+            let mpath = manifest_path.to_string();
+            let size = size.to_string();
+            let task_name = task_name.map(|s| s.to_string());
+            let handle = std::thread::Builder::new()
+                .name(format!("qes-worker-{}", w))
+                .spawn(move || {
+                    if let Err(e) = worker_main(&mpath, &size, format, task_name.as_deref(), set, rx, res_tx)
+                    {
+                        eprintln!("worker {} died: {:#}", w, e);
+                    }
+                })?;
+            handles.push(handle);
+        }
+        Ok(WorkerPool { senders, results: res_rx, handles })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Dispatch jobs (already member-partitioned, one per worker) and
+    /// collect exactly `expect` member results.
+    pub fn run_round(&self, jobs: Vec<Job>, expect: usize) -> Result<Vec<MemberResult>> {
+        anyhow::ensure!(jobs.len() <= self.senders.len(), "more jobs than workers");
+        for (tx, job) in self.senders.iter().zip(jobs) {
+            tx.send(job).map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+        }
+        let mut out = Vec::with_capacity(expect);
+        for _ in 0..expect {
+            out.push(
+                self.results
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("result channel closed"))?,
+            );
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Job::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(
+    manifest_path: &str,
+    size: &str,
+    format: Format,
+    task_name: Option<&str>,
+    set: EngineSet,
+    rx: Receiver<Job>,
+    res_tx: Sender<MemberResult>,
+) -> Result<()> {
+    let man = Manifest::load(manifest_path)?;
+    let session = Session::new(&man, size, format, set)?;
+    let qmax = format.qmax();
+    let task = match task_name {
+        Some(t) => Some(gen_task(t, session.cfg.s_prompt, session.cfg.t_dec)?),
+        None => None,
+    };
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Shutdown => break,
+            Job::EvalGen { snapshot, gen_seed, pairs, sigma, members, batch, tau } => {
+                let spec = crate::opt::PopulationSpec { gen_seed, pairs, sigma };
+                let task = task
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("gen job on a worker without a task"))?;
+                for m in members {
+                    let reward = eval_member_gen(
+                        &session, task.as_ref(), &snapshot, &spec, m, &batch, tau, qmax,
+                    );
+                    res_tx.send(MemberResult { member: m, reward }).ok();
+                }
+            }
+            Job::EvalCls { snapshot, gen_seed, pairs, sigma, members, batches } => {
+                let spec = crate::opt::PopulationSpec { gen_seed, pairs, sigma };
+                for m in members {
+                    let reward = eval_member_cls(&session, &snapshot, &spec, m, &batches, qmax);
+                    res_tx.send(MemberResult { member: m, reward }).ok();
+                }
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Pretraining pipeline: Adam over the AOT `grad_fp` artifact.
+//!
+//! The paper fine-tunes *pretrained* quantized backbones; this repo has no
+//! external checkpoints, so base models are produced here — supervised
+//! training on each task's synthetic corpus, stopped at partial competence
+//! so that PTQ + fine-tuning has headroom (DESIGN.md §2). Also powers the
+//! FO-FP32 / FO+STE baselines of Table 1.
+
+use anyhow::Result;
+
+use crate::coordinator::encode::LmBatch;
+use crate::coordinator::session::Session;
+use crate::model::ParamStore;
+use crate::opt::{Adam, AdamConfig};
+use crate::rng::SplitMix64;
+use crate::tasks::{ClsTask, GenTask};
+
+#[derive(Debug, Clone)]
+pub struct PretrainCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// STE snap grid (first-order quantized baseline); None = plain Adam.
+    pub ste_qmax: Option<i8>,
+    pub verbose: bool,
+}
+
+impl Default for PretrainCfg {
+    fn default() -> Self {
+        PretrainCfg { steps: 400, lr: 3e-3, seed: 7, ste_qmax: None, verbose: false }
+    }
+}
+
+/// Supervised pretraining on a reasoning task's (prompt, solution) corpus.
+/// Returns the final training loss.
+pub fn pretrain_gen(
+    session: &Session,
+    task: &dyn GenTask,
+    store: &mut ParamStore,
+    cfg: &PretrainCfg,
+) -> Result<f32> {
+    let mut adam = Adam::new(
+        store,
+        AdamConfig { lr: cfg.lr, ste_qmax: cfg.ste_qmax, ..Default::default() },
+    );
+    let mut rng = SplitMix64::new(cfg.seed);
+    let b = session.cfg.b_train;
+    let mut last = f32::NAN;
+    for step in 0..cfg.steps {
+        let pairs: Vec<(String, String)> = (0..b).map(|_| task.supervised(&mut rng)).collect();
+        let batch = LmBatch::build(&session.cfg, &pairs);
+        let (loss, grads) = session.lm_grads(store, &batch)?;
+        adam.step(store, &grads)?;
+        last = loss;
+        if cfg.verbose && step % 50 == 0 {
+            println!("[pretrain step {:>5}] loss {:.4}", step, loss);
+        }
+    }
+    Ok(last)
+}
+
+/// Supervised training on an SFT task: LM loss on the verbalizer token of
+/// "text" -> "<verbalizer>;" pairs. This is both the pretraining recipe for
+/// SFT backbones and the FO baseline's training loop (with ste_qmax set).
+pub fn pretrain_cls(
+    session: &Session,
+    task: &dyn ClsTask,
+    store: &mut ParamStore,
+    cfg: &PretrainCfg,
+) -> Result<f32> {
+    let mut adam = Adam::new(
+        store,
+        AdamConfig { lr: cfg.lr, ste_qmax: cfg.ste_qmax, ..Default::default() },
+    );
+    let mut rng = SplitMix64::new(cfg.seed);
+    let b = session.cfg.b_train;
+    let mut last = f32::NAN;
+    for step in 0..cfg.steps {
+        let pairs: Vec<(String, String)> = (0..b)
+            .map(|_| {
+                let ex = task.sample(&mut rng, true);
+                // verbalizer char for the label: 'a' + label (see ClsTask)
+                let v = (b'a' + ex.label as u8) as char;
+                (ex.text, format!("{};", v))
+            })
+            .collect();
+        let batch = LmBatch::build(&session.cfg, &pairs);
+        let (loss, grads) = session.lm_grads(store, &batch)?;
+        adam.step(store, &grads)?;
+        last = loss;
+        if cfg.verbose && step % 50 == 0 {
+            println!("[pretrain-cls step {:>5}] loss {:.4}", step, loss);
+        }
+    }
+    Ok(last)
+}

@@ -1,0 +1,99 @@
+//! Member evaluation: perturb -> rollout -> reward. Shared by the inline
+//! (single-thread) path and the worker pool.
+
+use anyhow::Result;
+
+use crate::coordinator::encode::{ClsBatch, GenBatch};
+use crate::coordinator::session::Session;
+use crate::model::ParamStore;
+use crate::opt::{apply_perturbation, PopulationSpec};
+use crate::tasks::GenTask;
+
+/// Salt separating decode-sampling noise from perturbation noise.
+const GUMBEL_SALT: u64 = 0x6465_636f_6465_5f67;
+
+/// Evaluate one population member on a reasoning task: mean RLVR reward
+/// over the real rows of the rollout batch.
+#[allow(clippy::too_many_arguments)]
+pub fn eval_member_gen(
+    session: &Session,
+    task: &dyn GenTask,
+    store: &ParamStore,
+    spec: &PopulationSpec,
+    member: usize,
+    batch: &GenBatch,
+    tau: f32,
+    qmax: i8,
+) -> Result<f32> {
+    let overrides = apply_perturbation(store, spec, member, qmax);
+    let gumbel_seed = if tau > 0.0 {
+        Some(spec.gen_seed ^ GUMBEL_SALT ^ (member as u64) << 17)
+    } else {
+        None
+    };
+    let completions = session.generate(store, Some(&overrides), batch, tau, gumbel_seed)?;
+    let mut total = 0.0f32;
+    for (i, c) in completions.iter().enumerate() {
+        total += task.reward(&batch.problems[i].key, c);
+    }
+    Ok(total / batch.n_real as f32)
+}
+
+/// Evaluate one member on an SFT task: fitness = -mean CE over the k-shot
+/// batches (ES ascends fitness, so this descends the loss).
+pub fn eval_member_cls(
+    session: &Session,
+    store: &ParamStore,
+    spec: &PopulationSpec,
+    member: usize,
+    batches: &[ClsBatch],
+    qmax: i8,
+) -> Result<f32> {
+    let overrides = apply_perturbation(store, spec, member, qmax);
+    let mut loss = 0.0f32;
+    for b in batches {
+        let (ce, _) = session.cls_eval(store, Some(&overrides), b)?;
+        loss += ce;
+    }
+    Ok(-loss / batches.len() as f32)
+}
+
+/// Unperturbed greedy evaluation on a reasoning task: accuracy (% of
+/// problems with reward 1.0) over an eval problem set.
+pub fn eval_accuracy_gen(
+    session: &Session,
+    task: &dyn GenTask,
+    store: &ParamStore,
+    problems: &[crate::tasks::GenProblem],
+) -> Result<f32> {
+    let cfg = &session.cfg;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for chunk in problems.chunks(cfg.b_gen) {
+        let batch = GenBatch::build(cfg, chunk.to_vec());
+        let completions = session.generate(store, None, &batch, 0.0, None)?;
+        for (i, c) in completions.iter().enumerate() {
+            if task.reward(&batch.problems[i].key, c) >= 1.0 {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(100.0 * correct as f32 / total.max(1) as f32)
+}
+
+/// Unperturbed classification accuracy (%) over eval batches.
+pub fn eval_accuracy_cls(
+    session: &Session,
+    store: &ParamStore,
+    batches: &[ClsBatch],
+) -> Result<f32> {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for b in batches {
+        let (_, c) = session.cls_eval(store, None, b)?;
+        correct += c;
+        total += b.n_real;
+    }
+    Ok(100.0 * correct as f32 / total.max(1) as f32)
+}

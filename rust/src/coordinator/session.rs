@@ -1,0 +1,205 @@
+//! A Session binds one (model size, weight format) to a PJRT client and the
+//! compiled engines a run needs. Sessions are thread-local (the client is
+//! `Rc`-based); the worker pool builds one per thread.
+
+use anyhow::Result;
+
+use crate::coordinator::encode::{gumbel_noise, ClsBatch, GenBatch, LmBatch};
+use crate::model::ParamStore;
+use crate::quant::Format;
+use crate::runtime::{self, Engine, Manifest, ModelConfig};
+use crate::tasks::tokenizer;
+
+pub struct Session {
+    pub cfg: ModelConfig,
+    pub size: String,
+    pub format: Format,
+    #[allow(dead_code)] client: xla::PjRtClient,
+    gen: Option<Engine>,
+    loss: Option<Engine>,
+    cls: Option<Engine>,
+    grad: Option<Engine>,
+}
+
+/// Which engines to compile (compilation is ~1s each; pay only for what the
+/// run uses).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineSet {
+    pub gen: bool,
+    pub loss: bool,
+    pub cls: bool,
+    pub grad: bool,
+}
+
+impl EngineSet {
+    pub fn gen_only() -> Self {
+        EngineSet { gen: true, ..Default::default() }
+    }
+    pub fn cls_only() -> Self {
+        EngineSet { cls: true, ..Default::default() }
+    }
+    pub fn pretrain() -> Self {
+        EngineSet { grad: true, loss: true, gen: true, ..Default::default() }
+    }
+}
+
+impl Session {
+    pub fn new(man: &Manifest, size: &str, format: Format, set: EngineSet) -> Result<Session> {
+        let cfg = man.config(size)?.clone();
+        let client = xla::PjRtClient::cpu()?;
+        let fmt = format.artifact_format();
+        let mk = |want: bool, func: &str| -> Result<Option<Engine>> {
+            if !want {
+                return Ok(None);
+            }
+            Ok(Some(Engine::load(&client, man, man.artifact(size, fmt, func)?)?))
+        };
+        let gen = mk(set.gen, "gen")?;
+        let loss = mk(set.loss, "loss")?;
+        let cls = mk(set.cls, "cls")?;
+        let grad = mk(set.grad, "grad")?;
+        Ok(Session { cfg, size: size.to_string(), format, client, gen, loss, cls, grad })
+    }
+
+    fn engine<'a>(e: &'a Option<Engine>, what: &str) -> Result<&'a Engine> {
+        e.as_ref().ok_or_else(|| anyhow::anyhow!("engine {:?} not compiled for this session", what))
+    }
+
+    /// Batched autoregressive generation. `overrides` replaces the lattice
+    /// tensors (a member's perturbed weights); `gumbel_seed = None` decodes
+    /// greedily. Returns one completion string (up to EOS) per REAL row.
+    pub fn generate(
+        &self,
+        store: &ParamStore,
+        overrides: Option<&[Vec<i8>]>,
+        batch: &GenBatch,
+        tau: f32,
+        gumbel_seed: Option<u64>,
+    ) -> Result<Vec<String>> {
+        let eng = Self::engine(&self.gen, "gen")?;
+        let cfg = &self.cfg;
+        let mut args = Vec::with_capacity(4 + store.entries.len());
+        args.push(runtime::literal_for(
+            &eng.meta.data_inputs[0],
+            &runtime::HostTensor::I32(batch.prompt.clone()),
+        )?);
+        args.push(runtime::literal_for(
+            &eng.meta.data_inputs[1],
+            &runtime::HostTensor::I32(batch.lens.clone()),
+        )?);
+        args.push(xla::Literal::scalar(tau));
+        args.push(runtime::literal_for(
+            &eng.meta.data_inputs[3],
+            &runtime::HostTensor::F32(gumbel_noise(cfg, gumbel_seed)),
+        )?);
+        args.extend(runtime::param_literals(store, overrides)?);
+        let outs = eng.run(&args)?;
+        let toks = runtime::to_i32_vec(&outs[0])?;
+        let t = cfg.t_dec;
+        Ok((0..batch.n_real)
+            .map(|i| tokenizer::decode_to_eos(&toks[i * t..(i + 1) * t]))
+            .collect())
+    }
+
+    /// Classification loss + accuracy over the REAL rows of a ClsBatch.
+    /// Returns (mean CE over real rows, n_correct among real rows).
+    pub fn cls_eval(
+        &self,
+        store: &ParamStore,
+        overrides: Option<&[Vec<i8>]>,
+        batch: &ClsBatch,
+    ) -> Result<(f32, usize)> {
+        let eng = Self::engine(&self.cls, "cls")?;
+        let d = &eng.meta.data_inputs;
+        let mut args = Vec::with_capacity(6 + store.entries.len());
+        args.push(runtime::literal_for(&d[0], &runtime::HostTensor::I32(batch.tokens.clone()))?);
+        args.push(runtime::literal_for(&d[1], &runtime::HostTensor::I32(batch.pos_ids.clone()))?);
+        args.push(runtime::literal_for(&d[2], &runtime::HostTensor::F32(batch.mask.clone()))?);
+        args.push(runtime::literal_for(&d[3], &runtime::HostTensor::I32(batch.cls_pos.clone()))?);
+        args.push(runtime::literal_for(&d[4], &runtime::HostTensor::I32(batch.class_ids.clone()))?);
+        args.push(runtime::literal_for(&d[5], &runtime::HostTensor::I32(batch.labels.clone()))?);
+        args.extend(runtime::param_literals(store, overrides)?);
+        let outs = eng.run(&args)?;
+        // outputs: (sum_ce over ALL rows, n_correct over ALL rows, scores)
+        // padded rows repeat a real example; recompute real-row stats from
+        // the returned scores to stay exact.
+        let scores = runtime::to_f32_vec(&outs[2])?;
+        let c = 8usize;
+        let mut sum_ce = 0.0f32;
+        let mut correct = 0usize;
+        for i in 0..batch.n_real {
+            let row = &scores[i * c..(i + 1) * c];
+            let label = batch.labels[i] as usize;
+            // log-softmax over the first n_classes entries (rest are
+            // duplicates of class 0 — exclude them)
+            let n_cls = row
+                .len()
+                .min(batch.class_ids.iter().collect::<std::collections::BTreeSet<_>>().len());
+            let m = row[..n_cls].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let logz = m + row[..n_cls].iter().map(|&s| (s - m).exp()).sum::<f32>().ln();
+            sum_ce += logz - row[label];
+            let pred = row[..n_cls]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == label {
+                correct += 1;
+            }
+        }
+        Ok((sum_ce / batch.n_real as f32, correct))
+    }
+
+    /// Teacher-forced loss over an LmBatch: (mean CE, token accuracy).
+    pub fn lm_loss(
+        &self,
+        store: &ParamStore,
+        overrides: Option<&[Vec<i8>]>,
+        batch: &LmBatch,
+    ) -> Result<(f32, f32)> {
+        let eng = Self::engine(&self.loss, "loss")?;
+        let outs = eng.run(&self.lm_args(eng, store, overrides, batch)?)?;
+        let sum_ce = runtime::to_f32_scalar(&outs[0])?;
+        let n_tok = runtime::to_f32_scalar(&outs[1])?.max(1.0);
+        let n_correct = runtime::to_f32_scalar(&outs[2])?;
+        Ok((sum_ce / n_tok, n_correct / n_tok))
+    }
+
+    /// Loss + gradients for every parameter (fp sessions only).
+    pub fn lm_grads(
+        &self,
+        store: &ParamStore,
+        batch: &LmBatch,
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let eng = Self::engine(&self.grad, "grad")?;
+        let outs = eng.run(&self.lm_args(eng, store, None, batch)?)?;
+        let loss = runtime::to_f32_scalar(&outs[0])?;
+        let grads = outs[1..]
+            .iter()
+            .map(runtime::to_f32_vec)
+            .collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+
+    fn lm_args(
+        &self,
+        eng: &Engine,
+        store: &ParamStore,
+        overrides: Option<&[Vec<i8>]>,
+        batch: &LmBatch,
+    ) -> Result<Vec<xla::Literal>> {
+        let d = &eng.meta.data_inputs;
+        let mut args = Vec::with_capacity(5 + store.entries.len());
+        args.push(runtime::literal_for(&d[0], &runtime::HostTensor::I32(batch.tokens.clone()))?);
+        args.push(runtime::literal_for(&d[1], &runtime::HostTensor::I32(batch.pos_ids.clone()))?);
+        args.push(runtime::literal_for(&d[2], &runtime::HostTensor::F32(batch.mask.clone()))?);
+        args.push(runtime::literal_for(&d[3], &runtime::HostTensor::I32(batch.targets.clone()))?);
+        args.push(runtime::literal_for(
+            &d[4],
+            &runtime::HostTensor::F32(batch.loss_mask.clone()),
+        )?);
+        args.extend(runtime::param_literals(store, overrides)?);
+        Ok(args)
+    }
+}

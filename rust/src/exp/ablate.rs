@@ -1,0 +1,150 @@
+//! Design-choice ablations (DESIGN.md §5 "ablation benches"):
+//!
+//! 1. **GPTQ vs round-to-nearest PTQ** — calibration-loss and downstream
+//!    LM-loss comparison per quantized layer (the quantizer QES inherits
+//!    its lattice from).
+//! 2. **Antithetic pairs vs one-sided sampling** — gradient-estimate
+//!    quality at equal rollout budget, measured as cosine alignment with a
+//!    large-population reference estimate.
+
+use anyhow::Result;
+
+use crate::coordinator::{EngineSet, LmBatch, Session};
+use crate::exp::write_result;
+use crate::model::{init::init_fp, ParamKind, ParamStore};
+use crate::opt::{accumulate_grad, PopulationSpec};
+use crate::quant::{gptq::calib_loss, gptq_quantize, ptq_quantize, Format};
+use crate::rng::SplitMix64;
+use crate::runtime::Manifest;
+use crate::tasks::gen_task;
+use crate::util::args::Args;
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let manifest = args.get_or("manifest", "artifacts/manifest.json");
+    let n_calib = args.get_usize("calib", 64)?;
+    args.finish()?;
+    let man = Manifest::load(&manifest)?;
+
+    let mut md = String::from("# Ablations\n\n## GPTQ vs PTQ (nano, INT4)\n\n");
+
+    // ---- 1. GPTQ vs PTQ ----
+    let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32)?;
+    init_fp(&mut fp, 9);
+    // pretrain briefly so weights are structured, not just Gaussian
+    let session = Session::new(&man, "nano", Format::Fp32, EngineSet::pretrain())?;
+    let task = gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec)?;
+    crate::coordinator::pretrain_gen(
+        &session,
+        task.as_ref(),
+        &mut fp,
+        &crate::coordinator::PretrainCfg { steps: 300, verbose: false, ..Default::default() },
+    )?;
+
+    md.push_str("| layer | PTQ calib loss | GPTQ calib loss | improvement |\n|---|---|---|---|\n");
+    let mut rng = SplitMix64::new(4);
+    let mut total_ptq = 0.0f64;
+    let mut total_gptq = 0.0f64;
+    let lat: Vec<usize> = fp.lattice_indices().to_vec();
+    for &i in lat.iter().take(6) {
+        let e = &fp.entries[i];
+        debug_assert_eq!(e.kind, ParamKind::LatticeAsFp);
+        let (rows, cols) = (e.shape[0], e.shape[1]);
+        let w = e.data.as_f32();
+        // correlated calibration activations
+        let mut x = vec![0.0f32; n_calib * rows];
+        for s in 0..n_calib {
+            for r in 0..rows {
+                let base = rng.normal() * 0.5;
+                x[s * rows + r] =
+                    if r == 0 { base } else { 0.5 * x[s * rows + r - 1] + 0.5 * base };
+            }
+        }
+        let ptq = ptq_quantize(w, rows, cols, 7);
+        let gptq = gptq_quantize(w, rows, cols, 7, &x, n_calib, 0.01)?;
+        let lp = calib_loss(w, &ptq, &x, n_calib);
+        let lg = calib_loss(w, &gptq, &x, n_calib);
+        total_ptq += lp;
+        total_gptq += lg;
+        md.push_str(&format!(
+            "| {} | {:.4e} | {:.4e} | {:.1}% |\n",
+            e.name,
+            lp,
+            lg,
+            100.0 * (1.0 - lg / lp.max(1e-12))
+        ));
+    }
+    md.push_str(&format!(
+        "\ntotal: PTQ {:.4e} vs GPTQ {:.4e} ({:.1}% lower)\n",
+        total_ptq,
+        total_gptq,
+        100.0 * (1.0 - total_gptq / total_ptq.max(1e-12))
+    ));
+
+    // downstream LM loss of both quantizations
+    let q_ptq = ParamStore::quantize_from(&fp, &man, Format::Int4, None)?;
+    let mut crng = SplitMix64::new(5);
+    let mut calib_fn = |_: &str, rows: usize, _: usize| -> Option<Vec<f32>> {
+        Some((0..32 * rows).map(|_| crng.normal() * 0.5).collect())
+    };
+    let q_gptq = ParamStore::quantize_from(&fp, &man, Format::Int4, Some(&mut calib_fn))?;
+    let qsession = Session::new(&man, "nano", Format::Int4, EngineSet {
+        loss: true,
+        ..Default::default()
+    })?;
+    let mut rng2 = SplitMix64::new(11);
+    let pairs: Vec<(String, String)> =
+        (0..qsession.cfg.b_train).map(|_| task.supervised(&mut rng2)).collect();
+    let batch = LmBatch::build(&qsession.cfg, &pairs);
+    let (fp_loss, _) = session.lm_loss(&fp, None, &batch)?;
+    let (ptq_loss, _) = qsession.lm_loss(&q_ptq, None, &batch)?;
+    let (gptq_loss, _) = qsession.lm_loss(&q_gptq, None, &batch)?;
+    md.push_str(&format!(
+        "\ndownstream LM loss: fp32 {:.4} | INT4-PTQ {:.4} | INT4-GPTQ {:.4}\n",
+        fp_loss, ptq_loss, gptq_loss
+    ));
+
+    // ---- 2. antithetic vs one-sided gradient quality ----
+    md.push_str("\n## Antithetic pairs vs one-sided sampling\n\n");
+    let q = q_ptq;
+    let d = q.lattice_dim();
+    // reference: a big population's estimate
+    let ref_spec = PopulationSpec { gen_seed: 777, pairs: 256, sigma: 0.05 };
+    let mut rng3 = SplitMix64::new(21);
+    let ref_fit: Vec<f32> = (0..512).map(|_| rng3.uniform01() - 0.5).collect();
+    let mut g_ref = vec![0.0f32; d];
+    accumulate_grad(&ref_spec, &ref_fit, &mut g_ref);
+    // small-budget estimates drawn from the same population prefix
+    let small = PopulationSpec { gen_seed: 777, pairs: 8, sigma: 0.05 };
+    let mut g_anti = vec![0.0f32; d];
+    accumulate_grad(&small, &ref_fit[..16], &mut g_anti);
+    // one-sided: same 16 rollouts but signs all +: kill the '-' half
+    let mut onesided = ref_fit[..16].to_vec();
+    for i in (1..16).step_by(2) {
+        onesided[i] = 0.0;
+    }
+    let mut g_one = vec![0.0f32; d];
+    accumulate_grad(&small, &onesided, &mut g_one);
+    let cos = |a: &[f32], b: &[f32]| -> f64 {
+        let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+        for (x, y) in a.iter().zip(b.iter()) {
+            dot += (*x as f64) * (*y as f64);
+            na += (*x as f64) * (*x as f64);
+            nb += (*y as f64) * (*y as f64);
+        }
+        if na == 0.0 || nb == 0.0 {
+            0.0
+        } else {
+            dot / (na.sqrt() * nb.sqrt())
+        }
+    };
+    md.push_str(&format!(
+        "cosine alignment with the 512-member reference estimate:\n\
+         antithetic (16 rollouts): {:.3}\none-sided (16 rollouts): {:.3}\n",
+        cos(&g_anti, &g_ref),
+        cos(&g_one, &g_ref)
+    ));
+
+    println!("\n{}", md);
+    write_result("ablations.md", &md)?;
+    Ok(())
+}

@@ -1,0 +1,268 @@
+//! CLI subcommands: pretrain / quantize / eval / finetune, plus the `exp`
+//! dispatcher that regenerates each paper table and figure.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    eval_problems, finetune_cls, finetune_gen, pretrain_cls, pretrain_gen, EngineSet,
+    FinetuneCfg, PretrainCfg, Session, Variant,
+};
+use crate::model::{checkpoint, init::init_fp, ParamStore};
+use crate::opt::EsHyper;
+use crate::quant::Format;
+use crate::runtime::Manifest;
+use crate::tasks::{cls_task, gen_task};
+use crate::util::args::Args;
+
+pub fn run_dir(size: &str, task: &str) -> PathBuf {
+    PathBuf::from("runs").join(format!("{}_{}", size, task))
+}
+
+/// Resolve (or lazily create) the pretrained base model for (size, task).
+/// Pretraining is cached: reruns load `fp.ckpt`.
+pub fn ensure_pretrained(
+    man: &Manifest,
+    size: &str,
+    task_name: &str,
+    steps: usize,
+    verbose: bool,
+) -> Result<ParamStore> {
+    let dir = run_dir(size, task_name);
+    let path = dir.join("fp.ckpt");
+    if path.exists() {
+        return checkpoint::load(man, &path);
+    }
+    if verbose {
+        println!("[pretrain] no cached base model at {:?}; training ({} steps)", path, steps);
+    }
+    let session = Session::new(man, size, Format::Fp32, EngineSet::pretrain())?;
+    let mut store = ParamStore::from_manifest(man, size, Format::Fp32)?;
+    init_fp(&mut store, 0xba5e ^ seed_of(size, task_name));
+    let cfg = PretrainCfg { steps, verbose, ..Default::default() };
+    let is_cls = matches!(task_name, "snli" | "mnli" | "rte" | "sst5");
+    if is_cls {
+        let task = cls_task(task_name)?;
+        pretrain_cls(&session, task.as_ref(), &mut store, &cfg)?;
+    } else {
+        let task = gen_task(task_name, session.cfg.s_prompt, session.cfg.t_dec)?;
+        pretrain_gen(&session, task.as_ref(), &mut store, &cfg)?;
+    }
+    checkpoint::save(&store, &path)?;
+    Ok(store)
+}
+
+fn seed_of(size: &str, task: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in size.bytes().chain(task.bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Resolve (or lazily create) the quantized base model.
+pub fn ensure_quantized(
+    man: &Manifest,
+    size: &str,
+    task_name: &str,
+    format: Format,
+    pretrain_steps: usize,
+    verbose: bool,
+) -> Result<ParamStore> {
+    let dir = run_dir(size, task_name);
+    let path = dir.join(format!("{}.ckpt", format.name()));
+    if path.exists() {
+        return checkpoint::load(man, &path);
+    }
+    let fp = ensure_pretrained(man, size, task_name, pretrain_steps, verbose)?;
+    let q = ParamStore::quantize_from(&fp, man, format, None)?;
+    checkpoint::save(&q, &path)?;
+    Ok(q)
+}
+
+pub fn cmd_pretrain(mut args: Args) -> Result<()> {
+    let manifest = args.get_or("manifest", "artifacts/manifest.json");
+    let size = args.get_or("size", "nano");
+    let task = args.get_or("task", "countdown");
+    let steps = args.get_usize("steps", 400)?;
+    args.finish()?;
+    let man = Manifest::load(&manifest)?;
+    // force retrain: remove cached ckpt first
+    let path = run_dir(&size, &task).join("fp.ckpt");
+    if path.exists() {
+        std::fs::remove_file(&path)?;
+    }
+    let store = ensure_pretrained(&man, &size, &task, steps, true)?;
+    println!("saved {:?} ({} params)", path, store.entries.iter().map(|e| e.numel()).sum::<usize>());
+    report_accuracy(&man, &size, &task, &store)?;
+    Ok(())
+}
+
+pub fn cmd_quantize(mut args: Args) -> Result<()> {
+    let manifest = args.get_or("manifest", "artifacts/manifest.json");
+    let size = args.get_or("size", "nano");
+    let task = args.get_or("task", "countdown");
+    let format = Format::parse(&args.get_or("format", "int4"))?;
+    let steps = args.get_usize("pretrain-steps", 400)?;
+    args.finish()?;
+    let man = Manifest::load(&manifest)?;
+    let path = run_dir(&size, &task).join(format!("{}.ckpt", format.name()));
+    if path.exists() {
+        std::fs::remove_file(&path)?;
+    }
+    let store = ensure_quantized(&man, &size, &task, format, steps, true)?;
+    println!("saved {:?} ({} lattice params, {} weight bytes)",
+        path, store.lattice_dim(), store.weight_bytes());
+    report_accuracy(&man, &size, &task, &store)?;
+    Ok(())
+}
+
+pub fn cmd_eval(mut args: Args) -> Result<()> {
+    let manifest = args.get_or("manifest", "artifacts/manifest.json");
+    let size = args.get_or("size", "nano");
+    let task = args.get_or("task", "countdown");
+    let ckpt = args.opt("ckpt");
+    let format = Format::parse(&args.get_or("format", "int4"))?;
+    args.finish()?;
+    let man = Manifest::load(&manifest)?;
+    let store = match ckpt {
+        Some(p) => checkpoint::load(&man, Path::new(&p))?,
+        None => {
+            let p = run_dir(&size, &task).join(format!("{}.ckpt", format.name()));
+            checkpoint::load(&man, &p)?
+        }
+    };
+    report_accuracy(&man, &size, &task, &store)?;
+    Ok(())
+}
+
+fn report_accuracy(man: &Manifest, size: &str, task_name: &str, store: &ParamStore) -> Result<()> {
+    let is_cls = matches!(task_name, "snli" | "mnli" | "rte" | "sst5");
+    if is_cls {
+        let session = Session::new(man, size, store.format, EngineSet::cls_only())?;
+        let task = cls_task(task_name)?;
+        let mut rng = crate::rng::SplitMix64::new(0xe0a1);
+        let examples: Vec<_> = (0..128).map(|_| task.sample(&mut rng, false)).collect();
+        let batches: Vec<_> = examples
+            .chunks(session.cfg.b_train)
+            .map(|c| crate::coordinator::ClsBatch::build(&session.cfg, c, &task.verbalizers()))
+            .collect();
+        let acc = crate::coordinator::eval_accuracy_cls(&session, store, &batches)?;
+        println!("eval accuracy ({}, {}): {:.2}%", task_name, store.format.name(), acc);
+    } else {
+        let session = Session::new(man, size, store.format, EngineSet::gen_only())?;
+        let task = gen_task(task_name, session.cfg.s_prompt, session.cfg.t_dec)?;
+        let problems = eval_problems(task.as_ref(), 128, 42);
+        let acc = crate::coordinator::eval_accuracy_gen(&session, task.as_ref(), store, &problems)?;
+        println!("eval accuracy ({}, {}): {:.2}%", task_name, store.format.name(), acc);
+    }
+    Ok(())
+}
+
+/// Shared flag parsing for ES fine-tuning runs.
+pub struct FtArgs {
+    pub manifest: String,
+    pub size: String,
+    pub task: String,
+    pub format: Format,
+    pub variant: Variant,
+    pub cfg: FinetuneCfg,
+    pub pretrain_steps: usize,
+    pub k_shot: usize,
+}
+
+pub fn parse_ft_args(args: &mut Args) -> Result<FtArgs> {
+    let manifest = args.get_or("manifest", "artifacts/manifest.json");
+    let size = args.get_or("size", "nano");
+    let task = args.get_or("task", "countdown");
+    let format = Format::parse(&args.get_or("format", "int4"))?;
+    let variant = Variant::parse(&args.get_or("variant", "qes"))?;
+    let hyper = EsHyper {
+        sigma: args.get_f32("sigma", 0.01)?,
+        alpha: args.get_f32("alpha", 5e-4)?,
+        gamma: args.get_f32("gamma", 0.9)?,
+        pairs: args.get_usize("pairs", 8)?,
+        k_window: args.get_usize("k", 8)?,
+    };
+    let cfg = FinetuneCfg {
+        hyper,
+        gens: args.get_usize("gens", 60)?,
+        tau: args.get_f32("tau", 0.7)?,
+        batches_per_gen: args.get_usize("batches", 2)?,
+        train_pool: args.get_usize("pool", 256)?,
+        eval_every: args.get_usize("eval-every", 0)?,
+        eval_n: args.get_usize("eval-n", 64)?,
+        seed: args.get_u64("seed", 42)?,
+        verbose: !args.get_bool("quiet"),
+    };
+    Ok(FtArgs {
+        manifest,
+        size,
+        task,
+        format,
+        variant,
+        cfg,
+        pretrain_steps: args.get_usize("pretrain-steps", 400)?,
+        k_shot: args.get_usize("k-shot", 16)?,
+    })
+}
+
+pub fn cmd_finetune(mut args: Args) -> Result<()> {
+    let fa = parse_ft_args(&mut args)?;
+    args.finish()?;
+    let man = Manifest::load(&fa.manifest)?;
+    let mut store =
+        ensure_quantized(&man, &fa.size, &fa.task, fa.format, fa.pretrain_steps, true)?;
+    let is_cls = matches!(fa.task.as_str(), "snli" | "mnli" | "rte" | "sst5");
+    let variant_name = match fa.variant {
+        Variant::Qes => "qes",
+        Variant::QesFullResidual => "qes-full",
+        Variant::Quzo => "quzo",
+        Variant::QesAdaptive => "qes-adaptive",
+    };
+    let log = if is_cls {
+        let session = Session::new(&man, &fa.size, fa.format, EngineSet::cls_only())?;
+        let task = cls_task(&fa.task)?;
+        finetune_cls(&session, task.as_ref(), &mut store, fa.variant, &fa.cfg, fa.k_shot, None)?
+    } else {
+        let session = Session::new(&man, &fa.size, fa.format, EngineSet::gen_only())?;
+        let task = gen_task(&fa.task, session.cfg.s_prompt, session.cfg.t_dec)?;
+        finetune_gen(&session, task.as_ref(), &mut store, fa.variant, &fa.cfg, None)?
+    };
+    let dir = run_dir(&fa.size, &fa.task);
+    let ckpt = dir.join(format!("{}_{}.ckpt", fa.format.name(), variant_name));
+    checkpoint::save(&store, &ckpt)?;
+    let csv = dir.join(format!("{}_{}.csv", fa.format.name(), variant_name));
+    std::fs::write(&csv, log.to_csv())?;
+    println!(
+        "final eval accuracy {:.2}% | optimizer state {} | saved {:?}, {:?}",
+        log.final_acc,
+        crate::util::human_bytes(log.optimizer_state_bytes),
+        ckpt,
+        csv
+    );
+    Ok(())
+}
+
+pub fn cmd_exp(mut args: Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("usage: qes exp <table1|table2|table5|table6|table7|table8|table9|fig2|fig3>"))?;
+    match which.as_str() {
+        "table1" => crate::exp::table1::run(&mut args),
+        "table2" => crate::exp::table2::run(&mut args),
+        "table5" => crate::exp::table5::run(&mut args),
+        "table6" => crate::exp::table6::run(&mut args),
+        "table7" => crate::exp::table7::run(&mut args),
+        "table8" => crate::exp::table8::run(&mut args),
+        "table9" => crate::exp::table9::run(&mut args),
+        "fig2" => crate::exp::fig2::run(&mut args),
+        "fig3" => crate::exp::fig3::run(&mut args),
+        "ablate" => crate::exp::ablate::run(&mut args),
+        other => anyhow::bail!("unknown experiment {:?}", other),
+    }
+}

@@ -1,0 +1,64 @@
+//! Figure 2 — Countdown training curves: QuZO vs QES vs Full-Residual
+//! against the Base Model line. Emits one CSV per method with the
+//! mean-reward and eval-accuracy series.
+//!
+//! Shape criteria: QES tracks the Full-Residual oracle closely; QuZO is
+//! flat/unstable; Base is a horizontal reference.
+
+use anyhow::Result;
+
+use crate::coordinator::{finetune_gen, EngineSet, FinetuneCfg, Session, Variant};
+use crate::exp::cli::{ensure_quantized, parse_ft_args};
+use crate::exp::write_result;
+use crate::quant::Format;
+use crate::runtime::Manifest;
+use crate::tasks::gen_task;
+use crate::util::args::Args;
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let fa = parse_ft_args(args)?;
+    let size = args.get_or("fig-size", "nano");
+    let task_name = args.get_or("fig-task", "countdown");
+    args.finish()?;
+    let man = Manifest::load(&fa.manifest)?;
+
+    let store0 = ensure_quantized(&man, &size, &task_name, fa.format, fa.pretrain_steps, true)?;
+    let session = Session::new(&man, &size, fa.format, EngineSet::gen_only())?;
+    let task = gen_task(&task_name, session.cfg.s_prompt, session.cfg.t_dec)?;
+    let evalset = crate::coordinator::eval_problems(task.as_ref(), fa.cfg.eval_n, fa.cfg.seed);
+    let base_acc =
+        crate::coordinator::eval_accuracy_gen(&session, task.as_ref(), &store0, &evalset)?;
+    println!("base accuracy (horizontal reference): {:.2}%", base_acc);
+
+    let mut summary = format!(
+        "# Figure 2 series ({} {} on {})\nbase accuracy: {:.2}%\n\n",
+        size,
+        fa.format.name(),
+        task_name,
+        base_acc
+    );
+    for (name, variant) in [
+        ("quzo", Variant::Quzo),
+        ("qes", Variant::Qes),
+        ("qes_full_residual", Variant::QesFullResidual),
+    ] {
+        let mut store = store0.clone();
+        let cfg = FinetuneCfg {
+            verbose: false,
+            eval_every: fa.cfg.eval_every.max(10),
+            ..fa.cfg.clone()
+        };
+        let log = finetune_gen(&session, task.as_ref(), &mut store, variant, &cfg, None)?;
+        write_result(&format!("fig2_{}.csv", name), &log.to_csv())?;
+        println!(
+            "{}: final eval {:.2}% (mean reward {:.3} -> {:.3})",
+            name,
+            log.final_acc,
+            log.entries.first().map(|e| e.mean_reward).unwrap_or(0.0),
+            log.entries.last().map(|e| e.mean_reward).unwrap_or(0.0)
+        );
+        summary.push_str(&format!("{}: final eval {:.2}%\n", name, log.final_acc));
+    }
+    write_result("fig2_summary.md", &summary)?;
+    Ok(())
+}

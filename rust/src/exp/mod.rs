@@ -1,0 +1,32 @@
+//! Experiment drivers: one module per paper table/figure (DESIGN.md §5).
+//! Each prints the paper-formatted rows and writes CSV/markdown under
+//! `results/`.
+
+pub mod ablate;
+pub mod cli;
+pub mod fig2;
+pub mod fig3;
+pub mod table1;
+pub mod table2;
+pub mod table5;
+pub mod table6;
+pub mod table7;
+pub mod table8;
+pub mod table9;
+
+use std::path::PathBuf;
+
+/// Where experiment outputs land.
+pub fn results_dir() -> PathBuf {
+    let p = PathBuf::from("results");
+    std::fs::create_dir_all(&p).ok();
+    p
+}
+
+/// Write a result artifact and echo its path.
+pub fn write_result(name: &str, content: &str) -> anyhow::Result<()> {
+    let p = results_dir().join(name);
+    std::fs::write(&p, content)?;
+    println!("[results] wrote {:?}", p);
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Table 2 — Reasoning accuracy (%) on Countdown and MathChain across model
+//! sizes and quantization formats: Base vs QuZO vs QES.
+//!
+//! Paper shape criteria (DESIGN.md §5): QES > QuZO >= Base everywhere; QuZO
+//! brittle on INT4 / the smaller model; gaps widen with task difficulty.
+
+use anyhow::Result;
+
+use crate::coordinator::{finetune_gen, EngineSet, FinetuneCfg, Session, Variant};
+use crate::exp::cli::{ensure_quantized, parse_ft_args};
+use crate::exp::write_result;
+use crate::quant::Format;
+use crate::runtime::Manifest;
+use crate::tasks::gen_task;
+use crate::util::args::Args;
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let fa = parse_ft_args(args)?;
+    let sizes: Vec<String> = args
+        .get_or("sizes", "nano,micro")
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let tasks: Vec<String> = args
+        .get_or("tasks", "countdown,mathchain")
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let formats: Vec<Format> = args
+        .get_or("formats", "int4,int8,w8a8")
+        .split(',')
+        .map(Format::parse)
+        .collect::<Result<_>>()?;
+    let suffix = args.get_or("suffix", "");
+    args.finish()?;
+    let man = Manifest::load(&fa.manifest)?;
+
+    let mut md = String::from(
+        "# Table 2: Reasoning accuracy (%) — Base / QuZO / QES\n\n\
+         | MODEL | FORMAT | TASK | BASE | QuZO | QES |\n|---|---|---|---|---|---|\n",
+    );
+    let mut csv = String::from("size,format,task,base,quzo,qes\n");
+
+    for size in &sizes {
+        for task_name in &tasks {
+            for &format in &formats {
+                let store0 =
+                    ensure_quantized(&man, size, task_name, format, fa.pretrain_steps, true)?;
+                let session = Session::new(&man, size, format, EngineSet::gen_only())?;
+                let task = gen_task(task_name, session.cfg.s_prompt, session.cfg.t_dec)?;
+                let evalset =
+                    crate::coordinator::eval_problems(task.as_ref(), fa.cfg.eval_n, fa.cfg.seed);
+                let base_acc = crate::coordinator::eval_accuracy_gen(
+                    &session, task.as_ref(), &store0, &evalset,
+                )?;
+
+                let mut run_variant = |variant: Variant| -> Result<f32> {
+                    let mut store = store0.clone();
+                    let cfg = FinetuneCfg { verbose: false, ..fa.cfg.clone() };
+                    let log =
+                        finetune_gen(&session, task.as_ref(), &mut store, variant, &cfg, None)?;
+                    Ok(log.final_acc)
+                };
+                let quzo = run_variant(Variant::Quzo)?;
+                let qes = run_variant(Variant::Qes)?;
+                println!(
+                    "{} {} {}: base {:.2} quzo {:.2} qes {:.2}",
+                    size, format.name(), task_name, base_acc, quzo, qes
+                );
+                md.push_str(&format!(
+                    "| {} | {} | {} | {:.2} | {:.2} | {:.2} |\n",
+                    size, format.name().to_uppercase(), task_name, base_acc, quzo, qes
+                ));
+                csv.push_str(&format!(
+                    "{},{},{},{:.2},{:.2},{:.2}\n",
+                    size, format.name(), task_name, base_acc, quzo, qes
+                ));
+            }
+        }
+    }
+    println!("\n{}", md);
+    write_result(&format!("table2{}.md", suffix), &md)?;
+    write_result(&format!("table2{}.csv", suffix), &csv)?;
+    Ok(())
+}

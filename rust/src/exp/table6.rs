@@ -1,0 +1,73 @@
+//! Table 6 — Stateless Seed Replay (QES) vs Full Residual oracle on
+//! Countdown across all six (model, format) configurations.
+//!
+//! Shape criterion: the two variants stay within a few points of each other
+//! while the oracle's optimizer state is gigabyte-scale (d-proportional)
+//! and replay's is kilobytes.
+
+use anyhow::Result;
+
+use crate::coordinator::{finetune_gen, EngineSet, FinetuneCfg, Session, Variant};
+use crate::exp::cli::{ensure_quantized, parse_ft_args};
+use crate::exp::write_result;
+use crate::quant::Format;
+use crate::runtime::Manifest;
+use crate::tasks::gen_task;
+use crate::util::args::Args;
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let fa = parse_ft_args(args)?;
+    let sizes: Vec<String> =
+        args.get_or("sizes", "nano,micro").split(',').map(|s| s.to_string()).collect();
+    let formats: Vec<Format> = args
+        .get_or("formats", "int4,int8,w8a8")
+        .split(',')
+        .map(Format::parse)
+        .collect::<Result<_>>()?;
+    let task_name = args.get_or("task6", "countdown");
+    args.finish()?;
+    let man = Manifest::load(&fa.manifest)?;
+
+    let mut md = String::from(
+        "# Table 6: Countdown accuracy (%) — Seed Replay (QES) vs Full Residual\n\n\
+         | MODEL | FORMAT | QES | FULL RESIDUAL | QES STATE | FULL-RES STATE |\n|---|---|---|---|---|---|\n",
+    );
+    let mut csv = String::from("size,format,qes,full_residual,qes_bytes,fullres_bytes\n");
+
+    for size in &sizes {
+        for &format in &formats {
+            let store0 =
+                ensure_quantized(&man, size, &task_name, format, fa.pretrain_steps, true)?;
+            let session = Session::new(&man, size, format, EngineSet::gen_only())?;
+            let task = gen_task(&task_name, session.cfg.s_prompt, session.cfg.t_dec)?;
+            let mut accs = Vec::new();
+            let mut bytes = Vec::new();
+            for variant in [Variant::Qes, Variant::QesFullResidual] {
+                let mut store = store0.clone();
+                let cfg = FinetuneCfg { verbose: false, ..fa.cfg.clone() };
+                let log = finetune_gen(&session, task.as_ref(), &mut store, variant, &cfg, None)?;
+                accs.push(log.final_acc);
+                bytes.push(log.optimizer_state_bytes);
+            }
+            println!(
+                "{} {}: qes {:.2} ({}) vs full {:.2} ({})",
+                size, format.name(), accs[0],
+                crate::util::human_bytes(bytes[0]), accs[1],
+                crate::util::human_bytes(bytes[1])
+            );
+            md.push_str(&format!(
+                "| {} | {} | {:.2} | {:.2} | {} | {} |\n",
+                size, format.name().to_uppercase(), accs[0], accs[1],
+                crate::util::human_bytes(bytes[0]), crate::util::human_bytes(bytes[1])
+            ));
+            csv.push_str(&format!(
+                "{},{},{:.2},{:.2},{},{}\n",
+                size, format.name(), accs[0], accs[1], bytes[0], bytes[1]
+            ));
+        }
+    }
+    println!("\n{}", md);
+    write_result("table6.md", &md)?;
+    write_result("table6.csv", &csv)?;
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Table 7 — Seed-replay ablations (Appendix D).
+//!
+//! Top: replay window K x decay gamma, two regimes — "scaled" sets gamma so
+//! gamma^K ~ 0 (shrinking K forces aggressive decay and collapses accuracy)
+//! vs "fixed" gamma = 0.90 (graceful degradation).
+//! Bottom: measured update ratio and boundary-hit ratio rho per format —
+//! the fidelity argument of §4.5.
+
+use anyhow::Result;
+
+use crate::coordinator::{finetune_gen, EngineSet, FinetuneCfg, Session, Variant};
+use crate::exp::cli::{ensure_quantized, parse_ft_args};
+use crate::exp::write_result;
+use crate::quant::Format;
+use crate::runtime::Manifest;
+use crate::tasks::gen_task;
+use crate::util::args::Args;
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let fa = parse_ft_args(args)?;
+    let size = args.get_or("abl-size", "nano");
+    let task_name = args.get_or("abl-task", "countdown");
+    let windows: Vec<usize> = args
+        .get_or("windows", "16,12,8,4,2")
+        .split(',')
+        .map(|s| s.parse().unwrap_or(8))
+        .collect();
+    args.finish()?;
+    let man = Manifest::load(&fa.manifest)?;
+    let k_ref = *windows.first().unwrap_or(&16) as f32;
+
+    // ---- Top: K x gamma ----
+    let store0 = ensure_quantized(&man, &size, &task_name, Format::Int4, fa.pretrain_steps, true)?;
+    let session = Session::new(&man, &size, Format::Int4, EngineSet::gen_only())?;
+    let task = gen_task(&task_name, session.cfg.s_prompt, session.cfg.t_dec)?;
+
+    let mut md = String::from(
+        "# Table 7 (top): replay window K and decay gamma — INT4 Countdown\n\n\
+         | REGIME | K | gamma | ACCURACY (%) |\n|---|---|---|---|\n",
+    );
+    let mut csv = String::from("regime,k,gamma,accuracy\n");
+    let gamma_ref = fa.cfg.hyper.gamma; // e.g. 0.90 at K_ref
+    for regime in ["scaled", "fixed"] {
+        for &k in &windows {
+            // scaled: keep gamma^K constant == gamma_ref^K_ref
+            let gamma = if regime == "scaled" {
+                gamma_ref.powf(k_ref / k as f32)
+            } else {
+                gamma_ref
+            };
+            let mut store = store0.clone();
+            let mut cfg = FinetuneCfg { verbose: false, ..fa.cfg.clone() };
+            cfg.hyper.k_window = k;
+            cfg.hyper.gamma = gamma;
+            let log = finetune_gen(&session, task.as_ref(), &mut store, Variant::Qes, &cfg, None)?;
+            println!("{} K={} gamma={:.2}: {:.2}%", regime, k, gamma, log.final_acc);
+            md.push_str(&format!(
+                "| {} | {} | {:.2} | {:.2} |\n",
+                regime, k, gamma, log.final_acc
+            ));
+            csv.push_str(&format!("{},{},{:.3},{:.2}\n", regime, k, gamma, log.final_acc));
+        }
+    }
+
+    // ---- Bottom: update ratio and boundary-hit ratio per format ----
+    md.push_str(
+        "\n# Table 7 (bottom): update ratio and boundary-hit ratio rho\n\n\
+         | QUANTIZATION | UPDATE RATIO | HIT RATIO rho |\n|---|---|---|\n",
+    );
+    let mut csv2 = String::from("format,update_ratio,hit_ratio\n");
+    for fmt in [Format::Int4, Format::Int8, Format::W8A8] {
+        let store0 = ensure_quantized(&man, &size, &task_name, fmt, fa.pretrain_steps, true)?;
+        let session = Session::new(&man, &size, fmt, EngineSet::gen_only())?;
+        let mut store = store0.clone();
+        let cfg = FinetuneCfg { verbose: false, ..fa.cfg.clone() };
+        let log = finetune_gen(&session, task.as_ref(), &mut store, Variant::Qes, &cfg, None)?;
+        // mean over generations that actually moved
+        let moved: Vec<&crate::coordinator::GenLog> =
+            log.entries.iter().filter(|e| e.update_ratio > 0.0).collect();
+        let ur = if moved.is_empty() {
+            0.0
+        } else {
+            moved.iter().map(|e| e.update_ratio).sum::<f64>() / moved.len() as f64
+        };
+        let rho = if moved.is_empty() {
+            0.0
+        } else {
+            moved.iter().map(|e| e.boundary_ratio).sum::<f64>() / moved.len() as f64
+        };
+        println!("{}: update ratio {:.2e}, rho {:.2e}", fmt.name(), ur, rho);
+        md.push_str(&format!(
+            "| {} | {:.2e} | {:.2e} |\n",
+            fmt.name().to_uppercase(),
+            ur,
+            rho
+        ));
+        csv2.push_str(&format!("{},{:.6e},{:.6e}\n", fmt.name(), ur, rho));
+    }
+
+    println!("\n{}", md);
+    write_result("table7.md", &md)?;
+    write_result("table7_top.csv", &csv)?;
+    write_result("table7_bottom.csv", &csv2)?;
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Table 8 — Peak memory accounting: model weights + optimizer state per
+//! method and format, with EXACT byte accounting (INT4 nibble-packed, FP16
+//! residuals, seed/reward buffers).
+//!
+//! Shape criteria: QES total == QuZO total == the inference-only footprint;
+//! Full Residual adds 2 bytes/lattice-param; QES state is ~KB and constant
+//! in d. A QAT-style FO row (fp32 weights + grads + Adam m/v) is included
+//! for the paper's "13x" comparison.
+
+use anyhow::Result;
+
+use crate::exp::cli::parse_ft_args;
+use crate::exp::write_result;
+use crate::model::ParamStore;
+use crate::opt::{EsHyper, LatticeOptimizer, QesFullResidual, QuzoOptimizer, SeedReplayQes};
+use crate::quant::Format;
+use crate::runtime::Manifest;
+use crate::util::args::Args;
+use crate::util::human_bytes;
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let fa = parse_ft_args(args)?;
+    let sizes: Vec<String> =
+        args.get_or("sizes", "nano,micro,small").split(',').map(|s| s.to_string()).collect();
+    args.finish()?;
+    let man = Manifest::load(&fa.manifest)?;
+
+    let mut md = String::from(
+        "# Table 8: weight + optimizer-state memory (exact bytes)\n\n\
+         | MODEL | FMT | WEIGHTS | QuZO TOTAL | FULL-RES TOTAL | QES TOTAL | QES STATE |\n\
+         |---|---|---|---|---|---|---|\n",
+    );
+    let mut csv =
+        String::from("size,format,weight_bytes,quzo_total,fullres_total,qes_total,qes_state\n");
+
+    for size in &sizes {
+        for fmt in [Format::Int4, Format::Int8, Format::W8A8] {
+            let store = ParamStore::from_manifest(&man, size, fmt)?;
+            let d = store.lattice_dim();
+            let w = store.weight_bytes();
+            // Exercise the real optimizers so state_bytes() is measured, not
+            // hand-computed.
+            let hyper = EsHyper { pairs: fa.cfg.hyper.pairs, k_window: fa.cfg.hyper.k_window, ..Default::default() };
+            let quzo = QuzoOptimizer::new(d, fmt.qmax(), hyper.clone());
+            let full = QesFullResidual::new(d, fmt.qmax(), hyper.clone());
+            let mut replay = SeedReplayQes::new(d, fmt.qmax(), hyper.clone());
+            // fill the replay history to its cap for honest accounting
+            {
+                let mut s2 = store.clone();
+                let mut rng = crate::rng::SplitMix64::new(1);
+                for _ in 0..hyper.k_window {
+                    let spec = crate::opt::PopulationSpec {
+                        gen_seed: rng.next_u64(),
+                        pairs: hyper.pairs,
+                        sigma: 0.01,
+                    };
+                    let fitness = vec![0.0f32; spec.n_members()];
+                    replay.update(&mut s2, &spec, &fitness)?;
+                }
+            }
+            let (qb, fb, rb) = (quzo.state_bytes(), full.state_bytes(), replay.state_bytes());
+            println!(
+                "{} {}: weights {} | quzo {} | full-res {} | qes {} (state {})",
+                size, fmt.name(), human_bytes(w), human_bytes(w + qb),
+                human_bytes(w + fb), human_bytes(w + rb), human_bytes(rb)
+            );
+            md.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {} |\n",
+                size, fmt.name().to_uppercase(), human_bytes(w), human_bytes(w + qb),
+                human_bytes(w + fb), human_bytes(w + rb), human_bytes(rb)
+            ));
+            csv.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                size, fmt.name(), w, w + qb, w + fb, w + rb, rb
+            ));
+        }
+        // QAT-style first-order reference: fp32 weights + grads + Adam m,v
+        let fp = ParamStore::from_manifest(&man, size, Format::Fp32)?;
+        let n: usize = fp.entries.iter().map(|e| e.numel()).sum();
+        let qat = (n * 4 * 4) as u64; // w, g, m, v
+        md.push_str(&format!(
+            "| {} | QAT-FO | {} | — | — | — | — |\n",
+            size, human_bytes(qat)
+        ));
+        csv.push_str(&format!("{},qat_fo,{},,,,\n", size, qat));
+    }
+    println!("\n{}", md);
+    write_result("table8.md", &md)?;
+    write_result("table8.csv", &csv)?;
+    Ok(())
+}

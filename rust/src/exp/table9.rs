@@ -1,0 +1,90 @@
+//! Table 9 — Per-iteration wall-clock: rollout phase vs replay/update phase,
+//! and the replay-overhead-vs-K curve (§4.6).
+//!
+//! Absolute numbers are testbed-specific (single-core CPU PJRT vs the
+//! paper's A100s); the reproduced *shape* is (a) replay cost linear in K,
+//! (b) the K=small point retaining most accuracy at a fraction of the cost
+//! (Table 7), (c) rollout and update measured separately.
+
+use anyhow::Result;
+
+use crate::coordinator::{finetune_gen, EngineSet, FinetuneCfg, Session, Variant};
+use crate::exp::cli::{ensure_quantized, parse_ft_args};
+use crate::exp::write_result;
+use crate::quant::Format;
+use crate::runtime::Manifest;
+use crate::tasks::gen_task;
+use crate::util::args::Args;
+
+pub fn run(args: &mut Args) -> Result<()> {
+    let fa = parse_ft_args(args)?;
+    let sizes: Vec<String> =
+        args.get_or("sizes", "nano,micro").split(',').map(|s| s.to_string()).collect();
+    let windows: Vec<usize> = args
+        .get_or("windows", "2,4,8,16")
+        .split(',')
+        .map(|s| s.parse().unwrap_or(8))
+        .collect();
+    let gens = args.get_usize("bench-gens", 12)?;
+    let task_name = args.get_or("bench-task", "countdown");
+    args.finish()?;
+    let man = Manifest::load(&fa.manifest)?;
+
+    let mut md = String::from(
+        "# Table 9: per-iteration wall-clock (ms) — rollout vs update\n\n\
+         | MODEL | VARIANT | K | ROLLOUT (ms) | UPDATE (ms) | OVERHEAD vs ORACLE |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    let mut csv = String::from("size,variant,k,rollout_ms,update_ms,overhead\n");
+
+    for size in &sizes {
+        let store0 =
+            ensure_quantized(&man, size, &task_name, Format::Int4, fa.pretrain_steps, true)?;
+        let session = Session::new(&man, size, Format::Int4, EngineSet::gen_only())?;
+        let task = gen_task(&task_name, session.cfg.s_prompt, session.cfg.t_dec)?;
+
+        // oracle reference: Full Residual (the "no-replay" variant)
+        let mut store = store0.clone();
+        let mut cfg = FinetuneCfg { gens, verbose: false, eval_every: 0, ..fa.cfg.clone() };
+        let oracle =
+            finetune_gen(&session, task.as_ref(), &mut store, Variant::QesFullResidual, &cfg, None)?;
+        let oracle_total = oracle.mean_rollout_ms() + oracle.mean_update_ms();
+        md.push_str(&format!(
+            "| {} | full-residual | — | {:.1} | {:.1} | 1.00x |\n",
+            size,
+            oracle.mean_rollout_ms(),
+            oracle.mean_update_ms()
+        ));
+        csv.push_str(&format!(
+            "{},full-residual,0,{:.2},{:.2},1.0\n",
+            size,
+            oracle.mean_rollout_ms(),
+            oracle.mean_update_ms()
+        ));
+
+        for &k in &windows {
+            let mut store = store0.clone();
+            cfg.hyper.k_window = k;
+            let log =
+                finetune_gen(&session, task.as_ref(), &mut store, Variant::Qes, &cfg, None)?;
+            let total = log.mean_rollout_ms() + log.mean_update_ms();
+            let overhead = total / oracle_total;
+            println!(
+                "{} qes K={}: rollout {:.1}ms update {:.1}ms ({:.2}x oracle)",
+                size, k, log.mean_rollout_ms(), log.mean_update_ms(), overhead
+            );
+            md.push_str(&format!(
+                "| {} | seed-replay | {} | {:.1} | {:.1} | {:.2}x |\n",
+                size, k, log.mean_rollout_ms(), log.mean_update_ms(), overhead
+            ));
+            csv.push_str(&format!(
+                "{},seed-replay,{},{:.2},{:.2},{:.3}\n",
+                size, k, log.mean_rollout_ms(), log.mean_update_ms(), overhead
+            ));
+        }
+    }
+    println!("\n{}", md);
+    write_result("table9.md", &md)?;
+    write_result("table9.csv", &csv)?;
+    Ok(())
+}

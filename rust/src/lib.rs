@@ -1,0 +1,20 @@
+//! # QES — Quantized Evolution Strategies
+//!
+//! Reproduction of "Quantized Evolution Strategies: High-precision
+//! Fine-tuning of Quantized LLMs at Low-precision Cost" as a three-layer
+//! Rust + JAX + Pallas system (see DESIGN.md).
+//!
+//! * [`quant`] — lattice formats, PTQ, GPTQ, packing
+//! * [`rng`] — deterministic seed-replayable noise streams
+//! * [`model`] — manifest-mirrored parameter store + checkpoints
+//! * [`runtime`] — PJRT engines over AOT HLO artifacts
+//! * [`util`] — offline stand-ins for json/clap/criterion/proptest
+pub mod coordinator;
+pub mod exp;
+pub mod model;
+pub mod opt;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod tasks;
+pub mod util;

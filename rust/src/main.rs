@@ -1,0 +1,72 @@
+//! `qes` — the QES launcher.
+//!
+//! ```text
+//! qes info                                          manifest / artifact summary
+//! qes pretrain  --size nano --task countdown ...    produce a base fp model
+//! qes quantize  --run <dir> --format int4 [--gptq]  PTQ/GPTQ the base model
+//! qes eval      --run <dir> --format int4 ...       greedy accuracy of a ckpt
+//! qes finetune  --run <dir> --format int4 \
+//!               --variant qes|qes-full|quzo ...     ES fine-tuning (the paper)
+//! qes exp       table1|table2|table5|table6|        regenerate a paper table
+//!               table7|table8|table9|fig2|fig3 ...  or figure
+//! ```
+//!
+//! Runs live under `runs/<size>_<task>/`: `fp.ckpt` (pretrained base),
+//! `<format>.ckpt` (quantized), `<format>_<variant>.ckpt` (+ `.csv` log).
+
+use anyhow::Result;
+use qes::exp;
+use qes::util::args::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("usage: qes <info|pretrain|quantize|eval|finetune|exp> [--flags]");
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = match Args::parse(argv[1..].iter().cloned()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {:#}", e);
+            std::process::exit(2);
+        }
+    };
+    let r = match cmd.as_str() {
+        "info" => cmd_info(args),
+        "pretrain" => exp::cli::cmd_pretrain(args),
+        "quantize" => exp::cli::cmd_quantize(args),
+        "eval" => exp::cli::cmd_eval(args),
+        "finetune" => exp::cli::cmd_finetune(args),
+        "exp" => exp::cli::cmd_exp(args),
+        other => {
+            eprintln!("unknown command {:?}", other);
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {:#}", e);
+        std::process::exit(1);
+    }
+}
+
+fn cmd_info(mut args: Args) -> Result<()> {
+    let manifest = args.get_or("manifest", "artifacts/manifest.json");
+    args.finish()?;
+    let man = qes::runtime::Manifest::load(&manifest)?;
+    println!("manifest: {}", manifest);
+    println!("\nmodel configs:");
+    for (name, c) in &man.configs {
+        println!(
+            "  {:<6} d={} L={} H={} ff={} vocab={} | prompt {} dec {} train {} | lattice params {}",
+            name, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.vocab, c.s_prompt, c.t_dec,
+            c.s_train, c.lattice_params
+        );
+    }
+    println!("\nartifacts ({}):", man.artifacts().len());
+    for a in man.artifacts() {
+        println!("  {:<28} {:>2} data inputs, {:>3} param inputs, {} outputs",
+            a.file, a.data_inputs.len(), a.n_param_inputs, a.outputs.len());
+    }
+    Ok(())
+}

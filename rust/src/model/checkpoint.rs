@@ -1,0 +1,224 @@
+//! Checkpoint serialization (own binary format; no serde offline).
+//!
+//! Layout (little-endian):
+//!   magic  b"QESCKPT1"
+//!   u32    size-name length, bytes
+//!   u32    format-name length, bytes
+//!   u32    entry count
+//!   per entry:
+//!     u32 name length, bytes
+//!     u8  kind (0=fp 1=lattice_q 2=scale 3=lattice_as_fp)
+//!     u8  dtype (0=f32 1=i8 2=i8-packed-int4)
+//!     u32 ndim, u64 dims...
+//!     u64 payload byte length, payload
+//!
+//! INT4 lattices are written nibble-packed (dtype=2), so an INT4 checkpoint
+//! on disk really is half the size of the INT8 one — the artifact the
+//! paper's Table 8 accounting assumes.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::model::{ParamKind, ParamStore, TensorData};
+use crate::quant::{pack_int4, unpack_int4, Format};
+use crate::runtime::manifest::Manifest;
+
+const MAGIC: &[u8; 8] = b"QESCKPT1";
+
+fn kind_byte(k: ParamKind) -> u8 {
+    match k {
+        ParamKind::Fp => 0,
+        ParamKind::LatticeQ => 1,
+        ParamKind::Scale => 2,
+        ParamKind::LatticeAsFp => 3,
+    }
+}
+
+pub fn save(store: &ParamStore, path: &Path) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    write_str(&mut w, &store.size)?;
+    write_str(&mut w, store.format.name())?;
+    w.write_all(&(store.entries.len() as u32).to_le_bytes())?;
+    for e in &store.entries {
+        write_str(&mut w, &e.name)?;
+        w.write_all(&[kind_byte(e.kind)])?;
+        let pack4 = store.format == Format::Int4 && e.kind == ParamKind::LatticeQ;
+        match (&e.data, pack4) {
+            (TensorData::F32(v), _) => {
+                w.write_all(&[0u8])?;
+                write_dims(&mut w, &e.shape)?;
+                let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+                write_payload(&mut w, &bytes)?;
+            }
+            (TensorData::I8(v), false) => {
+                w.write_all(&[1u8])?;
+                write_dims(&mut w, &e.shape)?;
+                let bytes: Vec<u8> = v.iter().map(|&x| x as u8).collect();
+                write_payload(&mut w, &bytes)?;
+            }
+            (TensorData::I8(v), true) => {
+                w.write_all(&[2u8])?;
+                write_dims(&mut w, &e.shape)?;
+                write_payload(&mut w, &pack_int4(v))?;
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn load(man: &Manifest, path: &Path) -> anyhow::Result<ParamStore> {
+    let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic in {:?}", path);
+    let size = read_str(&mut r)?;
+    let fmt = Format::parse(&read_str(&mut r)?)?;
+    let n = read_u32(&mut r)? as usize;
+    let mut store = ParamStore::from_manifest(man, &size, fmt)?;
+    anyhow::ensure!(
+        store.entries.len() == n,
+        "checkpoint has {} entries, manifest layout has {}",
+        n,
+        store.entries.len()
+    );
+    for i in 0..n {
+        let name = read_str(&mut r)?;
+        anyhow::ensure!(
+            store.entries[i].name == name,
+            "entry {} name mismatch: ckpt {:?} vs manifest {:?}",
+            i,
+            name,
+            store.entries[i].name
+        );
+        let mut kd = [0u8; 2];
+        r.read_exact(&mut kd)?;
+        let ndim = read_u32(&mut r)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u64(&mut r)? as usize);
+        }
+        anyhow::ensure!(dims == store.entries[i].shape, "shape mismatch for {}", name);
+        let numel: usize = dims.iter().product();
+        let payload = read_payload(&mut r)?;
+        store.entries[i].data = match kd[1] {
+            0 => {
+                anyhow::ensure!(payload.len() == numel * 4, "bad f32 payload for {}", name);
+                TensorData::F32(
+                    payload
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                )
+            }
+            1 => {
+                anyhow::ensure!(payload.len() == numel, "bad i8 payload for {}", name);
+                TensorData::I8(payload.iter().map(|&b| b as i8).collect())
+            }
+            2 => TensorData::I8(unpack_int4(&payload, numel)),
+            other => anyhow::bail!("bad dtype byte {} for {}", other, name),
+        };
+    }
+    Ok(store)
+}
+
+fn write_str<W: Write>(w: &mut W, s: &str) -> std::io::Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())
+}
+
+fn write_dims<W: Write>(w: &mut W, dims: &[usize]) -> std::io::Result<()> {
+    w.write_all(&(dims.len() as u32).to_le_bytes())?;
+    for &d in dims {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_payload<W: Write>(w: &mut W, bytes: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(bytes.len() as u64).to_le_bytes())?;
+    w.write_all(bytes)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_str<R: Read>(r: &mut R) -> anyhow::Result<String> {
+    let n = read_u32(r)? as usize;
+    anyhow::ensure!(n < 1 << 20, "absurd string length {}", n);
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+fn read_payload<R: Read>(r: &mut R) -> anyhow::Result<Vec<u8>> {
+    let n = read_u64(r)? as usize;
+    anyhow::ensure!(n < 1 << 33, "absurd payload length {}", n);
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_fp;
+
+    #[test]
+    fn roundtrip_fp_and_int4() {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
+        init_fp(&mut fp, 99);
+        let dir = std::env::temp_dir().join("qes_ckpt_test");
+        let fp_path = dir.join("fp.ckpt");
+        save(&fp, &fp_path).unwrap();
+        let fp2 = load(&man, &fp_path).unwrap();
+        assert_eq!(
+            fp.get("tok_emb").unwrap().data.as_f32(),
+            fp2.get("tok_emb").unwrap().data.as_f32()
+        );
+
+        let q4 = ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap();
+        let q4_path = dir.join("int4.ckpt");
+        save(&q4, &q4_path).unwrap();
+        let q4b = load(&man, &q4_path).unwrap();
+        for &li in q4.lattice_indices() {
+            let name = q4.entries[li].name.clone();
+            assert_eq!(
+                q4.get(&name).unwrap().data.as_i8(),
+                q4b.get(&name).unwrap().data.as_i8(),
+                "{}",
+                name
+            );
+        }
+        // INT4 checkpoint should be materially smaller than INT8's.
+        let q8 = ParamStore::quantize_from(&fp, &man, Format::Int8, None).unwrap();
+        let q8_path = dir.join("int8.ckpt");
+        save(&q8, &q8_path).unwrap();
+        let s4 = std::fs::metadata(&q4_path).unwrap().len();
+        let s8 = std::fs::metadata(&q8_path).unwrap().len();
+        assert!(s4 < s8, "int4 ckpt {} >= int8 ckpt {}", s4, s8);
+    }
+
+    #[test]
+    fn rejects_corrupt_magic() {
+        let dir = std::env::temp_dir().join("qes_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.ckpt");
+        std::fs::write(&p, b"NOTAMAGIC").unwrap();
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        assert!(load(&man, &p).is_err());
+    }
+}

@@ -1,0 +1,358 @@
+//! Parameter store: the Rust-side single source of truth for model weights.
+//!
+//! The store mirrors the manifest's per-format flat argument layout exactly
+//! (same names, same order), so marshalling to PJRT literals is a direct
+//! walk. Lattice tensors are held as int8 values on the symmetric grid plus
+//! a per-output-channel scale vector; the lattice *range* (INT4 vs INT8) is
+//! a property of the run's `Format`, enforced by boundary gating — the same
+//! int8 storage and HLO artifact serve both widths, as in DESIGN.md.
+
+pub mod checkpoint;
+pub mod init;
+
+use std::collections::BTreeMap;
+
+use crate::quant::Format;
+use crate::runtime::manifest::{Manifest, ParamMeta};
+
+/// Raw tensor payload.
+#[derive(Debug, Clone)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            TensorData::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match self {
+            TensorData::F32(v) => v,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i8(&self) -> &[i8] {
+        match self {
+            TensorData::I8(v) => v,
+            _ => panic!("expected i8 tensor"),
+        }
+    }
+
+    pub fn as_i8_mut(&mut self) -> &mut [i8] {
+        match self {
+            TensorData::I8(v) => v,
+            _ => panic!("expected i8 tensor"),
+        }
+    }
+}
+
+/// What role a flat argument plays (mirrors manifest "kind").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    /// Always-FP tensor (embeddings, norms).
+    Fp,
+    /// Integer lattice values of a quantized linear weight.
+    LatticeQ,
+    /// Per-output-channel scale of a quantized linear weight.
+    Scale,
+    /// A lattice-eligible weight materialized as f32 (the `fp` format).
+    LatticeAsFp,
+}
+
+impl ParamKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "fp" => ParamKind::Fp,
+            "lattice_q" => ParamKind::LatticeQ,
+            "scale" => ParamKind::Scale,
+            "lattice_as_fp" => ParamKind::LatticeAsFp,
+            other => anyhow::bail!("unknown param kind {:?}", other),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: ParamKind,
+    /// (dist, std) init hint from the manifest, for fp-format tensors.
+    pub init: Option<(String, f32)>,
+    pub data: TensorData,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Ordered parameter collection for one (model size, format).
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub size: String,
+    pub format: Format,
+    pub entries: Vec<ParamEntry>,
+    index: BTreeMap<String, usize>,
+    /// Indices of LatticeQ (quant formats) or LatticeAsFp (fp) entries, in
+    /// canonical order — the ES parameter space.
+    lattice: Vec<usize>,
+}
+
+impl ParamStore {
+    /// Build a zero-initialized store from the manifest layout.
+    pub fn from_manifest(man: &Manifest, size: &str, format: Format) -> anyhow::Result<Self> {
+        let metas: &[ParamMeta] = man.params(size, format.artifact_format())?;
+        let mut entries = Vec::with_capacity(metas.len());
+        for m in metas {
+            let numel: usize = m.shape.iter().product();
+            let kind = ParamKind::parse(&m.kind)?;
+            let data = match m.dtype.as_str() {
+                "i8" => TensorData::I8(vec![0i8; numel]),
+                "f32" => TensorData::F32(vec![0.0f32; numel]),
+                other => anyhow::bail!("unsupported param dtype {:?}", other),
+            };
+            entries.push(ParamEntry {
+                name: m.name.clone(),
+                shape: m.shape.clone(),
+                kind,
+                init: m.init.clone(),
+                data,
+            });
+        }
+        let index = entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.name.clone(), i))
+            .collect();
+        let lattice = entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| matches!(e.kind, ParamKind::LatticeQ | ParamKind::LatticeAsFp))
+            .map(|(i, _)| i)
+            .collect();
+        Ok(ParamStore { size: size.to_string(), format, entries, index, lattice })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ParamEntry> {
+        self.index.get(name).map(|&i| &self.entries[i])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut ParamEntry> {
+        let i = *self.index.get(name)?;
+        Some(&mut self.entries[i])
+    }
+
+    /// Indices of the ES-optimizable (lattice) entries, canonical order.
+    pub fn lattice_indices(&self) -> &[usize] {
+        &self.lattice
+    }
+
+    /// Total lattice dimension d (the ES search-space size).
+    pub fn lattice_dim(&self) -> usize {
+        self.lattice.iter().map(|&i| self.entries[i].numel()).sum()
+    }
+
+    /// Iterate lattice tensors as immutable i8 slices (quant formats only).
+    pub fn lattice_i8(&self) -> Vec<&[i8]> {
+        self.lattice.iter().map(|&i| self.entries[i].data.as_i8()).collect()
+    }
+
+    /// Iterate lattice tensors as mutable i8 slices (quant formats only).
+    pub fn lattice_i8_mut(&mut self) -> Vec<&mut [i8]> {
+        // split_at_mut dance: collect raw pointers, safe because indices are
+        // distinct entries of the same Vec.
+        let mut out = Vec::with_capacity(self.lattice.len());
+        let base = self.entries.as_mut_ptr();
+        for &i in &self.lattice {
+            unsafe {
+                let e = &mut *base.add(i);
+                out.push(e.data.as_i8_mut() as *mut [i8]);
+            }
+        }
+        out.into_iter().map(|p| unsafe { &mut *p }).collect()
+    }
+
+    /// Memory footprint of the weights in bytes, using the TRUE packed
+    /// lattice width (INT4 packs two values per byte) — Table 8 accounting.
+    pub fn weight_bytes(&self) -> u64 {
+        let mut total = 0u64;
+        for e in &self.entries {
+            total += match (&e.data, self.format) {
+                (TensorData::I8(v), Format::Int4) => (v.len() as u64 + 1) / 2,
+                (TensorData::I8(v), _) => v.len() as u64,
+                (TensorData::F32(v), _) => v.len() as u64 * 4,
+            };
+        }
+        total
+    }
+
+    /// Quantize an fp-format store onto the lattice (per-channel symmetric
+    /// PTQ, or GPTQ when calibration activations are supplied per tensor).
+    pub fn quantize_from(
+        fp: &ParamStore,
+        man: &Manifest,
+        format: Format,
+        mut calib: Option<&mut dyn FnMut(&str, usize, usize) -> Option<Vec<f32>>>,
+    ) -> anyhow::Result<ParamStore> {
+        anyhow::ensure!(fp.format == Format::Fp32, "source must be fp32");
+        anyhow::ensure!(format != Format::Fp32, "target must be quantized");
+        let mut qs = ParamStore::from_manifest(man, &fp.size, format)?;
+        let qmax = format.qmax();
+        // Walk q-store entries; lattice tensors pull from the fp tensor of
+        // the same base name; fp tensors copy through.
+        for i in 0..qs.entries.len() {
+            let (name, kind, shape) = {
+                let e = &qs.entries[i];
+                (e.name.clone(), e.kind, e.shape.clone())
+            };
+            match kind {
+                ParamKind::Fp => {
+                    let src = fp
+                        .get(&name)
+                        .ok_or_else(|| anyhow::anyhow!("missing fp param {}", name))?;
+                    qs.entries[i].data = TensorData::F32(src.data.as_f32().to_vec());
+                }
+                ParamKind::LatticeQ => {
+                    let base = name.trim_end_matches(".q");
+                    let src = fp
+                        .get(base)
+                        .ok_or_else(|| anyhow::anyhow!("missing fp param {}", base))?;
+                    let (rows, cols) = (src.shape[0], src.shape[1]);
+                    let w = src.data.as_f32();
+                    let qt = match calib.as_mut().and_then(|f| f(base, rows, cols)) {
+                        Some(x) => {
+                            let ns = x.len() / rows;
+                            crate::quant::gptq_quantize(w, rows, cols, qmax, &x, ns, 0.01)?
+                        }
+                        None => crate::quant::ptq_quantize(w, rows, cols, qmax),
+                    };
+                    qs.entries[i].data = TensorData::I8(qt.q);
+                    // fill the paired scale entry (always follows .q)
+                    let sname = format!("{}.s", base);
+                    let si = *qs
+                        .index
+                        .get(&sname)
+                        .ok_or_else(|| anyhow::anyhow!("missing scale entry {}", sname))?;
+                    qs.entries[si].data = TensorData::F32(qt.scale);
+                    let _ = shape;
+                }
+                ParamKind::Scale => { /* filled together with .q above */ }
+                ParamKind::LatticeAsFp => unreachable!("quant store has no lattice_as_fp"),
+            }
+        }
+        Ok(qs)
+    }
+
+    /// Dequantize a quant-format store back to an fp-format store (used by
+    /// eval tooling and tests).
+    pub fn dequantize(&self, man: &Manifest) -> anyhow::Result<ParamStore> {
+        anyhow::ensure!(self.format != Format::Fp32, "already fp");
+        let mut fp = ParamStore::from_manifest(man, &self.size, Format::Fp32)?;
+        for i in 0..fp.entries.len() {
+            let (name, kind) = {
+                let e = &fp.entries[i];
+                (e.name.clone(), e.kind)
+            };
+            match kind {
+                ParamKind::Fp => {
+                    let src = self
+                        .get(&name)
+                        .ok_or_else(|| anyhow::anyhow!("missing param {}", name))?;
+                    fp.entries[i].data = TensorData::F32(src.data.as_f32().to_vec());
+                }
+                ParamKind::LatticeAsFp => {
+                    let q = self
+                        .get(&format!("{}.q", name))
+                        .ok_or_else(|| anyhow::anyhow!("missing {}.q", name))?;
+                    let s = self
+                        .get(&format!("{}.s", name))
+                        .ok_or_else(|| anyhow::anyhow!("missing {}.s", name))?;
+                    let cols = s.data.as_f32().len();
+                    let qv = q.data.as_i8();
+                    let sv = s.data.as_f32();
+                    let mut out = vec![0.0f32; qv.len()];
+                    for (j, &qj) in qv.iter().enumerate() {
+                        out[j] = qj as f32 * sv[j % cols];
+                    }
+                    fp.entries[i].data = TensorData::F32(out);
+                }
+                _ => unreachable!(),
+            }
+        }
+        Ok(fp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn manifest() -> Manifest {
+        Manifest::load("artifacts/manifest.json").expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn store_layout_matches_manifest() {
+        let man = manifest();
+        let s = ParamStore::from_manifest(&man, "nano", Format::Int4).unwrap();
+        // nano: 2 layers x (2 ln + 6 lattice pairs... ) + embeds + lnf
+        assert!(s.entries.len() > 10);
+        assert_eq!(s.lattice_indices().len(), 2 * 6);
+        assert!(s.lattice_dim() > 0);
+        let man_cfg = man.config("nano").unwrap();
+        assert_eq!(s.lattice_dim(), man_cfg.lattice_params);
+    }
+
+    #[test]
+    fn quantize_roundtrip_small_error() {
+        let man = manifest();
+        let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
+        crate::model::init::init_fp(&mut fp, 42);
+        let q8 = ParamStore::quantize_from(&fp, &man, Format::Int8, None).unwrap();
+        let back = q8.dequantize(&man).unwrap();
+        // INT8 symmetric per-channel: max elementwise error <= scale/2,
+        // and scale ~ absmax/127 — so relative recon error is tiny.
+        for (&li, _) in fp.lattice_indices().iter().zip(0..) {
+            let name = fp.entries[li].name.clone();
+            let a = fp.get(&name).unwrap().data.as_f32();
+            let b = back.get(&name).unwrap().data.as_f32();
+            let maxerr = a
+                .iter()
+                .zip(b.iter())
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            let absmax = a.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+            assert!(maxerr <= absmax / 127.0 + 1e-6, "{}: {}", name, maxerr);
+        }
+    }
+
+    #[test]
+    fn int4_weight_bytes_half_of_int8() {
+        let man = manifest();
+        let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
+        crate::model::init::init_fp(&mut fp, 1);
+        let q4 = ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap();
+        let q8 = ParamStore::quantize_from(&fp, &man, Format::Int8, None).unwrap();
+        let d = q4.lattice_dim() as u64;
+        assert_eq!(q8.weight_bytes() - q4.weight_bytes(), d / 2);
+    }
+}

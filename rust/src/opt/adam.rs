@@ -1,0 +1,193 @@
+//! First-order optimization: Adam over fp-format stores, with an optional
+//! post-step STE snap onto a fixed quantization grid.
+//!
+//! Powers (a) the in-repo pretraining pipeline that produces base models,
+//! (b) the FP32 first-order upper bound of Table 1, and (c) the "First-
+//! Order + STE (W8)" baseline: weights are snapped onto the W8 grid after
+//! each `step()` while gradients pass through unchanged — the paper's
+//! post-step straight-through estimator (§A.2).
+
+use crate::model::{ParamKind, ParamStore};
+
+#[derive(Debug, Clone)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Snap lattice-eligible tensors to a fixed per-channel grid after each
+    /// step (STE baseline). None = plain Adam.
+    pub ste_qmax: Option<i8>,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, ste_qmax: None }
+    }
+}
+
+pub struct Adam {
+    pub cfg: AdamConfig,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Fixed per-channel grids for the STE snap, captured on first step.
+    grids: Option<Vec<Vec<f32>>>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(store: &ParamStore, cfg: AdamConfig) -> Self {
+        let m = store.entries.iter().map(|e| vec![0.0f32; e.numel()]).collect();
+        let v = store.entries.iter().map(|e| vec![0.0f32; e.numel()]).collect();
+        Adam { cfg, m, v, grids: None, t: 0 }
+    }
+
+    /// One Adam step. `grads` must align with `store.entries` (the grad
+    /// artifact returns them in exactly that order).
+    pub fn step(&mut self, store: &mut ParamStore, grads: &[Vec<f32>]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            grads.len() == store.entries.len(),
+            "got {} grads for {} params",
+            grads.len(),
+            store.entries.len()
+        );
+        self.t += 1;
+        let b1t = 1.0 - self.cfg.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.cfg.beta2.powi(self.t as i32);
+        for (i, e) in store.entries.iter_mut().enumerate() {
+            let w = e.data.as_f32_mut();
+            anyhow::ensure!(grads[i].len() == w.len(), "grad {} shape mismatch", i);
+            let (m, v) = (&mut self.m[i], &mut self.v[i]);
+            for j in 0..w.len() {
+                let g = grads[i][j];
+                m[j] = self.cfg.beta1 * m[j] + (1.0 - self.cfg.beta1) * g;
+                v[j] = self.cfg.beta2 * v[j] + (1.0 - self.cfg.beta2) * g * g;
+                let mhat = m[j] / b1t;
+                let vhat = v[j] / b2t;
+                // gradient DESCENT on the loss
+                w[j] -= self.cfg.lr * mhat / (vhat.sqrt() + self.cfg.eps);
+            }
+        }
+        if let Some(qmax) = self.cfg.ste_qmax {
+            self.snap(store, qmax);
+        }
+        Ok(())
+    }
+
+    /// Snap lattice-eligible tensors onto the FIXED per-channel grid (scales
+    /// captured from the weights at the first snap — the grid QES would
+    /// inherit, not a moving target).
+    fn snap(&mut self, store: &mut ParamStore, qmax: i8) {
+        let lat: Vec<usize> = store.lattice_indices().to_vec();
+        if self.grids.is_none() {
+            let mut grids = Vec::with_capacity(lat.len());
+            for &i in &lat {
+                let e = &store.entries[i];
+                let cols = e.shape[1];
+                let rows = e.shape[0];
+                let w = e.data.as_f32();
+                let mut scale = vec![0.0f32; cols];
+                for c in 0..cols {
+                    let mut a = 0.0f32;
+                    for r in 0..rows {
+                        a = a.max(w[r * cols + c].abs());
+                    }
+                    scale[c] = if a > 0.0 { a / qmax as f32 } else { 1.0 };
+                }
+                grids.push(scale);
+            }
+            self.grids = Some(grids);
+        }
+        let grids = self.grids.as_ref().unwrap();
+        for (gi, &i) in lat.iter().enumerate() {
+            let e = &mut store.entries[i];
+            debug_assert_eq!(e.kind, ParamKind::LatticeAsFp);
+            let cols = e.shape[1];
+            let w = e.data.as_f32_mut();
+            let scale = &grids[gi];
+            let qmaxf = qmax as f32;
+            for (j, wj) in w.iter_mut().enumerate() {
+                let s = scale[j % cols];
+                let q = (*wj / s).round().clamp(-qmaxf, qmaxf);
+                *wj = q * s;
+            }
+        }
+    }
+
+    pub fn state_bytes(&self) -> u64 {
+        let n: usize = self.m.iter().map(|v| v.len()).sum();
+        (n * 8) as u64 // m + v, f32 each
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_fp;
+    use crate::quant::Format;
+    use crate::runtime::manifest::Manifest;
+
+    fn fp_store() -> ParamStore {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
+        init_fp(&mut fp, 33);
+        fp
+    }
+
+    fn fake_grads(store: &ParamStore, toward: f32) -> Vec<Vec<f32>> {
+        store.entries.iter().map(|e| vec![toward; e.numel()]).collect()
+    }
+
+    #[test]
+    fn adam_descends_constant_gradient() {
+        let mut s = fp_store();
+        let w0 = s.get("tok_emb").unwrap().data.as_f32()[0];
+        let mut adam = Adam::new(&s, AdamConfig { lr: 0.01, ..Default::default() });
+        for _ in 0..10 {
+            let g = fake_grads(&s, 1.0);
+            adam.step(&mut s, &g).unwrap();
+        }
+        let w1 = s.get("tok_emb").unwrap().data.as_f32()[0];
+        assert!(w1 < w0, "positive grad must decrease weight: {} -> {}", w0, w1);
+    }
+
+    #[test]
+    fn ste_snap_puts_lattice_tensors_on_grid() {
+        let mut s = fp_store();
+        let mut adam = Adam::new(
+            &s,
+            AdamConfig { lr: 1e-3, ste_qmax: Some(127), ..Default::default() },
+        );
+        let g = fake_grads(&s, 0.5);
+        adam.step(&mut s, &g).unwrap();
+        // every lattice weight must be an integer multiple of its channel scale
+        let grids = adam.grids.as_ref().unwrap();
+        for (gi, &i) in s.lattice_indices().to_vec().iter().enumerate() {
+            let e = &s.entries[i];
+            let cols = e.shape[1];
+            for (j, &w) in e.data.as_f32().iter().enumerate() {
+                let sc = grids[gi][j % cols];
+                let q = w / sc;
+                assert!(
+                    (q - q.round()).abs() < 1e-4,
+                    "{}[{}] = {} not on grid (scale {})",
+                    e.name,
+                    j,
+                    w,
+                    sc
+                );
+            }
+        }
+        // non-lattice tensors must NOT be snapped
+        let emb = s.get("tok_emb").unwrap().data.as_f32();
+        assert!(emb.iter().any(|&x| (x * 1000.0).fract().abs() > 1e-6));
+    }
+
+    #[test]
+    fn grad_shape_mismatch_errors() {
+        let mut s = fp_store();
+        let mut adam = Adam::new(&s, AdamConfig::default());
+        let bad = vec![vec![0.0f32; 3]; 2];
+        assert!(adam.step(&mut s, &bad).is_err());
+    }
+}

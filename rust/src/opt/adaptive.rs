@@ -1,0 +1,188 @@
+//! Adaptive replay window — the paper's §6 future-work extension:
+//! "an adaptive algorithm could automatically tune K and the decay rate
+//! gamma based on real-time convergence stability".
+//!
+//! `AdaptiveReplayQes` wraps `SeedReplayQes` and adjusts K between updates
+//! from two live signals:
+//!
+//! * **truncation pressure** — the magnitude the proxy residual would still
+//!   have at the window edge, estimated as `gamma^K * mean|e|`: if the
+//!   truncated tail is non-negligible, K grows (reconstruction is being
+//!   cut off too early);
+//! * **stability headroom** — if fitness variance has been low (converged
+//!   plateau) and the tail is negligible, K shrinks to save reconstruction
+//!   compute (the Table 7/9 trade-off, automated).
+//!
+//! K stays in [k_min, k_max]; history beyond the current K is dropped
+//! lazily by the inner optimizer.
+
+use crate::model::ParamStore;
+use crate::opt::{EsHyper, LatticeOptimizer, PopulationSpec, SeedReplayQes, StepStats};
+
+pub struct AdaptiveReplayQes {
+    inner: SeedReplayQes,
+    pub k_min: usize,
+    pub k_max: usize,
+    /// Truncation tolerance: grow K while gamma^K * mean|e| exceeds this.
+    pub tail_tol: f32,
+    /// Recent fitness spreads (max - min), for the stability signal.
+    recent_spread: Vec<f32>,
+    adjust_every: usize,
+    step: usize,
+}
+
+impl AdaptiveReplayQes {
+    pub fn new(d: usize, qmax: i8, hyper: EsHyper, k_min: usize, k_max: usize) -> Self {
+        let k0 = hyper.k_window.clamp(k_min, k_max);
+        let mut hyper = hyper;
+        hyper.k_window = k0;
+        AdaptiveReplayQes {
+            inner: SeedReplayQes::new(d, qmax, hyper),
+            k_min,
+            k_max,
+            tail_tol: 0.02,
+            recent_spread: Vec::new(),
+            adjust_every: 5,
+            step: 0,
+        }
+    }
+
+    pub fn current_k(&self) -> usize {
+        self.inner.hyper.k_window
+    }
+
+    fn mean_abs_residual(&self) -> f32 {
+        let e = self.inner.proxy_residual();
+        if e.is_empty() {
+            return 0.0;
+        }
+        e.iter().map(|x| x.abs()).sum::<f32>() / e.len() as f32
+    }
+
+    fn adjust(&mut self) {
+        let gamma = self.inner.hyper.gamma;
+        let k = self.inner.hyper.k_window;
+        let tail = gamma.powi(k as i32) * self.mean_abs_residual();
+        let spread = crate::util::mean(&self.recent_spread);
+        self.recent_spread.clear();
+        let new_k = if tail > self.tail_tol {
+            // truncation is biting: widen the window
+            (k + k / 2 + 1).min(self.k_max)
+        } else if spread < 1e-3 && tail < self.tail_tol * 0.1 {
+            // converged plateau with negligible tail: save compute
+            (k.saturating_sub(k / 4).max(1)).max(self.k_min)
+        } else {
+            k
+        };
+        self.inner.hyper.k_window = new_k;
+    }
+}
+
+impl LatticeOptimizer for AdaptiveReplayQes {
+    fn update(
+        &mut self,
+        store: &mut ParamStore,
+        spec: &PopulationSpec,
+        fitness: &[f32],
+    ) -> anyhow::Result<StepStats> {
+        let spread = fitness.iter().cloned().fold(f32::MIN, f32::max)
+            - fitness.iter().cloned().fold(f32::MAX, f32::min);
+        self.recent_spread.push(spread.max(0.0));
+        let stats = self.inner.update(store, spec, fitness)?;
+        self.step += 1;
+        if self.step % self.adjust_every == 0 {
+            self.adjust();
+        }
+        Ok(stats)
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.inner.state_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "qes-adaptive-k"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init::init_fp, ParamStore};
+    use crate::quant::Format;
+    use crate::rng::SplitMix64;
+    use crate::runtime::manifest::Manifest;
+
+    fn store() -> ParamStore {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
+        init_fp(&mut fp, 5);
+        ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap()
+    }
+
+    fn hyper(k: usize) -> EsHyper {
+        EsHyper { sigma: 0.5, alpha: 0.4, gamma: 0.95, pairs: 4, k_window: k }
+    }
+
+    #[test]
+    fn k_stays_within_bounds() {
+        let mut s = store();
+        let d = s.lattice_dim();
+        let mut opt = AdaptiveReplayQes::new(d, 7, hyper(4), 2, 12);
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..40 {
+            let spec = PopulationSpec { gen_seed: rng.next_u64(), pairs: 4, sigma: 0.5 };
+            let raw: Vec<f32> = (0..8).map(|_| rng.uniform01()).collect();
+            let fitness = crate::opt::normalize_fitness(&raw);
+            opt.update(&mut s, &spec, &fitness).unwrap();
+            assert!((2..=12).contains(&opt.current_k()), "K={}", opt.current_k());
+        }
+    }
+
+    #[test]
+    fn k_shrinks_on_plateau() {
+        // zero fitness spread for many generations => plateau => K shrinks
+        let mut s = store();
+        let d = s.lattice_dim();
+        let mut opt = AdaptiveReplayQes::new(d, 7, hyper(8), 2, 16);
+        let mut rng = SplitMix64::new(2);
+        for _ in 0..30 {
+            let spec = PopulationSpec { gen_seed: rng.next_u64(), pairs: 4, sigma: 0.5 };
+            opt.update(&mut s, &spec, &vec![0.0; 8]).unwrap();
+        }
+        assert!(opt.current_k() < 8, "K did not shrink: {}", opt.current_k());
+    }
+
+    #[test]
+    fn k_grows_under_truncation_pressure() {
+        // strong persistent signal + high gamma keeps residuals large at
+        // the window edge => K grows
+        let mut s = store();
+        let d = s.lattice_dim();
+        let mut h = hyper(2);
+        h.gamma = 0.99;
+        h.alpha = 0.3;
+        let mut opt = AdaptiveReplayQes::new(d, 7, h, 2, 16);
+        opt.tail_tol = 1e-4;
+        let spec = PopulationSpec { gen_seed: 9, pairs: 4, sigma: 0.5 };
+        let fitness = vec![0.5, -0.5, 0.25, -0.25, 0.1, -0.1, 0.05, -0.05];
+        for _ in 0..20 {
+            opt.update(&mut s, &spec, &fitness).unwrap();
+        }
+        assert!(opt.current_k() > 2, "K did not grow: {}", opt.current_k());
+    }
+
+    #[test]
+    fn state_stays_kilobytes() {
+        let mut s = store();
+        let d = s.lattice_dim();
+        let mut opt = AdaptiveReplayQes::new(d, 7, hyper(8), 2, 64);
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..70 {
+            let spec = PopulationSpec { gen_seed: rng.next_u64(), pairs: 4, sigma: 0.5 };
+            let raw: Vec<f32> = (0..8).map(|_| rng.uniform01()).collect();
+            opt.update(&mut s, &spec, &crate::opt::normalize_fitness(&raw)).unwrap();
+        }
+        assert!(opt.state_bytes() < 8192);
+    }
+}

@@ -1,0 +1,293 @@
+//! Baselines: QuZO (quantized zeroth-order with stochastic rounding) and
+//! MeZO (full-precision zeroth-order SPSA).
+
+use crate::model::{ParamKind, ParamStore};
+use crate::opt::{
+    accumulate_grad, gate_apply, EsHyper, LatticeOptimizer, PopulationSpec, StepStats,
+};
+use crate::rng::{NoiseStream, SplitMix64};
+
+/// QuZO (Zhou et al. 2025): the primary quantized baseline. Same discrete
+/// perturbations as QES (Eq. 3's stochastic rounding — their "double
+/// quantization"), but the update is applied STATELESSLY: the scaled
+/// gradient step is stochastically rounded onto the lattice and any
+/// rounding error is discarded. Unbiased, but §5 shows the errors
+/// accumulate as a random walk (variance explosion) or — when alpha*g is
+/// sub-threshold and rounding is deterministic — vanish entirely
+/// (stagnation). This is the failure mode QES exists to fix.
+pub struct QuzoOptimizer {
+    pub hyper: EsHyper,
+    g: Vec<f32>,
+    qmax: i8,
+    step: u64,
+}
+
+impl QuzoOptimizer {
+    pub fn new(d: usize, qmax: i8, hyper: EsHyper) -> Self {
+        QuzoOptimizer { hyper, g: vec![0.0f32; d], qmax, step: 0 }
+    }
+}
+
+impl LatticeOptimizer for QuzoOptimizer {
+    fn update(
+        &mut self,
+        store: &mut ParamStore,
+        spec: &PopulationSpec,
+        fitness: &[f32],
+    ) -> anyhow::Result<StepStats> {
+        let d = store.lattice_dim();
+        anyhow::ensure!(d == self.g.len());
+        accumulate_grad(spec, fitness, &mut self.g);
+        // Per-step rounding stream: decorrelated from the perturbation
+        // streams but still deterministic given the generation seed.
+        // Salted with the step counter so repeated generation seeds still
+        // get fresh rounding randomness (unbiasedness needs independence).
+        let mut rounder =
+            SplitMix64::new(spec.gen_seed ^ Q_ROUND_SALT ^ self.step.wrapping_mul(0x9e37));
+        let alpha = self.hyper.alpha;
+        let qmax = self.qmax;
+        let mut stats = StepStats { d: d as u64, ..Default::default() };
+        let mut j = 0usize;
+        for tensor in store.lattice_i8_mut() {
+            for w in tensor.iter_mut() {
+                let u = alpha * self.g[j];
+                // stochastic rounding: unbiased, variance ~ Delta^2
+                let f = u.floor();
+                let dw = f as i32 + rounder.bernoulli(u - f) as i32;
+                let (applied, boundary) = gate_apply(w, dw, qmax);
+                if applied != 0 {
+                    stats.n_changed += 1;
+                    if boundary {
+                        stats.n_boundary += 1;
+                    }
+                } else if dw != 0 {
+                    stats.n_gated += 1;
+                }
+                j += 1;
+            }
+        }
+        self.step += 1;
+        Ok(stats)
+    }
+
+    fn state_bytes(&self) -> u64 {
+        0 // stateless — its defining property
+    }
+
+    fn name(&self) -> &'static str {
+        "quzo"
+    }
+}
+
+/// Salt decorrelating QuZO's update-rounding stream from perturbation
+/// streams derived from the same generation seed.
+const Q_ROUND_SALT: u64 = 0x51ed_270b_9d2f_ff2f;
+
+/// MeZO (Malladi et al. 2024): zeroth-order SPSA on CONTINUOUS (fp32)
+/// weights — not applicable to quantized stores; it is the full-precision
+/// reference point in Table 1. Perturbs the lattice-eligible (linear)
+/// weights with sigma * eps and updates
+///   w <- w + alpha * mean_p [ (F+_p - F-_p) / (2 sigma) * eps_p ]
+/// with eps regenerated from seeds (memory-free, like the original).
+pub struct MezoOptimizer {
+    pub hyper: EsHyper,
+}
+
+impl MezoOptimizer {
+    pub fn new(hyper: EsHyper) -> Self {
+        MezoOptimizer { hyper }
+    }
+
+    /// Materialize member `m`'s perturbed fp weights for rollout: one
+    /// f32 vector per lattice-eligible tensor, aligned with
+    /// `store.lattice_indices()`.
+    pub fn perturb_fp(
+        store: &ParamStore,
+        spec: &PopulationSpec,
+        member: usize,
+    ) -> Vec<Vec<f32>> {
+        let (seed, sign) = spec.member(member);
+        let mut stream = NoiseStream::new(seed, spec.sigma, sign);
+        store
+            .lattice_indices()
+            .iter()
+            .map(|&i| {
+                let e = &store.entries[i];
+                debug_assert_eq!(e.kind, ParamKind::LatticeAsFp);
+                e.data
+                    .as_f32()
+                    .iter()
+                    .map(|&w| w + stream.next_scaled_gauss())
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// SPSA update from the pair fitnesses.
+    pub fn update_fp(
+        &mut self,
+        store: &mut ParamStore,
+        spec: &PopulationSpec,
+        fitness: &[f32],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(fitness.len() == spec.n_members());
+        let alpha = self.hyper.alpha;
+        for pair in 0..spec.pairs {
+            let (seed, _) = spec.member(2 * pair);
+            let coeff = alpha * (fitness[2 * pair] - fitness[2 * pair + 1])
+                / (2.0 * spec.sigma * spec.pairs as f32);
+            if coeff == 0.0 {
+                continue;
+            }
+            let mut stream = NoiseStream::new(seed, spec.sigma, 1.0);
+            let lat: Vec<usize> = store.lattice_indices().to_vec();
+            for i in lat {
+                let e = &mut store.entries[i];
+                for w in e.data.as_f32_mut() {
+                    // next_scaled_gauss = sigma * eps; divide back out so the
+                    // stream consumption matches perturb_fp exactly.
+                    let se = stream.next_scaled_gauss();
+                    *w += coeff * (se / spec.sigma);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn state_bytes(&self) -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init::init_fp, ParamStore};
+    use crate::quant::Format;
+    use crate::runtime::manifest::Manifest;
+
+    fn stores() -> (ParamStore, ParamStore) {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
+        init_fp(&mut fp, 12);
+        let q = ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap();
+        (fp, q)
+    }
+
+    #[test]
+    fn quzo_noise_dominates_where_qes_tracks_signal() {
+        // §5's dichotomy, measured as cosine alignment between the realized
+        // drift (W_T - W_0) and the ideal continuous update sum(alpha*g).
+        // QES's temporal equivalence keeps it within half a grid step of
+        // the ideal trajectory (high alignment); QuZO's stochastic rounding
+        // is unbiased but its per-step variance ~Delta^2 swamps the tiny
+        // signal (alignment near zero).
+        let (_fp, s0) = stores();
+        let d = s0.lattice_dim();
+        let hyper = EsHyper { sigma: 0.5, alpha: 0.2, gamma: 1.0, pairs: 2, k_window: 0 };
+        let mut s_quzo = s0.clone();
+        let mut s_qes = s0.clone();
+        let mut quzo = QuzoOptimizer::new(d, 7, hyper.clone());
+        let mut qes = crate::opt::QesFullResidual::new(d, 7, hyper.clone());
+        let w0: Vec<i8> = s0.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+
+        // A PERSISTENT fine-tuning signal: the same population and fitness
+        // every generation (the regime where sub-threshold updates must
+        // integrate over time — fine-tuning's steady gradient direction).
+        let spec = PopulationSpec { gen_seed: 31, pairs: 2, sigma: 0.5 };
+        let fitness = vec![0.5f32, -0.5, 0.25, -0.25];
+        let mut ideal = vec![0.0f64; d];
+        let mut g = vec![0.0f32; d];
+        for _ in 0..30 {
+            accumulate_grad(&spec, &fitness, &mut g);
+            for (a, &gj) in ideal.iter_mut().zip(g.iter()) {
+                *a += (hyper.alpha * gj) as f64;
+            }
+            quzo.update(&mut s_quzo, &spec, &fitness).unwrap();
+            qes.update(&mut s_qes, &spec, &fitness).unwrap();
+        }
+        let cos = |s: &ParamStore| -> f64 {
+            let wt: Vec<i8> = s.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+            let mut dot = 0.0f64;
+            let mut na = 0.0f64;
+            let mut nb = 0.0f64;
+            for j in 0..d {
+                let drift = (wt[j] - w0[j]) as f64;
+                dot += drift * ideal[j];
+                na += drift * drift;
+                nb += ideal[j] * ideal[j];
+            }
+            if na == 0.0 || nb == 0.0 {
+                0.0
+            } else {
+                dot / (na.sqrt() * nb.sqrt())
+            }
+        };
+        let cos_qes = cos(&s_qes);
+        let cos_quzo = cos(&s_quzo);
+        // QES's temporal equivalence ==> near-perfect tracking; QuZO's
+        // stochastic rounding injects Delta-scale noise that measurably
+        // degrades alignment at the same alpha.
+        assert!(cos_qes > 0.9, "qes alignment only {}", cos_qes);
+        assert!(
+            cos_qes > cos_quzo + 0.05,
+            "alignment: qes {} vs quzo {}",
+            cos_qes,
+            cos_quzo
+        );
+    }
+
+    #[test]
+    fn quzo_respects_lattice_range() {
+        let (_fp, mut s) = stores();
+        let d = s.lattice_dim();
+        let hyper = EsHyper { sigma: 1.0, alpha: 10.0, gamma: 1.0, pairs: 2, k_window: 0 };
+        let mut quzo = QuzoOptimizer::new(d, 7, hyper);
+        let mut rng = SplitMix64::new(8);
+        for _ in 0..10 {
+            let spec = PopulationSpec { gen_seed: rng.next_u64(), pairs: 2, sigma: 1.0 };
+            let raw: Vec<f32> = (0..4).map(|_| rng.uniform01()).collect();
+            let fitness = crate::opt::normalize_fitness(&raw);
+            quzo.update(&mut s, &spec, &fitness).unwrap();
+        }
+        for t in s.lattice_i8() {
+            assert!(t.iter().all(|&v| (-7..=7).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn mezo_perturb_update_consistency() {
+        // The update must walk the stream exactly as the perturbation did:
+        // perturbing then updating with F+=1, F-=0 moves w toward +eps.
+        let (mut fp, _q) = stores();
+        let spec = PopulationSpec { gen_seed: 71, pairs: 1, sigma: 0.01 };
+        let perturbed = MezoOptimizer::perturb_fp(&fp, &spec, 0);
+        let li0 = fp.lattice_indices()[0];
+        let name = fp.entries[li0].name.clone();
+        let before = fp.get(&name).unwrap().data.as_f32().to_vec();
+        let mut opt = MezoOptimizer::new(EsHyper { alpha: 1.0, ..Default::default() });
+        opt.update_fp(&mut fp, &spec, &[1.0, 0.0]).unwrap();
+        let after = fp.get(&name).unwrap().data.as_f32();
+        // direction of movement == direction of positive perturbation
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for j in 0..before.len() {
+            let eps_dir = perturbed[0][j] - before[j];
+            let move_dir = after[j] - before[j];
+            if eps_dir.abs() > 1e-9 {
+                total += 1;
+                if (eps_dir > 0.0) == (move_dir > 0.0) {
+                    agree += 1;
+                }
+            }
+        }
+        assert_eq!(agree, total, "update direction disagrees with eps");
+    }
+
+    #[test]
+    fn quzo_state_is_zero_bytes() {
+        let (_fp, s) = stores();
+        let q = QuzoOptimizer::new(s.lattice_dim(), 7, EsHyper::default());
+        assert_eq!(q.state_bytes(), 0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Shared ES machinery: perturbation application (rollout side) and
+//! gradient-estimate accumulation (update side). Both regenerate the same
+//! discrete noise from seeds — nothing d-sized is ever stored between them.
+
+use crate::model::ParamStore;
+use crate::opt::PopulationSpec;
+use crate::rng::NoiseStream;
+
+/// Materialize member `m`'s perturbed lattice tensors (Eq. 3 + Eq. 4
+/// boundary gating), leaving the store untouched. Output is aligned with
+/// `store.lattice_indices()` — ready for `runtime::param_literals`.
+pub fn apply_perturbation(
+    store: &ParamStore,
+    spec: &PopulationSpec,
+    member: usize,
+    qmax: i8,
+) -> Vec<Vec<i8>> {
+    let (seed, sign) = spec.member(member);
+    let mut stream = NoiseStream::new(seed, spec.sigma, sign);
+    let qmax_i = qmax as i32;
+    store
+        .lattice_i8()
+        .into_iter()
+        .map(|src| {
+            let mut out = Vec::with_capacity(src.len());
+            for &w in src {
+                let d = stream.next_delta();
+                let cand = w as i32 + d;
+                // boundary gating: invalid updates are masked (Eq. 4)
+                let v = if (-qmax_i..=qmax_i).contains(&cand) { cand as i8 } else { w };
+                out.push(v);
+            }
+            out
+        })
+        .collect()
+}
+
+/// Accumulate the ES gradient estimate (Eq. 5):
+///   g_hat = 1 / (N * sigma) * sum_i F_i * delta_i
+/// over all 2*pairs members, into `out` (length = lattice dim d).
+///
+/// Antithetic pairs share RNG draws via `next_pair_deltas`, halving the
+/// regeneration cost — the replay hot path (Algorithm 2) calls this K+1
+/// times per update.
+pub fn accumulate_grad(spec: &PopulationSpec, fitness: &[f32], out: &mut [f32]) {
+    assert_eq!(fitness.len(), spec.n_members());
+    out.fill(0.0);
+    let n = spec.n_members() as f32;
+    let inv = 1.0 / (n * spec.sigma);
+    for pair in 0..spec.pairs {
+        let (seed, _) = spec.member(2 * pair);
+        let fp = fitness[2 * pair] * inv;
+        let fm = fitness[2 * pair + 1] * inv;
+        if fp == 0.0 && fm == 0.0 {
+            // Rank-normalized fitness can zero a pair; still must consume
+            // nothing — stream positions are per-pair, not global, so a
+            // skipped pair costs nothing and changes nothing.
+            continue;
+        }
+        let mut stream = NoiseStream::new(seed, spec.sigma, 1.0);
+        for g in out.iter_mut() {
+            let (dp, dm) = stream.next_pair_deltas();
+            *g += fp * dp as f32 + fm * dm as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init::init_fp, ParamStore};
+    use crate::quant::Format;
+    use crate::runtime::manifest::Manifest;
+
+    fn quant_store() -> (Manifest, ParamStore) {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
+        init_fp(&mut fp, 3);
+        let q = ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap();
+        (man, q)
+    }
+
+    #[test]
+    fn perturbation_is_reproducible_and_in_range() {
+        let (_man, store) = quant_store();
+        let spec = PopulationSpec { gen_seed: 11, pairs: 2, sigma: 0.8 };
+        let a = apply_perturbation(&store, &spec, 0, 7);
+        let b = apply_perturbation(&store, &spec, 0, 7);
+        assert_eq!(a, b);
+        for t in &a {
+            assert!(t.iter().all(|&v| (-7..=7).contains(&v)));
+        }
+        // with sigma=0.8 a decent share of elements must actually move
+        let moved: usize = a
+            .iter()
+            .zip(store.lattice_i8())
+            .map(|(p, o)| p.iter().zip(o.iter()).filter(|(x, y)| x != y).count())
+            .sum();
+        assert!(moved > 0);
+    }
+
+    #[test]
+    fn antithetic_members_differ() {
+        let (_man, store) = quant_store();
+        let spec = PopulationSpec { gen_seed: 5, pairs: 1, sigma: 1.0 };
+        let p = apply_perturbation(&store, &spec, 0, 7);
+        let m = apply_perturbation(&store, &spec, 1, 7);
+        assert_ne!(p, m);
+    }
+
+    #[test]
+    fn grad_zero_for_zero_fitness() {
+        let (_man, store) = quant_store();
+        let d = store.lattice_dim();
+        let spec = PopulationSpec { gen_seed: 2, pairs: 4, sigma: 0.5 };
+        let mut g = vec![1.0f32; d];
+        accumulate_grad(&spec, &vec![0.0; 8], &mut g);
+        assert!(g.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn grad_points_toward_rewarded_member() {
+        // Reward only the + member of pair 0: g must equal F * delta+ / (N sigma)
+        let (_man, store) = quant_store();
+        let d = store.lattice_dim();
+        let spec = PopulationSpec { gen_seed: 17, pairs: 2, sigma: 0.7 };
+        let mut fitness = vec![0.0f32; 4];
+        fitness[0] = 0.5;
+        let mut g = vec![0.0f32; d];
+        accumulate_grad(&spec, &fitness, &mut g);
+        // regenerate delta+ of pair 0 and check proportionality
+        let (seed, _) = spec.member(0);
+        let mut stream = NoiseStream::new(seed, spec.sigma, 1.0);
+        let inv = 0.5 / (4.0 * spec.sigma);
+        for gj in g.iter().take(1000) {
+            let (dp, _) = stream.next_pair_deltas();
+            assert!((gj - inv * dp as f32).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn grad_matches_paired_delta_regeneration_exactly() {
+        // g[j] must equal inv * (F+ * dp_j + F- * dm_j) with the deltas
+        // regenerated from the same stream — the identity Algorithm 2's
+        // replay depends on.
+        let (_man, store) = quant_store();
+        let d = store.lattice_dim();
+        let spec = PopulationSpec { gen_seed: 23, pairs: 1, sigma: 0.5 };
+        let (f_pos, f_neg) = (0.3f32, -0.1f32);
+        let mut g = vec![0.0f32; d];
+        accumulate_grad(&spec, &[f_pos, f_neg], &mut g);
+        let (seed, _) = spec.member(0);
+        let mut stream = NoiseStream::new(seed, spec.sigma, 1.0);
+        let inv = 1.0 / (2.0 * spec.sigma);
+        for (j, &gj) in g.iter().enumerate() {
+            let (dp, dm) = stream.next_pair_deltas();
+            let want = inv * (f_pos * dp as f32 + f_neg * dm as f32);
+            assert!((gj - want).abs() < 1e-6, "elem {}: {} vs {}", j, gj, want);
+        }
+        // and the paired deltas themselves are unbiased mirrors on average
+        let mean: f32 = g.iter().sum::<f32>() / d as f32;
+        assert!(mean.abs() < 0.05, "mean={}", mean);
+    }
+}

@@ -1,0 +1,231 @@
+//! Optimizer suite: QES (Algorithms 1 & 2) and every baseline the paper
+//! compares against (QuZO, MeZO, first-order Adam ± STE).
+//!
+//! All ES-family optimizers share the population protocol:
+//!
+//! 1. the leader draws one `gen_seed` per generation;
+//! 2. pair `p` of the population derives `member_seed(gen_seed, p)`; its two
+//!    antithetic members perturb the lattice with `±` discrete noise
+//!    (Eq. 3) regenerated from that seed — never stored;
+//! 3. after rollouts, raw rewards are rank-normalized into fitness;
+//! 4. the update rule consumes `(gen_seed, fitness)` only — which is
+//!    exactly why Algorithm 2 can rematerialize optimizer state from a
+//!    K-deep history of those tuples.
+
+pub mod adam;
+pub mod adaptive;
+pub mod baselines;
+pub mod grad;
+pub mod qes;
+pub mod replay;
+
+pub use adam::{Adam, AdamConfig};
+pub use adaptive::AdaptiveReplayQes;
+pub use baselines::{MezoOptimizer, QuzoOptimizer};
+pub use grad::{accumulate_grad, apply_perturbation};
+pub use qes::QesFullResidual;
+pub use replay::SeedReplayQes;
+
+use crate::model::ParamStore;
+
+/// Hyperparameters shared by the ES-family optimizers (paper §A.1/§A.3).
+#[derive(Debug, Clone)]
+pub struct EsHyper {
+    /// Perturbation scale sigma.
+    pub sigma: f32,
+    /// Learning rate alpha.
+    pub alpha: f32,
+    /// Residual decay gamma in (0, 1].
+    pub gamma: f32,
+    /// Antithetic pairs per generation (population = 2 * pairs).
+    pub pairs: usize,
+    /// Seed-replay window K (Algorithm 2 only).
+    pub k_window: usize,
+}
+
+impl Default for EsHyper {
+    fn default() -> Self {
+        EsHyper { sigma: 1e-2, alpha: 5e-4, gamma: 0.9, pairs: 8, k_window: 8 }
+    }
+}
+
+/// One generation's population description. Member `2p` is the `+` half of
+/// pair `p`, member `2p+1` the `-` half.
+#[derive(Debug, Clone)]
+pub struct PopulationSpec {
+    pub gen_seed: u64,
+    pub pairs: usize,
+    pub sigma: f32,
+}
+
+impl PopulationSpec {
+    pub fn n_members(&self) -> usize {
+        self.pairs * 2
+    }
+
+    /// (stream seed, sign) of member `m`.
+    pub fn member(&self, m: usize) -> (u64, f32) {
+        let pair = (m / 2) as u64;
+        let sign = if m % 2 == 0 { 1.0 } else { -1.0 };
+        (crate::rng::member_seed(self.gen_seed, pair), sign)
+    }
+}
+
+/// Centered-rank fitness normalization (Salimans et al. 2017): maps raw
+/// rewards to [-0.5, 0.5] by rank; constant populations map to all-zero
+/// (no update when there is no signal).
+pub fn normalize_fitness(raw: &[f32]) -> Vec<f32> {
+    let n = raw.len();
+    if n <= 1 {
+        return vec![0.0; n];
+    }
+    let first = raw[0];
+    if raw.iter().all(|&r| r == first) {
+        return vec![0.0; n];
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| raw[a].partial_cmp(&raw[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut fit = vec![0.0f32; n];
+    // average ranks over ties so equal rewards get equal fitness
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && raw[idx[j + 1]] == raw[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f32 / 2.0;
+        for &k in &idx[i..=j] {
+            fit[k] = avg_rank / (n - 1) as f32 - 0.5;
+        }
+        i = j + 1;
+    }
+    fit
+}
+
+/// Per-step update statistics (paper Table 7 bottom: update ratio and
+/// boundary-hit ratio rho).
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    /// Lattice elements whose value changed this step.
+    pub n_changed: u64,
+    /// Changed elements that landed exactly on the lattice boundary ±qmax.
+    pub n_boundary: u64,
+    /// Update deltas suppressed by the gate (would have left the lattice).
+    pub n_gated: u64,
+    /// Total lattice dimension d.
+    pub d: u64,
+}
+
+impl StepStats {
+    pub fn update_ratio(&self) -> f64 {
+        if self.d == 0 {
+            0.0
+        } else {
+            self.n_changed as f64 / self.d as f64
+        }
+    }
+
+    pub fn boundary_hit_ratio(&self) -> f64 {
+        if self.n_changed == 0 {
+            0.0
+        } else {
+            self.n_boundary as f64 / self.n_changed as f64
+        }
+    }
+}
+
+/// The interface the coordinator drives. `update` consumes the generation's
+/// seeds (via the spec) and normalized fitness, and mutates the store.
+pub trait LatticeOptimizer {
+    fn update(
+        &mut self,
+        store: &mut ParamStore,
+        spec: &PopulationSpec,
+        fitness: &[f32],
+    ) -> anyhow::Result<StepStats>;
+
+    /// Persistent optimizer-state footprint in bytes (Table 8).
+    fn state_bytes(&self) -> u64;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Gate + apply a discrete update to one lattice element.
+/// Returns (applied delta, landed_on_boundary).
+#[inline]
+pub fn gate_apply(w: &mut i8, dw: i32, qmax: i8) -> (i32, bool) {
+    if dw == 0 {
+        return (0, false);
+    }
+    let next = *w as i32 + dw;
+    if next < -(qmax as i32) || next > qmax as i32 {
+        (0, false) // gated: Eq. (4)
+    } else {
+        *w = next as i8;
+        (dw, next.unsigned_abs() == qmax as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fitness_is_centered_and_bounded() {
+        let f = normalize_fitness(&[3.0, 1.0, 2.0, 0.0]);
+        let sum: f32 = f.iter().sum();
+        assert!(sum.abs() < 1e-6);
+        assert_eq!(f[0], 0.5); // highest reward
+        assert_eq!(f[3], -0.5); // lowest
+        assert!(f.iter().all(|&x| (-0.5..=0.5).contains(&x)));
+    }
+
+    #[test]
+    fn constant_rewards_zero_fitness() {
+        let f = normalize_fitness(&[0.25; 10]);
+        assert!(f.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn ties_share_fitness() {
+        let f = normalize_fitness(&[1.0, 2.0, 2.0, 3.0]);
+        assert_eq!(f[1], f[2]);
+        assert!(f[3] > f[1] && f[1] > f[0]);
+    }
+
+    #[test]
+    fn member_spec_antithetic() {
+        let spec = PopulationSpec { gen_seed: 9, pairs: 4, sigma: 0.1 };
+        assert_eq!(spec.n_members(), 8);
+        let (s0, g0) = spec.member(0);
+        let (s1, g1) = spec.member(1);
+        assert_eq!(s0, s1);
+        assert_eq!(g0, 1.0);
+        assert_eq!(g1, -1.0);
+        let (s2, _) = spec.member(2);
+        assert_ne!(s0, s2);
+    }
+
+    #[test]
+    fn gate_blocks_out_of_range() {
+        let mut w = 7i8;
+        let (applied, _) = gate_apply(&mut w, 1, 7);
+        assert_eq!(applied, 0);
+        assert_eq!(w, 7);
+        let (applied, boundary) = gate_apply(&mut w, -1, 7);
+        assert_eq!(applied, -1);
+        assert_eq!(w, 6);
+        assert!(!boundary);
+        let mut w = 6i8;
+        let (_, boundary) = gate_apply(&mut w, 1, 7);
+        assert!(boundary);
+        assert_eq!(w, 7);
+    }
+
+    #[test]
+    fn stats_ratios() {
+        let s = StepStats { n_changed: 10, n_boundary: 2, n_gated: 1, d: 1000 };
+        assert!((s.update_ratio() - 0.01).abs() < 1e-12);
+        assert!((s.boundary_hit_ratio() - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,281 @@
+//! Algorithm 2 — Stateless QES Update with Seed Replay.
+//!
+//! The headline memory mechanism: instead of persisting the FP16 residual
+//! `e in R^d`, keep only the last K generations' `(gen_seed, fitness)`
+//! tuples and *rematerialize* a proxy residual by re-simulating the update
+//! dynamics from an assumed-zero state at t-K. Because gamma^K ~ 0, the
+//! truncated history's contribution vanishes; because boundary gating is
+//! checked against the CURRENT weights W_t instead of the historical W_tau
+//! (paper §4.5), the reconstruction is approximate exactly when an active
+//! update coincides with a lattice boundary — measured to be ~1e-5 rare.
+//!
+//! Persistent state: K * (8 bytes seed + 4 bytes * population fitness) —
+//! kilobytes, independent of d (Table 8).
+
+use std::collections::VecDeque;
+
+use crate::model::ParamStore;
+use crate::opt::{accumulate_grad, gate_apply, EsHyper, LatticeOptimizer, PopulationSpec, StepStats};
+
+#[derive(Debug, Clone)]
+struct HistoryStep {
+    gen_seed: u64,
+    fitness: Vec<f32>,
+    sigma: f32,
+    alpha: f32,
+}
+
+pub struct SeedReplayQes {
+    pub hyper: EsHyper,
+    history: VecDeque<HistoryStep>,
+    /// Scratch buffers, reused across generations (transient, not state).
+    g: Vec<f32>,
+    e_proxy: Vec<f32>,
+    qmax: i8,
+}
+
+impl SeedReplayQes {
+    pub fn new(d: usize, qmax: i8, hyper: EsHyper) -> Self {
+        SeedReplayQes {
+            history: VecDeque::with_capacity(hyper.k_window + 1),
+            hyper,
+            g: vec![0.0f32; d],
+            e_proxy: vec![0.0f32; d],
+            qmax,
+        }
+    }
+
+    /// The rematerialized proxy residual from the last update (diagnostics).
+    pub fn proxy_residual(&self) -> &[f32] {
+        &self.e_proxy
+    }
+
+    pub fn history_len(&self) -> usize {
+        self.history.len()
+    }
+
+    /// Replay one historical step's dynamics into the proxy residual,
+    /// gating against the *current* weights (the §4.5 approximation).
+    /// `apply` = true additionally commits the final step's deltas.
+    fn simulate_step(
+        &mut self,
+        store: &mut ParamStore,
+        spec: &PopulationSpec,
+        fitness: &[f32],
+        alpha: f32,
+        apply: bool,
+    ) -> StepStats {
+        accumulate_grad(spec, fitness, &mut self.g);
+        let gamma = self.hyper.gamma;
+        let qmax = self.qmax;
+        let mut stats = StepStats { d: self.g.len() as u64, ..Default::default() };
+        let mut j = 0usize;
+        for tensor in store.lattice_i8_mut() {
+            for w in tensor.iter_mut() {
+                let u = alpha * self.g[j] + gamma * self.e_proxy[j];
+                let dw = u.round() as i32;
+                let applied = if apply {
+                    let (a, boundary) = gate_apply(w, dw, qmax);
+                    if a != 0 {
+                        stats.n_changed += 1;
+                        if boundary {
+                            stats.n_boundary += 1;
+                        }
+                    } else if dw != 0 {
+                        stats.n_gated += 1;
+                    }
+                    a
+                } else {
+                    // replay: simulate the gate against current W, do not mutate
+                    let next = *w as i32 + dw;
+                    if dw != 0 && (-(qmax as i32)..=qmax as i32).contains(&next) {
+                        dw
+                    } else {
+                        0
+                    }
+                };
+                self.e_proxy[j] = u - applied as f32;
+                j += 1;
+            }
+        }
+        stats
+    }
+}
+
+impl LatticeOptimizer for SeedReplayQes {
+    fn update(
+        &mut self,
+        store: &mut ParamStore,
+        spec: &PopulationSpec,
+        fitness: &[f32],
+    ) -> anyhow::Result<StepStats> {
+        let d = store.lattice_dim();
+        anyhow::ensure!(d == self.g.len(), "lattice dim {} != buffer dim {}", d, self.g.len());
+
+        // 1) Rematerialize the proxy residual from the history window.
+        self.e_proxy.fill(0.0);
+        let steps: Vec<HistoryStep> = self.history.iter().cloned().collect();
+        for h in &steps {
+            let hspec = PopulationSpec {
+                gen_seed: h.gen_seed,
+                pairs: h.fitness.len() / 2,
+                sigma: h.sigma,
+            };
+            self.simulate_step(store, &hspec, &h.fitness, h.alpha, false);
+        }
+
+        // 2) Current step: rematerialized error feeds the real update.
+        let alpha = self.hyper.alpha;
+        let stats = self.simulate_step(store, spec, fitness, alpha, true);
+
+        // 3) Record this generation; trim the window.
+        self.history.push_back(HistoryStep {
+            gen_seed: spec.gen_seed,
+            fitness: fitness.to_vec(),
+            sigma: spec.sigma,
+            alpha,
+        });
+        while self.history.len() > self.hyper.k_window {
+            self.history.pop_front();
+        }
+        Ok(stats)
+    }
+
+    fn state_bytes(&self) -> u64 {
+        // (seed u64 + sigma f32 + alpha f32 + fitness f32 * pop) per step
+        self.history
+            .iter()
+            .map(|h| 8 + 4 + 4 + 4 * h.fitness.len() as u64)
+            .sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "qes-seed-replay"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{init::init_fp, ParamStore};
+    use crate::opt::QesFullResidual;
+    use crate::quant::Format;
+    use crate::runtime::manifest::Manifest;
+
+    fn store(fmt: Format, seed: u64) -> ParamStore {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
+        init_fp(&mut fp, seed);
+        ParamStore::quantize_from(&fp, &man, fmt, None).unwrap()
+    }
+
+    fn run_steps(
+        opt: &mut dyn LatticeOptimizer,
+        s: &mut ParamStore,
+        gens: usize,
+        seed: u64,
+        pairs: usize,
+    ) {
+        let mut rng = crate::rng::SplitMix64::new(seed);
+        for _ in 0..gens {
+            let spec = PopulationSpec { gen_seed: rng.next_u64(), pairs, sigma: 0.5 };
+            let raw: Vec<f32> = (0..2 * pairs).map(|_| rng.uniform01()).collect();
+            let fitness = crate::opt::normalize_fitness(&raw);
+            opt.update(s, &spec, &fitness).unwrap();
+        }
+    }
+
+    #[test]
+    fn tracks_full_residual_oracle_when_window_covers_history() {
+        // With K >= T and gamma=1 and no gating pressure (INT8), replay is
+        // EXACT vs. an f32-residual oracle: same seeds, same fitness =>
+        // identical weight trajectories (f16 storage in the oracle is the
+        // only divergence source, kept below rounding threshold here).
+        let hyper = EsHyper { sigma: 0.5, alpha: 0.4, gamma: 0.9, pairs: 4, k_window: 64 };
+        let mut s_replay = store(Format::Int8, 21);
+        let mut s_oracle = s_replay.clone();
+        let d = s_replay.lattice_dim();
+        let mut replay = SeedReplayQes::new(d, 127, hyper.clone());
+        let mut oracle = QesFullResidual::new(d, 127, hyper.clone());
+        let mut rng = crate::rng::SplitMix64::new(100);
+        for _ in 0..12 {
+            let spec = PopulationSpec { gen_seed: rng.next_u64(), pairs: 4, sigma: 0.5 };
+            let raw: Vec<f32> = (0..8).map(|_| rng.uniform01()).collect();
+            let fitness = crate::opt::normalize_fitness(&raw);
+            replay.update(&mut s_replay, &spec, &fitness).unwrap();
+            oracle.update(&mut s_oracle, &spec, &fitness).unwrap();
+        }
+        let a: Vec<i8> = s_replay.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+        let b: Vec<i8> = s_oracle.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+        let diff = a.iter().zip(b.iter()).filter(|(x, y)| x != y).count();
+        // f16-vs-f32 residual rounding can flip a handful of borderline
+        // elements; fidelity must still be near-perfect (paper §4.5).
+        assert!(diff < d / 500 + 1, "replay diverged on {}/{} elements", diff, d);
+    }
+
+    #[test]
+    fn state_is_kilobytes_and_independent_of_d() {
+        let hyper = EsHyper { k_window: 50, pairs: 25, ..Default::default() };
+        let mut s = store(Format::Int4, 4);
+        let d = s.lattice_dim();
+        let mut opt = SeedReplayQes::new(d, 7, hyper);
+        run_steps(&mut opt, &mut s, 60, 7, 25);
+        let bytes = opt.state_bytes();
+        // 50 steps x (16 + 4*50) = 10.8 KB — the paper's "~29.7 KB" regime
+        assert!(bytes < 32_000, "state {} bytes", bytes);
+        assert!(bytes > 5_000);
+        assert_eq!(opt.history_len(), 50);
+    }
+
+    #[test]
+    fn window_truncation_with_decay_is_graceful() {
+        // Fixed gamma = 0.9, K=6 vs K=12: trajectories stay close (Table 7
+        // "fixed decay" regime) — compare number of diverging elements.
+        let mk = |k: usize| EsHyper {
+            sigma: 0.5,
+            alpha: 0.4,
+            gamma: 0.9,
+            pairs: 4,
+            k_window: k,
+        };
+        let mut s_a = store(Format::Int4, 9);
+        let mut s_b = s_a.clone();
+        let d = s_a.lattice_dim();
+        let mut a = SeedReplayQes::new(d, 7, mk(6));
+        let mut b = SeedReplayQes::new(d, 7, mk(12));
+        let mut rng = crate::rng::SplitMix64::new(55);
+        for _ in 0..20 {
+            let spec = PopulationSpec { gen_seed: rng.next_u64(), pairs: 4, sigma: 0.5 };
+            let raw: Vec<f32> = (0..8).map(|_| rng.uniform01()).collect();
+            let fitness = crate::opt::normalize_fitness(&raw);
+            a.update(&mut s_a, &spec, &fitness).unwrap();
+            b.update(&mut s_b, &spec, &fitness).unwrap();
+        }
+        let xa: Vec<i8> = s_a.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+        let xb: Vec<i8> = s_b.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+        let diff = xa.iter().zip(xb.iter()).filter(|(x, y)| x != y).count();
+        assert!(diff < d / 20, "K=6 vs K=12 diverged on {}/{} elements", diff, d);
+    }
+
+    #[test]
+    fn lattice_in_range_under_stress() {
+        let hyper = EsHyper { sigma: 1.0, alpha: 3.0, gamma: 0.95, pairs: 2, k_window: 5 };
+        let mut s = store(Format::Int4, 2);
+        let d = s.lattice_dim();
+        let mut opt = SeedReplayQes::new(d, 7, hyper);
+        run_steps(&mut opt, &mut s, 15, 3, 2);
+        for t in s.lattice_i8() {
+            assert!(t.iter().all(|&v| (-7..=7).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn history_caps_at_k() {
+        let hyper = EsHyper { k_window: 3, ..Default::default() };
+        let mut s = store(Format::Int4, 6);
+        let d = s.lattice_dim();
+        let mut opt = SeedReplayQes::new(d, 7, hyper);
+        run_steps(&mut opt, &mut s, 10, 11, 2);
+        assert_eq!(opt.history_len(), 3);
+    }
+}

@@ -1,0 +1,222 @@
+//! Quantization substrate: lattice formats, PTQ, GPTQ and INT4 packing.
+//!
+//! The paper's weights live on a symmetric per-output-channel integer grid
+//! (Appendix A.1): scale `s_j = max_i |W_ij| / (2^{B-1}-1)`, lattice range
+//! `[-(2^{B-1}-1), 2^{B-1}-1]` (note -2^{B-1} is excluded — symmetric).
+//! Weight layout convention is `[in, out]` = `[rows, cols]`, with one scale
+//! per *column* (output channel), matching the L1 kernels.
+
+pub mod gptq;
+pub mod pack;
+
+pub use gptq::gptq_quantize;
+pub use pack::{pack_int4, unpack_int4};
+
+/// The quantization formats evaluated in the paper (Tables 1-2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Format {
+    /// 4-bit weights, FP activations (GPTQ-style).
+    Int4,
+    /// 8-bit weights, FP activations (GPTQ-style).
+    Int8,
+    /// 8-bit weights AND 8-bit (dynamic per-tensor) activations.
+    W8A8,
+    /// Full precision (baselines: MeZO, first-order).
+    Fp32,
+}
+
+impl Format {
+    pub fn parse(s: &str) -> anyhow::Result<Format> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "int4" | "w4" => Format::Int4,
+            "int8" | "w8" => Format::Int8,
+            "w8a8" => Format::W8A8,
+            "fp32" | "fp" => Format::Fp32,
+            other => anyhow::bail!("unknown format {:?} (int4|int8|w8a8|fp32)", other),
+        })
+    }
+
+    /// Bits per weight on the lattice.
+    pub fn bits(self) -> u32 {
+        match self {
+            Format::Int4 => 4,
+            Format::Int8 | Format::W8A8 => 8,
+            Format::Fp32 => 32,
+        }
+    }
+
+    /// Largest admissible |lattice value|: 2^{B-1} - 1.
+    pub fn qmax(self) -> i8 {
+        match self {
+            Format::Int4 => 7,
+            Format::Int8 | Format::W8A8 => 127,
+            Format::Fp32 => panic!("fp32 has no lattice"),
+        }
+    }
+
+    /// Which AOT artifact family serves this format.
+    pub fn artifact_format(self) -> &'static str {
+        match self {
+            Format::Int4 | Format::Int8 => "wq",
+            Format::W8A8 => "w8a8",
+            Format::Fp32 => "fp",
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::Int4 => "int4",
+            Format::Int8 => "int8",
+            Format::W8A8 => "w8a8",
+            Format::Fp32 => "fp32",
+        }
+    }
+}
+
+/// A per-output-channel symmetrically quantized matrix, layout `[rows, cols]`
+/// (row-major), one scale per column.
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    pub q: Vec<i8>,
+    pub scale: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl QuantizedTensor {
+    /// Dequantize back to f32 (for tests / baselines).
+    pub fn dequant(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.q.len()];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let i = r * self.cols + c;
+                out[i] = self.q[i] as f32 * self.scale[c];
+            }
+        }
+        out
+    }
+}
+
+/// Round-to-nearest PTQ onto the symmetric per-channel grid.
+///
+/// `w` is `[rows, cols]` row-major; returns lattice values clipped to
+/// `[-qmax, qmax]` and per-column scales.
+pub fn ptq_quantize(w: &[f32], rows: usize, cols: usize, qmax: i8) -> QuantizedTensor {
+    assert_eq!(w.len(), rows * cols);
+    let qmaxf = qmax as f32;
+    let mut scale = vec![0.0f32; cols];
+    for c in 0..cols {
+        let mut absmax = 0.0f32;
+        for r in 0..rows {
+            absmax = absmax.max(w[r * cols + c].abs());
+        }
+        scale[c] = if absmax > 0.0 { absmax / qmaxf } else { 1.0 };
+    }
+    let mut q = vec![0i8; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let i = r * cols + c;
+            let v = (w[i] / scale[c]).round();
+            q[i] = v.clamp(-qmaxf, qmaxf) as i8;
+        }
+    }
+    QuantizedTensor { q, scale, rows, cols }
+}
+
+/// Max elementwise |W - dequant(Q)| — the PTQ reconstruction error.
+pub fn recon_error(w: &[f32], qt: &QuantizedTensor) -> f32 {
+    let deq = qt.dequant();
+    w.iter()
+        .zip(deq.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn format_parsing() {
+        assert_eq!(Format::parse("INT4").unwrap(), Format::Int4);
+        assert_eq!(Format::parse("w8").unwrap(), Format::Int8);
+        assert_eq!(Format::parse("w8a8").unwrap(), Format::W8A8);
+        assert!(Format::parse("int2").is_err());
+    }
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(Format::Int4.qmax(), 7);
+        assert_eq!(Format::Int8.qmax(), 127);
+        assert_eq!(Format::W8A8.qmax(), 127);
+    }
+
+    #[test]
+    fn ptq_zero_matrix() {
+        let qt = ptq_quantize(&[0.0; 12], 3, 4, 7);
+        assert!(qt.q.iter().all(|&x| x == 0));
+        assert!(qt.scale.iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn ptq_absmax_hits_qmax() {
+        // The per-column absmax element must map exactly to ±qmax.
+        let w = vec![0.1, -2.0, 0.05, 1.0]; // 2x2: cols {0.1,0.05}, {-2,1}
+        let qt = ptq_quantize(&w, 2, 2, 7);
+        assert_eq!(qt.q[0], 7); // 0.1 is col-0 absmax
+        assert_eq!(qt.q[2 * 0 + 1], -7); // -2.0 is col-1 absmax
+    }
+
+    #[test]
+    fn ptq_reconstruction_error_bounded() {
+        prop_check("ptq error <= scale/2", 50, |g| {
+            let rows = g.usize_in(1, 24);
+            let cols = g.usize_in(1, 24);
+            let w = g.vec_f32(rows * cols, -3.0, 3.0);
+            for &qmax in &[7i8, 127] {
+                let qt = ptq_quantize(&w, rows, cols, qmax);
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let i = r * cols + c;
+                        let err = (w[i] - qt.q[i] as f32 * qt.scale[c]).abs();
+                        if err > qt.scale[c] / 2.0 + 1e-5 {
+                            return Err(format!(
+                                "err {} > scale/2 {} at ({},{})",
+                                err,
+                                qt.scale[c] / 2.0,
+                                r,
+                                c
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ptq_lattice_in_range() {
+        prop_check("lattice within ±qmax", 50, |g| {
+            let rows = g.usize_in(1, 16);
+            let cols = g.usize_in(1, 16);
+            let w = g.vec_f32(rows * cols, -10.0, 10.0);
+            let qt = ptq_quantize(&w, rows, cols, 7);
+            if qt.q.iter().any(|&x| x < -7 || x > 7) {
+                return Err("out of range".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dequant_roundtrip_int8_precise() {
+        // INT8 on a well-conditioned matrix: relative error < 1%.
+        let mut g = crate::util::prop::Gen::from_seed(5);
+        let w = g.vec_f32(64 * 32, -1.0, 1.0);
+        let qt = ptq_quantize(&w, 64, 32, 127);
+        let err = recon_error(&w, &qt);
+        assert!(err < 0.01, "err={}", err);
+    }
+}

@@ -1,0 +1,100 @@
+//! INT4 nibble packing.
+//!
+//! The PJRT artifacts take int8 tensors (S4 is not marshallable through the
+//! runtime), so INT4 lattices are *stored and executed* as int8 — but the
+//! paper's memory accounting (Table 8) and the checkpoint format both use
+//! the true packed footprint: two 4-bit values per byte.
+
+/// Pack int4 values (each in [-8, 7]; QES uses [-7, 7]) into nibbles.
+/// Odd-length inputs get a zero pad nibble.
+pub fn pack_int4(q: &[i8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity((q.len() + 1) / 2);
+    let mut i = 0;
+    while i + 1 < q.len() {
+        let lo = (q[i] as u8) & 0x0f;
+        let hi = (q[i + 1] as u8) & 0x0f;
+        out.push(lo | (hi << 4));
+        i += 2;
+    }
+    if i < q.len() {
+        out.push((q[i] as u8) & 0x0f);
+    }
+    out
+}
+
+/// Unpack nibbles back to int8 (sign-extended from 4 bits). `n` is the
+/// original element count (to drop a possible pad nibble).
+pub fn unpack_int4(bytes: &[u8], n: usize) -> Vec<i8> {
+    let mut out = Vec::with_capacity(n);
+    for (idx, &b) in bytes.iter().enumerate() {
+        let lo = sign_extend4(b & 0x0f);
+        out.push(lo);
+        if out.len() == n {
+            break;
+        }
+        let hi = sign_extend4(b >> 4);
+        out.push(hi);
+        if out.len() == n {
+            break;
+        }
+        let _ = idx;
+    }
+    assert_eq!(out.len(), n, "byte buffer too short for {} int4 values", n);
+    out
+}
+
+#[inline]
+fn sign_extend4(nib: u8) -> i8 {
+    ((nib << 4) as i8) >> 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn roundtrip_even() {
+        let q: Vec<i8> = vec![-7, 7, 0, 1, -1, 3, -4, 5];
+        assert_eq!(unpack_int4(&pack_int4(&q), q.len()), q);
+    }
+
+    #[test]
+    fn roundtrip_odd() {
+        let q: Vec<i8> = vec![-7, 7, 3];
+        let packed = pack_int4(&q);
+        assert_eq!(packed.len(), 2);
+        assert_eq!(unpack_int4(&packed, 3), q);
+    }
+
+    #[test]
+    fn packed_size_halves() {
+        let q = vec![1i8; 1000];
+        assert_eq!(pack_int4(&q).len(), 500);
+    }
+
+    #[test]
+    fn sign_extension() {
+        assert_eq!(sign_extend4(0x0f), -1);
+        assert_eq!(sign_extend4(0x08), -8);
+        assert_eq!(sign_extend4(0x07), 7);
+        assert_eq!(sign_extend4(0x00), 0);
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        prop_check("int4 pack/unpack roundtrip", 100, |g| {
+            let n = g.usize_in(0, 257);
+            let q = g.vec_i8(n, -8, 7);
+            let got = if n == 0 {
+                Vec::new()
+            } else {
+                unpack_int4(&pack_int4(&q), n)
+            };
+            if got != q {
+                return Err("mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

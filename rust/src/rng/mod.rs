@@ -1,0 +1,163 @@
+//! Deterministic RNG substrate.
+//!
+//! Everything QES does — perturbation generation (Eq. 3), fitness rollout
+//! sampling, and the stateless seed replay (Algorithm 2) — must be exactly
+//! reproducible from a 64-bit seed. A perturbation is never stored; it is
+//! *re-generated* from its seed both at rollout time and again at update /
+//! replay time, so the generator here is the true "optimizer state" of the
+//! stateless variant.
+//!
+//! `SplitMix64` is the base generator (tiny state, passes BigCrush for this
+//! use, and trivially portable). `NoiseStream` derives a per-(generation,
+//! member) stream via seed mixing, giving independence across members
+//! without any coordination.
+
+pub mod stream;
+
+pub use stream::{member_seed, NoiseStream};
+
+/// SplitMix64: 64-bit state, one multiply-xorshift round per output.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1) with 24 bits of mantissa (exact f32 grid).
+    #[inline]
+    pub fn uniform01(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Standard normal via Box–Muller (one sample; the pair's second half
+    /// is discarded to keep the per-element stream position predictable).
+    #[inline]
+    pub fn normal(&mut self) -> f32 {
+        // u1 in (0,1] to keep ln() finite.
+        let u1 = 1.0 - self.uniform01();
+        let u2 = self.uniform01();
+        let r = (-2.0 * (u1 as f64).ln()).sqrt() as f32;
+        let theta = 2.0 * std::f32::consts::PI * u2;
+        r * theta.cos()
+    }
+
+    /// Gumbel(0,1) sample (for softmax sampling: argmax(logits + tau * g)).
+    #[inline]
+    pub fn gumbel(&mut self) -> f32 {
+        let u = (1.0 - self.uniform01()).max(1e-12);
+        -(-(u as f64).ln()).ln() as f32
+    }
+
+    /// Bernoulli(p) draw.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f32) -> bool {
+        self.uniform01() < p
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Modulo bias is < 2^-40 for the n used here (task sampling).
+        self.next_u64() % n
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = SplitMix64::new(7);
+        let n = 100_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let u = r.uniform01();
+            assert!((0.0..1.0).contains(&u));
+            sum += u as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={}", mean);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(3);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={}", mean);
+        assert!((var - 1.0).abs() < 0.02, "var={}", var);
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = SplitMix64::new(9);
+        let hits = (0..100_000).filter(|_| r.bernoulli(0.3)).count();
+        let rate = hits as f64 / 100_000.0;
+        assert!((rate - 0.3).abs() < 0.01, "rate={}", rate);
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = SplitMix64::new(11);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<u32>>());
+        assert_ne!(v, (0..50).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn gumbel_finite() {
+        let mut r = SplitMix64::new(13);
+        for _ in 0..10_000 {
+            assert!(r.gumbel().is_finite());
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! PJRT engine: load an HLO-text artifact, compile once, execute many.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so an `Engine`
+//! lives on one thread; worker threads each build their own `Engine` from
+//! the same artifact file (see `coordinator::pool`). Compilation is ~1s per
+//! artifact on this testbed and happens once per worker at startup.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model::{ParamStore, TensorData};
+use crate::runtime::manifest::{ArtifactMeta, IoSpec, Manifest};
+
+/// Host-side input value handed to `Engine::run`.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I8(Vec<i8>),
+    ScalarF32(f32),
+}
+
+/// Build an xla literal matching an IoSpec.
+pub fn literal_for(spec: &IoSpec, t: &HostTensor) -> Result<xla::Literal> {
+    let numel: usize = spec.shape.iter().product();
+    match (spec.dtype.as_str(), t) {
+        ("f32", HostTensor::ScalarF32(v)) => {
+            anyhow::ensure!(spec.shape.is_empty(), "{}: scalar for non-scalar spec", spec.name);
+            Ok(xla::Literal::scalar(*v))
+        }
+        ("f32", HostTensor::F32(v)) => {
+            anyhow::ensure!(v.len() == numel, "{}: got {} elems want {}", spec.name, v.len(), numel);
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            };
+            Ok(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &spec.shape,
+                bytes,
+            )?)
+        }
+        ("i32", HostTensor::I32(v)) => {
+            anyhow::ensure!(v.len() == numel, "{}: got {} elems want {}", spec.name, v.len(), numel);
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            };
+            Ok(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                &spec.shape,
+                bytes,
+            )?)
+        }
+        ("i8", HostTensor::I8(v)) => {
+            anyhow::ensure!(v.len() == numel, "{}: got {} elems want {}", spec.name, v.len(), numel);
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len())
+            };
+            Ok(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S8,
+                &spec.shape,
+                bytes,
+            )?)
+        }
+        (dt, ht) => anyhow::bail!("{}: dtype {} incompatible with {:?}", spec.name, dt, ht),
+    }
+}
+
+/// Build a literal directly from a slice of i8 (lattice hot path).
+pub fn i8_literal(shape: &[usize], v: &[i8]) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S8,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Build a literal directly from a slice of f32.
+pub fn f32_literal(shape: &[usize], v: &[f32]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// A compiled artifact bound to a (thread-local) PJRT client.
+pub struct Engine {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Engine {
+    /// Load + compile `artifacts/<file>` on the given client.
+    pub fn load(client: &xla::PjRtClient, man: &Manifest, meta: &ArtifactMeta) -> Result<Engine> {
+        let path = man.dir.join(&meta.file);
+        Self::load_path(client, &path, meta.clone())
+    }
+
+    pub fn load_path(
+        client: &xla::PjRtClient,
+        path: &Path,
+        meta: ArtifactMeta,
+    ) -> Result<Engine> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Engine { meta, exe })
+    }
+
+    /// Execute with pre-built literals (data inputs followed by params).
+    /// Returns the flattened output tuple.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let expected = self.meta.data_inputs.len() + self.meta.n_param_inputs;
+        anyhow::ensure!(
+            args.len() == expected,
+            "{}: got {} args, want {} ({} data + {} params)",
+            self.meta.file,
+            args.len(),
+            expected,
+            self.meta.data_inputs.len(),
+            self.meta.n_param_inputs
+        );
+        let buffers = self.exe.execute::<xla::Literal>(args)?;
+        let result = buffers[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(
+            outs.len() == self.meta.outputs.len(),
+            "{}: got {} outputs, manifest says {}",
+            self.meta.file,
+            outs.len(),
+            self.meta.outputs.len()
+        );
+        Ok(outs)
+    }
+}
+
+/// Convert a ParamStore's entries to literals, in manifest order, with an
+/// optional override for lattice tensors (the per-member perturbed values).
+///
+/// `overrides[i]` corresponds to `store.lattice_indices()[i]`.
+pub fn param_literals(
+    store: &ParamStore,
+    overrides: Option<&[Vec<i8>]>,
+) -> Result<Vec<xla::Literal>> {
+    let lat = store.lattice_indices();
+    let mut lat_pos = 0usize;
+    let mut out = Vec::with_capacity(store.entries.len());
+    for (i, e) in store.entries.iter().enumerate() {
+        let is_lattice = lat_pos < lat.len() && lat[lat_pos] == i;
+        match &e.data {
+            TensorData::I8(v) => {
+                let slice: &[i8] = if is_lattice {
+                    match overrides {
+                        Some(ovs) => &ovs[lat_pos],
+                        None => v,
+                    }
+                } else {
+                    v
+                };
+                out.push(i8_literal(&e.shape, slice)?);
+            }
+            TensorData::F32(v) => {
+                if is_lattice {
+                    // fp-format lattice tensors can't be overridden with i8
+                    anyhow::ensure!(
+                        overrides.is_none(),
+                        "i8 overrides passed for fp-format store"
+                    );
+                }
+                out.push(f32_literal(&e.shape, v)?);
+            }
+        }
+        if is_lattice {
+            lat_pos += 1;
+        }
+    }
+    Ok(out)
+}
+
+/// Extract a Vec<f32> from an output literal.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a Vec<i32> from an output literal.
+pub fn to_i32_vec(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+/// Extract a scalar f32 from an output literal.
+pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+    Ok(v[0])
+}

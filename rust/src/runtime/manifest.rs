@@ -1,0 +1,263 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and this runtime. It records, per artifact, the exact positional input
+//! and output specs; and per (size, format), the flat parameter layout the
+//! `ParamStore` mirrors.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub s_prompt: usize,
+    pub t_dec: usize,
+    pub s_train: usize,
+    pub b_gen: usize,
+    pub b_train: usize,
+    pub lattice_params: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String, // "i32" | "f32" | "i8"
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub kind: String,
+    pub init: Option<(String, f32)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub config: String,
+    pub format: String, // "wq" | "w8a8" | "fp"
+    pub func: String,   // "gen" | "loss" | "cls" | "grad"
+    pub data_inputs: Vec<IoSpec>,
+    pub n_param_inputs: usize,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ModelConfig>,
+    params: BTreeMap<(String, String), Vec<ParamMeta>>,
+    artifacts: Vec<ArtifactMeta>,
+}
+
+fn shape_of(j: &Json) -> anyhow::Result<Vec<usize>> {
+    Ok(j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+        .iter()
+        .map(|d| d.as_usize().unwrap_or(0))
+        .collect())
+}
+
+fn io_spec(j: &Json) -> anyhow::Result<IoSpec> {
+    Ok(IoSpec {
+        name: j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string(),
+        dtype: j
+            .get("dtype")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("io spec missing dtype"))?
+            .to_string(),
+        shape: shape_of(j.get("shape").ok_or_else(|| anyhow::anyhow!("io missing shape"))?)?,
+    })
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(path: P) -> anyhow::Result<Manifest> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {:?} (run `make artifacts`): {}", path, e))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {}", e))?;
+
+        let mut configs = BTreeMap::new();
+        for (name, c) in j
+            .get("configs")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing configs"))?
+        {
+            let g = |k: &str| -> anyhow::Result<usize> {
+                c.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow::anyhow!("config {} missing {}", name, k))
+            };
+            configs.insert(
+                name.clone(),
+                ModelConfig {
+                    vocab: g("vocab")?,
+                    d_model: g("d_model")?,
+                    n_layers: g("n_layers")?,
+                    n_heads: g("n_heads")?,
+                    d_ff: g("d_ff")?,
+                    s_prompt: g("s_prompt")?,
+                    t_dec: g("t_dec")?,
+                    s_train: g("s_train")?,
+                    b_gen: g("b_gen")?,
+                    b_train: g("b_train")?,
+                    lattice_params: g("lattice_params")?,
+                },
+            );
+        }
+
+        let mut params = BTreeMap::new();
+        for (size, fmts) in j
+            .get("params")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing params"))?
+        {
+            for (fmt, list) in fmts
+                .as_obj()
+                .ok_or_else(|| anyhow::anyhow!("params[{}] not an object", size))?
+            {
+                let mut metas = Vec::new();
+                for p in list.as_arr().unwrap_or(&[]) {
+                    let init = p.get("init").and_then(|v| v.as_arr()).map(|arr| {
+                        let dist = arr
+                            .first()
+                            .and_then(|d| d.as_str())
+                            .unwrap_or("zeros")
+                            .to_string();
+                        let std = arr.get(1).and_then(|s| s.as_f64()).unwrap_or(0.0) as f32;
+                        (dist, std)
+                    });
+                    metas.push(ParamMeta {
+                        name: p
+                            .get("name")
+                            .and_then(|v| v.as_str())
+                            .ok_or_else(|| anyhow::anyhow!("param missing name"))?
+                            .to_string(),
+                        dtype: p
+                            .get("dtype")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("f32")
+                            .to_string(),
+                        shape: shape_of(
+                            p.get("shape").ok_or_else(|| anyhow::anyhow!("param missing shape"))?,
+                        )?,
+                        kind: p
+                            .get("kind")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("fp")
+                            .to_string(),
+                        init,
+                    });
+                }
+                params.insert((size.clone(), fmt.clone()), metas);
+            }
+        }
+
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?
+        {
+            let data_inputs = a
+                .get("data_inputs")
+                .and_then(|v| v.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(io_spec)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(|v| v.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(io_spec)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            artifacts.push(ArtifactMeta {
+                file: a
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing file"))?
+                    .to_string(),
+                config: a.get("config").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                format: a.get("format").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                func: a.get("fn").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                data_inputs,
+                n_param_inputs: a.get("n_param_inputs").and_then(|v| v.as_usize()).unwrap_or(0),
+                outputs,
+            });
+        }
+
+        Ok(Manifest {
+            dir: path.parent().unwrap_or(Path::new(".")).to_path_buf(),
+            configs,
+            params,
+            artifacts,
+        })
+    }
+
+    pub fn config(&self, size: &str) -> anyhow::Result<&ModelConfig> {
+        self.configs
+            .get(size)
+            .ok_or_else(|| anyhow::anyhow!("model size {:?} not in manifest (have: {:?})",
+                size, self.configs.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn params(&self, size: &str, fmt: &str) -> anyhow::Result<&[ParamMeta]> {
+        self.params
+            .get(&(size.to_string(), fmt.to_string()))
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("no param layout for ({}, {})", size, fmt))
+    }
+
+    pub fn artifact(&self, size: &str, fmt: &str, func: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.config == size && a.format == fmt && a.func == func)
+            .ok_or_else(|| {
+                anyhow::anyhow!("artifact ({}, {}, {}) not in manifest", size, fmt, func)
+            })
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest() {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        assert!(man.configs.contains_key("nano"));
+        let cfg = man.config("nano").unwrap();
+        assert_eq!(cfg.vocab, 48);
+        let a = man.artifact("nano", "wq", "gen").unwrap();
+        assert_eq!(a.data_inputs.len(), 4);
+        assert_eq!(a.outputs.len(), 1);
+        assert!(a.n_param_inputs > 0);
+        let metas = man.params("nano", "wq").unwrap();
+        assert_eq!(metas.len(), a.n_param_inputs);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        assert!(man.artifact("nano", "wq", "nonexistent").is_err());
+        assert!(man.config("giant").is_err());
+    }
+}

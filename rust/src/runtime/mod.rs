@@ -1,0 +1,13 @@
+//! PJRT runtime: manifest-driven artifact loading and execution.
+//!
+//! Layer-3's bridge to the AOT-compiled Layer-2/1 compute. HLO text is the
+//! interchange format (see DESIGN.md §7 and python/compile/aot.py).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{
+    f32_literal, i8_literal, literal_for, param_literals, to_f32_scalar, to_f32_vec,
+    to_i32_vec, Engine, HostTensor,
+};
+pub use manifest::{ArtifactMeta, IoSpec, Manifest, ModelConfig, ParamMeta};

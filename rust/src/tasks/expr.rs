@@ -1,0 +1,172 @@
+//! Arithmetic expression engine: recursive-descent parser/evaluator with
+//! exact integer semantics — the reward verifier for Countdown and the
+//! generator substrate for MathChain.
+//!
+//! Grammar:  expr := term (('+'|'-') term)*
+//!           term := factor (('*'|'/') factor)*
+//!           factor := INT | '(' expr ')'
+//!
+//! Division is exact-only: `a / b` errors unless `b != 0 && a % b == 0`
+//! (Countdown's standard rule).
+
+#[derive(Debug, PartialEq)]
+pub enum ExprError {
+    Syntax(usize),
+    DivByZero,
+    Inexact,
+    Overflow,
+    Empty,
+}
+
+#[derive(Debug)]
+pub struct Parsed {
+    pub value: i64,
+    /// Every integer literal in source order (for Countdown's "use the
+    /// given numbers" check).
+    pub literals: Vec<i64>,
+}
+
+struct P<'a> {
+    b: &'a [u8],
+    i: usize,
+    literals: Vec<i64>,
+}
+
+impl<'a> P<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expr(&mut self) -> Result<i64, ExprError> {
+        let mut v = self.term()?;
+        loop {
+            match self.peek() {
+                Some(b'+') => {
+                    self.i += 1;
+                    let r = self.term()?;
+                    v = v.checked_add(r).ok_or(ExprError::Overflow)?;
+                }
+                Some(b'-') => {
+                    self.i += 1;
+                    let r = self.term()?;
+                    v = v.checked_sub(r).ok_or(ExprError::Overflow)?;
+                }
+                _ => return Ok(v),
+            }
+        }
+    }
+
+    fn term(&mut self) -> Result<i64, ExprError> {
+        let mut v = self.factor()?;
+        loop {
+            match self.peek() {
+                Some(b'*') => {
+                    self.i += 1;
+                    let r = self.factor()?;
+                    v = v.checked_mul(r).ok_or(ExprError::Overflow)?;
+                }
+                Some(b'/') => {
+                    self.i += 1;
+                    let r = self.factor()?;
+                    if r == 0 {
+                        return Err(ExprError::DivByZero);
+                    }
+                    if v % r != 0 {
+                        return Err(ExprError::Inexact);
+                    }
+                    v /= r;
+                }
+                _ => return Ok(v),
+            }
+        }
+    }
+
+    fn factor(&mut self) -> Result<i64, ExprError> {
+        match self.peek() {
+            Some(b'(') => {
+                self.i += 1;
+                let v = self.expr()?;
+                if self.peek() != Some(b')') {
+                    return Err(ExprError::Syntax(self.i));
+                }
+                self.i += 1;
+                Ok(v)
+            }
+            Some(c) if c.is_ascii_digit() => {
+                let start = self.i;
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.i += 1;
+                }
+                let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+                let v: i64 = s.parse().map_err(|_| ExprError::Overflow)?;
+                self.literals.push(v);
+                Ok(v)
+            }
+            _ => Err(ExprError::Syntax(self.i)),
+        }
+    }
+}
+
+/// Parse + evaluate an expression string (whitespace not allowed — the
+/// model vocabulary has no use for it in expressions).
+pub fn eval(src: &str) -> Result<Parsed, ExprError> {
+    if src.is_empty() {
+        return Err(ExprError::Empty);
+    }
+    let mut p = P { b: src.as_bytes(), i: 0, literals: Vec::new() };
+    let value = p.expr()?;
+    if p.i != p.b.len() {
+        return Err(ExprError::Syntax(p.i));
+    }
+    Ok(Parsed { value, literals: p.literals })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precedence() {
+        assert_eq!(eval("2+3*4").unwrap().value, 14);
+        assert_eq!(eval("(2+3)*4").unwrap().value, 20);
+        assert_eq!(eval("20-6/2").unwrap().value, 17);
+    }
+
+    #[test]
+    fn exact_division_only() {
+        assert_eq!(eval("12/4").unwrap().value, 3);
+        assert!(matches!(eval("7/2"), Err(ExprError::Inexact)));
+        assert!(matches!(eval("7/0"), Err(ExprError::DivByZero)));
+    }
+
+    #[test]
+    fn literals_recorded_in_order() {
+        let p = eval("(12+3)*4").unwrap();
+        assert_eq!(p.literals, vec![12, 3, 4]);
+    }
+
+    #[test]
+    fn syntax_errors() {
+        assert!(matches!(eval("2+"), Err(ExprError::Syntax(_))));
+        assert!(matches!(eval("(2+3"), Err(ExprError::Syntax(_))));
+        assert!(matches!(eval("2+3)"), Err(ExprError::Syntax(_))));
+        assert!(matches!(eval("a+1"), Err(ExprError::Syntax(_))));
+        assert!(matches!(eval(""), Err(ExprError::Empty)));
+    }
+
+    #[test]
+    fn nested_parens() {
+        assert_eq!(eval("((2+3)*(4-1))").unwrap().value, 15);
+    }
+
+    #[test]
+    fn left_associativity() {
+        assert_eq!(eval("10-3-2").unwrap().value, 5);
+        assert_eq!(eval("24/4/2").unwrap().value, 3);
+    }
+
+    #[test]
+    fn overflow_detected() {
+        assert!(matches!(eval("999999999*999999999*999999999"), Err(ExprError::Overflow)));
+    }
+}

@@ -1,0 +1,194 @@
+//! MathChain: the GSM8K stand-in (DESIGN.md §2). Multi-step arithmetic with
+//! explicit structure — `"((4+3)*2)-5=?"` — answered with a bare integer.
+//! Like GSM8K it is (a) multi-step, (b) binary-verifiable by answer
+//! extraction, (c) harder than Countdown (the model must *compute*, not
+//! just search over a small expression space) — preserving the paper's
+//! difficulty ordering Countdown -> GSM8K.
+
+use crate::rng::SplitMix64;
+use crate::tasks::{expr, GenProblem, GenTask, ProblemKey};
+
+pub struct MathChain {
+    /// Number of operators in the chain.
+    pub n_ops: usize,
+    pub max_num: i64,
+    /// Pretraining corpus uses chains of this many ops (shorter = weaker
+    /// base model; the fine-tuning/eval distribution uses `n_ops`).
+    pub pretrain_ops: usize,
+    /// Dense digit-distance shaping under the exact-match band.
+    pub shaped: bool,
+}
+
+impl MathChain {
+    pub fn fitting(s_prompt: usize) -> Self {
+        // "((9+12)*3)-7=?" is 14 chars; 3 ops needs ~18.
+        let n_ops = if s_prompt >= 20 { 3 } else { 2 };
+        MathChain { n_ops, max_num: 12, pretrain_ops: 1, shaped: true }
+    }
+
+    fn gen_chain_n(&self, rng: &mut SplitMix64, n_ops: usize) -> Option<(String, i64)> {
+        let ops = [b'+', b'-', b'*', b'/'];
+        let mut s = (1 + rng.below(self.max_num as u64)).to_string();
+        for _ in 0..n_ops {
+            let op = ops[rng.below(4) as usize] as char;
+            let n = 1 + rng.below(self.max_num as u64) as i64;
+            s = format!("({}){}{}", s, op, n);
+        }
+        // normalize redundant parens around a bare literal: "(4)+3" -> "4+3"
+        let s = if s.starts_with('(') {
+            // first group wraps a literal only when n_ops >= 1; expr::eval
+            // accepts the parens anyway — keep them, models see consistent
+            // structure.
+            s
+        } else {
+            s
+        };
+        let v = expr::eval(&s).ok()?.value;
+        if !(0..=999).contains(&v) {
+            return None;
+        }
+        Some((s, v))
+    }
+
+    fn gen_chain(&self, rng: &mut SplitMix64) -> Option<(String, i64)> {
+        self.gen_chain_n(rng, self.n_ops)
+    }
+}
+
+impl GenTask for MathChain {
+    fn name(&self) -> &'static str {
+        "mathchain"
+    }
+
+    fn sample(&self, rng: &mut SplitMix64) -> GenProblem {
+        loop {
+            if let Some((chain, answer)) = self.gen_chain(rng) {
+                let prompt = format!("{}=?", chain);
+                return GenProblem { prompt, key: ProblemKey::Math { answer } };
+            }
+        }
+    }
+
+    fn reward(&self, key: &ProblemKey, completion: &str) -> f32 {
+        let answer = match key {
+            ProblemKey::Math { answer } => *answer,
+            _ => return 0.0,
+        };
+        // extract the leading integer from the completion
+        let digits: String = completion.chars().take_while(|c| c.is_ascii_digit()).collect();
+        if digits.is_empty() {
+            return 0.0;
+        }
+        // reject trailing garbage other than nothing (EOS was stripped)
+        if completion.len() != digits.len() {
+            return match digits.parse::<i64>() {
+                Ok(v) if v == answer => 0.1, // right number, messy format
+                _ => 0.0,
+            };
+        }
+        match digits.parse::<i64>() {
+            Ok(v) if v == answer => 1.0,
+            Ok(v) if self.shaped => {
+                let dist = (v - answer).abs() as f32 / (answer.max(1)) as f32;
+                0.1 + 0.25 * (-dist).exp()
+            }
+            Ok(_) => 0.1,
+            Err(_) => 0.0,
+        }
+    }
+
+    fn supervised(&self, rng: &mut SplitMix64) -> (String, String) {
+        loop {
+            // curriculum mixture: mostly short chains (pretrain_ops), with a
+            // minority at the full task depth so the base model has SOME
+            // on-distribution competence (paper's bases are 0-48%).
+            let n = if rng.bernoulli(0.35) { self.n_ops } else { self.pretrain_ops };
+            if let Some((chain, answer)) = self.gen_chain_n(rng, n) {
+                return (format!("{}=?", chain), format!("{};", answer));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task() -> MathChain {
+        MathChain { n_ops: 2, max_num: 12, pretrain_ops: 2, shaped: false }
+    }
+
+    #[test]
+    fn problems_verify_and_fit() {
+        let t = task();
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..200 {
+            let p = t.sample(&mut rng);
+            assert!(p.prompt.len() <= 16, "prompt {:?} too long", p.prompt);
+            assert!(p.prompt.ends_with("=?"));
+            let chain = &p.prompt[..p.prompt.len() - 2];
+            let v = expr::eval(chain).unwrap().value;
+            if let ProblemKey::Math { answer } = p.key {
+                assert_eq!(v, answer);
+            }
+        }
+    }
+
+    #[test]
+    fn reward_exact_match_only() {
+        let t = task();
+        let key = ProblemKey::Math { answer: 42 };
+        assert_eq!(t.reward(&key, "42"), 1.0);
+        assert_eq!(t.reward(&key, "41"), 0.1);
+        assert_eq!(t.reward(&key, "42junk"), 0.1);
+        assert_eq!(t.reward(&key, "junk"), 0.0);
+        assert_eq!(t.reward(&key, ""), 0.0);
+    }
+
+    #[test]
+    fn shaped_reward_prefers_near_misses() {
+        let t = MathChain { shaped: true, ..task() };
+        let key = ProblemKey::Math { answer: 100 };
+        let near = t.reward(&key, "99");
+        let far = t.reward(&key, "5");
+        assert!(near > far, "{} vs {}", near, far);
+        assert_eq!(t.reward(&key, "100"), 1.0);
+    }
+
+    #[test]
+    fn supervised_pairs_consistent() {
+        let t = task();
+        let mut rng = SplitMix64::new(8);
+        for _ in 0..50 {
+            let (prompt, sol) = t.supervised(&mut rng);
+            let chain = &prompt[..prompt.len() - 2];
+            let v = expr::eval(chain).unwrap().value;
+            assert_eq!(format!("{};", v), sol);
+        }
+    }
+
+    #[test]
+    fn supervised_mixes_depths() {
+        let t = MathChain { n_ops: 2, max_num: 12, pretrain_ops: 1, shaped: true };
+        let mut rng = SplitMix64::new(9);
+        let mut deep = 0;
+        for _ in 0..200 {
+            let (prompt, _) = t.supervised(&mut rng);
+            // 2-op chains contain two operators
+            let ops = prompt.chars().filter(|c| "+-*/".contains(*c)).count();
+            if ops == 2 {
+                deep += 1;
+            }
+        }
+        assert!(deep > 30 && deep < 150, "deep={}", deep);
+    }
+
+    #[test]
+    fn three_op_variant() {
+        let t = MathChain::fitting(24);
+        assert_eq!(t.n_ops, 3);
+        let mut rng = SplitMix64::new(4);
+        let p = t.sample(&mut rng);
+        assert!(p.prompt.len() <= 24, "{:?}", p.prompt);
+    }
+}

@@ -1,0 +1,116 @@
+//! Task substrate: the paper's evaluation workloads, rebuilt synthetically
+//! (DESIGN.md §2 records each substitution).
+//!
+//! * [`countdown`] — the Countdown arithmetic-expression game (§4.1), with
+//!   a real parser/verifier as the RLVR reward.
+//! * [`mathchain`] — multi-step arithmetic word problems standing in for
+//!   GSM8K (binary-verifiable, multi-step, answer extraction).
+//! * [`sft`] — four synthetic classification tasks standing in for
+//!   SNLI / MNLI / RTE / SST-5 under the k-shot verbalizer protocol.
+//! * [`tokenizer`], [`expr`] — shared substrates.
+
+pub mod countdown;
+pub mod expr;
+pub mod mathchain;
+pub mod sft;
+pub mod tokenizer;
+
+use crate::rng::SplitMix64;
+
+/// A reasoning problem: the encoded prompt plus whatever the verifier needs.
+#[derive(Debug, Clone)]
+pub struct GenProblem {
+    pub prompt: String,
+    pub key: ProblemKey,
+}
+
+#[derive(Debug, Clone)]
+pub enum ProblemKey {
+    Countdown { nums: Vec<i64>, target: i64 },
+    Math { answer: i64 },
+}
+
+/// Reasoning task: generative rollouts scored by a binary-ish RLVR reward.
+pub trait GenTask: Send {
+    fn name(&self) -> &'static str;
+
+    /// Sample one problem. Deterministic in the rng state.
+    fn sample(&self, rng: &mut SplitMix64) -> GenProblem;
+
+    /// RLVR reward for a model completion (text up to EOS):
+    /// 1.0 = verified correct, 0.1 = well-formed but wrong (format shaping,
+    /// as in TinyZero/GRPO-Zero), 0.0 = malformed.
+    fn reward(&self, key: &ProblemKey, completion: &str) -> f32;
+
+    /// A supervised (prompt, solution) pair for pretraining the base model.
+    fn supervised(&self, rng: &mut SplitMix64) -> (String, String);
+}
+
+/// One classification example.
+#[derive(Debug, Clone)]
+pub struct ClsExample {
+    pub text: String,
+    pub label: usize,
+}
+
+/// SFT task: k-shot classification through verbalizer tokens (LM-BFF
+/// protocol, as in MeZO/QuZO §A.2).
+pub trait ClsTask: Send {
+    fn name(&self) -> &'static str;
+    fn n_classes(&self) -> usize;
+
+    /// Verbalizer token ids, one per class ('a'..'e').
+    fn verbalizers(&self) -> Vec<u8> {
+        (0..self.n_classes()).map(|c| tokenizer::tok('a') + c as u8).collect()
+    }
+
+    /// Sample one example. `train` selects the split (disjoint seeds).
+    fn sample(&self, rng: &mut SplitMix64, train: bool) -> ClsExample;
+}
+
+/// Instantiate a reasoning task by name, sized to the model's prompt budget.
+pub fn gen_task(name: &str, s_prompt: usize, t_dec: usize) -> anyhow::Result<Box<dyn GenTask>> {
+    Ok(match name {
+        "countdown" => Box::new(countdown::Countdown::fitting(s_prompt, t_dec)),
+        "mathchain" => Box::new(mathchain::MathChain::fitting(s_prompt)),
+        other => anyhow::bail!("unknown reasoning task {:?} (countdown|mathchain)", other),
+    })
+}
+
+/// Instantiate an SFT task by name.
+pub fn cls_task(name: &str) -> anyhow::Result<Box<dyn ClsTask>> {
+    Ok(match name {
+        "snli" => Box::new(sft::Snli),
+        "mnli" => Box::new(sft::Mnli),
+        "rte" => Box::new(sft::Rte),
+        "sst5" => Box::new(sft::Sst5),
+        other => anyhow::bail!("unknown SFT task {:?} (snli|mnli|rte|sst5)", other),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_factories() {
+        assert!(gen_task("countdown", 16, 12).is_ok());
+        assert!(gen_task("mathchain", 16, 12).is_ok());
+        assert!(gen_task("chess", 16, 12).is_err());
+        for t in ["snli", "mnli", "rte", "sst5"] {
+            assert!(cls_task(t).is_ok());
+        }
+        assert!(cls_task("cola").is_err());
+    }
+
+    #[test]
+    fn verbalizers_are_distinct_tokens() {
+        let t = cls_task("sst5").unwrap();
+        let v = t.verbalizers();
+        assert_eq!(v.len(), 5);
+        let mut u = v.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), 5);
+    }
+}

@@ -1,0 +1,280 @@
+//! Synthetic SFT classification tasks standing in for SNLI / MNLI / RTE /
+//! SST-5 (DESIGN.md §2). Each plants a rule a small char-level transformer
+//! can learn through attention, and follows the LM-BFF protocol the paper
+//! uses (§A.2): the example text ends with '>', and the model's next-token
+//! distribution at that position is scored over the verbalizer tokens
+//! 'a'..'e'. Pattern letters draw from 'f'-'p' so verbalizers never appear
+//! in the text.
+//!
+//! * SNLI-syn (3-way): hypothesis is a copy of the premise (entailment), a
+//!   one-letter corruption (neutral), or the reverse (contradiction).
+//! * MNLI-syn (3-way): same rule, longer strings and a shifted alphabet —
+//!   the "domain shift" analog.
+//! * RTE-syn (2-way): hypothesis letters all occur in the premise
+//!   (entailment) or at least one does not.
+//! * SST5-syn (5-way): letters carry hidden valence f..j = -2..+2; the
+//!   label is the bucketed mean valence of the sentence.
+
+use crate::rng::SplitMix64;
+use crate::tasks::{ClsExample, ClsTask};
+
+const SPLIT_SALT_TRAIN: u64 = 0x7261_696e;
+const SPLIT_SALT_EVAL: u64 = 0x6576_616c;
+
+fn split_rng(rng: &mut SplitMix64, train: bool) -> SplitMix64 {
+    // Derive a child stream so train/eval draws can never collide.
+    let salt = if train { SPLIT_SALT_TRAIN } else { SPLIT_SALT_EVAL };
+    SplitMix64::new(rng.next_u64() ^ salt)
+}
+
+fn rand_string(rng: &mut SplitMix64, alphabet: &[char], len: usize) -> String {
+    (0..len).map(|_| alphabet[rng.below(alphabet.len() as u64) as usize]).collect()
+}
+
+// ---------------------------------------------------------------------------
+
+/// SNLI-syn: copy / corrupt / reverse over 6-letter strings.
+pub struct Snli;
+
+const SNLI_ALPHA: &[char] = &['f', 'g', 'h', 'i', 'j', 'k'];
+
+fn nli_example(rng: &mut SplitMix64, alphabet: &[char], len: usize) -> ClsExample {
+    let premise = rand_string(rng, alphabet, len);
+    let label = rng.below(3) as usize;
+    let hypothesis = match label {
+        0 => premise.clone(), // entailment: exact copy
+        1 => {
+            // neutral: one position substituted with a different letter
+            let mut cs: Vec<char> = premise.chars().collect();
+            let pos = rng.below(len as u64) as usize;
+            loop {
+                let c = alphabet[rng.below(alphabet.len() as u64) as usize];
+                if c != cs[pos] {
+                    cs[pos] = c;
+                    break;
+                }
+            }
+            cs.into_iter().collect()
+        }
+        _ => premise.chars().rev().collect(), // contradiction: reversed
+    };
+    // Degenerate cases: a palindromic premise makes "reversed" == "copy".
+    // Regenerate on collision so labels stay well-defined.
+    if label == 2 && hypothesis == premise {
+        return nli_example(rng, alphabet, len);
+    }
+    ClsExample { text: format!("{}|{}>", premise, hypothesis), label }
+}
+
+impl ClsTask for Snli {
+    fn name(&self) -> &'static str {
+        "snli"
+    }
+    fn n_classes(&self) -> usize {
+        3
+    }
+    fn sample(&self, rng: &mut SplitMix64, train: bool) -> ClsExample {
+        let mut r = split_rng(rng, train);
+        nli_example(&mut r, SNLI_ALPHA, 6)
+    }
+}
+
+/// MNLI-syn: the same NLI rule under a domain shift (longer strings,
+/// disjoint alphabet).
+pub struct Mnli;
+
+const MNLI_ALPHA: &[char] = &['k', 'l', 'm', 'n', 'o', 'p'];
+
+impl ClsTask for Mnli {
+    fn name(&self) -> &'static str {
+        "mnli"
+    }
+    fn n_classes(&self) -> usize {
+        3
+    }
+    fn sample(&self, rng: &mut SplitMix64, train: bool) -> ClsExample {
+        let mut r = split_rng(rng, train);
+        nli_example(&mut r, MNLI_ALPHA, 8)
+    }
+}
+
+/// RTE-syn (2-way): subset containment.
+pub struct Rte;
+
+const RTE_ALPHA: &[char] = &['f', 'g', 'h', 'i', 'j', 'k', 'l', 'm', 'n', 'o', 'p'];
+
+impl ClsTask for Rte {
+    fn name(&self) -> &'static str {
+        "rte"
+    }
+    fn n_classes(&self) -> usize {
+        2
+    }
+    fn sample(&self, rng: &mut SplitMix64, train: bool) -> ClsExample {
+        let mut r = split_rng(rng, train);
+        let premise = rand_string(&mut r, RTE_ALPHA, 8);
+        let pset: Vec<char> = premise.chars().collect();
+        let label = r.below(2) as usize;
+        let hyp: String = if label == 0 {
+            // entailment: letters drawn from the premise
+            (0..4).map(|_| pset[r.below(8) as usize]).collect()
+        } else {
+            // not-entailment: at least one letter outside the premise
+            let outside: Vec<char> =
+                RTE_ALPHA.iter().copied().filter(|c| !pset.contains(c)).collect();
+            if outside.is_empty() {
+                // premise covered the alphabet (rare): resample
+                return self.sample(rng, train);
+            }
+            let mut h: Vec<char> = (0..4).map(|_| pset[r.below(8) as usize]).collect();
+            let pos = r.below(4) as usize;
+            h[pos] = outside[r.below(outside.len() as u64) as usize];
+            h.into_iter().collect()
+        };
+        ClsExample { text: format!("{}|{}>", premise, hyp), label }
+    }
+}
+
+/// SST5-syn (5-way): bucketed mean valence of an 8-letter sentence over the
+/// hidden lexicon f..j = -2..+2.
+pub struct Sst5;
+
+const SST_ALPHA: &[char] = &['f', 'g', 'h', 'i', 'j'];
+
+fn valence(c: char) -> i32 {
+    (c as i32) - ('h' as i32) // f=-2 g=-1 h=0 i=1 j=2
+}
+
+/// Label rule: bucketed mean valence — deterministic in the text.
+pub fn sst5_label(text: &str) -> usize {
+    let n = text.len().max(1);
+    let mean = text.chars().map(valence).sum::<i32>() as f32 / n as f32;
+    if mean < -1.0 {
+        0
+    } else if mean < -0.25 {
+        1
+    } else if mean <= 0.25 {
+        2
+    } else if mean <= 1.0 {
+        3
+    } else {
+        4
+    }
+}
+
+impl ClsTask for Sst5 {
+    fn name(&self) -> &'static str {
+        "sst5"
+    }
+    fn n_classes(&self) -> usize {
+        5
+    }
+    fn sample(&self, rng: &mut SplitMix64, train: bool) -> ClsExample {
+        let mut r = split_rng(rng, train);
+        // Class-balanced sampling: draw a target class, generate letters
+        // biased toward its valence, keep the string's TRUE label (the rule
+        // stays a deterministic function of the text).
+        let target = r.below(5) as i64; // 0..4 -> center valence -2..2
+        let center = target - 2;
+        loop {
+            let text: String = (0..8)
+                .map(|_| {
+                    let jitter = r.below(3) as i64 - 1; // -1, 0, +1
+                    let v = (center + jitter).clamp(-2, 2);
+                    SST_ALPHA[(v + 2) as usize]
+                })
+                .collect();
+            let label = sst5_label(&text);
+            if label == target as usize {
+                return ClsExample { text: format!("{}>", text), label };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::tokenizer;
+
+    fn check_task(t: &dyn ClsTask, min_share: f64) {
+        let mut rng = SplitMix64::new(77);
+        let mut counts = vec![0usize; t.n_classes()];
+        for _ in 0..600 {
+            let ex = t.sample(&mut rng, true);
+            assert!(ex.label < t.n_classes());
+            assert!(ex.text.ends_with('>'), "{:?}", ex.text);
+            // all chars tokenizable
+            let _ = tokenizer::encode(&ex.text);
+            counts[ex.label] += 1;
+        }
+        for (c, &n) in counts.iter().enumerate() {
+            assert!(
+                n as f64 / 600.0 > min_share,
+                "{}: class {} underrepresented ({}/600)",
+                t.name(),
+                c,
+                n
+            );
+        }
+    }
+
+    #[test]
+    fn all_tasks_balanced_and_tokenizable() {
+        check_task(&Snli, 0.15);
+        check_task(&Mnli, 0.15);
+        check_task(&Rte, 0.3);
+        check_task(&Sst5, 0.12); // class-balanced by construction
+    }
+
+    #[test]
+    fn snli_rule_is_learnable_from_text() {
+        // The label must be a deterministic function of the text.
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..300 {
+            let ex = Snli.sample(&mut rng, true);
+            let body = ex.text.trim_end_matches('>');
+            let (p, h) = body.split_once('|').unwrap();
+            let expect = if p == h {
+                0
+            } else if p.chars().rev().collect::<String>() == h {
+                2
+            } else {
+                1
+            };
+            assert_eq!(ex.label, expect, "{:?}", ex.text);
+        }
+    }
+
+    #[test]
+    fn rte_rule_consistent() {
+        let mut rng = SplitMix64::new(6);
+        for _ in 0..300 {
+            let ex = Rte.sample(&mut rng, true);
+            let body = ex.text.trim_end_matches('>');
+            let (p, h) = body.split_once('|').unwrap();
+            let contained = h.chars().all(|c| p.contains(c));
+            assert_eq!(ex.label == 0, contained, "{:?}", ex.text);
+        }
+    }
+
+    #[test]
+    fn sst5_label_matches_valence() {
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..300 {
+            let ex = Sst5.sample(&mut rng, true);
+            let body = ex.text.trim_end_matches('>');
+            assert_eq!(ex.label, sst5_label(body), "{:?}", ex.text);
+        }
+    }
+
+    #[test]
+    fn train_eval_splits_differ() {
+        let t = Snli;
+        let mut a = SplitMix64::new(9);
+        let mut b = SplitMix64::new(9);
+        let train: Vec<String> = (0..20).map(|_| t.sample(&mut a, true).text).collect();
+        let eval: Vec<String> = (0..20).map(|_| t.sample(&mut b, false).text).collect();
+        assert_ne!(train, eval);
+    }
+}

@@ -1,0 +1,94 @@
+//! Char-level tokenizer shared by every task.
+//!
+//! The 48-symbol vocabulary is the contract with the L2 model (configs.py
+//! VOCAB = 48): digits, arithmetic operators, separators, and a 16-letter
+//! alphabet 'a'-'p' used by the synthetic SFT tasks ('a'-'e' are reserved
+//! as verbalizer tokens, patterns draw from 'f'-'p').
+
+pub const PAD: u8 = 0;
+pub const VOCAB: usize = 48;
+/// End-of-sequence marker: ';'.
+pub const EOS_CHAR: char = ';';
+
+const CHARS: &[char] = &[
+    '\0', ' ', '0', '1', '2', '3', '4', '5', '6', '7', '8', '9', // 0-11
+    '+', '-', '*', '/', '=', '(', ')', ',', ';', ':', '?', '.', // 12-23
+    'a', 'b', 'c', 'd', 'e', 'f', 'g', 'h', // 24-31
+    'i', 'j', 'k', 'l', 'm', 'n', 'o', 'p', // 32-39
+    '|', '>', '<', // 40-42
+];
+
+/// Token id of a char; panics on out-of-vocabulary input (task generators
+/// only emit in-vocab chars; OOV here is always a bug).
+pub fn tok(c: char) -> u8 {
+    match CHARS.iter().position(|&x| x == c) {
+        Some(i) => i as u8,
+        None => panic!("char {:?} not in the QES vocabulary", c),
+    }
+}
+
+/// Encode a string to token ids.
+pub fn encode(s: &str) -> Vec<u8> {
+    s.chars().map(tok).collect()
+}
+
+/// Decode ids to a string; PAD renders as nothing, unknown ids as '#'.
+pub fn decode(ids: &[i32]) -> String {
+    ids.iter()
+        .filter(|&&i| i != PAD as i32)
+        .map(|&i| {
+            if (i as usize) < CHARS.len() {
+                CHARS[i as usize]
+            } else {
+                '#'
+            }
+        })
+        .collect()
+}
+
+/// Decode up to (and excluding) the first EOS token.
+pub fn decode_to_eos(ids: &[i32]) -> String {
+    let eos = tok(EOS_CHAR) as i32;
+    let end = ids.iter().position(|&i| i == eos).unwrap_or(ids.len());
+    decode(&ids[..end])
+}
+
+pub const EOS: u8 = 20; // tok(';'), const for hot paths
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_fits_model() {
+        assert!(CHARS.len() <= VOCAB);
+        assert_eq!(tok(EOS_CHAR), EOS);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = "12+3*(45/9)=?abcp|><";
+        let ids: Vec<i32> = encode(s).iter().map(|&b| b as i32).collect();
+        assert_eq!(decode(&ids), s);
+    }
+
+    #[test]
+    fn decode_to_eos_stops() {
+        let ids: Vec<i32> = encode("42;10+3").iter().map(|&b| b as i32).collect();
+        assert_eq!(decode_to_eos(&ids), "42");
+    }
+
+    #[test]
+    fn all_chars_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for &c in CHARS {
+            assert!(seen.insert(c), "duplicate {:?}", c);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not in the QES vocabulary")]
+    fn oov_panics() {
+        tok('Z');
+    }
+}

@@ -1,0 +1,126 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Unknown flags are an error so typos don't silently default.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> anyhow::Result<Self> {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    a.flags
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else {
+                    // value-taking if next token exists and isn't a flag
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            a.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            a.flags.insert(stripped.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    /// Declare a known flag (for the final unknown-flag check) and fetch it.
+    pub fn opt(&mut self, key: &str) -> Option<String> {
+        self.known.push(key.to_string());
+        self.flags.get(key).cloned()
+    }
+
+    pub fn get_or(&mut self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&mut self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{} expects an integer, got {:?}", key, v)),
+        }
+    }
+
+    pub fn get_f32(&mut self, key: &str, default: f32) -> anyhow::Result<f32> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{} expects a float, got {:?}", key, v)),
+        }
+    }
+
+    pub fn get_u64(&mut self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{} expects an integer, got {:?}", key, v)),
+        }
+    }
+
+    pub fn get_bool(&mut self, key: &str) -> bool {
+        matches!(self.opt(key).as_deref(), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Call after all opt()/get_*() declarations: errors on unknown flags.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        for k in self.flags.keys() {
+            if !self.known.contains(k) {
+                anyhow::bail!("unknown flag --{}", k);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let mut a = parse(&["exp", "table2", "--gens", "50", "--fast", "--x=1.5"]);
+        assert_eq!(a.positional, vec!["exp", "table2"]);
+        assert_eq!(a.get_usize("gens", 0).unwrap(), 50);
+        assert!(a.get_bool("fast"));
+        assert_eq!(a.get_f32("x", 0.0).unwrap(), 1.5);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        let mut a = parse(&["--typo", "3"]);
+        let _ = a.get_usize("gens", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = parse(&[]);
+        assert_eq!(a.get_or("size", "nano"), "nano");
+        assert_eq!(a.get_f32("sigma", 0.01).unwrap(), 0.01);
+    }
+}

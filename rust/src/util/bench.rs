@@ -1,0 +1,110 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! Usage inside a `harness = false` bench target:
+//!
+//! ```ignore
+//! let mut b = Bench::new("delta_gen");
+//! b.run("micro/d=221k", || { ... });
+//! b.report();
+//! ```
+//!
+//! Each case is warmed up, then timed over enough iterations to exceed a
+//! minimum measurement window; mean / p50 / p95 per-iteration times are
+//! reported in a table.
+
+use std::time::{Duration, Instant};
+
+pub struct CaseResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+pub struct Bench {
+    pub group: String,
+    pub min_window: Duration,
+    pub warmup: Duration,
+    pub results: Vec<CaseResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        Bench {
+            group: group.to_string(),
+            min_window: Duration::from_millis(400),
+            warmup: Duration::from_millis(100),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which should perform ONE iteration of the workload.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &CaseResult {
+        // Warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Estimate a single-iteration time to size the batch.
+        let e0 = Instant::now();
+        f();
+        let est = e0.elapsed().max(Duration::from_nanos(50));
+        let target_iters =
+            (self.min_window.as_nanos() / est.as_nanos()).clamp(10, 100_000) as u64;
+
+        let mut samples: Vec<Duration> = Vec::with_capacity(target_iters as usize);
+        for _ in 0..target_iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        samples.sort_unstable();
+        let total: Duration = samples.iter().sum();
+        let res = CaseResult {
+            name: name.to_string(),
+            iters: target_iters,
+            mean: total / target_iters as u32,
+            p50: samples[samples.len() / 2],
+            p95: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        };
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<40} {:>10} {:>12} {:>12} {:>12}",
+            "case", "iters", "mean", "p50", "p95"
+        );
+        for r in &self.results {
+            println!(
+                "{:<40} {:>10} {:>12} {:>12} {:>12}",
+                r.name,
+                r.iters,
+                fmt_dur(r.mean),
+                fmt_dur(r.p50),
+                fmt_dur(r.p95)
+            );
+        }
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{} ns", ns)
+    } else if ns < 1_000_000 {
+        format!("{:.2} us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

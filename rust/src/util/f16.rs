@@ -1,0 +1,145 @@
+//! IEEE-754 binary16 conversion (no `half` crate offline).
+//!
+//! The paper's Full-Residual oracle stores the error state in FP16
+//! (Algorithm 1, line 3); storing residuals as `u16` bits keeps our Table 8
+//! memory accounting byte-exact with the paper's.
+
+/// f32 -> f16 bits, round-to-nearest-even, with overflow to ±inf and
+/// gradual underflow to subnormals.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // inf / nan
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | m;
+    }
+    // unbiased exponent
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e >= -14 {
+        // normal half
+        let half_exp = ((e + 15) as u16) << 10;
+        let mut half_mant = (mant >> 13) as u16;
+        // round to nearest even on the 13 dropped bits
+        let rest = mant & 0x1fff;
+        if rest > 0x1000 || (rest == 0x1000 && (half_mant & 1) == 1) {
+            let r = (half_exp | half_mant).wrapping_add(1);
+            return sign | r; // mantissa overflow carries into exponent correctly
+        }
+        half_mant &= 0x3ff;
+        return sign | half_exp | half_mant;
+    }
+    if e >= -24 {
+        // subnormal half
+        let shift = (-14 - e) as u32 + 13;
+        let full = mant | 0x0080_0000; // implicit leading 1
+        let half_mant = (full >> shift) as u16;
+        let rest = full & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = if rest > halfway || (rest == halfway && (half_mant & 1) == 1) {
+            half_mant + 1
+        } else {
+            half_mant
+        };
+        return sign | rounded;
+    }
+    sign // underflow to zero
+}
+
+/// f16 bits -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut m = mant;
+            let mut e = -14i32;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            sign | (((e + 127) as u32) << 23) | (m << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn exact_values() {
+        for &(f, h) in &[
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff), // f16 max
+        ] {
+            assert_eq!(f32_to_f16_bits(f), h, "f={}", f);
+            assert_eq!(f16_bits_to_f32(h), f, "h={:#06x}", h);
+        }
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert_eq!(f32_to_f16_bits(1e6), 0x7c00);
+        assert!(f16_bits_to_f32(0x7c00).is_infinite());
+    }
+
+    #[test]
+    fn nan_preserved() {
+        let h = f32_to_f16_bits(f32::NAN);
+        assert!(f16_bits_to_f32(h).is_nan());
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        let tiny = 1.0f32 / 65536.0; // 2^-16: comfortably subnormal in f16
+        let h = f32_to_f16_bits(tiny);
+        assert!(h > 0 && h < 0x0400, "h={:#06x}", h);
+        let back = f16_bits_to_f32(h);
+        assert!((back - tiny).abs() / tiny < 0.01, "back={}", back);
+    }
+
+    #[test]
+    fn roundtrip_error_within_eps() {
+        // |x - f16(x)| <= 2^-11 * |x| for normal range
+        prop_check("f16 roundtrip relative error", 300, |g| {
+            let x = g.f32_in(-100.0, 100.0);
+            let back = f16_bits_to_f32(f32_to_f16_bits(x));
+            let tol = x.abs() * (1.0 / 2048.0) + 1e-7;
+            if (x - back).abs() > tol {
+                return Err(format!("x={} back={}", x, back));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn residual_range_is_representable() {
+        // QES residuals live in (-1, 1); f16 resolution there is <= 2^-11.
+        for i in 0..2000 {
+            let x = (i as f32 / 1000.0) - 1.0;
+            let back = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert!((x - back).abs() <= 0.0005, "x={} back={}", x, back);
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Tiny property-testing harness (proptest is not available offline).
+//!
+//! ```ignore
+//! prop_check("gate never exceeds range", 200, |g| {
+//!     let v: Vec<i8> = g.vec_i8(100, -7, 7);
+//!     ...
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure the failing case's seed is printed so it can be replayed with
+//! `Gen::from_seed(seed)`.
+
+use crate::rng::SplitMix64;
+
+/// Input generator handed to each property iteration.
+pub struct Gen {
+    pub rng: SplitMix64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn from_seed(seed: u64) -> Self {
+        Gen { rng: SplitMix64::new(seed), seed }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + (self.rng.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + (self.rng.next_u64() % ((hi - lo + 1) as u64)) as i64
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.uniform01() * (hi - lo)
+    }
+
+    pub fn normal(&mut self, std: f32) -> f32 {
+        self.rng.normal() * std
+    }
+
+    pub fn vec_i8(&mut self, n: usize, lo: i8, hi: i8) -> Vec<i8> {
+        (0..n).map(|_| self.i64_in(lo as i64, hi as i64) as i8).collect()
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+}
+
+/// Run `prop` for `cases` random inputs; panic with the seed on failure.
+pub fn prop_check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        // Deterministic but well-spread seeds so failures replay exactly.
+        let seed = 0x9e37_79b9_7f4a_7c15u64
+            .wrapping_mul(case + 1)
+            .wrapping_add(0xdead_beef);
+        let mut g = Gen::from_seed(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {:?} failed on case {} (replay with Gen::from_seed({:#x})): {}",
+                name, case, seed, msg
+            );
+        }
+    }
+}

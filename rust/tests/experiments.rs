@@ -1,0 +1,66 @@
+//! Experiment-harness tests: the fig3 toy invariants and the memory table
+//! accounting identities — fast checks that the paper's §5 claims hold in
+//! the shipped drivers, not just in unit tests.
+
+use qes::model::ParamStore;
+use qes::opt::{EsHyper, LatticeOptimizer, QesFullResidual, QuzoOptimizer, SeedReplayQes};
+use qes::quant::Format;
+use qes::runtime::Manifest;
+use qes::util::args::Args;
+
+#[test]
+fn fig3_toy_invariants_hold() {
+    // fig3::run() itself asserts stagnation, |e| <= Delta/2 and the
+    // half-grid-step tracking bound; a failure here means §5 is violated.
+    let mut args = Args::parse(["--steps".to_string(), "300".to_string()]).unwrap();
+    qes::exp::fig3::run(&mut args).unwrap();
+    assert!(std::path::Path::new("results/fig3.csv").exists());
+}
+
+#[test]
+fn memory_accounting_identities() {
+    let man = Manifest::load("artifacts/manifest.json").unwrap();
+    for size in ["nano", "micro"] {
+        let q4 = ParamStore::from_manifest(&man, size, Format::Int4).unwrap();
+        let q8 = ParamStore::from_manifest(&man, size, Format::Int8).unwrap();
+        let d = q4.lattice_dim() as u64;
+        // packed INT4 is exactly d/2 bytes lighter than INT8
+        assert_eq!(q8.weight_bytes() - q4.weight_bytes(), d / 2);
+        // full-residual state = 2 bytes per lattice param (FP16)
+        let full = QesFullResidual::new(d as usize, 7, EsHyper::default());
+        assert_eq!(full.state_bytes(), 2 * d);
+        // quzo is stateless
+        assert_eq!(QuzoOptimizer::new(d as usize, 7, EsHyper::default()).state_bytes(), 0);
+        // replay state is O(K * pop), independent of d
+        let hyper = EsHyper { pairs: 25, k_window: 50, ..Default::default() };
+        let mut replay = SeedReplayQes::new(d as usize, 7, hyper.clone());
+        let mut store = q4.clone();
+        let mut rng = qes::rng::SplitMix64::new(4);
+        for _ in 0..hyper.k_window {
+            let spec = qes::opt::PopulationSpec {
+                gen_seed: rng.next_u64(),
+                pairs: hyper.pairs,
+                sigma: 0.01,
+            };
+            replay.update(&mut store, &spec, &vec![0.0; spec.n_members()]).unwrap();
+        }
+        let state = replay.state_bytes();
+        assert!(state < 32_000, "replay state {} not KB-scale", state);
+        // and the SAME bound must hold for the much larger model — the
+        // defining property: state independent of d.
+        if size == "micro" {
+            let nano_d = man.config("nano").unwrap().lattice_params;
+            assert_ne!(nano_d, d as usize);
+        }
+    }
+}
+
+#[test]
+fn table8_runs_and_writes_results() {
+    let mut args = Args::parse(["--sizes".to_string(), "nano".to_string()]).unwrap();
+    args.positional.push("table8".to_string());
+    qes::exp::table8::run(&mut args).unwrap();
+    let md = std::fs::read_to_string("results/table8.md").unwrap();
+    assert!(md.contains("QES STATE"));
+    assert!(md.contains("NANO") || md.contains("nano"));
+}

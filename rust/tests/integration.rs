@@ -1,0 +1,220 @@
+//! Integration tests: the full pretrain -> quantize -> fine-tune pipeline
+//! over real PJRT engines (nano model; artifacts must be built).
+
+use qes::coordinator::{
+    eval_problems, finetune_gen, pretrain_gen, EngineSet, FinetuneCfg, GenBatch, LmBatch,
+    PretrainCfg, Session, Variant, WorkerPool,
+};
+use qes::model::{checkpoint, init::init_fp, ParamStore};
+use qes::opt::{apply_perturbation, EsHyper, PopulationSpec};
+use qes::quant::Format;
+use qes::rng::SplitMix64;
+use qes::runtime::Manifest;
+use qes::tasks::gen_task;
+
+fn manifest() -> Manifest {
+    Manifest::load("artifacts/manifest.json").expect("run `make artifacts` first")
+}
+
+fn fp_store(man: &Manifest, seed: u64) -> ParamStore {
+    let mut s = ParamStore::from_manifest(man, "nano", Format::Fp32).unwrap();
+    init_fp(&mut s, seed);
+    s
+}
+
+#[test]
+fn loss_is_near_uniform_at_random_init() {
+    let man = manifest();
+    let store = fp_store(&man, 5);
+    let session = Session::new(&man, "nano", Format::Fp32, EngineSet {
+        loss: true,
+        ..Default::default()
+    })
+    .unwrap();
+    let task = gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec).unwrap();
+    let mut rng = SplitMix64::new(9);
+    let pairs: Vec<(String, String)> =
+        (0..session.cfg.b_train).map(|_| task.supervised(&mut rng)).collect();
+    let batch = LmBatch::build(&session.cfg, &pairs);
+    let (loss, acc) = session.lm_loss(&store, None, &batch).unwrap();
+    // CE close to ln(48) = 3.87 at (near-)random init
+    assert!((loss - 48f32.ln()).abs() < 1.0, "loss {}", loss);
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn pretraining_reduces_loss_and_quantization_preserves_it() {
+    let man = manifest();
+    let mut store = fp_store(&man, 6);
+    let session = Session::new(&man, "nano", Format::Fp32, EngineSet::pretrain()).unwrap();
+    let task = gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec).unwrap();
+    let mut rng = SplitMix64::new(3);
+    let pairs: Vec<(String, String)> =
+        (0..session.cfg.b_train).map(|_| task.supervised(&mut rng)).collect();
+    let batch = LmBatch::build(&session.cfg, &pairs);
+    let (loss0, _) = session.lm_loss(&store, None, &batch).unwrap();
+
+    let cfg = PretrainCfg { steps: 60, lr: 3e-3, seed: 1, ste_qmax: None, verbose: false };
+    pretrain_gen(&session, task.as_ref(), &mut store, &cfg).unwrap();
+    let (loss1, _) = session.lm_loss(&store, None, &batch).unwrap();
+    assert!(loss1 < loss0 - 0.5, "pretraining didn't learn: {} -> {}", loss0, loss1);
+
+    // INT8 quantization must roughly preserve the loss; INT4 may cost more
+    // but must stay in the same ballpark.
+    let q8 = ParamStore::quantize_from(&store, &man, Format::Int8, None).unwrap();
+    let s8 = Session::new(&man, "nano", Format::Int8, EngineSet {
+        loss: true,
+        ..Default::default()
+    })
+    .unwrap();
+    let (loss8, _) = s8.lm_loss(&q8, None, &batch).unwrap();
+    assert!((loss8 - loss1).abs() < 0.3, "INT8 loss drift: {} vs {}", loss8, loss1);
+
+    let q4 = ParamStore::quantize_from(&store, &man, Format::Int4, None).unwrap();
+    let (loss4, _) = s8_like(&man, Format::Int4).lm_loss(&q4, None, &batch).unwrap();
+    assert!(loss4 < loss0, "INT4 destroyed the model: {} vs init {}", loss4, loss0);
+}
+
+fn s8_like(man: &Manifest, fmt: Format) -> Session {
+    Session::new(man, "nano", fmt, EngineSet { loss: true, ..Default::default() }).unwrap()
+}
+
+#[test]
+fn generation_deterministic_across_sessions() {
+    let man = manifest();
+    let fp = fp_store(&man, 8);
+    let q = ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap();
+    let task = gen_task("countdown", 16, 12).unwrap();
+    let problems = eval_problems(task.as_ref(), 8, 1);
+
+    let mk = || Session::new(&man, "nano", Format::Int4, EngineSet::gen_only()).unwrap();
+    let s1 = mk();
+    let b = GenBatch::build(&s1.cfg, problems.clone());
+    let a = s1.generate(&q, None, &b, 0.0, None).unwrap();
+    let s2 = mk();
+    let c = s2.generate(&q, None, &b, 0.0, None).unwrap();
+    assert_eq!(a, c, "greedy decode must be deterministic across engines");
+}
+
+#[test]
+fn perturbed_rollouts_match_between_inline_and_pool_topology() {
+    // The same (gen_seed, member) must produce identical rewards whether
+    // evaluated inline or on a 2-worker pool — the determinism Algorithm 2
+    // relies on across process topologies.
+    let man = manifest();
+    let fp = fp_store(&man, 12);
+    let q = ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap();
+    let session = Session::new(&man, "nano", Format::Int4, EngineSet::gen_only()).unwrap();
+    let task = gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec).unwrap();
+    let problems = eval_problems(task.as_ref(), session.cfg.b_gen, 4);
+    let batch = GenBatch::build(&session.cfg, problems);
+    let spec = PopulationSpec { gen_seed: 77, pairs: 2, sigma: 0.05 };
+
+    // inline
+    let mut inline = vec![0.0f32; 4];
+    for m in 0..4 {
+        inline[m] = qes::coordinator::rollout::eval_member_gen(
+            &session, task.as_ref(), &q, &spec, m, &batch, 0.0, 7,
+        )
+        .unwrap();
+    }
+
+    // pool with 2 workers
+    let pool = WorkerPool::spawn(
+        2,
+        "artifacts/manifest.json",
+        "nano",
+        Format::Int4,
+        Some("countdown"),
+        EngineSet::gen_only(),
+    )
+    .unwrap();
+    let snapshot = std::sync::Arc::new(q.clone());
+    let ab = std::sync::Arc::new(batch);
+    let jobs = vec![
+        qes::coordinator::Job::EvalGen {
+            snapshot: snapshot.clone(),
+            gen_seed: 77,
+            pairs: 2,
+            sigma: 0.05,
+            members: vec![0, 2],
+            batch: ab.clone(),
+            tau: 0.0,
+        },
+        qes::coordinator::Job::EvalGen {
+            snapshot,
+            gen_seed: 77,
+            pairs: 2,
+            sigma: 0.05,
+            members: vec![1, 3],
+            batch: ab,
+            tau: 0.0,
+        },
+    ];
+    let mut pooled = vec![0.0f32; 4];
+    for r in pool.run_round(jobs, 4).unwrap() {
+        pooled[r.member] = r.reward.unwrap();
+    }
+    assert_eq!(inline, pooled, "pool topology changed rewards");
+}
+
+#[test]
+fn finetune_smoke_all_variants_respect_lattice_and_log() {
+    let man = manifest();
+    let fp = fp_store(&man, 20);
+    let q = ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap();
+    let session = Session::new(&man, "nano", Format::Int4, EngineSet::gen_only()).unwrap();
+    let task = gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec).unwrap();
+    for variant in [Variant::Qes, Variant::QesFullResidual, Variant::Quzo] {
+        let mut store = q.clone();
+        let cfg = FinetuneCfg {
+            hyper: EsHyper { sigma: 0.05, alpha: 0.3, gamma: 0.9, pairs: 2, k_window: 3 },
+            gens: 3,
+            tau: 0.0,
+            batches_per_gen: 1,
+            train_pool: 32,
+            eval_every: 0,
+            eval_n: 8,
+            seed: 5,
+            verbose: false,
+        };
+        let log = finetune_gen(&session, task.as_ref(), &mut store, variant, &cfg, None).unwrap();
+        assert_eq!(log.entries.len(), 3);
+        assert!(log.entries.iter().all(|e| e.rollout_ms > 0.0));
+        for t in store.lattice_i8() {
+            assert!(t.iter().all(|&v| (-7..=7).contains(&v)));
+        }
+        // CSV round-trips through the log
+        let csv = log.to_csv();
+        assert!(csv.lines().count() == 4, "csv:\n{}", csv);
+    }
+}
+
+#[test]
+fn perturbation_override_changes_rollout_but_not_store() {
+    let man = manifest();
+    let fp = fp_store(&man, 30);
+    let q = ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap();
+    let before: Vec<i8> = q.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+    let spec = PopulationSpec { gen_seed: 3, pairs: 1, sigma: 0.3 };
+    let overrides = apply_perturbation(&q, &spec, 0, 7);
+    let after: Vec<i8> = q.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+    assert_eq!(before, after, "perturbation must not mutate the store");
+    let flat: Vec<i8> = overrides.iter().flat_map(|t| t.iter().copied()).collect();
+    assert_ne!(before, flat, "override must differ at sigma=0.3");
+}
+
+#[test]
+fn checkpoint_survives_finetuning_roundtrip() {
+    let man = manifest();
+    let fp = fp_store(&man, 40);
+    let q = ParamStore::quantize_from(&fp, &man, Format::W8A8, None).unwrap();
+    let dir = std::env::temp_dir().join("qes_integration");
+    let p = dir.join("w8a8.ckpt");
+    checkpoint::save(&q, &p).unwrap();
+    let q2 = checkpoint::load(&man, &p).unwrap();
+    assert_eq!(q2.format, Format::W8A8);
+    let a: Vec<i8> = q.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+    let b: Vec<i8> = q2.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+    assert_eq!(a, b);
+}
