@@ -1,0 +1,189 @@
+"""Emit ``artifacts/manifest.json`` WITHOUT lowering HLO (no jax needed).
+
+``aot.py`` is the full pipeline: it lowers every exported function to HLO
+text and writes the manifest alongside. But the manifest alone — model
+configs, per-format parameter layouts, and per-artifact I/O specs — is a
+pure function of ``configs.py`` + ``model.py``'s layout rules, and the Rust
+crate's entire optimizer/test suite needs only the manifest (the PJRT
+engines additionally need the ``.hlo.txt`` files, and gate themselves off
+when those are absent).
+
+This script derives the identical manifest schema by hand so the Rust
+tier-1 tests can run on a box without jax. Keep the layout rules here in
+lockstep with ``model.py``:
+
+* ``param_specs`` / ``flat_args_for`` — parameter order and quantized
+  (q, s) splitting;
+* ``example_data_args`` — the data-input specs per exported function;
+* output shapes — gen: ``i32[B,T]``; loss: three f32 scalars;
+  cls: two f32 scalars + ``f32[B,8]`` scores; grad: f32 scalar + one
+  gradient per flat fp arg.
+
+Usage:  python -m compile.manifest_only --out-dir ../rust/artifacts
+"""
+
+import argparse
+import json
+import os
+import sys
+
+from .configs import CONFIGS
+
+FORMATS = ("wq", "w8a8", "fp")
+FNS = ("gen", "loss", "cls")  # + "grad" for fp
+N_CLS = 8  # class-token slots in the cls artifact (mirrors model.py)
+
+
+def param_specs(cfg):
+    """(name, shape, kind, init) in canonical order — mirrors model.py."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    std = 0.06
+    pos_rows = cfg.s_total if cfg.s_total > cfg.s_train else cfg.s_train
+    specs = [
+        ("tok_emb", (v, d), "fp", ("normal", std)),
+        ("pos_emb", (pos_rows, d), "fp", ("normal", std)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        specs += [
+            (p + "ln1.g", (d,), "fp", ("ones",)),
+            (p + "ln1.b", (d,), "fp", ("zeros",)),
+            (p + "attn.wq", (d, d), "lattice", ("normal", std)),
+            (p + "attn.wk", (d, d), "lattice", ("normal", std)),
+            (p + "attn.wv", (d, d), "lattice", ("normal", std)),
+            (p + "attn.wo", (d, d), "lattice", ("normal", std)),
+            (p + "ln2.g", (d,), "fp", ("ones",)),
+            (p + "ln2.b", (d,), "fp", ("zeros",)),
+            (p + "mlp.w1", (d, f), "lattice", ("normal", std)),
+            (p + "mlp.w2", (f, d), "lattice", ("normal", std)),
+        ]
+    specs += [
+        ("lnf.g", (d,), "fp", ("ones",)),
+        ("lnf.b", (d,), "fp", ("zeros",)),
+    ]
+    return specs
+
+
+def flat_args_for(cfg, fmt):
+    out = []
+    for name, shape, kind, init in param_specs(cfg):
+        if kind == "lattice" and fmt in ("wq", "w8a8"):
+            out.append((name + ".q", "i8", shape, "lattice_q", None))
+            out.append((name + ".s", "f32", (shape[1],), "scale", None))
+        else:
+            pkind = "lattice_as_fp" if kind == "lattice" else "fp"
+            out.append((name, "f32", shape, pkind, init))
+    return out
+
+
+def param_manifest(cfg, fmt):
+    out = []
+    for name, dt, shape, kind, init in flat_args_for(cfg, fmt):
+        entry = {"name": name, "dtype": dt, "shape": list(shape), "kind": kind}
+        if init is not None:
+            entry["init"] = list(init)
+        out.append(entry)
+    return out
+
+
+def data_inputs_for(cfg, which):
+    b, bt, sp, t, st = cfg.b_gen, cfg.b_train, cfg.s_prompt, cfg.t_dec, cfg.s_train
+    if which == "gen":
+        return [
+            {"name": "prompt", "dtype": "i32", "shape": [b, sp]},
+            {"name": "prompt_len", "dtype": "i32", "shape": [b]},
+            {"name": "tau", "dtype": "f32", "shape": []},
+            {"name": "gumbel", "dtype": "f32", "shape": [b, t, cfg.vocab]},
+        ]
+    if which in ("loss", "grad"):
+        return [
+            {"name": "tokens", "dtype": "i32", "shape": [bt, st]},
+            {"name": "pos_ids", "dtype": "i32", "shape": [bt, st]},
+            {"name": "mask", "dtype": "f32", "shape": [bt, st]},
+            {"name": "targets", "dtype": "i32", "shape": [bt, st]},
+            {"name": "loss_mask", "dtype": "f32", "shape": [bt, st]},
+        ]
+    if which == "cls":
+        return [
+            {"name": "tokens", "dtype": "i32", "shape": [bt, st]},
+            {"name": "pos_ids", "dtype": "i32", "shape": [bt, st]},
+            {"name": "mask", "dtype": "f32", "shape": [bt, st]},
+            {"name": "cls_pos", "dtype": "i32", "shape": [bt]},
+            {"name": "class_ids", "dtype": "i32", "shape": [N_CLS]},
+            {"name": "labels", "dtype": "i32", "shape": [bt]},
+        ]
+    raise ValueError(which)
+
+
+def outputs_for(cfg, fmt, which):
+    if which == "gen":
+        return [{"dtype": "i32", "shape": [cfg.b_gen, cfg.t_dec]}]
+    if which == "loss":
+        return [{"dtype": "f32", "shape": []} for _ in range(3)]
+    if which == "cls":
+        return [
+            {"dtype": "f32", "shape": []},
+            {"dtype": "f32", "shape": []},
+            {"dtype": "f32", "shape": [cfg.b_train, N_CLS]},
+        ]
+    if which == "grad":
+        outs = [{"dtype": "f32", "shape": []}]
+        for _, _, shape, _, _ in flat_args_for(cfg, "fp"):
+            outs.append({"dtype": "f32", "shape": list(shape)})
+        return outs
+    raise ValueError(which)
+
+
+def build(out_dir, sizes):
+    manifest = {"version": 1, "configs": {}, "params": {}, "artifacts": []}
+    for size in sizes:
+        cfg = CONFIGS[size]
+        manifest["configs"][size] = {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "s_prompt": cfg.s_prompt,
+            "t_dec": cfg.t_dec,
+            "s_train": cfg.s_train,
+            "b_gen": cfg.b_gen,
+            "b_train": cfg.b_train,
+            "lattice_params": cfg.lattice_param_count(),
+        }
+        manifest["params"][size] = {
+            fmt: param_manifest(cfg, fmt) for fmt in FORMATS
+        }
+        for fmt in FORMATS:
+            fns = FNS + (("grad",) if fmt == "fp" else ())
+            for which in fns:
+                manifest["artifacts"].append({
+                    "file": f"{size}_{fmt}_{which}.hlo.txt",
+                    "config": size,
+                    "format": fmt,
+                    "fn": which,
+                    "data_inputs": data_inputs_for(cfg, which),
+                    "n_param_inputs": len(flat_args_for(cfg, fmt)),
+                    "outputs": outputs_for(cfg, fmt, which),
+                })
+    os.makedirs(out_dir, exist_ok=True)
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[manifest-only] wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../rust/artifacts")
+    ap.add_argument("--sizes", default="nano,micro,small")
+    args = ap.parse_args()
+    sizes = [s for s in args.sizes.split(",") if s]
+    unknown = [s for s in sizes if s not in CONFIGS]
+    if unknown:
+        sys.exit(f"unknown sizes: {unknown} (have: {list(CONFIGS)})")
+    build(args.out_dir, sizes)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,19 +1,28 @@
-//! L3 hot-path micro-benchmarks: delta regeneration, gradient accumulation,
-//! QES updates (full-residual vs replay at several K), perturbation
-//! materialization, f16 conversion, and the QuZO update — the §Perf
-//! baseline table in EXPERIMENTS.md.
+//! L3 hot-path micro-benchmarks: delta regeneration, gradient accumulation
+//! (scalar vs chunk-parallel), QES updates (full-residual and seed replay,
+//! scalar vs fused chunk-parallel kernels), perturbation materialization
+//! (alloc-per-member vs preallocated), f16 conversion (scalar vs slice),
+//! and the QuZO update.
 //!
-//! Run: `cargo bench --bench hotpaths` (needs `make artifacts`).
+//! Run: `cargo bench --bench hotpaths` (needs `artifacts/manifest.json`).
+//!
+//! Besides the human-readable table, every case emits a machine-readable
+//! `BENCH {json}` line, plus `speedup` records comparing each scalar
+//! baseline against its chunked variant — the perf trajectory tracked in
+//! PERF.md from this change on.
 
 use qes::model::{init::init_fp, ParamStore};
 use qes::opt::{
-    accumulate_grad, apply_perturbation, EsHyper, LatticeOptimizer, PopulationSpec,
-    QesFullResidual, QuzoOptimizer, SeedReplayQes,
+    accumulate_grad, accumulate_grad_chunked, apply_perturbation, apply_perturbation_into,
+    EsHyper, KernelPolicy, LatticeOptimizer, PopulationSpec, QesFullResidual, QuzoOptimizer,
+    SeedReplayQes,
 };
 use qes::quant::Format;
 use qes::rng::{NoiseStream, SplitMix64};
 use qes::runtime::Manifest;
-use qes::util::bench::{black_box, Bench};
+use qes::util::bench::{black_box, report_speedup, Bench};
+use qes::util::f16::{f16_decode_slice, f16_encode_slice};
+use qes::util::parallel;
 
 fn quant_store(size: &str) -> ParamStore {
     let man = Manifest::load("artifacts/manifest.json").expect("run `make artifacts`");
@@ -27,7 +36,14 @@ fn main() {
     let d = store.lattice_dim();
     let micro = quant_store("micro");
     let dm = micro.lattice_dim();
-    println!("lattice dims: nano d={} micro d={}", d, dm);
+    let threads = parallel::default_threads();
+    println!(
+        "lattice dims: nano d={} micro d={} | {} worker threads, chunk={}",
+        d,
+        dm,
+        threads,
+        qes::opt::DEFAULT_CHUNK
+    );
 
     let mut b = Bench::new("L3 hot paths");
 
@@ -50,73 +66,146 @@ fn main() {
         black_box(acc);
     });
 
-    // gradient accumulation (pairs=8 => 8 streams over d)
+    // gradient accumulation (pairs=8 => 8 streams over d):
+    // scalar baseline vs chunk-parallel
     let spec = PopulationSpec { gen_seed: 3, pairs: 8, sigma: 0.02 };
     let fitness: Vec<f32> = (0..16).map(|i| (i as f32 - 7.5) / 16.0).collect();
     let mut g = vec![0.0f32; d];
-    b.run(&format!("accumulate_grad/nano d={} p=8", d), || {
+    b.run(&format!("accumulate_grad/scalar/nano d={}", d), || {
         accumulate_grad(&spec, &fitness, &mut g);
         black_box(g[0]);
     });
+    b.run(&format!("accumulate_grad/chunked/nano d={}", d), || {
+        accumulate_grad_chunked(&spec, &fitness, &mut g, KernelPolicy::default());
+        black_box(g[0]);
+    });
     let mut gm = vec![0.0f32; dm];
-    b.run(&format!("accumulate_grad/micro d={} p=8", dm), || {
+    b.run(&format!("accumulate_grad/scalar/micro d={}", dm), || {
         accumulate_grad(&spec, &fitness, &mut gm);
         black_box(gm[0]);
     });
+    b.run(&format!("accumulate_grad/chunked/micro d={}", dm), || {
+        accumulate_grad_chunked(&spec, &fitness, &mut gm, KernelPolicy::default());
+        black_box(gm[0]);
+    });
 
-    // perturbation materialization (rollout side)
-    b.run("apply_perturbation/nano", || {
+    // perturbation materialization (rollout side):
+    // alloc-per-member baseline vs preallocated chunk-parallel fill
+    b.run("apply_perturbation/alloc/nano", || {
         black_box(apply_perturbation(&store, &spec, 0, 7));
     });
-    b.run("apply_perturbation/micro", || {
+    let mut scratch: Vec<Vec<i8>> = Vec::new();
+    b.run("apply_perturbation/into/nano", || {
+        apply_perturbation_into(&store, &spec, 0, 7, &mut scratch, KernelPolicy::default());
+        black_box(scratch[0][0]);
+    });
+    b.run("apply_perturbation/alloc/micro", || {
         black_box(apply_perturbation(&micro, &spec, 0, 7));
     });
+    let mut scratch_m: Vec<Vec<i8>> = Vec::new();
+    b.run("apply_perturbation/into/micro", || {
+        apply_perturbation_into(&micro, &spec, 0, 7, &mut scratch_m, KernelPolicy::default());
+        black_box(scratch_m[0][0]);
+    });
 
-    // optimizer updates
+    // optimizer updates — each scalar (one chunk, one thread: the
+    // historical op sequence) vs fused chunk-parallel
     let hyper = EsHyper { sigma: 0.02, alpha: 0.08, gamma: 0.98, pairs: 8, k_window: 8 };
-    {
-        let mut s = store.clone();
-        let mut opt = QesFullResidual::new(d, 7, hyper.clone());
+    for (case, policy) in [
+        ("update/full_residual/scalar/micro", KernelPolicy::scalar()),
+        ("update/full_residual/chunked/micro", KernelPolicy::default()),
+    ] {
+        let mut s = micro.clone();
+        let mut opt = QesFullResidual::new(dm, 7, hyper.clone());
+        opt.policy = policy;
         let mut rng = SplitMix64::new(5);
-        b.run("update/full_residual/nano", || {
+        b.run(case, || {
             let sp = PopulationSpec { gen_seed: rng.next_u64(), pairs: 8, sigma: 0.02 };
             opt.update(&mut s, &sp, &fitness).unwrap();
         });
     }
     for k in [2usize, 8, 16] {
-        let mut s = store.clone();
-        let mut opt =
-            SeedReplayQes::new(d, 7, EsHyper { k_window: k, ..hyper.clone() });
-        let mut rng = SplitMix64::new(5);
-        // warm the history to K so the steady-state cost is measured
-        for _ in 0..k {
-            let sp = PopulationSpec { gen_seed: rng.next_u64(), pairs: 8, sigma: 0.02 };
-            opt.update(&mut s, &sp, &fitness).unwrap();
+        for (variant, policy) in
+            [("scalar", KernelPolicy::scalar()), ("chunked", KernelPolicy::default())]
+        {
+            let mut s = micro.clone();
+            let mut opt =
+                SeedReplayQes::new(dm, 7, EsHyper { k_window: k, ..hyper.clone() });
+            opt.policy = policy;
+            let mut rng = SplitMix64::new(5);
+            // warm the history to K so the steady-state cost is measured
+            for _ in 0..k {
+                let sp = PopulationSpec { gen_seed: rng.next_u64(), pairs: 8, sigma: 0.02 };
+                opt.update(&mut s, &sp, &fitness).unwrap();
+            }
+            b.run(&format!("update/seed_replay K={}/{}/micro", k, variant), || {
+                let sp = PopulationSpec { gen_seed: rng.next_u64(), pairs: 8, sigma: 0.02 };
+                opt.update(&mut s, &sp, &fitness).unwrap();
+            });
         }
-        b.run(&format!("update/seed_replay K={}/nano", k), || {
-            let sp = PopulationSpec { gen_seed: rng.next_u64(), pairs: 8, sigma: 0.02 };
-            opt.update(&mut s, &sp, &fitness).unwrap();
-        });
     }
-    {
-        let mut s = store.clone();
-        let mut opt = QuzoOptimizer::new(d, 7, hyper.clone());
+    for (case, policy) in [
+        ("update/quzo/scalar/micro", KernelPolicy::scalar()),
+        ("update/quzo/chunked/micro", KernelPolicy::default()),
+    ] {
+        let mut s = micro.clone();
+        let mut opt = QuzoOptimizer::new(dm, 7, hyper.clone());
+        opt.policy = policy;
         let mut rng = SplitMix64::new(5);
-        b.run("update/quzo/nano", || {
+        b.run(case, || {
             let sp = PopulationSpec { gen_seed: rng.next_u64(), pairs: 8, sigma: 0.02 };
             opt.update(&mut s, &sp, &fitness).unwrap();
         });
     }
 
-    // f16 conversions (residual storage cost)
+    // f16 conversions (residual storage cost): per-element vs slice form
     let xs: Vec<f32> = (0..65536).map(|i| (i as f32 / 65536.0) - 0.5).collect();
-    b.run("f16 roundtrip/64k elems", || {
+    b.run("f16 roundtrip/scalar/64k elems", || {
         let mut acc = 0f32;
         for &x in &xs {
             acc += qes::util::f16::f16_bits_to_f32(qes::util::f16::f32_to_f16_bits(x));
         }
         black_box(acc);
     });
+    let mut bits = vec![0u16; xs.len()];
+    let mut back = vec![0.0f32; xs.len()];
+    b.run("f16 roundtrip/slice/64k elems", || {
+        f16_encode_slice(&xs, &mut bits);
+        f16_decode_slice(&bits, &mut back);
+        black_box(back[0]);
+    });
 
     b.report();
+    b.report_json();
+
+    // speedup records: scalar baseline -> chunked
+    for (label, base, opt) in [
+        (
+            "accumulate_grad/micro",
+            format!("accumulate_grad/scalar/micro d={}", dm),
+            format!("accumulate_grad/chunked/micro d={}", dm),
+        ),
+        (
+            "update/full_residual/micro",
+            "update/full_residual/scalar/micro".to_string(),
+            "update/full_residual/chunked/micro".to_string(),
+        ),
+        (
+            "update/seed_replay K=8/micro",
+            "update/seed_replay K=8/scalar/micro".to_string(),
+            "update/seed_replay K=8/chunked/micro".to_string(),
+        ),
+        (
+            "update/quzo/micro",
+            "update/quzo/scalar/micro".to_string(),
+            "update/quzo/chunked/micro".to_string(),
+        ),
+        (
+            "apply_perturbation/micro",
+            "apply_perturbation/alloc/micro".to_string(),
+            "apply_perturbation/into/micro".to_string(),
+        ),
+    ] {
+        report_speedup("speedup", label, b.mean_ns(&base), b.mean_ns(&opt));
+    }
 }

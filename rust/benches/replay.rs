@@ -12,6 +12,10 @@ use qes::runtime::Manifest;
 use qes::tasks::gen_task;
 
 fn main() -> anyhow::Result<()> {
+    if !qes::runtime::backend_available() {
+        eprintln!("SKIP replay bench: xla PJRT backend unavailable (offline stub build)");
+        return Ok(());
+    }
     let man = Manifest::load("artifacts/manifest.json")?;
     let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32)?;
     init_fp(&mut fp, 3);

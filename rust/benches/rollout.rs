@@ -14,6 +14,10 @@ use qes::tasks::{cls_task, gen_task};
 use qes::util::bench::{black_box, Bench};
 
 fn main() -> anyhow::Result<()> {
+    if !qes::runtime::backend_available() {
+        eprintln!("SKIP rollout bench: xla PJRT backend unavailable (offline stub build)");
+        return Ok(());
+    }
     let man = Manifest::load("artifacts/manifest.json")?;
     let mut b = Bench::new("rollout path (PJRT)");
 

@@ -14,7 +14,8 @@ use anyhow::Result;
 use crate::coordinator::encode::{ClsBatch, GenBatch};
 use crate::coordinator::pool::{Job, WorkerPool};
 use crate::coordinator::rollout::{
-    eval_accuracy_cls, eval_accuracy_gen, eval_member_cls, eval_member_gen,
+    eval_accuracy_cls, eval_accuracy_gen, eval_member_cls_with, eval_member_gen_with,
+    MemberScratch,
 };
 use crate::coordinator::session::Session;
 use crate::model::ParamStore;
@@ -184,6 +185,8 @@ pub fn finetune_gen(
     let pool_problems: Vec<GenProblem> =
         (0..cfg.train_pool).map(|_| task.sample(&mut problem_rng)).collect();
     let mut log = RunLog::default();
+    // perturbation buffers reused across every inline member evaluation
+    let mut scratch = MemberScratch::default();
 
     for gen in 0..cfg.gens {
         let gen_seed = master.next_u64();
@@ -232,8 +235,8 @@ pub fn finetune_gen(
             _ => {
                 for m in 0..n_members {
                     for batch in &batches {
-                        raw[m] += eval_member_gen(
-                            session, task, store, &spec, m, batch, cfg.tau, qmax,
+                        raw[m] += eval_member_gen_with(
+                            session, task, store, &spec, m, batch, cfg.tau, qmax, &mut scratch,
                         )? / batches.len() as f32;
                     }
                 }
@@ -301,6 +304,7 @@ pub fn finetune_cls(
     let (train_batches, eval_batches) = build_cls_sets(session, task, k_shot, cfg)?;
     let train_arc = Arc::new(train_batches);
     let mut log = RunLog::default();
+    let mut scratch = MemberScratch::default();
 
     for gen in 0..cfg.gens {
         let gen_seed = master.next_u64();
@@ -329,7 +333,9 @@ pub fn finetune_cls(
             }
             _ => {
                 for m in 0..n_members {
-                    raw[m] = eval_member_cls(session, store, &spec, m, &train_arc, qmax)?;
+                    raw[m] = eval_member_cls_with(
+                        session, store, &spec, m, &train_arc, qmax, &mut scratch,
+                    )?;
                 }
             }
         }

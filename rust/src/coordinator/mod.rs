@@ -23,5 +23,5 @@ pub use finetune::{
 };
 pub use pool::{Job, MemberResult, WorkerPool};
 pub use pretrain::{pretrain_cls, pretrain_gen, PretrainCfg};
-pub use rollout::{eval_accuracy_cls, eval_accuracy_gen};
+pub use rollout::{eval_accuracy_cls, eval_accuracy_gen, MemberScratch};
 pub use session::{EngineSet, Session};

@@ -13,7 +13,7 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use crate::coordinator::encode::{ClsBatch, GenBatch};
-use crate::coordinator::rollout::{eval_member_cls, eval_member_gen};
+use crate::coordinator::rollout::{eval_member_cls_with, eval_member_gen_with, MemberScratch};
 use crate::coordinator::session::{EngineSet, Session};
 use crate::model::ParamStore;
 use crate::quant::Format;
@@ -137,6 +137,11 @@ fn worker_main(
         Some(t) => Some(gen_task(t, session.cfg.s_prompt, session.cfg.t_dec)?),
         None => None,
     };
+    // Per-worker perturbation buffers, reused across every member this
+    // worker ever evaluates (no per-member Vec<Vec<i8>> allocation).
+    // Sequential fill: the pool already parallelizes across workers, so a
+    // per-member thread fan-out would only oversubscribe the cores.
+    let mut scratch = MemberScratch::sequential();
     while let Ok(job) = rx.recv() {
         match job {
             Job::Shutdown => break,
@@ -146,8 +151,9 @@ fn worker_main(
                     .as_ref()
                     .ok_or_else(|| anyhow::anyhow!("gen job on a worker without a task"))?;
                 for m in members {
-                    let reward = eval_member_gen(
+                    let reward = eval_member_gen_with(
                         &session, task.as_ref(), &snapshot, &spec, m, &batch, tau, qmax,
+                        &mut scratch,
                     );
                     res_tx.send(MemberResult { member: m, reward }).ok();
                 }
@@ -155,7 +161,9 @@ fn worker_main(
             Job::EvalCls { snapshot, gen_seed, pairs, sigma, members, batches } => {
                 let spec = crate::opt::PopulationSpec { gen_seed, pairs, sigma };
                 for m in members {
-                    let reward = eval_member_cls(&session, &snapshot, &spec, m, &batches, qmax);
+                    let reward = eval_member_cls_with(
+                        &session, &snapshot, &spec, m, &batches, qmax, &mut scratch,
+                    );
                     res_tx.send(MemberResult { member: m, reward }).ok();
                 }
             }

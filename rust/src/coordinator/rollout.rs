@@ -6,14 +6,16 @@ use anyhow::Result;
 use crate::coordinator::encode::{ClsBatch, GenBatch};
 use crate::coordinator::session::Session;
 use crate::model::ParamStore;
-use crate::opt::{apply_perturbation, PopulationSpec};
+use crate::opt::{apply_perturbation_into, KernelPolicy, PopulationSpec};
 use crate::tasks::GenTask;
 
 /// Salt separating decode-sampling noise from perturbation noise.
 const GUMBEL_SALT: u64 = 0x6465_636f_6465_5f67;
 
 /// Evaluate one population member on a reasoning task: mean RLVR reward
-/// over the real rows of the rollout batch.
+/// over the real rows of the rollout batch. Allocates a fresh perturbation
+/// buffer; evaluation loops should hold a [`MemberScratch`] and use
+/// [`eval_member_gen_with`].
 #[allow(clippy::too_many_arguments)]
 pub fn eval_member_gen(
     session: &Session,
@@ -25,13 +27,60 @@ pub fn eval_member_gen(
     tau: f32,
     qmax: i8,
 ) -> Result<f32> {
-    let overrides = apply_perturbation(store, spec, member, qmax);
+    let mut scratch = MemberScratch::default();
+    eval_member_gen_with(session, task, store, spec, member, batch, tau, qmax, &mut scratch)
+}
+
+/// Reusable per-worker buffers for member evaluation: the perturbed
+/// lattice is materialized into `overrides` in place, so a generation's
+/// member loop performs zero per-member allocations on the perturbation
+/// path. `policy` controls the fill's chunk parallelism — results are
+/// identical for any policy (the kernels' determinism contract), so pick
+/// it for the topology: the default exploits all cores (right for the
+/// single-threaded inline leader loop), while code that already runs
+/// many evaluations in parallel (the worker pool) should use
+/// [`MemberScratch::sequential`] to avoid oversubscribing cores with
+/// per-member thread fan-outs.
+pub struct MemberScratch {
+    pub overrides: Vec<Vec<i8>>,
+    pub policy: KernelPolicy,
+}
+
+impl Default for MemberScratch {
+    fn default() -> Self {
+        MemberScratch { overrides: Vec::new(), policy: KernelPolicy::default() }
+    }
+}
+
+impl MemberScratch {
+    /// Scratch whose perturbation fill runs inline on the calling thread
+    /// — for callers that are themselves one of many parallel workers.
+    pub fn sequential() -> Self {
+        MemberScratch { overrides: Vec::new(), policy: KernelPolicy::scalar() }
+    }
+}
+
+/// [`eval_member_gen`] with caller-owned perturbation buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn eval_member_gen_with(
+    session: &Session,
+    task: &dyn GenTask,
+    store: &ParamStore,
+    spec: &PopulationSpec,
+    member: usize,
+    batch: &GenBatch,
+    tau: f32,
+    qmax: i8,
+    scratch: &mut MemberScratch,
+) -> Result<f32> {
+    apply_perturbation_into(store, spec, member, qmax, &mut scratch.overrides, scratch.policy);
     let gumbel_seed = if tau > 0.0 {
         Some(spec.gen_seed ^ GUMBEL_SALT ^ (member as u64) << 17)
     } else {
         None
     };
-    let completions = session.generate(store, Some(&overrides), batch, tau, gumbel_seed)?;
+    let completions =
+        session.generate(store, Some(&scratch.overrides), batch, tau, gumbel_seed)?;
     let mut total = 0.0f32;
     for (i, c) in completions.iter().enumerate() {
         total += task.reward(&batch.problems[i].key, c);
@@ -49,10 +98,24 @@ pub fn eval_member_cls(
     batches: &[ClsBatch],
     qmax: i8,
 ) -> Result<f32> {
-    let overrides = apply_perturbation(store, spec, member, qmax);
+    let mut scratch = MemberScratch::default();
+    eval_member_cls_with(session, store, spec, member, batches, qmax, &mut scratch)
+}
+
+/// [`eval_member_cls`] with caller-owned perturbation buffers.
+pub fn eval_member_cls_with(
+    session: &Session,
+    store: &ParamStore,
+    spec: &PopulationSpec,
+    member: usize,
+    batches: &[ClsBatch],
+    qmax: i8,
+    scratch: &mut MemberScratch,
+) -> Result<f32> {
+    apply_perturbation_into(store, spec, member, qmax, &mut scratch.overrides, scratch.policy);
     let mut loss = 0.0f32;
     for b in batches {
-        let (ce, _) = session.cls_eval(store, Some(&overrides), b)?;
+        let (ce, _) = session.cls_eval(store, Some(&scratch.overrides), b)?;
         loss += ce;
     }
     Ok(-loss / batches.len() as f32)

@@ -190,6 +190,21 @@ impl ParamStore {
         out.into_iter().map(|p| unsafe { &mut *p }).collect()
     }
 
+    /// Iterate lattice tensors as mutable f32 slices (fp format only —
+    /// the MeZO/continuous-baseline parameter space).
+    pub fn lattice_f32_mut(&mut self) -> Vec<&mut [f32]> {
+        // Same disjoint-entries argument as `lattice_i8_mut`.
+        let mut out = Vec::with_capacity(self.lattice.len());
+        let base = self.entries.as_mut_ptr();
+        for &i in &self.lattice {
+            unsafe {
+                let e = &mut *base.add(i);
+                out.push(e.data.as_f32_mut() as *mut [f32]);
+            }
+        }
+        out.into_iter().map(|p| unsafe { &mut *p }).collect()
+    }
+
     /// Memory footprint of the weights in bytes, using the TRUE packed
     /// lattice width (INT4 packs two values per byte) — Table 8 accounting.
     pub fn weight_bytes(&self) -> u64 {

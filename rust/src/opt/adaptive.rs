@@ -17,7 +17,9 @@
 //! lazily by the inner optimizer.
 
 use crate::model::ParamStore;
-use crate::opt::{EsHyper, LatticeOptimizer, PopulationSpec, SeedReplayQes, StepStats};
+use crate::opt::{
+    EsHyper, KernelPolicy, LatticeOptimizer, PopulationSpec, SeedReplayQes, StepStats,
+};
 
 pub struct AdaptiveReplayQes {
     inner: SeedReplayQes,
@@ -49,6 +51,12 @@ impl AdaptiveReplayQes {
 
     pub fn current_k(&self) -> usize {
         self.inner.hyper.k_window
+    }
+
+    /// Set the inner replay kernel's execution policy (chunk size /
+    /// threads). Results are invariant to it; only wall-clock changes.
+    pub fn set_policy(&mut self, policy: KernelPolicy) {
+        self.inner.policy = policy;
     }
 
     fn mean_abs_residual(&self) -> f32 {

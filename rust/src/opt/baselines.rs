@@ -3,9 +3,9 @@
 
 use crate::model::{ParamKind, ParamStore};
 use crate::opt::{
-    accumulate_grad, gate_apply, EsHyper, LatticeOptimizer, PopulationSpec, StepStats,
+    kernels, EsHyper, KernelPolicy, LatticeOptimizer, PopulationSpec, StepStats,
 };
-use crate::rng::{NoiseStream, SplitMix64};
+use crate::rng::NoiseStream;
 
 /// QuZO (Zhou et al. 2025): the primary quantized baseline. Same discrete
 /// perturbations as QES (Eq. 3's stochastic rounding — their "double
@@ -17,14 +17,17 @@ use crate::rng::{NoiseStream, SplitMix64};
 /// (stagnation). This is the failure mode QES exists to fix.
 pub struct QuzoOptimizer {
     pub hyper: EsHyper,
-    g: Vec<f32>,
+    /// Kernel execution policy (chunk size / threads); never affects the
+    /// produced lattice.
+    pub policy: KernelPolicy,
+    d: usize,
     qmax: i8,
     step: u64,
 }
 
 impl QuzoOptimizer {
     pub fn new(d: usize, qmax: i8, hyper: EsHyper) -> Self {
-        QuzoOptimizer { hyper, g: vec![0.0f32; d], qmax, step: 0 }
+        QuzoOptimizer { hyper, policy: KernelPolicy::default(), d, qmax, step: 0 }
     }
 }
 
@@ -36,36 +39,24 @@ impl LatticeOptimizer for QuzoOptimizer {
         fitness: &[f32],
     ) -> anyhow::Result<StepStats> {
         let d = store.lattice_dim();
-        anyhow::ensure!(d == self.g.len());
-        accumulate_grad(spec, fitness, &mut self.g);
+        anyhow::ensure!(d == self.d);
+        anyhow::ensure!(fitness.len() == spec.n_members());
         // Per-step rounding stream: decorrelated from the perturbation
         // streams but still deterministic given the generation seed.
         // Salted with the step counter so repeated generation seeds still
         // get fresh rounding randomness (unbiasedness needs independence).
-        let mut rounder =
-            SplitMix64::new(spec.gen_seed ^ Q_ROUND_SALT ^ self.step.wrapping_mul(0x9e37));
-        let alpha = self.hyper.alpha;
-        let qmax = self.qmax;
-        let mut stats = StepStats { d: d as u64, ..Default::default() };
-        let mut j = 0usize;
-        for tensor in store.lattice_i8_mut() {
-            for w in tensor.iter_mut() {
-                let u = alpha * self.g[j];
-                // stochastic rounding: unbiased, variance ~ Delta^2
-                let f = u.floor();
-                let dw = f as i32 + rounder.bernoulli(u - f) as i32;
-                let (applied, boundary) = gate_apply(w, dw, qmax);
-                if applied != 0 {
-                    stats.n_changed += 1;
-                    if boundary {
-                        stats.n_boundary += 1;
-                    }
-                } else if dw != 0 {
-                    stats.n_gated += 1;
-                }
-                j += 1;
-            }
-        }
+        // One uniform per element, so it is counter-addressable and the
+        // fused kernel can jump each chunk to its own window.
+        let round_seed = spec.gen_seed ^ Q_ROUND_SALT ^ self.step.wrapping_mul(0x9e37);
+        let stats = kernels::fused_quzo(
+            store.lattice_i8_mut(),
+            spec,
+            fitness,
+            self.hyper.alpha,
+            self.qmax,
+            round_seed,
+            self.policy,
+        );
         self.step += 1;
         Ok(stats)
     }
@@ -91,11 +82,14 @@ const Q_ROUND_SALT: u64 = 0x51ed_270b_9d2f_ff2f;
 /// with eps regenerated from seeds (memory-free, like the original).
 pub struct MezoOptimizer {
     pub hyper: EsHyper,
+    /// Kernel execution policy (chunk size / threads); never affects the
+    /// produced weights.
+    pub policy: KernelPolicy,
 }
 
 impl MezoOptimizer {
     pub fn new(hyper: EsHyper) -> Self {
-        MezoOptimizer { hyper }
+        MezoOptimizer { hyper, policy: KernelPolicy::default() }
     }
 
     /// Materialize member `m`'s perturbed fp weights for rollout: one
@@ -123,7 +117,10 @@ impl MezoOptimizer {
             .collect()
     }
 
-    /// SPSA update from the pair fitnesses.
+    /// SPSA update from the pair fitnesses. Chunk-parallel: each chunk
+    /// jumps every pair's Gaussian stream to its own window
+    /// (`NoiseStream::at_gauss`); per-element adds stay in pair order, so
+    /// the result is bit-identical to the sequential pair-by-pair sweep.
     pub fn update_fp(
         &mut self,
         store: &mut ParamStore,
@@ -132,25 +129,13 @@ impl MezoOptimizer {
     ) -> anyhow::Result<()> {
         anyhow::ensure!(fitness.len() == spec.n_members());
         let alpha = self.hyper.alpha;
-        for pair in 0..spec.pairs {
-            let (seed, _) = spec.member(2 * pair);
-            let coeff = alpha * (fitness[2 * pair] - fitness[2 * pair + 1])
-                / (2.0 * spec.sigma * spec.pairs as f32);
-            if coeff == 0.0 {
-                continue;
-            }
-            let mut stream = NoiseStream::new(seed, spec.sigma, 1.0);
-            let lat: Vec<usize> = store.lattice_indices().to_vec();
-            for i in lat {
-                let e = &mut store.entries[i];
-                for w in e.data.as_f32_mut() {
-                    // next_scaled_gauss = sigma * eps; divide back out so the
-                    // stream consumption matches perturb_fp exactly.
-                    let se = stream.next_scaled_gauss();
-                    *w += coeff * (se / spec.sigma);
-                }
-            }
-        }
+        let coeffs: Vec<f32> = (0..spec.pairs)
+            .map(|pair| {
+                alpha * (fitness[2 * pair] - fitness[2 * pair + 1])
+                    / (2.0 * spec.sigma * spec.pairs as f32)
+            })
+            .collect();
+        kernels::fused_mezo_update(store.lattice_f32_mut(), spec, &coeffs, self.policy);
         Ok(())
     }
 
@@ -163,7 +148,9 @@ impl MezoOptimizer {
 mod tests {
     use super::*;
     use crate::model::{init::init_fp, ParamStore};
+    use crate::opt::accumulate_grad;
     use crate::quant::Format;
+    use crate::rng::SplitMix64;
     use crate::runtime::manifest::Manifest;
 
     fn stores() -> (ParamStore, ParamStore) {

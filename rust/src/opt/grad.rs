@@ -1,38 +1,56 @@
 //! Shared ES machinery: perturbation application (rollout side) and
 //! gradient-estimate accumulation (update side). Both regenerate the same
 //! discrete noise from seeds — nothing d-sized is ever stored between them.
+//!
+//! The sequential `accumulate_grad` here is the REFERENCE implementation
+//! the chunk-parallel kernels (`opt::kernels`) are verified against
+//! bit-for-bit; the optimizers' hot paths run the fused kernels instead.
 
 use crate::model::ParamStore;
+use crate::opt::kernels::{self, KernelPolicy};
 use crate::opt::PopulationSpec;
 use crate::rng::NoiseStream;
 
 /// Materialize member `m`'s perturbed lattice tensors (Eq. 3 + Eq. 4
 /// boundary gating), leaving the store untouched. Output is aligned with
 /// `store.lattice_indices()` — ready for `runtime::param_literals`.
+///
+/// Allocates fresh buffers per call; rollout loops that evaluate many
+/// members should hold a scratch `Vec<Vec<i8>>` and call
+/// [`apply_perturbation_into`] instead.
 pub fn apply_perturbation(
     store: &ParamStore,
     spec: &PopulationSpec,
     member: usize,
     qmax: i8,
 ) -> Vec<Vec<i8>> {
-    let (seed, sign) = spec.member(member);
-    let mut stream = NoiseStream::new(seed, spec.sigma, sign);
-    let qmax_i = qmax as i32;
-    store
-        .lattice_i8()
-        .into_iter()
-        .map(|src| {
-            let mut out = Vec::with_capacity(src.len());
-            for &w in src {
-                let d = stream.next_delta();
-                let cand = w as i32 + d;
-                // boundary gating: invalid updates are masked (Eq. 4)
-                let v = if (-qmax_i..=qmax_i).contains(&cand) { cand as i8 } else { w };
-                out.push(v);
-            }
-            out
-        })
-        .collect()
+    let mut out: Vec<Vec<i8>> = Vec::new();
+    apply_perturbation_into(store, spec, member, qmax, &mut out, KernelPolicy::default());
+    out
+}
+
+/// [`apply_perturbation`] into caller-owned buffers: `out` is resized to
+/// mirror the lattice tensor shapes on first use and reused verbatim after
+/// that, so a rollout loop allocates once per worker instead of once per
+/// member. Chunk-parallel per `policy`; output is bit-identical to the
+/// sequential walk for any policy.
+pub fn apply_perturbation_into(
+    store: &ParamStore,
+    spec: &PopulationSpec,
+    member: usize,
+    qmax: i8,
+    out: &mut Vec<Vec<i8>>,
+    policy: KernelPolicy,
+) {
+    let src = store.lattice_i8();
+    if out.len() != src.len() {
+        out.resize_with(src.len(), Vec::new);
+    }
+    for (o, s) in out.iter_mut().zip(src.iter()) {
+        o.resize(s.len(), 0);
+    }
+    let dst: Vec<&mut [i8]> = out.iter_mut().map(|v| v.as_mut_slice()).collect();
+    kernels::fill_perturbation(src, dst, spec, member, qmax, policy);
 }
 
 /// Accumulate the ES gradient estimate (Eq. 5):
@@ -40,8 +58,9 @@ pub fn apply_perturbation(
 /// over all 2*pairs members, into `out` (length = lattice dim d).
 ///
 /// Antithetic pairs share RNG draws via `next_pair_deltas`, halving the
-/// regeneration cost — the replay hot path (Algorithm 2) calls this K+1
-/// times per update.
+/// regeneration cost. This is the sequential reference path; the fused
+/// chunk-parallel equivalent is `kernels::accumulate_grad_chunked` (and
+/// the optimizers fuse it straight into their update loops).
 pub fn accumulate_grad(spec: &PopulationSpec, fitness: &[f32], out: &mut [f32]) {
     assert_eq!(fitness.len(), spec.n_members());
     out.fill(0.0);
@@ -97,6 +116,19 @@ mod tests {
             .map(|(p, o)| p.iter().zip(o.iter()).filter(|(x, y)| x != y).count())
             .sum();
         assert!(moved > 0);
+    }
+
+    #[test]
+    fn perturbation_into_reuses_buffers_and_matches() {
+        let (_man, store) = quant_store();
+        let spec = PopulationSpec { gen_seed: 31, pairs: 2, sigma: 0.6 };
+        let fresh = apply_perturbation(&store, &spec, 1, 7);
+        let mut scratch: Vec<Vec<i8>> = Vec::new();
+        // fill twice with different members; the second overwrite must be
+        // indistinguishable from a fresh allocation
+        apply_perturbation_into(&store, &spec, 0, 7, &mut scratch, KernelPolicy::scalar());
+        apply_perturbation_into(&store, &spec, 1, 7, &mut scratch, KernelPolicy::default());
+        assert_eq!(scratch, fresh);
     }
 
     #[test]

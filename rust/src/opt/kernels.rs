@@ -1,0 +1,548 @@
+//! Fused, chunk-parallel ES update kernels over counter-addressable noise.
+//!
+//! The scalar update path costs `(K+1) * pairs * d` sequential RNG calls
+//! plus `K+1` full d-sized sweeps per seed-replay update. These kernels
+//! restructure all of it around two ideas:
+//!
+//! 1. **Counter-addressable noise.** `NoiseStream::at(seed, j)` positions a
+//!    stream at any element in O(1) (`rng::SplitMix64::jump`), so any chunk
+//!    of the noise is independently materializable. Chunks go to worker
+//!    threads (`util::parallel`), each regenerating exactly the window it
+//!    owns.
+//! 2. **Fusion + K-deep tiling.** Per chunk, the kernel regenerates all
+//!    pairs' deltas, forms the gradient estimate, applies error feedback
+//!    and boundary gating in one pass — no d-sized scratch gradient ever
+//!    exists. For seed replay, the chunk's proxy residual stays resident
+//!    across ALL K history steps (one pass over d with a K-deep inner tile
+//!    instead of K+1 full-lattice passes), cutting memory traffic ~K-fold.
+//!
+//! # Determinism contract
+//!
+//! Every kernel produces results **bit-identical to the sequential scalar
+//! path, for any chunk size and any thread count**. The contract holds
+//! because (a) stream jumps reproduce exact sequential stream positions,
+//! (b) each element's f32 operations happen in the same order as the
+//! scalar path (pair-major per element), and (c) chunks own disjoint
+//! slices, so thread scheduling can never reorder arithmetic. Seed-replay
+//! correctness (paper Algorithm 2) depends on this: a lattice evolved on
+//! 8 threads must be re-materializable on 1. `tests/equivalence.rs`
+//! enforces the contract across chunk sizes {1, 64, 4096} and thread
+//! counts {1, 2, 8}.
+
+use crate::opt::{gate_apply, PopulationSpec, StepStats};
+use crate::rng::{NoiseStream, SplitMix64};
+use crate::util::f16::{f16_decode_slice, f16_encode_slice};
+use crate::util::parallel;
+
+/// Default chunk size: 8 Ki elements keeps the working set (chunk of
+/// weights + gradient + residual) around 64 KB — L1/L2-resident on the
+/// target cores — while leaving enough chunks to spread across threads
+/// even for the nano lattice.
+pub const DEFAULT_CHUNK: usize = 8192;
+
+/// How a kernel splits and schedules its work. Never affects results —
+/// only wall-clock (see the module-level determinism contract).
+#[derive(Debug, Clone, Copy)]
+pub struct KernelPolicy {
+    /// Elements per chunk (clamped to [1, d]).
+    pub chunk_size: usize,
+    /// Worker threads (1 = run inline on the caller's thread).
+    pub threads: usize,
+}
+
+impl Default for KernelPolicy {
+    fn default() -> Self {
+        KernelPolicy { chunk_size: DEFAULT_CHUNK, threads: parallel::default_threads() }
+    }
+}
+
+impl KernelPolicy {
+    pub fn new(chunk_size: usize, threads: usize) -> Self {
+        KernelPolicy { chunk_size, threads }
+    }
+
+    /// The sequential reference policy: one chunk, one thread — executes
+    /// the exact op sequence of the historical scalar implementation.
+    pub fn scalar() -> Self {
+        KernelPolicy { chunk_size: usize::MAX, threads: 1 }
+    }
+}
+
+/// A chunk's view of the lattice: the (possibly several) tensor segments
+/// covering global elements `[start, start + len)`, in canonical order.
+pub struct SegChunkMut<'a, T> {
+    pub start: usize,
+    pub len: usize,
+    pub segs: Vec<&'a mut [T]>,
+}
+
+/// Immutable counterpart of [`SegChunkMut`].
+pub struct SegChunk<'a, T> {
+    pub start: usize,
+    pub len: usize,
+    pub segs: Vec<&'a [T]>,
+}
+
+/// The single source of truth for chunk boundaries: per-chunk
+/// `(start, len)` over a flat space of `total` elements. Both splitters
+/// below slice tensors against this plan, so mutable and immutable
+/// chunkings of equal-length tensor lists agree on boundaries by
+/// construction (fill_perturbation zips them).
+fn chunk_plan(total: usize, chunk_size: usize) -> Vec<(usize, usize)> {
+    let chunk_size = chunk_size.clamp(1, total.max(1));
+    let mut plan = Vec::with_capacity(total / chunk_size + 1);
+    let mut start = 0usize;
+    while start < total {
+        let len = chunk_size.min(total - start);
+        plan.push((start, len));
+        start += len;
+    }
+    plan
+}
+
+/// Split a canonical-order tensor list into fixed-size chunks of the flat
+/// element space (per [`chunk_plan`]). Chunk boundaries ignore tensor
+/// boundaries: a chunk may span several tensors and a tensor may span
+/// several chunks.
+pub fn chunk_segments_mut<T>(tensors: Vec<&mut [T]>, chunk_size: usize) -> Vec<SegChunkMut<'_, T>> {
+    let total: usize = tensors.iter().map(|t| t.len()).sum();
+    let mut chunks: Vec<SegChunkMut<'_, T>> = chunk_plan(total, chunk_size)
+        .into_iter()
+        .map(|(start, len)| SegChunkMut { start, len, segs: Vec::new() })
+        .collect();
+    let mut ci = 0usize; // chunk being filled
+    let mut filled = 0usize; // elements already placed into chunk ci
+    for t in tensors {
+        let mut rest = t;
+        while !rest.is_empty() {
+            let take = (chunks[ci].len - filled).min(rest.len());
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            chunks[ci].segs.push(head);
+            filled += take;
+            rest = tail;
+            if filled == chunks[ci].len {
+                ci += 1;
+                filled = 0;
+            }
+        }
+    }
+    chunks
+}
+
+/// Immutable twin of [`chunk_segments_mut`], slicing against the same
+/// [`chunk_plan`].
+pub fn chunk_segments<T>(tensors: Vec<&[T]>, chunk_size: usize) -> Vec<SegChunk<'_, T>> {
+    let total: usize = tensors.iter().map(|t| t.len()).sum();
+    let mut chunks: Vec<SegChunk<'_, T>> = chunk_plan(total, chunk_size)
+        .into_iter()
+        .map(|(start, len)| SegChunk { start, len, segs: Vec::new() })
+        .collect();
+    let mut ci = 0usize;
+    let mut filled = 0usize;
+    for t in tensors {
+        let mut rest = t;
+        while !rest.is_empty() {
+            let take = (chunks[ci].len - filled).min(rest.len());
+            let (head, tail) = rest.split_at(take);
+            chunks[ci].segs.push(head);
+            filled += take;
+            rest = tail;
+            if filled == chunks[ci].len {
+                ci += 1;
+                filled = 0;
+            }
+        }
+    }
+    chunks
+}
+
+/// Accumulate the ES gradient estimate (Eq. 5) for the window of elements
+/// `[start, start + g.len())` into `g` — bit-identical to the same window
+/// of the sequential `opt::accumulate_grad` (same per-element pair order,
+/// same f32 operation sequence).
+pub fn grad_chunk(spec: &PopulationSpec, fitness: &[f32], start: usize, g: &mut [f32]) {
+    debug_assert_eq!(fitness.len(), spec.n_members());
+    g.fill(0.0);
+    let n = spec.n_members() as f32;
+    let inv = 1.0 / (n * spec.sigma);
+    for pair in 0..spec.pairs {
+        let fp = fitness[2 * pair] * inv;
+        let fm = fitness[2 * pair + 1] * inv;
+        if fp == 0.0 && fm == 0.0 {
+            // Rank-normalized fitness can zero a pair; skipping costs and
+            // changes nothing (stream positions are per-pair).
+            continue;
+        }
+        let (seed, _) = spec.member(2 * pair);
+        let mut stream = NoiseStream::at(seed, spec.sigma, 1.0, start);
+        for gj in g.iter_mut() {
+            let (dp, dm) = stream.next_pair_deltas();
+            *gj += fp * dp as f32 + fm * dm as f32;
+        }
+    }
+}
+
+/// Chunk-parallel gradient accumulation into a full d-sized buffer.
+/// (The fused optimizer kernels below never materialize this buffer; this
+/// entry point exists for diagnostics, tests and benches.)
+pub fn accumulate_grad_chunked(
+    spec: &PopulationSpec,
+    fitness: &[f32],
+    out: &mut [f32],
+    policy: KernelPolicy,
+) {
+    assert_eq!(fitness.len(), spec.n_members());
+    let chunks = chunk_segments_mut(vec![out], policy.chunk_size);
+    parallel::map_tasks(chunks, policy.threads, |mut c| {
+        let mut off = c.start;
+        for seg in c.segs.iter_mut() {
+            grad_chunk(spec, fitness, off, seg);
+            off += seg.len();
+        }
+    });
+}
+
+fn reduce_stats(d: usize, partials: Vec<StepStats>) -> StepStats {
+    let mut total = StepStats { d: d as u64, ..Default::default() };
+    for p in partials {
+        total.n_changed += p.n_changed;
+        total.n_boundary += p.n_boundary;
+        total.n_gated += p.n_gated;
+    }
+    total
+}
+
+/// Fused QES Full-Residual update (Algorithm 1): per chunk, regenerate all
+/// pairs' deltas, form the gradient, apply error feedback (f16 residual)
+/// and boundary gating in a single pass. No d-sized gradient buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_full_residual(
+    tensors: Vec<&mut [i8]>,
+    e: &mut [u16],
+    spec: &PopulationSpec,
+    fitness: &[f32],
+    alpha: f32,
+    gamma: f32,
+    qmax: i8,
+    policy: KernelPolicy,
+) -> StepStats {
+    let d: usize = tensors.iter().map(|t| t.len()).sum();
+    assert_eq!(d, e.len(), "lattice dim {} != residual dim {}", d, e.len());
+    assert_eq!(fitness.len(), spec.n_members());
+    let w_chunks = chunk_segments_mut(tensors, policy.chunk_size);
+    let e_chunks = chunk_segments_mut(vec![e], policy.chunk_size);
+    let tasks: Vec<_> = w_chunks.into_iter().zip(e_chunks).collect();
+    let partials = parallel::map_tasks(tasks, policy.threads, |(mut wc, mut ec)| {
+        let mut g = vec![0.0f32; wc.len];
+        grad_chunk(spec, fitness, wc.start, &mut g);
+        let eseg: &mut [u16] = &mut ec.segs[0];
+        let mut ef = vec![0.0f32; wc.len];
+        f16_decode_slice(eseg, &mut ef);
+        let mut stats = StepStats::default();
+        let mut k = 0usize;
+        for seg in wc.segs.iter_mut() {
+            for w in seg.iter_mut() {
+                let u = alpha * g[k] + gamma * ef[k];
+                let dw = u.round() as i32;
+                let (applied, boundary) = gate_apply(w, dw, qmax);
+                if applied != 0 {
+                    stats.n_changed += 1;
+                    if boundary {
+                        stats.n_boundary += 1;
+                    }
+                } else if dw != 0 {
+                    stats.n_gated += 1;
+                }
+                ef[k] = u - applied as f32;
+                k += 1;
+            }
+        }
+        f16_encode_slice(&ef, eseg);
+        stats
+    });
+    reduce_stats(d, partials)
+}
+
+/// One step of replayable history, borrowed from the optimizer's window —
+/// no fitness vectors are cloned to build a replay pass.
+pub struct ReplayStep<'a> {
+    pub spec: PopulationSpec,
+    pub fitness: &'a [f32],
+    pub alpha: f32,
+}
+
+/// Fused stateless seed-replay update (Algorithm 2), K-deep tiled.
+///
+/// Per chunk: zero the chunk's proxy residual, run ALL `history` steps
+/// over just this chunk (gradient regeneration + simulated gating against
+/// the *current* weights, per paper §4.5), then apply the `current` step
+/// for real. The chunk's residual and weights stay cache-resident across
+/// the whole K-step tile — the scalar path instead made K+1 full-lattice
+/// passes.
+pub fn fused_seed_replay(
+    tensors: Vec<&mut [i8]>,
+    e_proxy: &mut [f32],
+    history: &[ReplayStep<'_>],
+    current: &ReplayStep<'_>,
+    gamma: f32,
+    qmax: i8,
+    policy: KernelPolicy,
+) -> StepStats {
+    let d: usize = tensors.iter().map(|t| t.len()).sum();
+    assert_eq!(d, e_proxy.len(), "lattice dim {} != proxy dim {}", d, e_proxy.len());
+    assert_eq!(current.fitness.len(), current.spec.n_members());
+    let qmax_i = qmax as i32;
+    let w_chunks = chunk_segments_mut(tensors, policy.chunk_size);
+    let e_chunks = chunk_segments_mut(vec![e_proxy], policy.chunk_size);
+    let tasks: Vec<_> = w_chunks.into_iter().zip(e_chunks).collect();
+    let partials = parallel::map_tasks(tasks, policy.threads, |(mut wc, mut ec)| {
+        let ep: &mut [f32] = &mut ec.segs[0];
+        ep.fill(0.0);
+        let mut g = vec![0.0f32; wc.len];
+        // --- K-deep replay tile: rematerialize e_proxy for this chunk ---
+        for h in history {
+            grad_chunk(&h.spec, h.fitness, wc.start, &mut g);
+            let mut k = 0usize;
+            for seg in wc.segs.iter() {
+                for &w in seg.iter() {
+                    let u = h.alpha * g[k] + gamma * ep[k];
+                    let dw = u.round() as i32;
+                    // simulate the gate against current W, do not mutate
+                    let next = w as i32 + dw;
+                    let applied =
+                        if dw != 0 && (-qmax_i..=qmax_i).contains(&next) { dw } else { 0 };
+                    ep[k] = u - applied as f32;
+                    k += 1;
+                }
+            }
+        }
+        // --- current step: the rematerialized error feeds the real update ---
+        grad_chunk(&current.spec, current.fitness, wc.start, &mut g);
+        let mut stats = StepStats::default();
+        let mut k = 0usize;
+        for seg in wc.segs.iter_mut() {
+            for w in seg.iter_mut() {
+                let u = current.alpha * g[k] + gamma * ep[k];
+                let dw = u.round() as i32;
+                let (applied, boundary) = gate_apply(w, dw, qmax);
+                if applied != 0 {
+                    stats.n_changed += 1;
+                    if boundary {
+                        stats.n_boundary += 1;
+                    }
+                } else if dw != 0 {
+                    stats.n_gated += 1;
+                }
+                ep[k] = u - applied as f32;
+                k += 1;
+            }
+        }
+        stats
+    });
+    reduce_stats(d, partials)
+}
+
+/// Raw uniforms the QuZO update-rounding stream consumes per element.
+pub const QUZO_ROUND_DRAWS_PER_ELEM: u64 = 1;
+
+/// Fused QuZO update: gradient regeneration + stochastic rounding + gating
+/// in one chunk-parallel pass. `round_seed` is the per-step salted seed of
+/// the rounding stream (1 uniform per element, counter-addressable).
+pub fn fused_quzo(
+    tensors: Vec<&mut [i8]>,
+    spec: &PopulationSpec,
+    fitness: &[f32],
+    alpha: f32,
+    qmax: i8,
+    round_seed: u64,
+    policy: KernelPolicy,
+) -> StepStats {
+    let d: usize = tensors.iter().map(|t| t.len()).sum();
+    assert_eq!(fitness.len(), spec.n_members());
+    let chunks = chunk_segments_mut(tensors, policy.chunk_size);
+    let partials = parallel::map_tasks(chunks, policy.threads, |mut wc| {
+        let mut g = vec![0.0f32; wc.len];
+        grad_chunk(spec, fitness, wc.start, &mut g);
+        let mut rounder = SplitMix64::new(round_seed);
+        rounder.jump(QUZO_ROUND_DRAWS_PER_ELEM.wrapping_mul(wc.start as u64));
+        let mut stats = StepStats::default();
+        let mut k = 0usize;
+        for seg in wc.segs.iter_mut() {
+            for w in seg.iter_mut() {
+                let u = alpha * g[k];
+                // stochastic rounding: unbiased, variance ~ Delta^2
+                let f = u.floor();
+                let dw = f as i32 + rounder.bernoulli(u - f) as i32;
+                let (applied, boundary) = gate_apply(w, dw, qmax);
+                if applied != 0 {
+                    stats.n_changed += 1;
+                    if boundary {
+                        stats.n_boundary += 1;
+                    }
+                } else if dw != 0 {
+                    stats.n_gated += 1;
+                }
+                k += 1;
+            }
+        }
+        stats
+    });
+    reduce_stats(d, partials)
+}
+
+/// Chunk-parallel MeZO SPSA update on continuous (fp32) lattice tensors:
+/// `w += sum_p coeff_p * eps_p`, with per-element adds in pair order —
+/// bit-identical to the sequential pair-by-pair sweep.
+/// `coeffs[p] == 0.0` skips pair `p` entirely (matching the scalar path).
+pub fn fused_mezo_update(
+    tensors: Vec<&mut [f32]>,
+    spec: &PopulationSpec,
+    coeffs: &[f32],
+    policy: KernelPolicy,
+) {
+    assert_eq!(coeffs.len(), spec.pairs);
+    let chunks = chunk_segments_mut(tensors, policy.chunk_size);
+    parallel::map_tasks(chunks, policy.threads, |mut wc| {
+        for (pair, &coeff) in coeffs.iter().enumerate() {
+            if coeff == 0.0 {
+                continue;
+            }
+            let (seed, _) = spec.member(2 * pair);
+            let mut stream = NoiseStream::at_gauss(seed, spec.sigma, 1.0, wc.start);
+            for seg in wc.segs.iter_mut() {
+                for w in seg.iter_mut() {
+                    // next_scaled_gauss = sigma * eps; divide back out so
+                    // stream consumption matches perturb_fp exactly.
+                    let se = stream.next_scaled_gauss();
+                    *w += coeff * (se / spec.sigma);
+                }
+            }
+        }
+    });
+}
+
+/// Chunk-parallel perturbation materialization (rollout side, Eq. 3 + 4):
+/// fill `dst` with member `member`'s perturbed lattice, reading the
+/// unperturbed values from `src`. `src` and `dst` must have identical
+/// tensor lengths (they describe the same lattice).
+pub fn fill_perturbation(
+    src: Vec<&[i8]>,
+    dst: Vec<&mut [i8]>,
+    spec: &PopulationSpec,
+    member: usize,
+    qmax: i8,
+    policy: KernelPolicy,
+) {
+    // Hard assert: a src/dst total mismatch would make the two chunk
+    // plans disagree and the zip below silently truncate, leaving stale
+    // dst elements — fail loudly instead (cost is two length sums).
+    assert_eq!(
+        src.iter().map(|t| t.len()).sum::<usize>(),
+        dst.iter().map(|t| t.len()).sum::<usize>(),
+        "src/dst lattice dims differ"
+    );
+    let (seed, sign) = spec.member(member);
+    let qmax_i = qmax as i32;
+    let s_chunks = chunk_segments(src, policy.chunk_size);
+    let d_chunks = chunk_segments_mut(dst, policy.chunk_size);
+    let tasks: Vec<_> = s_chunks.into_iter().zip(d_chunks).collect();
+    parallel::map_tasks(tasks, policy.threads, |(sc, mut dc)| {
+        let mut stream = NoiseStream::at(seed, spec.sigma, sign, sc.start);
+        let mut src_it = sc.segs.iter().flat_map(|s| s.iter());
+        for seg in dc.segs.iter_mut() {
+            for out in seg.iter_mut() {
+                let w = *src_it.next().expect("src/dst chunk length mismatch");
+                let delta = stream.next_delta();
+                let cand = w as i32 + delta;
+                // boundary gating: invalid updates are masked (Eq. 4)
+                *out = if (-qmax_i..=qmax_i).contains(&cand) { cand as i8 } else { w };
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunking_covers_every_element_once() {
+        let mut a = vec![0u8; 100];
+        let mut b = vec![0u8; 1];
+        let mut c = vec![0u8; 257];
+        for chunk in [1usize, 7, 64, 1000, usize::MAX] {
+            let tensors: Vec<&mut [u8]> =
+                vec![a.as_mut_slice(), b.as_mut_slice(), c.as_mut_slice()];
+            let chunks = chunk_segments_mut(tensors, chunk);
+            let mut next_start = 0usize;
+            let mut total = 0usize;
+            for ch in &chunks {
+                assert_eq!(ch.start, next_start);
+                assert_eq!(ch.len, ch.segs.iter().map(|s| s.len()).sum::<usize>());
+                assert!(ch.len >= 1);
+                next_start += ch.len;
+                total += ch.len;
+            }
+            assert_eq!(total, 100 + 1 + 257, "chunk={}", chunk);
+        }
+    }
+
+    #[test]
+    fn immutable_and_mutable_chunking_agree() {
+        let a = vec![0i8; 123];
+        let b = vec![0i8; 456];
+        let mut am = a.clone();
+        let mut bm = b.clone();
+        let ic = chunk_segments(vec![a.as_slice(), b.as_slice()], 100);
+        let mc = chunk_segments_mut(vec![am.as_mut_slice(), bm.as_mut_slice()], 100);
+        assert_eq!(ic.len(), mc.len());
+        for (i, m) in ic.iter().zip(mc.iter()) {
+            assert_eq!(i.start, m.start);
+            assert_eq!(i.len, m.len);
+            assert_eq!(i.segs.len(), m.segs.len());
+        }
+    }
+
+    #[test]
+    fn grad_chunk_windows_tile_the_scalar_gradient() {
+        let spec = PopulationSpec { gen_seed: 77, pairs: 3, sigma: 0.4 };
+        let fitness = [0.5f32, -0.5, 0.25, -0.25, 0.0, 0.1];
+        let d = 1000;
+        let mut full = vec![0.0f32; d];
+        crate::opt::accumulate_grad(&spec, &fitness, &mut full);
+        for (start, len) in [(0usize, 1usize), (1, 64), (999, 1), (500, 500), (0, 1000)] {
+            let mut g = vec![0.0f32; len];
+            grad_chunk(&spec, &fitness, start, &mut g);
+            for j in 0..len {
+                assert_eq!(
+                    g[j].to_bits(),
+                    full[start + j].to_bits(),
+                    "window ({}, {}) elem {}",
+                    start,
+                    len,
+                    j
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn accumulate_grad_chunked_matches_scalar_bitwise() {
+        let spec = PopulationSpec { gen_seed: 3, pairs: 4, sigma: 0.02 };
+        let fitness: Vec<f32> = (0..8).map(|i| (i as f32 - 3.5) / 8.0).collect();
+        let d = 9973; // prime: exercises ragged chunk tails
+        let mut scalar = vec![0.0f32; d];
+        crate::opt::accumulate_grad(&spec, &fitness, &mut scalar);
+        for chunk in [1usize, 64, 4096] {
+            for threads in [1usize, 2, 8] {
+                let mut g = vec![0.0f32; d];
+                accumulate_grad_chunked(&spec, &fitness, &mut g, KernelPolicy::new(chunk, threads));
+                let same = g
+                    .iter()
+                    .zip(scalar.iter())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "chunk={} threads={}", chunk, threads);
+            }
+        }
+    }
+}

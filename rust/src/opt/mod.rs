@@ -16,13 +16,15 @@ pub mod adam;
 pub mod adaptive;
 pub mod baselines;
 pub mod grad;
+pub mod kernels;
 pub mod qes;
 pub mod replay;
 
 pub use adam::{Adam, AdamConfig};
 pub use adaptive::AdaptiveReplayQes;
 pub use baselines::{MezoOptimizer, QuzoOptimizer};
-pub use grad::{accumulate_grad, apply_perturbation};
+pub use grad::{accumulate_grad, apply_perturbation, apply_perturbation_into};
+pub use kernels::{accumulate_grad_chunked, KernelPolicy, DEFAULT_CHUNK};
 pub use qes::QesFullResidual;
 pub use replay::SeedReplayQes;
 
@@ -104,7 +106,7 @@ pub fn normalize_fitness(raw: &[f32]) -> Vec<f32> {
 
 /// Per-step update statistics (paper Table 7 bottom: update ratio and
 /// boundary-hit ratio rho).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct StepStats {
     /// Lattice elements whose value changed this step.
     pub n_changed: u64,

@@ -16,21 +16,22 @@
 //! inactive — is enforced by the property tests below.
 
 use crate::model::ParamStore;
-use crate::opt::{accumulate_grad, gate_apply, EsHyper, LatticeOptimizer, PopulationSpec, StepStats};
-use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+use crate::opt::{kernels, EsHyper, KernelPolicy, LatticeOptimizer, PopulationSpec, StepStats};
+use crate::util::f16::f16_bits_to_f32;
 
 pub struct QesFullResidual {
     pub hyper: EsHyper,
+    /// Kernel execution policy (chunk size / threads). Never affects the
+    /// produced lattice or residual — only wall-clock.
+    pub policy: KernelPolicy,
     /// FP16-stored residual (paper Alg. 1 line 3: "Residuals e_0 (FP16)").
     e: Vec<u16>,
-    /// Scratch gradient buffer, reused across generations.
-    g: Vec<f32>,
     qmax: i8,
 }
 
 impl QesFullResidual {
     pub fn new(d: usize, qmax: i8, hyper: EsHyper) -> Self {
-        QesFullResidual { hyper, e: vec![0u16; d], g: vec![0.0f32; d], qmax }
+        QesFullResidual { hyper, policy: KernelPolicy::default(), e: vec![0u16; d], qmax }
     }
 
     /// Residual snapshot as f32 (tests / diagnostics).
@@ -48,34 +49,25 @@ impl LatticeOptimizer for QesFullResidual {
     ) -> anyhow::Result<StepStats> {
         let d = store.lattice_dim();
         anyhow::ensure!(d == self.e.len(), "lattice dim {} != residual dim {}", d, self.e.len());
-        accumulate_grad(spec, fitness, &mut self.g);
-
-        let (alpha, gamma, qmax) = (self.hyper.alpha, self.hyper.gamma, self.qmax);
-        let mut stats = StepStats { d: d as u64, ..Default::default() };
-        let mut j = 0usize;
-        for tensor in store.lattice_i8_mut() {
-            for w in tensor.iter_mut() {
-                let u = alpha * self.g[j] + gamma * f16_bits_to_f32(self.e[j]);
-                let dw = u.round() as i32;
-                let (applied, boundary) = gate_apply(w, dw, qmax);
-                if applied != 0 {
-                    stats.n_changed += 1;
-                    if boundary {
-                        stats.n_boundary += 1;
-                    }
-                } else if dw != 0 {
-                    stats.n_gated += 1;
-                }
-                self.e[j] = f32_to_f16_bits(u - applied as f32);
-                j += 1;
-            }
-        }
+        anyhow::ensure!(fitness.len() == spec.n_members());
+        // Fused chunk-parallel kernel: gradient regeneration, error
+        // feedback and gating in one pass — no d-sized gradient buffer.
+        let stats = kernels::fused_full_residual(
+            store.lattice_i8_mut(),
+            &mut self.e,
+            spec,
+            fitness,
+            self.hyper.alpha,
+            self.hyper.gamma,
+            self.qmax,
+            self.policy,
+        );
         Ok(stats)
     }
 
     fn state_bytes(&self) -> u64 {
-        // persistent optimizer state: the FP16 residual only (the scratch
-        // gradient exists during the update of every method alike).
+        // persistent optimizer state: the FP16 residual only (the fused
+        // kernel's transient scratch is one chunk, not d-sized).
         (self.e.len() * 2) as u64
     }
 
@@ -88,6 +80,7 @@ impl LatticeOptimizer for QesFullResidual {
 mod tests {
     use super::*;
     use crate::model::{init::init_fp, ParamStore};
+    use crate::opt::accumulate_grad;
     use crate::quant::Format;
     use crate::runtime::manifest::Manifest;
 

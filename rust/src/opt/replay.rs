@@ -15,7 +15,8 @@
 use std::collections::VecDeque;
 
 use crate::model::ParamStore;
-use crate::opt::{accumulate_grad, gate_apply, EsHyper, LatticeOptimizer, PopulationSpec, StepStats};
+use crate::opt::kernels::{self, ReplayStep};
+use crate::opt::{EsHyper, KernelPolicy, LatticeOptimizer, PopulationSpec, StepStats};
 
 #[derive(Debug, Clone)]
 struct HistoryStep {
@@ -27,9 +28,12 @@ struct HistoryStep {
 
 pub struct SeedReplayQes {
     pub hyper: EsHyper,
+    /// Kernel execution policy (chunk size / threads). Never affects the
+    /// produced lattice or residual — only wall-clock.
+    pub policy: KernelPolicy,
     history: VecDeque<HistoryStep>,
-    /// Scratch buffers, reused across generations (transient, not state).
-    g: Vec<f32>,
+    /// Rematerialized proxy residual (transient scratch, not state — kept
+    /// for diagnostics and the adaptive-K controller).
     e_proxy: Vec<f32>,
     qmax: i8,
 }
@@ -39,7 +43,7 @@ impl SeedReplayQes {
         SeedReplayQes {
             history: VecDeque::with_capacity(hyper.k_window + 1),
             hyper,
-            g: vec![0.0f32; d],
+            policy: KernelPolicy::default(),
             e_proxy: vec![0.0f32; d],
             qmax,
         }
@@ -53,53 +57,6 @@ impl SeedReplayQes {
     pub fn history_len(&self) -> usize {
         self.history.len()
     }
-
-    /// Replay one historical step's dynamics into the proxy residual,
-    /// gating against the *current* weights (the §4.5 approximation).
-    /// `apply` = true additionally commits the final step's deltas.
-    fn simulate_step(
-        &mut self,
-        store: &mut ParamStore,
-        spec: &PopulationSpec,
-        fitness: &[f32],
-        alpha: f32,
-        apply: bool,
-    ) -> StepStats {
-        accumulate_grad(spec, fitness, &mut self.g);
-        let gamma = self.hyper.gamma;
-        let qmax = self.qmax;
-        let mut stats = StepStats { d: self.g.len() as u64, ..Default::default() };
-        let mut j = 0usize;
-        for tensor in store.lattice_i8_mut() {
-            for w in tensor.iter_mut() {
-                let u = alpha * self.g[j] + gamma * self.e_proxy[j];
-                let dw = u.round() as i32;
-                let applied = if apply {
-                    let (a, boundary) = gate_apply(w, dw, qmax);
-                    if a != 0 {
-                        stats.n_changed += 1;
-                        if boundary {
-                            stats.n_boundary += 1;
-                        }
-                    } else if dw != 0 {
-                        stats.n_gated += 1;
-                    }
-                    a
-                } else {
-                    // replay: simulate the gate against current W, do not mutate
-                    let next = *w as i32 + dw;
-                    if dw != 0 && (-(qmax as i32)..=qmax as i32).contains(&next) {
-                        dw
-                    } else {
-                        0
-                    }
-                };
-                self.e_proxy[j] = u - applied as f32;
-                j += 1;
-            }
-        }
-        stats
-    }
 }
 
 impl LatticeOptimizer for SeedReplayQes {
@@ -110,25 +67,49 @@ impl LatticeOptimizer for SeedReplayQes {
         fitness: &[f32],
     ) -> anyhow::Result<StepStats> {
         let d = store.lattice_dim();
-        anyhow::ensure!(d == self.g.len(), "lattice dim {} != buffer dim {}", d, self.g.len());
+        anyhow::ensure!(
+            d == self.e_proxy.len(),
+            "lattice dim {} != buffer dim {}",
+            d,
+            self.e_proxy.len()
+        );
+        anyhow::ensure!(fitness.len() == spec.n_members());
 
-        // 1) Rematerialize the proxy residual from the history window.
-        self.e_proxy.fill(0.0);
-        let steps: Vec<HistoryStep> = self.history.iter().cloned().collect();
-        for h in &steps {
-            let hspec = PopulationSpec {
-                gen_seed: h.gen_seed,
-                pairs: h.fitness.len() / 2,
-                sigma: h.sigma,
-            };
-            self.simulate_step(store, &hspec, &h.fitness, h.alpha, false);
-        }
+        // Describe the replay window by BORROWING the history — the fused
+        // kernel walks `(spec, &fitness, alpha)` views; no fitness vector
+        // is cloned per update.
+        let steps: Vec<ReplayStep<'_>> = self
+            .history
+            .iter()
+            .map(|h| ReplayStep {
+                spec: PopulationSpec {
+                    gen_seed: h.gen_seed,
+                    pairs: h.fitness.len() / 2,
+                    sigma: h.sigma,
+                },
+                fitness: &h.fitness,
+                alpha: h.alpha,
+            })
+            .collect();
+        let current = ReplayStep { spec: spec.clone(), fitness, alpha: self.hyper.alpha };
 
-        // 2) Current step: rematerialized error feeds the real update.
+        // Fused K-deep tile: per chunk, the proxy residual is
+        // rematerialized across ALL history steps while cache-resident,
+        // then the current step commits — one pass over d instead of the
+        // scalar path's K+1 full-lattice sweeps.
+        let stats = kernels::fused_seed_replay(
+            store.lattice_i8_mut(),
+            &mut self.e_proxy,
+            &steps,
+            &current,
+            self.hyper.gamma,
+            self.qmax,
+            self.policy,
+        );
+        drop(steps);
+
+        // Record this generation; trim the window.
         let alpha = self.hyper.alpha;
-        let stats = self.simulate_step(store, spec, fitness, alpha, true);
-
-        // 3) Record this generation; trim the window.
         self.history.push_back(HistoryStep {
             gen_seed: spec.gen_seed,
             fitness: fitness.to_vec(),

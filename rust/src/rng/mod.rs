@@ -16,6 +16,11 @@ pub mod stream;
 
 pub use stream::{member_seed, NoiseStream};
 
+/// SplitMix64's Weyl-sequence increment. The state after `n` draws from
+/// seed `s` is exactly `s + n * GAMMA (mod 2^64)` — the property that makes
+/// every stream position O(1)-addressable (see [`SplitMix64::jump`]).
+pub const GAMMA: u64 = 0x9e37_79b9_7f4a_7c15;
+
 /// SplitMix64: 64-bit state, one multiply-xorshift round per output.
 #[derive(Debug, Clone)]
 pub struct SplitMix64 {
@@ -27,9 +32,20 @@ impl SplitMix64 {
         SplitMix64 { state: seed }
     }
 
+    /// Advance the stream by `n_draws` outputs in O(1): because the state
+    /// is a pure Weyl sequence (`state += GAMMA` per draw) with the mixing
+    /// applied on output only, skipping ahead is a single multiply-add.
+    /// `jump(n)` followed by a draw produces exactly the `n+1`-th value of
+    /// the sequential stream — the counter-addressable property all
+    /// chunk-parallel kernels rely on.
+    #[inline]
+    pub fn jump(&mut self, n_draws: u64) {
+        self.state = self.state.wrapping_add(GAMMA.wrapping_mul(n_draws));
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
-        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        self.state = self.state.wrapping_add(GAMMA);
         let mut z = self.state;
         z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
         z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
@@ -94,6 +110,31 @@ mod tests {
         for _ in 0..1000 {
             assert_eq!(a.next_u64(), b.next_u64());
         }
+    }
+
+    #[test]
+    fn jump_matches_sequential_draws() {
+        for &(seed, skip) in &[(0u64, 1u64), (42, 7), (0xdead_beef, 1000), (u64::MAX, 123_456)] {
+            let mut seq = SplitMix64::new(seed);
+            for _ in 0..skip {
+                seq.next_u64();
+            }
+            let mut jumped = SplitMix64::new(seed);
+            jumped.jump(skip);
+            for _ in 0..100 {
+                assert_eq!(seq.next_u64(), jumped.next_u64(), "seed={} skip={}", seed, skip);
+            }
+        }
+    }
+
+    #[test]
+    fn jump_composes_additively() {
+        let mut a = SplitMix64::new(9);
+        a.jump(1000);
+        let mut b = SplitMix64::new(9);
+        b.jump(400);
+        b.jump(600);
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

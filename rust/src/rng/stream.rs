@@ -23,7 +23,28 @@ pub fn member_seed(gen_seed: u64, member: u64) -> u64 {
     z ^ (z >> 33)
 }
 
+/// Raw uniforms consumed per element by the *delta* view of the stream
+/// (`next_delta` / `next_pair_deltas`): one Gaussian (2 draws via
+/// Box–Muller) plus one shared stochastic-rounding uniform.
+pub const DELTA_DRAWS_PER_ELEM: u64 = 3;
+
+/// Raw uniforms consumed per element by the *continuous* view
+/// (`next_scaled_gauss`): the Box–Muller pair only.
+pub const GAUSS_DRAWS_PER_ELEM: u64 = 2;
+
 /// A deterministic stream of discrete perturbation values.
+///
+/// Every element consumes a FIXED number of underlying uniforms
+/// ([`DELTA_DRAWS_PER_ELEM`] for the delta view, [`GAUSS_DRAWS_PER_ELEM`]
+/// for the continuous view), and `SplitMix64` advances its state by a
+/// constant per draw — so the stream is *counter-addressable*: [`at`]
+/// materializes the stream positioned at any element index in O(1),
+/// which is what lets chunk-parallel kernels regenerate arbitrary windows
+/// of the noise independently, bit-identical to a sequential walk.
+///
+/// A stream instance must stick to ONE view (delta or continuous): the two
+/// views consume different draw counts per element, so mixing them
+/// desynchronizes element indexing.
 pub struct NoiseStream {
     rng: SplitMix64,
     sigma: f32,
@@ -34,6 +55,24 @@ impl NoiseStream {
     /// `sign` is +1.0 / -1.0 for the two halves of an antithetic pair.
     pub fn new(seed: u64, sigma: f32, sign: f32) -> Self {
         NoiseStream { rng: SplitMix64::new(seed), sigma, sign }
+    }
+
+    /// The delta-view stream positioned at element `elem` in O(1):
+    /// equivalent to `new(..)` followed by `elem` calls of `next_delta`
+    /// (or `next_pair_deltas`), at constant cost.
+    pub fn at(seed: u64, sigma: f32, sign: f32, elem: usize) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        rng.jump(DELTA_DRAWS_PER_ELEM.wrapping_mul(elem as u64));
+        NoiseStream { rng, sigma, sign }
+    }
+
+    /// The continuous-view stream positioned at element `elem` in O(1):
+    /// equivalent to `new(..)` followed by `elem` calls of
+    /// `next_scaled_gauss`.
+    pub fn at_gauss(seed: u64, sigma: f32, sign: f32, elem: usize) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        rng.jump(GAUSS_DRAWS_PER_ELEM.wrapping_mul(elem as u64));
+        NoiseStream { rng, sigma, sign }
     }
 
     /// The continuous scaled-Gaussian value sigma * eps (pre-rounding).
@@ -97,6 +136,44 @@ mod tests {
         let mut b = NoiseStream::new(77, 0.5, 1.0);
         let second: Vec<i32> = (0..10_000).map(|_| b.next_delta()).collect();
         assert_eq!(first, second);
+    }
+
+    #[test]
+    fn at_matches_sequential_delta_stream() {
+        let (seed, sigma) = (0x5eed, 0.4f32);
+        let mut seq = NoiseStream::new(seed, sigma, 1.0);
+        let reference: Vec<(i32, i32)> = (0..5000).map(|_| seq.next_pair_deltas()).collect();
+        for &start in &[0usize, 1, 63, 64, 1000, 4095, 4999] {
+            let mut s = NoiseStream::at(seed, sigma, 1.0, start);
+            for (j, want) in reference.iter().enumerate().skip(start).take(128) {
+                assert_eq!(s.next_pair_deltas(), *want, "start={} j={}", start, j);
+            }
+        }
+    }
+
+    #[test]
+    fn at_matches_sequential_single_deltas() {
+        let mut seq = NoiseStream::new(99, 0.7, -1.0);
+        let reference: Vec<i32> = (0..2000).map(|_| seq.next_delta()).collect();
+        for &start in &[0usize, 17, 512, 1999] {
+            let mut s = NoiseStream::at(99, 0.7, -1.0, start);
+            for (j, &want) in reference.iter().enumerate().skip(start).take(64) {
+                assert_eq!(s.next_delta(), want, "start={} j={}", start, j);
+            }
+        }
+    }
+
+    #[test]
+    fn at_gauss_matches_sequential_gauss_stream() {
+        let mut seq = NoiseStream::new(7, 0.3, 1.0);
+        let reference: Vec<f32> = (0..2000).map(|_| seq.next_scaled_gauss()).collect();
+        for &start in &[0usize, 5, 100, 1536] {
+            let mut s = NoiseStream::at_gauss(7, 0.3, 1.0, start);
+            for (j, &want) in reference.iter().enumerate().skip(start).take(64) {
+                let got = s.next_scaled_gauss();
+                assert_eq!(got.to_bits(), want.to_bits(), "start={} j={}", start, j);
+            }
+        }
     }
 
     #[test]

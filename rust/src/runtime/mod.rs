@@ -6,6 +6,14 @@
 pub mod engine;
 pub mod manifest;
 
+/// Whether a real PJRT runtime backs the `xla` dependency. The offline
+/// build links a stub (`rust/vendor/xla`) and reports `false`; engine-bound
+/// tests and tools gate themselves on this instead of failing deep inside
+/// `Session` construction.
+pub fn backend_available() -> bool {
+    xla::available()
+}
+
 pub use engine::{
     f32_literal, i8_literal, literal_for, param_literals, to_f32_scalar, to_f32_vec,
     to_i32_vec, Engine, HostTensor,

@@ -89,6 +89,63 @@ impl Bench {
             );
         }
     }
+
+    /// Emit one `BENCH {json}` line per case — the machine-readable record
+    /// perf tracking greps out of bench logs (see PERF.md). Keys:
+    /// group, case, iters, mean_ns, p50_ns, p95_ns.
+    pub fn report_json(&self) {
+        for r in &self.results {
+            println!(
+                "BENCH {{\"group\":{},\"case\":{},\"iters\":{},\"mean_ns\":{},\"p50_ns\":{},\"p95_ns\":{}}}",
+                json_str(&self.group),
+                json_str(&r.name),
+                r.iters,
+                r.mean.as_nanos(),
+                r.p50.as_nanos(),
+                r.p95.as_nanos()
+            );
+        }
+    }
+
+    /// Mean time of a recorded case (panics if the case was never run).
+    pub fn mean_ns(&self, name: &str) -> u128 {
+        self.results
+            .iter()
+            .find(|r| r.name == name)
+            .unwrap_or_else(|| panic!("no bench case named {:?}", name))
+            .mean
+            .as_nanos()
+    }
+}
+
+/// Emit a `BENCH` speedup record comparing a baseline case to an optimized
+/// one (ratio > 1 means the optimized case is faster).
+pub fn report_speedup(group: &str, case: &str, baseline_ns: u128, optimized_ns: u128) {
+    let ratio = baseline_ns as f64 / optimized_ns.max(1) as f64;
+    println!(
+        "BENCH {{\"group\":{},\"case\":{},\"baseline_ns\":{},\"optimized_ns\":{},\"speedup\":{:.3}}}",
+        json_str(group),
+        json_str(case),
+        baseline_ns,
+        optimized_ns,
+        ratio
+    );
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 pub fn fmt_dur(d: Duration) -> String {

@@ -52,6 +52,26 @@ pub fn f32_to_f16_bits(x: f32) -> u16 {
     sign // underflow to zero
 }
 
+/// Decode a slice of f16 bit patterns into an f32 buffer of equal length.
+/// The batch form of [`f16_bits_to_f32`] — the update kernels decode one
+/// residual chunk at a time so the conversion stays in cache with the
+/// fused gradient/gating pass that consumes it.
+pub fn f16_decode_slice(bits: &[u16], out: &mut [f32]) {
+    assert_eq!(bits.len(), out.len(), "f16 decode length mismatch");
+    for (o, &h) in out.iter_mut().zip(bits.iter()) {
+        *o = f16_bits_to_f32(h);
+    }
+}
+
+/// Encode a slice of f32 values into f16 bit patterns of equal length
+/// (round-to-nearest-even, like [`f32_to_f16_bits`]).
+pub fn f16_encode_slice(xs: &[f32], out: &mut [u16]) {
+    assert_eq!(xs.len(), out.len(), "f16 encode length mismatch");
+    for (o, &x) in out.iter_mut().zip(xs.iter()) {
+        *o = f32_to_f16_bits(x);
+    }
+}
+
 /// f16 bits -> f32.
 pub fn f16_bits_to_f32(h: u16) -> f32 {
     let sign = ((h & 0x8000) as u32) << 16;
@@ -131,6 +151,24 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn slice_helpers_match_scalar_conversions() {
+        let xs: Vec<f32> = (0..4096)
+            .map(|i| ((i as f32) - 2048.0) / 739.0)
+            .chain([0.0, -0.0, 1e-6, -65504.0, 65504.0, 1e6])
+            .collect();
+        let mut bits = vec![0u16; xs.len()];
+        f16_encode_slice(&xs, &mut bits);
+        for (j, (&x, &h)) in xs.iter().zip(bits.iter()).enumerate() {
+            assert_eq!(h, f32_to_f16_bits(x), "elem {}", j);
+        }
+        let mut back = vec![0.0f32; xs.len()];
+        f16_decode_slice(&bits, &mut back);
+        for (j, (&h, &b)) in bits.iter().zip(back.iter()).enumerate() {
+            assert_eq!(b.to_bits(), f16_bits_to_f32(h).to_bits(), "elem {}", j);
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod args;
 pub mod bench;
 pub mod f16;
 pub mod json;
+pub mod parallel;
 pub mod prop;
 
 /// Mean of a slice (0.0 for empty).

@@ -1,0 +1,93 @@
+//! Minimal deterministic task-parallel executor on `std::thread::scope`.
+//!
+//! The offline build vendors no thread-pool crate, and the kernels in
+//! `opt::kernels` don't need one: their determinism contract ("bit-identical
+//! results for any chunk size and thread count") means the executor only
+//! decides *which thread* runs a task, never what the task computes. Tasks
+//! carry disjoint mutable slices, results come back in task order, and a
+//! panicking task propagates when the scope joins.
+//!
+//! Threads are spawned per call. The kernels run on multi-millisecond
+//! workloads (whole-lattice updates), so spawn cost (~tens of µs) is noise;
+//! if a persistent pool ever becomes worthwhile, it slots in behind
+//! [`map_tasks`] without touching any kernel.
+
+/// Number of worker threads to use by default (the machine's available
+/// parallelism, falling back to 1 when it cannot be queried).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every task, distributing tasks round-robin across up to
+/// `threads` OS threads, and return the results in task order.
+///
+/// With `threads <= 1` (or fewer than two tasks) everything runs inline on
+/// the caller's thread — the sequential reference path.
+pub fn map_tasks<T, R, F>(tasks: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = tasks.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return tasks.into_iter().map(f).collect();
+    }
+    let mut buckets: Vec<Vec<(usize, T)>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, t) in tasks.into_iter().enumerate() {
+        buckets[i % threads].push((i, t));
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let fref = &f;
+    std::thread::scope(|s| {
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, R)>();
+        for bucket in buckets {
+            let tx = tx.clone();
+            s.spawn(move || {
+                for (i, t) in bucket {
+                    let _ = tx.send((i, fref(t)));
+                }
+            });
+        }
+        drop(tx);
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+    });
+    out.into_iter().map(|r| r.expect("parallel worker dropped a task")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_task_order() {
+        for threads in [1usize, 2, 8] {
+            let tasks: Vec<usize> = (0..97).collect();
+            let got = map_tasks(tasks, threads, |i| i * i);
+            let want: Vec<usize> = (0..97).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={}", threads);
+        }
+    }
+
+    #[test]
+    fn mutable_slice_tasks_work() {
+        let mut data = vec![0u32; 1000];
+        let chunks: Vec<&mut [u32]> = data.chunks_mut(64).collect();
+        map_tasks(chunks, 4, |c| {
+            for x in c.iter_mut() {
+                *x += 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn empty_and_single_task() {
+        let got: Vec<u32> = map_tasks(Vec::<u32>::new(), 8, |x| x);
+        assert!(got.is_empty());
+        assert_eq!(map_tasks(vec![5u32], 8, |x| x + 1), vec![6]);
+    }
+}

@@ -1,0 +1,448 @@
+//! Chunked ↔ scalar bit-equivalence: the determinism contract of
+//! `opt::kernels`.
+//!
+//! Every fused chunk-parallel kernel must produce results bit-identical to
+//! the sequential scalar path for ANY chunk size and thread count — the
+//! seed-replay correctness story (paper Algorithm 2) depends on a lattice
+//! evolved on 8 threads being re-materializable on 1. The reference
+//! implementations below are verbatim ports of the pre-kernel scalar
+//! update loops; each optimizer is then driven through multi-generation
+//! trajectories under chunk sizes {1, 64, 4096} × thread counts {1, 2, 8}
+//! and compared field-for-field, bit-for-bit.
+
+use qes::model::{init::init_fp, ParamStore};
+use qes::opt::{
+    accumulate_grad, apply_perturbation, apply_perturbation_into, normalize_fitness,
+    EsHyper, KernelPolicy, LatticeOptimizer, MezoOptimizer, PopulationSpec, QesFullResidual,
+    QuzoOptimizer, SeedReplayQes, StepStats,
+};
+use qes::quant::Format;
+use qes::rng::{NoiseStream, SplitMix64};
+use qes::runtime::Manifest;
+use qes::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+
+/// The policy grid the contract is enforced over (plus the default).
+fn policies() -> Vec<KernelPolicy> {
+    let mut out = Vec::new();
+    for &chunk in &[1usize, 64, 4096] {
+        for &threads in &[1usize, 2, 8] {
+            out.push(KernelPolicy::new(chunk, threads));
+        }
+    }
+    out.push(KernelPolicy::default());
+    out
+}
+
+fn store(fmt: Format, seed: u64) -> ParamStore {
+    let man = Manifest::load("artifacts/manifest.json").unwrap();
+    let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
+    init_fp(&mut fp, seed);
+    if fmt == Format::Fp32 {
+        return fp;
+    }
+    ParamStore::quantize_from(&fp, &man, fmt, None).unwrap()
+}
+
+fn flat_i8(s: &ParamStore) -> Vec<i8> {
+    s.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect()
+}
+
+fn gen_fitness(rng: &mut SplitMix64, pairs: usize) -> Vec<f32> {
+    let raw: Vec<f32> = (0..2 * pairs).map(|_| rng.uniform01()).collect();
+    normalize_fitness(&raw)
+}
+
+// ---------------------------------------------------------------------------
+// Reference implementations: verbatim ports of the pre-kernel scalar loops.
+// ---------------------------------------------------------------------------
+
+fn ref_gate(w: &mut i8, dw: i32, qmax: i8) -> (i32, bool) {
+    if dw == 0 {
+        return (0, false);
+    }
+    let next = *w as i32 + dw;
+    if next < -(qmax as i32) || next > qmax as i32 {
+        (0, false)
+    } else {
+        *w = next as i8;
+        (dw, next.unsigned_abs() == qmax as u32)
+    }
+}
+
+fn ref_full_residual_update(
+    store: &mut ParamStore,
+    e: &mut [u16],
+    g: &mut [f32],
+    spec: &PopulationSpec,
+    fitness: &[f32],
+    alpha: f32,
+    gamma: f32,
+    qmax: i8,
+) -> StepStats {
+    accumulate_grad(spec, fitness, g);
+    let mut stats = StepStats { d: g.len() as u64, ..Default::default() };
+    let mut j = 0usize;
+    for tensor in store.lattice_i8_mut() {
+        for w in tensor.iter_mut() {
+            let u = alpha * g[j] + gamma * f16_bits_to_f32(e[j]);
+            let dw = u.round() as i32;
+            let (applied, boundary) = ref_gate(w, dw, qmax);
+            if applied != 0 {
+                stats.n_changed += 1;
+                if boundary {
+                    stats.n_boundary += 1;
+                }
+            } else if dw != 0 {
+                stats.n_gated += 1;
+            }
+            e[j] = f32_to_f16_bits(u - applied as f32);
+            j += 1;
+        }
+    }
+    stats
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ref_replay_simulate_step(
+    store: &mut ParamStore,
+    e_proxy: &mut [f32],
+    g: &mut [f32],
+    spec: &PopulationSpec,
+    fitness: &[f32],
+    alpha: f32,
+    gamma: f32,
+    qmax: i8,
+    apply: bool,
+) -> StepStats {
+    accumulate_grad(spec, fitness, g);
+    let mut stats = StepStats { d: g.len() as u64, ..Default::default() };
+    let mut j = 0usize;
+    for tensor in store.lattice_i8_mut() {
+        for w in tensor.iter_mut() {
+            let u = alpha * g[j] + gamma * e_proxy[j];
+            let dw = u.round() as i32;
+            let applied = if apply {
+                let (a, boundary) = ref_gate(w, dw, qmax);
+                if a != 0 {
+                    stats.n_changed += 1;
+                    if boundary {
+                        stats.n_boundary += 1;
+                    }
+                } else if dw != 0 {
+                    stats.n_gated += 1;
+                }
+                a
+            } else {
+                let next = *w as i32 + dw;
+                if dw != 0 && (-(qmax as i32)..=qmax as i32).contains(&next) {
+                    dw
+                } else {
+                    0
+                }
+            };
+            e_proxy[j] = u - applied as f32;
+            j += 1;
+        }
+    }
+    stats
+}
+
+/// Reference stateless seed-replay optimizer (K+1 full-lattice passes).
+struct RefSeedReplay {
+    hyper: EsHyper,
+    history: Vec<(u64, Vec<f32>, f32, f32)>, // (gen_seed, fitness, sigma, alpha)
+    g: Vec<f32>,
+    e_proxy: Vec<f32>,
+    qmax: i8,
+}
+
+impl RefSeedReplay {
+    fn new(d: usize, qmax: i8, hyper: EsHyper) -> Self {
+        RefSeedReplay {
+            hyper,
+            history: Vec::new(),
+            g: vec![0.0f32; d],
+            e_proxy: vec![0.0f32; d],
+            qmax,
+        }
+    }
+
+    fn update(
+        &mut self,
+        store: &mut ParamStore,
+        spec: &PopulationSpec,
+        fitness: &[f32],
+    ) -> StepStats {
+        self.e_proxy.fill(0.0);
+        let steps = self.history.clone();
+        for (gen_seed, hfit, sigma, halpha) in &steps {
+            let hspec =
+                PopulationSpec { gen_seed: *gen_seed, pairs: hfit.len() / 2, sigma: *sigma };
+            ref_replay_simulate_step(
+                store,
+                &mut self.e_proxy,
+                &mut self.g,
+                &hspec,
+                hfit,
+                *halpha,
+                self.hyper.gamma,
+                self.qmax,
+                false,
+            );
+        }
+        let stats = ref_replay_simulate_step(
+            store,
+            &mut self.e_proxy,
+            &mut self.g,
+            spec,
+            fitness,
+            self.hyper.alpha,
+            self.hyper.gamma,
+            self.qmax,
+            true,
+        );
+        self.history.push((spec.gen_seed, fitness.to_vec(), spec.sigma, self.hyper.alpha));
+        while self.history.len() > self.hyper.k_window {
+            self.history.remove(0);
+        }
+        stats
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The contract tests.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn full_residual_bitwise_equivalence_across_policies() {
+    let hyper = EsHyper { sigma: 0.5, alpha: 0.35, gamma: 0.95, pairs: 4, k_window: 0 };
+    let qmax = 7i8;
+
+    // reference trajectory
+    let mut s_ref = store(Format::Int4, 11);
+    let d = s_ref.lattice_dim();
+    let mut e_ref = vec![0u16; d];
+    let mut g_ref = vec![0.0f32; d];
+    let mut rng = SplitMix64::new(5);
+    let mut specs = Vec::new();
+    for _ in 0..8 {
+        let spec = PopulationSpec { gen_seed: rng.next_u64(), pairs: 4, sigma: 0.5 };
+        let fitness = gen_fitness(&mut rng, 4);
+        specs.push((spec, fitness));
+    }
+    let mut ref_stats = Vec::new();
+    for (spec, fitness) in &specs {
+        ref_stats.push(ref_full_residual_update(
+            &mut s_ref, &mut e_ref, &mut g_ref, spec, fitness, hyper.alpha, hyper.gamma, qmax,
+        ));
+    }
+    let ref_lattice = flat_i8(&s_ref);
+
+    for policy in policies() {
+        let mut s = store(Format::Int4, 11);
+        let mut opt = QesFullResidual::new(d, qmax, hyper.clone());
+        opt.policy = policy;
+        let mut stats = Vec::new();
+        for (spec, fitness) in &specs {
+            stats.push(opt.update(&mut s, spec, fitness).unwrap());
+        }
+        assert_eq!(
+            flat_i8(&s),
+            ref_lattice,
+            "lattice diverged: chunk={} threads={}",
+            policy.chunk_size,
+            policy.threads
+        );
+        let e_bits: Vec<u32> = opt.residual().iter().map(|x| x.to_bits()).collect();
+        let ref_bits: Vec<u32> =
+            e_ref.iter().map(|&h| f16_bits_to_f32(h).to_bits()).collect();
+        assert_eq!(
+            e_bits, ref_bits,
+            "residual diverged: chunk={} threads={}",
+            policy.chunk_size, policy.threads
+        );
+        assert_eq!(
+            stats, ref_stats,
+            "stats diverged: chunk={} threads={}",
+            policy.chunk_size, policy.threads
+        );
+    }
+}
+
+#[test]
+fn seed_replay_bitwise_equivalence_across_policies() {
+    let hyper = EsHyper { sigma: 0.5, alpha: 0.4, gamma: 0.9, pairs: 4, k_window: 5 };
+    let qmax = 7i8;
+
+    let mut s_ref = store(Format::Int4, 21);
+    let d = s_ref.lattice_dim();
+    let mut reference = RefSeedReplay::new(d, qmax, hyper.clone());
+    let mut rng = SplitMix64::new(9);
+    let mut specs = Vec::new();
+    for _ in 0..10 {
+        let spec = PopulationSpec { gen_seed: rng.next_u64(), pairs: 4, sigma: 0.5 };
+        let fitness = gen_fitness(&mut rng, 4);
+        specs.push((spec, fitness));
+    }
+    let mut ref_stats = Vec::new();
+    for (spec, fitness) in &specs {
+        ref_stats.push(reference.update(&mut s_ref, spec, fitness));
+    }
+    let ref_lattice = flat_i8(&s_ref);
+    let ref_proxy_bits: Vec<u32> =
+        reference.e_proxy.iter().map(|x| x.to_bits()).collect();
+
+    for policy in policies() {
+        let mut s = store(Format::Int4, 21);
+        let mut opt = SeedReplayQes::new(d, qmax, hyper.clone());
+        opt.policy = policy;
+        let mut stats = Vec::new();
+        for (spec, fitness) in &specs {
+            stats.push(opt.update(&mut s, spec, fitness).unwrap());
+        }
+        assert_eq!(
+            flat_i8(&s),
+            ref_lattice,
+            "lattice diverged: chunk={} threads={}",
+            policy.chunk_size,
+            policy.threads
+        );
+        let proxy_bits: Vec<u32> =
+            opt.proxy_residual().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(
+            proxy_bits, ref_proxy_bits,
+            "proxy residual diverged: chunk={} threads={}",
+            policy.chunk_size, policy.threads
+        );
+        assert_eq!(
+            stats, ref_stats,
+            "stats diverged: chunk={} threads={}",
+            policy.chunk_size, policy.threads
+        );
+    }
+}
+
+#[test]
+fn quzo_bitwise_equivalence_across_policies() {
+    let hyper = EsHyper { sigma: 0.5, alpha: 0.6, gamma: 1.0, pairs: 3, k_window: 0 };
+    let qmax = 7i8;
+    let mut rng = SplitMix64::new(31);
+    let mut specs = Vec::new();
+    for _ in 0..6 {
+        let spec = PopulationSpec { gen_seed: rng.next_u64(), pairs: 3, sigma: 0.5 };
+        let fitness = gen_fitness(&mut rng, 3);
+        specs.push((spec, fitness));
+    }
+
+    // scalar-policy trajectory is the reference (one chunk, one thread —
+    // the exact historical op sequence)
+    let mut s_ref = store(Format::Int4, 41);
+    let d = s_ref.lattice_dim();
+    let mut opt_ref = QuzoOptimizer::new(d, qmax, hyper.clone());
+    opt_ref.policy = KernelPolicy::scalar();
+    let mut ref_stats = Vec::new();
+    for (spec, fitness) in &specs {
+        ref_stats.push(opt_ref.update(&mut s_ref, spec, fitness).unwrap());
+    }
+    let ref_lattice = flat_i8(&s_ref);
+
+    for policy in policies() {
+        let mut s = store(Format::Int4, 41);
+        let mut opt = QuzoOptimizer::new(d, qmax, hyper.clone());
+        opt.policy = policy;
+        let mut stats = Vec::new();
+        for (spec, fitness) in &specs {
+            stats.push(opt.update(&mut s, spec, fitness).unwrap());
+        }
+        assert_eq!(
+            flat_i8(&s),
+            ref_lattice,
+            "lattice diverged: chunk={} threads={}",
+            policy.chunk_size,
+            policy.threads
+        );
+        assert_eq!(stats, ref_stats, "stats diverged");
+    }
+}
+
+#[test]
+fn perturbation_bitwise_equivalence_across_policies() {
+    let s = store(Format::Int4, 51);
+    let spec = PopulationSpec { gen_seed: 123, pairs: 2, sigma: 0.8 };
+    for member in 0..4 {
+        // sequential-stream reference, exactly the historical walk
+        let (seed, sign) = spec.member(member);
+        let mut stream = NoiseStream::new(seed, spec.sigma, sign);
+        let reference: Vec<Vec<i8>> = s
+            .lattice_i8()
+            .into_iter()
+            .map(|src| {
+                src.iter()
+                    .map(|&w| {
+                        let d = stream.next_delta();
+                        let cand = w as i32 + d;
+                        if (-7..=7).contains(&cand) { cand as i8 } else { w }
+                    })
+                    .collect()
+            })
+            .collect();
+        assert_eq!(apply_perturbation(&s, &spec, member, 7), reference, "m={}", member);
+        for policy in policies() {
+            let mut out: Vec<Vec<i8>> = Vec::new();
+            apply_perturbation_into(&s, &spec, member, 7, &mut out, policy);
+            assert_eq!(
+                out, reference,
+                "member {} chunk={} threads={}",
+                member, policy.chunk_size, policy.threads
+            );
+        }
+    }
+}
+
+#[test]
+fn mezo_bitwise_equivalence_across_policies() {
+    // sequential reference: pair-by-pair sweep over the fp lattice tensors
+    let spec = PopulationSpec { gen_seed: 61, pairs: 3, sigma: 0.05 };
+    let fitness = vec![0.5f32, -0.5, 0.0, 0.0, 0.25, -0.25];
+    let hyper = EsHyper { alpha: 0.7, ..Default::default() };
+
+    let mut s_ref = store(Format::Fp32, 71);
+    let alpha = hyper.alpha;
+    let lat: Vec<usize> = s_ref.lattice_indices().to_vec();
+    for pair in 0..spec.pairs {
+        let (seed, _) = spec.member(2 * pair);
+        let coeff = alpha * (fitness[2 * pair] - fitness[2 * pair + 1])
+            / (2.0 * spec.sigma * spec.pairs as f32);
+        if coeff == 0.0 {
+            continue;
+        }
+        let mut stream = NoiseStream::new(seed, spec.sigma, 1.0);
+        for &i in &lat {
+            for w in s_ref.entries[i].data.as_f32_mut() {
+                let se = stream.next_scaled_gauss();
+                *w += coeff * (se / spec.sigma);
+            }
+        }
+    }
+    let ref_bits: Vec<u32> = lat
+        .iter()
+        .flat_map(|&i| s_ref.entries[i].data.as_f32().iter().map(|x| x.to_bits()))
+        .collect();
+
+    // the production path, across the full policy grid
+    for policy in policies() {
+        let mut s = store(Format::Fp32, 71);
+        let mut opt = MezoOptimizer::new(hyper.clone());
+        opt.policy = policy;
+        opt.update_fp(&mut s, &spec, &fitness).unwrap();
+        let got_bits: Vec<u32> = lat
+            .iter()
+            .flat_map(|&i| s.entries[i].data.as_f32().iter().map(|x| x.to_bits()))
+            .collect();
+        assert_eq!(
+            got_bits, ref_bits,
+            "MeZO diverged from sequential sweep: chunk={} threads={}",
+            policy.chunk_size, policy.threads
+        );
+    }
+}

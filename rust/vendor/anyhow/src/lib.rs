@@ -1,0 +1,230 @@
+//! Offline, API-compatible mini implementation of the `anyhow` crate.
+//!
+//! The build environment cannot reach a registry, so the workspace vendors
+//! the small `anyhow` subset the codebase uses:
+//!
+//! * [`Error`] / [`Result`] — a boxed, `Send + Sync` dynamic error with a
+//!   message and an optional source chain;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on both `Result`
+//!   and `Option`;
+//! * blanket `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts std and crate errors.
+//!
+//! `{:#}` formatting renders the cause chain inline ("msg: cause"), and
+//! `{:?}` renders it as a "Caused by:" block, matching real anyhow closely
+//! enough for logs and test output.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same defaulted error parameter as
+/// the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: human-readable message plus an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string(), source: None }
+    }
+
+    /// Construct from a concrete error value, preserving it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(err: E) -> Error {
+        Error { msg: err.to_string(), source: Some(Box::new(err)) }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{}: {}", context, self.msg), source: self.source }
+    }
+
+    /// The error chain below the message, outermost first.
+    pub fn chain<'a>(&'a self) -> impl Iterator<Item = &'a (dyn StdError + 'static)> + 'a {
+        let mut next: Option<&'a (dyn StdError + 'static)> =
+            self.source.as_deref().map(|e| e as &(dyn StdError + 'static));
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+
+    /// The root cause's message (diagnostics only).
+    pub fn root_cause_message(&self) -> String {
+        self.chain().last().map(|e| e.to_string()).unwrap_or_else(|| self.msg.clone())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for cause in self.chain() {
+                let s = cause.to_string();
+                if s != self.msg {
+                    write!(f, ": {}", s)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut first = true;
+        for cause in self.chain() {
+            let s = cause.to_string();
+            if s == self.msg {
+                continue;
+            }
+            if first {
+                write!(f, "\n\nCaused by:")?;
+                first = false;
+            }
+            write!(f, "\n    {}", s)?;
+        }
+        Ok(())
+    }
+}
+
+// Mirrors real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error` itself, which is what makes this blanket `From`
+// coherent.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::new(err)
+    }
+}
+
+/// Attach context to fallible values (`Result` and `Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "missing file");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{}", e), "plain");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{}", e), "x = 3");
+
+        fn bails() -> Result<()> {
+            bail!("gone {}", "wrong");
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "gone wrong");
+
+        fn ensures(v: usize) -> Result<()> {
+            ensure!(v < 10, "v too big: {}", v);
+            ensure!(v != 5);
+            Ok(())
+        }
+        assert!(ensures(3).is_ok());
+        assert_eq!(ensures(12).unwrap_err().to_string(), "v too big: 12");
+        assert!(ensures(5).unwrap_err().to_string().contains("v != 5"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest: missing file");
+        assert_eq!(format!("{:#}", e), "reading manifest: missing file: missing file");
+
+        let o: Option<u32> = None;
+        let e = o.context("no value").unwrap_err();
+        assert_eq!(e.to_string(), "no value");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn takes<T: Send + Sync>(_: T) {}
+        takes(anyhow!("x"));
+    }
+}

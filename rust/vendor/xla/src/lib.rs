@@ -1,0 +1,137 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate links the XLA C++ runtime, which the offline build image
+//! does not ship. This stub mirrors the exact API surface
+//! `qes::runtime::engine` consumes so the crate compiles and the pure-Rust
+//! surface (quantizers, optimizers, RNG, checkpointing, experiment math)
+//! runs everywhere; every entry point that would need the real runtime
+//! returns an error instead.
+//!
+//! Callers that need a live backend must gate on [`available`] — the
+//! in-repo convention is `qes::runtime::backend_available()`, which
+//! engine-bound tests check before constructing a `Session`. Swapping this
+//! stub for the real bindings is a path change in `rust/Cargo.toml` plus an
+//! `available() -> true` shim.
+
+use std::fmt;
+
+/// Whether a real PJRT runtime backs this crate. The stub is always `false`.
+pub fn available() -> bool {
+    false
+}
+
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "xla backend unavailable (offline stub): {} requires the real PJRT runtime",
+        what
+    ))
+}
+
+/// Element dtypes the runtime marshals (the subset the manifest uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    S8,
+}
+
+/// Host-side literal. The stub can be constructed for scalars (so argument
+/// assembly code is exercisable) but holds no data.
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn scalar(_v: f32) -> Literal {
+        Literal
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _shape: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(unavailable("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(!available());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline stub"));
+    }
+}
