@@ -14,10 +14,10 @@
 //! with E2E_GENS / E2E_PRETRAIN env vars).
 
 use qes::coordinator::{
-    eval_accuracy_gen, eval_problems, finetune_gen, pretrain_gen, EngineSet, FinetuneCfg,
-    PretrainCfg, Session, Variant,
+    finetune_store, pretrain_gen, EngineSet, FinetuneCfg, GenWorkload, PretrainCfg, Session,
+    Variant, Workload,
 };
-use qes::model::{init::init_fp, ParamStore};
+use qes::model::{init::init_fp, AsParams, ParamStore};
 use qes::opt::EsHyper;
 use qes::quant::Format;
 use qes::rng::SplitMix64;
@@ -68,8 +68,6 @@ fn main() -> anyhow::Result<()> {
     // ---- 3. lattice fine-tuning: QES vs QuZO ----
     println!("== [3/4] lattice fine-tuning ({} generations) ==", gens);
     let session = Session::new(&man, &size, Format::Int4, EngineSet::gen_only())?;
-    let evalset = eval_problems(task.as_ref(), 128, 42);
-    let base_acc = eval_accuracy_gen(&session, task.as_ref(), &q0, &evalset)?;
     let cfg = FinetuneCfg {
         hyper: EsHyper { sigma: 0.02, alpha: 0.08, gamma: 0.98, pairs: 8, k_window: 8 },
         gens,
@@ -81,17 +79,22 @@ fn main() -> anyhow::Result<()> {
         seed: 42,
         verbose: true,
     };
-    let mut q_qes = q0.clone();
-    let qes_log = finetune_gen(&session, task.as_ref(), &mut q_qes, Variant::Qes, &cfg, None)?;
-    let mut q_quzo = q0.clone();
-    let quzo_log =
-        finetune_gen(&session, task.as_ref(), &mut q_quzo, Variant::Quzo, &cfg, None)?;
+    let workload = GenWorkload::new(
+        gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec)?,
+        &session.cfg,
+        &cfg,
+    );
+    let base_acc = workload.eval_accuracy(&session, &q0.params_view())?;
+    let (qes_log, _q_qes) =
+        finetune_store(&session, &workload, q0.clone(), Variant::Qes, &cfg, None)?;
+    let (quzo_log, _q_quzo) =
+        finetune_store(&session, &workload, q0.clone(), Variant::Quzo, &cfg, None)?;
 
     // ---- 4. report ----
     println!("\n== [4/4] results ==");
     println!("   {:<28} {:>8}", "model", "acc (%)");
-    println!("   {:<28} {:>8.2}", format!("{} fp32 (pretrained)", size),
-        eval_accuracy_gen(&fp_session, task.as_ref(), &fp, &evalset)?);
+    let fp_acc = workload.eval_accuracy(&fp_session, &fp.params_view())?;
+    println!("   {:<28} {:>8.2}", format!("{} fp32 (pretrained)", size), fp_acc);
     println!("   {:<28} {:>8.2}", format!("{} INT4 base (GPTQ)", size), base_acc);
     println!("   {:<28} {:>8.2}", format!("{} INT4 + QuZO", size), quzo_log.final_acc);
     println!("   {:<28} {:>8.2}", format!("{} INT4 + QES", size), qes_log.final_acc);
@@ -108,10 +111,7 @@ fn main() -> anyhow::Result<()> {
         "results/e2e_countdown.csv",
         format!(
             "config,accuracy\nfp32,{:.2}\nint4_base,{:.2}\nint4_quzo,{:.2}\nint4_qes,{:.2}\n",
-            eval_accuracy_gen(&fp_session, task.as_ref(), &fp, &evalset)?,
-            base_acc,
-            quzo_log.final_acc,
-            qes_log.final_acc
+            fp_acc, base_acc, quzo_log.final_acc, qes_log.final_acc
         ),
     )?;
     println!("   wrote results/e2e_countdown*.csv");

@@ -10,10 +10,10 @@
 //! (requires `make artifacts` first)
 
 use qes::coordinator::{
-    eval_problems, finetune_gen, pretrain_gen, EngineSet, FinetuneCfg, PretrainCfg, Session,
-    Variant,
+    finetune_store, pretrain_gen, EngineSet, FinetuneCfg, GenWorkload, PretrainCfg, Session,
+    Variant, Workload,
 };
-use qes::model::{init::init_fp, ParamStore};
+use qes::model::{init::init_fp, AsParams, ParamStore};
 use qes::opt::EsHyper;
 use qes::quant::Format;
 use qes::runtime::Manifest;
@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- 2. quantize ---
     println!("== PTQ to INT4 (symmetric per-output-channel grid) ==");
-    let mut q = ParamStore::quantize_from(&fp, &man, Format::Int4, None)?;
+    let q = ParamStore::quantize_from(&fp, &man, Format::Int4, None)?;
     println!(
         "   {} lattice params in [-7, 7], packed weights: {}",
         q.lattice_dim(),
@@ -48,9 +48,6 @@ fn main() -> anyhow::Result<()> {
     // --- 3. QES fine-tuning on the lattice ---
     println!("== QES fine-tuning (stateless seed replay) ==");
     let session = Session::new(&man, "nano", Format::Int4, EngineSet::gen_only())?;
-    let evalset = eval_problems(task.as_ref(), 64, 42);
-    let base_acc =
-        qes::coordinator::eval_accuracy_gen(&session, task.as_ref(), &q, &evalset)?;
     let cfg = FinetuneCfg {
         hyper: EsHyper { sigma: 0.02, alpha: 0.1, gamma: 0.97, pairs: 8, k_window: 8 },
         gens: 30,
@@ -62,7 +59,13 @@ fn main() -> anyhow::Result<()> {
         seed: 42,
         verbose: true,
     };
-    let log = finetune_gen(&session, task.as_ref(), &mut q, Variant::Qes, &cfg, None)?;
+    let workload = GenWorkload::new(
+        gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec)?,
+        &session.cfg,
+        &cfg,
+    );
+    let base_acc = workload.eval_accuracy(&session, &q.params_view())?;
+    let (log, q) = finetune_store(&session, &workload, q, Variant::Qes, &cfg, None)?;
 
     // --- 4. report ---
     println!("\n== results ==");

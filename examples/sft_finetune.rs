@@ -5,7 +5,8 @@
 //! Run: `cargo run --release --example sft_finetune`
 
 use qes::coordinator::{
-    finetune_cls, pretrain_cls, EngineSet, FinetuneCfg, PretrainCfg, Session, Variant,
+    finetune_store, pretrain_cls, ClsWorkload, EngineSet, FinetuneCfg, PretrainCfg, Session,
+    Variant,
 };
 use qes::model::{init::init_fp, ParamStore};
 use qes::opt::EsHyper;
@@ -47,11 +48,9 @@ fn main() -> anyhow::Result<()> {
         seed: 42,
         verbose: true,
     };
+    let workload = ClsWorkload::new(qes::tasks::cls_task("snli")?, &session.cfg, &cfg, 16);
     for (name, variant) in [("QES", Variant::Qes), ("QuZO", Variant::Quzo)] {
-        let mut store = q0.clone();
-        let log = finetune_cls(
-            &session, task.as_ref(), &mut store, variant, &cfg, 16, None,
-        )?;
+        let (log, _store) = finetune_store(&session, &workload, q0.clone(), variant, &cfg, None)?;
         println!(
             "{}: final eval accuracy {:.2}% (fitness {:.4} -> {:.4}), state {}",
             name,

@@ -2,7 +2,8 @@
 //! (scalar vs chunk-parallel), QES updates (full-residual and seed replay,
 //! scalar vs fused chunk-parallel kernels), perturbation materialization
 //! (alloc-per-member vs preallocated), f16 conversion (scalar vs slice),
-//! and the QuZO update.
+//! the QuZO update, and snapshot publication (full store clone vs
+//! dirty-shard COW publish).
 //!
 //! Run: `cargo bench --bench hotpaths` (needs `artifacts/manifest.json`).
 //!
@@ -11,7 +12,7 @@
 //! baseline against its chunked variant — the perf trajectory tracked in
 //! PERF.md from this change on.
 
-use qes::model::{init::init_fp, ParamStore};
+use qes::model::{init::init_fp, ParamStore, ShardedParamStore};
 use qes::opt::{
     accumulate_grad, accumulate_grad_chunked, apply_perturbation, apply_perturbation_into,
     EsHyper, KernelPolicy, LatticeOptimizer, PopulationSpec, QesFullResidual, QuzoOptimizer,
@@ -29,6 +30,10 @@ fn quant_store(size: &str) -> ParamStore {
     let mut fp = ParamStore::from_manifest(&man, size, Format::Fp32).unwrap();
     init_fp(&mut fp, 3);
     ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap()
+}
+
+fn sharded(store: &ParamStore) -> ShardedParamStore {
+    ShardedParamStore::with_default_shards(store.clone()).unwrap()
 }
 
 fn main() {
@@ -115,7 +120,7 @@ fn main() {
         ("update/full_residual/scalar/micro", KernelPolicy::scalar()),
         ("update/full_residual/chunked/micro", KernelPolicy::default()),
     ] {
-        let mut s = micro.clone();
+        let mut s = sharded(&micro);
         let mut opt = QesFullResidual::new(dm, 7, hyper.clone());
         opt.policy = policy;
         let mut rng = SplitMix64::new(5);
@@ -128,7 +133,7 @@ fn main() {
         for (variant, policy) in
             [("scalar", KernelPolicy::scalar()), ("chunked", KernelPolicy::default())]
         {
-            let mut s = micro.clone();
+            let mut s = sharded(&micro);
             let mut opt =
                 SeedReplayQes::new(dm, 7, EsHyper { k_window: k, ..hyper.clone() });
             opt.policy = policy;
@@ -148,7 +153,7 @@ fn main() {
         ("update/quzo/scalar/micro", KernelPolicy::scalar()),
         ("update/quzo/chunked/micro", KernelPolicy::default()),
     ] {
-        let mut s = micro.clone();
+        let mut s = sharded(&micro);
         let mut opt = QuzoOptimizer::new(dm, 7, hyper.clone());
         opt.policy = policy;
         let mut rng = SplitMix64::new(5);
@@ -157,6 +162,28 @@ fn main() {
             opt.update(&mut s, &sp, &fitness).unwrap();
         });
     }
+
+    // snapshot publication: what the leader pays per generation to hand
+    // the worker pool a consistent view of the weights. Baseline: the
+    // historical full `ParamStore::clone()`. Optimized: COW publish off
+    // the sharded plane (O(shards) Arc bumps), in steady state — one
+    // shard dirtied between publishes, so each iteration also pays the
+    // one-dirty-shard unshare the next update would trigger.
+    b.run("snapshot_publish/full_clone/micro", || {
+        black_box(micro.clone());
+    });
+    let mut plane = sharded(&micro);
+    // `held` keeps the previous publish alive across the next update, so
+    // every iteration really pays the one-dirty-shard COW unshare (without
+    // it the snapshot would drop immediately, refcounts would fall back to
+    // 1, and make_mut would never copy a byte).
+    let mut held = plane.snapshot();
+    b.run("snapshot_publish/dirty_shard/micro", || {
+        plane.apply_deltas(&[(0, 1)]); // COW-unshares shard 0 (held keeps it shared)
+        held = plane.snapshot();
+        black_box(&held);
+    });
+    drop(held);
 
     // f16 conversions (residual storage cost): per-element vs slice form
     let xs: Vec<f32> = (0..65536).map(|i| (i as f32 / 65536.0) - 0.5).collect();
@@ -204,6 +231,11 @@ fn main() {
             "apply_perturbation/micro",
             "apply_perturbation/alloc/micro".to_string(),
             "apply_perturbation/into/micro".to_string(),
+        ),
+        (
+            "snapshot_publish/micro",
+            "snapshot_publish/full_clone/micro".to_string(),
+            "snapshot_publish/dirty_shard/micro".to_string(),
         ),
     ] {
         report_speedup("speedup", label, b.mean_ns(&base), b.mean_ns(&opt));

@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench replay`
 
-use qes::coordinator::{eval_problems, finetune_gen, EngineSet, FinetuneCfg, Session, Variant};
+use qes::coordinator::{finetune_store, EngineSet, FinetuneCfg, GenWorkload, Session, Variant};
 use qes::model::{init::init_fp, ParamStore};
 use qes::opt::EsHyper;
 use qes::quant::Format;
@@ -21,8 +21,6 @@ fn main() -> anyhow::Result<()> {
     init_fp(&mut fp, 3);
     let q0 = ParamStore::quantize_from(&fp, &man, Format::Int4, None)?;
     let session = Session::new(&man, "nano", Format::Int4, EngineSet::gen_only())?;
-    let task = gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec)?;
-    let _ = eval_problems(task.as_ref(), 8, 1);
 
     println!(
         "{:<24} {:>14} {:>14} {:>10}",
@@ -40,9 +38,13 @@ fn main() -> anyhow::Result<()> {
         verbose: false,
     };
 
-    let mut store = q0.clone();
-    let oracle = finetune_gen(
-        &session, task.as_ref(), &mut store, Variant::QesFullResidual, &base_cfg, None,
+    let workload = GenWorkload::new(
+        gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec)?,
+        &session.cfg,
+        &base_cfg,
+    );
+    let (oracle, _) = finetune_store(
+        &session, &workload, q0.clone(), Variant::QesFullResidual, &base_cfg, None,
     )?;
     let oracle_total = oracle.mean_rollout_ms() + oracle.mean_update_ms();
     println!(
@@ -58,8 +60,7 @@ fn main() -> anyhow::Result<()> {
         cfg.hyper.k_window = k;
         // run k warmup gens first so history is full
         cfg.gens = k + 8;
-        let mut store = q0.clone();
-        let log = finetune_gen(&session, task.as_ref(), &mut store, Variant::Qes, &cfg, None)?;
+        let (log, _) = finetune_store(&session, &workload, q0.clone(), Variant::Qes, &cfg, None)?;
         // steady-state: last 8 generations only
         let tail: Vec<_> = log.entries.iter().rev().take(8).collect();
         let roll = tail.iter().map(|e| e.rollout_ms).sum::<f64>() / tail.len() as f64;

@@ -1,30 +1,26 @@
 //! The ES generation loop — the paper's training procedure (§3, §A.3).
 //!
-//! Per generation: sample a rollout problem batch (common across members —
-//! common random numbers cut fitness variance), evaluate all 2N antithetic
-//! members, rank-normalize rewards, and hand (gen_seed, fitness) to the
-//! optimizer. Rollout and update wall-clock are measured separately — they
-//! are Table 9's two columns.
+//! ONE generic loop for every scenario: per generation, ask the
+//! `Workload` for the round payload (common across members — common
+//! random numbers cut fitness variance), evaluate all 2N antithetic
+//! members (inline or on the worker pool against a COW snapshot of the
+//! sharded parameter plane), rank-normalize rewards, and hand
+//! (gen_seed, fitness) to the optimizer. Rollout and update wall-clock
+//! are measured separately — they are Table 9's two columns.
 
-use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::encode::{ClsBatch, GenBatch};
 use crate::coordinator::pool::{Job, WorkerPool};
-use crate::coordinator::rollout::{
-    eval_accuracy_cls, eval_accuracy_gen, eval_member_cls_with, eval_member_gen_with,
-    MemberScratch,
-};
 use crate::coordinator::session::Session;
-use crate::model::ParamStore;
+use crate::coordinator::workload::{ClsWorkload, MemberScratch, Workload};
+use crate::model::{AsParams, ParamStore, ShardedParamStore};
 use crate::opt::{
     normalize_fitness, EsHyper, LatticeOptimizer, MezoOptimizer, PopulationSpec,
     QesFullResidual, QuzoOptimizer, SeedReplayQes,
 };
 use crate::rng::SplitMix64;
-use crate::tasks::{ClsTask, GenProblem, GenTask};
 
 /// Which optimizer drives the run (paper method names).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -158,32 +154,29 @@ impl Default for FinetuneCfg {
     }
 }
 
-/// Sample a fixed eval problem set (disjoint seed space from training).
-pub fn eval_problems(task: &dyn GenTask, n: usize, seed: u64) -> Vec<GenProblem> {
-    let mut rng = SplitMix64::new(seed ^ 0x6576_616c_5f73_6574);
-    (0..n).map(|_| task.sample(&mut rng)).collect()
-}
-
-/// Fine-tune a quantized store with an ES-family optimizer on a reasoning
-/// task. `pool` distributes members when Some; otherwise inline.
-#[allow(clippy::too_many_arguments)]
-pub fn finetune_gen(
+/// Fine-tune the sharded parameter plane with an ES-family optimizer on
+/// any [`Workload`]. `pool` distributes members when Some (each
+/// generation publishes one O(dirty-shards) snapshot); otherwise member
+/// evaluation runs inline on the leader.
+///
+/// NOTE on `cfg`: the loop reads only `gens`, `eval_every`, `seed` and
+/// `hyper` here — the rollout-data fields (`tau`, `train_pool`,
+/// `batches_per_gen`, `eval_n`) were captured by the workload when it was
+/// constructed. Varying those between construction and this call has no
+/// effect; rebuild the workload instead (varying `hyper.*` per call, as
+/// table7/table9 do, is fine).
+pub fn finetune(
     session: &Session,
-    task: &dyn GenTask,
-    store: &mut ParamStore,
+    workload: &dyn Workload,
+    store: &mut ShardedParamStore,
     variant: Variant,
     cfg: &FinetuneCfg,
     pool: Option<&WorkerPool>,
 ) -> Result<RunLog> {
-    let qmax = store.format.qmax();
+    let qmax = store.format().qmax();
     let d = store.lattice_dim();
     let mut opt = variant.build(d, qmax, cfg.hyper.clone());
     let mut master = SplitMix64::new(cfg.seed);
-    let mut problem_rng = SplitMix64::new(cfg.seed ^ 0x70_726f_62);
-    let evalset = eval_problems(task, cfg.eval_n, cfg.seed);
-    // persistent training pool (the paper's "training split")
-    let pool_problems: Vec<GenProblem> =
-        (0..cfg.train_pool).map(|_| task.sample(&mut problem_rng)).collect();
     let mut log = RunLog::default();
     // perturbation buffers reused across every inline member evaluation
     let mut scratch = MemberScratch::default();
@@ -192,53 +185,34 @@ pub fn finetune_gen(
         let gen_seed = master.next_u64();
         let spec = PopulationSpec { gen_seed, pairs: cfg.hyper.pairs, sigma: cfg.hyper.sigma };
         let n_members = spec.n_members();
-        // draw this generation's batches from the fixed pool (common across
-        // members — common random numbers)
-        let mut batch_rng = SplitMix64::new(gen_seed ^ 0x6261_7463_68);
-        let batches: Vec<GenBatch> = (0..cfg.batches_per_gen.max(1))
-            .map(|_| {
-                let problems: Vec<GenProblem> = (0..session.cfg.b_gen)
-                    .map(|_| {
-                        pool_problems[batch_rng.below(pool_problems.len() as u64) as usize]
-                            .clone()
-                    })
-                    .collect();
-                GenBatch::build(&session.cfg, problems)
-            })
-            .collect();
+        let round = workload.build_round(gen_seed)?;
 
         // --- rollout phase ---
         let t0 = Instant::now();
         let mut raw = vec![0.0f32; n_members];
         match pool {
             Some(p) if p.n_workers() > 1 => {
-                let snapshot = Arc::new(store.clone());
+                let snapshot = store.snapshot();
                 let w = p.n_workers();
-                for batch in &batches {
-                    let ab = Arc::new(batch.clone());
-                    let jobs: Vec<Job> = (0..w)
-                        .map(|i| Job::EvalGen {
-                            snapshot: snapshot.clone(),
-                            gen_seed,
-                            pairs: spec.pairs,
-                            sigma: spec.sigma,
-                            members: (0..n_members).filter(|m| m % w == i).collect(),
-                            batch: ab.clone(),
-                            tau: cfg.tau,
-                        })
-                        .collect();
-                    for r in p.run_round(jobs, n_members)? {
-                        raw[r.member] += r.reward? / batches.len() as f32;
-                    }
+                let jobs: Vec<Job> = (0..w)
+                    .map(|i| Job::Eval {
+                        snapshot: snapshot.clone(),
+                        gen_seed,
+                        pairs: spec.pairs,
+                        sigma: spec.sigma,
+                        members: (0..n_members).filter(|m| m % w == i).collect(),
+                        round: round.clone(),
+                    })
+                    .collect();
+                for r in p.run_round(jobs, n_members)? {
+                    raw[r.member] = r.reward?;
                 }
             }
             _ => {
-                for m in 0..n_members {
-                    for batch in &batches {
-                        raw[m] += eval_member_gen_with(
-                            session, task, store, &spec, m, batch, cfg.tau, qmax, &mut scratch,
-                        )? / batches.len() as f32;
-                    }
+                let view = store.params_view();
+                for (m, slot) in raw.iter_mut().enumerate() {
+                    *slot = workload
+                        .eval_member(session, &view, &spec, m, round.as_ref(), &mut scratch)?;
                 }
             }
         }
@@ -251,7 +225,7 @@ pub fn finetune_gen(
         let update_ms = t1.elapsed().as_secs_f64() * 1e3;
 
         let eval_acc = if cfg.eval_every > 0 && (gen + 1) % cfg.eval_every == 0 {
-            Some(eval_accuracy_gen(session, task, store, &evalset)?)
+            Some(workload.eval_accuracy(session, &store.params_view())?)
         } else {
             None
         };
@@ -280,114 +254,40 @@ pub fn finetune_gen(
         }
         log.entries.push(entry);
     }
-    log.final_acc = eval_accuracy_gen(session, task, store, &evalset)?;
+    log.final_acc = workload.eval_accuracy(session, &store.params_view())?;
     log.optimizer_state_bytes = opt.state_bytes();
     Ok(log)
 }
 
-/// Fine-tune on an SFT task: fitness = -CE on the k-shot train batches;
-/// accuracy reported on a held-out eval set.
-#[allow(clippy::too_many_arguments)]
-pub fn finetune_cls(
+/// [`finetune`] over a plain store: shards it with the default layout,
+/// runs the generic loop, and materializes the trained store back —
+/// the convenience entry point for the CLI and experiment drivers.
+pub fn finetune_store(
     session: &Session,
-    task: &dyn ClsTask,
-    store: &mut ParamStore,
+    workload: &dyn Workload,
+    store: ParamStore,
     variant: Variant,
     cfg: &FinetuneCfg,
-    k_shot: usize,
     pool: Option<&WorkerPool>,
-) -> Result<RunLog> {
-    let qmax = store.format.qmax();
-    let d = store.lattice_dim();
-    let mut opt = variant.build(d, qmax, cfg.hyper.clone());
-    let mut master = SplitMix64::new(cfg.seed);
-    let (train_batches, eval_batches) = build_cls_sets(session, task, k_shot, cfg)?;
-    let train_arc = Arc::new(train_batches);
-    let mut log = RunLog::default();
-    let mut scratch = MemberScratch::default();
-
-    for gen in 0..cfg.gens {
-        let gen_seed = master.next_u64();
-        let spec = PopulationSpec { gen_seed, pairs: cfg.hyper.pairs, sigma: cfg.hyper.sigma };
-        let n_members = spec.n_members();
-
-        let t0 = Instant::now();
-        let mut raw = vec![0.0f32; n_members];
-        match pool {
-            Some(p) if p.n_workers() > 1 => {
-                let snapshot = Arc::new(store.clone());
-                let w = p.n_workers();
-                let jobs: Vec<Job> = (0..w)
-                    .map(|i| Job::EvalCls {
-                        snapshot: snapshot.clone(),
-                        gen_seed,
-                        pairs: spec.pairs,
-                        sigma: spec.sigma,
-                        members: (0..n_members).filter(|m| m % w == i).collect(),
-                        batches: train_arc.clone(),
-                    })
-                    .collect();
-                for r in p.run_round(jobs, n_members)? {
-                    raw[r.member] = r.reward?;
-                }
-            }
-            _ => {
-                for m in 0..n_members {
-                    raw[m] = eval_member_cls_with(
-                        session, store, &spec, m, &train_arc, qmax, &mut scratch,
-                    )?;
-                }
-            }
-        }
-        let rollout_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-        let fitness = normalize_fitness(&raw);
-        let t1 = Instant::now();
-        let stats = opt.update(store, &spec, &fitness)?;
-        let update_ms = t1.elapsed().as_secs_f64() * 1e3;
-
-        let eval_acc = if cfg.eval_every > 0 && (gen + 1) % cfg.eval_every == 0 {
-            Some(eval_accuracy_cls(session, store, &eval_batches)?)
-        } else {
-            None
-        };
-        if cfg.verbose && (gen % 10 == 0 || eval_acc.is_some()) {
-            println!(
-                "[{} gen {:>4}] fitness {:.4}{}",
-                opt.name(),
-                gen,
-                crate::util::mean(&raw),
-                eval_acc.map(|a| format!(" eval {:.1}%", a)).unwrap_or_default()
-            );
-        }
-        log.entries.push(GenLog {
-            gen,
-            mean_reward: crate::util::mean(&raw),
-            best_reward: raw.iter().cloned().fold(f32::MIN, f32::max),
-            eval_acc,
-            update_ratio: stats.update_ratio(),
-            boundary_ratio: stats.boundary_hit_ratio(),
-            rollout_ms,
-            update_ms,
-        });
-    }
-    log.final_acc = eval_accuracy_cls(session, store, &eval_batches)?;
-    log.optimizer_state_bytes = opt.state_bytes();
-    Ok(log)
+) -> Result<(RunLog, ParamStore)> {
+    let mut sharded = ShardedParamStore::with_default_shards(store)?;
+    let log = finetune(session, workload, &mut sharded, variant, cfg, pool)?;
+    Ok((log, sharded.materialize()))
 }
 
 /// MeZO on an fp store (Table 1's FP32 zeroth-order baseline): SPSA with
-/// continuous perturbations, fitness = -CE on the k-shot batches.
-pub fn finetune_cls_mezo(
+/// continuous perturbations, fitness = -CE on the workload's k-shot
+/// batches. Continuous weights have no lattice plane, so this stays a
+/// plain-store loop outside the `LatticeOptimizer` protocol.
+pub fn finetune_mezo(
     session: &Session,
-    task: &dyn ClsTask,
+    workload: &ClsWorkload,
     store: &mut ParamStore,
     cfg: &FinetuneCfg,
-    k_shot: usize,
 ) -> Result<RunLog> {
     let mut opt = MezoOptimizer::new(cfg.hyper.clone());
     let mut master = SplitMix64::new(cfg.seed);
-    let (train_batches, eval_batches) = build_cls_sets(session, task, k_shot, cfg)?;
+    let train_batches = workload.train_batches();
     let mut log = RunLog::default();
 
     for gen in 0..cfg.gens {
@@ -395,24 +295,24 @@ pub fn finetune_cls_mezo(
         let spec = PopulationSpec { gen_seed, pairs: cfg.hyper.pairs, sigma: cfg.hyper.sigma };
         let t0 = Instant::now();
         let mut raw = vec![0.0f32; spec.n_members()];
-        for m in 0..spec.n_members() {
+        for (m, slot) in raw.iter_mut().enumerate() {
             let perturbed = MezoOptimizer::perturb_fp(store, &spec, m);
             // evaluate by temporarily swapping in the perturbed tensors
             let mut loss = 0.0f32;
             let saved = swap_fp_lattice(store, &perturbed);
             for b in train_batches.iter() {
-                let (ce, _) = session.cls_eval(store, None, b)?;
+                let (ce, _) = session.cls_eval(&*store, None, b)?;
                 loss += ce;
             }
             restore_fp_lattice(store, saved);
-            raw[m] = -loss / train_batches.len() as f32;
+            *slot = -loss / train_batches.len() as f32;
         }
         let rollout_ms = t0.elapsed().as_secs_f64() * 1e3;
         let t1 = Instant::now();
         opt.update_fp(store, &spec, &raw)?;
         let update_ms = t1.elapsed().as_secs_f64() * 1e3;
         let eval_acc = if cfg.eval_every > 0 && (gen + 1) % cfg.eval_every == 0 {
-            Some(eval_accuracy_cls(session, store, &eval_batches)?)
+            Some(workload.eval_accuracy(session, &store.params_view())?)
         } else {
             None
         };
@@ -427,37 +327,9 @@ pub fn finetune_cls_mezo(
             update_ms,
         });
     }
-    log.final_acc = eval_accuracy_cls(session, store, &eval_batches)?;
+    log.final_acc = workload.eval_accuracy(session, &store.params_view())?;
     log.optimizer_state_bytes = opt.state_bytes();
     Ok(log)
-}
-
-/// Build k-shot train batches + a held-out eval set for an SFT task.
-fn build_cls_sets(
-    session: &Session,
-    task: &dyn ClsTask,
-    k_shot: usize,
-    cfg: &FinetuneCfg,
-) -> Result<(Vec<ClsBatch>, Vec<ClsBatch>)> {
-    let mcfg = &session.cfg;
-    let verb = task.verbalizers();
-    let mut rng = SplitMix64::new(cfg.seed ^ 0x6b73_686f_74);
-    // k examples per class (k-shot protocol)
-    let mut train = Vec::new();
-    let mut per_class = vec![0usize; task.n_classes()];
-    while per_class.iter().any(|&c| c < k_shot) {
-        let ex = task.sample(&mut rng, true);
-        if per_class[ex.label] < k_shot {
-            per_class[ex.label] += 1;
-            train.push(ex);
-        }
-    }
-    let train_batches: Vec<ClsBatch> =
-        train.chunks(mcfg.b_train).map(|c| ClsBatch::build(mcfg, c, &verb)).collect();
-    let eval: Vec<_> = (0..cfg.eval_n).map(|_| task.sample(&mut rng, false)).collect();
-    let eval_batches: Vec<ClsBatch> =
-        eval.chunks(mcfg.b_train).map(|c| ClsBatch::build(mcfg, c, &verb)).collect();
-    Ok((train_batches, eval_batches))
 }
 
 fn swap_fp_lattice(store: &mut ParamStore, values: &[Vec<f32>]) -> Vec<Vec<f32>> {

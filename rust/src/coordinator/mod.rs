@@ -4,24 +4,30 @@
 //! Topology (mirrors the paper's rollout/update split, §4.6):
 //!
 //! ```text
-//!   leader ──seed──▶ workers (own PJRT engines) ──rewards──▶ leader
-//!     │                                                        │
-//!     └── optimizer.update(gen_seed, fitness) ── lattice store ┘
+//!   leader ──COW snapshot + seed──▶ workers (own PJRT engines) ──rewards──▶ leader
+//!     │                                                                      │
+//!     └── optimizer.update(gen_seed, fitness) ── sharded lattice plane ──────┘
 //! ```
+//!
+//! Scenarios (reasoning RLVR, k-shot SFT, future mixed generations) are
+//! [`Workload`] impls; the leader loop, the pool and the job protocol are
+//! generic over the trait.
 
 pub mod encode;
 pub mod finetune;
 pub mod pool;
 pub mod pretrain;
-pub mod rollout;
 pub mod session;
+pub mod workload;
 
 pub use encode::{ClsBatch, GenBatch, LmBatch};
 pub use finetune::{
-    eval_problems, finetune_cls, finetune_cls_mezo, finetune_gen, FinetuneCfg, GenLog, RunLog,
-    Variant,
+    finetune, finetune_mezo, finetune_store, FinetuneCfg, GenLog, RunLog, Variant,
 };
 pub use pool::{Job, MemberResult, WorkerPool};
 pub use pretrain::{pretrain_cls, pretrain_gen, PretrainCfg};
-pub use rollout::{eval_accuracy_cls, eval_accuracy_gen, MemberScratch};
 pub use session::{EngineSet, Session};
+pub use workload::{
+    eval_problems, workload_for, ClsRound, ClsWorkload, GenRound, GenWorkload, MemberScratch,
+    Round, Workload,
+};

@@ -2,42 +2,43 @@
 //!
 //! Each worker thread owns its own PJRT client + compiled engines (the
 //! `xla` client is `Rc`-based and cannot cross threads) and evaluates the
-//! population members assigned to it against a broadcast snapshot of the
-//! current lattice. On the single-core CI testbed the default is one
-//! worker; the topology is exercised by tests with `workers = 2`.
+//! population members assigned to it against a broadcast `Snapshot` of
+//! the leader's sharded parameter plane (O(shards) to publish, immune to
+//! subsequent leader updates). The scenario is a shared `Arc<dyn
+//! Workload>` — the pool never branches on Gen vs Cls. On the single-core
+//! CI testbed the default is one worker; the topology is exercised by
+//! tests with `workers = 2`.
+//!
+//! Worker failures are surfaced, not swallowed: each thread's
+//! `JoinHandle<Result<()>>` is reaped when the result stream stalls or
+//! closes, so a worker that errored or panicked turns into an `Err` on
+//! the leader instead of a hung `run_round`.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::any::Any;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::coordinator::encode::{ClsBatch, GenBatch};
-use crate::coordinator::rollout::{eval_member_cls_with, eval_member_gen_with, MemberScratch};
-use crate::coordinator::session::{EngineSet, Session};
-use crate::model::ParamStore;
+use crate::coordinator::session::Session;
+use crate::coordinator::workload::{MemberScratch, Round, Workload};
+use crate::model::{AsParams, Snapshot};
+use crate::opt::PopulationSpec;
 use crate::quant::Format;
 use crate::runtime::Manifest;
-use crate::tasks::gen_task;
 
-/// Work order broadcast to a worker for one generation.
+/// Work order broadcast to a worker for one generation. One variant for
+/// every scenario — the payload is the workload's own `Round`.
 pub enum Job {
-    EvalGen {
-        snapshot: Arc<ParamStore>,
+    Eval {
+        snapshot: Snapshot,
         gen_seed: u64,
         pairs: usize,
         sigma: f32,
         members: Vec<usize>,
-        batch: Arc<GenBatch>,
-        tau: f32,
-    },
-    EvalCls {
-        snapshot: Arc<ParamStore>,
-        gen_seed: u64,
-        pairs: usize,
-        sigma: f32,
-        members: Vec<usize>,
-        batches: Arc<Vec<ClsBatch>>,
+        round: Arc<dyn Round>,
     },
     Shutdown,
 }
@@ -50,19 +51,30 @@ pub struct MemberResult {
 pub struct WorkerPool {
     senders: Vec<Sender<Job>>,
     results: Receiver<MemberResult>,
-    handles: Vec<JoinHandle<()>>,
+    /// Slots are taken as handles are reaped (on failure or shutdown).
+    handles: Mutex<Vec<Option<JoinHandle<Result<()>>>>>,
+}
+
+fn panic_message(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 impl WorkerPool {
     /// Spawn `n` workers, each compiling its own engines for
-    /// (size, format) and reconstructing `task_name` for rewards.
+    /// (size, format) per `workload.engines()` and scoring members with
+    /// the shared workload.
     pub fn spawn(
         n: usize,
         manifest_path: &str,
         size: &str,
         format: Format,
-        task_name: Option<&str>,
-        set: EngineSet,
+        workload: Arc<dyn Workload>,
     ) -> Result<WorkerPool> {
         let (res_tx, res_rx) = channel::<MemberResult>();
         let mut senders = Vec::with_capacity(n);
@@ -73,18 +85,13 @@ impl WorkerPool {
             let res_tx = res_tx.clone();
             let mpath = manifest_path.to_string();
             let size = size.to_string();
-            let task_name = task_name.map(|s| s.to_string());
+            let workload = workload.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("qes-worker-{}", w))
-                .spawn(move || {
-                    if let Err(e) = worker_main(&mpath, &size, format, task_name.as_deref(), set, rx, res_tx)
-                    {
-                        eprintln!("worker {} died: {:#}", w, e);
-                    }
-                })?;
-            handles.push(handle);
+                .spawn(move || worker_main(&mpath, &size, format, workload.as_ref(), rx, res_tx))?;
+            handles.push(Some(handle));
         }
-        Ok(WorkerPool { senders, results: res_rx, handles })
+        Ok(WorkerPool { senders, results: res_rx, handles: Mutex::new(handles) })
     }
 
     pub fn n_workers(&self) -> usize {
@@ -92,21 +99,79 @@ impl WorkerPool {
     }
 
     /// Dispatch jobs (already member-partitioned, one per worker) and
-    /// collect exactly `expect` member results.
+    /// collect exactly `expect` member results. A worker that dies
+    /// mid-round (error or panic) surfaces as `Err` here instead of a
+    /// leader that blocks forever on a short result stream.
     pub fn run_round(&self, jobs: Vec<Job>, expect: usize) -> Result<Vec<MemberResult>> {
         anyhow::ensure!(jobs.len() <= self.senders.len(), "more jobs than workers");
         for (tx, job) in self.senders.iter().zip(jobs) {
             tx.send(job).map_err(|_| anyhow::anyhow!("worker channel closed"))?;
         }
         let mut out = Vec::with_capacity(expect);
-        for _ in 0..expect {
-            out.push(
-                self.results
-                    .recv()
-                    .map_err(|_| anyhow::anyhow!("result channel closed"))?,
-            );
+        while out.len() < expect {
+            match self.results.recv_timeout(Duration::from_millis(200)) {
+                Ok(r) => out.push(r),
+                Err(RecvTimeoutError::Timeout) => self.reap_failed()?,
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.reap_failed()?;
+                    anyhow::bail!(
+                        "result channel closed with {}/{} member results",
+                        out.len(),
+                        expect
+                    );
+                }
+            }
         }
         Ok(out)
+    }
+
+    /// Join any finished worker threads; a worker that exited before
+    /// shutdown — cleanly, with an error, or by panicking — is a failure.
+    fn reap_failed(&self) -> Result<()> {
+        let mut handles = self.handles.lock().expect("worker handle lock poisoned");
+        for (w, slot) in handles.iter_mut().enumerate() {
+            if slot.as_ref().is_some_and(|h| h.is_finished()) {
+                match slot.take().expect("slot checked above").join() {
+                    Ok(Ok(())) => anyhow::bail!("worker {} exited before shutdown", w),
+                    Ok(Err(e)) => {
+                        return Err(e.context(format!("worker {} failed", w)));
+                    }
+                    Err(p) => anyhow::bail!("worker {} panicked: {}", w, panic_message(&*p)),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Orderly shutdown that PROPAGATES worker failures (Drop can only
+    /// log them): send Shutdown to every worker and join all threads.
+    pub fn shutdown(self) -> Result<()> {
+        for tx in &self.senders {
+            let _ = tx.send(Job::Shutdown);
+        }
+        let slots: Vec<Option<JoinHandle<Result<()>>>> = {
+            let mut handles = self.handles.lock().expect("worker handle lock poisoned");
+            handles.iter_mut().map(|s| s.take()).collect()
+        };
+        let mut first: Option<anyhow::Error> = None;
+        for (w, slot) in slots.into_iter().enumerate() {
+            if let Some(h) = slot {
+                let failure = match h.join() {
+                    Ok(Ok(())) => None,
+                    Ok(Err(e)) => Some(e.context(format!("worker {} failed", w))),
+                    Err(p) => {
+                        Some(anyhow::anyhow!("worker {} panicked: {}", w, panic_message(&*p)))
+                    }
+                };
+                if first.is_none() {
+                    first = failure;
+                }
+            }
+        }
+        match first {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
@@ -115,8 +180,15 @@ impl Drop for WorkerPool {
         for tx in &self.senders {
             let _ = tx.send(Job::Shutdown);
         }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        let mut handles = self.handles.lock().expect("worker handle lock poisoned");
+        for (w, slot) in handles.iter_mut().enumerate() {
+            if let Some(h) = slot.take() {
+                match h.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => eprintln!("worker {} failed: {:#}", w, e),
+                    Err(p) => eprintln!("worker {} panicked: {}", w, panic_message(&*p)),
+                }
+            }
         }
     }
 }
@@ -125,18 +197,12 @@ fn worker_main(
     manifest_path: &str,
     size: &str,
     format: Format,
-    task_name: Option<&str>,
-    set: EngineSet,
+    workload: &dyn Workload,
     rx: Receiver<Job>,
     res_tx: Sender<MemberResult>,
 ) -> Result<()> {
     let man = Manifest::load(manifest_path)?;
-    let session = Session::new(&man, size, format, set)?;
-    let qmax = format.qmax();
-    let task = match task_name {
-        Some(t) => Some(gen_task(t, session.cfg.s_prompt, session.cfg.t_dec)?),
-        None => None,
-    };
+    let session = Session::new(&man, size, format, workload.engines())?;
     // Per-worker perturbation buffers, reused across every member this
     // worker ever evaluates (no per-member Vec<Vec<i8>> allocation).
     // Sequential fill: the pool already parallelizes across workers, so a
@@ -145,29 +211,49 @@ fn worker_main(
     while let Ok(job) = rx.recv() {
         match job {
             Job::Shutdown => break,
-            Job::EvalGen { snapshot, gen_seed, pairs, sigma, members, batch, tau } => {
-                let spec = crate::opt::PopulationSpec { gen_seed, pairs, sigma };
-                let task = task
-                    .as_ref()
-                    .ok_or_else(|| anyhow::anyhow!("gen job on a worker without a task"))?;
+            Job::Eval { snapshot, gen_seed, pairs, sigma, members, round } => {
+                let spec = PopulationSpec { gen_seed, pairs, sigma };
+                let view = snapshot.params_view();
                 for m in members {
-                    let reward = eval_member_gen_with(
-                        &session, task.as_ref(), &snapshot, &spec, m, &batch, tau, qmax,
-                        &mut scratch,
-                    );
-                    res_tx.send(MemberResult { member: m, reward }).ok();
-                }
-            }
-            Job::EvalCls { snapshot, gen_seed, pairs, sigma, members, batches } => {
-                let spec = crate::opt::PopulationSpec { gen_seed, pairs, sigma };
-                for m in members {
-                    let reward = eval_member_cls_with(
-                        &session, &snapshot, &spec, m, &batches, qmax, &mut scratch,
-                    );
+                    let reward = workload
+                        .eval_member(&session, &view, &spec, m, round.as_ref(), &mut scratch);
                     res_tx.send(MemberResult { member: m, reward }).ok();
                 }
             }
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::finetune::FinetuneCfg;
+    use crate::coordinator::workload::GenWorkload;
+    use crate::tasks::gen_task;
+
+    /// A worker whose setup fails (here: unreadable manifest) must turn
+    /// into an `Err` from `run_round`, not a leader blocked forever on a
+    /// result channel that will never fill. Runs with or without a PJRT
+    /// backend — the failure happens before engine compilation.
+    #[test]
+    fn worker_failure_surfaces_as_err() {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        let mcfg = man.config("nano").unwrap().clone();
+        let task = gen_task("countdown", mcfg.s_prompt, mcfg.t_dec).unwrap();
+        let cfg = FinetuneCfg { train_pool: 8, eval_n: 4, ..Default::default() };
+        let workload: Arc<dyn Workload> = Arc::new(GenWorkload::new(task, &mcfg, &cfg));
+        let pool = WorkerPool::spawn(
+            2,
+            "artifacts/does_not_exist.json",
+            "nano",
+            Format::Int4,
+            workload,
+        )
+        .unwrap();
+        let err = pool.run_round(Vec::new(), 1);
+        assert!(err.is_err(), "dead workers must fail the round");
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("worker"), "unhelpful error: {}", msg);
+    }
 }

@@ -49,7 +49,7 @@ pub fn pretrain_gen(
     for step in 0..cfg.steps {
         let pairs: Vec<(String, String)> = (0..b).map(|_| task.supervised(&mut rng)).collect();
         let batch = LmBatch::build(&session.cfg, &pairs);
-        let (loss, grads) = session.lm_grads(store, &batch)?;
+        let (loss, grads) = session.lm_grads(&*store, &batch)?;
         adam.step(store, &grads)?;
         last = loss;
         if cfg.verbose && step % 50 == 0 {
@@ -85,7 +85,7 @@ pub fn pretrain_cls(
             })
             .collect();
         let batch = LmBatch::build(&session.cfg, &pairs);
-        let (loss, grads) = session.lm_grads(store, &batch)?;
+        let (loss, grads) = session.lm_grads(&*store, &batch)?;
         adam.step(store, &grads)?;
         last = loss;
         if cfg.verbose && step % 50 == 0 {

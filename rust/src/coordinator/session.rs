@@ -5,7 +5,7 @@
 use anyhow::Result;
 
 use crate::coordinator::encode::{gumbel_noise, ClsBatch, GenBatch, LmBatch};
-use crate::model::ParamStore;
+use crate::model::{AsParams, ParamsView};
 use crate::quant::Format;
 use crate::runtime::{self, Engine, Manifest, ModelConfig};
 use crate::tasks::tokenizer;
@@ -65,20 +65,23 @@ impl Session {
         e.as_ref().ok_or_else(|| anyhow::anyhow!("engine {:?} not compiled for this session", what))
     }
 
-    /// Batched autoregressive generation. `overrides` replaces the lattice
-    /// tensors (a member's perturbed weights); `gumbel_seed = None` decodes
-    /// greedily. Returns one completion string (up to EOS) per REAL row.
-    pub fn generate(
+    /// Batched autoregressive generation. `params` is any parameter
+    /// source (plain store, sharded plane, snapshot, or a prebuilt view);
+    /// `overrides` replaces the lattice tensors (a member's perturbed
+    /// weights); `gumbel_seed = None` decodes greedily. Returns one
+    /// completion string (up to EOS) per REAL row.
+    pub fn generate<P: AsParams + ?Sized>(
         &self,
-        store: &ParamStore,
+        params: &P,
         overrides: Option<&[Vec<i8>]>,
         batch: &GenBatch,
         tau: f32,
         gumbel_seed: Option<u64>,
     ) -> Result<Vec<String>> {
+        let view = params.params_view();
         let eng = Self::engine(&self.gen, "gen")?;
         let cfg = &self.cfg;
-        let mut args = Vec::with_capacity(4 + store.entries.len());
+        let mut args = Vec::with_capacity(4 + view.store.entries.len());
         args.push(runtime::literal_for(
             &eng.meta.data_inputs[0],
             &runtime::HostTensor::I32(batch.prompt.clone()),
@@ -92,7 +95,7 @@ impl Session {
             &eng.meta.data_inputs[3],
             &runtime::HostTensor::F32(gumbel_noise(cfg, gumbel_seed)),
         )?);
-        args.extend(runtime::param_literals(store, overrides)?);
+        args.extend(runtime::param_literals_view(&view, overrides)?);
         let outs = eng.run(&args)?;
         let toks = runtime::to_i32_vec(&outs[0])?;
         let t = cfg.t_dec;
@@ -103,22 +106,23 @@ impl Session {
 
     /// Classification loss + accuracy over the REAL rows of a ClsBatch.
     /// Returns (mean CE over real rows, n_correct among real rows).
-    pub fn cls_eval(
+    pub fn cls_eval<P: AsParams + ?Sized>(
         &self,
-        store: &ParamStore,
+        params: &P,
         overrides: Option<&[Vec<i8>]>,
         batch: &ClsBatch,
     ) -> Result<(f32, usize)> {
+        let view = params.params_view();
         let eng = Self::engine(&self.cls, "cls")?;
         let d = &eng.meta.data_inputs;
-        let mut args = Vec::with_capacity(6 + store.entries.len());
+        let mut args = Vec::with_capacity(6 + view.store.entries.len());
         args.push(runtime::literal_for(&d[0], &runtime::HostTensor::I32(batch.tokens.clone()))?);
         args.push(runtime::literal_for(&d[1], &runtime::HostTensor::I32(batch.pos_ids.clone()))?);
         args.push(runtime::literal_for(&d[2], &runtime::HostTensor::F32(batch.mask.clone()))?);
         args.push(runtime::literal_for(&d[3], &runtime::HostTensor::I32(batch.cls_pos.clone()))?);
         args.push(runtime::literal_for(&d[4], &runtime::HostTensor::I32(batch.class_ids.clone()))?);
         args.push(runtime::literal_for(&d[5], &runtime::HostTensor::I32(batch.labels.clone()))?);
-        args.extend(runtime::param_literals(store, overrides)?);
+        args.extend(runtime::param_literals_view(&view, overrides)?);
         let outs = eng.run(&args)?;
         // outputs: (sum_ce over ALL rows, n_correct over ALL rows, scores)
         // padded rows repeat a real example; recompute real-row stats from
@@ -152,14 +156,15 @@ impl Session {
     }
 
     /// Teacher-forced loss over an LmBatch: (mean CE, token accuracy).
-    pub fn lm_loss(
+    pub fn lm_loss<P: AsParams + ?Sized>(
         &self,
-        store: &ParamStore,
+        params: &P,
         overrides: Option<&[Vec<i8>]>,
         batch: &LmBatch,
     ) -> Result<(f32, f32)> {
+        let view = params.params_view();
         let eng = Self::engine(&self.loss, "loss")?;
-        let outs = eng.run(&self.lm_args(eng, store, overrides, batch)?)?;
+        let outs = eng.run(&self.lm_args(eng, &view, overrides, batch)?)?;
         let sum_ce = runtime::to_f32_scalar(&outs[0])?;
         let n_tok = runtime::to_f32_scalar(&outs[1])?.max(1.0);
         let n_correct = runtime::to_f32_scalar(&outs[2])?;
@@ -167,13 +172,14 @@ impl Session {
     }
 
     /// Loss + gradients for every parameter (fp sessions only).
-    pub fn lm_grads(
+    pub fn lm_grads<P: AsParams + ?Sized>(
         &self,
-        store: &ParamStore,
+        params: &P,
         batch: &LmBatch,
     ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let view = params.params_view();
         let eng = Self::engine(&self.grad, "grad")?;
-        let outs = eng.run(&self.lm_args(eng, store, None, batch)?)?;
+        let outs = eng.run(&self.lm_args(eng, &view, None, batch)?)?;
         let loss = runtime::to_f32_scalar(&outs[0])?;
         let grads = outs[1..]
             .iter()
@@ -185,12 +191,12 @@ impl Session {
     fn lm_args(
         &self,
         eng: &Engine,
-        store: &ParamStore,
+        view: &ParamsView<'_>,
         overrides: Option<&[Vec<i8>]>,
         batch: &LmBatch,
     ) -> Result<Vec<xla::Literal>> {
         let d = &eng.meta.data_inputs;
-        let mut args = Vec::with_capacity(5 + store.entries.len());
+        let mut args = Vec::with_capacity(5 + view.store.entries.len());
         args.push(runtime::literal_for(&d[0], &runtime::HostTensor::I32(batch.tokens.clone()))?);
         args.push(runtime::literal_for(&d[1], &runtime::HostTensor::I32(batch.pos_ids.clone()))?);
         args.push(runtime::literal_for(&d[2], &runtime::HostTensor::F32(batch.mask.clone()))?);
@@ -199,7 +205,7 @@ impl Session {
             &d[4],
             &runtime::HostTensor::F32(batch.loss_mask.clone()),
         )?);
-        args.extend(runtime::param_literals(store, overrides)?);
+        args.extend(runtime::param_literals_view(view, overrides)?);
         Ok(args)
     }
 }

@@ -1,0 +1,364 @@
+//! The `Workload` abstraction: ONE generic generation loop for every
+//! training scenario.
+//!
+//! The coordinator used to carry a Gen/Cls split through every layer —
+//! `Job::EvalGen`/`EvalCls`, `finetune_gen`/`finetune_cls`,
+//! `eval_accuracy_gen`/`eval_accuracy_cls` — so each new scenario meant a
+//! fourth copy of the loop. A `Workload` now owns the scenario-specific
+//! pieces behind three operations:
+//!
+//! * [`Workload::build_round`] — the generation's common rollout payload
+//!   (common random numbers across members), derived deterministically
+//!   from the generation seed;
+//! * [`Workload::eval_member`] — score one population member against that
+//!   payload (perturb → run engines → reward);
+//! * [`Workload::eval_accuracy`] — unperturbed greedy accuracy.
+//!
+//! `WorkerPool`, `finetune` and the experiment drivers are generic over
+//! the trait; new scenarios (new tasks, mixed-task generations) are a
+//! trait impl, not another copy of the loop. Workloads are `Send + Sync`
+//! and shared with worker threads via `Arc<dyn Workload>`.
+
+use std::any::Any;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::encode::{ClsBatch, GenBatch};
+use crate::coordinator::finetune::FinetuneCfg;
+use crate::coordinator::session::{EngineSet, Session};
+use crate::model::ParamsView;
+use crate::opt::{apply_perturbation_into, KernelPolicy, PopulationSpec};
+use crate::rng::SplitMix64;
+use crate::runtime::ModelConfig;
+use crate::tasks::{is_cls_task, ClsTask, GenProblem, GenTask};
+
+/// Salt separating decode-sampling noise from perturbation noise.
+const GUMBEL_SALT: u64 = 0x6465_636f_6465_5f67;
+
+/// Reusable per-worker buffers for member evaluation: the perturbed
+/// lattice is materialized into `overrides` in place, so a generation's
+/// member loop performs zero per-member allocations on the perturbation
+/// path. `policy` controls the fill's chunk parallelism — results are
+/// identical for any policy (the kernels' determinism contract), so pick
+/// it for the topology: the default exploits all cores (right for the
+/// single-threaded inline leader loop), while code that already runs
+/// many evaluations in parallel (the worker pool) should use
+/// [`MemberScratch::sequential`] to avoid oversubscribing cores with
+/// per-member thread fan-outs.
+#[derive(Default)]
+pub struct MemberScratch {
+    pub overrides: Vec<Vec<i8>>,
+    pub policy: KernelPolicy,
+}
+
+impl MemberScratch {
+    /// Scratch whose perturbation fill runs inline on the calling thread
+    /// — for callers that are themselves one of many parallel workers.
+    pub fn sequential() -> Self {
+        MemberScratch { overrides: Vec::new(), policy: KernelPolicy::scalar() }
+    }
+}
+
+/// One generation's rollout payload. Scenario-specific contents live
+/// behind `Any` so the pool can broadcast rounds without knowing the
+/// scenario (the owning `Workload` downcasts in `eval_member`).
+pub trait Round: Any + Send + Sync {
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// A training scenario: task + data protocol + member scoring. See the
+/// module docs for the contract.
+pub trait Workload: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Engines a session must compile to run this workload.
+    fn engines(&self) -> EngineSet;
+
+    /// Build the generation's common evaluation payload. Deterministic in
+    /// `gen_seed` (common random numbers across members and topologies).
+    fn build_round(&self, gen_seed: u64) -> Result<Arc<dyn Round>>;
+
+    /// Score member `member` of the population described by `spec`
+    /// against `round`, reading weights through `params`.
+    fn eval_member(
+        &self,
+        session: &Session,
+        params: &ParamsView<'_>,
+        spec: &PopulationSpec,
+        member: usize,
+        round: &dyn Round,
+        scratch: &mut MemberScratch,
+    ) -> Result<f32>;
+
+    /// Unperturbed greedy accuracy (%) on the workload's held-out set.
+    fn eval_accuracy(&self, session: &Session, params: &ParamsView<'_>) -> Result<f32>;
+}
+
+/// Sample a fixed eval problem set (disjoint seed space from training).
+pub fn eval_problems(task: &dyn GenTask, n: usize, seed: u64) -> Vec<GenProblem> {
+    let mut rng = SplitMix64::new(seed ^ 0x6576_616c_5f73_6574);
+    (0..n).map(|_| task.sample(&mut rng)).collect()
+}
+
+/// Instantiate the standard workload for a task name: reasoning tasks get
+/// a [`GenWorkload`], SFT classification tasks a [`ClsWorkload`].
+pub fn workload_for(
+    task_name: &str,
+    mcfg: &ModelConfig,
+    cfg: &FinetuneCfg,
+    k_shot: usize,
+) -> Result<Box<dyn Workload>> {
+    if is_cls_task(task_name) {
+        let task = crate::tasks::cls_task(task_name)?;
+        Ok(Box::new(ClsWorkload::new(task, mcfg, cfg, k_shot)))
+    } else {
+        let task = crate::tasks::gen_task(task_name, mcfg.s_prompt, mcfg.t_dec)?;
+        Ok(Box::new(GenWorkload::new(task, mcfg, cfg)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reasoning (generative RLVR) workload
+// ---------------------------------------------------------------------------
+
+/// A generation's rollout batches for a reasoning task (all members score
+/// against the same batches — common random numbers).
+pub struct GenRound {
+    pub batches: Vec<GenBatch>,
+}
+
+impl Round for GenRound {
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// Reasoning fine-tuning: fitness = mean RLVR reward of sampled rollouts
+/// over the generation's batches; accuracy = greedy solve rate.
+pub struct GenWorkload {
+    task: Box<dyn GenTask>,
+    mcfg: ModelConfig,
+    /// Decode-sampling temperature during training rollouts (0 = greedy).
+    tau: f32,
+    batches_per_gen: usize,
+    /// Persistent training pool (the paper's "training split"): batches
+    /// are drawn from here so the fitness signal keeps a consistent
+    /// direction across generations.
+    pool: Vec<GenProblem>,
+    evalset: Vec<GenProblem>,
+}
+
+impl GenWorkload {
+    pub fn new(task: Box<dyn GenTask>, mcfg: &ModelConfig, cfg: &FinetuneCfg) -> GenWorkload {
+        let mut problem_rng = SplitMix64::new(cfg.seed ^ 0x70_726f_62);
+        let pool: Vec<GenProblem> =
+            (0..cfg.train_pool).map(|_| task.sample(&mut problem_rng)).collect();
+        let evalset = eval_problems(task.as_ref(), cfg.eval_n, cfg.seed);
+        GenWorkload {
+            task,
+            mcfg: mcfg.clone(),
+            tau: cfg.tau,
+            batches_per_gen: cfg.batches_per_gen.max(1),
+            pool,
+            evalset,
+        }
+    }
+
+    pub fn task(&self) -> &dyn GenTask {
+        self.task.as_ref()
+    }
+}
+
+impl Workload for GenWorkload {
+    fn name(&self) -> &str {
+        self.task.name()
+    }
+
+    fn engines(&self) -> EngineSet {
+        EngineSet::gen_only()
+    }
+
+    fn build_round(&self, gen_seed: u64) -> Result<Arc<dyn Round>> {
+        let mut batch_rng = SplitMix64::new(gen_seed ^ 0x6261_7463_68);
+        let batches: Vec<GenBatch> = (0..self.batches_per_gen)
+            .map(|_| {
+                let problems: Vec<GenProblem> = (0..self.mcfg.b_gen)
+                    .map(|_| {
+                        self.pool[batch_rng.below(self.pool.len() as u64) as usize].clone()
+                    })
+                    .collect();
+                GenBatch::build(&self.mcfg, problems)
+            })
+            .collect();
+        Ok(Arc::new(GenRound { batches }))
+    }
+
+    fn eval_member(
+        &self,
+        session: &Session,
+        params: &ParamsView<'_>,
+        spec: &PopulationSpec,
+        member: usize,
+        round: &dyn Round,
+        scratch: &mut MemberScratch,
+    ) -> Result<f32> {
+        let round = round
+            .as_any()
+            .downcast_ref::<GenRound>()
+            .ok_or_else(|| anyhow::anyhow!("gen workload got a foreign round payload"))?;
+        let qmax = params.store.format.qmax();
+        apply_perturbation_into(params, spec, member, qmax, &mut scratch.overrides, scratch.policy);
+        let gumbel_seed = if self.tau > 0.0 {
+            Some(spec.gen_seed ^ GUMBEL_SALT ^ (member as u64) << 17)
+        } else {
+            None
+        };
+        let mut total = 0.0f32;
+        for batch in &round.batches {
+            let completions = session.generate(
+                params,
+                Some(&scratch.overrides),
+                batch,
+                self.tau,
+                gumbel_seed,
+            )?;
+            let mut batch_total = 0.0f32;
+            for (i, c) in completions.iter().enumerate() {
+                batch_total += self.task.reward(&batch.problems[i].key, c);
+            }
+            total += batch_total / batch.n_real as f32;
+        }
+        Ok(total / round.batches.len() as f32)
+    }
+
+    fn eval_accuracy(&self, session: &Session, params: &ParamsView<'_>) -> Result<f32> {
+        let cfg = &session.cfg;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for chunk in self.evalset.chunks(cfg.b_gen) {
+            let batch = GenBatch::build(cfg, chunk.to_vec());
+            let completions = session.generate(params, None, &batch, 0.0, None)?;
+            for (i, c) in completions.iter().enumerate() {
+                if self.task.reward(&batch.problems[i].key, c) >= 1.0 {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(100.0 * correct as f32 / total.max(1) as f32)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SFT (k-shot classification) workload
+// ---------------------------------------------------------------------------
+
+/// The fixed k-shot train batches an SFT generation scores against (the
+/// same every generation, by protocol).
+pub struct ClsRound {
+    pub batches: Vec<ClsBatch>,
+}
+
+impl Round for ClsRound {
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// SFT fine-tuning: fitness = -mean CE over the k-shot train batches (ES
+/// ascends fitness, so this descends the loss); accuracy on a held-out
+/// eval set.
+pub struct ClsWorkload {
+    task: Box<dyn ClsTask>,
+    round: Arc<ClsRound>,
+    eval_batches: Vec<ClsBatch>,
+}
+
+impl ClsWorkload {
+    pub fn new(
+        task: Box<dyn ClsTask>,
+        mcfg: &ModelConfig,
+        cfg: &FinetuneCfg,
+        k_shot: usize,
+    ) -> ClsWorkload {
+        let verb = task.verbalizers();
+        let mut rng = SplitMix64::new(cfg.seed ^ 0x6b73_686f_74);
+        // k examples per class (k-shot protocol)
+        let mut train = Vec::new();
+        let mut per_class = vec![0usize; task.n_classes()];
+        while per_class.iter().any(|&c| c < k_shot) {
+            let ex = task.sample(&mut rng, true);
+            if per_class[ex.label] < k_shot {
+                per_class[ex.label] += 1;
+                train.push(ex);
+            }
+        }
+        let train_batches: Vec<ClsBatch> =
+            train.chunks(mcfg.b_train).map(|c| ClsBatch::build(mcfg, c, &verb)).collect();
+        let eval: Vec<_> = (0..cfg.eval_n).map(|_| task.sample(&mut rng, false)).collect();
+        let eval_batches: Vec<ClsBatch> =
+            eval.chunks(mcfg.b_train).map(|c| ClsBatch::build(mcfg, c, &verb)).collect();
+        ClsWorkload { task, round: Arc::new(ClsRound { batches: train_batches }), eval_batches }
+    }
+
+    /// The k-shot train batches (the MeZO fp baseline scores these
+    /// directly, outside the lattice-optimizer loop).
+    pub fn train_batches(&self) -> &[ClsBatch] {
+        &self.round.batches
+    }
+
+    pub fn eval_batches(&self) -> &[ClsBatch] {
+        &self.eval_batches
+    }
+}
+
+impl Workload for ClsWorkload {
+    fn name(&self) -> &str {
+        self.task.name()
+    }
+
+    fn engines(&self) -> EngineSet {
+        EngineSet::cls_only()
+    }
+
+    fn build_round(&self, _gen_seed: u64) -> Result<Arc<dyn Round>> {
+        // k-shot SFT scores the same train batches every generation.
+        let round: Arc<dyn Round> = self.round.clone();
+        Ok(round)
+    }
+
+    fn eval_member(
+        &self,
+        session: &Session,
+        params: &ParamsView<'_>,
+        spec: &PopulationSpec,
+        member: usize,
+        round: &dyn Round,
+        scratch: &mut MemberScratch,
+    ) -> Result<f32> {
+        let round = round
+            .as_any()
+            .downcast_ref::<ClsRound>()
+            .ok_or_else(|| anyhow::anyhow!("cls workload got a foreign round payload"))?;
+        let qmax = params.store.format.qmax();
+        apply_perturbation_into(params, spec, member, qmax, &mut scratch.overrides, scratch.policy);
+        let mut loss = 0.0f32;
+        for b in &round.batches {
+            let (ce, _) = session.cls_eval(params, Some(&scratch.overrides), b)?;
+            loss += ce;
+        }
+        Ok(-loss / round.batches.len() as f32)
+    }
+
+    fn eval_accuracy(&self, session: &Session, params: &ParamsView<'_>) -> Result<f32> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for b in &self.eval_batches {
+            let (_, c) = session.cls_eval(params, None, b)?;
+            correct += c;
+            total += b.n_real;
+        }
+        Ok(100.0 * correct as f32 / total.max(1) as f32)
+    }
+}

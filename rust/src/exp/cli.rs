@@ -6,14 +6,14 @@ use std::path::{Path, PathBuf};
 use anyhow::Result;
 
 use crate::coordinator::{
-    eval_problems, finetune_cls, finetune_gen, pretrain_cls, pretrain_gen, EngineSet,
-    FinetuneCfg, PretrainCfg, Session, Variant,
+    finetune_store, pretrain_cls, pretrain_gen, workload_for, EngineSet, FinetuneCfg,
+    PretrainCfg, Session, Variant, Workload,
 };
-use crate::model::{checkpoint, init::init_fp, ParamStore};
+use crate::model::{checkpoint, init::init_fp, AsParams, ParamStore};
 use crate::opt::EsHyper;
 use crate::quant::Format;
 use crate::runtime::Manifest;
-use crate::tasks::{cls_task, gen_task};
+use crate::tasks::{cls_task, gen_task, is_cls_task};
 use crate::util::args::Args;
 
 pub fn run_dir(size: &str, task: &str) -> PathBuf {
@@ -41,8 +41,7 @@ pub fn ensure_pretrained(
     let mut store = ParamStore::from_manifest(man, size, Format::Fp32)?;
     init_fp(&mut store, 0xba5e ^ seed_of(size, task_name));
     let cfg = PretrainCfg { steps, verbose, ..Default::default() };
-    let is_cls = matches!(task_name, "snli" | "mnli" | "rte" | "sst5");
-    if is_cls {
+    if is_cls_task(task_name) {
         let task = cls_task(task_name)?;
         pretrain_cls(&session, task.as_ref(), &mut store, &cfg)?;
     } else {
@@ -139,25 +138,16 @@ pub fn cmd_eval(mut args: Args) -> Result<()> {
 }
 
 fn report_accuracy(man: &Manifest, size: &str, task_name: &str, store: &ParamStore) -> Result<()> {
-    let is_cls = matches!(task_name, "snli" | "mnli" | "rte" | "sst5");
-    if is_cls {
-        let session = Session::new(man, size, store.format, EngineSet::cls_only())?;
-        let task = cls_task(task_name)?;
-        let mut rng = crate::rng::SplitMix64::new(0xe0a1);
-        let examples: Vec<_> = (0..128).map(|_| task.sample(&mut rng, false)).collect();
-        let batches: Vec<_> = examples
-            .chunks(session.cfg.b_train)
-            .map(|c| crate::coordinator::ClsBatch::build(&session.cfg, c, &task.verbalizers()))
-            .collect();
-        let acc = crate::coordinator::eval_accuracy_cls(&session, store, &batches)?;
-        println!("eval accuracy ({}, {}): {:.2}%", task_name, store.format.name(), acc);
-    } else {
-        let session = Session::new(man, size, store.format, EngineSet::gen_only())?;
-        let task = gen_task(task_name, session.cfg.s_prompt, session.cfg.t_dec)?;
-        let problems = eval_problems(task.as_ref(), 128, 42);
-        let acc = crate::coordinator::eval_accuracy_gen(&session, task.as_ref(), store, &problems)?;
-        println!("eval accuracy ({}, {}): {:.2}%", task_name, store.format.name(), acc);
-    }
+    let mcfg = man.config(size)?.clone();
+    // 128-problem eval set, fixed seed. Reasoning tasks keep the historical
+    // `qes eval` problem set; classification tasks now use the workload's
+    // k-shot-protocol eval split (seeded from `seed`), so cls accuracies are
+    // not comparable with pre-Workload-refactor reports.
+    let eval_cfg = FinetuneCfg { eval_n: 128, seed: 42, ..Default::default() };
+    let workload = workload_for(task_name, &mcfg, &eval_cfg, 16)?;
+    let session = Session::new(man, size, store.format, workload.engines())?;
+    let acc = workload.eval_accuracy(&session, &store.params_view())?;
+    println!("eval accuracy ({}, {}): {:.2}%", task_name, store.format.name(), acc);
     Ok(())
 }
 
@@ -213,24 +203,20 @@ pub fn cmd_finetune(mut args: Args) -> Result<()> {
     let fa = parse_ft_args(&mut args)?;
     args.finish()?;
     let man = Manifest::load(&fa.manifest)?;
-    let mut store =
+    let store0 =
         ensure_quantized(&man, &fa.size, &fa.task, fa.format, fa.pretrain_steps, true)?;
-    let is_cls = matches!(fa.task.as_str(), "snli" | "mnli" | "rte" | "sst5");
     let variant_name = match fa.variant {
         Variant::Qes => "qes",
         Variant::QesFullResidual => "qes-full",
         Variant::Quzo => "quzo",
         Variant::QesAdaptive => "qes-adaptive",
     };
-    let log = if is_cls {
-        let session = Session::new(&man, &fa.size, fa.format, EngineSet::cls_only())?;
-        let task = cls_task(&fa.task)?;
-        finetune_cls(&session, task.as_ref(), &mut store, fa.variant, &fa.cfg, fa.k_shot, None)?
-    } else {
-        let session = Session::new(&man, &fa.size, fa.format, EngineSet::gen_only())?;
-        let task = gen_task(&fa.task, session.cfg.s_prompt, session.cfg.t_dec)?;
-        finetune_gen(&session, task.as_ref(), &mut store, fa.variant, &fa.cfg, None)?
-    };
+    // ONE loop for every scenario: the task name picks the Workload impl.
+    let mcfg = man.config(&fa.size)?.clone();
+    let workload = workload_for(&fa.task, &mcfg, &fa.cfg, fa.k_shot)?;
+    let session = Session::new(&man, &fa.size, fa.format, workload.engines())?;
+    let (log, store) =
+        finetune_store(&session, workload.as_ref(), store0, fa.variant, &fa.cfg, None)?;
     let dir = run_dir(&fa.size, &fa.task);
     let ckpt = dir.join(format!("{}_{}.ckpt", fa.format.name(), variant_name));
     checkpoint::save(&store, &ckpt)?;

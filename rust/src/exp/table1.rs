@@ -7,30 +7,16 @@
 use anyhow::Result;
 
 use crate::coordinator::{
-    eval_accuracy_cls, finetune_cls, finetune_cls_mezo, pretrain_cls, ClsBatch, EngineSet,
-    FinetuneCfg, PretrainCfg, Session, Variant,
+    finetune_mezo, finetune_store, pretrain_cls, ClsWorkload, EngineSet, FinetuneCfg,
+    PretrainCfg, Session, Variant, Workload,
 };
 use crate::exp::cli::parse_ft_args;
 use crate::exp::write_result;
-use crate::model::{init::init_fp, ParamStore};
+use crate::model::{init::init_fp, AsParams, ParamStore};
 use crate::quant::Format;
-use crate::rng::SplitMix64;
 use crate::runtime::Manifest;
-use crate::tasks::{cls_task, ClsTask};
+use crate::tasks::cls_task;
 use crate::util::args::Args;
-
-fn eval_batches(
-    session: &Session,
-    task: &dyn ClsTask,
-    n: usize,
-    seed: u64,
-) -> Vec<ClsBatch> {
-    let mut rng = SplitMix64::new(seed ^ 0x5f74_3161);
-    let exs: Vec<_> = (0..n).map(|_| task.sample(&mut rng, false)).collect();
-    exs.chunks(session.cfg.b_train)
-        .map(|c| ClsBatch::build(&session.cfg, c, &task.verbalizers()))
-        .collect()
-}
 
 pub fn run(args: &mut Args) -> Result<()> {
     let mut fa = parse_ft_args(args)?;
@@ -63,39 +49,36 @@ pub fn run(args: &mut Args) -> Result<()> {
         let warm = PretrainCfg { steps: 150, lr: 3e-3, seed: 3, ste_qmax: None, verbose: false };
         let mut fp_base = fp0.clone();
         pretrain_cls(&fp_session, task.as_ref(), &mut fp_base, &warm)?;
-        let evalb = eval_batches(&fp_session, task.as_ref(), fa.cfg.eval_n, fa.cfg.seed);
+        // ONE workload per task: every method trains against the same
+        // k-shot batches and is measured on the same held-out eval set.
+        let cfg = FinetuneCfg { verbose: false, ..fa.cfg.clone() };
+        let workload = ClsWorkload::new(cls_task(task_name)?, &fp_session.cfg, &cfg, fa.k_shot);
 
         // --- FO FP32 (upper bound): continue training with Adam ---
         let mut fo_store = fp_base.clone();
         let focfg = PretrainCfg { steps: fo_steps, lr: 1e-3, seed: 11, ste_qmax: None, verbose: false };
         pretrain_cls(&fp_session, task.as_ref(), &mut fo_store, &focfg)?;
-        let fo_acc = eval_accuracy_cls(&fp_session, &fo_store, &evalb)?;
+        let fo_acc = workload.eval_accuracy(&fp_session, &fo_store.params_view())?;
         table[0].push(fo_acc);
 
         // --- MeZO FP32 ---
         let mut mezo_store = fp_base.clone();
-        let mezo_cfg = FinetuneCfg { verbose: false, ..fa.cfg.clone() };
-        let log = finetune_cls_mezo(&fp_session, task.as_ref(), &mut mezo_store, &mezo_cfg, fa.k_shot)?;
+        let log = finetune_mezo(&fp_session, &workload, &mut mezo_store, &cfg)?;
         table[1].push(log.final_acc);
 
         // --- FO + STE on the W8 grid ---
         let mut ste_store = fp_base.clone();
         let stecfg = PretrainCfg { steps: fo_steps, lr: 1e-3, seed: 11, ste_qmax: Some(127), verbose: false };
         pretrain_cls(&fp_session, task.as_ref(), &mut ste_store, &stecfg)?;
-        let ste_acc = eval_accuracy_cls(&fp_session, &ste_store, &evalb)?;
+        let ste_acc = workload.eval_accuracy(&fp_session, &ste_store.params_view())?;
         table[2].push(ste_acc);
 
         // --- quantized ES methods on the W8 backbone ---
         let q_base = ParamStore::quantize_from(&fp_base, &man, Format::Int8, None)?;
         let q_session = Session::new(&man, &fa.size, Format::Int8, EngineSet::cls_only())?;
-        let q_evalb = eval_batches(&q_session, task.as_ref(), fa.cfg.eval_n, fa.cfg.seed);
         for (mi, variant) in [(3usize, Variant::Quzo), (4usize, Variant::Qes)] {
-            let mut store = q_base.clone();
-            let cfg = FinetuneCfg { verbose: false, ..fa.cfg.clone() };
-            let log = finetune_cls(
-                &q_session, task.as_ref(), &mut store, variant, &cfg, fa.k_shot, None,
-            )?;
-            let _ = &q_evalb;
+            let (log, _) =
+                finetune_store(&q_session, &workload, q_base.clone(), variant, &cfg, None)?;
             table[mi].push(log.final_acc);
         }
         println!(

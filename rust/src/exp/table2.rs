@@ -6,9 +6,12 @@
 
 use anyhow::Result;
 
-use crate::coordinator::{finetune_gen, EngineSet, FinetuneCfg, Session, Variant};
+use crate::coordinator::{
+    finetune_store, EngineSet, FinetuneCfg, GenWorkload, Session, Variant, Workload,
+};
 use crate::exp::cli::{ensure_quantized, parse_ft_args};
 use crate::exp::write_result;
+use crate::model::AsParams;
 use crate::quant::Format;
 use crate::runtime::Manifest;
 use crate::tasks::gen_task;
@@ -47,18 +50,15 @@ pub fn run(args: &mut Args) -> Result<()> {
                 let store0 =
                     ensure_quantized(&man, size, task_name, format, fa.pretrain_steps, true)?;
                 let session = Session::new(&man, size, format, EngineSet::gen_only())?;
+                let cfg = FinetuneCfg { verbose: false, ..fa.cfg.clone() };
                 let task = gen_task(task_name, session.cfg.s_prompt, session.cfg.t_dec)?;
-                let evalset =
-                    crate::coordinator::eval_problems(task.as_ref(), fa.cfg.eval_n, fa.cfg.seed);
-                let base_acc = crate::coordinator::eval_accuracy_gen(
-                    &session, task.as_ref(), &store0, &evalset,
-                )?;
+                let workload = GenWorkload::new(task, &session.cfg, &cfg);
+                let base_acc = workload.eval_accuracy(&session, &store0.params_view())?;
 
-                let mut run_variant = |variant: Variant| -> Result<f32> {
-                    let mut store = store0.clone();
-                    let cfg = FinetuneCfg { verbose: false, ..fa.cfg.clone() };
-                    let log =
-                        finetune_gen(&session, task.as_ref(), &mut store, variant, &cfg, None)?;
+                let run_variant = |variant: Variant| -> Result<f32> {
+                    let (log, _) = finetune_store(
+                        &session, &workload, store0.clone(), variant, &cfg, None,
+                    )?;
                     Ok(log.final_acc)
                 };
                 let quzo = run_variant(Variant::Quzo)?;

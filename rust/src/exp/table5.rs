@@ -4,9 +4,12 @@
 
 use anyhow::Result;
 
-use crate::coordinator::{finetune_gen, EngineSet, FinetuneCfg, Session, Variant};
+use crate::coordinator::{
+    finetune_store, EngineSet, FinetuneCfg, GenWorkload, Session, Variant, Workload,
+};
 use crate::exp::cli::{ensure_quantized, parse_ft_args};
 use crate::exp::write_result;
+use crate::model::AsParams;
 use crate::quant::Format;
 use crate::runtime::Manifest;
 use crate::tasks::gen_task;
@@ -21,14 +24,13 @@ pub fn run(args: &mut Args) -> Result<()> {
 
     let store0 = ensure_quantized(&man, &size, &task_name, Format::Int4, fa.pretrain_steps, true)?;
     let session = Session::new(&man, &size, Format::Int4, EngineSet::gen_only())?;
+    let cfg = FinetuneCfg { verbose: true, ..fa.cfg.clone() };
     let task = gen_task(&task_name, session.cfg.s_prompt, session.cfg.t_dec)?;
-    let evalset = crate::coordinator::eval_problems(task.as_ref(), fa.cfg.eval_n, fa.cfg.seed);
-    let base = crate::coordinator::eval_accuracy_gen(&session, task.as_ref(), &store0, &evalset)?;
+    let workload = GenWorkload::new(task, &session.cfg, &cfg);
+    let base = workload.eval_accuracy(&session, &store0.params_view())?;
 
     // hyperparameters reused verbatim from the mid-size reasoning config
-    let mut store = store0.clone();
-    let cfg = FinetuneCfg { verbose: true, ..fa.cfg.clone() };
-    let log = finetune_gen(&session, task.as_ref(), &mut store, Variant::Qes, &cfg, None)?;
+    let (log, _store) = finetune_store(&session, &workload, store0, Variant::Qes, &cfg, None)?;
 
     let md = format!(
         "# Table 5: Scaling case study ({} INT4 on {})\n\n\

@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use crate::coordinator::{finetune_gen, EngineSet, FinetuneCfg, Session, Variant};
+use crate::coordinator::{finetune_store, EngineSet, FinetuneCfg, GenWorkload, Session, Variant};
 use crate::exp::cli::{ensure_quantized, parse_ft_args};
 use crate::exp::write_result;
 use crate::quant::Format;
@@ -39,13 +39,14 @@ pub fn run(args: &mut Args) -> Result<()> {
             let store0 =
                 ensure_quantized(&man, size, &task_name, format, fa.pretrain_steps, true)?;
             let session = Session::new(&man, size, format, EngineSet::gen_only())?;
+            let cfg = FinetuneCfg { verbose: false, ..fa.cfg.clone() };
             let task = gen_task(&task_name, session.cfg.s_prompt, session.cfg.t_dec)?;
+            let workload = GenWorkload::new(task, &session.cfg, &cfg);
             let mut accs = Vec::new();
             let mut bytes = Vec::new();
             for variant in [Variant::Qes, Variant::QesFullResidual] {
-                let mut store = store0.clone();
-                let cfg = FinetuneCfg { verbose: false, ..fa.cfg.clone() };
-                let log = finetune_gen(&session, task.as_ref(), &mut store, variant, &cfg, None)?;
+                let (log, _) =
+                    finetune_store(&session, &workload, store0.clone(), variant, &cfg, None)?;
                 accs.push(log.final_acc);
                 bytes.push(log.optimizer_state_bytes);
             }

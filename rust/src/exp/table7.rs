@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::coordinator::{finetune_gen, EngineSet, FinetuneCfg, Session, Variant};
+use crate::coordinator::{finetune_store, EngineSet, FinetuneCfg, GenWorkload, Session, Variant};
 use crate::exp::cli::{ensure_quantized, parse_ft_args};
 use crate::exp::write_result;
 use crate::quant::Format;
@@ -32,7 +32,14 @@ pub fn run(args: &mut Args) -> Result<()> {
     // ---- Top: K x gamma ----
     let store0 = ensure_quantized(&man, &size, &task_name, Format::Int4, fa.pretrain_steps, true)?;
     let session = Session::new(&man, &size, Format::Int4, EngineSet::gen_only())?;
-    let task = gen_task(&task_name, session.cfg.s_prompt, session.cfg.t_dec)?;
+    // One workload for the whole grid: the cells vary only hyper.k_window /
+    // hyper.gamma, which the workload's rollout data never depends on.
+    let base_cfg = FinetuneCfg { verbose: false, ..fa.cfg.clone() };
+    let workload = GenWorkload::new(
+        gen_task(&task_name, session.cfg.s_prompt, session.cfg.t_dec)?,
+        &session.cfg,
+        &base_cfg,
+    );
 
     let mut md = String::from(
         "# Table 7 (top): replay window K and decay gamma — INT4 Countdown\n\n\
@@ -48,11 +55,11 @@ pub fn run(args: &mut Args) -> Result<()> {
             } else {
                 gamma_ref
             };
-            let mut store = store0.clone();
-            let mut cfg = FinetuneCfg { verbose: false, ..fa.cfg.clone() };
+            let mut cfg = base_cfg.clone();
             cfg.hyper.k_window = k;
             cfg.hyper.gamma = gamma;
-            let log = finetune_gen(&session, task.as_ref(), &mut store, Variant::Qes, &cfg, None)?;
+            let (log, _) =
+                finetune_store(&session, &workload, store0.clone(), Variant::Qes, &cfg, None)?;
             println!("{} K={} gamma={:.2}: {:.2}%", regime, k, gamma, log.final_acc);
             md.push_str(&format!(
                 "| {} | {} | {:.2} | {:.2} |\n",
@@ -71,9 +78,9 @@ pub fn run(args: &mut Args) -> Result<()> {
     for fmt in [Format::Int4, Format::Int8, Format::W8A8] {
         let store0 = ensure_quantized(&man, &size, &task_name, fmt, fa.pretrain_steps, true)?;
         let session = Session::new(&man, &size, fmt, EngineSet::gen_only())?;
-        let mut store = store0.clone();
-        let cfg = FinetuneCfg { verbose: false, ..fa.cfg.clone() };
-        let log = finetune_gen(&session, task.as_ref(), &mut store, Variant::Qes, &cfg, None)?;
+        // same model config for every format -> the top workload is reusable
+        let (log, _) =
+            finetune_store(&session, &workload, store0, Variant::Qes, &base_cfg, None)?;
         // mean over generations that actually moved
         let moved: Vec<&crate::coordinator::GenLog> =
             log.entries.iter().filter(|e| e.update_ratio > 0.0).collect();

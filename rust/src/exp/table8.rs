@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use crate::exp::cli::parse_ft_args;
 use crate::exp::write_result;
-use crate::model::ParamStore;
+use crate::model::{ParamStore, ShardedParamStore};
 use crate::opt::{EsHyper, LatticeOptimizer, QesFullResidual, QuzoOptimizer, SeedReplayQes};
 use crate::quant::Format;
 use crate::runtime::Manifest;
@@ -46,7 +46,7 @@ pub fn run(args: &mut Args) -> Result<()> {
             let mut replay = SeedReplayQes::new(d, fmt.qmax(), hyper.clone());
             // fill the replay history to its cap for honest accounting
             {
-                let mut s2 = store.clone();
+                let mut s2 = ShardedParamStore::with_default_shards(store.clone())?;
                 let mut rng = crate::rng::SplitMix64::new(1);
                 for _ in 0..hyper.k_window {
                     let spec = crate::opt::PopulationSpec {

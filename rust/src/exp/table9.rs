@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::coordinator::{finetune_gen, EngineSet, FinetuneCfg, Session, Variant};
+use crate::coordinator::{finetune_store, EngineSet, FinetuneCfg, GenWorkload, Session, Variant};
 use crate::exp::cli::{ensure_quantized, parse_ft_args};
 use crate::exp::write_result;
 use crate::quant::Format;
@@ -41,13 +41,17 @@ pub fn run(args: &mut Args) -> Result<()> {
         let store0 =
             ensure_quantized(&man, size, &task_name, Format::Int4, fa.pretrain_steps, true)?;
         let session = Session::new(&man, size, Format::Int4, EngineSet::gen_only())?;
-        let task = gen_task(&task_name, session.cfg.s_prompt, session.cfg.t_dec)?;
+        let mut cfg = FinetuneCfg { gens, verbose: false, eval_every: 0, ..fa.cfg.clone() };
+        let workload = GenWorkload::new(
+            gen_task(&task_name, session.cfg.s_prompt, session.cfg.t_dec)?,
+            &session.cfg,
+            &cfg,
+        );
 
         // oracle reference: Full Residual (the "no-replay" variant)
-        let mut store = store0.clone();
-        let mut cfg = FinetuneCfg { gens, verbose: false, eval_every: 0, ..fa.cfg.clone() };
-        let oracle =
-            finetune_gen(&session, task.as_ref(), &mut store, Variant::QesFullResidual, &cfg, None)?;
+        let (oracle, _) = finetune_store(
+            &session, &workload, store0.clone(), Variant::QesFullResidual, &cfg, None,
+        )?;
         let oracle_total = oracle.mean_rollout_ms() + oracle.mean_update_ms();
         md.push_str(&format!(
             "| {} | full-residual | — | {:.1} | {:.1} | 1.00x |\n",
@@ -63,10 +67,9 @@ pub fn run(args: &mut Args) -> Result<()> {
         ));
 
         for &k in &windows {
-            let mut store = store0.clone();
             cfg.hyper.k_window = k;
-            let log =
-                finetune_gen(&session, task.as_ref(), &mut store, Variant::Qes, &cfg, None)?;
+            let (log, _) =
+                finetune_store(&session, &workload, store0.clone(), Variant::Qes, &cfg, None)?;
             let total = log.mean_rollout_ms() + log.mean_update_ms();
             let overhead = total / oracle_total;
             println!(

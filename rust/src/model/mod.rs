@@ -9,8 +9,13 @@
 
 pub mod checkpoint;
 pub mod init;
+pub mod sharded;
 
 use std::collections::BTreeMap;
+
+pub use sharded::{
+    AsParams, ParamsView, ShardPlan, ShardedParamStore, Snapshot, DEFAULT_SHARDS, SHARD_ALIGN,
+};
 
 use crate::quant::Format;
 use crate::runtime::manifest::{Manifest, ParamMeta};

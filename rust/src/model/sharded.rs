@@ -1,0 +1,436 @@
+//! Sharded copy-on-write parameter plane.
+//!
+//! The leader's training-time view of a quantized store: the flat lattice
+//! space is partitioned into fixed shards (boundaries aligned to
+//! [`SHARD_ALIGN`], a `KernelPolicy` chunk multiple), each held as an
+//! `Arc`-backed slab. Publishing a rollout snapshot to the worker pool is
+//! then O(number of shards) reference bumps instead of an O(d) clone of
+//! the whole store, and an update after a publish copies only the shards
+//! it actually writes (`Arc::make_mut` unshares lazily, per shard).
+//!
+//! Shard boundaries never affect results: the fused kernels in
+//! `opt::kernels` chunk the flat element space identically for any
+//! segmentation, so lattices and residuals are bit-identical across shard
+//! counts — the determinism contract extended to the storage layer
+//! (enforced by `tests/equivalence.rs` over shard counts {1, 2, 8}).
+
+use std::borrow::Cow;
+use std::sync::Arc;
+
+use crate::model::{ParamStore, TensorData};
+use crate::quant::Format;
+
+/// Shard boundary alignment in lattice elements. `opt::kernels` defines
+/// its default chunk size (`DEFAULT_CHUNK`) as exactly this constant, so
+/// default-policy chunks never straddle a shard boundary.
+pub const SHARD_ALIGN: usize = 8192;
+
+/// Default shard count requested for leader planes. The plan rounds the
+/// shard length up to a [`SHARD_ALIGN`] multiple, so small lattices may
+/// end up with fewer shards than requested.
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// Fixed partition of the flat lattice space `[0, d)` into shards of
+/// `shard_len` elements (the last shard may be shorter). `shard_len` is
+/// always a [`SHARD_ALIGN`] multiple.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub d: usize,
+    pub shard_len: usize,
+    pub n_shards: usize,
+}
+
+impl ShardPlan {
+    /// Plan `shards` shards over `d` elements, aligning boundaries to
+    /// [`SHARD_ALIGN`] multiples. The realized shard count is
+    /// `ceil(d / shard_len)` and may be below the request.
+    pub fn new(d: usize, shards: usize) -> ShardPlan {
+        let want = shards.max(1);
+        let raw = (d + want - 1) / want;
+        let shard_len = (((raw + SHARD_ALIGN - 1) / SHARD_ALIGN) * SHARD_ALIGN).max(SHARD_ALIGN);
+        let n_shards = if d == 0 { 1 } else { (d + shard_len - 1) / shard_len };
+        ShardPlan { d, shard_len, n_shards }
+    }
+
+    /// `(start, len)` of shard `s` in flat element space.
+    pub fn bounds(&self, s: usize) -> (usize, usize) {
+        let start = s * self.shard_len;
+        (start, self.shard_len.min(self.d - start))
+    }
+
+    /// Which shard holds flat element `j`.
+    #[inline]
+    pub fn shard_of(&self, j: usize) -> usize {
+        j / self.shard_len
+    }
+}
+
+/// A read-only view of model parameters: the static entries (shapes,
+/// fp tensors, scales) plus the lattice values as canonical-flat-order
+/// segments with ARBITRARY segmentation (per-tensor for a plain store,
+/// per-shard for a sharded plane or snapshot). Everything downstream of
+/// the store — engine marshalling, perturbation fill — consumes this.
+pub struct ParamsView<'a> {
+    pub store: &'a ParamStore,
+    pub lattice: Vec<&'a [i8]>,
+}
+
+impl<'a> ParamsView<'a> {
+    /// Total lattice elements covered by the view's segments.
+    pub fn lattice_len(&self) -> usize {
+        self.lattice.iter().map(|s| s.len()).sum()
+    }
+
+    /// Contiguous values of lattice tensor `k` (indexing
+    /// `store.lattice_indices()`): borrowed when segment `k` is exactly
+    /// that tensor (per-tensor views), assembled from the flat segments
+    /// otherwise (sharded views).
+    pub fn lattice_tensor(&self, k: usize) -> Cow<'a, [i8]> {
+        let lat = self.store.lattice_indices();
+        let numel = self.store.entries[lat[k]].numel();
+        let start: usize = lat[..k].iter().map(|&i| self.store.entries[i].numel()).sum();
+        if self.lattice.len() == lat.len() {
+            let seg_start: usize = self.lattice[..k].iter().map(|s| s.len()).sum();
+            if seg_start == start && self.lattice[k].len() == numel {
+                return Cow::Borrowed(self.lattice[k]);
+            }
+        }
+        let mut out = Vec::with_capacity(numel);
+        let mut off = 0usize;
+        for seg in &self.lattice {
+            let end = off + seg.len();
+            if end > start && off < start + numel {
+                let lo = start.max(off) - off;
+                let hi = (start + numel).min(end) - off;
+                out.extend_from_slice(&seg[lo..hi]);
+            }
+            off = end;
+        }
+        assert_eq!(out.len(), numel, "lattice view shorter than tensor {}", k);
+        Cow::Owned(out)
+    }
+}
+
+/// Anything that can present itself as a [`ParamsView`]: plain stores,
+/// the leader's sharded plane, and published snapshots. Object safe, so
+/// trait objects (e.g. `Workload` methods) can take `&dyn AsParams`.
+pub trait AsParams {
+    fn params_view(&self) -> ParamsView<'_>;
+}
+
+impl AsParams for ParamStore {
+    fn params_view(&self) -> ParamsView<'_> {
+        let lattice =
+            if self.format == Format::Fp32 { Vec::new() } else { self.lattice_i8() };
+        ParamsView { store: self, lattice }
+    }
+}
+
+impl AsParams for ParamsView<'_> {
+    fn params_view(&self) -> ParamsView<'_> {
+        ParamsView { store: self.store, lattice: self.lattice.clone() }
+    }
+}
+
+/// The leader's copy-on-write sharded parameter plane.
+///
+/// Owns the authoritative lattice values as `Arc`-backed shard slabs; the
+/// wrapped base store keeps every non-lattice entry (embeddings, norms,
+/// scales) plus the layout metadata, with its lattice entry payloads
+/// emptied (the plane is the single source of truth).
+pub struct ShardedParamStore {
+    base: Arc<ParamStore>,
+    plan: ShardPlan,
+    shards: Vec<Arc<Vec<i8>>>,
+    /// Per-shard dirty-since-last-publish flags (telemetry for the
+    /// O(dirty) snapshot cost model; correctness never depends on them).
+    dirty: Vec<bool>,
+    publishes: u64,
+}
+
+impl ShardedParamStore {
+    /// Shard a quantized store into `shards` COW slabs (see
+    /// [`ShardPlan::new`] for the realized count). Consumes the store;
+    /// its lattice entry payloads move into the plane.
+    pub fn new(store: ParamStore, shards: usize) -> anyhow::Result<ShardedParamStore> {
+        anyhow::ensure!(
+            store.format != Format::Fp32,
+            "sharded plane requires a quantized store (fp runs use ParamStore directly)"
+        );
+        let d = store.lattice_dim();
+        let plan = ShardPlan::new(d, shards);
+        let mut flat: Vec<i8> = Vec::with_capacity(d);
+        for t in store.lattice_i8() {
+            flat.extend_from_slice(t);
+        }
+        debug_assert_eq!(flat.len(), d);
+        let mut slabs = Vec::with_capacity(plan.n_shards);
+        for s in 0..plan.n_shards {
+            let (start, len) = plan.bounds(s);
+            slabs.push(Arc::new(flat[start..start + len].to_vec()));
+        }
+        let mut store = store;
+        let lat: Vec<usize> = store.lattice_indices().to_vec();
+        for &i in &lat {
+            store.entries[i].data = TensorData::I8(Vec::new());
+        }
+        let n = plan.n_shards;
+        Ok(ShardedParamStore {
+            base: Arc::new(store),
+            plan,
+            shards: slabs,
+            dirty: vec![false; n],
+            publishes: 0,
+        })
+    }
+
+    /// [`ShardedParamStore::new`] with the [`DEFAULT_SHARDS`] request.
+    pub fn with_default_shards(store: ParamStore) -> anyhow::Result<ShardedParamStore> {
+        ShardedParamStore::new(store, DEFAULT_SHARDS)
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.plan.n_shards
+    }
+
+    pub fn format(&self) -> Format {
+        self.base.format
+    }
+
+    pub fn size(&self) -> &str {
+        &self.base.size
+    }
+
+    pub fn lattice_dim(&self) -> usize {
+        self.plan.d
+    }
+
+    /// The shard slabs as canonical-flat-order read-only segments — what
+    /// the fused update kernels consume directly (no layout translation).
+    pub fn lattice_segments(&self) -> Vec<&[i8]> {
+        self.shards.iter().map(|s| s.as_slice()).collect()
+    }
+
+    /// Apply a sparse update (global flat index, new value — ascending by
+    /// index, as the kernels emit), unsharing only the shards actually
+    /// written (copy-on-write) and marking them dirty. Returns the number
+    /// of distinct shards this call touched. Indices must be in range;
+    /// values are written verbatim (gating happened in the kernel).
+    pub fn apply_deltas(&mut self, deltas: &[(usize, i8)]) -> usize {
+        let mut touched = 0usize;
+        let mut last: Option<usize> = None;
+        for &(j, v) in deltas {
+            let s = self.plan.shard_of(j);
+            if last != Some(s) {
+                last = Some(s);
+                touched += 1;
+                self.dirty[s] = true;
+            }
+            let off = j - s * self.plan.shard_len;
+            Arc::make_mut(&mut self.shards[s])[off] = v;
+        }
+        touched
+    }
+
+    /// Shards written since the last publish.
+    pub fn dirty_shards(&self) -> usize {
+        self.dirty.iter().filter(|&&b| b).count()
+    }
+
+    pub fn publishes(&self) -> u64 {
+        self.publishes
+    }
+
+    /// Publish the current lattice as an immutable snapshot: O(n_shards)
+    /// reference bumps, no element copies. Subsequent leader updates
+    /// unshare (clone) only the shards they write, so the snapshot is
+    /// isolated from them.
+    pub fn snapshot(&mut self) -> Snapshot {
+        self.publishes += 1;
+        self.dirty.fill(false);
+        Snapshot { base: self.base.clone(), plan: self.plan.clone(), shards: self.shards.clone() }
+    }
+
+    /// Materialize a plain per-tensor store (checkpointing, hand-off to
+    /// non-sharded tooling). O(d) — an endpoint operation, not a per-
+    /// generation one.
+    pub fn materialize(&self) -> ParamStore {
+        let mut out = (*self.base).clone();
+        let lat: Vec<usize> = out.lattice_indices().to_vec();
+        let mut it = self.shards.iter().flat_map(|s| s.iter().copied());
+        for &i in &lat {
+            let numel = out.entries[i].numel();
+            let v: Vec<i8> = it.by_ref().take(numel).collect();
+            debug_assert_eq!(v.len(), numel);
+            out.entries[i].data = TensorData::I8(v);
+        }
+        out
+    }
+
+    /// Weight footprint in bytes with true packed lattice width (the base
+    /// store's lattice entries are empty, so account the plane here). INT4
+    /// packing is counted per tensor, matching `ParamStore::weight_bytes`
+    /// exactly — sharding must never change the reported footprint.
+    pub fn weight_bytes(&self) -> u64 {
+        let lattice: u64 = match self.base.format {
+            Format::Int4 => self
+                .base
+                .lattice_indices()
+                .iter()
+                .map(|&i| (self.base.entries[i].numel() as u64 + 1) / 2)
+                .sum(),
+            _ => self.plan.d as u64,
+        };
+        self.base.weight_bytes() + lattice
+    }
+}
+
+impl AsParams for ShardedParamStore {
+    fn params_view(&self) -> ParamsView<'_> {
+        ParamsView { store: &self.base, lattice: self.lattice_segments() }
+    }
+}
+
+/// An immutable, cheaply clonable published view of the plane (what the
+/// leader broadcasts to the worker pool each generation). Clone is
+/// O(n_shards) `Arc` bumps.
+#[derive(Clone)]
+pub struct Snapshot {
+    base: Arc<ParamStore>,
+    plan: ShardPlan,
+    shards: Vec<Arc<Vec<i8>>>,
+}
+
+impl Snapshot {
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn lattice_segments(&self) -> Vec<&[i8]> {
+        self.shards.iter().map(|s| s.as_slice()).collect()
+    }
+}
+
+impl AsParams for Snapshot {
+    fn params_view(&self) -> ParamsView<'_> {
+        ParamsView { store: &self.base, lattice: self.lattice_segments() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_fp;
+    use crate::runtime::manifest::Manifest;
+
+    fn quant_store(seed: u64) -> ParamStore {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
+        init_fp(&mut fp, seed);
+        ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap()
+    }
+
+    fn flat(segs: &[&[i8]]) -> Vec<i8> {
+        segs.iter().flat_map(|s| s.iter().copied()).collect()
+    }
+
+    #[test]
+    fn plan_aligns_and_covers() {
+        for d in [1usize, 100, SHARD_ALIGN, SHARD_ALIGN + 1, 36864, 147456] {
+            for shards in [1usize, 2, 5, 8, 100] {
+                let p = ShardPlan::new(d, shards);
+                assert_eq!(p.shard_len % SHARD_ALIGN, 0, "d={} shards={}", d, shards);
+                let mut covered = 0usize;
+                for s in 0..p.n_shards {
+                    let (start, len) = p.bounds(s);
+                    assert_eq!(start, covered);
+                    assert!(len >= 1);
+                    covered += len;
+                }
+                assert_eq!(covered, d, "d={} shards={}", d, shards);
+            }
+        }
+    }
+
+    #[test]
+    fn sharding_roundtrips_through_materialize() {
+        let q = quant_store(3);
+        let want: Vec<i8> = q.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+        for shards in [1usize, 2, 8] {
+            let sp = ShardedParamStore::new(q.clone(), shards).unwrap();
+            assert_eq!(flat(&sp.lattice_segments()), want, "shards={}", shards);
+            let back = sp.materialize();
+            let got: Vec<i8> =
+                back.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+            assert_eq!(got, want, "shards={}", shards);
+            assert_eq!(back.format, q.format);
+        }
+    }
+
+    #[test]
+    fn snapshot_is_isolated_from_leader_updates() {
+        let q = quant_store(5);
+        let mut sp = ShardedParamStore::new(q, 8).unwrap();
+        let before = flat(&sp.lattice_segments());
+        let snap = sp.snapshot();
+        // write through every shard after publishing
+        let d = sp.lattice_dim();
+        let deltas: Vec<(usize, i8)> = (0..d)
+            .step_by(1000)
+            .map(|j| (j, if before[j] == 7 { -7 } else { 7 }))
+            .collect();
+        sp.apply_deltas(&deltas);
+        assert_eq!(flat(&snap.lattice_segments()), before, "snapshot mutated");
+        // and the leader did change
+        assert_ne!(flat(&sp.lattice_segments()), before);
+    }
+
+    #[test]
+    fn apply_deltas_marks_only_touched_shards_dirty() {
+        let q = quant_store(7);
+        let mut sp = ShardedParamStore::new(q, 8).unwrap();
+        let _ = sp.snapshot(); // clears dirty
+        assert_eq!(sp.dirty_shards(), 0);
+        let touched = sp.apply_deltas(&[(0, 1), (1, 2)]);
+        assert_eq!(touched, 1);
+        assert_eq!(sp.dirty_shards(), 1);
+        // a second publish resets the flags again
+        let _ = sp.snapshot();
+        assert_eq!(sp.dirty_shards(), 0);
+    }
+
+    #[test]
+    fn weight_bytes_matches_materialized_store() {
+        // Sharding is storage, not accounting: the plane must report the
+        // exact Table 8 footprint of its materialized per-tensor form.
+        let q = quant_store(11);
+        let sp = ShardedParamStore::new(q.clone(), 8).unwrap();
+        assert_eq!(sp.weight_bytes(), q.weight_bytes());
+        assert_eq!(sp.weight_bytes(), sp.materialize().weight_bytes());
+    }
+
+    #[test]
+    fn views_agree_between_plain_and_sharded() {
+        let q = quant_store(9);
+        let plain_flat: Vec<i8> = {
+            let v = q.params_view();
+            v.lattice.iter().flat_map(|s| s.iter().copied()).collect()
+        };
+        let sp = ShardedParamStore::new(q.clone(), 8).unwrap();
+        let view = sp.params_view();
+        let sharded_flat: Vec<i8> = view.lattice.iter().flat_map(|s| s.iter().copied()).collect();
+        assert_eq!(plain_flat, sharded_flat);
+        // per-tensor gather agrees with the plain store's tensors
+        for (k, &li) in q.lattice_indices().iter().enumerate() {
+            let want = q.entries[li].data.as_i8();
+            assert_eq!(&*view.lattice_tensor(k), want, "tensor {}", k);
+            // plain view takes the borrowed fast path
+            let pv = q.params_view();
+            assert!(matches!(pv.lattice_tensor(k), Cow::Borrowed(_)));
+        }
+    }
+}

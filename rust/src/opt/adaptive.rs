@@ -16,7 +16,7 @@
 //! K stays in [k_min, k_max]; history beyond the current K is dropped
 //! lazily by the inner optimizer.
 
-use crate::model::ParamStore;
+use crate::model::ShardedParamStore;
 use crate::opt::{
     EsHyper, KernelPolicy, LatticeOptimizer, PopulationSpec, SeedReplayQes, StepStats,
 };
@@ -60,11 +60,7 @@ impl AdaptiveReplayQes {
     }
 
     fn mean_abs_residual(&self) -> f32 {
-        let e = self.inner.proxy_residual();
-        if e.is_empty() {
-            return 0.0;
-        }
-        e.iter().map(|x| x.abs()).sum::<f32>() / e.len() as f32
+        self.inner.mean_abs_proxy()
     }
 
     fn adjust(&mut self) {
@@ -89,7 +85,7 @@ impl AdaptiveReplayQes {
 impl LatticeOptimizer for AdaptiveReplayQes {
     fn update(
         &mut self,
-        store: &mut ParamStore,
+        store: &mut ShardedParamStore,
         spec: &PopulationSpec,
         fitness: &[f32],
     ) -> anyhow::Result<StepStats> {
@@ -121,11 +117,12 @@ mod tests {
     use crate::rng::SplitMix64;
     use crate::runtime::manifest::Manifest;
 
-    fn store() -> ParamStore {
+    fn store() -> ShardedParamStore {
         let man = Manifest::load("artifacts/manifest.json").unwrap();
         let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
         init_fp(&mut fp, 5);
-        ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap()
+        let q = ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap();
+        ShardedParamStore::with_default_shards(q).unwrap()
     }
 
     fn hyper(k: usize) -> EsHyper {

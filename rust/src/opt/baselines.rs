@@ -1,7 +1,7 @@
 //! Baselines: QuZO (quantized zeroth-order with stochastic rounding) and
 //! MeZO (full-precision zeroth-order SPSA).
 
-use crate::model::{ParamKind, ParamStore};
+use crate::model::{ParamKind, ParamStore, ShardedParamStore};
 use crate::opt::{
     kernels, EsHyper, KernelPolicy, LatticeOptimizer, PopulationSpec, StepStats,
 };
@@ -34,7 +34,7 @@ impl QuzoOptimizer {
 impl LatticeOptimizer for QuzoOptimizer {
     fn update(
         &mut self,
-        store: &mut ParamStore,
+        store: &mut ShardedParamStore,
         spec: &PopulationSpec,
         fitness: &[f32],
     ) -> anyhow::Result<StepStats> {
@@ -48,8 +48,8 @@ impl LatticeOptimizer for QuzoOptimizer {
         // One uniform per element, so it is counter-addressable and the
         // fused kernel can jump each chunk to its own window.
         let round_seed = spec.gen_seed ^ Q_ROUND_SALT ^ self.step.wrapping_mul(0x9e37);
-        let stats = kernels::fused_quzo(
-            store.lattice_i8_mut(),
+        let (stats, deltas) = kernels::fused_quzo(
+            store.lattice_segments(),
             spec,
             fitness,
             self.hyper.alpha,
@@ -57,6 +57,7 @@ impl LatticeOptimizer for QuzoOptimizer {
             round_seed,
             self.policy,
         );
+        store.apply_deltas(&deltas);
         self.step += 1;
         Ok(stats)
     }
@@ -161,6 +162,14 @@ mod tests {
         (fp, q)
     }
 
+    fn sharded(q: &ParamStore) -> ShardedParamStore {
+        ShardedParamStore::with_default_shards(q.clone()).unwrap()
+    }
+
+    fn flat(s: &ShardedParamStore) -> Vec<i8> {
+        s.lattice_segments().iter().flat_map(|t| t.iter().copied()).collect()
+    }
+
     #[test]
     fn quzo_noise_dominates_where_qes_tracks_signal() {
         // §5's dichotomy, measured as cosine alignment between the realized
@@ -172,8 +181,8 @@ mod tests {
         let (_fp, s0) = stores();
         let d = s0.lattice_dim();
         let hyper = EsHyper { sigma: 0.5, alpha: 0.2, gamma: 1.0, pairs: 2, k_window: 0 };
-        let mut s_quzo = s0.clone();
-        let mut s_qes = s0.clone();
+        let mut s_quzo = sharded(&s0);
+        let mut s_qes = sharded(&s0);
         let mut quzo = QuzoOptimizer::new(d, 7, hyper.clone());
         let mut qes = crate::opt::QesFullResidual::new(d, 7, hyper.clone());
         let w0: Vec<i8> = s0.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
@@ -193,8 +202,8 @@ mod tests {
             quzo.update(&mut s_quzo, &spec, &fitness).unwrap();
             qes.update(&mut s_qes, &spec, &fitness).unwrap();
         }
-        let cos = |s: &ParamStore| -> f64 {
-            let wt: Vec<i8> = s.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+        let cos = |s: &ShardedParamStore| -> f64 {
+            let wt: Vec<i8> = flat(s);
             let mut dot = 0.0f64;
             let mut na = 0.0f64;
             let mut nb = 0.0f64;
@@ -226,7 +235,8 @@ mod tests {
 
     #[test]
     fn quzo_respects_lattice_range() {
-        let (_fp, mut s) = stores();
+        let (_fp, q) = stores();
+        let mut s = sharded(&q);
         let d = s.lattice_dim();
         let hyper = EsHyper { sigma: 1.0, alpha: 10.0, gamma: 1.0, pairs: 2, k_window: 0 };
         let mut quzo = QuzoOptimizer::new(d, 7, hyper);
@@ -237,9 +247,7 @@ mod tests {
             let fitness = crate::opt::normalize_fitness(&raw);
             quzo.update(&mut s, &spec, &fitness).unwrap();
         }
-        for t in s.lattice_i8() {
-            assert!(t.iter().all(|&v| (-7..=7).contains(&v)));
-        }
+        assert!(flat(&s).iter().all(|&v| (-7..=7).contains(&v)));
     }
 
     #[test]

@@ -6,26 +6,27 @@
 //! the chunk-parallel kernels (`opt::kernels`) are verified against
 //! bit-for-bit; the optimizers' hot paths run the fused kernels instead.
 
-use crate::model::ParamStore;
+use crate::model::{AsParams, ParamsView};
 use crate::opt::kernels::{self, KernelPolicy};
 use crate::opt::PopulationSpec;
 use crate::rng::NoiseStream;
 
 /// Materialize member `m`'s perturbed lattice tensors (Eq. 3 + Eq. 4
-/// boundary gating), leaving the store untouched. Output is aligned with
-/// `store.lattice_indices()` — ready for `runtime::param_literals`.
+/// boundary gating), leaving the parameters untouched. Output is aligned
+/// with `store.lattice_indices()` — ready for `runtime::param_literals`.
+/// Accepts any parameter source (plain store, sharded plane, snapshot).
 ///
 /// Allocates fresh buffers per call; rollout loops that evaluate many
 /// members should hold a scratch `Vec<Vec<i8>>` and call
 /// [`apply_perturbation_into`] instead.
-pub fn apply_perturbation(
-    store: &ParamStore,
+pub fn apply_perturbation<P: AsParams + ?Sized>(
+    params: &P,
     spec: &PopulationSpec,
     member: usize,
     qmax: i8,
 ) -> Vec<Vec<i8>> {
     let mut out: Vec<Vec<i8>> = Vec::new();
-    apply_perturbation_into(store, spec, member, qmax, &mut out, KernelPolicy::default());
+    apply_perturbation_into(params, spec, member, qmax, &mut out, KernelPolicy::default());
     out
 }
 
@@ -33,24 +34,26 @@ pub fn apply_perturbation(
 /// mirror the lattice tensor shapes on first use and reused verbatim after
 /// that, so a rollout loop allocates once per worker instead of once per
 /// member. Chunk-parallel per `policy`; output is bit-identical to the
-/// sequential walk for any policy.
-pub fn apply_perturbation_into(
-    store: &ParamStore,
+/// sequential walk for any policy AND any source segmentation (per-tensor
+/// or per-shard — the chunk plan covers the same flat element space).
+pub fn apply_perturbation_into<P: AsParams + ?Sized>(
+    params: &P,
     spec: &PopulationSpec,
     member: usize,
     qmax: i8,
     out: &mut Vec<Vec<i8>>,
     policy: KernelPolicy,
 ) {
-    let src = store.lattice_i8();
-    if out.len() != src.len() {
-        out.resize_with(src.len(), Vec::new);
+    let ParamsView { store, lattice } = params.params_view();
+    let lat = store.lattice_indices();
+    if out.len() != lat.len() {
+        out.resize_with(lat.len(), Vec::new);
     }
-    for (o, s) in out.iter_mut().zip(src.iter()) {
-        o.resize(s.len(), 0);
+    for (o, &i) in out.iter_mut().zip(lat.iter()) {
+        o.resize(store.entries[i].numel(), 0);
     }
     let dst: Vec<&mut [i8]> = out.iter_mut().map(|v| v.as_mut_slice()).collect();
-    kernels::fill_perturbation(src, dst, spec, member, qmax, policy);
+    kernels::fill_perturbation(lattice, dst, spec, member, qmax, policy);
 }
 
 /// Accumulate the ES gradient estimate (Eq. 5):

@@ -29,7 +29,7 @@
 //! enforces the contract across chunk sizes {1, 64, 4096} and thread
 //! counts {1, 2, 8}.
 
-use crate::opt::{gate_apply, PopulationSpec, StepStats};
+use crate::opt::{gate_eval, PopulationSpec, StepStats};
 use crate::rng::{NoiseStream, SplitMix64};
 use crate::util::f16::{f16_decode_slice, f16_encode_slice};
 use crate::util::parallel;
@@ -37,8 +37,18 @@ use crate::util::parallel;
 /// Default chunk size: 8 Ki elements keeps the working set (chunk of
 /// weights + gradient + residual) around 64 KB — L1/L2-resident on the
 /// target cores — while leaving enough chunks to spread across threads
-/// even for the nano lattice.
-pub const DEFAULT_CHUNK: usize = 8192;
+/// even for the nano lattice. Defined as the shard alignment of the COW
+/// parameter plane, so default-policy chunks never straddle a shard
+/// boundary and per-shard state segments line up with chunk windows.
+pub const DEFAULT_CHUNK: usize = crate::model::SHARD_ALIGN;
+
+/// Sparse weight writes produced by an update kernel: `(global flat
+/// index, new lattice value)`, ascending by index. The caller commits
+/// them through `ShardedParamStore::apply_deltas`, which copy-on-write
+/// unshares only the shards that actually changed — update kernels
+/// therefore never need mutable access to the (possibly published)
+/// weight slabs.
+pub type WeightDeltas = Vec<(usize, i8)>;
 
 /// How a kernel splits and schedules its work. Never affects results —
 /// only wall-clock (see the module-level determinism contract).
@@ -202,54 +212,72 @@ pub fn accumulate_grad_chunked(
     });
 }
 
-fn reduce_stats(d: usize, partials: Vec<StepStats>) -> StepStats {
+fn reduce_stats(d: usize, partials: Vec<(StepStats, WeightDeltas)>) -> (StepStats, WeightDeltas) {
     let mut total = StepStats { d: d as u64, ..Default::default() };
-    for p in partials {
+    let n: usize = partials.iter().map(|(_, dv)| dv.len()).sum();
+    let mut deltas = Vec::with_capacity(n);
+    // map_tasks returns partials in chunk order, and in-chunk indices are
+    // ascending, so the concatenation is globally index-sorted.
+    for (p, dv) in partials {
         total.n_changed += p.n_changed;
         total.n_boundary += p.n_boundary;
         total.n_gated += p.n_gated;
+        deltas.extend(dv);
     }
-    total
+    (total, deltas)
 }
 
 /// Fused QES Full-Residual update (Algorithm 1): per chunk, regenerate all
 /// pairs' deltas, form the gradient, apply error feedback (f16 residual)
 /// and boundary gating in a single pass. No d-sized gradient buffer.
+///
+/// `weights` is the current lattice as read-only canonical-flat-order
+/// segments (any segmentation — per-tensor or per-shard); `e` is the
+/// persistent residual, segmented per shard alongside the weights. Weight
+/// changes come back as sparse [`WeightDeltas`] for COW commit.
 #[allow(clippy::too_many_arguments)]
 pub fn fused_full_residual(
-    tensors: Vec<&mut [i8]>,
-    e: &mut [u16],
+    weights: Vec<&[i8]>,
+    e: Vec<&mut [u16]>,
     spec: &PopulationSpec,
     fitness: &[f32],
     alpha: f32,
     gamma: f32,
     qmax: i8,
     policy: KernelPolicy,
-) -> StepStats {
-    let d: usize = tensors.iter().map(|t| t.len()).sum();
-    assert_eq!(d, e.len(), "lattice dim {} != residual dim {}", d, e.len());
+) -> (StepStats, WeightDeltas) {
+    let d: usize = weights.iter().map(|t| t.len()).sum();
+    let de: usize = e.iter().map(|t| t.len()).sum();
+    assert_eq!(d, de, "lattice dim {} != residual dim {}", d, de);
     assert_eq!(fitness.len(), spec.n_members());
-    let w_chunks = chunk_segments_mut(tensors, policy.chunk_size);
-    let e_chunks = chunk_segments_mut(vec![e], policy.chunk_size);
+    let w_chunks = chunk_segments(weights, policy.chunk_size);
+    let e_chunks = chunk_segments_mut(e, policy.chunk_size);
     let tasks: Vec<_> = w_chunks.into_iter().zip(e_chunks).collect();
-    let partials = parallel::map_tasks(tasks, policy.threads, |(mut wc, mut ec)| {
+    let partials = parallel::map_tasks(tasks, policy.threads, |(wc, mut ec)| {
         let mut g = vec![0.0f32; wc.len];
         grad_chunk(spec, fitness, wc.start, &mut g);
-        let eseg: &mut [u16] = &mut ec.segs[0];
+        // gather the chunk's residual (it may span several shard segments)
         let mut ef = vec![0.0f32; wc.len];
-        f16_decode_slice(eseg, &mut ef);
+        let mut pos = 0usize;
+        for seg in ec.segs.iter() {
+            let n = seg.len();
+            f16_decode_slice(&seg[..n], &mut ef[pos..pos + n]);
+            pos += n;
+        }
         let mut stats = StepStats::default();
+        let mut deltas: WeightDeltas = Vec::new();
         let mut k = 0usize;
-        for seg in wc.segs.iter_mut() {
-            for w in seg.iter_mut() {
+        for seg in wc.segs.iter() {
+            for &w in seg.iter() {
                 let u = alpha * g[k] + gamma * ef[k];
                 let dw = u.round() as i32;
-                let (applied, boundary) = gate_apply(w, dw, qmax);
+                let (applied, boundary) = gate_eval(w, dw, qmax);
                 if applied != 0 {
                     stats.n_changed += 1;
                     if boundary {
                         stats.n_boundary += 1;
                     }
+                    deltas.push((wc.start + k, (w as i32 + applied) as i8));
                 } else if dw != 0 {
                     stats.n_gated += 1;
                 }
@@ -257,8 +285,13 @@ pub fn fused_full_residual(
                 k += 1;
             }
         }
-        f16_encode_slice(&ef, eseg);
-        stats
+        let mut pos = 0usize;
+        for seg in ec.segs.iter_mut() {
+            let n = seg.len();
+            f16_encode_slice(&ef[pos..pos + n], &mut seg[..n]);
+            pos += n;
+        }
+        (stats, deltas)
     });
     reduce_stats(d, partials)
 }
@@ -279,25 +312,30 @@ pub struct ReplayStep<'a> {
 /// for real. The chunk's residual and weights stay cache-resident across
 /// the whole K-step tile — the scalar path instead made K+1 full-lattice
 /// passes.
+///
+/// `weights` are read-only (the replay only ever simulates against the
+/// current lattice; the final commit comes back as [`WeightDeltas`]);
+/// `e_proxy` is per-shard diagnostic scratch the kernel rebuilds from
+/// zero and leaves holding the post-update proxy residual.
 pub fn fused_seed_replay(
-    tensors: Vec<&mut [i8]>,
-    e_proxy: &mut [f32],
+    weights: Vec<&[i8]>,
+    e_proxy: Vec<&mut [f32]>,
     history: &[ReplayStep<'_>],
     current: &ReplayStep<'_>,
     gamma: f32,
     qmax: i8,
     policy: KernelPolicy,
-) -> StepStats {
-    let d: usize = tensors.iter().map(|t| t.len()).sum();
-    assert_eq!(d, e_proxy.len(), "lattice dim {} != proxy dim {}", d, e_proxy.len());
+) -> (StepStats, WeightDeltas) {
+    let d: usize = weights.iter().map(|t| t.len()).sum();
+    let de: usize = e_proxy.iter().map(|t| t.len()).sum();
+    assert_eq!(d, de, "lattice dim {} != proxy dim {}", d, de);
     assert_eq!(current.fitness.len(), current.spec.n_members());
     let qmax_i = qmax as i32;
-    let w_chunks = chunk_segments_mut(tensors, policy.chunk_size);
-    let e_chunks = chunk_segments_mut(vec![e_proxy], policy.chunk_size);
+    let w_chunks = chunk_segments(weights, policy.chunk_size);
+    let e_chunks = chunk_segments_mut(e_proxy, policy.chunk_size);
     let tasks: Vec<_> = w_chunks.into_iter().zip(e_chunks).collect();
-    let partials = parallel::map_tasks(tasks, policy.threads, |(mut wc, mut ec)| {
-        let ep: &mut [f32] = &mut ec.segs[0];
-        ep.fill(0.0);
+    let partials = parallel::map_tasks(tasks, policy.threads, |(wc, mut ec)| {
+        let mut ep = vec![0.0f32; wc.len];
         let mut g = vec![0.0f32; wc.len];
         // --- K-deep replay tile: rematerialize e_proxy for this chunk ---
         for h in history {
@@ -319,17 +357,19 @@ pub fn fused_seed_replay(
         // --- current step: the rematerialized error feeds the real update ---
         grad_chunk(&current.spec, current.fitness, wc.start, &mut g);
         let mut stats = StepStats::default();
+        let mut deltas: WeightDeltas = Vec::new();
         let mut k = 0usize;
-        for seg in wc.segs.iter_mut() {
-            for w in seg.iter_mut() {
+        for seg in wc.segs.iter() {
+            for &w in seg.iter() {
                 let u = current.alpha * g[k] + gamma * ep[k];
                 let dw = u.round() as i32;
-                let (applied, boundary) = gate_apply(w, dw, qmax);
+                let (applied, boundary) = gate_eval(w, dw, qmax);
                 if applied != 0 {
                     stats.n_changed += 1;
                     if boundary {
                         stats.n_boundary += 1;
                     }
+                    deltas.push((wc.start + k, (w as i32 + applied) as i8));
                 } else if dw != 0 {
                     stats.n_gated += 1;
                 }
@@ -337,7 +377,14 @@ pub fn fused_seed_replay(
                 k += 1;
             }
         }
-        stats
+        // scatter the rebuilt proxy back into its per-shard segments
+        let mut pos = 0usize;
+        for seg in ec.segs.iter_mut() {
+            let n = seg.len();
+            seg.copy_from_slice(&ep[pos..pos + n]);
+            pos += n;
+        }
+        (stats, deltas)
     });
     reduce_stats(d, partials)
 }
@@ -346,46 +393,49 @@ pub fn fused_seed_replay(
 pub const QUZO_ROUND_DRAWS_PER_ELEM: u64 = 1;
 
 /// Fused QuZO update: gradient regeneration + stochastic rounding + gating
-/// in one chunk-parallel pass. `round_seed` is the per-step salted seed of
-/// the rounding stream (1 uniform per element, counter-addressable).
+/// in one chunk-parallel pass over read-only weights. `round_seed` is the
+/// per-step salted seed of the rounding stream (1 uniform per element,
+/// counter-addressable). Changes come back as sparse [`WeightDeltas`].
 pub fn fused_quzo(
-    tensors: Vec<&mut [i8]>,
+    weights: Vec<&[i8]>,
     spec: &PopulationSpec,
     fitness: &[f32],
     alpha: f32,
     qmax: i8,
     round_seed: u64,
     policy: KernelPolicy,
-) -> StepStats {
-    let d: usize = tensors.iter().map(|t| t.len()).sum();
+) -> (StepStats, WeightDeltas) {
+    let d: usize = weights.iter().map(|t| t.len()).sum();
     assert_eq!(fitness.len(), spec.n_members());
-    let chunks = chunk_segments_mut(tensors, policy.chunk_size);
-    let partials = parallel::map_tasks(chunks, policy.threads, |mut wc| {
+    let chunks = chunk_segments(weights, policy.chunk_size);
+    let partials = parallel::map_tasks(chunks, policy.threads, |wc| {
         let mut g = vec![0.0f32; wc.len];
         grad_chunk(spec, fitness, wc.start, &mut g);
         let mut rounder = SplitMix64::new(round_seed);
         rounder.jump(QUZO_ROUND_DRAWS_PER_ELEM.wrapping_mul(wc.start as u64));
         let mut stats = StepStats::default();
+        let mut deltas: WeightDeltas = Vec::new();
         let mut k = 0usize;
-        for seg in wc.segs.iter_mut() {
-            for w in seg.iter_mut() {
+        for seg in wc.segs.iter() {
+            for &w in seg.iter() {
                 let u = alpha * g[k];
                 // stochastic rounding: unbiased, variance ~ Delta^2
                 let f = u.floor();
                 let dw = f as i32 + rounder.bernoulli(u - f) as i32;
-                let (applied, boundary) = gate_apply(w, dw, qmax);
+                let (applied, boundary) = gate_eval(w, dw, qmax);
                 if applied != 0 {
                     stats.n_changed += 1;
                     if boundary {
                         stats.n_boundary += 1;
                     }
+                    deltas.push((wc.start + k, (w as i32 + applied) as i8));
                 } else if dw != 0 {
                     stats.n_gated += 1;
                 }
                 k += 1;
             }
         }
-        stats
+        (stats, deltas)
     });
     reduce_stats(d, partials)
 }

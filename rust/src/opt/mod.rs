@@ -24,11 +24,11 @@ pub use adam::{Adam, AdamConfig};
 pub use adaptive::AdaptiveReplayQes;
 pub use baselines::{MezoOptimizer, QuzoOptimizer};
 pub use grad::{accumulate_grad, apply_perturbation, apply_perturbation_into};
-pub use kernels::{accumulate_grad_chunked, KernelPolicy, DEFAULT_CHUNK};
+pub use kernels::{accumulate_grad_chunked, KernelPolicy, WeightDeltas, DEFAULT_CHUNK};
 pub use qes::QesFullResidual;
 pub use replay::SeedReplayQes;
 
-use crate::model::ParamStore;
+use crate::model::ShardedParamStore;
 
 /// Hyperparameters shared by the ES-family optimizers (paper §A.1/§A.3).
 #[derive(Debug, Clone)]
@@ -137,11 +137,12 @@ impl StepStats {
 }
 
 /// The interface the coordinator drives. `update` consumes the generation's
-/// seeds (via the spec) and normalized fitness, and mutates the store.
+/// seeds (via the spec) and normalized fitness, and commits the resulting
+/// sparse weight deltas onto the store's copy-on-write shard plane.
 pub trait LatticeOptimizer {
     fn update(
         &mut self,
-        store: &mut ParamStore,
+        store: &mut ShardedParamStore,
         spec: &PopulationSpec,
         fitness: &[f32],
     ) -> anyhow::Result<StepStats>;
@@ -152,20 +153,31 @@ pub trait LatticeOptimizer {
     fn name(&self) -> &'static str;
 }
 
+/// Evaluate the boundary gate for one lattice element without mutating it.
+/// Returns (applied delta, landed_on_boundary) — the pure core shared by
+/// [`gate_apply`] and the delta-emitting kernels.
+#[inline]
+pub fn gate_eval(w: i8, dw: i32, qmax: i8) -> (i32, bool) {
+    if dw == 0 {
+        return (0, false);
+    }
+    let next = w as i32 + dw;
+    if next < -(qmax as i32) || next > qmax as i32 {
+        (0, false) // gated: Eq. (4)
+    } else {
+        (dw, next.unsigned_abs() == qmax as u32)
+    }
+}
+
 /// Gate + apply a discrete update to one lattice element.
 /// Returns (applied delta, landed_on_boundary).
 #[inline]
 pub fn gate_apply(w: &mut i8, dw: i32, qmax: i8) -> (i32, bool) {
-    if dw == 0 {
-        return (0, false);
+    let (applied, boundary) = gate_eval(*w, dw, qmax);
+    if applied != 0 {
+        *w = (*w as i32 + applied) as i8;
     }
-    let next = *w as i32 + dw;
-    if next < -(qmax as i32) || next > qmax as i32 {
-        (0, false) // gated: Eq. (4)
-    } else {
-        *w = next as i8;
-        (dw, next.unsigned_abs() == qmax as u32)
-    }
+    (applied, boundary)
 }
 
 #[cfg(test)]

@@ -11,11 +11,16 @@
 //! with boundary gating (Eq. 4) folded in: a gated element contributes its
 //! whole u back to the residual, so signal is deferred, never lost.
 //!
+//! The residual lives as one FP16 slab per lattice shard, aligned with the
+//! store's `ShardPlan`, so the fused kernel dispatches weights and residual
+//! with identical flat-space layout and the COW plane commits only the
+//! shards the update actually changed.
+//!
 //! The §5 temporal-equivalence invariant — Theta_t = W_t + e_t evolves by
 //! pure gradient ascent and ||e_t||_inf <= 1/2 wherever the gate is
 //! inactive — is enforced by the property tests below.
 
-use crate::model::ParamStore;
+use crate::model::{ShardPlan, ShardedParamStore};
 use crate::opt::{kernels, EsHyper, KernelPolicy, LatticeOptimizer, PopulationSpec, StepStats};
 use crate::util::f16::f16_bits_to_f32;
 
@@ -24,51 +29,79 @@ pub struct QesFullResidual {
     /// Kernel execution policy (chunk size / threads). Never affects the
     /// produced lattice or residual — only wall-clock.
     pub policy: KernelPolicy,
-    /// FP16-stored residual (paper Alg. 1 line 3: "Residuals e_0 (FP16)").
-    e: Vec<u16>,
+    /// FP16-stored residual (paper Alg. 1 line 3: "Residuals e_0 (FP16)"),
+    /// one slab per lattice shard; shaped on first update from the store's
+    /// shard plan.
+    e: Vec<Vec<u16>>,
+    d: usize,
     qmax: i8,
 }
 
 impl QesFullResidual {
     pub fn new(d: usize, qmax: i8, hyper: EsHyper) -> Self {
-        QesFullResidual { hyper, policy: KernelPolicy::default(), e: vec![0u16; d], qmax }
+        QesFullResidual { hyper, policy: KernelPolicy::default(), e: Vec::new(), d, qmax }
     }
 
-    /// Residual snapshot as f32 (tests / diagnostics).
+    /// Shape the per-shard residual slabs to the store's plan. The
+    /// residual is persistent state, so the plan may not change once the
+    /// first update has run.
+    fn ensure_shards(&mut self, plan: &ShardPlan) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            plan.d == self.d,
+            "lattice dim {} != residual dim {}",
+            plan.d,
+            self.d
+        );
+        if self.e.is_empty() {
+            self.e = (0..plan.n_shards).map(|s| vec![0u16; plan.bounds(s).1]).collect();
+        }
+        anyhow::ensure!(
+            self.e.len() == plan.n_shards
+                && (0..plan.n_shards).all(|s| self.e[s].len() == plan.bounds(s).1),
+            "store shard plan changed mid-run"
+        );
+        Ok(())
+    }
+
+    /// Residual snapshot as flat f32 (tests / diagnostics).
     pub fn residual(&self) -> Vec<f32> {
-        self.e.iter().map(|&h| f16_bits_to_f32(h)).collect()
+        self.e.iter().flat_map(|s| s.iter().map(|&h| f16_bits_to_f32(h))).collect()
     }
 }
 
 impl LatticeOptimizer for QesFullResidual {
     fn update(
         &mut self,
-        store: &mut ParamStore,
+        store: &mut ShardedParamStore,
         spec: &PopulationSpec,
         fitness: &[f32],
     ) -> anyhow::Result<StepStats> {
-        let d = store.lattice_dim();
-        anyhow::ensure!(d == self.e.len(), "lattice dim {} != residual dim {}", d, self.e.len());
         anyhow::ensure!(fitness.len() == spec.n_members());
-        // Fused chunk-parallel kernel: gradient regeneration, error
-        // feedback and gating in one pass — no d-sized gradient buffer.
-        let stats = kernels::fused_full_residual(
-            store.lattice_i8_mut(),
-            &mut self.e,
+        self.ensure_shards(store.plan())?;
+        let (alpha, gamma, qmax, policy) =
+            (self.hyper.alpha, self.hyper.gamma, self.qmax, self.policy);
+        let e_segs: Vec<&mut [u16]> = self.e.iter_mut().map(|v| v.as_mut_slice()).collect();
+        // Fused chunk-parallel kernel over the read-only shard slabs:
+        // gradient regeneration, error feedback and gating in one pass —
+        // no d-sized gradient buffer, no eager unsharing.
+        let (stats, deltas) = kernels::fused_full_residual(
+            store.lattice_segments(),
+            e_segs,
             spec,
             fitness,
-            self.hyper.alpha,
-            self.hyper.gamma,
-            self.qmax,
-            self.policy,
+            alpha,
+            gamma,
+            qmax,
+            policy,
         );
+        store.apply_deltas(&deltas);
         Ok(stats)
     }
 
     fn state_bytes(&self) -> u64 {
         // persistent optimizer state: the FP16 residual only (the fused
         // kernel's transient scratch is one chunk, not d-sized).
-        (self.e.len() * 2) as u64
+        (self.d * 2) as u64
     }
 
     fn name(&self) -> &'static str {
@@ -84,11 +117,16 @@ mod tests {
     use crate::quant::Format;
     use crate::runtime::manifest::Manifest;
 
-    fn store(fmt: Format) -> ParamStore {
+    fn store(fmt: Format) -> ShardedParamStore {
         let man = Manifest::load("artifacts/manifest.json").unwrap();
         let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
         init_fp(&mut fp, 8);
-        ParamStore::quantize_from(&fp, &man, fmt, None).unwrap()
+        let q = ParamStore::quantize_from(&fp, &man, fmt, None).unwrap();
+        ShardedParamStore::with_default_shards(q).unwrap()
+    }
+
+    fn flat(s: &ShardedParamStore) -> Vec<i8> {
+        s.lattice_segments().iter().flat_map(|t| t.iter().copied()).collect()
     }
 
     fn hyper() -> EsHyper {
@@ -129,7 +167,7 @@ mod tests {
         let d = s.lattice_dim();
         let h = EsHyper { gamma: 1.0, ..hyper() }; // gamma=1: exact integration
         let mut opt = QesFullResidual::new(d, 127, h.clone());
-        let w0: Vec<i8> = s.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+        let w0 = flat(&s);
 
         let mut ideal = vec![0.0f64; d]; // sum of alpha * g_hat
         let mut g = vec![0.0f32; d];
@@ -145,7 +183,7 @@ mod tests {
             opt.update(&mut s, &spec, &fitness).unwrap();
         }
         let e = opt.residual();
-        let wt: Vec<i8> = s.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+        let wt = flat(&s);
         let mut max_dev = 0.0f64;
         for j in 0..d {
             let theta = wt[j] as f64 + e[j] as f64;
@@ -186,13 +224,13 @@ mod tests {
     #[test]
     fn zero_fitness_changes_nothing() {
         let mut s = store(Format::Int4);
-        let before: Vec<i8> = s.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+        let before = flat(&s);
         let d = s.lattice_dim();
         let mut opt = QesFullResidual::new(d, 7, hyper());
         let spec = PopulationSpec { gen_seed: 1, pairs: 4, sigma: 0.5 };
         opt.update(&mut s, &spec, &vec![0.0; 8]).unwrap();
-        let after: Vec<i8> = s.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
-        assert_eq!(before, after);
+        assert_eq!(before, flat(&s));
+        assert_eq!(s.dirty_shards(), 0, "no-op update dirtied shards");
     }
 
     #[test]
@@ -208,9 +246,7 @@ mod tests {
             let fitness = crate::opt::normalize_fitness(&raw);
             opt.update(&mut s, &spec, &fitness).unwrap();
         }
-        for t in s.lattice_i8() {
-            assert!(t.iter().all(|&v| (-7..=7).contains(&v)));
-        }
+        assert!(flat(&s).iter().all(|&v| (-7..=7).contains(&v)));
     }
 
     #[test]

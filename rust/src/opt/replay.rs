@@ -10,11 +10,13 @@
 //! update coincides with a lattice boundary — measured to be ~1e-5 rare.
 //!
 //! Persistent state: K * (8 bytes seed + 4 bytes * population fitness) —
-//! kilobytes, independent of d (Table 8).
+//! kilobytes, independent of d (Table 8). The rematerialized proxy
+//! residual is transient scratch, tiled per lattice shard so it lives
+//! alongside the COW plane's slabs with no layout translation.
 
 use std::collections::VecDeque;
 
-use crate::model::ParamStore;
+use crate::model::{ShardPlan, ShardedParamStore};
 use crate::opt::kernels::{self, ReplayStep};
 use crate::opt::{EsHyper, KernelPolicy, LatticeOptimizer, PopulationSpec, StepStats};
 
@@ -33,8 +35,10 @@ pub struct SeedReplayQes {
     pub policy: KernelPolicy,
     history: VecDeque<HistoryStep>,
     /// Rematerialized proxy residual (transient scratch, not state — kept
-    /// for diagnostics and the adaptive-K controller).
-    e_proxy: Vec<f32>,
+    /// for diagnostics and the adaptive-K controller), one tile per
+    /// lattice shard.
+    e_proxy: Vec<Vec<f32>>,
+    d: usize,
     qmax: i8,
 }
 
@@ -44,14 +48,38 @@ impl SeedReplayQes {
             history: VecDeque::with_capacity(hyper.k_window + 1),
             hyper,
             policy: KernelPolicy::default(),
-            e_proxy: vec![0.0f32; d],
+            e_proxy: Vec::new(),
+            d,
             qmax,
         }
     }
 
-    /// The rematerialized proxy residual from the last update (diagnostics).
-    pub fn proxy_residual(&self) -> &[f32] {
-        &self.e_proxy
+    /// Shape the per-shard proxy tiles to the store's plan. The proxy is
+    /// rebuilt from zero every update, so reshaping is always safe.
+    fn ensure_shards(&mut self, plan: &ShardPlan) {
+        let ok = self.e_proxy.len() == plan.n_shards
+            && (0..plan.n_shards).all(|s| self.e_proxy[s].len() == plan.bounds(s).1);
+        if !ok {
+            self.e_proxy =
+                (0..plan.n_shards).map(|s| vec![0.0f32; plan.bounds(s).1]).collect();
+        }
+    }
+
+    /// The rematerialized proxy residual from the last update, flattened
+    /// to canonical order (diagnostics).
+    pub fn proxy_residual(&self) -> Vec<f32> {
+        self.e_proxy.iter().flat_map(|s| s.iter().copied()).collect()
+    }
+
+    /// Mean |e_proxy| without materializing the flat vector (the
+    /// adaptive-K controller's truncation-pressure signal).
+    pub fn mean_abs_proxy(&self) -> f32 {
+        let n: usize = self.e_proxy.iter().map(|s| s.len()).sum();
+        if n == 0 {
+            return 0.0;
+        }
+        let sum: f32 = self.e_proxy.iter().flat_map(|s| s.iter()).map(|x| x.abs()).sum();
+        sum / n as f32
     }
 
     pub fn history_len(&self) -> usize {
@@ -62,18 +90,18 @@ impl SeedReplayQes {
 impl LatticeOptimizer for SeedReplayQes {
     fn update(
         &mut self,
-        store: &mut ParamStore,
+        store: &mut ShardedParamStore,
         spec: &PopulationSpec,
         fitness: &[f32],
     ) -> anyhow::Result<StepStats> {
-        let d = store.lattice_dim();
         anyhow::ensure!(
-            d == self.e_proxy.len(),
-            "lattice dim {} != buffer dim {}",
-            d,
-            self.e_proxy.len()
+            store.lattice_dim() == self.d,
+            "lattice dim {} != optimizer dim {}",
+            store.lattice_dim(),
+            self.d
         );
         anyhow::ensure!(fitness.len() == spec.n_members());
+        self.ensure_shards(store.plan());
 
         // Describe the replay window by BORROWING the history — the fused
         // kernel walks `(spec, &fitness, alpha)` views; no fitness vector
@@ -93,20 +121,25 @@ impl LatticeOptimizer for SeedReplayQes {
             .collect();
         let current = ReplayStep { spec: spec.clone(), fitness, alpha: self.hyper.alpha };
 
-        // Fused K-deep tile: per chunk, the proxy residual is
-        // rematerialized across ALL history steps while cache-resident,
-        // then the current step commits — one pass over d instead of the
-        // scalar path's K+1 full-lattice sweeps.
-        let stats = kernels::fused_seed_replay(
-            store.lattice_i8_mut(),
-            &mut self.e_proxy,
+        // Fused K-deep tile over the read-only shard slabs: per chunk, the
+        // proxy residual is rematerialized across ALL history steps while
+        // cache-resident, then the current step commits — one pass over d
+        // instead of the scalar path's K+1 full-lattice sweeps. Weight
+        // changes come back sparse and COW-commit per shard.
+        let (gamma, qmax, policy) = (self.hyper.gamma, self.qmax, self.policy);
+        let e_segs: Vec<&mut [f32]> =
+            self.e_proxy.iter_mut().map(|v| v.as_mut_slice()).collect();
+        let (stats, deltas) = kernels::fused_seed_replay(
+            store.lattice_segments(),
+            e_segs,
             &steps,
             &current,
-            self.hyper.gamma,
-            self.qmax,
-            self.policy,
+            gamma,
+            qmax,
+            policy,
         );
         drop(steps);
+        store.apply_deltas(&deltas);
 
         // Record this generation; trim the window.
         let alpha = self.hyper.alpha;
@@ -143,16 +176,25 @@ mod tests {
     use crate::quant::Format;
     use crate::runtime::manifest::Manifest;
 
-    fn store(fmt: Format, seed: u64) -> ParamStore {
+    fn store(fmt: Format, seed: u64) -> ShardedParamStore {
         let man = Manifest::load("artifacts/manifest.json").unwrap();
         let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
         init_fp(&mut fp, seed);
-        ParamStore::quantize_from(&fp, &man, fmt, None).unwrap()
+        let q = ParamStore::quantize_from(&fp, &man, fmt, None).unwrap();
+        ShardedParamStore::with_default_shards(q).unwrap()
+    }
+
+    fn clone_plane(s: &ShardedParamStore) -> ShardedParamStore {
+        ShardedParamStore::with_default_shards(s.materialize()).unwrap()
+    }
+
+    fn flat(s: &ShardedParamStore) -> Vec<i8> {
+        s.lattice_segments().iter().flat_map(|t| t.iter().copied()).collect()
     }
 
     fn run_steps(
         opt: &mut dyn LatticeOptimizer,
-        s: &mut ParamStore,
+        s: &mut ShardedParamStore,
         gens: usize,
         seed: u64,
         pairs: usize,
@@ -174,7 +216,7 @@ mod tests {
         // only divergence source, kept below rounding threshold here).
         let hyper = EsHyper { sigma: 0.5, alpha: 0.4, gamma: 0.9, pairs: 4, k_window: 64 };
         let mut s_replay = store(Format::Int8, 21);
-        let mut s_oracle = s_replay.clone();
+        let mut s_oracle = clone_plane(&s_replay);
         let d = s_replay.lattice_dim();
         let mut replay = SeedReplayQes::new(d, 127, hyper.clone());
         let mut oracle = QesFullResidual::new(d, 127, hyper.clone());
@@ -186,8 +228,8 @@ mod tests {
             replay.update(&mut s_replay, &spec, &fitness).unwrap();
             oracle.update(&mut s_oracle, &spec, &fitness).unwrap();
         }
-        let a: Vec<i8> = s_replay.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
-        let b: Vec<i8> = s_oracle.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+        let a = flat(&s_replay);
+        let b = flat(&s_oracle);
         let diff = a.iter().zip(b.iter()).filter(|(x, y)| x != y).count();
         // f16-vs-f32 residual rounding can flip a handful of borderline
         // elements; fidelity must still be near-perfect (paper §4.5).
@@ -220,7 +262,7 @@ mod tests {
             k_window: k,
         };
         let mut s_a = store(Format::Int4, 9);
-        let mut s_b = s_a.clone();
+        let mut s_b = clone_plane(&s_a);
         let d = s_a.lattice_dim();
         let mut a = SeedReplayQes::new(d, 7, mk(6));
         let mut b = SeedReplayQes::new(d, 7, mk(12));
@@ -232,8 +274,8 @@ mod tests {
             a.update(&mut s_a, &spec, &fitness).unwrap();
             b.update(&mut s_b, &spec, &fitness).unwrap();
         }
-        let xa: Vec<i8> = s_a.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
-        let xb: Vec<i8> = s_b.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect();
+        let xa = flat(&s_a);
+        let xb = flat(&s_b);
         let diff = xa.iter().zip(xb.iter()).filter(|(x, y)| x != y).count();
         assert!(diff < d / 20, "K=6 vs K=12 diverged on {}/{} elements", diff, d);
     }
@@ -245,9 +287,7 @@ mod tests {
         let d = s.lattice_dim();
         let mut opt = SeedReplayQes::new(d, 7, hyper);
         run_steps(&mut opt, &mut s, 15, 3, 2);
-        for t in s.lattice_i8() {
-            assert!(t.iter().all(|&v| (-7..=7).contains(&v)));
-        }
+        assert!(flat(&s).iter().all(|&v| (-7..=7).contains(&v)));
     }
 
     #[test]

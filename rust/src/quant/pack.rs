@@ -26,18 +26,15 @@ pub fn pack_int4(q: &[i8]) -> Vec<u8> {
 /// original element count (to drop a possible pad nibble).
 pub fn unpack_int4(bytes: &[u8], n: usize) -> Vec<i8> {
     let mut out = Vec::with_capacity(n);
-    for (idx, &b) in bytes.iter().enumerate() {
-        let lo = sign_extend4(b & 0x0f);
-        out.push(lo);
+    for &b in bytes {
+        out.push(sign_extend4(b & 0x0f));
         if out.len() == n {
             break;
         }
-        let hi = sign_extend4(b >> 4);
-        out.push(hi);
+        out.push(sign_extend4(b >> 4));
         if out.len() == n {
             break;
         }
-        let _ = idx;
     }
     assert_eq!(out.len(), n, "byte buffer too short for {} int4 values", n);
     out
@@ -96,5 +93,42 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_roundtrip_odd_lengths_full_nibble_range() {
+        // Two properties the plain roundtrip only hits by chance:
+        // (a) ODD lengths — the pad-nibble path on pack and the early-
+        //     break path on unpack must agree for every odd n;
+        // (b) the FULL [-8, 7] nibble range — every value must survive
+        //     sign extension, including -8 (0b1000), which QES itself
+        //     never produces (its grid is symmetric, [-7, 7]).
+        prop_check("int4 roundtrip, odd n + full range", 200, |g| {
+            let n = 2 * g.usize_in(0, 128) + 1; // always odd, 1..=257
+            let q = g.vec_i8(n, -8, 7);
+            let packed = pack_int4(&q);
+            if packed.len() != n / 2 + 1 {
+                return Err(format!("odd n={} packed to {} bytes", n, packed.len()));
+            }
+            // the pad nibble must be zero so packed bytes are canonical
+            if packed[n / 2] >> 4 != 0 {
+                return Err("nonzero pad nibble".into());
+            }
+            let got = unpack_int4(&packed, n);
+            if got != q {
+                return Err(format!("odd-length mismatch at n={}", n));
+            }
+            Ok(())
+        });
+        // exhaustive: every nibble value in [-8, 7], both lane positions
+        let all: Vec<i8> = (-8..=7).collect();
+        assert_eq!(unpack_int4(&pack_int4(&all), all.len()), all);
+        let mut rev = all.clone();
+        rev.reverse();
+        assert_eq!(unpack_int4(&pack_int4(&rev), rev.len()), rev);
+        for &v in &all {
+            // each value alone exercises the lo lane + pad
+            assert_eq!(unpack_int4(&pack_int4(&[v]), 1), vec![v], "value {}", v);
+        }
     }
 }

@@ -9,7 +9,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::model::{ParamStore, TensorData};
+use crate::model::{AsParams, ParamStore, ParamsView, TensorData};
 use crate::runtime::manifest::{ArtifactMeta, IoSpec, Manifest};
 
 /// Host-side input value handed to `Engine::run`.
@@ -140,14 +140,19 @@ impl Engine {
     }
 }
 
-/// Convert a ParamStore's entries to literals, in manifest order, with an
-/// optional override for lattice tensors (the per-member perturbed values).
+/// Convert a parameter view's entries to literals, in manifest order,
+/// with an optional override for lattice tensors (the per-member
+/// perturbed values).
 ///
-/// `overrides[i]` corresponds to `store.lattice_indices()[i]`.
-pub fn param_literals(
-    store: &ParamStore,
+/// `overrides[i]` corresponds to `store.lattice_indices()[i]`. Without
+/// overrides, lattice values come from the view's flat segments —
+/// zero-copy for per-tensor views, gathered per tensor for shard-backed
+/// views (snapshots / the leader plane), whose base entries are empty.
+pub fn param_literals_view(
+    view: &ParamsView<'_>,
     overrides: Option<&[Vec<i8>]>,
 ) -> Result<Vec<xla::Literal>> {
+    let store = view.store;
     let lat = store.lattice_indices();
     let mut lat_pos = 0usize;
     let mut out = Vec::with_capacity(store.entries.len());
@@ -155,15 +160,17 @@ pub fn param_literals(
         let is_lattice = lat_pos < lat.len() && lat[lat_pos] == i;
         match &e.data {
             TensorData::I8(v) => {
-                let slice: &[i8] = if is_lattice {
+                if is_lattice {
                     match overrides {
-                        Some(ovs) => &ovs[lat_pos],
-                        None => v,
+                        Some(ovs) => out.push(i8_literal(&e.shape, &ovs[lat_pos])?),
+                        None => {
+                            let vals = view.lattice_tensor(lat_pos);
+                            out.push(i8_literal(&e.shape, &vals)?);
+                        }
                     }
                 } else {
-                    v
-                };
-                out.push(i8_literal(&e.shape, slice)?);
+                    out.push(i8_literal(&e.shape, v)?);
+                }
             }
             TensorData::F32(v) => {
                 if is_lattice {
@@ -181,6 +188,15 @@ pub fn param_literals(
         }
     }
     Ok(out)
+}
+
+/// [`param_literals_view`] over a plain store (convenience wrapper kept
+/// for tooling and benches).
+pub fn param_literals(
+    store: &ParamStore,
+    overrides: Option<&[Vec<i8>]>,
+) -> Result<Vec<xla::Literal>> {
+    param_literals_view(&store.params_view(), overrides)
 }
 
 /// Extract a Vec<f32> from an output literal.

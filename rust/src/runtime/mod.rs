@@ -15,7 +15,7 @@ pub fn backend_available() -> bool {
 }
 
 pub use engine::{
-    f32_literal, i8_literal, literal_for, param_literals, to_f32_scalar, to_f32_vec,
-    to_i32_vec, Engine, HostTensor,
+    f32_literal, i8_literal, literal_for, param_literals, param_literals_view, to_f32_scalar,
+    to_f32_vec, to_i32_vec, Engine, HostTensor,
 };
 pub use manifest::{ArtifactMeta, IoSpec, Manifest, ModelConfig, ParamMeta};

@@ -31,7 +31,10 @@ pub enum ProblemKey {
 }
 
 /// Reasoning task: generative rollouts scored by a binary-ish RLVR reward.
-pub trait GenTask: Send {
+/// `Send + Sync` so one boxed task can be shared (via `Arc<dyn Workload>`)
+/// across the worker pool; implementations are stateless — sampling takes
+/// the rng explicitly.
+pub trait GenTask: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Sample one problem. Deterministic in the rng state.
@@ -54,8 +57,9 @@ pub struct ClsExample {
 }
 
 /// SFT task: k-shot classification through verbalizer tokens (LM-BFF
-/// protocol, as in MeZO/QuZO §A.2).
-pub trait ClsTask: Send {
+/// protocol, as in MeZO/QuZO §A.2). `Send + Sync` for the same pool-
+/// sharing reason as [`GenTask`].
+pub trait ClsTask: Send + Sync {
     fn name(&self) -> &'static str;
     fn n_classes(&self) -> usize;
 
@@ -66,6 +70,12 @@ pub trait ClsTask: Send {
 
     /// Sample one example. `train` selects the split (disjoint seeds).
     fn sample(&self, rng: &mut SplitMix64, train: bool) -> ClsExample;
+}
+
+/// Whether `name` is one of the SFT classification tasks (vs a reasoning
+/// task) — the scenario split the coordinator's `Workload` impls cover.
+pub fn is_cls_task(name: &str) -> bool {
+    matches!(name, "snli" | "mnli" | "rte" | "sst5")
 }
 
 /// Instantiate a reasoning task by name, sized to the model's prompt budget.

@@ -1,16 +1,19 @@
 //! Chunked ↔ scalar bit-equivalence: the determinism contract of
-//! `opt::kernels`.
+//! `opt::kernels`, extended to the sharded COW parameter plane.
 //!
 //! Every fused chunk-parallel kernel must produce results bit-identical to
-//! the sequential scalar path for ANY chunk size and thread count — the
-//! seed-replay correctness story (paper Algorithm 2) depends on a lattice
-//! evolved on 8 threads being re-materializable on 1. The reference
+//! the sequential scalar path for ANY chunk size, thread count AND shard
+//! count — the seed-replay correctness story (paper Algorithm 2) depends
+//! on a lattice evolved on 8 threads over 8 shards being
+//! re-materializable on 1 thread over 1 shard. The reference
 //! implementations below are verbatim ports of the pre-kernel scalar
-//! update loops; each optimizer is then driven through multi-generation
-//! trajectories under chunk sizes {1, 64, 4096} × thread counts {1, 2, 8}
-//! and compared field-for-field, bit-for-bit.
+//! update loops over plain per-tensor stores; each optimizer is then
+//! driven through multi-generation trajectories on sharded planes under
+//! shard counts {1, 2, 8} × chunk sizes {1, 64, 4096} × thread counts
+//! {1, 2, 8} and compared field-for-field, bit-for-bit. Snapshot
+//! publication semantics (COW isolation) are pinned here too.
 
-use qes::model::{init::init_fp, ParamStore};
+use qes::model::{init::init_fp, AsParams, ParamStore, ShardedParamStore};
 use qes::opt::{
     accumulate_grad, apply_perturbation, apply_perturbation_into, normalize_fitness,
     EsHyper, KernelPolicy, LatticeOptimizer, MezoOptimizer, PopulationSpec, QesFullResidual,
@@ -33,6 +36,10 @@ fn policies() -> Vec<KernelPolicy> {
     out
 }
 
+/// Requested shard counts the plane is exercised over (the plan may
+/// realize fewer after alignment — that is part of what's tested).
+const SHARD_COUNTS: [usize; 3] = [1, 2, 8];
+
 fn store(fmt: Format, seed: u64) -> ParamStore {
     let man = Manifest::load("artifacts/manifest.json").unwrap();
     let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
@@ -45,6 +52,10 @@ fn store(fmt: Format, seed: u64) -> ParamStore {
 
 fn flat_i8(s: &ParamStore) -> Vec<i8> {
     s.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect()
+}
+
+fn flat_sharded(s: &ShardedParamStore) -> Vec<i8> {
+    s.lattice_segments().iter().flat_map(|t| t.iter().copied()).collect()
 }
 
 fn gen_fitness(rng: &mut SplitMix64, pairs: usize) -> Vec<f32> {
@@ -238,34 +249,36 @@ fn full_residual_bitwise_equivalence_across_policies() {
     }
     let ref_lattice = flat_i8(&s_ref);
 
-    for policy in policies() {
-        let mut s = store(Format::Int4, 11);
-        let mut opt = QesFullResidual::new(d, qmax, hyper.clone());
-        opt.policy = policy;
-        let mut stats = Vec::new();
-        for (spec, fitness) in &specs {
-            stats.push(opt.update(&mut s, spec, fitness).unwrap());
+    let ref_bits: Vec<u32> = e_ref.iter().map(|&h| f16_bits_to_f32(h).to_bits()).collect();
+    for shards in SHARD_COUNTS {
+        for policy in policies() {
+            let mut s = ShardedParamStore::new(store(Format::Int4, 11), shards).unwrap();
+            let mut opt = QesFullResidual::new(d, qmax, hyper.clone());
+            opt.policy = policy;
+            let mut stats = Vec::new();
+            for (spec, fitness) in &specs {
+                stats.push(opt.update(&mut s, spec, fitness).unwrap());
+            }
+            assert_eq!(
+                flat_sharded(&s),
+                ref_lattice,
+                "lattice diverged: shards={} chunk={} threads={}",
+                shards,
+                policy.chunk_size,
+                policy.threads
+            );
+            let e_bits: Vec<u32> = opt.residual().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(
+                e_bits, ref_bits,
+                "residual diverged: shards={} chunk={} threads={}",
+                shards, policy.chunk_size, policy.threads
+            );
+            assert_eq!(
+                stats, ref_stats,
+                "stats diverged: shards={} chunk={} threads={}",
+                shards, policy.chunk_size, policy.threads
+            );
         }
-        assert_eq!(
-            flat_i8(&s),
-            ref_lattice,
-            "lattice diverged: chunk={} threads={}",
-            policy.chunk_size,
-            policy.threads
-        );
-        let e_bits: Vec<u32> = opt.residual().iter().map(|x| x.to_bits()).collect();
-        let ref_bits: Vec<u32> =
-            e_ref.iter().map(|&h| f16_bits_to_f32(h).to_bits()).collect();
-        assert_eq!(
-            e_bits, ref_bits,
-            "residual diverged: chunk={} threads={}",
-            policy.chunk_size, policy.threads
-        );
-        assert_eq!(
-            stats, ref_stats,
-            "stats diverged: chunk={} threads={}",
-            policy.chunk_size, policy.threads
-        );
     }
 }
 
@@ -292,33 +305,36 @@ fn seed_replay_bitwise_equivalence_across_policies() {
     let ref_proxy_bits: Vec<u32> =
         reference.e_proxy.iter().map(|x| x.to_bits()).collect();
 
-    for policy in policies() {
-        let mut s = store(Format::Int4, 21);
-        let mut opt = SeedReplayQes::new(d, qmax, hyper.clone());
-        opt.policy = policy;
-        let mut stats = Vec::new();
-        for (spec, fitness) in &specs {
-            stats.push(opt.update(&mut s, spec, fitness).unwrap());
+    for shards in SHARD_COUNTS {
+        for policy in policies() {
+            let mut s = ShardedParamStore::new(store(Format::Int4, 21), shards).unwrap();
+            let mut opt = SeedReplayQes::new(d, qmax, hyper.clone());
+            opt.policy = policy;
+            let mut stats = Vec::new();
+            for (spec, fitness) in &specs {
+                stats.push(opt.update(&mut s, spec, fitness).unwrap());
+            }
+            assert_eq!(
+                flat_sharded(&s),
+                ref_lattice,
+                "lattice diverged: shards={} chunk={} threads={}",
+                shards,
+                policy.chunk_size,
+                policy.threads
+            );
+            let proxy_bits: Vec<u32> =
+                opt.proxy_residual().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(
+                proxy_bits, ref_proxy_bits,
+                "proxy residual diverged: shards={} chunk={} threads={}",
+                shards, policy.chunk_size, policy.threads
+            );
+            assert_eq!(
+                stats, ref_stats,
+                "stats diverged: shards={} chunk={} threads={}",
+                shards, policy.chunk_size, policy.threads
+            );
         }
-        assert_eq!(
-            flat_i8(&s),
-            ref_lattice,
-            "lattice diverged: chunk={} threads={}",
-            policy.chunk_size,
-            policy.threads
-        );
-        let proxy_bits: Vec<u32> =
-            opt.proxy_residual().iter().map(|x| x.to_bits()).collect();
-        assert_eq!(
-            proxy_bits, ref_proxy_bits,
-            "proxy residual diverged: chunk={} threads={}",
-            policy.chunk_size, policy.threads
-        );
-        assert_eq!(
-            stats, ref_stats,
-            "stats diverged: chunk={} threads={}",
-            policy.chunk_size, policy.threads
-        );
     }
 }
 
@@ -334,9 +350,9 @@ fn quzo_bitwise_equivalence_across_policies() {
         specs.push((spec, fitness));
     }
 
-    // scalar-policy trajectory is the reference (one chunk, one thread —
-    // the exact historical op sequence)
-    let mut s_ref = store(Format::Int4, 41);
+    // scalar-policy single-shard trajectory is the reference (one chunk,
+    // one thread, one shard — the exact historical op sequence)
+    let mut s_ref = ShardedParamStore::new(store(Format::Int4, 41), 1).unwrap();
     let d = s_ref.lattice_dim();
     let mut opt_ref = QuzoOptimizer::new(d, qmax, hyper.clone());
     opt_ref.policy = KernelPolicy::scalar();
@@ -344,24 +360,27 @@ fn quzo_bitwise_equivalence_across_policies() {
     for (spec, fitness) in &specs {
         ref_stats.push(opt_ref.update(&mut s_ref, spec, fitness).unwrap());
     }
-    let ref_lattice = flat_i8(&s_ref);
+    let ref_lattice = flat_sharded(&s_ref);
 
-    for policy in policies() {
-        let mut s = store(Format::Int4, 41);
-        let mut opt = QuzoOptimizer::new(d, qmax, hyper.clone());
-        opt.policy = policy;
-        let mut stats = Vec::new();
-        for (spec, fitness) in &specs {
-            stats.push(opt.update(&mut s, spec, fitness).unwrap());
+    for shards in SHARD_COUNTS {
+        for policy in policies() {
+            let mut s = ShardedParamStore::new(store(Format::Int4, 41), shards).unwrap();
+            let mut opt = QuzoOptimizer::new(d, qmax, hyper.clone());
+            opt.policy = policy;
+            let mut stats = Vec::new();
+            for (spec, fitness) in &specs {
+                stats.push(opt.update(&mut s, spec, fitness).unwrap());
+            }
+            assert_eq!(
+                flat_sharded(&s),
+                ref_lattice,
+                "lattice diverged: shards={} chunk={} threads={}",
+                shards,
+                policy.chunk_size,
+                policy.threads
+            );
+            assert_eq!(stats, ref_stats, "stats diverged: shards={}", shards);
         }
-        assert_eq!(
-            flat_i8(&s),
-            ref_lattice,
-            "lattice diverged: chunk={} threads={}",
-            policy.chunk_size,
-            policy.threads
-        );
-        assert_eq!(stats, ref_stats, "stats diverged");
     }
 }
 
@@ -396,7 +415,84 @@ fn perturbation_bitwise_equivalence_across_policies() {
                 member, policy.chunk_size, policy.threads
             );
         }
+        // and identically from shard-segmented sources (plane + snapshot)
+        for shards in SHARD_COUNTS {
+            let mut plane = ShardedParamStore::new(s.clone(), shards).unwrap();
+            assert_eq!(
+                apply_perturbation(&plane, &spec, member, 7),
+                reference,
+                "plane: member {} shards={}",
+                member,
+                shards
+            );
+            let snap = plane.snapshot();
+            assert_eq!(
+                apply_perturbation(&snap, &spec, member, 7),
+                reference,
+                "snapshot: member {} shards={}",
+                member,
+                shards
+            );
+        }
     }
+}
+
+#[test]
+fn snapshot_is_immune_to_subsequent_updates() {
+    // COW isolation: a published snapshot must keep the exact pre-update
+    // lattice while the leader keeps training on the plane — across every
+    // shard layout.
+    let hyper = EsHyper { sigma: 0.8, alpha: 0.9, gamma: 1.0, pairs: 4, k_window: 3 };
+    for shards in SHARD_COUNTS {
+        let mut s = ShardedParamStore::new(store(Format::Int4, 61), shards).unwrap();
+        let mut opt = SeedReplayQes::new(s.lattice_dim(), 7, hyper.clone());
+        let mut rng = SplitMix64::new(77);
+        // evolve a little so the snapshot isn't the init state
+        for _ in 0..3 {
+            let spec = PopulationSpec { gen_seed: rng.next_u64(), pairs: 4, sigma: 0.8 };
+            let fitness = gen_fitness(&mut rng, 4);
+            opt.update(&mut s, &spec, &fitness).unwrap();
+        }
+        let frozen = flat_sharded(&s);
+        let snap = s.snapshot();
+        let snap_view_before: Vec<i8> = {
+            let v = snap.params_view();
+            v.lattice.iter().flat_map(|t| t.iter().copied()).collect()
+        };
+        assert_eq!(snap_view_before, frozen);
+        // keep training on the leader plane
+        let mut changed = false;
+        for _ in 0..5 {
+            let spec = PopulationSpec { gen_seed: rng.next_u64(), pairs: 4, sigma: 0.8 };
+            let fitness = gen_fitness(&mut rng, 4);
+            let st = opt.update(&mut s, &spec, &fitness).unwrap();
+            changed |= st.n_changed > 0;
+        }
+        assert!(changed, "stress hypers must move the lattice (shards={})", shards);
+        assert_ne!(flat_sharded(&s), frozen, "leader did not advance (shards={})", shards);
+        let snap_view_after: Vec<i8> = {
+            let v = snap.params_view();
+            v.lattice.iter().flat_map(|t| t.iter().copied()).collect()
+        };
+        assert_eq!(
+            snap_view_after, frozen,
+            "snapshot mutated by leader updates (shards={})",
+            shards
+        );
+    }
+}
+
+#[test]
+fn cow_unshares_only_dirty_shards() {
+    // After a publish every shard is shared; an update that writes a
+    // single element must dirty (and unshare) exactly one shard.
+    let mut s = ShardedParamStore::new(store(Format::Int4, 71), 8).unwrap();
+    let _snap = s.snapshot();
+    assert_eq!(s.dirty_shards(), 0);
+    let last = s.lattice_dim() - 1;
+    let touched = s.apply_deltas(&[(last, 3)]);
+    assert_eq!(touched, 1);
+    assert_eq!(s.dirty_shards(), 1);
 }
 
 #[test]

@@ -2,7 +2,7 @@
 //! accounting identities — fast checks that the paper's §5 claims hold in
 //! the shipped drivers, not just in unit tests.
 
-use qes::model::ParamStore;
+use qes::model::{ParamStore, ShardedParamStore};
 use qes::opt::{EsHyper, LatticeOptimizer, QesFullResidual, QuzoOptimizer, SeedReplayQes};
 use qes::quant::Format;
 use qes::runtime::Manifest;
@@ -34,7 +34,7 @@ fn memory_accounting_identities() {
         // replay state is O(K * pop), independent of d
         let hyper = EsHyper { pairs: 25, k_window: 50, ..Default::default() };
         let mut replay = SeedReplayQes::new(d as usize, 7, hyper.clone());
-        let mut store = q4.clone();
+        let mut store = ShardedParamStore::with_default_shards(q4.clone()).unwrap();
         let mut rng = qes::rng::SplitMix64::new(4);
         for _ in 0..hyper.k_window {
             let spec = qes::opt::PopulationSpec {

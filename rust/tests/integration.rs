@@ -1,11 +1,13 @@
 //! Integration tests: the full pretrain -> quantize -> fine-tune pipeline
 //! over real PJRT engines (nano model; artifacts must be built).
 
+use std::sync::Arc;
+
 use qes::coordinator::{
-    eval_problems, finetune_gen, pretrain_gen, EngineSet, FinetuneCfg, GenBatch, LmBatch,
-    PretrainCfg, Session, Variant, WorkerPool,
+    eval_problems, finetune_store, pretrain_gen, EngineSet, FinetuneCfg, GenBatch,
+    GenWorkload, LmBatch, MemberScratch, PretrainCfg, Session, Variant, WorkerPool, Workload,
 };
-use qes::model::{checkpoint, init::init_fp, ParamStore};
+use qes::model::{checkpoint, init::init_fp, AsParams, ParamStore, ShardedParamStore};
 use qes::opt::{apply_perturbation, EsHyper, PopulationSpec};
 use qes::quant::Format;
 use qes::rng::SplitMix64;
@@ -122,56 +124,60 @@ fn perturbed_rollouts_match_between_inline_and_pool_topology() {
         return;
     }
     // The same (gen_seed, member) must produce identical rewards whether
-    // evaluated inline or on a 2-worker pool — the determinism Algorithm 2
-    // relies on across process topologies.
+    // evaluated inline (per-tensor view of the plain store) or on a
+    // 2-worker pool against a COW snapshot of the sharded plane — the
+    // determinism Algorithm 2 relies on across process topologies AND
+    // storage layouts.
     let man = manifest();
     let fp = fp_store(&man, 12);
     let q = ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap();
     let session = Session::new(&man, "nano", Format::Int4, EngineSet::gen_only()).unwrap();
-    let task = gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec).unwrap();
-    let problems = eval_problems(task.as_ref(), session.cfg.b_gen, 4);
-    let batch = GenBatch::build(&session.cfg, problems);
+    let cfg = FinetuneCfg { train_pool: 32, eval_n: 8, tau: 0.0, ..Default::default() };
+    let workload: Arc<dyn Workload> = Arc::new(GenWorkload::new(
+        gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec).unwrap(),
+        &session.cfg,
+        &cfg,
+    ));
     let spec = PopulationSpec { gen_seed: 77, pairs: 2, sigma: 0.05 };
+    let round = workload.build_round(77).unwrap();
 
-    // inline
+    // inline, against the plain per-tensor store
+    let mut scratch = MemberScratch::default();
+    let view = q.params_view();
     let mut inline = vec![0.0f32; 4];
-    for m in 0..4 {
-        inline[m] = qes::coordinator::rollout::eval_member_gen(
-            &session, task.as_ref(), &q, &spec, m, &batch, 0.0, 7,
-        )
-        .unwrap();
+    for (m, slot) in inline.iter_mut().enumerate() {
+        *slot = workload
+            .eval_member(&session, &view, &spec, m, round.as_ref(), &mut scratch)
+            .unwrap();
     }
 
-    // pool with 2 workers
+    // pool with 2 workers, against a sharded-plane snapshot
+    let mut sharded = ShardedParamStore::new(q.clone(), 4).unwrap();
+    let snapshot = sharded.snapshot();
     let pool = WorkerPool::spawn(
         2,
         "artifacts/manifest.json",
         "nano",
         Format::Int4,
-        Some("countdown"),
-        EngineSet::gen_only(),
+        workload.clone(),
     )
     .unwrap();
-    let snapshot = std::sync::Arc::new(q.clone());
-    let ab = std::sync::Arc::new(batch);
     let jobs = vec![
-        qes::coordinator::Job::EvalGen {
+        qes::coordinator::Job::Eval {
             snapshot: snapshot.clone(),
             gen_seed: 77,
             pairs: 2,
             sigma: 0.05,
             members: vec![0, 2],
-            batch: ab.clone(),
-            tau: 0.0,
+            round: round.clone(),
         },
-        qes::coordinator::Job::EvalGen {
+        qes::coordinator::Job::Eval {
             snapshot,
             gen_seed: 77,
             pairs: 2,
             sigma: 0.05,
             members: vec![1, 3],
-            batch: ab,
-            tau: 0.0,
+            round,
         },
     ];
     let mut pooled = vec![0.0f32; 4];
@@ -179,6 +185,7 @@ fn perturbed_rollouts_match_between_inline_and_pool_topology() {
         pooled[r.member] = r.reward.unwrap();
     }
     assert_eq!(inline, pooled, "pool topology changed rewards");
+    pool.shutdown().unwrap();
 }
 
 #[test]
@@ -190,21 +197,25 @@ fn finetune_smoke_all_variants_respect_lattice_and_log() {
     let fp = fp_store(&man, 20);
     let q = ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap();
     let session = Session::new(&man, "nano", Format::Int4, EngineSet::gen_only()).unwrap();
-    let task = gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec).unwrap();
+    let cfg = FinetuneCfg {
+        hyper: EsHyper { sigma: 0.05, alpha: 0.3, gamma: 0.9, pairs: 2, k_window: 3 },
+        gens: 3,
+        tau: 0.0,
+        batches_per_gen: 1,
+        train_pool: 32,
+        eval_every: 0,
+        eval_n: 8,
+        seed: 5,
+        verbose: false,
+    };
+    let workload = GenWorkload::new(
+        gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec).unwrap(),
+        &session.cfg,
+        &cfg,
+    );
     for variant in [Variant::Qes, Variant::QesFullResidual, Variant::Quzo] {
-        let mut store = q.clone();
-        let cfg = FinetuneCfg {
-            hyper: EsHyper { sigma: 0.05, alpha: 0.3, gamma: 0.9, pairs: 2, k_window: 3 },
-            gens: 3,
-            tau: 0.0,
-            batches_per_gen: 1,
-            train_pool: 32,
-            eval_every: 0,
-            eval_n: 8,
-            seed: 5,
-            verbose: false,
-        };
-        let log = finetune_gen(&session, task.as_ref(), &mut store, variant, &cfg, None).unwrap();
+        let (log, store) =
+            finetune_store(&session, &workload, q.clone(), variant, &cfg, None).unwrap();
         assert_eq!(log.entries.len(), 3);
         assert!(log.entries.iter().all(|e| e.rollout_ms > 0.0));
         for t in store.lattice_i8() {
