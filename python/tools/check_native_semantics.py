@@ -1,0 +1,358 @@
+"""Validate the Rust native backend's ALGORITHM against the JAX ground
+truth (python/compile/model.py), by porting the exact op sequence of
+rust/src/runtime/native/{mod,autograd}.rs to NumPy and diffing:
+
+  1. loss graph (wq):  (sum_ce, n_tok, n_correct)
+  2. cls graph (wq):   scores [B, 8]
+  3. gen graph (wq):   decoded tokens, greedy AND gumbel-sampled
+  4. grad graph (fp):  per-tensor gradients vs jax.grad
+
+A pass means the Rust implementation's semantics (left-pad geometry,
+cache slots, bias construction, GELU/LN variants, argmax ties, backward
+derivation) match the compiled model; remaining risk is Rust-level
+transcription only.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import compile.model as M
+from compile.configs import CONFIGS
+
+cfg = CONFIGS["nano"]
+rng = np.random.default_rng(7)
+
+D, F, V, H, L = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_heads, cfg.n_layers
+DH = D // H
+NEG_INF = -1e9
+
+
+# ---- parameter construction ------------------------------------------------
+def make_params(fmt):
+    """{name: np tensor | (q, s)} + the flat arg list model.py expects."""
+    p, flat = {}, []
+    for spec in M.param_specs(cfg):
+        if spec.init[0] == "normal":
+            w = rng.normal(0, spec.init[1], spec.shape).astype(np.float32)
+        elif spec.init[0] == "ones":
+            w = np.ones(spec.shape, np.float32)
+        else:
+            w = np.zeros(spec.shape, np.float32)
+        if spec.kind == "lattice" and fmt == "wq":
+            # per-channel symmetric PTQ onto [-7, 7] (quant::ptq_quantize)
+            absmax = np.abs(w).max(axis=0)
+            s = np.where(absmax > 0, absmax / 7.0, 1.0).astype(np.float32)
+            q = np.clip(np.round(w / s), -7, 7).astype(np.int8)
+            p[spec.name] = (q, s)
+            flat += [q, s]
+        else:
+            p[spec.name] = w
+            flat.append(w)
+    return p, flat
+
+
+def lin(x, wspec, fmt):
+    """The native fused dequant-GEMM order: (x @ q) * scale."""
+    if fmt == "wq":
+        q, s = wspec
+        return (x @ q.astype(np.float32)) * s
+    return x @ wspec
+
+
+# ---- native forward (port of runtime/native/mod.rs) ------------------------
+def layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / np.sqrt(var + eps) * g + b
+
+
+def gelu(x):
+    c = np.float32(0.7978845608028654)
+    return 0.5 * x * (1.0 + np.tanh(c * (x + 0.044715 * x**3)))
+
+
+def softmax(x):
+    m = x.max(-1, keepdims=True)
+    e = np.exp(x - m)
+    return e / e.sum(-1, keepdims=True)
+
+
+def attend_full(q, k, v, mask):
+    B, S, _ = q.shape
+    qh = q.reshape(B, S, H, DH).transpose(0, 2, 1, 3)
+    kh = k.reshape(B, S, H, DH).transpose(0, 2, 1, 3)
+    vh = v.reshape(B, S, H, DH).transpose(0, 2, 1, 3)
+    logits = qh @ kh.transpose(0, 1, 3, 2) / np.sqrt(np.float32(DH))
+    causal = np.tril(np.ones((S, S), np.float32))
+    bias = np.where((causal[None, None] * mask[:, None, None, :]) > 0, 0.0, NEG_INF)
+    att = softmax(logits + bias)
+    out = att @ vh
+    return out.transpose(0, 2, 1, 3).reshape(B, S, H * DH), att
+
+
+def forward_full(p, fmt, tokens, pos_ids, mask, want_kv=False):
+    h = p["tok_emb"][tokens] + p["pos_emb"][pos_ids]
+    kvs = []
+    for i in range(L):
+        pre = f"layers.{i}."
+        x = layernorm(h, p[pre + "ln1.g"], p[pre + "ln1.b"])
+        q = lin(x, p[pre + "attn.wq"], fmt)
+        k = lin(x, p[pre + "attn.wk"], fmt)
+        v = lin(x, p[pre + "attn.wv"], fmt)
+        a, _ = attend_full(q, k, v, mask)
+        h = h + lin(a, p[pre + "attn.wo"], fmt)
+        x = layernorm(h, p[pre + "ln2.g"], p[pre + "ln2.b"])
+        h = h + lin(gelu(lin(x, p[pre + "mlp.w1"], fmt)), p[pre + "mlp.w2"], fmt)
+        if want_kv:
+            kvs.append((k, v))
+    return h, kvs
+
+
+def head(p, h):
+    hf = layernorm(h, p["lnf.g"], p["lnf.b"])
+    return hf @ p["tok_emb"].T
+
+
+# ---- 1 & 4: loss + grads ---------------------------------------------------
+def native_loss(p, fmt, tokens, pos_ids, mask, targets, loss_mask):
+    h, _ = forward_full(p, fmt, tokens, pos_ids, mask)
+    logits = head(p, h)
+    m = logits.max(-1, keepdims=True)
+    logz = m[..., 0] + np.log(np.exp(logits - m).sum(-1))
+    nll = logz - np.take_along_axis(logits, targets[..., None], -1)[..., 0]
+    sum_ce = (nll * loss_mask).sum()
+    pred = logits.argmax(-1)
+    n_correct = ((pred == targets) * loss_mask).sum()
+    return sum_ce, loss_mask.sum(), n_correct
+
+
+B, S = cfg.b_train, cfg.s_train
+tokens = rng.integers(2, 40, (B, S)).astype(np.int32)
+pos_ids = np.tile(np.arange(S, dtype=np.int32), (B, 1))
+mask = (rng.random((B, S)) < 0.9).astype(np.float32)
+mask[:, :4] = 1.0
+targets = rng.integers(2, 40, (B, S)).astype(np.int32)
+loss_mask = (rng.random((B, S)) < 0.5).astype(np.float32) * mask
+
+for fmt in ("wq", "fp"):
+    p, flat = make_params(fmt)
+    jl = M.exported_fn(cfg, fmt, "loss")(tokens, pos_ids, mask, targets, loss_mask, *flat)
+    nl = native_loss(p, fmt, tokens, pos_ids, mask, targets, loss_mask)
+    for name, a, b in zip(("sum_ce", "n_tok", "n_correct"), jl, nl):
+        rel = abs(float(a) - float(b)) / max(abs(float(a)), 1.0)
+        assert rel < 2e-3, (fmt, name, float(a), float(b))
+    print(f"loss[{fmt}]  OK   jax={float(jl[0]):.4f} native={float(nl[0]):.4f} "
+          f"correct {float(jl[2])}=={float(nl[2])}")
+
+# ---- 2: cls ---------------------------------------------------------------
+p, flat = make_params("wq")
+cls_pos = rng.integers(1, S - 1, (B,)).astype(np.int32)
+class_ids = np.array([24, 25, 26, 24, 24, 24, 24, 24], np.int32)
+labels = rng.integers(0, 3, (B,)).astype(np.int32)
+jcls = M.exported_fn(cfg, "wq", "cls")(tokens, pos_ids, mask, cls_pos, class_ids, labels, *flat)
+h, _ = forward_full(p, "wq", tokens, pos_ids, mask)
+at = head(p, h)[np.arange(B), cls_pos]          # [B, V] rows at cls_pos
+nscores = at[:, class_ids]
+jscores = np.asarray(jcls[2])
+err = np.abs(jscores - nscores).max()
+assert err < 2e-3, err
+print(f"cls[wq]    OK   max|scores diff|={err:.2e}")
+
+# ---- 3: gen (port of NativeBackend::generate) ------------------------------
+def native_gen(p, fmt, prompt, lens, tau, gumbel):
+    b, sp, t_dec = cfg.b_gen, cfg.s_prompt, cfg.t_dec
+    st = sp + t_dec
+    pad = sp - lens
+    slots = np.arange(sp)[None, :]
+    mask = (slots >= pad[:, None]).astype(np.float32)
+    pos = np.maximum(slots - pad[:, None], 0).astype(np.int32)
+    h, kvs = forward_full(p, fmt, prompt, pos, mask, want_kv=True)
+    last = head(p, h)[:, -1, :]
+    kc = [np.zeros((b, st, D), np.float32) for _ in range(L)]
+    vc = [np.zeros((b, st, D), np.float32) for _ in range(L)]
+    for i, (k, v) in enumerate(kvs):
+        kc[i][:, :sp] = k
+        vc[i][:, :sp] = v
+    keymask = np.zeros((b, st), np.float32)
+    keymask[:, :sp] = mask
+    out = np.zeros((b, t_dec), np.int32)
+    for t in range(t_dec):
+        val = last + tau * gumbel[:, t, :]
+        out[:, t] = val.argmax(-1)          # np.argmax = first max, like jnp
+        if t + 1 == t_dec:
+            break
+        slot = sp + t
+        keymask[:, slot] = 1.0
+        h1 = p["tok_emb"][out[:, t]] + p["pos_emb"][lens + t]   # [b, D]
+        h1 = h1[:, None, :]
+        for i in range(L):
+            pre = f"layers.{i}."
+            x = layernorm(h1, p[pre + "ln1.g"], p[pre + "ln1.b"])
+            qh = lin(x, p[pre + "attn.wq"], fmt)
+            kh = lin(x, p[pre + "attn.wk"], fmt)
+            vh = lin(x, p[pre + "attn.wv"], fmt)
+            kc[i][:, slot] = kh[:, 0]
+            vc[i][:, slot] = vh[:, 0]
+            # single-query attention over the cache
+            q4 = qh.reshape(b, 1, H, DH).transpose(0, 2, 1, 3)
+            k4 = kc[i].reshape(b, st, H, DH).transpose(0, 2, 1, 3)
+            v4 = vc[i].reshape(b, st, H, DH).transpose(0, 2, 1, 3)
+            logits = q4 @ k4.transpose(0, 1, 3, 2) / np.sqrt(np.float32(DH))
+            bias = np.where(keymask[:, None, None, :] > 0, 0.0, NEG_INF)
+            att = softmax(logits + bias)
+            a = (att @ v4).transpose(0, 2, 1, 3).reshape(b, 1, D)
+            h1 = h1 + lin(a, p[pre + "attn.wo"], fmt)
+            x = layernorm(h1, p[pre + "ln2.g"], p[pre + "ln2.b"])
+            h1 = h1 + lin(gelu(lin(x, p[pre + "mlp.w1"], fmt)), p[pre + "mlp.w2"], fmt)
+        last = head(p, h1)[:, 0, :]
+    return out
+
+
+bg, sp, td = cfg.b_gen, cfg.s_prompt, cfg.t_dec
+lens = rng.integers(3, sp + 1, (bg,)).astype(np.int32)
+prompt = np.zeros((bg, sp), np.int32)
+for i in range(bg):
+    prompt[i, sp - lens[i]:] = rng.integers(2, 40, (lens[i],))
+for tau, gseed in ((0.0, None), (0.7, 3)):
+    gumbel = (np.zeros((bg, td, V), np.float32) if gseed is None
+              else rng.standard_normal((bg, td, V)).astype(np.float32))
+    jflat = [jnp.asarray(a) for a in flat]
+    jtoks = np.asarray(M.exported_fn(cfg, "wq", "gen")(
+        jnp.asarray(prompt), jnp.asarray(lens), jnp.float32(tau),
+        jnp.asarray(gumbel), *jflat)[0])
+    ntoks = native_gen(p, "wq", prompt, lens, np.float32(tau), gumbel)
+    match = (jtoks == ntoks).mean()
+    assert match == 1.0, (tau, match, jtoks[:2], ntoks[:2])
+    print(f"gen[wq]    OK   tau={tau} tokens exact-match")
+
+# ---- 4: grads (port of runtime/native/autograd.rs) -------------------------
+def native_grads(p, tokens, pos_ids, mask, targets, loss_mask):
+    fmt = "fp"
+    R = B * S
+    tok2 = tokens.reshape(R)
+    pos2 = pos_ids.reshape(R)
+    E = p["tok_emb"]
+    h = (E[tok2] + p["pos_emb"][pos2]).astype(np.float32)
+    caches = []
+    mask2 = mask
+    for i in range(L):
+        pre = f"layers.{i}."
+        c = {}
+        g1, b1 = p[pre + "ln1.g"], p[pre + "ln1.b"]
+        hb = h.reshape(B, S, D)
+        mu = hb.mean(-1, keepdims=True)
+        var = ((hb - mu) ** 2).mean(-1, keepdims=True)
+        c["rstd1"] = 1.0 / np.sqrt(var + 1e-5)
+        c["xhat1"] = (hb - mu) * c["rstd1"]
+        c["x1"] = c["xhat1"] * g1 + b1
+        q = c["x1"] @ p[pre + "attn.wq"]
+        k = c["x1"] @ p[pre + "attn.wk"]
+        v = c["x1"] @ p[pre + "attn.wv"]
+        c["q"], c["k"], c["v"] = q, k, v
+        a, att = attend_full(q, k, v, mask2)
+        c["att"], c["amerge"] = att, a
+        h = (hb + a @ p[pre + "attn.wo"]).reshape(R, D)
+        hb = h.reshape(B, S, D)
+        mu = hb.mean(-1, keepdims=True)
+        var = ((hb - mu) ** 2).mean(-1, keepdims=True)
+        c["rstd2"] = 1.0 / np.sqrt(var + 1e-5)
+        c["xhat2"] = (hb - mu) * c["rstd2"]
+        c["x2"] = c["xhat2"] * p[pre + "ln2.g"] + p[pre + "ln2.b"]
+        c["u"] = c["x2"] @ p[pre + "mlp.w1"]
+        c["gu"] = gelu(c["u"])
+        h = (hb + c["gu"] @ p[pre + "mlp.w2"]).reshape(R, D)
+        caches.append(c)
+    hb = h.reshape(B, S, D)
+    mu = hb.mean(-1, keepdims=True)
+    var = ((hb - mu) ** 2).mean(-1, keepdims=True)
+    rstdf = 1.0 / np.sqrt(var + 1e-5)
+    xhatf = (hb - mu) * rstdf
+    hf = xhatf * p["lnf.g"] + p["lnf.b"]
+    logits = hf @ E.T
+    m = logits.max(-1, keepdims=True)
+    logz = m[..., 0] + np.log(np.exp(logits - m).sum(-1))
+    n_tok = max(loss_mask.sum(), 1.0)
+    probs = np.exp(logits - logz[..., None])
+    onehot = np.eye(V, dtype=np.float32)[targets]
+    dlogits = (loss_mask[..., None] / n_tok) * (probs - onehot)
+
+    g = {name: np.zeros_like(p[name]) for name in p}
+
+    def ln_bwd(dy, xhat, rstd, gain):
+        dxh = dy * gain
+        m1 = dxh.mean(-1, keepdims=True)
+        m2 = (dxh * xhat).mean(-1, keepdims=True)
+        dg = (dy * xhat).sum((0, 1))
+        db = dy.sum((0, 1))
+        return rstd * (dxh - m1 - xhat * m2), dg, db
+
+    dhf = dlogits @ E
+    g["tok_emb"] += np.einsum("bsv,bsd->vd", dlogits, hf)
+    dh, dgf, dbf = ln_bwd(dhf, xhatf, rstdf, p["lnf.g"])
+    g["lnf.g"] += dgf
+    g["lnf.b"] += dbf
+    for i in reversed(range(L)):
+        pre = f"layers.{i}."
+        c = caches[i]
+        g[pre + "mlp.w2"] += np.einsum("bsf,bsd->fd", c["gu"], dh)
+        dgu = dh @ p[pre + "mlp.w2"].T
+        cc = np.float32(0.7978845608028654)
+        t = np.tanh(cc * (c["u"] + 0.044715 * c["u"] ** 3))
+        du = dgu * (0.5 * (1 + t) + 0.5 * c["u"] * (1 - t * t) * cc * (1 + 3 * 0.044715 * c["u"] ** 2))
+        g[pre + "mlp.w1"] += np.einsum("bsd,bsf->df", c["x2"], du)
+        dx2 = du @ p[pre + "mlp.w1"].T
+        dln2, dg2, db2 = ln_bwd(dx2, c["xhat2"], c["rstd2"], p[pre + "ln2.g"])
+        g[pre + "ln2.g"] += dg2
+        g[pre + "ln2.b"] += db2
+        dh_mid = dh + dln2
+        g[pre + "attn.wo"] += np.einsum("bsd,bse->de", c["amerge"], dh_mid)
+        da = dh_mid @ p[pre + "attn.wo"].T
+        dah = da.reshape(B, S, H, DH).transpose(0, 2, 1, 3)
+        vh = c["v"].reshape(B, S, H, DH).transpose(0, 2, 1, 3)
+        kh = c["k"].reshape(B, S, H, DH).transpose(0, 2, 1, 3)
+        qh = c["q"].reshape(B, S, H, DH).transpose(0, 2, 1, 3)
+        att = c["att"]
+        datt = dah @ vh.transpose(0, 1, 3, 2)
+        dv4 = att.transpose(0, 1, 3, 2) @ dah
+        dot = (datt * att).sum(-1, keepdims=True)
+        dlog = att * (datt - dot)
+        scale = 1.0 / np.sqrt(np.float32(DH))
+        dq4 = dlog @ kh * scale
+        dk4 = dlog.transpose(0, 1, 3, 2) @ qh * scale
+        dq = dq4.transpose(0, 2, 1, 3).reshape(B, S, D)
+        dk = dk4.transpose(0, 2, 1, 3).reshape(B, S, D)
+        dv = dv4.transpose(0, 2, 1, 3).reshape(B, S, D)
+        g[pre + "attn.wq"] += np.einsum("bsd,bse->de", c["x1"], dq)
+        g[pre + "attn.wk"] += np.einsum("bsd,bse->de", c["x1"], dk)
+        g[pre + "attn.wv"] += np.einsum("bsd,bse->de", c["x1"], dv)
+        dx1 = dq @ p[pre + "attn.wq"].T + dk @ p[pre + "attn.wk"].T + dv @ p[pre + "attn.wv"].T
+        dln1, dg1, db1 = ln_bwd(dx1, c["xhat1"], c["rstd1"], p[pre + "ln1.g"])
+        g[pre + "ln1.g"] += dg1
+        g[pre + "ln1.b"] += db1
+        dh = dh_mid + dln1
+    dh2 = dh.reshape(R, D)
+    np.add.at(g["tok_emb"], tok2, dh2)
+    np.add.at(g["pos_emb"], pos2, dh2)
+    return g
+
+
+p, flat = make_params("fp")
+grad_fn = M.exported_fn(cfg, "fp", "grad")
+jout = grad_fn(tokens, pos_ids, mask, targets, loss_mask, *flat)
+jgrads = [np.asarray(x) for x in jout[1:]]
+ngr = native_grads(p, tokens, pos_ids, mask, targets, loss_mask)
+names = [n for n, _, _ in M.flat_args_for(cfg, "fp")]
+worst = 0.0
+for name, jg in zip(names, jgrads):
+    ng = ngr[name]
+    denom = max(np.abs(jg).max(), 1e-6)
+    rel = np.abs(jg - ng).max() / denom
+    worst = max(worst, rel)
+    assert rel < 5e-2, (name, rel, float(np.abs(jg).max()))
+print(f"grad[fp]   OK   worst per-tensor rel err={worst:.2e}")
+print("ALL NATIVE-SEMANTICS CHECKS PASSED")

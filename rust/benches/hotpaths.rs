@@ -12,6 +12,9 @@
 //! baseline against its chunked variant — the perf trajectory tracked in
 //! PERF.md from this change on.
 
+use std::borrow::Cow;
+
+use qes::coordinator::{eval_problems, ClsBatch, EngineSet, GenBatch, Session};
 use qes::model::{init::init_fp, ParamStore, ShardedParamStore};
 use qes::opt::{
     accumulate_grad, accumulate_grad_chunked, apply_perturbation, apply_perturbation_into,
@@ -20,7 +23,9 @@ use qes::opt::{
 };
 use qes::quant::Format;
 use qes::rng::{NoiseStream, SplitMix64};
+use qes::runtime::native::gemm::{self, Lin};
 use qes::runtime::Manifest;
+use qes::tasks::{cls_task, gen_task};
 use qes::util::bench::{black_box, report_speedup, Bench};
 use qes::util::f16::{f16_decode_slice, f16_encode_slice};
 use qes::util::parallel;
@@ -202,6 +207,60 @@ fn main() {
         black_box(back[0]);
     });
 
+    // forward GEMM (the native backend's rollout hot-spot), at the
+    // `base` config's mlp.w1 geometry: fused dequant-GEMM reading the
+    // packed int4 nibbles / int8 slab directly vs the historical
+    // dequant-then-matmul (materialize f32 weights, then multiply) —
+    // the per-member cost, since member overrides change every call.
+    {
+        let (gk, gn, gm) = (256usize, 512usize, 64usize);
+        let mut grng = SplitMix64::new(9);
+        let q: Vec<i8> = (0..gk * gn).map(|_| (grng.next_u64() % 15) as i8 - 7).collect();
+        let scale: Vec<f32> = (0..gn).map(|_| 0.01 + 0.001 * grng.uniform01()).collect();
+        let x: Vec<f32> = (0..gm * gk).map(|_| grng.uniform01() - 0.5).collect();
+        let mut out = vec![0.0f32; gm * gn];
+        for fmt in [Format::Int4, Format::Int8] {
+            let lin = Lin::from_lattice(Cow::Borrowed(&q), &scale, gk, gn, fmt);
+            let geom = format!("{} {}x{}x{}", fmt.name(), gm, gk, gn);
+            b.run(&format!("forward_gemm/dequant_then_matmul/{}", geom), || {
+                gemm::dequant_then_matmul(&x, gm, &lin, &mut out);
+                black_box(out[0]);
+            });
+            b.run(&format!("forward_gemm/fused/{} {}x{}x{}", fmt.name(), gm, gk, gn), || {
+                gemm::matmul(&x, gm, &lin, &mut out, 1);
+                black_box(out[0]);
+            });
+        }
+    }
+
+    // whole-rollout member evaluation on the auto-resolved backend
+    // (native on the offline build): what one population member costs.
+    {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        let store4 = quant_store("nano");
+        let session = Session::new(&man, "nano", Format::Int4, EngineSet {
+            gen: true,
+            cls: true,
+            ..Default::default()
+        })
+        .unwrap();
+        let be = session.backend_name();
+        let task = gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec).unwrap();
+        let problems = eval_problems(task.as_ref(), session.cfg.b_gen, 1);
+        let gb = GenBatch::build(&session.cfg, problems);
+        b.run(&format!("rollout_eval/gen/{}/nano/int4", be), || {
+            black_box(session.generate(&store4, None, &gb, 0.0, None).unwrap());
+        });
+        let ct = cls_task("snli").unwrap();
+        let mut crng = SplitMix64::new(3);
+        let exs: Vec<_> =
+            (0..session.cfg.b_train).map(|_| ct.sample(&mut crng, true)).collect();
+        let cb = ClsBatch::build(&session.cfg, &exs, &ct.verbalizers());
+        b.run(&format!("rollout_eval/cls/{}/nano/int4", be), || {
+            black_box(session.cls_eval(&store4, None, &cb).unwrap());
+        });
+    }
+
     b.report();
     b.report_json();
 
@@ -236,6 +295,16 @@ fn main() {
             "snapshot_publish/micro",
             "snapshot_publish/full_clone/micro".to_string(),
             "snapshot_publish/dirty_shard/micro".to_string(),
+        ),
+        (
+            "forward_gemm/int4",
+            "forward_gemm/dequant_then_matmul/int4 64x256x512".to_string(),
+            "forward_gemm/fused/int4 64x256x512".to_string(),
+        ),
+        (
+            "forward_gemm/int8",
+            "forward_gemm/dequant_then_matmul/int8 64x256x512".to_string(),
+            "forward_gemm/fused/int8 64x256x512".to_string(),
         ),
     ] {
         report_speedup("speedup", label, b.mean_ns(&base), b.mean_ns(&opt));

@@ -12,15 +12,15 @@ use qes::runtime::Manifest;
 use qes::tasks::gen_task;
 
 fn main() -> anyhow::Result<()> {
-    if !qes::runtime::backend_available() {
-        eprintln!("SKIP replay bench: xla PJRT backend unavailable (offline stub build)");
-        return Ok(());
-    }
+    // Runs on whatever backend `BackendPolicy::Auto` resolves to — the
+    // native interpreter on the offline build (no skip), PJRT when a
+    // real runtime is linked.
     let man = Manifest::load("artifacts/manifest.json")?;
     let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32)?;
     init_fp(&mut fp, 3);
     let q0 = ParamStore::quantize_from(&fp, &man, Format::Int4, None)?;
     let session = Session::new(&man, "nano", Format::Int4, EngineSet::gen_only())?;
+    println!("backend: {}", session.backend_name());
 
     println!(
         "{:<24} {:>14} {:>14} {:>10}",

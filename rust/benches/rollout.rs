@@ -1,11 +1,14 @@
-//! Rollout-path benchmarks: PJRT execution of the AOT artifacts (gen /
-//! loss / cls) plus literal marshalling — the per-member cost that
-//! dominates each ES generation (Table 9's rollout column).
+//! Rollout-path benchmarks: forward execution of the gen / loss / cls
+//! graphs — the per-member cost that dominates each ES generation
+//! (Table 9's rollout column). Runs on whatever backend
+//! `BackendPolicy::Auto` resolves to (native on the offline build, PJRT
+//! when a real runtime is linked), so the offline build now measures the
+//! real rollout path instead of skipping.
 //!
 //! Run: `cargo bench --bench rollout`
 
-use qes::coordinator::{ClsBatch, GenBatch, LmBatch, EngineSet, Session};
 use qes::coordinator::eval_problems;
+use qes::coordinator::{ClsBatch, EngineSet, GenBatch, LmBatch, Session};
 use qes::model::{init::init_fp, ParamStore};
 use qes::quant::Format;
 use qes::rng::SplitMix64;
@@ -14,12 +17,8 @@ use qes::tasks::{cls_task, gen_task};
 use qes::util::bench::{black_box, Bench};
 
 fn main() -> anyhow::Result<()> {
-    if !qes::runtime::backend_available() {
-        eprintln!("SKIP rollout bench: xla PJRT backend unavailable (offline stub build)");
-        return Ok(());
-    }
     let man = Manifest::load("artifacts/manifest.json")?;
-    let mut b = Bench::new("rollout path (PJRT)");
+    let mut b = Bench::new("rollout path");
 
     for size in ["nano", "micro"] {
         let mut fp = ParamStore::from_manifest(&man, size, Format::Fp32)?;
@@ -32,11 +31,12 @@ fn main() -> anyhow::Result<()> {
                 cls: true,
                 ..Default::default()
             })?;
+            let be = session.backend_name();
             let task = gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec)?;
             let problems = eval_problems(task.as_ref(), session.cfg.b_gen, 1);
             let batch = GenBatch::build(&session.cfg, problems);
 
-            b.run(&format!("gen/{}/{} (b={} t={})", size, fmt.name(),
+            b.run(&format!("gen/{}/{}/{} (b={} t={})", be, size, fmt.name(),
                 session.cfg.b_gen, session.cfg.t_dec), || {
                 black_box(session.generate(&q, None, &batch, 0.0, None).unwrap());
             });
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
             let exs: Vec<_> =
                 (0..session.cfg.b_train).map(|_| ct.sample(&mut rng, true)).collect();
             let cb = ClsBatch::build(&session.cfg, &exs, &ct.verbalizers());
-            b.run(&format!("cls/{}/{}", size, fmt.name()), || {
+            b.run(&format!("cls/{}/{}/{}", be, size, fmt.name()), || {
                 black_box(session.cls_eval(&q, None, &cb).unwrap());
             });
 
@@ -54,16 +54,21 @@ fn main() -> anyhow::Result<()> {
                 .map(|_| task.supervised(&mut rng))
                 .collect();
             let lm = LmBatch::build(&session.cfg, &pairs);
-            b.run(&format!("loss/{}/{}", size, fmt.name()), || {
+            b.run(&format!("loss/{}/{}/{}", be, size, fmt.name()), || {
                 black_box(session.lm_loss(&q, None, &lm).unwrap());
             });
 
-            // marshalling only: how much of the per-call cost is literals?
-            b.run(&format!("param_literals/{}/{}", size, fmt.name()), || {
-                black_box(param_literals(&q, None).unwrap());
-            });
+            // marshalling only: how much of the per-call PJRT cost is
+            // literals? (needs the real runtime — the stub can't build
+            // literals)
+            if qes::runtime::backend_available() {
+                b.run(&format!("param_literals/{}/{}", size, fmt.name()), || {
+                    black_box(param_literals(&q, None).unwrap());
+                });
+            }
         }
     }
     b.report();
+    b.report_json();
     Ok(())
 }

@@ -13,14 +13,16 @@
 //! [`Workload`] impls; the leader loop, the pool and the job protocol are
 //! generic over the trait.
 
-pub mod encode;
 pub mod finetune;
 pub mod pool;
 pub mod pretrain;
 pub mod session;
 pub mod workload;
 
-pub use encode::{ClsBatch, GenBatch, LmBatch};
+// Batch encoders moved to the runtime layer (they are backend inputs, not
+// coordinator logic); re-exported here so coordinator callers keep their
+// historical import paths.
+pub use crate::runtime::encode::{ClsBatch, GenBatch, LmBatch};
 pub use finetune::{
     finetune, finetune_mezo, finetune_store, FinetuneCfg, GenLog, RunLog, Variant,
 };

@@ -27,7 +27,7 @@ use crate::coordinator::workload::{MemberScratch, Round, Workload};
 use crate::model::{AsParams, Snapshot};
 use crate::opt::PopulationSpec;
 use crate::quant::Format;
-use crate::runtime::Manifest;
+use crate::runtime::{BackendPolicy, Manifest};
 
 /// Work order broadcast to a worker for one generation. One variant for
 /// every scenario — the payload is the workload's own `Round`.
@@ -66,14 +66,16 @@ fn panic_message(p: &(dyn Any + Send)) -> String {
 }
 
 impl WorkerPool {
-    /// Spawn `n` workers, each compiling its own engines for
-    /// (size, format) per `workload.engines()` and scoring members with
-    /// the shared workload.
+    /// Spawn `n` workers, each building its own forward backend for
+    /// (size, format) per `policy` (native by default, PJRT engines per
+    /// `workload.engines()` when available) and scoring members with the
+    /// shared workload.
     pub fn spawn(
         n: usize,
         manifest_path: &str,
         size: &str,
         format: Format,
+        policy: BackendPolicy,
         workload: Arc<dyn Workload>,
     ) -> Result<WorkerPool> {
         let (res_tx, res_rx) = channel::<MemberResult>();
@@ -88,7 +90,9 @@ impl WorkerPool {
             let workload = workload.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("qes-worker-{}", w))
-                .spawn(move || worker_main(&mpath, &size, format, workload.as_ref(), rx, res_tx))?;
+                .spawn(move || {
+                    worker_main(&mpath, &size, format, policy, workload.as_ref(), rx, res_tx)
+                })?;
             handles.push(Some(handle));
         }
         Ok(WorkerPool { senders, results: res_rx, handles: Mutex::new(handles) })
@@ -197,16 +201,17 @@ fn worker_main(
     manifest_path: &str,
     size: &str,
     format: Format,
+    policy: BackendPolicy,
     workload: &dyn Workload,
     rx: Receiver<Job>,
     res_tx: Sender<MemberResult>,
 ) -> Result<()> {
     let man = Manifest::load(manifest_path)?;
-    let session = Session::new(&man, size, format, workload.engines())?;
-    // Per-worker perturbation buffers, reused across every member this
-    // worker ever evaluates (no per-member Vec<Vec<i8>> allocation).
-    // Sequential fill: the pool already parallelizes across workers, so a
-    // per-member thread fan-out would only oversubscribe the cores.
+    let mut session = Session::with_policy(&man, size, format, workload.engines(), policy)?;
+    // Workers ARE the parallelism axis: run both the perturbation fill
+    // and the native backend's GEMMs sequentially per worker, so n
+    // workers never nest n × cores thread fan-outs.
+    session.set_backend_threads(1);
     let mut scratch = MemberScratch::sequential();
     while let Ok(job) = rx.recv() {
         match job {
@@ -248,6 +253,7 @@ mod tests {
             "artifacts/does_not_exist.json",
             "nano",
             Format::Int4,
+            BackendPolicy::Auto,
             workload,
         )
         .unwrap();

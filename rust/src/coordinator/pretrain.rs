@@ -8,8 +8,8 @@
 
 use anyhow::Result;
 
-use crate::coordinator::encode::LmBatch;
 use crate::coordinator::session::Session;
+use crate::runtime::encode::LmBatch;
 use crate::model::ParamStore;
 use crate::opt::{Adam, AdamConfig};
 use crate::rng::SplitMix64;

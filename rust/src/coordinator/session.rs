@@ -1,68 +1,77 @@
-//! A Session binds one (model size, weight format) to a PJRT client and the
-//! compiled engines a run needs. Sessions are thread-local (the client is
-//! `Rc`-based); the worker pool builds one per thread.
+//! A Session binds one (model size, weight format) to a forward backend —
+//! PJRT engines or the pure-Rust native interpreter — behind the
+//! [`ForwardBackend`] trait, and layers the task-facing conveniences on
+//! top (string decode, real-row stats).
+//!
+//! Sessions are thread-local (the PJRT client is `Rc`-based); the worker
+//! pool builds one per thread. Which backend a session executes on is a
+//! [`BackendPolicy`]: `Auto` (the default) picks PJRT when a real `xla`
+//! runtime is linked and the native backend otherwise, so the same
+//! coordinator code runs end-to-end on the offline build.
 
 use anyhow::Result;
 
-use crate::coordinator::encode::{gumbel_noise, ClsBatch, GenBatch, LmBatch};
 use crate::model::{AsParams, ParamsView};
 use crate::quant::Format;
-use crate::runtime::{self, Engine, Manifest, ModelConfig};
+use crate::runtime::encode::{ClsBatch, GenBatch, LmBatch};
+use crate::runtime::{
+    BackendPolicy, ForwardBackend, Manifest, ModelConfig, NativeBackend, PjrtBackend,
+};
 use crate::tasks::tokenizer;
+
+pub use crate::runtime::backend::EngineSet;
 
 pub struct Session {
     pub cfg: ModelConfig,
     pub size: String,
     pub format: Format,
-    #[allow(dead_code)] client: xla::PjRtClient,
-    gen: Option<Engine>,
-    loss: Option<Engine>,
-    cls: Option<Engine>,
-    grad: Option<Engine>,
-}
-
-/// Which engines to compile (compilation is ~1s each; pay only for what the
-/// run uses).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct EngineSet {
-    pub gen: bool,
-    pub loss: bool,
-    pub cls: bool,
-    pub grad: bool,
-}
-
-impl EngineSet {
-    pub fn gen_only() -> Self {
-        EngineSet { gen: true, ..Default::default() }
-    }
-    pub fn cls_only() -> Self {
-        EngineSet { cls: true, ..Default::default() }
-    }
-    pub fn pretrain() -> Self {
-        EngineSet { grad: true, loss: true, gen: true, ..Default::default() }
-    }
+    backend: Box<dyn ForwardBackend>,
 }
 
 impl Session {
+    /// Build a session with [`BackendPolicy::Auto`]: PJRT when the linked
+    /// `xla` crate has a real runtime, the native interpreter otherwise.
     pub fn new(man: &Manifest, size: &str, format: Format, set: EngineSet) -> Result<Session> {
-        let cfg = man.config(size)?.clone();
-        let client = xla::PjRtClient::cpu()?;
-        let fmt = format.artifact_format();
-        let mk = |want: bool, func: &str| -> Result<Option<Engine>> {
-            if !want {
-                return Ok(None);
-            }
-            Ok(Some(Engine::load(&client, man, man.artifact(size, fmt, func)?)?))
-        };
-        let gen = mk(set.gen, "gen")?;
-        let loss = mk(set.loss, "loss")?;
-        let cls = mk(set.cls, "cls")?;
-        let grad = mk(set.grad, "grad")?;
-        Ok(Session { cfg, size: size.to_string(), format, client, gen, loss, cls, grad })
+        Session::with_policy(man, size, format, set, BackendPolicy::Auto)
     }
 
-    fn engine<'a>(e: &'a Option<Engine>, what: &str) -> Result<&'a Engine> {
-        e.as_ref().ok_or_else(|| anyhow::anyhow!("engine {:?} not compiled for this session", what))
+    /// Build a session on an explicit backend. `set` declares which
+    /// graphs the run uses: the PJRT path compiles exactly those, and the
+    /// native interpreter enforces the same declaration (so
+    /// under-declaring fails on every backend, not only under PJRT).
+    pub fn with_policy(
+        man: &Manifest,
+        size: &str,
+        format: Format,
+        set: EngineSet,
+        policy: BackendPolicy,
+    ) -> Result<Session> {
+        let backend: Box<dyn ForwardBackend> = if policy.use_pjrt() {
+            Box::new(PjrtBackend::new(man, size, format, set)?)
+        } else {
+            Box::new(NativeBackend::with_engine_set(man, size, format, set)?)
+        };
+        let cfg = man.config(size)?.clone();
+        Ok(Session { cfg, size: size.to_string(), format, backend })
+    }
+
+    /// Which backend this session executes on ("pjrt" | "native").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Cap the backend's internal parallelism (the native GEMM's thread
+    /// fan-out). Results are invariant to it; sessions that live on one
+    /// of many parallel worker threads should set 1 so worker-level and
+    /// GEMM-level parallelism don't multiply (the same rationale as
+    /// `MemberScratch::sequential`).
+    pub fn set_backend_threads(&mut self, threads: usize) {
+        self.backend.set_threads(threads);
+    }
+
+    /// Direct access to the forward backend (parity tests, benches).
+    pub fn backend(&self) -> &dyn ForwardBackend {
+        self.backend.as_ref()
     }
 
     /// Batched autoregressive generation. `params` is any parameter
@@ -79,26 +88,8 @@ impl Session {
         gumbel_seed: Option<u64>,
     ) -> Result<Vec<String>> {
         let view = params.params_view();
-        let eng = Self::engine(&self.gen, "gen")?;
-        let cfg = &self.cfg;
-        let mut args = Vec::with_capacity(4 + view.store.entries.len());
-        args.push(runtime::literal_for(
-            &eng.meta.data_inputs[0],
-            &runtime::HostTensor::I32(batch.prompt.clone()),
-        )?);
-        args.push(runtime::literal_for(
-            &eng.meta.data_inputs[1],
-            &runtime::HostTensor::I32(batch.lens.clone()),
-        )?);
-        args.push(xla::Literal::scalar(tau));
-        args.push(runtime::literal_for(
-            &eng.meta.data_inputs[3],
-            &runtime::HostTensor::F32(gumbel_noise(cfg, gumbel_seed)),
-        )?);
-        args.extend(runtime::param_literals_view(&view, overrides)?);
-        let outs = eng.run(&args)?;
-        let toks = runtime::to_i32_vec(&outs[0])?;
-        let t = cfg.t_dec;
+        let toks = self.backend.generate(&view, overrides, batch, tau, gumbel_seed)?;
+        let t = self.cfg.t_dec;
         Ok((0..batch.n_real)
             .map(|i| tokenizer::decode_to_eos(&toks[i * t..(i + 1) * t]))
             .collect())
@@ -113,21 +104,9 @@ impl Session {
         batch: &ClsBatch,
     ) -> Result<(f32, usize)> {
         let view = params.params_view();
-        let eng = Self::engine(&self.cls, "cls")?;
-        let d = &eng.meta.data_inputs;
-        let mut args = Vec::with_capacity(6 + view.store.entries.len());
-        args.push(runtime::literal_for(&d[0], &runtime::HostTensor::I32(batch.tokens.clone()))?);
-        args.push(runtime::literal_for(&d[1], &runtime::HostTensor::I32(batch.pos_ids.clone()))?);
-        args.push(runtime::literal_for(&d[2], &runtime::HostTensor::F32(batch.mask.clone()))?);
-        args.push(runtime::literal_for(&d[3], &runtime::HostTensor::I32(batch.cls_pos.clone()))?);
-        args.push(runtime::literal_for(&d[4], &runtime::HostTensor::I32(batch.class_ids.clone()))?);
-        args.push(runtime::literal_for(&d[5], &runtime::HostTensor::I32(batch.labels.clone()))?);
-        args.extend(runtime::param_literals_view(&view, overrides)?);
-        let outs = eng.run(&args)?;
-        // outputs: (sum_ce over ALL rows, n_correct over ALL rows, scores)
-        // padded rows repeat a real example; recompute real-row stats from
-        // the returned scores to stay exact.
-        let scores = runtime::to_f32_vec(&outs[2])?;
+        // scores are per padded row; padded rows repeat a real example, so
+        // real-row stats are recomputed host-side to stay exact.
+        let scores = self.backend.cls_scores(&view, overrides, batch)?;
         let c = 8usize;
         let mut sum_ce = 0.0f32;
         let mut correct = 0usize;
@@ -163,11 +142,8 @@ impl Session {
         batch: &LmBatch,
     ) -> Result<(f32, f32)> {
         let view = params.params_view();
-        let eng = Self::engine(&self.loss, "loss")?;
-        let outs = eng.run(&self.lm_args(eng, &view, overrides, batch)?)?;
-        let sum_ce = runtime::to_f32_scalar(&outs[0])?;
-        let n_tok = runtime::to_f32_scalar(&outs[1])?.max(1.0);
-        let n_correct = runtime::to_f32_scalar(&outs[2])?;
+        let (sum_ce, n_tok, n_correct) = self.backend.lm_loss(&view, overrides, batch)?;
+        let n_tok = n_tok.max(1.0);
         Ok((sum_ce / n_tok, n_correct / n_tok))
     }
 
@@ -177,35 +153,7 @@ impl Session {
         params: &P,
         batch: &LmBatch,
     ) -> Result<(f32, Vec<Vec<f32>>)> {
-        let view = params.params_view();
-        let eng = Self::engine(&self.grad, "grad")?;
-        let outs = eng.run(&self.lm_args(eng, &view, None, batch)?)?;
-        let loss = runtime::to_f32_scalar(&outs[0])?;
-        let grads = outs[1..]
-            .iter()
-            .map(runtime::to_f32_vec)
-            .collect::<Result<Vec<_>>>()?;
-        Ok((loss, grads))
-    }
-
-    fn lm_args(
-        &self,
-        eng: &Engine,
-        view: &ParamsView<'_>,
-        overrides: Option<&[Vec<i8>]>,
-        batch: &LmBatch,
-    ) -> Result<Vec<xla::Literal>> {
-        let d = &eng.meta.data_inputs;
-        let mut args = Vec::with_capacity(5 + view.store.entries.len());
-        args.push(runtime::literal_for(&d[0], &runtime::HostTensor::I32(batch.tokens.clone()))?);
-        args.push(runtime::literal_for(&d[1], &runtime::HostTensor::I32(batch.pos_ids.clone()))?);
-        args.push(runtime::literal_for(&d[2], &runtime::HostTensor::F32(batch.mask.clone()))?);
-        args.push(runtime::literal_for(&d[3], &runtime::HostTensor::I32(batch.targets.clone()))?);
-        args.push(runtime::literal_for(
-            &d[4],
-            &runtime::HostTensor::F32(batch.loss_mask.clone()),
-        )?);
-        args.extend(runtime::param_literals_view(view, overrides)?);
-        Ok(args)
+        let view: ParamsView<'_> = params.params_view();
+        self.backend.lm_grads(&view, batch)
     }
 }

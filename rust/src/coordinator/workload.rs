@@ -24,9 +24,9 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::encode::{ClsBatch, GenBatch};
 use crate::coordinator::finetune::FinetuneCfg;
 use crate::coordinator::session::{EngineSet, Session};
+use crate::runtime::encode::{ClsBatch, GenBatch};
 use crate::model::ParamsView;
 use crate::opt::{apply_perturbation_into, KernelPolicy, PopulationSpec};
 use crate::rng::SplitMix64;

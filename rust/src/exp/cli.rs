@@ -12,7 +12,7 @@ use crate::coordinator::{
 use crate::model::{checkpoint, init::init_fp, AsParams, ParamStore};
 use crate::opt::EsHyper;
 use crate::quant::Format;
-use crate::runtime::Manifest;
+use crate::runtime::{BackendPolicy, Manifest};
 use crate::tasks::{cls_task, gen_task, is_cls_task};
 use crate::util::args::Args;
 
@@ -158,6 +158,8 @@ pub struct FtArgs {
     pub task: String,
     pub format: Format,
     pub variant: Variant,
+    /// Forward backend: auto (default) | native | pjrt.
+    pub backend: BackendPolicy,
     pub cfg: FinetuneCfg,
     pub pretrain_steps: usize,
     pub k_shot: usize,
@@ -169,6 +171,7 @@ pub fn parse_ft_args(args: &mut Args) -> Result<FtArgs> {
     let task = args.get_or("task", "countdown");
     let format = Format::parse(&args.get_or("format", "int4"))?;
     let variant = Variant::parse(&args.get_or("variant", "qes"))?;
+    let backend = BackendPolicy::parse(&args.get_or("backend", "auto"))?;
     let hyper = EsHyper {
         sigma: args.get_f32("sigma", 0.01)?,
         alpha: args.get_f32("alpha", 5e-4)?,
@@ -193,6 +196,7 @@ pub fn parse_ft_args(args: &mut Args) -> Result<FtArgs> {
         task,
         format,
         variant,
+        backend,
         cfg,
         pretrain_steps: args.get_usize("pretrain-steps", 400)?,
         k_shot: args.get_usize("k-shot", 16)?,
@@ -211,10 +215,13 @@ pub fn cmd_finetune(mut args: Args) -> Result<()> {
         Variant::Quzo => "quzo",
         Variant::QesAdaptive => "qes-adaptive",
     };
-    // ONE loop for every scenario: the task name picks the Workload impl.
+    // ONE loop for every scenario: the task name picks the Workload impl
+    // and --backend picks the runtime (native default on offline builds).
     let mcfg = man.config(&fa.size)?.clone();
     let workload = workload_for(&fa.task, &mcfg, &fa.cfg, fa.k_shot)?;
-    let session = Session::new(&man, &fa.size, fa.format, workload.engines())?;
+    let session =
+        Session::with_policy(&man, &fa.size, fa.format, workload.engines(), fa.backend)?;
+    println!("[finetune] backend: {}", session.backend_name());
     let (log, store) =
         finetune_store(&session, workload.as_ref(), store0, fa.variant, &fa.cfg, None)?;
     let dir = run_dir(&fa.size, &fa.task);

@@ -10,7 +10,7 @@ pub mod gptq;
 pub mod pack;
 
 pub use gptq::gptq_quantize;
-pub use pack::{pack_int4, unpack_int4};
+pub use pack::{pack_int4, unpack_int4, unpack_int4_dot, unpack_int4_row};
 
 /// The quantization formats evaluated in the paper (Tables 1-2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

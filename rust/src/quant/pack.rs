@@ -45,6 +45,52 @@ fn sign_extend4(nib: u8) -> i8 {
     ((nib << 4) as i8) >> 4
 }
 
+#[inline]
+fn nibble_at(bytes: &[u8], i: usize) -> i8 {
+    let b = bytes[i / 2];
+    sign_extend4(if i % 2 == 0 { b & 0x0f } else { b >> 4 })
+}
+
+/// Row-gather for the fused GEMM inner loop: unpack `out.len()` int4
+/// values starting at flat element `start` into caller-owned scratch —
+/// one weight row per call, no full-slice unpack, no allocation.
+pub fn unpack_int4_row(bytes: &[u8], start: usize, out: &mut [i8]) {
+    if start % 2 == 0 {
+        // aligned fast path: whole bytes, two lanes at a time
+        let mut i = 0;
+        let mut byte = start / 2;
+        while i + 1 < out.len() {
+            let b = bytes[byte];
+            out[i] = sign_extend4(b & 0x0f);
+            out[i + 1] = sign_extend4(b >> 4);
+            i += 2;
+            byte += 1;
+        }
+        if i < out.len() {
+            out[i] = sign_extend4(bytes[byte] & 0x0f);
+        }
+    } else {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = nibble_at(bytes, start + j);
+        }
+    }
+}
+
+/// Fused gather + dot over a nibble-packed buffer:
+/// `sum_j x[j] * q[start + j]`, accumulated in f32 in index order
+/// (deterministic for any caller partitioning). The row-major GEMM in
+/// `runtime::native::gemm` uses the axpy formulation over
+/// [`unpack_int4_row`]; this is the companion primitive for K-major
+/// (transposed-weight) consumers, and the bit-exactness reference the
+/// property tests pin both against.
+pub fn unpack_int4_dot(bytes: &[u8], start: usize, x: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (j, &xv) in x.iter().enumerate() {
+        acc += xv * nibble_at(bytes, start + j) as f32;
+    }
+    acc
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +176,44 @@ mod tests {
             // each value alone exercises the lo lane + pad
             assert_eq!(unpack_int4(&pack_int4(&[v]), 1), vec![v], "value {}", v);
         }
+    }
+
+    #[test]
+    fn prop_row_gather_and_dot_match_scalar_reference() {
+        // The GEMM inner-loop primitives must agree with the scalar
+        // reference (full-slice unpack) for EVERY window — in particular
+        // odd `start` (the misaligned half-byte path) and windows ending
+        // mid-byte.
+        prop_check("unpack_int4_row/dot vs full unpack", 200, |g| {
+            let n = g.usize_in(1, 300);
+            let q = g.vec_i8(n, -8, 7);
+            let packed = pack_int4(&q);
+            let reference = unpack_int4(&packed, n); // scalar reference
+            let start = g.usize_in(0, n - 1);
+            let len = g.usize_in(0, n - start);
+            let mut row = vec![0i8; len];
+            unpack_int4_row(&packed, start, &mut row);
+            if row != reference[start..start + len] {
+                return Err(format!(
+                    "row gather mismatch at start={} len={} (n={})",
+                    start, len, n
+                ));
+            }
+            // fused dot == dot over the reference window, bit-for-bit
+            // (both accumulate in index order)
+            let x = g.vec_f32(len, -2.0, 2.0);
+            let got = unpack_int4_dot(&packed, start, &x);
+            let mut want = 0.0f32;
+            for (j, &xv) in x.iter().enumerate() {
+                want += xv * reference[start + j] as f32;
+            }
+            if got.to_bits() != want.to_bits() {
+                return Err(format!(
+                    "dot mismatch at start={} len={}: {} vs {}",
+                    start, len, got, want
+                ));
+            }
+            Ok(())
+        });
     }
 }

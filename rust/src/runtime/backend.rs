@@ -1,0 +1,155 @@
+//! The `ForwardBackend` trait: one contract for executing the model's
+//! forward graphs (gen / cls / loss / grad), implemented by every runtime.
+//!
+//! Two backends ship today:
+//!
+//! * [`crate::runtime::pjrt::PjrtBackend`] — the AOT-compiled HLO path
+//!   over a PJRT client (requires the real `xla` bindings);
+//! * [`crate::runtime::native::NativeBackend`] — a pure-Rust interpreter
+//!   of the manifest's `ModelConfig` with a fused dequant-GEMM that reads
+//!   the packed lattice directly (runs everywhere, including the offline
+//!   build).
+//!
+//! Both consume the same inputs the artifacts define: batches from
+//! [`crate::runtime::encode`] plus a [`ParamsView`] of the weights (plain
+//! store, sharded plane, or snapshot) with optional per-member lattice
+//! overrides. The coordinator (`Session`, the worker pool, workloads) is
+//! generic over this trait and picks an impl via [`BackendPolicy`].
+
+use anyhow::Result;
+
+use crate::model::ParamsView;
+use crate::runtime::encode::{ClsBatch, GenBatch, LmBatch};
+use crate::runtime::manifest::ModelConfig;
+
+/// Which backend a `Session` (or pool worker) should execute on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendPolicy {
+    /// Native by default; PJRT when a real runtime backs the `xla` crate.
+    #[default]
+    Auto,
+    /// Force the pure-Rust interpreter (works everywhere).
+    Native,
+    /// Force the PJRT engine path (errors on the offline stub build).
+    Pjrt,
+}
+
+impl BackendPolicy {
+    pub fn parse(s: &str) -> Result<BackendPolicy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "auto" => BackendPolicy::Auto,
+            "native" => BackendPolicy::Native,
+            "pjrt" | "xla" => BackendPolicy::Pjrt,
+            other => anyhow::bail!("unknown backend {:?} (auto|native|pjrt)", other),
+        })
+    }
+
+    /// Resolve `Auto` against the linked `xla` runtime.
+    pub fn use_pjrt(self) -> bool {
+        match self {
+            BackendPolicy::Auto => xla::available(),
+            BackendPolicy::Native => false,
+            BackendPolicy::Pjrt => true,
+        }
+    }
+}
+
+/// Which graphs a session uses. Backend-neutral: the PJRT path compiles
+/// exactly these (compilation is ~1s each; pay only for what the run
+/// uses), and the native interpreter enforces the same declaration, so
+/// under-declaring fails identically on every backend.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineSet {
+    pub gen: bool,
+    pub loss: bool,
+    pub cls: bool,
+    pub grad: bool,
+}
+
+impl EngineSet {
+    pub fn gen_only() -> Self {
+        EngineSet { gen: true, ..Default::default() }
+    }
+    pub fn cls_only() -> Self {
+        EngineSet { cls: true, ..Default::default() }
+    }
+    pub fn pretrain() -> Self {
+        EngineSet { grad: true, loss: true, gen: true, ..Default::default() }
+    }
+    /// Every graph — raw/direct backend use (tests, benches, parity).
+    pub fn all() -> Self {
+        EngineSet { gen: true, loss: true, cls: true, grad: true }
+    }
+}
+
+/// A runtime able to execute the model's forward graphs over a parameter
+/// view. Implementations may be thread-local (the PJRT client is
+/// `Rc`-based); the worker pool builds one per thread.
+///
+/// `overrides[k]` (when present) replaces lattice tensor `k` of
+/// `view.store.lattice_indices()` — a population member's perturbed
+/// weights. Quantized formats only; fp views must pass `None`.
+pub trait ForwardBackend {
+    fn name(&self) -> &'static str;
+
+    fn cfg(&self) -> &ModelConfig;
+
+    /// Cap the backend's INTERNAL parallelism (the native GEMM's thread
+    /// fan-out). Results are invariant to it — the determinism contract
+    /// — so this is pure topology tuning: callers that are themselves
+    /// one of many parallel workers should set 1 to avoid nesting
+    /// thread pools. Default: no-op (the PJRT path has no host-side
+    /// threading to cap).
+    fn set_threads(&mut self, _threads: usize) {}
+
+    /// Batched autoregressive generation (the `gen` graph): returns the
+    /// decoded token ids, `i32[b_gen * t_dec]` row-major. `gumbel_seed =
+    /// None` decodes greedily.
+    fn generate(
+        &self,
+        view: &ParamsView<'_>,
+        overrides: Option<&[Vec<i8>]>,
+        batch: &GenBatch,
+        tau: f32,
+        gumbel_seed: Option<u64>,
+    ) -> Result<Vec<i32>>;
+
+    /// Verbalizer-classification scores (the `cls` graph): class-token
+    /// logits `f32[b_train * 8]` row-major, per example.
+    fn cls_scores(
+        &self,
+        view: &ParamsView<'_>,
+        overrides: Option<&[Vec<i8>]>,
+        batch: &ClsBatch,
+    ) -> Result<Vec<f32>>;
+
+    /// Teacher-forced LM loss sums (the `loss` graph):
+    /// `(sum_ce, n_tokens, n_correct)` over the loss-masked positions.
+    fn lm_loss(
+        &self,
+        view: &ParamsView<'_>,
+        overrides: Option<&[Vec<i8>]>,
+        batch: &LmBatch,
+    ) -> Result<(f32, f32, f32)>;
+
+    /// Mean loss + gradients for every parameter in store-entry order
+    /// (the `grad` graph; fp-format views only).
+    fn lm_grads(&self, view: &ParamsView<'_>, batch: &LmBatch) -> Result<(f32, Vec<Vec<f32>>)>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parses_and_resolves() {
+        assert_eq!(BackendPolicy::parse("native").unwrap(), BackendPolicy::Native);
+        assert_eq!(BackendPolicy::parse("PJRT").unwrap(), BackendPolicy::Pjrt);
+        assert_eq!(BackendPolicy::parse("auto").unwrap(), BackendPolicy::Auto);
+        assert!(BackendPolicy::parse("tpu").is_err());
+        assert!(!BackendPolicy::Native.use_pjrt());
+        assert!(BackendPolicy::Pjrt.use_pjrt());
+        // Auto follows the linked runtime (the offline stub reports false).
+        assert_eq!(BackendPolicy::Auto.use_pjrt(), xla::available());
+    }
+}

@@ -21,46 +21,77 @@ pub enum HostTensor {
     ScalarF32(f32),
 }
 
+/// Element types with a defined little-endian byte image — what the PJRT
+/// untyped-data constructor expects. The safe replacement for the
+/// `slice::from_raw_parts` byte reinterpretations the f32/i32/i8 literal
+/// arms used to duplicate. Costs one pre-sized buffer per literal (the
+/// price of safety without a cast crate); i8 lowers to a straight byte
+/// copy, and the runtime copies the bytes again on ingestion either way.
+trait ToLeBytes: Copy {
+    fn extend_le(v: &[Self], out: &mut Vec<u8>);
+}
+
+impl ToLeBytes for f32 {
+    fn extend_le(v: &[Self], out: &mut Vec<u8>) {
+        for x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+impl ToLeBytes for i32 {
+    fn extend_le(v: &[Self], out: &mut Vec<u8>) {
+        for x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+impl ToLeBytes for i8 {
+    fn extend_le(v: &[Self], out: &mut Vec<u8>) {
+        out.extend(v.iter().map(|&b| b as u8));
+    }
+}
+
+/// Little-endian byte image of a numeric slice.
+fn le_bytes<T: ToLeBytes>(v: &[T]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(std::mem::size_of_val(v));
+    T::extend_le(v, &mut out);
+    out
+}
+
+/// One shared literal constructor for every dtype arm.
+fn typed_literal<T: ToLeBytes>(
+    ty: xla::ElementType,
+    shape: &[usize],
+    v: &[T],
+) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(ty, shape, &le_bytes(v))?)
+}
+
 /// Build an xla literal matching an IoSpec.
 pub fn literal_for(spec: &IoSpec, t: &HostTensor) -> Result<xla::Literal> {
     let numel: usize = spec.shape.iter().product();
+    let check = |len: usize| -> Result<()> {
+        anyhow::ensure!(len == numel, "{}: got {} elems want {}", spec.name, len, numel);
+        Ok(())
+    };
     match (spec.dtype.as_str(), t) {
         ("f32", HostTensor::ScalarF32(v)) => {
             anyhow::ensure!(spec.shape.is_empty(), "{}: scalar for non-scalar spec", spec.name);
             Ok(xla::Literal::scalar(*v))
         }
         ("f32", HostTensor::F32(v)) => {
-            anyhow::ensure!(v.len() == numel, "{}: got {} elems want {}", spec.name, v.len(), numel);
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            };
-            Ok(xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F32,
-                &spec.shape,
-                bytes,
-            )?)
+            check(v.len())?;
+            typed_literal(xla::ElementType::F32, &spec.shape, v)
         }
         ("i32", HostTensor::I32(v)) => {
-            anyhow::ensure!(v.len() == numel, "{}: got {} elems want {}", spec.name, v.len(), numel);
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            };
-            Ok(xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::S32,
-                &spec.shape,
-                bytes,
-            )?)
+            check(v.len())?;
+            typed_literal(xla::ElementType::S32, &spec.shape, v)
         }
         ("i8", HostTensor::I8(v)) => {
-            anyhow::ensure!(v.len() == numel, "{}: got {} elems want {}", spec.name, v.len(), numel);
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len())
-            };
-            Ok(xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::S8,
-                &spec.shape,
-                bytes,
-            )?)
+            check(v.len())?;
+            typed_literal(xla::ElementType::S8, &spec.shape, v)
         }
         (dt, ht) => anyhow::bail!("{}: dtype {} incompatible with {:?}", spec.name, dt, ht),
     }
@@ -68,23 +99,12 @@ pub fn literal_for(spec: &IoSpec, t: &HostTensor) -> Result<xla::Literal> {
 
 /// Build a literal directly from a slice of i8 (lattice hot path).
 pub fn i8_literal(shape: &[usize], v: &[i8]) -> Result<xla::Literal> {
-    let bytes: &[u8] = unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::S8,
-        shape,
-        bytes,
-    )?)
+    typed_literal(xla::ElementType::S8, shape, v)
 }
 
 /// Build a literal directly from a slice of f32.
 pub fn f32_literal(shape: &[usize], v: &[f32]) -> Result<xla::Literal> {
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        shape,
-        bytes,
-    )?)
+    typed_literal(xla::ElementType::F32, shape, v)
 }
 
 /// A compiled artifact bound to a (thread-local) PJRT client.
@@ -214,4 +234,23 @@ pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
     let v = lit.to_vec::<f32>()?;
     anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
     Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn le_bytes_covers_every_literal_dtype() {
+        assert_eq!(le_bytes(&[1.5f32]), 1.5f32.to_le_bytes().to_vec());
+        assert_eq!(
+            le_bytes(&[-2i32, 3]),
+            [(-2i32).to_le_bytes(), 3i32.to_le_bytes()].concat()
+        );
+        assert_eq!(le_bytes(&[-1i8, 7]), vec![0xff, 0x07]);
+        assert!(le_bytes::<f32>(&[]).is_empty());
+        // 4-byte dtypes produce 4 bytes per element, i8 one
+        assert_eq!(le_bytes(&[0f32; 3]).len(), 12);
+        assert_eq!(le_bytes(&[0i8; 3]).len(), 3);
+    }
 }

@@ -239,25 +239,72 @@ impl Manifest {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use anyhow::{ensure, Context, Result};
 
-    #[test]
-    fn loads_real_manifest() {
-        let man = Manifest::load("artifacts/manifest.json").unwrap();
-        assert!(man.configs.contains_key("nano"));
-        let cfg = man.config("nano").unwrap();
-        assert_eq!(cfg.vocab, 48);
-        let a = man.artifact("nano", "wq", "gen").unwrap();
-        assert_eq!(a.data_inputs.len(), 4);
-        assert_eq!(a.outputs.len(), 1);
-        assert!(a.n_param_inputs > 0);
-        let metas = man.params("nano", "wq").unwrap();
-        assert_eq!(metas.len(), a.n_param_inputs);
+    // Tests return `Result` with per-step context instead of bare
+    // `.unwrap()` chains, so a manifest regression reports WHICH key
+    // failed instead of "unwrapped a None somewhere in line N".
+
+    fn load() -> Result<Manifest> {
+        Manifest::load("artifacts/manifest.json")
+            .context("loading artifacts/manifest.json (run `make artifacts`)")
     }
 
     #[test]
-    fn missing_artifact_errors() {
-        let man = Manifest::load("artifacts/manifest.json").unwrap();
-        assert!(man.artifact("nano", "wq", "nonexistent").is_err());
-        assert!(man.config("giant").is_err());
+    fn loads_real_manifest() -> Result<()> {
+        let man = load()?;
+        ensure!(man.configs.contains_key("nano"), "configs missing 'nano'");
+        let cfg = man.config("nano").context("config nano")?;
+        ensure!(cfg.vocab == 48, "nano vocab = {}, want 48", cfg.vocab);
+        let a = man.artifact("nano", "wq", "gen").context("artifact (nano, wq, gen)")?;
+        ensure!(
+            a.data_inputs.len() == 4,
+            "(nano, wq, gen) has {} data inputs, want 4",
+            a.data_inputs.len()
+        );
+        ensure!(a.outputs.len() == 1, "(nano, wq, gen) has {} outputs, want 1", a.outputs.len());
+        ensure!(a.n_param_inputs > 0, "(nano, wq, gen) reports zero param inputs");
+        let metas = man.params("nano", "wq").context("param layout (nano, wq)")?;
+        ensure!(
+            metas.len() == a.n_param_inputs,
+            "param list has {} entries but artifact expects {}",
+            metas.len(),
+            a.n_param_inputs
+        );
+        Ok(())
+    }
+
+    #[test]
+    fn lattice_accounting_is_consistent() -> Result<()> {
+        let man = load()?;
+        for size in ["nano", "micro"] {
+            let cfg = man.config(size).with_context(|| format!("config {}", size))?;
+            let metas = man.params(size, "wq").with_context(|| format!("params ({}, wq)", size))?;
+            let lattice: usize = metas
+                .iter()
+                .filter(|m| m.kind == "lattice_q")
+                .map(|m| m.shape.iter().product::<usize>())
+                .sum();
+            ensure!(
+                lattice == cfg.lattice_params,
+                "{}: lattice_q tensors sum to {} but config says {}",
+                size,
+                lattice,
+                cfg.lattice_params
+            );
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn missing_artifact_errors() -> Result<()> {
+        let man = load()?;
+        ensure!(
+            man.artifact("nano", "wq", "nonexistent").is_err(),
+            "bogus artifact lookup must fail"
+        );
+        ensure!(man.config("giant").is_err(), "bogus config lookup must fail");
+        ensure!(man.params("nano", "int7").is_err(), "bogus format lookup must fail");
+        Ok(())
     }
 }

@@ -1,21 +1,40 @@
-//! PJRT runtime: manifest-driven artifact loading and execution.
+//! Runtime layer: every way the model's forward graphs can execute.
 //!
-//! Layer-3's bridge to the AOT-compiled Layer-2/1 compute. HLO text is the
-//! interchange format (see DESIGN.md §7 and python/compile/aot.py).
+//! The execution contract is the [`ForwardBackend`] trait (`backend.rs`):
+//! compile/load per the `Manifest`, run gen/cls/loss/grad over a
+//! [`crate::model::ParamsView`]. Two implementations ship:
+//!
+//! * [`PjrtBackend`] (`pjrt.rs` over `engine.rs`) — AOT-compiled HLO
+//!   artifacts on a PJRT client (see DESIGN.md §7 and
+//!   python/compile/aot.py); requires the real `xla` bindings.
+//! * [`NativeBackend`] (`native/`) — a pure-Rust interpreter of the
+//!   manifest's `ModelConfig` with a fused dequant-GEMM over the packed
+//!   lattice; runs everywhere, including the offline stub build.
+//!
+//! `encode.rs` holds the host-side batch encoders both backends consume.
 
+pub mod backend;
+pub mod encode;
 pub mod engine;
 pub mod manifest;
+pub mod native;
+pub mod pjrt;
 
 /// Whether a real PJRT runtime backs the `xla` dependency. The offline
-/// build links a stub (`rust/vendor/xla`) and reports `false`; engine-bound
-/// tests and tools gate themselves on this instead of failing deep inside
-/// `Session` construction.
+/// build links a stub (`rust/vendor/xla`) and reports `false`;
+/// [`BackendPolicy::Auto`] falls back to the native backend there, and
+/// PJRT-only assertions (cross-backend parity) gate on this instead of
+/// failing deep inside engine construction.
 pub fn backend_available() -> bool {
     xla::available()
 }
 
+pub use backend::{BackendPolicy, EngineSet, ForwardBackend};
+pub use encode::{gumbel_noise, ClsBatch, GenBatch, LmBatch};
 pub use engine::{
     f32_literal, i8_literal, literal_for, param_literals, param_literals_view, to_f32_scalar,
     to_f32_vec, to_i32_vec, Engine, HostTensor,
 };
 pub use manifest::{ArtifactMeta, IoSpec, Manifest, ModelConfig, ParamMeta};
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;

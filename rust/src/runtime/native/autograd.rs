@@ -1,0 +1,638 @@
+//! Reverse-mode gradients for the fp-format forward pass — the native
+//! equivalent of the AOT `grad` artifact (`jax.value_and_grad` over
+//! model.py's `mean_loss`). Powers pretraining and the FO/STE baselines
+//! on the offline build.
+//!
+//! The forward here re-runs the exact op sequence of
+//! [`super::NativeBackend`]'s full-sequence pass while caching every
+//! intermediate the backward needs (layernorm statistics, attention
+//! probabilities, pre-GELU activations). Gradients come back in
+//! store-entry order, ready for `opt::Adam::step`. Single-threaded: the
+//! pretraining sizes are tiny and grad determinism needs no tuning knob.
+
+use anyhow::Result;
+
+use crate::model::ParamStore;
+use crate::runtime::encode::LmBatch;
+use crate::runtime::manifest::ModelConfig;
+
+use super::{gelu, softmax_inplace, LN_EPS, NEG_INF};
+
+/// `(mean loss, per-entry gradients)` for a teacher-forced LM batch.
+pub fn lm_grads(
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    batch: &LmBatch,
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    let refs = ModelRefs::resolve(cfg, store)?;
+    let (b, s) = (cfg.b_train, cfg.s_train);
+    let d = cfg.d_model;
+    let f = cfg.d_ff;
+    let v = cfg.vocab;
+    let heads = cfg.n_heads;
+    let dh = d / heads;
+    let rows = b * s;
+    let w = |i: usize| store.entries[i].data.as_f32();
+
+    // ---- forward with caches -------------------------------------------
+    let tok_emb = w(refs.tok_emb);
+    let pos_emb = w(refs.pos_emb);
+    let mut h = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let tok = batch.tokens[r] as usize;
+        let pos = batch.pos_ids[r] as usize;
+        for j in 0..d {
+            h[r * d + j] = tok_emb[tok * d + j] + pos_emb[pos * d + j];
+        }
+    }
+    let mut caches: Vec<LayerCache> = Vec::with_capacity(refs.layers.len());
+    for lr in &refs.layers {
+        let mut c = LayerCache::new(rows, d, f, b, heads, s);
+        layernorm_fwd(&h, d, w(lr.ln1_g), w(lr.ln1_b), &mut c.x1, &mut c.xhat1, &mut c.rstd1);
+        matmul_ab(&c.x1, w(lr.wq), rows, d, d, &mut c.q);
+        matmul_ab(&c.x1, w(lr.wk), rows, d, d, &mut c.k);
+        matmul_ab(&c.x1, w(lr.wv), rows, d, d, &mut c.v);
+        attend_full_cached(
+            b, s, heads, dh, &c.q, &c.k, &c.v, &batch.mask, &mut c.att, &mut c.amerge,
+        );
+        let mut proj = vec![0.0f32; rows * d];
+        matmul_ab(&c.amerge, w(lr.wo), rows, d, d, &mut proj);
+        for i in 0..rows * d {
+            h[i] += proj[i];
+        }
+        layernorm_fwd(&h, d, w(lr.ln2_g), w(lr.ln2_b), &mut c.x2, &mut c.xhat2, &mut c.rstd2);
+        matmul_ab(&c.x2, w(lr.w1), rows, d, f, &mut c.u);
+        for i in 0..rows * f {
+            c.gu[i] = gelu(c.u[i]);
+        }
+        let mut mlp = vec![0.0f32; rows * d];
+        matmul_ab(&c.gu, w(lr.w2), rows, f, d, &mut mlp);
+        for i in 0..rows * d {
+            h[i] += mlp[i];
+        }
+        caches.push(c);
+    }
+    // final norm + weight-tied head
+    let mut hf = vec![0.0f32; rows * d];
+    let mut xhatf = vec![0.0f32; rows * d];
+    let mut rstdf = vec![0.0f32; rows];
+    layernorm_fwd(&h, d, w(refs.lnf_g), w(refs.lnf_b), &mut hf, &mut xhatf, &mut rstdf);
+    // logits[r, c] = hf[r, :] . tok_emb[c, :]
+    let mut logits = vec![0.0f32; rows * v];
+    for r in 0..rows {
+        for c in 0..v {
+            let mut acc = 0.0f32;
+            for j in 0..d {
+                acc += hf[r * d + j] * tok_emb[c * d + j];
+            }
+            logits[r * v + c] = acc;
+        }
+    }
+    // masked CE + dlogits in one pass
+    let n_tok: f32 = batch.loss_mask.iter().sum();
+    let n_tok = n_tok.max(1.0);
+    let mut sum_ce = 0.0f32;
+    let mut dlogits = vec![0.0f32; rows * v];
+    for r in 0..rows {
+        let lm = batch.loss_mask[r];
+        if lm == 0.0 {
+            continue;
+        }
+        let row = &logits[r * v..(r + 1) * v];
+        let target = batch.targets[r] as usize;
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for &l in row {
+            sum += (l - m).exp();
+        }
+        let logz = m + sum.ln();
+        sum_ce += (logz - row[target]) * lm;
+        let gscale = lm / n_tok;
+        for c in 0..v {
+            let p = (row[c] - logz).exp();
+            dlogits[r * v + c] =
+                gscale * (p - if c == target { 1.0 } else { 0.0 });
+        }
+    }
+    let loss = sum_ce / n_tok;
+
+    // ---- backward -------------------------------------------------------
+    let mut grads: Vec<Vec<f32>> =
+        store.entries.iter().map(|e| vec![0.0f32; e.numel()]).collect();
+
+    // head: dhf = dlogits @ E; dE += dlogits^T @ hf (weight tying)
+    let mut dhf = vec![0.0f32; rows * d];
+    matmul_ab(&dlogits, tok_emb, rows, v, d, &mut dhf);
+    matmul_at_b(&dlogits, &hf, rows, v, d, &mut grads[refs.tok_emb]);
+    // lnf
+    let mut dhid = vec![0.0f32; rows * d];
+    {
+        let (dg, db) = two_grads(&mut grads, refs.lnf_g, refs.lnf_b);
+        layernorm_bwd(&dhf, &xhatf, &rstdf, w(refs.lnf_g), d, dg, db, &mut dhid);
+    }
+
+    for (lr, c) in refs.layers.iter().zip(caches.iter()).rev() {
+        // MLP block: h_out = h_mid + gelu(x2 @ W1) @ W2
+        matmul_at_b(&c.gu, &dhid, rows, f, d, &mut grads[lr.w2]);
+        let mut dgu = vec![0.0f32; rows * f];
+        matmul_a_bt(&dhid, w(lr.w2), rows, f, d, &mut dgu);
+        let mut du = dgu;
+        for i in 0..rows * f {
+            du[i] *= gelu_grad(c.u[i]);
+        }
+        matmul_at_b(&c.x2, &du, rows, d, f, &mut grads[lr.w1]);
+        let mut dx2 = vec![0.0f32; rows * d];
+        matmul_a_bt(&du, w(lr.w1), rows, d, f, &mut dx2);
+        // ln2: residual grad + norm backward into dh_mid
+        let mut dh_mid = dhid.clone();
+        {
+            let (dg, db) = two_grads(&mut grads, lr.ln2_g, lr.ln2_b);
+            layernorm_bwd(&dx2, &c.xhat2, &c.rstd2, w(lr.ln2_g), d, dg, db, &mut dh_mid);
+        }
+        // attention output projection
+        matmul_at_b(&c.amerge, &dh_mid, rows, d, d, &mut grads[lr.wo]);
+        let mut da = vec![0.0f32; rows * d];
+        matmul_a_bt(&dh_mid, w(lr.wo), rows, d, d, &mut da);
+        // softmax-attention backward per (batch, head)
+        let mut dq = vec![0.0f32; rows * d];
+        let mut dk = vec![0.0f32; rows * d];
+        let mut dv = vec![0.0f32; rows * d];
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut datt = vec![0.0f32; s * s];
+        let mut dlog = vec![0.0f32; s * s];
+        for bi in 0..b {
+            for hd in 0..heads {
+                let att = &c.att[((bi * heads + hd) * s) * s..((bi * heads + hd) * s + s) * s];
+                let off = |sq: usize| (bi * s + sq) * d + hd * dh;
+                for sq in 0..s {
+                    for sk in 0..s {
+                        let mut acc = 0.0f32;
+                        let (ao, vo) = (off(sq), off(sk));
+                        for i in 0..dh {
+                            acc += da[ao + i] * c.v[vo + i];
+                        }
+                        datt[sq * s + sk] = acc;
+                    }
+                }
+                // dv[sk] += att^T @ da
+                for sk in 0..s {
+                    let vo = off(sk);
+                    for sq in 0..s {
+                        let a = att[sq * s + sk];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let ao = off(sq);
+                        for i in 0..dh {
+                            dv[vo + i] += a * da[ao + i];
+                        }
+                    }
+                }
+                // softmax: dlog = att * (datt - rowsum(datt * att))
+                for sq in 0..s {
+                    let mut dot = 0.0f32;
+                    for sk in 0..s {
+                        dot += datt[sq * s + sk] * att[sq * s + sk];
+                    }
+                    for sk in 0..s {
+                        dlog[sq * s + sk] = att[sq * s + sk] * (datt[sq * s + sk] - dot);
+                    }
+                }
+                // dq = dlog @ k * scale; dk = dlog^T @ q * scale
+                for sq in 0..s {
+                    let qo = off(sq);
+                    for sk in 0..s {
+                        let g = dlog[sq * s + sk] * scale;
+                        if g == 0.0 {
+                            continue;
+                        }
+                        let ko = off(sk);
+                        for i in 0..dh {
+                            dq[qo + i] += g * c.k[ko + i];
+                            dk[ko + i] += g * c.q[qo + i];
+                        }
+                    }
+                }
+            }
+        }
+        // projections into x1
+        matmul_at_b(&c.x1, &dq, rows, d, d, &mut grads[lr.wq]);
+        matmul_at_b(&c.x1, &dk, rows, d, d, &mut grads[lr.wk]);
+        matmul_at_b(&c.x1, &dv, rows, d, d, &mut grads[lr.wv]);
+        let mut dx1 = vec![0.0f32; rows * d];
+        let mut tmp = vec![0.0f32; rows * d];
+        matmul_a_bt(&dq, w(lr.wq), rows, d, d, &mut dx1);
+        matmul_a_bt(&dk, w(lr.wk), rows, d, d, &mut tmp);
+        for i in 0..rows * d {
+            dx1[i] += tmp[i];
+        }
+        matmul_a_bt(&dv, w(lr.wv), rows, d, d, &mut tmp);
+        for i in 0..rows * d {
+            dx1[i] += tmp[i];
+        }
+        // ln1: residual grad + norm backward into dh_in
+        let mut dh_in = dh_mid;
+        {
+            let (dg, db) = two_grads(&mut grads, lr.ln1_g, lr.ln1_b);
+            layernorm_bwd(&dx1, &c.xhat1, &c.rstd1, w(lr.ln1_g), d, dg, db, &mut dh_in);
+        }
+        dhid = dh_in;
+    }
+    // embeddings
+    for r in 0..rows {
+        let tok = batch.tokens[r] as usize;
+        let pos = batch.pos_ids[r] as usize;
+        for j in 0..d {
+            grads[refs.tok_emb][tok * d + j] += dhid[r * d + j];
+            grads[refs.pos_emb][pos * d + j] += dhid[r * d + j];
+        }
+    }
+    Ok((loss, grads))
+}
+
+/// GELU' for the tanh approximation used in the forward.
+#[inline]
+fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    const A: f32 = 0.044715;
+    let t = (C * (x + A * x * x * x)).tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * C * (1.0 + 3.0 * A * x * x)
+}
+
+/// Entry indices of every parameter, resolved once per call.
+struct ModelRefs {
+    tok_emb: usize,
+    pos_emb: usize,
+    lnf_g: usize,
+    lnf_b: usize,
+    layers: Vec<LayerRefs>,
+}
+
+struct LayerRefs {
+    ln1_g: usize,
+    ln1_b: usize,
+    wq: usize,
+    wk: usize,
+    wv: usize,
+    wo: usize,
+    ln2_g: usize,
+    ln2_b: usize,
+    w1: usize,
+    w2: usize,
+}
+
+impl ModelRefs {
+    fn resolve(cfg: &ModelConfig, store: &ParamStore) -> Result<ModelRefs> {
+        let idx = |name: String| -> Result<usize> {
+            store
+                .entries
+                .iter()
+                .position(|e| e.name == name)
+                .ok_or_else(|| anyhow::anyhow!("param {:?} missing from fp store", name))
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = format!("layers.{}.", i);
+            layers.push(LayerRefs {
+                ln1_g: idx(format!("{}ln1.g", p))?,
+                ln1_b: idx(format!("{}ln1.b", p))?,
+                wq: idx(format!("{}attn.wq", p))?,
+                wk: idx(format!("{}attn.wk", p))?,
+                wv: idx(format!("{}attn.wv", p))?,
+                wo: idx(format!("{}attn.wo", p))?,
+                ln2_g: idx(format!("{}ln2.g", p))?,
+                ln2_b: idx(format!("{}ln2.b", p))?,
+                w1: idx(format!("{}mlp.w1", p))?,
+                w2: idx(format!("{}mlp.w2", p))?,
+            });
+        }
+        Ok(ModelRefs {
+            tok_emb: idx("tok_emb".to_string())?,
+            pos_emb: idx("pos_emb".to_string())?,
+            lnf_g: idx("lnf.g".to_string())?,
+            lnf_b: idx("lnf.b".to_string())?,
+            layers,
+        })
+    }
+}
+
+/// Per-layer forward intermediates the backward pass consumes.
+struct LayerCache {
+    xhat1: Vec<f32>,
+    rstd1: Vec<f32>,
+    x1: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    att: Vec<f32>,
+    amerge: Vec<f32>,
+    xhat2: Vec<f32>,
+    rstd2: Vec<f32>,
+    x2: Vec<f32>,
+    u: Vec<f32>,
+    gu: Vec<f32>,
+}
+
+impl LayerCache {
+    fn new(rows: usize, d: usize, f: usize, b: usize, heads: usize, s: usize) -> LayerCache {
+        LayerCache {
+            xhat1: vec![0.0; rows * d],
+            rstd1: vec![0.0; rows],
+            x1: vec![0.0; rows * d],
+            q: vec![0.0; rows * d],
+            k: vec![0.0; rows * d],
+            v: vec![0.0; rows * d],
+            att: vec![0.0; b * heads * s * s],
+            amerge: vec![0.0; rows * d],
+            xhat2: vec![0.0; rows * d],
+            rstd2: vec![0.0; rows],
+            x2: vec![0.0; rows * d],
+            u: vec![0.0; rows * f],
+            gu: vec![0.0; rows * f],
+        }
+    }
+}
+
+/// Two disjoint gradient buffers out of the per-entry vec (split_at_mut
+/// dance keyed by entry index order).
+fn two_grads(grads: &mut [Vec<f32>], a: usize, b: usize) -> (&mut [f32], &mut [f32]) {
+    assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = grads.split_at_mut(b);
+        (lo[a].as_mut_slice(), hi[0].as_mut_slice())
+    } else {
+        let (lo, hi) = grads.split_at_mut(a);
+        (hi[0].as_mut_slice(), lo[b].as_mut_slice())
+    }
+}
+
+/// `out = x[M,K] @ w[K,N]` (overwrite).
+fn matmul_ab(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for r in 0..m {
+        let orow = &mut out[r * n..(r + 1) * n];
+        orow.fill(0.0);
+        for kk in 0..k {
+            let xv = x[r * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[kk * n..(kk + 1) * n];
+            for c in 0..n {
+                orow[c] += xv * wr[c];
+            }
+        }
+    }
+}
+
+/// `dx[M,K] = dy[M,N] @ w[K,N]^T` (overwrite).
+fn matmul_a_bt(dy: &[f32], w: &[f32], m: usize, k: usize, n: usize, dx: &mut [f32]) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(dx.len(), m * k);
+    for r in 0..m {
+        let dyr = &dy[r * n..(r + 1) * n];
+        let dxr = &mut dx[r * k..(r + 1) * k];
+        for kk in 0..k {
+            let wr = &w[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for c in 0..n {
+                acc += dyr[c] * wr[c];
+            }
+            dxr[kk] = acc;
+        }
+    }
+}
+
+/// `dw[K,N] += x[M,K]^T @ y[M,N]` (accumulate).
+fn matmul_at_b(x: &[f32], y: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(y.len(), m * n);
+    debug_assert_eq!(dw.len(), k * n);
+    for r in 0..m {
+        let yr = &y[r * n..(r + 1) * n];
+        for kk in 0..k {
+            let xv = x[r * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let dwr = &mut dw[kk * n..(kk + 1) * n];
+            for c in 0..n {
+                dwr[c] += xv * yr[c];
+            }
+        }
+    }
+}
+
+/// Layernorm forward caching `xhat` and `rstd` per row.
+fn layernorm_fwd(
+    x: &[f32],
+    d: usize,
+    g: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    xhat: &mut [f32],
+    rstd: &mut [f32],
+) {
+    for (r, (xr, or)) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)).enumerate() {
+        let mut mu = 0.0f32;
+        for &v in xr {
+            mu += v;
+        }
+        mu /= d as f32;
+        let mut var = 0.0f32;
+        for &v in xr {
+            let c = v - mu;
+            var += c * c;
+        }
+        var /= d as f32;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        rstd[r] = rs;
+        for j in 0..d {
+            let xh = (xr[j] - mu) * rs;
+            xhat[r * d + j] = xh;
+            or[j] = xh * g[j] + b[j];
+        }
+    }
+}
+
+/// Layernorm backward: `dg`/`db` accumulate, `dx` accumulates (residual
+/// paths add into an existing gradient).
+fn layernorm_bwd(
+    dy: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    g: &[f32],
+    d: usize,
+    dg: &mut [f32],
+    db: &mut [f32],
+    dx: &mut [f32],
+) {
+    let rows = rstd.len();
+    for r in 0..rows {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xhr = &xhat[r * d..(r + 1) * d];
+        let mut m1 = 0.0f32;
+        let mut m2 = 0.0f32;
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            m1 += dxh;
+            m2 += dxh * xhr[j];
+            dg[j] += dyr[j] * xhr[j];
+            db[j] += dyr[j];
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        let rs = rstd[r];
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            dx[r * d + j] += rs * (dxh - m1 - xhr[j] * m2);
+        }
+    }
+}
+
+/// Full-sequence attention that also records the softmax probabilities
+/// (same math as [`super::attend_full`], plus the `att` cache).
+#[allow(clippy::too_many_arguments)]
+fn attend_full_cached(
+    b: usize,
+    s: usize,
+    heads: usize,
+    dh: usize,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: &[f32],
+    att: &mut [f32],
+    out: &mut [f32],
+) {
+    let d = heads * dh;
+    out.fill(0.0);
+    let scale = 1.0 / (dh as f32).sqrt();
+    for bi in 0..b {
+        for h in 0..heads {
+            for sq in 0..s {
+                let qo = (bi * s + sq) * d + h * dh;
+                let arow =
+                    &mut att[((bi * heads + h) * s + sq) * s..((bi * heads + h) * s + sq + 1) * s];
+                for sk in 0..s {
+                    let bias =
+                        if sk <= sq && mask[bi * s + sk] > 0.0 { 0.0 } else { NEG_INF };
+                    let ko = (bi * s + sk) * d + h * dh;
+                    let mut dot = 0.0f32;
+                    for i in 0..dh {
+                        dot += q[qo + i] * k[ko + i];
+                    }
+                    arow[sk] = dot * scale + bias;
+                }
+                softmax_inplace(arow);
+                // exact op sequence of super::attend_full — the two
+                // forwards must never diverge (cross-pinned by
+                // python/tools/check_native_semantics.py and the
+                // loss_matches_forward_backend test below)
+                let oo = (bi * s + sq) * d + h * dh;
+                for sk in 0..s {
+                    let wgt = arow[sk];
+                    let vo = (bi * s + sk) * d + h * dh;
+                    for i in 0..dh {
+                        out[oo + i] += wgt * v[vo + i];
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_fp;
+    use crate::quant::Format;
+    use crate::runtime::manifest::Manifest;
+
+    fn setup() -> (ModelConfig, ParamStore, LmBatch) {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        let cfg = man.config("nano").unwrap().clone();
+        let mut store = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
+        init_fp(&mut store, 21);
+        let task = crate::tasks::gen_task("countdown", cfg.s_prompt, cfg.t_dec).unwrap();
+        let mut rng = crate::rng::SplitMix64::new(13);
+        let pairs: Vec<(String, String)> =
+            (0..cfg.b_train).map(|_| task.supervised(&mut rng)).collect();
+        let batch = LmBatch::build(&cfg, &pairs);
+        (cfg, store, batch)
+    }
+
+    /// Central-difference check of a handful of parameters spread across
+    /// every tensor family — the strongest correctness evidence a
+    /// hand-written backward can carry.
+    #[test]
+    fn grads_match_finite_differences() {
+        let (cfg, mut store, batch) = setup();
+        let (_, grads) = lm_grads(&cfg, &store, &batch).unwrap();
+        // (entry, element): embeddings, a norm gain, each weight kind.
+        // Probe each tensor's largest-|grad| element so the loss delta
+        // clears f32 resolution of the ~ln(48) loss.
+        let names = [
+            "tok_emb",
+            "pos_emb",
+            "layers.0.ln1.g",
+            "layers.0.attn.wq",
+            "layers.0.attn.wo",
+            "layers.1.mlp.w1",
+            "layers.1.mlp.w2",
+            "lnf.b",
+        ];
+        let probes: Vec<(usize, usize)> = names
+            .iter()
+            .map(|n| {
+                let i = store.entries.iter().position(|e| e.name == *n).unwrap();
+                let j = grads[i]
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+                    .unwrap()
+                    .0;
+                (i, j)
+            })
+            .collect();
+        let eps = 1e-2f32;
+        for (ei, j) in probes {
+            let orig = store.entries[ei].data.as_f32()[j];
+            store.entries[ei].data.as_f32_mut()[j] = orig + eps;
+            let (lp, _) = lm_grads(&cfg, &store, &batch).unwrap();
+            store.entries[ei].data.as_f32_mut()[j] = orig - eps;
+            let (lms, _) = lm_grads(&cfg, &store, &batch).unwrap();
+            store.entries[ei].data.as_f32_mut()[j] = orig;
+            let fd = (lp - lms) / (2.0 * eps);
+            let an = grads[ei][j];
+            let name = &store.entries[ei].name;
+            // f32 central differences are noisy; accept 10% + abs floor
+            assert!(
+                (fd - an).abs() <= 0.1 * fd.abs().max(an.abs()).max(0.02),
+                "{}[{}]: analytic {} vs finite-diff {}",
+                name,
+                j,
+                an,
+                fd
+            );
+        }
+    }
+
+    #[test]
+    fn loss_matches_forward_backend() {
+        use crate::model::AsParams;
+        use crate::runtime::backend::ForwardBackend;
+        let (cfg, store, batch) = setup();
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        let nb = super::super::NativeBackend::new(&man, "nano", Format::Fp32).unwrap();
+        let (sum_ce, n_tok, _) = nb.lm_loss(&store.params_view(), None, &batch).unwrap();
+        let (loss, grads) = lm_grads(&cfg, &store, &batch).unwrap();
+        assert!((loss - sum_ce / n_tok.max(1.0)).abs() < 1e-4, "{} vs {}", loss, sum_ce / n_tok);
+        assert_eq!(grads.len(), store.entries.len());
+        // gradient of a masked-out padding position's token must be finite
+        assert!(grads.iter().flatten().all(|g| g.is_finite()));
+    }
+}

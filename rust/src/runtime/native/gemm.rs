@@ -1,0 +1,420 @@
+//! Fused dequant-GEMM: the native backend's linear-layer hot path.
+//!
+//! Computes `y[M,N] = x[M,K] @ dequant(W[K,N])` reading the quantized
+//! weights directly — int8 lattice slabs as stored by the parameter
+//! plane, or nibble-packed INT4 (packed once per forward call, then read
+//! two weights per byte in the inner loop). The per-output-channel scale
+//! is applied once per accumulator after the K-loop ("in-register"), so
+//! no f32 weight tensor is ever materialized — the historical
+//! dequant-then-matmul path exists only as [`dequant_then_matmul`], the
+//! benchmark baseline and property-test reference.
+//!
+//! # Determinism
+//!
+//! Output rows are distributed over threads (`util::parallel`), but every
+//! output element is accumulated by exactly one thread, sequentially in
+//! K-index order — so results are bit-identical for any thread count,
+//! the same contract the update kernels in `opt::kernels` obey.
+
+use std::borrow::Cow;
+
+use crate::quant::pack::{pack_int4, unpack_int4_row};
+use crate::quant::Format;
+use crate::util::parallel;
+
+/// INT8 activation grid for W8A8 (symmetric, per-tensor, dynamic) —
+/// mirrors `python/compile/kernels/ref.py`.
+pub const A8_QMAX: f32 = 127.0;
+
+/// Below this many multiply-accumulates a GEMM runs inline on the caller
+/// thread: thread spawns would dominate (determinism is unaffected — the
+/// per-element op order is the same for any thread count).
+const PAR_THRESHOLD: usize = 1 << 15;
+
+/// Quantized weight payload of a linear layer.
+pub enum QData<'v> {
+    /// int8 lattice values, read straight from the store / plane slabs.
+    I8(Cow<'v, [i8]>),
+    /// Nibble-packed INT4: two lattice values per byte, unpacked row-wise
+    /// in the inner loop (half the weight memory traffic of the i8 path).
+    PackedInt4(Vec<u8>),
+}
+
+/// One linear layer's weights, layout `[rows=K, cols=N]` row-major with
+/// one scale per column (output channel) for the quantized forms.
+pub enum Lin<'v> {
+    Fp {
+        w: &'v [f32],
+        rows: usize,
+        cols: usize,
+    },
+    Quant {
+        q: QData<'v>,
+        scale: &'v [f32],
+        rows: usize,
+        cols: usize,
+        /// W8A8: additionally quantize activations to INT8 per tensor.
+        a8: bool,
+    },
+}
+
+impl<'v> Lin<'v> {
+    /// Build from lattice values + scales per the run format: INT4 packs
+    /// the nibbles once here (O(K·N/2), amortized over the whole forward
+    /// call); INT8/W8A8 keep the i8 slab as-is (zero-copy when borrowed).
+    pub fn from_lattice(
+        q: Cow<'v, [i8]>,
+        scale: &'v [f32],
+        rows: usize,
+        cols: usize,
+        format: Format,
+    ) -> Lin<'v> {
+        debug_assert_eq!(q.len(), rows * cols);
+        debug_assert_eq!(scale.len(), cols);
+        let qd = match format {
+            Format::Int4 => QData::PackedInt4(pack_int4(&q)),
+            _ => QData::I8(q),
+        };
+        Lin::Quant { q: qd, scale, rows, cols, a8: format == Format::W8A8 }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            Lin::Fp { rows, .. } | Lin::Quant { rows, .. } => *rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Lin::Fp { cols, .. } | Lin::Quant { cols, .. } => *cols,
+        }
+    }
+}
+
+/// `out[M,N] = x[M,K] @ W` with fused dequantization. Bit-identical for
+/// any `threads` (see module docs).
+pub fn matmul(x: &[f32], m: usize, lin: &Lin<'_>, out: &mut [f32], threads: usize) {
+    let (k, n) = (lin.rows(), lin.cols());
+    assert_eq!(x.len(), m * k, "gemm: x is {} elems, want {}x{}", x.len(), m, k);
+    assert_eq!(out.len(), m * n, "gemm: out is {} elems, want {}x{}", out.len(), m, n);
+    if m == 0 {
+        return;
+    }
+    match lin {
+        Lin::Fp { w, .. } => {
+            par_rows(x, m, k, n, out, threads, 0, |xr, or, _| fp_row(xr, w, n, or));
+        }
+        Lin::Quant { q, scale, a8: false, .. } => match q {
+            QData::I8(qv) => par_rows(x, m, k, n, out, threads, 0, |xr, or, _| {
+                i8_row(xr, qv, n, or);
+                apply_scale(or, scale, 1.0);
+            }),
+            QData::PackedInt4(bytes) => par_rows(x, m, k, n, out, threads, n, |xr, or, sc| {
+                packed_row(xr, bytes, n, or, sc);
+                apply_scale(or, scale, 1.0);
+            }),
+        },
+        Lin::Quant { q, scale, a8: true, .. } => {
+            // dynamic per-tensor INT8 activation grid; integer products
+            // accumulate exactly in f32 (|xq·q| <= 127·127 << 2^24)
+            let (xq, xs) = quantize_act(x);
+            match q {
+                QData::I8(qv) => par_rows(&xq, m, k, n, out, threads, 0, |xr, or, _| {
+                    i8_row(xr, qv, n, or);
+                    apply_scale(or, scale, xs);
+                }),
+                QData::PackedInt4(bytes) => {
+                    par_rows(&xq, m, k, n, out, threads, n, |xr, or, sc| {
+                        packed_row(xr, bytes, n, or, sc);
+                        apply_scale(or, scale, xs);
+                    })
+                }
+            }
+        }
+    }
+}
+
+/// The historical per-member cost the fused path eliminates: materialize
+/// the f32 weight tensor (dequantizing when quantized), then a plain f32
+/// matmul. Benchmark baseline + property-test reference; weight-only
+/// formats (W8A8's activation grid has its own oracle in the tests).
+pub fn dequant_then_matmul(x: &[f32], m: usize, lin: &Lin<'_>, out: &mut [f32]) {
+    let (k, n) = (lin.rows(), lin.cols());
+    assert_eq!(x.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    match lin {
+        Lin::Fp { w, .. } => {
+            par_rows(x, m, k, n, out, 1, 0, |xr, or, _| fp_row(xr, w, n, or));
+        }
+        Lin::Quant { q, scale, rows, cols, a8 } => {
+            assert!(!a8, "dequant_then_matmul is the weight-only reference");
+            let wf = dequant_full(q, scale, *rows, *cols);
+            par_rows(x, m, k, n, out, 1, 0, |xr, or, _| fp_row(xr, &wf, n, or));
+        }
+    }
+}
+
+/// Materialize the full f32 weight tensor (reference path only).
+pub fn dequant_full(q: &QData<'_>, scale: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut w = vec![0.0f32; rows * cols];
+    match q {
+        QData::I8(qv) => {
+            for r in 0..rows {
+                for c in 0..cols {
+                    w[r * cols + c] = qv[r * cols + c] as f32 * scale[c];
+                }
+            }
+        }
+        QData::PackedInt4(bytes) => {
+            let mut row = vec![0i8; cols];
+            for r in 0..rows {
+                unpack_int4_row(bytes, r * cols, &mut row);
+                for c in 0..cols {
+                    w[r * cols + c] = row[c] as f32 * scale[c];
+                }
+            }
+        }
+    }
+    w
+}
+
+/// Round half-to-even (banker's rounding) — `jnp.round`'s tie rule, so
+/// W8A8 activation grids agree with the PJRT kernels at exact .5 grid
+/// points (`f32::round` rounds ties away from zero).
+#[inline]
+fn round_ties_even(x: f32) -> f32 {
+    let r = x.round();
+    if (r - x).abs() == 0.5 && r % 2.0 != 0.0 {
+        r - (r - x).signum() // tie landed on an odd integer: step to the even one
+    } else {
+        r
+    }
+}
+
+/// Dynamic symmetric per-tensor INT8 activation quantization:
+/// `q = clip(round(x/s), ±127)`, `s = max(absmax, 1e-8)/127`. The
+/// quantized values are exact small integers held in f32; rounding is
+/// half-to-even to match `ref.py`'s `jnp.round`.
+pub fn quantize_act(x: &[f32]) -> (Vec<f32>, f32) {
+    let absmax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    let s = absmax.max(1e-8) / A8_QMAX;
+    let q = x.iter().map(|&v| round_ties_even(v / s).clamp(-A8_QMAX, A8_QMAX)).collect();
+    (q, s)
+}
+
+/// Distribute output rows over threads in contiguous blocks; each block
+/// gets one `scratch_len`-sized i8 scratch (the packed path's row
+/// buffer). Falls back to inline execution for small problems.
+fn par_rows<F>(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    threads: usize,
+    scratch_len: usize,
+    f: F,
+) where
+    F: Fn(&[f32], &mut [f32], &mut [i8]) + Sync,
+{
+    let threads = if m * k * n < PAR_THRESHOLD { 1 } else { threads.clamp(1, m) };
+    if threads <= 1 {
+        let mut scratch = vec![0i8; scratch_len];
+        for r in 0..m {
+            f(&x[r * k..(r + 1) * k], &mut out[r * n..(r + 1) * n], &mut scratch);
+        }
+        return;
+    }
+    let block = (m + threads - 1) / threads;
+    let tasks: Vec<(usize, &mut [f32])> = out.chunks_mut(block * n).enumerate().collect();
+    let fref = &f;
+    parallel::map_tasks(tasks, threads, move |(bi, oblk)| {
+        let mut scratch = vec![0i8; scratch_len];
+        let r0 = bi * block;
+        for (ri, orow) in oblk.chunks_mut(n).enumerate() {
+            let r = r0 + ri;
+            fref(&x[r * k..(r + 1) * k], orow, &mut scratch);
+        }
+    });
+}
+
+fn fp_row(xrow: &[f32], w: &[f32], n: usize, orow: &mut [f32]) {
+    orow.fill(0.0);
+    for (r, &xv) in xrow.iter().enumerate() {
+        let wr = &w[r * n..(r + 1) * n];
+        for c in 0..n {
+            orow[c] += xv * wr[c];
+        }
+    }
+}
+
+fn i8_row(xrow: &[f32], q: &[i8], n: usize, orow: &mut [f32]) {
+    orow.fill(0.0);
+    for (r, &xv) in xrow.iter().enumerate() {
+        let wr = &q[r * n..(r + 1) * n];
+        for c in 0..n {
+            orow[c] += xv * wr[c] as f32;
+        }
+    }
+}
+
+fn packed_row(xrow: &[f32], bytes: &[u8], n: usize, orow: &mut [f32], scratch: &mut [i8]) {
+    orow.fill(0.0);
+    for (r, &xv) in xrow.iter().enumerate() {
+        unpack_int4_row(bytes, r * n, scratch);
+        for c in 0..n {
+            orow[c] += xv * scratch[c] as f32;
+        }
+    }
+}
+
+#[inline]
+fn apply_scale(orow: &mut [f32], scale: &[f32], extra: f32) {
+    for (o, &s) in orow.iter_mut().zip(scale.iter()) {
+        *o *= s * extra;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{prop_check, Gen};
+
+    fn rand_quant(g: &mut Gen, rows: usize, cols: usize, qmax: i8) -> (Vec<i8>, Vec<f32>) {
+        let q = g.vec_i8(rows * cols, -qmax, qmax);
+        let scale: Vec<f32> = g.vec_f32(cols, 0.001, 0.1);
+        (q, scale)
+    }
+
+    #[test]
+    fn fused_matches_dequant_reference() {
+        prop_check("fused gemm vs dequant-then-matmul", 40, |g| {
+            let m = g.usize_in(1, 9);
+            let k = g.usize_in(1, 40);
+            let n = g.usize_in(1, 40);
+            let x = g.vec_f32(m * k, -1.0, 1.0);
+            for fmt in [Format::Int4, Format::Int8] {
+                let (q, scale) = rand_quant(g, k, n, fmt.qmax());
+                let lin = Lin::from_lattice(Cow::Borrowed(&q), &scale, k, n, fmt);
+                let mut fused = vec![0.0f32; m * n];
+                let mut reference = vec![0.0f32; m * n];
+                matmul(&x, m, &lin, &mut fused, 4);
+                dequant_then_matmul(&x, m, &lin, &mut reference);
+                for i in 0..m * n {
+                    let err = (fused[i] - reference[i]).abs();
+                    let tol = 1e-4 * reference[i].abs().max(1.0);
+                    if err > tol {
+                        return Err(format!(
+                            "{:?} elem {}: fused {} vs ref {}",
+                            fmt, i, fused[i], reference[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_fp_matches_reference_exactly() {
+        let mut g = Gen::from_seed(7);
+        let (m, k, n) = (5, 23, 31);
+        let x = g.vec_f32(m * k, -1.0, 1.0);
+        let w = g.vec_f32(k * n, -0.5, 0.5);
+        let lin = Lin::Fp { w: &w, rows: k, cols: n };
+        let mut a = vec![0.0f32; m * n];
+        let mut b = vec![0.0f32; m * n];
+        matmul(&x, m, &lin, &mut a, 8);
+        dequant_then_matmul(&x, m, &lin, &mut b);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn bit_identical_across_thread_counts() {
+        let mut g = Gen::from_seed(11);
+        // large enough to clear PAR_THRESHOLD so threading actually kicks in
+        let (m, k, n) = (64, 48, 96);
+        let x = g.vec_f32(m * k, -2.0, 2.0);
+        for fmt in [Format::Int4, Format::Int8, Format::W8A8] {
+            let (q, scale) = rand_quant(&mut g, k, n, fmt.qmax());
+            let lin = Lin::from_lattice(Cow::Borrowed(&q), &scale, k, n, fmt);
+            let mut base = vec![0.0f32; m * n];
+            matmul(&x, m, &lin, &mut base, 1);
+            for threads in [2usize, 8] {
+                let mut out = vec![0.0f32; m * n];
+                matmul(&x, m, &lin, &mut out, threads);
+                assert_eq!(
+                    base.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{:?} threads={}",
+                    fmt,
+                    threads
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn w8a8_matches_integer_grid_oracle() {
+        prop_check("w8a8 gemm vs ref.py oracle", 30, |g| {
+            let m = g.usize_in(1, 6);
+            let k = g.usize_in(1, 24);
+            let n = g.usize_in(1, 24);
+            let x = g.vec_f32(m * k, -1.0, 1.0);
+            let (q, scale) = rand_quant(g, k, n, 127);
+            let lin = Lin::from_lattice(Cow::Borrowed(&q), &scale, k, n, Format::W8A8);
+            let mut fused = vec![0.0f32; m * n];
+            matmul(&x, m, &lin, &mut fused, 2);
+            // oracle: quantize acts, integer matmul, dequantize (ref.py)
+            let (xq, xs) = quantize_act(&x);
+            for r in 0..m {
+                for c in 0..n {
+                    let mut acc = 0.0f32;
+                    for j in 0..k {
+                        acc += xq[r * k + j] * q[j * n + c] as f32;
+                    }
+                    let want = acc * xs * scale[c];
+                    let got = fused[r * n + c];
+                    if (want - got).abs() > 1e-4 * want.abs().max(1.0) {
+                        return Err(format!("({},{}): {} vs {}", r, c, got, want));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rounding_is_half_to_even() {
+        // jnp.round semantics: ties go to the even integer
+        for (x, want) in [
+            (0.5f32, 0.0f32),
+            (-0.5, 0.0),
+            (1.5, 2.0),
+            (2.5, 2.0),
+            (-2.5, -2.0),
+            (3.5, 4.0),
+            (0.4999, 0.0),
+            (0.5001, 1.0),
+            (-1.2, -1.0),
+        ] {
+            assert_eq!(round_ties_even(x), want, "x={}", x);
+        }
+    }
+
+    #[test]
+    fn quantize_act_grid_properties() {
+        let (q, s) = quantize_act(&[0.0, 0.5, -1.0, 0.25]);
+        assert!((s - 1.0 / 127.0).abs() < 1e-9);
+        assert_eq!(q[2], -127.0);
+        assert_eq!(q[0], 0.0);
+        // all values are integers on the grid
+        assert!(q.iter().all(|&v| v == v.round() && v.abs() <= 127.0));
+        // all-zero tensor hits the epsilon floor, no NaNs
+        let (qz, sz) = quantize_act(&[0.0; 8]);
+        assert!(sz > 0.0 && qz.iter().all(|&v| v == 0.0));
+    }
+}

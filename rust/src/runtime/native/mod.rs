@@ -1,0 +1,758 @@
+//! Native pure-Rust forward backend: interprets the manifest's
+//! `ModelConfig` directly — embedding, layernorm, attention, MLP, logits
+//! — with a fused dequant-GEMM ([`gemm`]) that reads the packed INT4
+//! nibbles / int8 slabs of the lattice without ever materializing f32
+//! weights. Runs everywhere, including the offline build, which is what
+//! lights up rollout/eval end-to-end without a PJRT machine.
+//!
+//! Semantics mirror `python/compile/model.py` operation-for-operation
+//! (left-padded prompts, explicit `pos_ids`/key `mask`, additive -1e9
+//! attention bias, tanh-approximate GELU, KV-cached decode writing slot
+//! `s_prompt + t` for every row). Cross-backend agreement with the PJRT
+//! engines is tolerance-checked in `tests/integration.rs` when a real
+//! runtime is linked.
+//!
+//! # Determinism
+//!
+//! Forward results are bit-identical for any thread count: the GEMM
+//! assigns each output element to exactly one thread and accumulates in
+//! K-index order, and everything else is elementwise or sequential — the
+//! same contract the update kernels obey (`opt::kernels`).
+
+pub mod autograd;
+pub mod gemm;
+
+use std::borrow::Cow;
+
+use anyhow::{Context, Result};
+
+use crate::model::{ParamStore, ParamsView};
+use crate::quant::Format;
+use crate::runtime::backend::{EngineSet, ForwardBackend};
+use crate::runtime::encode::{gumbel_noise, ClsBatch, GenBatch, LmBatch};
+use crate::runtime::manifest::{Manifest, ModelConfig};
+use crate::util::parallel;
+
+use gemm::Lin;
+
+/// Matches model.py's additive attention-bias constant.
+pub(crate) const NEG_INF: f32 = -1e9;
+/// LayerNorm epsilon (model.py `_layernorm`).
+pub(crate) const LN_EPS: f32 = 1e-5;
+
+/// Tanh-approximate GELU — `jax.nn.gelu`'s default form.
+#[inline]
+pub(crate) fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// The pure-Rust [`ForwardBackend`]: stateless apart from the model
+/// config and a thread knob, so it is cheap to construct per worker.
+pub struct NativeBackend {
+    cfg: ModelConfig,
+    format: Format,
+    threads: usize,
+    /// Which graphs callers declared they need. The interpreter could
+    /// serve all of them, but enforcing the declaration keeps the
+    /// contract identical to the PJRT path — code that under-declares
+    /// fails here too, not only on a machine with a real runtime.
+    set: EngineSet,
+}
+
+impl NativeBackend {
+    /// All graphs enabled — direct/raw use (tests, benches, parity).
+    pub fn new(man: &Manifest, size: &str, format: Format) -> Result<NativeBackend> {
+        NativeBackend::with_engine_set(man, size, format, EngineSet::all())
+    }
+
+    /// Serve only the declared graphs, mirroring `PjrtBackend::new` —
+    /// what `Session::with_policy` uses.
+    pub fn with_engine_set(
+        man: &Manifest,
+        size: &str,
+        format: Format,
+        set: EngineSet,
+    ) -> Result<NativeBackend> {
+        let cfg = man.config(size)?.clone();
+        // same layout contract the engines check at compile time
+        man.params(size, format.artifact_format())
+            .with_context(|| format!("no param layout for ({}, {})", size, format.name()))?;
+        Ok(NativeBackend { cfg, format, threads: parallel::default_threads(), set })
+    }
+
+    /// Override the GEMM thread count (results are invariant to it — the
+    /// determinism contract; this is pure wall-clock tuning).
+    pub fn with_threads(mut self, threads: usize) -> NativeBackend {
+        self.threads = threads.max(1);
+        self
+    }
+
+    fn want(&self, enabled: bool, what: &str) -> Result<()> {
+        anyhow::ensure!(enabled, "engine {:?} not compiled for this session", what);
+        Ok(())
+    }
+
+    fn forward_full(
+        &self,
+        p: &NativeParams<'_>,
+        tokens: &[i32],
+        pos_ids: &[i32],
+        mask: &[f32],
+        b: usize,
+        s: usize,
+        want_kv: bool,
+    ) -> Forward {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let rows = b * s;
+        let mut h = vec![0.0f32; rows * d];
+        for r in 0..rows {
+            let tok = tokens[r] as usize;
+            let pos = pos_ids[r] as usize;
+            for j in 0..d {
+                h[r * d + j] = p.tok_emb[tok * d + j] + p.pos_emb[pos * d + j];
+            }
+        }
+        let mut x = vec![0.0f32; rows * d];
+        let mut qb = vec![0.0f32; rows * d];
+        let mut kb = vec![0.0f32; rows * d];
+        let mut vb = vec![0.0f32; rows * d];
+        let mut ab = vec![0.0f32; rows * d];
+        let mut pj = vec![0.0f32; rows * d];
+        let mut ff = vec![0.0f32; rows * cfg.d_ff];
+        let mut ff2 = vec![0.0f32; rows * d];
+        let mut kvs = Vec::new();
+        for layer in &p.layers {
+            layernorm(&h, d, layer.ln1_g, layer.ln1_b, &mut x);
+            gemm::matmul(&x, rows, &layer.wq, &mut qb, self.threads);
+            gemm::matmul(&x, rows, &layer.wk, &mut kb, self.threads);
+            gemm::matmul(&x, rows, &layer.wv, &mut vb, self.threads);
+            attend_full(b, s, cfg.n_heads, d / cfg.n_heads, &qb, &kb, &vb, mask, &mut ab);
+            gemm::matmul(&ab, rows, &layer.wo, &mut pj, self.threads);
+            for i in 0..rows * d {
+                h[i] += pj[i];
+            }
+            layernorm(&h, d, layer.ln2_g, layer.ln2_b, &mut x);
+            gemm::matmul(&x, rows, &layer.w1, &mut ff, self.threads);
+            for fv in ff.iter_mut() {
+                *fv = gelu(*fv);
+            }
+            gemm::matmul(&ff, rows, &layer.w2, &mut ff2, self.threads);
+            for i in 0..rows * d {
+                h[i] += ff2[i];
+            }
+            if want_kv {
+                kvs.push((kb.clone(), vb.clone()));
+            }
+        }
+        Forward { h, kvs }
+    }
+
+    /// Final layernorm + weight-tied LM head over the selected rows of
+    /// `h`: `out[[i], :] = lnf(h[rows[i]]) @ tok_emb^T`.
+    fn head_rows(&self, p: &NativeParams<'_>, h: &[f32], rows: &[usize], out: &mut [f32]) {
+        let d = self.cfg.d_model;
+        let v = self.cfg.vocab;
+        let mut hf = vec![0.0f32; rows.len() * d];
+        for (ri, &r) in rows.iter().enumerate() {
+            layernorm(&h[r * d..(r + 1) * d], d, p.lnf_g, p.lnf_b, &mut hf[ri * d..(ri + 1) * d]);
+        }
+        let lin = Lin::Fp { w: &p.emb_t, rows: d, cols: v };
+        gemm::matmul(&hf, rows.len(), &lin, out, self.threads);
+    }
+}
+
+impl ForwardBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    fn generate(
+        &self,
+        view: &ParamsView<'_>,
+        overrides: Option<&[Vec<i8>]>,
+        batch: &GenBatch,
+        tau: f32,
+        gumbel_seed: Option<u64>,
+    ) -> Result<Vec<i32>> {
+        self.want(self.set.gen, "gen")?;
+        let p = resolve(&self.cfg, self.format, view, overrides)?;
+        let cfg = &self.cfg;
+        let (b, sp, t_dec) = (cfg.b_gen, cfg.s_prompt, cfg.t_dec);
+        let st = sp + t_dec;
+        let d = cfg.d_model;
+        let v = cfg.vocab;
+        let n_heads = cfg.n_heads;
+
+        // left-padding geometry (model.py gen_fn prologue)
+        let mut mask = vec![0.0f32; b * sp];
+        let mut pos_ids = vec![0i32; b * sp];
+        for bi in 0..b {
+            let len = batch.lens[bi] as usize;
+            let pad = sp - len;
+            for s0 in pad..sp {
+                mask[bi * sp + s0] = 1.0;
+                pos_ids[bi * sp + s0] = (s0 - pad) as i32;
+            }
+        }
+        let fw = self.forward_full(&p, &batch.prompt, &pos_ids, &mask, b, sp, true);
+        let last_rows: Vec<usize> = (0..b).map(|bi| bi * sp + sp - 1).collect();
+        let mut last = vec![0.0f32; b * v];
+        self.head_rows(&p, &fw.h, &last_rows, &mut last);
+
+        // KV caches [b, s_total, d] per layer, prompt slots primed
+        let mut kc = vec![vec![0.0f32; b * st * d]; cfg.n_layers];
+        let mut vc = vec![vec![0.0f32; b * st * d]; cfg.n_layers];
+        for li in 0..cfg.n_layers {
+            let (kf, vf) = &fw.kvs[li];
+            for bi in 0..b {
+                for s0 in 0..sp {
+                    let src = (bi * sp + s0) * d;
+                    let dst = (bi * st + s0) * d;
+                    kc[li][dst..dst + d].copy_from_slice(&kf[src..src + d]);
+                    vc[li][dst..dst + d].copy_from_slice(&vf[src..src + d]);
+                }
+            }
+        }
+        let mut keymask = vec![0.0f32; b * st];
+        for bi in 0..b {
+            keymask[bi * st..bi * st + sp].copy_from_slice(&mask[bi * sp..(bi + 1) * sp]);
+        }
+
+        let gumbel = gumbel_seed.map(|seed| gumbel_noise(cfg, Some(seed)));
+        let mut out = vec![0i32; b * t_dec];
+        let mut h = vec![0.0f32; b * d];
+        let mut x = vec![0.0f32; b * d];
+        let mut qb = vec![0.0f32; b * d];
+        let mut kb = vec![0.0f32; b * d];
+        let mut vb = vec![0.0f32; b * d];
+        let mut ab = vec![0.0f32; b * d];
+        let mut pj = vec![0.0f32; b * d];
+        let mut ff = vec![0.0f32; b * cfg.d_ff];
+        let mut ff2 = vec![0.0f32; b * d];
+
+        for t in 0..t_dec {
+            // next token: argmax(last + tau * gumbel_t), first max like
+            // jnp.argmax; greedy when no seed was given
+            for bi in 0..b {
+                let row = &last[bi * v..(bi + 1) * v];
+                let mut best = 0usize;
+                let mut bestv = f32::NEG_INFINITY;
+                for c in 0..v {
+                    let g = match &gumbel {
+                        Some(gv) => gv[(bi * t_dec + t) * v + c],
+                        None => 0.0,
+                    };
+                    let val = row[c] + tau * g;
+                    if val > bestv {
+                        bestv = val;
+                        best = c;
+                    }
+                }
+                out[bi * t_dec + t] = best as i32;
+            }
+            if t + 1 == t_dec {
+                break; // the scan's final block only feeds logits nobody reads
+            }
+            let slot = sp + t;
+            for bi in 0..b {
+                let tok = out[bi * t_dec + t] as usize;
+                let pos = batch.lens[bi] as usize + t;
+                for j in 0..d {
+                    h[bi * d + j] = p.tok_emb[tok * d + j] + p.pos_emb[pos * d + j];
+                }
+                keymask[bi * st + slot] = 1.0;
+            }
+            for (li, layer) in p.layers.iter().enumerate() {
+                layernorm(&h, d, layer.ln1_g, layer.ln1_b, &mut x);
+                gemm::matmul(&x, b, &layer.wq, &mut qb, self.threads);
+                gemm::matmul(&x, b, &layer.wk, &mut kb, self.threads);
+                gemm::matmul(&x, b, &layer.wv, &mut vb, self.threads);
+                for bi in 0..b {
+                    let dst = (bi * st + slot) * d;
+                    kc[li][dst..dst + d].copy_from_slice(&kb[bi * d..(bi + 1) * d]);
+                    vc[li][dst..dst + d].copy_from_slice(&vb[bi * d..(bi + 1) * d]);
+                }
+                let dh = d / n_heads;
+                attend_decode(b, st, n_heads, dh, &qb, &kc[li], &vc[li], &keymask, &mut ab);
+                gemm::matmul(&ab, b, &layer.wo, &mut pj, self.threads);
+                for i in 0..b * d {
+                    h[i] += pj[i];
+                }
+                layernorm(&h, d, layer.ln2_g, layer.ln2_b, &mut x);
+                gemm::matmul(&x, b, &layer.w1, &mut ff, self.threads);
+                for fv in ff.iter_mut() {
+                    *fv = gelu(*fv);
+                }
+                gemm::matmul(&ff, b, &layer.w2, &mut ff2, self.threads);
+                for i in 0..b * d {
+                    h[i] += ff2[i];
+                }
+            }
+            let rows: Vec<usize> = (0..b).collect();
+            self.head_rows(&p, &h, &rows, &mut last);
+        }
+        Ok(out)
+    }
+
+    fn cls_scores(
+        &self,
+        view: &ParamsView<'_>,
+        overrides: Option<&[Vec<i8>]>,
+        batch: &ClsBatch,
+    ) -> Result<Vec<f32>> {
+        self.want(self.set.cls, "cls")?;
+        let p = resolve(&self.cfg, self.format, view, overrides)?;
+        let cfg = &self.cfg;
+        let (b, s) = (cfg.b_train, cfg.s_train);
+        let v = cfg.vocab;
+        let fw = self.forward_full(&p, &batch.tokens, &batch.pos_ids, &batch.mask, b, s, false);
+        let rows: Vec<usize> = (0..b).map(|bi| bi * s + batch.cls_pos[bi] as usize).collect();
+        let mut at = vec![0.0f32; b * v];
+        self.head_rows(&p, &fw.h, &rows, &mut at);
+        let c = batch.class_ids.len();
+        let mut scores = vec![0.0f32; b * c];
+        for bi in 0..b {
+            for (ci, &cid) in batch.class_ids.iter().enumerate() {
+                scores[bi * c + ci] = at[bi * v + cid as usize];
+            }
+        }
+        Ok(scores)
+    }
+
+    fn lm_loss(
+        &self,
+        view: &ParamsView<'_>,
+        overrides: Option<&[Vec<i8>]>,
+        batch: &LmBatch,
+    ) -> Result<(f32, f32, f32)> {
+        self.want(self.set.loss, "loss")?;
+        let p = resolve(&self.cfg, self.format, view, overrides)?;
+        let cfg = &self.cfg;
+        let (b, s) = (cfg.b_train, cfg.s_train);
+        let v = cfg.vocab;
+        let fw = self.forward_full(&p, &batch.tokens, &batch.pos_ids, &batch.mask, b, s, false);
+        let rows: Vec<usize> = (0..b * s).collect();
+        let mut logits = vec![0.0f32; b * s * v];
+        self.head_rows(&p, &fw.h, &rows, &mut logits);
+        let mut sum_ce = 0.0f32;
+        let mut n_tok = 0.0f32;
+        let mut n_correct = 0.0f32;
+        for r in 0..b * s {
+            let lm = batch.loss_mask[r];
+            n_tok += lm;
+            if lm == 0.0 {
+                continue;
+            }
+            let row = &logits[r * v..(r + 1) * v];
+            let target = batch.targets[r] as usize;
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let logz = m + row.iter().map(|&l| (l - m).exp()).sum::<f32>().ln();
+            sum_ce += (logz - row[target]) * lm;
+            let mut best = 0usize;
+            let mut bestv = f32::NEG_INFINITY;
+            for (c, &l) in row.iter().enumerate() {
+                if l > bestv {
+                    bestv = l;
+                    best = c;
+                }
+            }
+            if best == target {
+                n_correct += lm;
+            }
+        }
+        Ok((sum_ce, n_tok, n_correct))
+    }
+
+    fn lm_grads(&self, view: &ParamsView<'_>, batch: &LmBatch) -> Result<(f32, Vec<Vec<f32>>)> {
+        self.want(self.set.grad, "grad")?;
+        anyhow::ensure!(
+            view.store.format == Format::Fp32,
+            "lm_grads needs an fp-format store (got {})",
+            view.store.format.name()
+        );
+        autograd::lm_grads(&self.cfg, view.store, batch)
+    }
+}
+
+/// One full-sequence pass: final hidden states plus (optionally) each
+/// layer's k/v rows for cache priming.
+struct Forward {
+    h: Vec<f32>,
+    kvs: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+/// Weights of one transformer block, resolved to slices/GEMM operands.
+struct LayerParams<'v> {
+    ln1_g: &'v [f32],
+    ln1_b: &'v [f32],
+    ln2_g: &'v [f32],
+    ln2_b: &'v [f32],
+    wq: Lin<'v>,
+    wk: Lin<'v>,
+    wv: Lin<'v>,
+    wo: Lin<'v>,
+    w1: Lin<'v>,
+    w2: Lin<'v>,
+}
+
+/// The full model resolved against one parameter view (+ optional member
+/// overrides). Lives for one backend call.
+struct NativeParams<'v> {
+    tok_emb: &'v [f32],
+    pos_emb: &'v [f32],
+    lnf_g: &'v [f32],
+    lnf_b: &'v [f32],
+    layers: Vec<LayerParams<'v>>,
+    /// `tok_emb` transposed to `[d_model, vocab]` for the weight-tied LM
+    /// head GEMM (materialized once per call; d*vocab floats).
+    emb_t: Vec<f32>,
+}
+
+fn fp_slice<'v>(store: &'v ParamStore, name: &str) -> Result<&'v [f32]> {
+    Ok(store
+        .get(name)
+        .ok_or_else(|| anyhow::anyhow!("param {:?} missing from store", name))?
+        .data
+        .as_f32())
+}
+
+/// Resolve the lattice tensor named `<base>.q` through the view (shard
+/// slabs gathered per tensor) or the member's override buffer, paired
+/// with its `.s` scales, into a GEMM operand.
+fn lattice_lin<'v>(
+    view: &ParamsView<'v>,
+    overrides: Option<&'v [Vec<i8>]>,
+    base: &str,
+    format: Format,
+) -> Result<Lin<'v>> {
+    let store = view.store;
+    if format == Format::Fp32 {
+        let e = store
+            .get(base)
+            .ok_or_else(|| anyhow::anyhow!("param {:?} missing from store", base))?;
+        return Ok(Lin::Fp { w: e.data.as_f32(), rows: e.shape[0], cols: e.shape[1] });
+    }
+    let qname = format!("{}.q", base);
+    let idx = store
+        .entries
+        .iter()
+        .position(|e| e.name == qname)
+        .ok_or_else(|| anyhow::anyhow!("lattice tensor {:?} missing from store", qname))?;
+    let k = store
+        .lattice_indices()
+        .iter()
+        .position(|&i| i == idx)
+        .ok_or_else(|| anyhow::anyhow!("{:?} is not a lattice entry", qname))?;
+    let e = &store.entries[idx];
+    let q: Cow<'v, [i8]> = match overrides {
+        Some(ovs) => Cow::Borrowed(ovs[k].as_slice()),
+        None => view.lattice_tensor(k),
+    };
+    anyhow::ensure!(
+        q.len() == e.numel(),
+        "{}: lattice view has {} elems, want {}",
+        qname,
+        q.len(),
+        e.numel()
+    );
+    let scale = fp_slice(store, &format!("{}.s", base))?;
+    Ok(Lin::from_lattice(q, scale, e.shape[0], e.shape[1], format))
+}
+
+fn resolve<'v>(
+    cfg: &ModelConfig,
+    format: Format,
+    view: &ParamsView<'v>,
+    overrides: Option<&'v [Vec<i8>]>,
+) -> Result<NativeParams<'v>> {
+    let store = view.store;
+    anyhow::ensure!(
+        store.format == format,
+        "store format {} does not match backend format {}",
+        store.format.name(),
+        format.name()
+    );
+    if let Some(ovs) = overrides {
+        anyhow::ensure!(format != Format::Fp32, "i8 overrides passed for fp-format store");
+        anyhow::ensure!(
+            ovs.len() == store.lattice_indices().len(),
+            "got {} override tensors for {} lattice tensors",
+            ovs.len(),
+            store.lattice_indices().len()
+        );
+    }
+    let tok_emb = fp_slice(store, "tok_emb")?;
+    let pos_emb = fp_slice(store, "pos_emb")?;
+    let emb = store.get("tok_emb").expect("checked above");
+    let (v, d) = (emb.shape[0], emb.shape[1]);
+    let mut emb_t = vec![0.0f32; d * v];
+    for vi in 0..v {
+        for j in 0..d {
+            emb_t[j * v + vi] = tok_emb[vi * d + j];
+        }
+    }
+    // cfg drives the layer count; a store missing a layer surfaces as a
+    // descriptive missing-param error from fp_slice/lattice_lin below
+    // instead of an index panic in the KV-priming loop.
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for i in 0..cfg.n_layers {
+        let pre = format!("layers.{}.", i);
+        layers.push(LayerParams {
+            ln1_g: fp_slice(store, &format!("{}ln1.g", pre))?,
+            ln1_b: fp_slice(store, &format!("{}ln1.b", pre))?,
+            ln2_g: fp_slice(store, &format!("{}ln2.g", pre))?,
+            ln2_b: fp_slice(store, &format!("{}ln2.b", pre))?,
+            wq: lattice_lin(view, overrides, &format!("{}attn.wq", pre), format)?,
+            wk: lattice_lin(view, overrides, &format!("{}attn.wk", pre), format)?,
+            wv: lattice_lin(view, overrides, &format!("{}attn.wv", pre), format)?,
+            wo: lattice_lin(view, overrides, &format!("{}attn.wo", pre), format)?,
+            w1: lattice_lin(view, overrides, &format!("{}mlp.w1", pre), format)?,
+            w2: lattice_lin(view, overrides, &format!("{}mlp.w2", pre), format)?,
+        });
+    }
+    Ok(NativeParams {
+        tok_emb,
+        pos_emb,
+        lnf_g: fp_slice(store, "lnf.g")?,
+        lnf_b: fp_slice(store, "lnf.b")?,
+        layers,
+        emb_t,
+    })
+}
+
+/// Row-wise layernorm over `[rows, d]`.
+pub(crate) fn layernorm(x: &[f32], d: usize, g: &[f32], b: &[f32], out: &mut [f32]) {
+    for (xr, or) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let mut mu = 0.0f32;
+        for &v in xr {
+            mu += v;
+        }
+        mu /= d as f32;
+        let mut var = 0.0f32;
+        for &v in xr {
+            let c = v - mu;
+            var += c * c;
+        }
+        var /= d as f32;
+        let rstd = 1.0 / (var + LN_EPS).sqrt();
+        for j in 0..d {
+            or[j] = (xr[j] - mu) * rstd * g[j] + b[j];
+        }
+    }
+}
+
+pub(crate) fn softmax_inplace(l: &mut [f32]) {
+    let m = l.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in l.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in l.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Full-sequence multi-head attention with causal + key masking. `q`,
+/// `k`, `v`, `out` are `[b, s, heads*dh]` row-major; `mask` is `[b, s]`
+/// (1 = real key). Matches model.py `_attend` + the `_block_full` bias.
+pub(crate) fn attend_full(
+    b: usize,
+    s: usize,
+    heads: usize,
+    dh: usize,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    mask: &[f32],
+    out: &mut [f32],
+) {
+    let d = heads * dh;
+    out.fill(0.0);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut logits = vec![0.0f32; s];
+    for bi in 0..b {
+        for h in 0..heads {
+            for sq in 0..s {
+                let qo = (bi * s + sq) * d + h * dh;
+                for sk in 0..s {
+                    let bias =
+                        if sk <= sq && mask[bi * s + sk] > 0.0 { 0.0 } else { NEG_INF };
+                    let ko = (bi * s + sk) * d + h * dh;
+                    let mut dot = 0.0f32;
+                    for i in 0..dh {
+                        dot += q[qo + i] * k[ko + i];
+                    }
+                    logits[sk] = dot * scale + bias;
+                }
+                softmax_inplace(&mut logits);
+                let oo = (bi * s + sq) * d + h * dh;
+                for sk in 0..s {
+                    let w = logits[sk];
+                    let vo = (bi * s + sk) * d + h * dh;
+                    for i in 0..dh {
+                        out[oo + i] += w * v[vo + i];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Single-position attention against a KV cache: `q`/`out` are `[b, d]`
+/// (one decode token per row), `kc`/`vc` are `[b, st, d]`, `keymask` is
+/// `[b, st]` with the current slot already enabled.
+pub(crate) fn attend_decode(
+    b: usize,
+    st: usize,
+    heads: usize,
+    dh: usize,
+    q: &[f32],
+    kc: &[f32],
+    vc: &[f32],
+    keymask: &[f32],
+    out: &mut [f32],
+) {
+    let d = heads * dh;
+    out.fill(0.0);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut logits = vec![0.0f32; st];
+    for bi in 0..b {
+        for h in 0..heads {
+            let qo = bi * d + h * dh;
+            for sk in 0..st {
+                let bias = if keymask[bi * st + sk] > 0.0 { 0.0 } else { NEG_INF };
+                let ko = (bi * st + sk) * d + h * dh;
+                let mut dot = 0.0f32;
+                for i in 0..dh {
+                    dot += q[qo + i] * kc[ko + i];
+                }
+                logits[sk] = dot * scale + bias;
+            }
+            softmax_inplace(&mut logits);
+            let oo = bi * d + h * dh;
+            for sk in 0..st {
+                let w = logits[sk];
+                let vo = (bi * st + sk) * d + h * dh;
+                for i in 0..dh {
+                    out[oo + i] += w * vc[vo + i];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_fp;
+    use crate::model::AsParams;
+    use crate::tasks::gen_task;
+
+    fn manifest() -> Manifest {
+        Manifest::load("artifacts/manifest.json").expect("run `make artifacts` first")
+    }
+
+    fn stores() -> (Manifest, ParamStore, ParamStore) {
+        let man = manifest();
+        let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
+        init_fp(&mut fp, 77);
+        let q = ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap();
+        (man, fp, q)
+    }
+
+    #[test]
+    fn generate_bit_identical_across_thread_counts() {
+        let (man, _fp, q) = stores();
+        let cfg = man.config("nano").unwrap().clone();
+        let task = gen_task("countdown", cfg.s_prompt, cfg.t_dec).unwrap();
+        let mut rng = crate::rng::SplitMix64::new(4);
+        let problems: Vec<_> = (0..cfg.b_gen).map(|_| task.sample(&mut rng)).collect();
+        let batch = GenBatch::build(&cfg, problems);
+        let view = q.params_view();
+        let base = NativeBackend::new(&man, "nano", Format::Int4)
+            .unwrap()
+            .with_threads(1)
+            .generate(&view, None, &batch, 0.7, Some(9))
+            .unwrap();
+        for threads in [2usize, 8] {
+            let got = NativeBackend::new(&man, "nano", Format::Int4)
+                .unwrap()
+                .with_threads(threads)
+                .generate(&view, None, &batch, 0.7, Some(9))
+                .unwrap();
+            assert_eq!(base, got, "threads={}", threads);
+        }
+    }
+
+    #[test]
+    fn quantized_loss_tracks_fp_loss() {
+        // INT8 dequant forward must land near the fp forward on the same
+        // weights — the native analog of the PJRT quantization test.
+        let (man, fp, _q4) = stores();
+        let q8 = ParamStore::quantize_from(&fp, &man, Format::Int8, None).unwrap();
+        let cfg = man.config("nano").unwrap().clone();
+        let task = gen_task("countdown", cfg.s_prompt, cfg.t_dec).unwrap();
+        let mut rng = crate::rng::SplitMix64::new(6);
+        let pairs: Vec<(String, String)> =
+            (0..cfg.b_train).map(|_| task.supervised(&mut rng)).collect();
+        let batch = LmBatch::build(&cfg, &pairs);
+        let nb_fp = NativeBackend::new(&man, "nano", Format::Fp32).unwrap();
+        let (ce_fp, nt, _) = nb_fp.lm_loss(&fp.params_view(), None, &batch).unwrap();
+        let nb_q = NativeBackend::new(&man, "nano", Format::Int8).unwrap();
+        let (ce_q, nt_q, _) = nb_q.lm_loss(&q8.params_view(), None, &batch).unwrap();
+        assert_eq!(nt, nt_q);
+        let (l_fp, l_q) = (ce_fp / nt, ce_q / nt_q);
+        assert!((l_fp - l_q).abs() < 0.2, "fp {} vs int8 {}", l_fp, l_q);
+        // random init: CE should sit near ln(vocab)
+        assert!((l_fp - (cfg.vocab as f32).ln()).abs() < 1.0, "loss {}", l_fp);
+    }
+
+    #[test]
+    fn format_mismatch_and_bad_overrides_error() {
+        let (man, fp, q) = stores();
+        let nb = NativeBackend::new(&man, "nano", Format::Int4).unwrap();
+        let cfg = nb.cfg().clone();
+        let task = gen_task("countdown", cfg.s_prompt, cfg.t_dec).unwrap();
+        let mut rng = crate::rng::SplitMix64::new(2);
+        let batch = GenBatch::build(&cfg, vec![task.sample(&mut rng)]);
+        // fp store into an int4 backend
+        assert!(nb.generate(&fp.params_view(), None, &batch, 0.0, None).is_err());
+        // wrong override arity
+        let bad = vec![vec![0i8; 4]];
+        assert!(nb.generate(&q.params_view(), Some(&bad), &batch, 0.0, None).is_err());
+    }
+
+    #[test]
+    fn undeclared_graphs_error_like_pjrt() {
+        // The EngineSet declaration is enforced on the native path too,
+        // so under-declaring can't pass CI natively and then explode on
+        // a PJRT machine.
+        let (man, _fp, q) = stores();
+        let nb = NativeBackend::with_engine_set(
+            &man,
+            "nano",
+            Format::Int4,
+            EngineSet::gen_only(),
+        )
+        .unwrap();
+        let cfg = nb.cfg().clone();
+        let ct = crate::tasks::cls_task("snli").unwrap();
+        let mut rng = crate::rng::SplitMix64::new(3);
+        let exs: Vec<_> = (0..cfg.b_train).map(|_| ct.sample(&mut rng, true)).collect();
+        let cb = ClsBatch::build(&cfg, &exs, &ct.verbalizers());
+        let err = nb.cls_scores(&q.params_view(), None, &cb).unwrap_err();
+        assert!(format!("{}", err).contains("not compiled"), "{}", err);
+    }
+}

@@ -1,0 +1,155 @@
+//! PJRT implementation of [`ForwardBackend`]: compiled AOT HLO artifacts
+//! executed on an `xla` client (see `runtime::engine` for the compile /
+//! marshalling layer this builds on).
+//!
+//! The `xla` client is `Rc`-based (not `Send`), so a `PjrtBackend` lives
+//! on one thread; pool workers each build their own from the same
+//! manifest. Requires a real PJRT runtime — construction fails on the
+//! offline stub build (`BackendPolicy::Auto` falls back to the native
+//! backend there).
+
+use anyhow::Result;
+
+use crate::model::ParamsView;
+use crate::quant::Format;
+use crate::runtime::backend::{EngineSet, ForwardBackend};
+use crate::runtime::encode::{gumbel_noise, ClsBatch, GenBatch, LmBatch};
+use crate::runtime::engine::{self, Engine, HostTensor};
+use crate::runtime::manifest::{Manifest, ModelConfig};
+
+/// A set of compiled engines bound to one (model size, weight format) on
+/// a thread-local PJRT client.
+pub struct PjrtBackend {
+    cfg: ModelConfig,
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    gen: Option<Engine>,
+    loss: Option<Engine>,
+    cls: Option<Engine>,
+    grad: Option<Engine>,
+}
+
+impl PjrtBackend {
+    pub fn new(man: &Manifest, size: &str, format: Format, set: EngineSet) -> Result<PjrtBackend> {
+        let cfg = man.config(size)?.clone();
+        let client = xla::PjRtClient::cpu()?;
+        let fmt = format.artifact_format();
+        let mk = |want: bool, func: &str| -> Result<Option<Engine>> {
+            if !want {
+                return Ok(None);
+            }
+            Ok(Some(Engine::load(&client, man, man.artifact(size, fmt, func)?)?))
+        };
+        let gen = mk(set.gen, "gen")?;
+        let loss = mk(set.loss, "loss")?;
+        let cls = mk(set.cls, "cls")?;
+        let grad = mk(set.grad, "grad")?;
+        Ok(PjrtBackend { cfg, client, gen, loss, cls, grad })
+    }
+
+    fn engine<'a>(e: &'a Option<Engine>, what: &str) -> Result<&'a Engine> {
+        e.as_ref().ok_or_else(|| anyhow::anyhow!("engine {:?} not compiled for this session", what))
+    }
+
+    fn lm_args(
+        &self,
+        eng: &Engine,
+        view: &ParamsView<'_>,
+        overrides: Option<&[Vec<i8>]>,
+        batch: &LmBatch,
+    ) -> Result<Vec<xla::Literal>> {
+        let d = &eng.meta.data_inputs;
+        let mut args = Vec::with_capacity(5 + view.store.entries.len());
+        args.push(engine::literal_for(&d[0], &HostTensor::I32(batch.tokens.clone()))?);
+        args.push(engine::literal_for(&d[1], &HostTensor::I32(batch.pos_ids.clone()))?);
+        args.push(engine::literal_for(&d[2], &HostTensor::F32(batch.mask.clone()))?);
+        args.push(engine::literal_for(&d[3], &HostTensor::I32(batch.targets.clone()))?);
+        args.push(engine::literal_for(&d[4], &HostTensor::F32(batch.loss_mask.clone()))?);
+        args.extend(engine::param_literals_view(view, overrides)?);
+        Ok(args)
+    }
+}
+
+impl ForwardBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn generate(
+        &self,
+        view: &ParamsView<'_>,
+        overrides: Option<&[Vec<i8>]>,
+        batch: &GenBatch,
+        tau: f32,
+        gumbel_seed: Option<u64>,
+    ) -> Result<Vec<i32>> {
+        let eng = Self::engine(&self.gen, "gen")?;
+        let cfg = &self.cfg;
+        let mut args = Vec::with_capacity(4 + view.store.entries.len());
+        args.push(engine::literal_for(
+            &eng.meta.data_inputs[0],
+            &HostTensor::I32(batch.prompt.clone()),
+        )?);
+        args.push(engine::literal_for(
+            &eng.meta.data_inputs[1],
+            &HostTensor::I32(batch.lens.clone()),
+        )?);
+        args.push(xla::Literal::scalar(tau));
+        args.push(engine::literal_for(
+            &eng.meta.data_inputs[3],
+            &HostTensor::F32(gumbel_noise(cfg, gumbel_seed)),
+        )?);
+        args.extend(engine::param_literals_view(view, overrides)?);
+        let outs = eng.run(&args)?;
+        engine::to_i32_vec(&outs[0])
+    }
+
+    fn cls_scores(
+        &self,
+        view: &ParamsView<'_>,
+        overrides: Option<&[Vec<i8>]>,
+        batch: &ClsBatch,
+    ) -> Result<Vec<f32>> {
+        let eng = Self::engine(&self.cls, "cls")?;
+        let d = &eng.meta.data_inputs;
+        let mut args = Vec::with_capacity(6 + view.store.entries.len());
+        args.push(engine::literal_for(&d[0], &HostTensor::I32(batch.tokens.clone()))?);
+        args.push(engine::literal_for(&d[1], &HostTensor::I32(batch.pos_ids.clone()))?);
+        args.push(engine::literal_for(&d[2], &HostTensor::F32(batch.mask.clone()))?);
+        args.push(engine::literal_for(&d[3], &HostTensor::I32(batch.cls_pos.clone()))?);
+        args.push(engine::literal_for(&d[4], &HostTensor::I32(batch.class_ids.clone()))?);
+        args.push(engine::literal_for(&d[5], &HostTensor::I32(batch.labels.clone()))?);
+        args.extend(engine::param_literals_view(view, overrides)?);
+        let outs = eng.run(&args)?;
+        // outputs: (sum_ce, n_correct, scores) — the host recomputes
+        // real-row stats from the scores, so only they are returned.
+        engine::to_f32_vec(&outs[2])
+    }
+
+    fn lm_loss(
+        &self,
+        view: &ParamsView<'_>,
+        overrides: Option<&[Vec<i8>]>,
+        batch: &LmBatch,
+    ) -> Result<(f32, f32, f32)> {
+        let eng = Self::engine(&self.loss, "loss")?;
+        let outs = eng.run(&self.lm_args(eng, view, overrides, batch)?)?;
+        Ok((
+            engine::to_f32_scalar(&outs[0])?,
+            engine::to_f32_scalar(&outs[1])?,
+            engine::to_f32_scalar(&outs[2])?,
+        ))
+    }
+
+    fn lm_grads(&self, view: &ParamsView<'_>, batch: &LmBatch) -> Result<(f32, Vec<Vec<f32>>)> {
+        let eng = Self::engine(&self.grad, "grad")?;
+        let outs = eng.run(&self.lm_args(eng, view, None, batch)?)?;
+        let loss = engine::to_f32_scalar(&outs[0])?;
+        let grads = outs[1..].iter().map(engine::to_f32_vec).collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+}
