@@ -33,6 +33,10 @@ fn main() -> anyhow::Result<()> {
     let pretrain_steps = env_usize("E2E_PRETRAIN", 2000);
     let gens = env_usize("E2E_GENS", 150);
     let man = Manifest::load("artifacts/manifest.json")?;
+    println!(
+        "kernel: {} (set QES_KERNEL=scalar|avx2|neon|auto to override)",
+        qes::kernel::active().name()
+    );
 
     // ---- 1. pretrain (L2 grad artifact + Rust Adam) ----
     println!("== [1/4] pretraining {} on the Countdown corpus ({} steps) ==", size, pretrain_steps);

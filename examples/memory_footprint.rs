@@ -16,6 +16,10 @@ use qes::util::human_bytes;
 fn main() -> anyhow::Result<()> {
     let man = Manifest::load("artifacts/manifest.json")?;
     println!(
+        "kernel: {} (set QES_KERNEL=scalar|avx2|neon|auto to override)",
+        qes::kernel::active().name()
+    );
+    println!(
         "{:<8} {:<6} {:>12} {:>14} {:>14} {:>14}",
         "model", "fmt", "weights", "quzo state", "full-res state", "qes state"
     );

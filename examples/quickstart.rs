@@ -21,6 +21,10 @@ use qes::tasks::gen_task;
 
 fn main() -> anyhow::Result<()> {
     let man = Manifest::load("artifacts/manifest.json")?;
+    println!(
+        "kernel: {} (set QES_KERNEL=scalar|avx2|neon|auto to override)",
+        qes::kernel::active().name()
+    );
 
     // --- 1. base model ---
     println!("== pretraining a base model (fp32, 600 Adam steps) ==");

@@ -16,6 +16,10 @@ use qes::tasks::cls_task;
 
 fn main() -> anyhow::Result<()> {
     let man = Manifest::load("artifacts/manifest.json")?;
+    println!(
+        "kernel: {} (set QES_KERNEL=scalar|avx2|neon|auto to override)",
+        qes::kernel::active().name()
+    );
     let task = cls_task("snli")?;
 
     println!("== LM-warmup of the backbone (fp32) ==");

@@ -1,0 +1,166 @@
+#!/usr/bin/env python3
+"""Generate golden vectors for rust/tests/rng_golden.rs.
+
+The O(1) stream-positioning contract (`SplitMix64::jump`,
+`NoiseStream::at`) is what every chunk-parallel kernel builds on, but the
+Rust tests only checked the streams against *themselves* (jump vs a
+sequential walk of the same generator). A refactor that changed GAMMA,
+the output mixer or the draws-per-element accounting would stay
+self-consistent and pass — while silently invalidating every stored
+(gen_seed, fitness) history. This script pins the streams against an
+independent re-implementation:
+
+* `SplitMix64` outputs and jumps are pure 64-bit integer arithmetic —
+  reproduced here exactly.
+* `uniform01` is exact in f32 (24-bit integer times a power of two).
+* `NoiseStream` deltas go through Box-Muller (f64 ln, f32 cos), where
+  libm implementations may differ by an ulp. Every emitted delta is
+  therefore checked to be ROBUST: the discrete decisions (floor cell,
+  Bernoulli comparison) must hold under +-8 ulp perturbation of the
+  gaussian, or the candidate window is rejected and the search moves on.
+
+Run from repo root:  python python/tools/gen_rng_goldens.py
+Paste the emitted arrays into rust/tests/rng_golden.rs.
+"""
+
+import math
+
+import numpy as np
+
+M64 = (1 << 64) - 1
+GAMMA = 0x9E3779B97F4A7C15
+F32 = np.float32
+
+
+def mix(z):
+    z &= M64
+    z = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9 & M64
+    z = (z ^ (z >> 27)) * 0x94D049BB133111EB & M64
+    return (z ^ (z >> 31)) & M64
+
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & M64
+
+    def jump(self, n):
+        self.state = (self.state + (GAMMA * n & M64)) & M64
+
+    def next_u64(self):
+        self.state = (self.state + GAMMA) & M64
+        return mix(self.state)
+
+    def uniform01(self):
+        # (next_u64() >> 40) as f32 * (1 / 2^24): both steps exact in f32
+        return F32(self.next_u64() >> 40) * F32(2.0**-24)
+
+
+def member_seed(gen_seed, member):
+    z = (gen_seed ^ (member * 0xFF51AFD7ED558CCD & M64)) & M64
+    z = (z ^ (z >> 33)) * 0xC4CEB9FE1A85EC53 & M64
+    return (z ^ (z >> 33)) & M64
+
+
+def normal(rng):
+    """Box-Muller exactly as rng::SplitMix64::normal (f64 ln, f32 cos)."""
+    u1 = F32(1.0) - rng.uniform01()
+    u2 = rng.uniform01()
+    r = F32(math.sqrt(-2.0 * math.log(float(u1))))
+    two_pi = F32(2.0) * F32(np.pi)  # exact: power-of-two multiply
+    theta = two_pi * u2
+    # f32 cos: compute in f64, round. Rust's cosf may differ by an ulp —
+    # the robustness check below absorbs that.
+    return F32(r) * F32(math.cos(float(theta))), float(r), float(theta)
+
+
+def pair_deltas(sigma, z, u):
+    xp = F32(sigma) * z
+    xm = F32(-xp)
+    fp = F32(np.floor(xp))
+    fm = F32(np.floor(xm))
+    dp = int(fp) + (1 if u < xp - fp else 0)
+    dm = int(fm) + (1 if u < xm - fm else 0)
+    return dp, dm
+
+
+def robust_pair(sigma, z, u):
+    """The (dp, dm) decision, or None if any discrete decision flips under
+    +-8 ulp perturbation of z (covers libm cos/ln divergence)."""
+    base = pair_deltas(sigma, z, u)
+    eps = np.spacing(z) if z != 0 else np.float32(1e-38)
+    for k in (-8, 8):
+        if pair_deltas(sigma, F32(z + F32(k) * eps), u) != base:
+            return None
+    # Bernoulli margin: u must not sit within 1e-5 of either threshold
+    xp = F32(sigma) * z
+    for x in (xp, F32(-xp)):
+        frac = x - F32(np.floor(x))
+        if abs(float(u) - float(frac)) < 1e-5:
+            return None
+    return base
+
+
+def delta_window(seed, sigma, start, n):
+    """Deltas [start, start+n) of the delta-view stream, or None if any
+    element is non-robust. Mirrors NoiseStream::at + next_pair_deltas."""
+    rng = SplitMix64(seed)
+    rng.jump(3 * start)  # DELTA_DRAWS_PER_ELEM = 3
+    out = []
+    for _ in range(n):
+        z, _, _ = normal(rng)
+        u = rng.uniform01()
+        pair = robust_pair(sigma, z, u)
+        if pair is None:
+            return None
+        out.append(pair)
+    return out
+
+
+def main():
+    print("// --- SplitMix64 goldens (exact integer arithmetic) ---")
+    for seed in (0, 42, 0xDEADBEEF, M64):
+        r = SplitMix64(seed)
+        vals = [r.next_u64() for _ in range(4)]
+        print(f"// seed {seed:#x}: {[hex(v) for v in vals]}")
+
+    print("\n// jump goldens: (seed, n_draws) -> next two outputs")
+    for seed, n in ((42, 1), (42, 10**6), (7, 123_456_789_012), (M64, 3 * (1 << 40))):
+        r = SplitMix64(seed)
+        r.jump(n)
+        print(f"// ({seed:#x}, {n}): {hex(r.next_u64())}, {hex(r.next_u64())}")
+
+    print("\n// member_seed goldens")
+    for g, m in ((0, 0), (0xABCDEF, 1), (42, 7), (M64, 1000)):
+        print(f"// member_seed({g:#x}, {m}) = {hex(member_seed(g, m))}")
+
+    print("\n// uniform01 goldens (f32 bit patterns, exact)")
+    for seed in (3, 0x5EED):
+        r = SplitMix64(seed)
+        bits = [hex(int(r.uniform01().view(np.uint32))) for _ in range(4)]
+        print(f"// seed {seed:#x}: {bits}")
+
+    print("\n// NoiseStream::at delta goldens (robust to ulp-level libm skew)")
+    for seed, sigma, start in (
+        (0x5EED, 0.8, 0),
+        (0x5EED, 0.8, 1_000),
+        (77, 1.6, 123_456_789),
+        (9, 0.45, 1 << 33),
+    ):
+        n = 24
+        win = delta_window(seed, sigma, start, n)
+        tries = 0
+        s = start
+        while win is None and tries < 200:
+            s += n  # slide until every element in the window is robust
+            win = delta_window(seed, sigma, s, n)
+            tries += 1
+        assert win is not None, f"no robust window near {(seed, sigma, start)}"
+        dps = [p for p, _ in win]
+        dms = [m for _, m in win]
+        print(f"// (seed={seed:#x}, sigma={sigma}, start={s}):")
+        print(f"//   dp: {dps}")
+        print(f"//   dm: {dms}")
+
+
+if __name__ == "__main__":
+    main()

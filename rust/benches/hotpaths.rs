@@ -1,20 +1,23 @@
 //! L3 hot-path micro-benchmarks: delta regeneration, gradient accumulation
 //! (scalar vs chunk-parallel), QES updates (full-residual and seed replay,
 //! scalar vs fused chunk-parallel kernels), perturbation materialization
-//! (alloc-per-member vs preallocated), f16 conversion (scalar vs slice),
-//! the QuZO update, and snapshot publication (full store clone vs
-//! dirty-shard COW publish).
+//! (alloc-per-member vs preallocated), f16 conversion (scalar vs slice vs
+//! SIMD codec), the QuZO update, snapshot publication (full store clone
+//! vs dirty-shard COW publish), and the scalar-vs-SIMD microkernel
+//! dimension on the fused GEMM (`forward_gemm`), the full-residual
+//! update (`update_chunk`) and the f16 codec (`f16_codec`).
 //!
 //! Run: `cargo bench --bench hotpaths` (needs `artifacts/manifest.json`).
 //!
 //! Besides the human-readable table, every case emits a machine-readable
-//! `BENCH {json}` line, plus `speedup` records comparing each scalar
-//! baseline against its chunked variant — the perf trajectory tracked in
-//! PERF.md from this change on.
+//! `BENCH {json}` line carrying the microkernel that executed it, plus
+//! `speedup` records comparing each baseline against its optimized
+//! variant — the perf trajectory tracked in PERF.md.
 
 use std::borrow::Cow;
 
 use qes::coordinator::{eval_problems, ClsBatch, EngineSet, GenBatch, Session};
+use qes::kernel::{self, KernelKind};
 use qes::model::{init::init_fp, ParamStore, ShardedParamStore};
 use qes::opt::{
     accumulate_grad, accumulate_grad_chunked, apply_perturbation, apply_perturbation_into,
@@ -47,12 +50,29 @@ fn main() {
     let micro = quant_store("micro");
     let dm = micro.lattice_dim();
     let threads = parallel::default_threads();
+    // the dispatched microkernel (QES_KERNEL / auto-detection); the
+    // scalar-vs-SIMD cases below toggle the dispatch and restore this
+    let auto_kind = kernel::active();
+    // the scalar->SIMD legs compare against the best backend this CPU
+    // supports (CPU capability, independent of QES_KERNEL — which still
+    // governs every other case; each record names the kernel that ran).
+    // Without a vector backend the legs AND their speedup records are
+    // skipped: a scalar-vs-scalar 1.00 would poison the perf trajectory.
+    let simd_kind = kernel::detect();
+    let mut kernel_legs = vec![("scalar", KernelKind::Scalar)];
+    if simd_kind != KernelKind::Scalar {
+        kernel_legs.push(("simd", simd_kind));
+    } else {
+        println!("no vector backend on this CPU; skipping scalar->simd bench legs");
+    }
     println!(
-        "lattice dims: nano d={} micro d={} | {} worker threads, chunk={}",
+        "lattice dims: nano d={} micro d={} | {} worker threads, chunk={} | kernel {} (available: {})",
         d,
         dm,
         threads,
-        qes::opt::DEFAULT_CHUNK
+        qes::opt::DEFAULT_CHUNK,
+        auto_kind.name(),
+        kernel::available().iter().map(|k| k.name()).collect::<Vec<_>>().join(", ")
     );
 
     let mut b = Bench::new("L3 hot paths");
@@ -168,6 +188,23 @@ fn main() {
         });
     }
 
+    // update_chunk: the fused full-residual update at a FIXED topology
+    // (default chunk, 1 thread) — isolates the microkernel dimension
+    // (axpby + f16 codec; gradient regeneration is RNG-bound and
+    // dominates, so this speedup is structurally modest)
+    for &(label, kind) in &kernel_legs {
+        kernel::force(Some(kind)).unwrap();
+        let mut s = sharded(&micro);
+        let mut opt = QesFullResidual::new(dm, 7, hyper.clone());
+        opt.policy = KernelPolicy::new(qes::opt::DEFAULT_CHUNK, 1);
+        let mut rng = SplitMix64::new(5);
+        b.run(&format!("update_chunk/{}/micro", label), || {
+            let sp = PopulationSpec { gen_seed: rng.next_u64(), pairs: 8, sigma: 0.02 };
+            opt.update(&mut s, &sp, &fitness).unwrap();
+        });
+    }
+    kernel::force(Some(auto_kind)).unwrap();
+
     // snapshot publication: what the leader pays per generation to hand
     // the worker pool a consistent view of the weights. Baseline: the
     // historical full `ParamStore::clone()`. Optimized: COW publish off
@@ -207,6 +244,18 @@ fn main() {
         black_box(back[0]);
     });
 
+    // f16_codec: the microkernel dimension (bit-twiddling scalar
+    // converter vs hardware vcvtps2ph/vcvtph2ps on AVX2 hosts)
+    for &(label, kind) in &kernel_legs {
+        kernel::force(Some(kind)).unwrap();
+        b.run(&format!("f16_codec/{}/64k elems", label), || {
+            f16_encode_slice(&xs, &mut bits);
+            f16_decode_slice(&bits, &mut back);
+            black_box(back[0]);
+        });
+    }
+    kernel::force(Some(auto_kind)).unwrap();
+
     // forward GEMM (the native backend's rollout hot-spot), at the
     // `base` config's mlp.w1 geometry: fused dequant-GEMM reading the
     // packed int4 nibbles / int8 slab directly vs the historical
@@ -230,6 +279,17 @@ fn main() {
                 gemm::matmul(&x, gm, &lin, &mut out, 1);
                 black_box(out[0]);
             });
+            // the microkernel dimension on the SAME fused path: forced
+            // scalar vs the best vector backend — the acceptance
+            // speedup record for the ISA dispatch layer
+            for &(label, kind) in &kernel_legs {
+                kernel::force(Some(kind)).unwrap();
+                b.run(&format!("forward_gemm/fused_{}/{}", label, geom), || {
+                    gemm::matmul(&x, gm, &lin, &mut out, 1);
+                    black_box(out[0]);
+                });
+            }
+            kernel::force(Some(auto_kind)).unwrap();
         }
     }
 
@@ -307,6 +367,30 @@ fn main() {
             "forward_gemm/fused/int8 64x256x512".to_string(),
         ),
     ] {
-        report_speedup("speedup", label, b.mean_ns(&base), b.mean_ns(&opt));
+        // both legs of these records ran under the ambient dispatch
+        report_speedup("speedup", label, auto_kind.name(), b.mean_ns(&base), b.mean_ns(&opt));
+    }
+
+    // scalar -> SIMD microkernel records (same fused algorithm, different
+    // ISA backend; the record's kernel field names the backend the
+    // optimized leg ran on). Only emitted when a vector backend exists —
+    // the cases above were skipped otherwise.
+    if simd_kind != KernelKind::Scalar {
+        for (label, base, opt) in [
+            (
+                "forward_gemm/simd/int4",
+                "forward_gemm/fused_scalar/int4 64x256x512",
+                "forward_gemm/fused_simd/int4 64x256x512",
+            ),
+            (
+                "forward_gemm/simd/int8",
+                "forward_gemm/fused_scalar/int8 64x256x512",
+                "forward_gemm/fused_simd/int8 64x256x512",
+            ),
+            ("update_chunk/micro", "update_chunk/scalar/micro", "update_chunk/simd/micro"),
+            ("f16_codec/64k", "f16_codec/scalar/64k elems", "f16_codec/simd/64k elems"),
+        ] {
+            report_speedup("speedup", label, simd_kind.name(), b.mean_ns(base), b.mean_ns(opt));
+        }
     }
 }

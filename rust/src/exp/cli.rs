@@ -160,6 +160,9 @@ pub struct FtArgs {
     pub variant: Variant,
     /// Forward backend: auto (default) | native | pjrt.
     pub backend: BackendPolicy,
+    /// ISA microkernel backend resolved from `--kernel` (default: auto —
+    /// `QES_KERNEL` env, else CPU detection). Applied process-wide.
+    pub kernel: crate::kernel::KernelKind,
     pub cfg: FinetuneCfg,
     pub pretrain_steps: usize,
     pub k_shot: usize,
@@ -172,6 +175,7 @@ pub fn parse_ft_args(args: &mut Args) -> Result<FtArgs> {
     let format = Format::parse(&args.get_or("format", "int4"))?;
     let variant = Variant::parse(&args.get_or("variant", "qes"))?;
     let backend = BackendPolicy::parse(&args.get_or("backend", "auto"))?;
+    let kernel_choice = crate::kernel::KernelKind::parse_choice(&args.get_or("kernel", "auto"))?;
     let hyper = EsHyper {
         sigma: args.get_f32("sigma", 0.01)?,
         alpha: args.get_f32("alpha", 5e-4)?,
@@ -190,6 +194,14 @@ pub fn parse_ft_args(args: &mut Args) -> Result<FtArgs> {
         seed: args.get_u64("seed", 42)?,
         verbose: !args.get_bool("quiet"),
     };
+    let pretrain_steps = args.get_usize("pretrain-steps", 400)?;
+    let k_shot = args.get_usize("k-shot", 16)?;
+    // apply the process-wide dispatch only after every flag THIS function
+    // parses has succeeded, so an argument error can't leave the global
+    // kernel repinned (the caller's trailing `args.finish()` can still
+    // fail afterwards — by then the user's explicit --kernel choice
+    // standing is the lesser surprise)
+    let kernel = crate::kernel::force(kernel_choice)?;
     Ok(FtArgs {
         manifest,
         size,
@@ -197,9 +209,10 @@ pub fn parse_ft_args(args: &mut Args) -> Result<FtArgs> {
         format,
         variant,
         backend,
+        kernel,
         cfg,
-        pretrain_steps: args.get_usize("pretrain-steps", 400)?,
-        k_shot: args.get_usize("k-shot", 16)?,
+        pretrain_steps,
+        k_shot,
     })
 }
 
@@ -221,7 +234,7 @@ pub fn cmd_finetune(mut args: Args) -> Result<()> {
     let workload = workload_for(&fa.task, &mcfg, &fa.cfg, fa.k_shot)?;
     let session =
         Session::with_policy(&man, &fa.size, fa.format, workload.engines(), fa.backend)?;
-    println!("[finetune] backend: {}", session.backend_name());
+    println!("[finetune] backend: {} | kernel: {}", session.backend_name(), fa.kernel.name());
     let (log, store) =
         finetune_store(&session, workload.as_ref(), store0, fa.variant, &fa.cfg, None)?;
     let dir = run_dir(&fa.size, &fa.task);

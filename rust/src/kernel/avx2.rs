@@ -1,0 +1,262 @@
+//! AVX2 + FMA + F16C backend (x86-64, Haswell and later).
+//!
+//! 8-wide f32 lanes over the N (output-column) axis; the K-loop order of
+//! every GEMM accumulator is untouched, and all mul/add sequences stay
+//! unfused, so `axpy_*`/`axpby`/`unpack_int4_row`/f16 results are
+//! bit-identical to the scalar backend (module docs in `kernel`). Only
+//! `dot_packed_int4` uses `vfmadd` with the pinned 8-lane layout.
+//!
+//! # Safety
+//!
+//! Every `#[target_feature]` function in here is reached only through
+//! [`Avx2Kernel`], which `kernel::by_kind` hands out only when
+//! `KernelKind::Avx2.supported()` (AVX2 + FMA + F16C detected at
+//! runtime). All raw-pointer loads/stores are bounds-asserted against
+//! the slice lengths first.
+
+use std::arch::x86_64::*;
+
+use super::{DotKernel, KernelKind};
+use crate::quant::pack;
+use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+
+pub struct Avx2Kernel;
+
+impl DotKernel for Avx2Kernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::Avx2
+    }
+
+    fn unpack_int4_row(&self, bytes: &[u8], start: usize, out: &mut [i8]) {
+        // SAFETY: constructed only when avx2 is detected (see module docs).
+        unsafe { unpack_row(bytes, start, out) }
+    }
+
+    fn axpy_i8(&self, acc: &mut [f32], xv: f32, w: &[i8]) {
+        assert_eq!(acc.len(), w.len(), "axpy_i8 length mismatch");
+        // SAFETY: avx2 detected; lengths checked above.
+        unsafe { axpy_i8(acc, xv, w) }
+    }
+
+    fn axpy_f32(&self, acc: &mut [f32], xv: f32, w: &[f32]) {
+        assert_eq!(acc.len(), w.len(), "axpy_f32 length mismatch");
+        // SAFETY: avx2 detected; lengths checked above.
+        unsafe { axpy_f32(acc, xv, w) }
+    }
+
+    fn axpby(&self, alpha: f32, g: &[f32], gamma: f32, u: &mut [f32]) {
+        assert_eq!(g.len(), u.len(), "axpby length mismatch");
+        // SAFETY: avx2 detected; lengths checked above.
+        unsafe { axpby(alpha, g, gamma, u) }
+    }
+
+    fn dot_packed_int4(&self, bytes: &[u8], start: usize, x: &[f32]) -> f32 {
+        // SAFETY: avx2 + fma detected.
+        unsafe { dot_packed(bytes, start, x) }
+    }
+
+    fn f16_encode(&self, xs: &[f32], out: &mut [u16]) {
+        assert_eq!(xs.len(), out.len(), "f16 encode length mismatch");
+        // SAFETY: f16c detected; lengths checked above.
+        unsafe { f16_encode(xs, out) }
+    }
+
+    fn f16_decode(&self, bits: &[u16], out: &mut [f32]) {
+        assert_eq!(bits.len(), out.len(), "f16 decode length mismatch");
+        // SAFETY: f16c detected; lengths checked above.
+        unsafe { f16_decode(bits, out) }
+    }
+}
+
+/// Nibble-LUT unpack, 32 int4 values per 16-byte load: `pshufb` over a
+/// sign-extension table, then interleave the low/high-nibble lanes back
+/// into element order. Exact integer work.
+#[target_feature(enable = "avx2")]
+unsafe fn unpack_row(bytes: &[u8], start: usize, out: &mut [i8]) {
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    assert!(
+        bytes.len() * 2 >= start + n,
+        "packed buffer too short: {} bytes for window [{}, {})",
+        bytes.len(),
+        start,
+        start + n
+    );
+    if start % 2 != 0 {
+        // misaligned half-byte start: rare (GEMM rows are element-aligned)
+        pack::unpack_int4_row(bytes, start, out);
+        return;
+    }
+    // value = sign_extend4(index) for index in 0..16
+    let lut = _mm_setr_epi8(0, 1, 2, 3, 4, 5, 6, 7, -8, -7, -6, -5, -4, -3, -2, -1);
+    let maskf = _mm_set1_epi8(0x0f);
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let x = _mm_loadu_si128(bytes.as_ptr().add((start + i) / 2) as *const __m128i);
+        let lo = _mm_shuffle_epi8(lut, _mm_and_si128(x, maskf));
+        let hi = _mm_shuffle_epi8(lut, _mm_and_si128(_mm_srli_epi16::<4>(x), maskf));
+        _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, _mm_unpacklo_epi8(lo, hi));
+        _mm_storeu_si128(
+            out.as_mut_ptr().add(i + 16) as *mut __m128i,
+            _mm_unpackhi_epi8(lo, hi),
+        );
+        i += 32;
+    }
+    if i < n {
+        // start + i stays even (i is a multiple of 32), so the scalar
+        // tail takes its aligned fast path
+        pack::unpack_int4_row(&bytes[(start + i) / 2..], 0, &mut out[i..]);
+    }
+}
+
+/// `acc[c] += xv * w[c] as f32`, 8 columns per iteration. Unfused
+/// mul+add — identical rounding to the scalar loop, per element.
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_i8(acc: &mut [f32], xv: f32, w: &[i8]) {
+    let n = acc.len();
+    let xvv = _mm256_set1_ps(xv);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let q = _mm_loadl_epi64(w.as_ptr().add(i) as *const __m128i);
+        let wf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(q));
+        let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+        let r = _mm256_add_ps(a, _mm256_mul_ps(xvv, wf));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), r);
+        i += 8;
+    }
+    while i < n {
+        acc[i] += xv * w[i] as f32;
+        i += 1;
+    }
+}
+
+/// `acc[c] += xv * w[c]`, 8 columns per iteration, unfused.
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_f32(acc: &mut [f32], xv: f32, w: &[f32]) {
+    let n = acc.len();
+    let xvv = _mm256_set1_ps(xv);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+        let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+        let r = _mm256_add_ps(a, _mm256_mul_ps(xvv, wv));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), r);
+        i += 8;
+    }
+    while i < n {
+        acc[i] += xv * w[i];
+        i += 1;
+    }
+}
+
+/// `u[i] = alpha * g[i] + gamma * u[i]`: two unfused multiplies and one
+/// add per element, same rounding sequence as the scalar loop.
+#[target_feature(enable = "avx2")]
+unsafe fn axpby(alpha: f32, g: &[f32], gamma: f32, u: &mut [f32]) {
+    let n = u.len();
+    let av = _mm256_set1_ps(alpha);
+    let cv = _mm256_set1_ps(gamma);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let gv = _mm256_loadu_ps(g.as_ptr().add(i));
+        let uv = _mm256_loadu_ps(u.as_ptr().add(i));
+        let r = _mm256_add_ps(_mm256_mul_ps(av, gv), _mm256_mul_ps(cv, uv));
+        _mm256_storeu_ps(u.as_mut_ptr().add(i), r);
+        i += 8;
+    }
+    while i < n {
+        u[i] = alpha * g[i] + gamma * u[i];
+        i += 1;
+    }
+}
+
+/// Packed-int4 dot with the pinned 8-lane FMA layout (see
+/// `DotKernel::dot_packed_int4`): lane `l` owns elements `8b + l`,
+/// reduced in the fixed order the conformance lane model replays.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_packed(bytes: &[u8], start: usize, x: &[f32]) -> f32 {
+    let n = x.len();
+    assert!(
+        bytes.len() * 2 >= start + n,
+        "packed buffer too short: {} bytes for window [{}, {})",
+        bytes.len(),
+        start,
+        start + n
+    );
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0usize;
+    if start % 2 == 0 {
+        let mut s32 = [0i8; 32];
+        while i + 32 <= n {
+            unpack_row(bytes, start + i, &mut s32);
+            for b in 0..4 {
+                let q = _mm_loadl_epi64(s32.as_ptr().add(8 * b) as *const __m128i);
+                let wf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(q));
+                let xv = _mm256_loadu_ps(x.as_ptr().add(i + 8 * b));
+                acc = _mm256_fmadd_ps(xv, wf, acc);
+            }
+            i += 32;
+        }
+    }
+    let mut s8 = [0i8; 8];
+    while i + 8 <= n {
+        pack::unpack_int4_row(bytes, start + i, &mut s8);
+        let q = _mm_loadl_epi64(s8.as_ptr() as *const __m128i);
+        let wf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(q));
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        acc = _mm256_fmadd_ps(xv, wf, acc);
+        i += 8;
+    }
+    // fixed lane reduction: s4[l] = acc[l] + acc[l+4];
+    // s2[l] = s4[l] + s4[l+2]; s = s2[0] + s2[1]
+    let s4 = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps::<1>(acc));
+    let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+    let s1 = _mm_add_ss(s2, _mm_shuffle_ps::<1>(s2, s2));
+    let mut sum = _mm_cvtss_f32(s1);
+    let mut one = [0i8; 1];
+    while i < n {
+        pack::unpack_int4_row(bytes, start + i, &mut one);
+        sum += x[i] * one[0] as f32;
+        i += 1;
+    }
+    sum
+}
+
+/// Hardware f32 -> f16 (vcvtps2ph), round-to-nearest-even — the uniquely
+/// defined IEEE conversion, bit-identical to the scalar converter for
+/// every non-NaN input.
+#[target_feature(enable = "avx2,f16c")]
+unsafe fn f16_encode(xs: &[f32], out: &mut [u16]) {
+    let n = xs.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(xs.as_ptr().add(i));
+        // imm8[1:0] = round-to-nearest-even (vcvtps2ph takes a 3-bit
+        // immediate: rounding mode + MXCSR-select; no SAE bit here)
+        let h = _mm256_cvtps_ph::<{ _MM_FROUND_TO_NEAREST_INT }>(v);
+        _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, h);
+        i += 8;
+    }
+    while i < n {
+        out[i] = f32_to_f16_bits(xs[i]);
+        i += 1;
+    }
+}
+
+/// Hardware f16 -> f32 (vcvtph2ps) — exact.
+#[target_feature(enable = "avx2,f16c")]
+unsafe fn f16_decode(bits: &[u16], out: &mut [f32]) {
+    let n = bits.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let h = _mm_loadu_si128(bits.as_ptr().add(i) as *const __m128i);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_cvtph_ps(h));
+        i += 8;
+    }
+    while i < n {
+        out[i] = f16_bits_to_f32(bits[i]);
+        i += 1;
+    }
+}

@@ -1,0 +1,596 @@
+//! Runtime-dispatched SIMD microkernels for the vectorizable inner loops.
+//!
+//! The fused dequant-GEMM (`runtime::native::gemm`), the INT4 packing
+//! primitives (`quant::pack`), the f16 residual codec (`util::f16`) and
+//! the error-feedback step of the update kernels (`opt::kernels`) all
+//! bottom out in a handful of dense inner loops. This module gives each
+//! of them one scalar reference implementation and per-ISA vector
+//! implementations behind the [`DotKernel`] trait, selected at runtime:
+//!
+//! * **scalar** — portable reference, runs everywhere; every other
+//!   backend is conformance-tested against it.
+//! * **avx2** — x86-64 with AVX2 + FMA + F16C (Haswell and later),
+//!   detected via `is_x86_feature_detected!`. 8-wide f32 lanes, 16-byte
+//!   nibble-LUT unpack (`pshufb`), hardware f16 conversion.
+//! * **neon** — aarch64 (NEON is baseline in the AArch64 ABI). 4-wide
+//!   f32 lanes paired to the same 8-lane layout, `tbl`-based nibble LUT;
+//!   the f16 codec stays scalar (stable Rust exposes no aarch64 f16
+//!   conversion intrinsics).
+//!
+//! # Selection
+//!
+//! The process-wide dispatch resolves once, in priority order: a forced
+//! kind from [`force`] (the CLI `--kernel` flag), else the `QES_KERNEL`
+//! environment variable (`scalar` | `avx2` | `neon` | `auto` — how CI
+//! pins the backend per leg; unknown or CPU-unsupported values fail
+//! loudly rather than silently running a different backend), else
+//! [`detect`]. Call sites that need an explicit backend (benches,
+//! conformance tests, `KernelPolicy::kernel`) go through [`by_kind`]
+//! instead and are unaffected by the global choice.
+//!
+//! # Determinism
+//!
+//! The dispatched kernels are held to the same contract as the
+//! chunk-parallel update kernels, with one documented exception:
+//!
+//! * [`DotKernel::unpack_int4_row`] is exact integer work — bit-identical
+//!   across every backend.
+//! * [`DotKernel::axpy_i8`] / [`DotKernel::axpy_f32`] /
+//!   [`DotKernel::axpby`] vectorize ACROSS elements while keeping each
+//!   element's op sequence (round-after-multiply, round-after-add, in
+//!   the same order as the scalar loop). No fused multiply-add, no
+//!   reassociation — results are bit-identical across backends, which is
+//!   why `QES_KERNEL` never changes a lattice, residual or forward
+//!   output. The GEMM's K-loop accumulation order is untouched: SIMD
+//!   runs along the N (output-column) axis.
+//! * [`DotKernel::dot_packed_int4`] is the one reassociating primitive:
+//!   it reduces over K in a fixed 8-lane layout with fused
+//!   multiply-adds (documented in the method; the lane model is pinned
+//!   exactly by the conformance tests, and agreement with the
+//!   sequential reference is tolerance-checked). Nothing on the
+//!   bit-exactness-contracted paths calls it.
+//! * [`DotKernel::f16_encode`]/[`f16_decode`](DotKernel::f16_decode) are
+//!   IEEE 754 round-to-nearest-even conversions — uniquely defined, so
+//!   hardware (F16C) and scalar agree bit-for-bit on every non-NaN
+//!   input (NaNs stay NaNs; payloads may differ and never occur in
+//!   residual state).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use anyhow::Result;
+
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// Which ISA microkernel backend services the inner loops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable scalar reference (always available).
+    Scalar,
+    /// x86-64 AVX2 + FMA + F16C.
+    Avx2,
+    /// aarch64 NEON.
+    Neon,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Neon => "neon",
+        }
+    }
+
+    /// Parse a `--kernel` / `QES_KERNEL` value; `auto` means "re-resolve
+    /// from the environment and CPU" and maps to `None`.
+    pub fn parse_choice(s: &str) -> Result<Option<KernelKind>> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "auto" => None,
+            "scalar" => Some(KernelKind::Scalar),
+            "avx2" => Some(KernelKind::Avx2),
+            "neon" => Some(KernelKind::Neon),
+            other => anyhow::bail!("unknown kernel {:?} (auto|scalar|avx2|neon)", other),
+        })
+    }
+
+    /// Can this backend run on the current CPU?
+    pub fn supported(self) -> bool {
+        match self {
+            KernelKind::Scalar => true,
+            KernelKind::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                        && std::arch::is_x86_feature_detected!("fma")
+                        && std::arch::is_x86_feature_detected!("f16c")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            // NEON is mandatory in the AArch64 ABI — no runtime check.
+            KernelKind::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+/// The microkernel interface: every method has a scalar reference
+/// implementation and (where the ISA is present) a vector one. See the
+/// module docs for which methods are bit-exact across backends.
+pub trait DotKernel: Sync + Send {
+    fn kind(&self) -> KernelKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Unpack `out.len()` int4 values starting at flat element `start`
+    /// of a nibble-packed buffer (sign-extended). Exact integer work —
+    /// bit-identical across backends.
+    fn unpack_int4_row(&self, bytes: &[u8], start: usize, out: &mut [i8]);
+
+    /// `acc[c] += xv * w[c] as f32` — the quantized GEMM's row update.
+    /// Per-element op order matches the scalar loop exactly.
+    fn axpy_i8(&self, acc: &mut [f32], xv: f32, w: &[i8]);
+
+    /// `acc[c] += xv * w[c]` — the fp GEMM / autograd row update.
+    /// Per-element op order matches the scalar loop exactly.
+    fn axpy_f32(&self, acc: &mut [f32], xv: f32, w: &[f32]);
+
+    /// `u[i] = alpha * g[i] + gamma * u[i]` — the vectorizable half of
+    /// the error-feedback update (Eq. 6): two rounded multiplies and one
+    /// rounded add per element, exactly as the scalar loop computed it.
+    fn axpby(&self, alpha: f32, g: &[f32], gamma: f32, u: &mut [f32]);
+
+    /// Fused gather + dot over a nibble-packed buffer:
+    /// `sum_j x[j] * q[start + j]`, for K-major (transposed-weight)
+    /// consumers. The ONE reassociating primitive: SIMD backends
+    /// accumulate in a fixed 8-lane layout — lane `l` owns elements
+    /// `8b + l` via fused multiply-adds, lanes reduce as
+    /// `s4[l] = acc[l] + acc[l+4]`, `s2[l] = s4[l] + s4[l+2]`,
+    /// `s = s2[0] + s2[1]`, then the `len % 8` tail is added
+    /// sequentially (unfused). The scalar backend keeps the historical
+    /// sequential order (`quant::pack::unpack_int4_dot`).
+    fn dot_packed_int4(&self, bytes: &[u8], start: usize, x: &[f32]) -> f32;
+
+    /// Slice f32 -> f16-bits conversion, IEEE round-to-nearest-even.
+    fn f16_encode(&self, xs: &[f32], out: &mut [u16]);
+
+    /// Slice f16-bits -> f32 conversion (exact).
+    fn f16_decode(&self, bits: &[u16], out: &mut [f32]);
+}
+
+static SCALAR: scalar::ScalarKernel = scalar::ScalarKernel;
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: avx2::Avx2Kernel = avx2::Avx2Kernel;
+
+#[cfg(target_arch = "aarch64")]
+static NEON: neon::NeonKernel = neon::NeonKernel;
+
+/// The kernel implementing `kind`. Panics if this CPU cannot run `kind`
+/// — the same loud-failure policy as [`force`]/[`resolve_name`]: a
+/// caller that pinned a backend (e.g. `KernelPolicy::with_kernel`) must
+/// never be handed a different one, or a suite believed to exercise
+/// that backend would green-light having tested nothing. Gate with
+/// [`KernelKind::supported`] / [`available`] first.
+pub fn by_kind(kind: KernelKind) -> &'static dyn DotKernel {
+    match kind {
+        KernelKind::Scalar => &SCALAR,
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 if KernelKind::Avx2.supported() => &AVX2,
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => &NEON,
+        other => panic!(
+            "kernel {} is not supported on this CPU (available: {})",
+            other.name(),
+            available().iter().map(|k| k.name()).collect::<Vec<_>>().join(", ")
+        ),
+    }
+}
+
+/// Best backend this CPU supports.
+pub fn detect() -> KernelKind {
+    if KernelKind::Avx2.supported() {
+        KernelKind::Avx2
+    } else if KernelKind::Neon.supported() {
+        KernelKind::Neon
+    } else {
+        KernelKind::Scalar
+    }
+}
+
+/// Every backend that can run on this CPU (scalar first) — what the
+/// conformance tests and benches iterate.
+pub fn available() -> Vec<KernelKind> {
+    let mut out = vec![KernelKind::Scalar];
+    for k in [KernelKind::Avx2, KernelKind::Neon] {
+        if k.supported() {
+            out.push(k);
+        }
+    }
+    out
+}
+
+// 0 = unresolved; first use resolves from QES_KERNEL / detection. The
+// benign race (two threads resolving concurrently) writes the same value.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+fn code(k: KernelKind) -> u8 {
+    match k {
+        KernelKind::Scalar => 1,
+        KernelKind::Avx2 => 2,
+        KernelKind::Neon => 3,
+    }
+}
+
+fn decode(c: u8) -> KernelKind {
+    match c {
+        2 => KernelKind::Avx2,
+        3 => KernelKind::Neon,
+        _ => KernelKind::Scalar,
+    }
+}
+
+/// Resolve a `QES_KERNEL`-style name against this CPU. Strict: an
+/// unknown value or a backend this CPU cannot run is an error, never a
+/// silent fallback — forcing a backend exists precisely to PROVE the
+/// bit-exactness contract, so running a different one than requested
+/// would green-light a suite that tested nothing.
+pub fn resolve_name(name: &str) -> Result<KernelKind> {
+    match KernelKind::parse_choice(name)? {
+        None => Ok(detect()),
+        Some(k) => {
+            anyhow::ensure!(
+                k.supported(),
+                "kernel {} is not supported on this CPU (available: {})",
+                k.name(),
+                available().iter().map(|k| k.name()).collect::<Vec<_>>().join(", ")
+            );
+            Ok(k)
+        }
+    }
+}
+
+/// Panics on an invalid `QES_KERNEL` (see [`resolve_name`] — explicit
+/// forcing requests fail loudly).
+fn resolve_env() -> KernelKind {
+    match std::env::var("QES_KERNEL") {
+        Ok(v) => resolve_name(&v)
+            .unwrap_or_else(|e| panic!("invalid QES_KERNEL={:?}: {}", v, e)),
+        Err(_) => detect(),
+    }
+}
+
+/// The process-wide dispatched backend (resolving it on first use).
+pub fn active() -> KernelKind {
+    match ACTIVE.load(Ordering::Relaxed) {
+        0 => {
+            let k = resolve_env();
+            ACTIVE.store(code(k), Ordering::Relaxed);
+            k
+        }
+        c => decode(c),
+    }
+}
+
+/// The process-wide dispatched kernel.
+pub fn active_kernel() -> &'static dyn DotKernel {
+    by_kind(active())
+}
+
+/// Override the process-wide dispatch (the CLI `--kernel` flag; benches
+/// toggle it to time each backend). `None` re-resolves from
+/// `QES_KERNEL`/detection; `Some(kind)` errors if this CPU cannot run
+/// `kind`. Returns the kind now active.
+pub fn force(choice: Option<KernelKind>) -> Result<KernelKind> {
+    let k = match choice {
+        None => resolve_env(),
+        Some(k) => {
+            anyhow::ensure!(
+                k.supported(),
+                "kernel {} is not supported on this CPU (available: {})",
+                k.name(),
+                available().iter().map(|k| k.name()).collect::<Vec<_>>().join(", ")
+            );
+            k
+        }
+    };
+    ACTIVE.store(code(k), Ordering::Relaxed);
+    Ok(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::{pack_int4, unpack_int4_dot, unpack_int4_row};
+    use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+    use crate::util::prop::prop_check;
+
+    fn non_scalar() -> Vec<&'static dyn DotKernel> {
+        available()
+            .into_iter()
+            .filter(|&k| k != KernelKind::Scalar)
+            .map(by_kind)
+            .collect()
+    }
+
+    #[test]
+    fn parse_and_support() {
+        assert_eq!(KernelKind::parse_choice("auto").unwrap(), None);
+        assert_eq!(KernelKind::parse_choice("SCALAR").unwrap(), Some(KernelKind::Scalar));
+        assert_eq!(KernelKind::parse_choice("avx2").unwrap(), Some(KernelKind::Avx2));
+        assert_eq!(KernelKind::parse_choice("neon").unwrap(), Some(KernelKind::Neon));
+        assert!(KernelKind::parse_choice("sse9").is_err());
+        assert!(KernelKind::Scalar.supported());
+        // every advertised backend must actually be constructible and
+        // report its own kind; unsupported kinds fall back to scalar
+        for k in available() {
+            assert_eq!(by_kind(k).kind(), k, "{}", k.name());
+        }
+        assert!(available().contains(&detect()));
+        // explicit forcing is strict: unknown names error instead of
+        // silently running a different backend than requested
+        assert!(resolve_name("bogus").is_err());
+        assert!(resolve_name("auto").unwrap().supported());
+        assert_eq!(resolve_name("scalar").unwrap(), KernelKind::Scalar);
+        #[cfg(not(target_arch = "aarch64"))]
+        assert!(resolve_name("neon").is_err());
+    }
+
+    #[test]
+    fn prop_unpack_conformance_every_backend() {
+        // Exact match vs the scalar reference over random shapes, odd
+        // starts (the misaligned half-byte path), the full nibble range
+        // including -8, and tails shorter than any lane width.
+        prop_check("kernel unpack vs scalar reference", 300, |g| {
+            let n = g.usize_in(1, 400);
+            let q = g.vec_i8(n, -8, 7);
+            let packed = pack_int4(&q);
+            let start = g.usize_in(0, n - 1);
+            let len = g.usize_in(0, n - start);
+            let mut want = vec![0i8; len];
+            unpack_int4_row(&packed, start, &mut want);
+            for k in available() {
+                let kr = by_kind(k);
+                let mut got = vec![0i8; len];
+                kr.unpack_int4_row(&packed, start, &mut got);
+                if got != want {
+                    return Err(format!(
+                        "{}: unpack mismatch at start={} len={} (n={})",
+                        kr.name(),
+                        start,
+                        len,
+                        n
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_axpy_bit_exact_every_backend() {
+        // axpy is on the bit-exactness contract: vector lanes must
+        // produce the very same f32s as the scalar loop, for every
+        // length (including < lane-width tails and length 0).
+        prop_check("kernel axpy vs scalar, bitwise", 300, |g| {
+            let n = g.usize_in(0, 100);
+            let xv = g.f32_in(-2.0, 2.0);
+            let wq = g.vec_i8(n, -8, 7);
+            let wf = g.vec_f32(n, -1.0, 1.0);
+            let acc0 = g.vec_f32(n, -4.0, 4.0);
+            let mut want_q = acc0.clone();
+            by_kind(KernelKind::Scalar).axpy_i8(&mut want_q, xv, &wq);
+            let mut want_f = acc0.clone();
+            by_kind(KernelKind::Scalar).axpy_f32(&mut want_f, xv, &wf);
+            for kr in non_scalar() {
+                let mut got = acc0.clone();
+                kr.axpy_i8(&mut got, xv, &wq);
+                if got.iter().zip(&want_q).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err(format!("{}: axpy_i8 diverged at n={}", kr.name(), n));
+                }
+                let mut got = acc0.clone();
+                kr.axpy_f32(&mut got, xv, &wf);
+                if got.iter().zip(&want_f).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err(format!("{}: axpy_f32 diverged at n={}", kr.name(), n));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_axpby_bit_exact_every_backend() {
+        prop_check("kernel axpby vs scalar, bitwise", 300, |g| {
+            let n = g.usize_in(0, 100);
+            let alpha = g.f32_in(-1.0, 1.0);
+            let gamma = g.f32_in(0.0, 1.0);
+            let gv = g.vec_f32(n, -3.0, 3.0);
+            let u0 = g.vec_f32(n, -0.6, 0.6);
+            let mut want = u0.clone();
+            by_kind(KernelKind::Scalar).axpby(alpha, &gv, gamma, &mut want);
+            for kr in non_scalar() {
+                let mut got = u0.clone();
+                kr.axpby(alpha, &gv, gamma, &mut got);
+                if got.iter().zip(&want).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err(format!("{}: axpby diverged at n={}", kr.name(), n));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Scalar emulation of the documented 8-lane FMA dot: the EXACT model
+    /// every SIMD backend must implement (f32::mul_add is the correctly
+    /// rounded fused op, same as the hardware instruction).
+    fn dot_lane_model(q: &[i8], x: &[f32]) -> f32 {
+        let mut acc = [0.0f32; 8];
+        let blocks = x.len() / 8;
+        for b in 0..blocks {
+            for l in 0..8 {
+                let j = 8 * b + l;
+                acc[l] = x[j].mul_add(q[j] as f32, acc[l]);
+            }
+        }
+        let s4: Vec<f32> = (0..4).map(|l| acc[l] + acc[l + 4]).collect();
+        let s2 = [s4[0] + s4[2], s4[1] + s4[3]];
+        let mut s = s2[0] + s2[1];
+        for j in 8 * blocks..x.len() {
+            s += x[j] * q[j] as f32;
+        }
+        s
+    }
+
+    #[test]
+    fn prop_dot_matches_lane_model_exactly_and_reference_loosely() {
+        prop_check("kernel dot: lane model exact, reference close", 300, |g| {
+            let n = g.usize_in(1, 400);
+            let q = g.vec_i8(n, -8, 7);
+            let packed = pack_int4(&q);
+            let start = g.usize_in(0, n - 1);
+            let len = g.usize_in(0, n - start);
+            let x = g.vec_f32(len, -2.0, 2.0);
+            let reference = unpack_int4_dot(&packed, start, &x);
+            let scalar = by_kind(KernelKind::Scalar).dot_packed_int4(&packed, start, &x);
+            if scalar.to_bits() != reference.to_bits() {
+                return Err("scalar kernel dot must BE the sequential reference".into());
+            }
+            let model = dot_lane_model(&q[start..start + len], &x);
+            for kr in non_scalar() {
+                let got = kr.dot_packed_int4(&packed, start, &x);
+                if got.to_bits() != model.to_bits() {
+                    return Err(format!(
+                        "{}: dot deviates from the pinned 8-lane model at start={} len={}: {} vs {}",
+                        kr.name(),
+                        start,
+                        len,
+                        got,
+                        model
+                    ));
+                }
+                // reassociation tolerance vs the sequential order:
+                // bounded by ~len * eps * sum|x_j q_j|
+                let mag: f32 =
+                    x.iter().zip(&q[start..]).map(|(&xv, &qv)| (xv * qv as f32).abs()).sum();
+                let tol = 1e-6 * mag + 1e-6;
+                if (got - reference).abs() > tol {
+                    return Err(format!(
+                        "{}: dot too far from sequential reference: {} vs {} (tol {})",
+                        kr.name(),
+                        got,
+                        reference,
+                        tol
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_f16_codec_bit_exact_every_backend() {
+        prop_check("kernel f16 codec vs scalar, bitwise", 200, |g| {
+            let n = g.usize_in(0, 70);
+            let mut xs = g.vec_f32(n, -2.0, 2.0);
+            // salt with specials + boundary cases every round
+            for v in [
+                0.0f32,
+                -0.0,
+                1.0,
+                -1.0,
+                65504.0,   // f16 max
+                65520.0,   // rounds up to +inf
+                1e6,       // overflow
+                -1e6,
+                6.1e-5,    // smallest normal neighborhood
+                5.96e-8,   // ~2^-24, smallest subnormal
+                4.5e-8,    // in (2^-25, 2^-24): rounds to 0x0001
+                2.9e-8,    // just below 2^-25: flushes to zero
+                -4.5e-8,
+                f32::INFINITY,
+                f32::NEG_INFINITY,
+                g.f32_in(-1e-4, 1e-4), // subnormal-f16 territory
+            ] {
+                xs.push(v);
+            }
+            let m = xs.len();
+            let mut want_bits = vec![0u16; m];
+            by_kind(KernelKind::Scalar).f16_encode(&xs, &mut want_bits);
+            // the scalar slice path must equal the per-element converter
+            for (j, (&x, &h)) in xs.iter().zip(&want_bits).enumerate() {
+                if h != f32_to_f16_bits(x) {
+                    return Err(format!("scalar slice encode != per-element at {}", j));
+                }
+            }
+            let mut want_back = vec![0.0f32; m];
+            by_kind(KernelKind::Scalar).f16_decode(&want_bits, &mut want_back);
+            for kr in non_scalar() {
+                let mut got = vec![0u16; m];
+                kr.f16_encode(&xs, &mut got);
+                if got != want_bits {
+                    let j = got.iter().zip(&want_bits).position(|(a, b)| a != b).unwrap();
+                    return Err(format!(
+                        "{}: f16 encode mismatch at {} (x={}): {:#06x} vs {:#06x}",
+                        kr.name(),
+                        j,
+                        xs[j],
+                        got[j],
+                        want_bits[j]
+                    ));
+                }
+                let mut back = vec![0.0f32; m];
+                kr.f16_decode(&want_bits, &mut back);
+                if back.iter().zip(&want_back).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err(format!("{}: f16 decode mismatch", kr.name()));
+                }
+            }
+            Ok(())
+        });
+        // NaN: encode/decode must stay NaN on every backend (payloads are
+        // unspecified — residual state never contains NaNs).
+        for k in available() {
+            let kr = by_kind(k);
+            let mut h = [0u16; 1];
+            kr.f16_encode(&[f32::NAN], &mut h);
+            let mut back = [0.0f32; 1];
+            kr.f16_decode(&h, &mut back);
+            assert!(back[0].is_nan(), "{}: NaN lost in f16 codec", kr.name());
+            assert!(f16_bits_to_f32(h[0]).is_nan());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not supported")]
+    #[cfg(target_arch = "x86_64")]
+    fn by_kind_rejects_unsupported_kind() {
+        let _ = by_kind(KernelKind::Neon);
+    }
+
+    #[test]
+    #[should_panic(expected = "not supported")]
+    #[cfg(target_arch = "aarch64")]
+    fn by_kind_rejects_unsupported_kind() {
+        let _ = by_kind(KernelKind::Avx2);
+    }
+
+    #[test]
+    fn dispatched_kernel_is_supported_and_forcible() {
+        let k = active();
+        assert!(k.supported());
+        // forcing scalar then restoring auto must both succeed anywhere
+        assert_eq!(force(Some(KernelKind::Scalar)).unwrap(), KernelKind::Scalar);
+        assert_eq!(active(), KernelKind::Scalar);
+        let restored = force(None).unwrap();
+        assert!(restored.supported());
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        assert!(force(Some(KernelKind::Avx2)).is_err());
+    }
+}

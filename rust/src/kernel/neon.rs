@@ -1,0 +1,215 @@
+//! NEON backend (aarch64, where NEON is part of the base ABI).
+//!
+//! Mirrors the AVX2 backend at 4-wide f32 granularity: unfused mul+add
+//! along the output-column axis keeps `axpy_*`/`axpby` bit-identical to
+//! scalar; `dot_packed_int4` implements the SAME pinned 8-lane FMA
+//! layout as AVX2 (two 4-lane accumulators side by side), so the one
+//! reassociating primitive agrees bit-for-bit across ISAs. The f16
+//! codec stays scalar — stable Rust exposes no aarch64 f16 conversion
+//! intrinsics.
+//!
+//! # Safety
+//!
+//! NEON is mandatory on aarch64, so the `#[target_feature]` functions
+//! here are callable on every aarch64 CPU; raw-pointer loads/stores are
+//! bounds-asserted against slice lengths first.
+
+use std::arch::aarch64::*;
+
+use super::{DotKernel, KernelKind};
+use crate::quant::pack;
+use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+
+pub struct NeonKernel;
+
+impl DotKernel for NeonKernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::Neon
+    }
+
+    fn unpack_int4_row(&self, bytes: &[u8], start: usize, out: &mut [i8]) {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { unpack_row(bytes, start, out) }
+    }
+
+    fn axpy_i8(&self, acc: &mut [f32], xv: f32, w: &[i8]) {
+        assert_eq!(acc.len(), w.len(), "axpy_i8 length mismatch");
+        // SAFETY: NEON is baseline on aarch64; lengths checked above.
+        unsafe { axpy_i8(acc, xv, w) }
+    }
+
+    fn axpy_f32(&self, acc: &mut [f32], xv: f32, w: &[f32]) {
+        assert_eq!(acc.len(), w.len(), "axpy_f32 length mismatch");
+        // SAFETY: NEON is baseline on aarch64; lengths checked above.
+        unsafe { axpy_f32(acc, xv, w) }
+    }
+
+    fn axpby(&self, alpha: f32, g: &[f32], gamma: f32, u: &mut [f32]) {
+        assert_eq!(g.len(), u.len(), "axpby length mismatch");
+        // SAFETY: NEON is baseline on aarch64; lengths checked above.
+        unsafe { axpby(alpha, g, gamma, u) }
+    }
+
+    fn dot_packed_int4(&self, bytes: &[u8], start: usize, x: &[f32]) -> f32 {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { dot_packed(bytes, start, x) }
+    }
+
+    fn f16_encode(&self, xs: &[f32], out: &mut [u16]) {
+        assert_eq!(xs.len(), out.len(), "f16 encode length mismatch");
+        for (o, &x) in out.iter_mut().zip(xs.iter()) {
+            *o = f32_to_f16_bits(x);
+        }
+    }
+
+    fn f16_decode(&self, bits: &[u16], out: &mut [f32]) {
+        assert_eq!(bits.len(), out.len(), "f16 decode length mismatch");
+        for (o, &h) in out.iter_mut().zip(bits.iter()) {
+            *o = f16_bits_to_f32(h);
+        }
+    }
+}
+
+/// Nibble-LUT unpack, 32 int4 values per 16-byte load: `tbl` over the
+/// sign-extension table, then zip the low/high-nibble lanes back into
+/// element order. Exact integer work.
+#[target_feature(enable = "neon")]
+unsafe fn unpack_row(bytes: &[u8], start: usize, out: &mut [i8]) {
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    assert!(
+        bytes.len() * 2 >= start + n,
+        "packed buffer too short: {} bytes for window [{}, {})",
+        bytes.len(),
+        start,
+        start + n
+    );
+    if start % 2 != 0 {
+        pack::unpack_int4_row(bytes, start, out);
+        return;
+    }
+    const LUT: [i8; 16] = [0, 1, 2, 3, 4, 5, 6, 7, -8, -7, -6, -5, -4, -3, -2, -1];
+    let lut = vld1q_s8(LUT.as_ptr());
+    let maskf = vdupq_n_u8(0x0f);
+    let mut i = 0usize;
+    while i + 32 <= n {
+        let x = vld1q_u8(bytes.as_ptr().add((start + i) / 2));
+        let lo = vqtbl1q_s8(lut, vandq_u8(x, maskf));
+        let hi = vqtbl1q_s8(lut, vshrq_n_u8::<4>(x));
+        vst1q_s8(out.as_mut_ptr().add(i), vzip1q_s8(lo, hi));
+        vst1q_s8(out.as_mut_ptr().add(i + 16), vzip2q_s8(lo, hi));
+        i += 32;
+    }
+    if i < n {
+        pack::unpack_int4_row(&bytes[(start + i) / 2..], 0, &mut out[i..]);
+    }
+}
+
+/// Widen 8 int8 weights to two 4-lane f32 vectors.
+#[inline(always)]
+unsafe fn widen8(w: *const i8) -> (float32x4_t, float32x4_t) {
+    let w16 = vmovl_s8(vld1_s8(w));
+    (
+        vcvtq_f32_s32(vmovl_s16(vget_low_s16(w16))),
+        vcvtq_f32_s32(vmovl_s16(vget_high_s16(w16))),
+    )
+}
+
+/// `acc[c] += xv * w[c] as f32`, unfused — bit-identical to scalar.
+#[target_feature(enable = "neon")]
+unsafe fn axpy_i8(acc: &mut [f32], xv: f32, w: &[i8]) {
+    let n = acc.len();
+    let xvv = vdupq_n_f32(xv);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let (w03, w47) = widen8(w.as_ptr().add(i));
+        let a03 = vld1q_f32(acc.as_ptr().add(i));
+        let a47 = vld1q_f32(acc.as_ptr().add(i + 4));
+        vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(a03, vmulq_f32(xvv, w03)));
+        vst1q_f32(acc.as_mut_ptr().add(i + 4), vaddq_f32(a47, vmulq_f32(xvv, w47)));
+        i += 8;
+    }
+    while i < n {
+        acc[i] += xv * w[i] as f32;
+        i += 1;
+    }
+}
+
+/// `acc[c] += xv * w[c]`, unfused — bit-identical to scalar.
+#[target_feature(enable = "neon")]
+unsafe fn axpy_f32(acc: &mut [f32], xv: f32, w: &[f32]) {
+    let n = acc.len();
+    let xvv = vdupq_n_f32(xv);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let wv = vld1q_f32(w.as_ptr().add(i));
+        let a = vld1q_f32(acc.as_ptr().add(i));
+        vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(a, vmulq_f32(xvv, wv)));
+        i += 4;
+    }
+    while i < n {
+        acc[i] += xv * w[i];
+        i += 1;
+    }
+}
+
+/// `u[i] = alpha * g[i] + gamma * u[i]`, unfused — bit-identical to
+/// scalar.
+#[target_feature(enable = "neon")]
+unsafe fn axpby(alpha: f32, g: &[f32], gamma: f32, u: &mut [f32]) {
+    let n = u.len();
+    let av = vdupq_n_f32(alpha);
+    let cv = vdupq_n_f32(gamma);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let gv = vld1q_f32(g.as_ptr().add(i));
+        let uv = vld1q_f32(u.as_ptr().add(i));
+        vst1q_f32(u.as_mut_ptr().add(i), vaddq_f32(vmulq_f32(av, gv), vmulq_f32(cv, uv)));
+        i += 4;
+    }
+    while i < n {
+        u[i] = alpha * g[i] + gamma * u[i];
+        i += 1;
+    }
+}
+
+/// Packed-int4 dot with the SAME pinned 8-lane FMA layout as AVX2: two
+/// 4-lane accumulators stand in for lanes 0-3 / 4-7, `vfma` is the
+/// correctly-rounded fused op, and the reduction replays the fixed order
+/// `s4[l] = acc[l] + acc[l+4]; s2[l] = s4[l] + s4[l+2]; s2[0] + s2[1]`.
+#[target_feature(enable = "neon")]
+unsafe fn dot_packed(bytes: &[u8], start: usize, x: &[f32]) -> f32 {
+    let n = x.len();
+    assert!(
+        bytes.len() * 2 >= start + n,
+        "packed buffer too short: {} bytes for window [{}, {})",
+        bytes.len(),
+        start,
+        start + n
+    );
+    let mut acc0 = vdupq_n_f32(0.0); // model lanes 0..4
+    let mut acc1 = vdupq_n_f32(0.0); // model lanes 4..8
+    let mut i = 0usize;
+    let mut s8 = [0i8; 8];
+    while i + 8 <= n {
+        pack::unpack_int4_row(bytes, start + i, &mut s8);
+        let (w03, w47) = widen8(s8.as_ptr());
+        let x03 = vld1q_f32(x.as_ptr().add(i));
+        let x47 = vld1q_f32(x.as_ptr().add(i + 4));
+        acc0 = vfmaq_f32(acc0, x03, w03);
+        acc1 = vfmaq_f32(acc1, x47, w47);
+        i += 8;
+    }
+    let s4 = vaddq_f32(acc0, acc1);
+    let s2 = vadd_f32(vget_low_f32(s4), vget_high_f32(s4));
+    let mut sum = vget_lane_f32::<0>(s2) + vget_lane_f32::<1>(s2);
+    let mut one = [0i8; 1];
+    while i < n {
+        pack::unpack_int4_row(bytes, start + i, &mut one);
+        sum += x[i] * one[0] as f32;
+        i += 1;
+    }
+    sum
+}

@@ -1,0 +1,58 @@
+//! Portable scalar reference backend: the exact historical inner loops,
+//! delegating to the canonical primitives in `quant::pack` / `util::f16`.
+//! Every SIMD backend is conformance-tested against this one.
+
+use super::{DotKernel, KernelKind};
+use crate::quant::pack;
+use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+
+pub struct ScalarKernel;
+
+impl DotKernel for ScalarKernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::Scalar
+    }
+
+    fn unpack_int4_row(&self, bytes: &[u8], start: usize, out: &mut [i8]) {
+        pack::unpack_int4_row(bytes, start, out);
+    }
+
+    fn axpy_i8(&self, acc: &mut [f32], xv: f32, w: &[i8]) {
+        assert_eq!(acc.len(), w.len(), "axpy_i8 length mismatch");
+        for (o, &q) in acc.iter_mut().zip(w.iter()) {
+            *o += xv * q as f32;
+        }
+    }
+
+    fn axpy_f32(&self, acc: &mut [f32], xv: f32, w: &[f32]) {
+        assert_eq!(acc.len(), w.len(), "axpy_f32 length mismatch");
+        for (o, &wv) in acc.iter_mut().zip(w.iter()) {
+            *o += xv * wv;
+        }
+    }
+
+    fn axpby(&self, alpha: f32, g: &[f32], gamma: f32, u: &mut [f32]) {
+        assert_eq!(g.len(), u.len(), "axpby length mismatch");
+        for (uv, &gv) in u.iter_mut().zip(g.iter()) {
+            *uv = alpha * gv + gamma * *uv;
+        }
+    }
+
+    fn dot_packed_int4(&self, bytes: &[u8], start: usize, x: &[f32]) -> f32 {
+        pack::unpack_int4_dot(bytes, start, x)
+    }
+
+    fn f16_encode(&self, xs: &[f32], out: &mut [u16]) {
+        assert_eq!(xs.len(), out.len(), "f16 encode length mismatch");
+        for (o, &x) in out.iter_mut().zip(xs.iter()) {
+            *o = f32_to_f16_bits(x);
+        }
+    }
+
+    fn f16_decode(&self, bits: &[u16], out: &mut [f32]) {
+        assert_eq!(bits.len(), out.len(), "f16 decode length mismatch");
+        for (o, &h) in out.iter_mut().zip(bits.iter()) {
+            *o = f16_bits_to_f32(h);
+        }
+    }
+}

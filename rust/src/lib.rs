@@ -8,9 +8,11 @@
 //! * [`rng`] — deterministic seed-replayable noise streams
 //! * [`model`] — manifest-mirrored parameter store + checkpoints
 //! * [`runtime`] — PJRT engines over AOT HLO artifacts
+//! * [`kernel`] — runtime-dispatched SIMD microkernels (scalar/AVX2/NEON)
 //! * [`util`] — offline stand-ins for json/clap/criterion/proptest
 pub mod coordinator;
 pub mod exp;
+pub mod kernel;
 pub mod model;
 pub mod opt;
 pub mod quant;

@@ -55,6 +55,15 @@ fn cmd_info(mut args: Args) -> Result<()> {
     args.finish()?;
     let man = qes::runtime::Manifest::load(&manifest)?;
     println!("manifest: {}", manifest);
+    println!(
+        "kernels: dispatched {} | available on this CPU: {}",
+        qes::kernel::active().name(),
+        qes::kernel::available()
+            .iter()
+            .map(|k| k.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
     println!("\nmodel configs:");
     for (name, c) in &man.configs {
         println!(

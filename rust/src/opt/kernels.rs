@@ -19,19 +19,22 @@
 //! # Determinism contract
 //!
 //! Every kernel produces results **bit-identical to the sequential scalar
-//! path, for any chunk size and any thread count**. The contract holds
-//! because (a) stream jumps reproduce exact sequential stream positions,
-//! (b) each element's f32 operations happen in the same order as the
-//! scalar path (pair-major per element), and (c) chunks own disjoint
-//! slices, so thread scheduling can never reorder arithmetic. Seed-replay
-//! correctness (paper Algorithm 2) depends on this: a lattice evolved on
-//! 8 threads must be re-materializable on 1. `tests/equivalence.rs`
-//! enforces the contract across chunk sizes {1, 64, 4096} and thread
-//! counts {1, 2, 8}.
+//! path, for any chunk size, any thread count and any ISA microkernel
+//! backend** (`KernelPolicy::kernel`, `crate::kernel`). The contract
+//! holds because (a) stream jumps reproduce exact sequential stream
+//! positions, (b) each element's f32 operations happen in the same order
+//! as the scalar path (pair-major per element) — the SIMD backends
+//! vectorize ACROSS elements with unfused mul+add, never within an
+//! element's op sequence, and (c) chunks own disjoint slices, so thread
+//! scheduling can never reorder arithmetic. Seed-replay correctness
+//! (paper Algorithm 2) depends on this: a lattice evolved on 8 threads
+//! with AVX2 microkernels must be re-materializable on 1 scalar thread.
+//! `tests/equivalence.rs` enforces the contract across chunk sizes
+//! {1, 64, 4096} × thread counts {1, 2, 8} × every detected microkernel.
 
+use crate::kernel::{self, DotKernel, KernelKind};
 use crate::opt::{gate_eval, PopulationSpec, StepStats};
 use crate::rng::{NoiseStream, SplitMix64};
-use crate::util::f16::{f16_decode_slice, f16_encode_slice};
 use crate::util::parallel;
 
 /// Default chunk size: 8 Ki elements keeps the working set (chunk of
@@ -50,31 +53,67 @@ pub const DEFAULT_CHUNK: usize = crate::model::SHARD_ALIGN;
 /// weight slabs.
 pub type WeightDeltas = Vec<(usize, i8)>;
 
-/// How a kernel splits and schedules its work. Never affects results —
-/// only wall-clock (see the module-level determinism contract).
+/// How a kernel splits and schedules its work — and which ISA microkernel
+/// backend services the vectorizable inner loops. Never affects results —
+/// only wall-clock (see the module-level determinism contract; the SIMD
+/// backends keep every element's op sequence, `crate::kernel` docs).
 #[derive(Debug, Clone, Copy)]
 pub struct KernelPolicy {
     /// Elements per chunk (clamped to [1, d]).
     pub chunk_size: usize,
     /// Worker threads (1 = run inline on the caller's thread).
     pub threads: usize,
+    /// ISA microkernel backend; `None` follows the process-wide dispatch
+    /// (`QES_KERNEL` / `--kernel` / auto-detection).
+    pub kernel: Option<KernelKind>,
 }
 
 impl Default for KernelPolicy {
     fn default() -> Self {
-        KernelPolicy { chunk_size: DEFAULT_CHUNK, threads: parallel::default_threads() }
+        KernelPolicy {
+            chunk_size: DEFAULT_CHUNK,
+            threads: parallel::default_threads(),
+            kernel: None,
+        }
     }
 }
 
 impl KernelPolicy {
     pub fn new(chunk_size: usize, threads: usize) -> Self {
-        KernelPolicy { chunk_size, threads }
+        KernelPolicy { chunk_size, threads, kernel: None }
     }
 
     /// The sequential reference policy: one chunk, one thread — executes
     /// the exact op sequence of the historical scalar implementation.
+    /// Deliberately topology-only (`kernel: None`, the process-wide
+    /// dispatch): microkernel backends are bit-identical on these paths,
+    /// and keeping both legs of the scalar-vs-chunked BENCH records on
+    /// the SAME backend keeps that trajectory measuring chunk
+    /// parallelism alone (the ISA dimension has its own `update_chunk`
+    /// records). Pin explicitly with [`KernelPolicy::with_kernel`] when
+    /// the backend itself is the variable under test.
     pub fn scalar() -> Self {
-        KernelPolicy { chunk_size: usize::MAX, threads: 1 }
+        KernelPolicy { chunk_size: usize::MAX, threads: 1, kernel: None }
+    }
+
+    /// Pin (or unpin) the ISA microkernel backend.
+    pub fn with_kernel(mut self, kernel: Option<KernelKind>) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Resolve the microkernel this policy executes on.
+    pub fn microkernel(&self) -> &'static dyn DotKernel {
+        match self.kernel {
+            Some(k) => kernel::by_kind(k),
+            None => kernel::active_kernel(),
+        }
+    }
+
+    /// Name of the resolved microkernel (logs, BENCH records, test
+    /// failure messages).
+    pub fn kernel_name(&self) -> &'static str {
+        self.microkernel().name()
     }
 }
 
@@ -250,6 +289,7 @@ pub fn fused_full_residual(
     let de: usize = e.iter().map(|t| t.len()).sum();
     assert_eq!(d, de, "lattice dim {} != residual dim {}", d, de);
     assert_eq!(fitness.len(), spec.n_members());
+    let kr = policy.microkernel();
     let w_chunks = chunk_segments(weights, policy.chunk_size);
     let e_chunks = chunk_segments_mut(e, policy.chunk_size);
     let tasks: Vec<_> = w_chunks.into_iter().zip(e_chunks).collect();
@@ -257,20 +297,24 @@ pub fn fused_full_residual(
         let mut g = vec![0.0f32; wc.len];
         grad_chunk(spec, fitness, wc.start, &mut g);
         // gather the chunk's residual (it may span several shard segments)
-        let mut ef = vec![0.0f32; wc.len];
+        let mut u = vec![0.0f32; wc.len];
         let mut pos = 0usize;
         for seg in ec.segs.iter() {
             let n = seg.len();
-            f16_decode_slice(&seg[..n], &mut ef[pos..pos + n]);
+            kr.f16_decode(&seg[..n], &mut u[pos..pos + n]);
             pos += n;
         }
+        // u <- alpha * g + gamma * e: the vectorizable half of Eq. 6,
+        // elementwise and unfused, so every backend matches the scalar
+        // op sequence bit-for-bit
+        kr.axpby(alpha, &g, gamma, &mut u);
         let mut stats = StepStats::default();
         let mut deltas: WeightDeltas = Vec::new();
         let mut k = 0usize;
         for seg in wc.segs.iter() {
             for &w in seg.iter() {
-                let u = alpha * g[k] + gamma * ef[k];
-                let dw = u.round() as i32;
+                let uv = u[k];
+                let dw = uv.round() as i32;
                 let (applied, boundary) = gate_eval(w, dw, qmax);
                 if applied != 0 {
                     stats.n_changed += 1;
@@ -281,14 +325,14 @@ pub fn fused_full_residual(
                 } else if dw != 0 {
                     stats.n_gated += 1;
                 }
-                ef[k] = u - applied as f32;
+                u[k] = uv - applied as f32;
                 k += 1;
             }
         }
         let mut pos = 0usize;
         for seg in ec.segs.iter_mut() {
             let n = seg.len();
-            f16_encode_slice(&ef[pos..pos + n], &mut seg[..n]);
+            kr.f16_encode(&u[pos..pos + n], &mut seg[..n]);
             pos += n;
         }
         (stats, deltas)
@@ -331,6 +375,7 @@ pub fn fused_seed_replay(
     assert_eq!(d, de, "lattice dim {} != proxy dim {}", d, de);
     assert_eq!(current.fitness.len(), current.spec.n_members());
     let qmax_i = qmax as i32;
+    let kr = policy.microkernel();
     let w_chunks = chunk_segments(weights, policy.chunk_size);
     let e_chunks = chunk_segments_mut(e_proxy, policy.chunk_size);
     let tasks: Vec<_> = w_chunks.into_iter().zip(e_chunks).collect();
@@ -340,10 +385,13 @@ pub fn fused_seed_replay(
         // --- K-deep replay tile: rematerialize e_proxy for this chunk ---
         for h in history {
             grad_chunk(&h.spec, h.fitness, wc.start, &mut g);
+            // ep <- h.alpha * g + gamma * ep (Eq. 6, vectorized, unfused
+            // — bit-identical to the scalar sweep on every backend)
+            kr.axpby(h.alpha, &g, gamma, &mut ep);
             let mut k = 0usize;
             for seg in wc.segs.iter() {
                 for &w in seg.iter() {
-                    let u = h.alpha * g[k] + gamma * ep[k];
+                    let u = ep[k];
                     let dw = u.round() as i32;
                     // simulate the gate against current W, do not mutate
                     let next = w as i32 + dw;
@@ -356,12 +404,13 @@ pub fn fused_seed_replay(
         }
         // --- current step: the rematerialized error feeds the real update ---
         grad_chunk(&current.spec, current.fitness, wc.start, &mut g);
+        kr.axpby(current.alpha, &g, gamma, &mut ep);
         let mut stats = StepStats::default();
         let mut deltas: WeightDeltas = Vec::new();
         let mut k = 0usize;
         for seg in wc.segs.iter() {
             for &w in seg.iter() {
-                let u = current.alpha * g[k] + gamma * ep[k];
+                let u = ep[k];
                 let dw = u.round() as i32;
                 let (applied, boundary) = gate_eval(w, dw, qmax);
                 if applied != 0 {

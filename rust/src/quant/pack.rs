@@ -23,20 +23,13 @@ pub fn pack_int4(q: &[i8]) -> Vec<u8> {
 }
 
 /// Unpack nibbles back to int8 (sign-extended from 4 bits). `n` is the
-/// original element count (to drop a possible pad nibble).
+/// original element count (to drop a possible pad nibble). Dispatches to
+/// the active SIMD microkernel (`crate::kernel`); [`unpack_int4_row`] is
+/// the scalar reference every backend is conformance-tested against.
 pub fn unpack_int4(bytes: &[u8], n: usize) -> Vec<i8> {
-    let mut out = Vec::with_capacity(n);
-    for &b in bytes {
-        out.push(sign_extend4(b & 0x0f));
-        if out.len() == n {
-            break;
-        }
-        out.push(sign_extend4(b >> 4));
-        if out.len() == n {
-            break;
-        }
-    }
-    assert_eq!(out.len(), n, "byte buffer too short for {} int4 values", n);
+    assert!(bytes.len() * 2 >= n, "byte buffer too short for {} int4 values", n);
+    let mut out = vec![0i8; n];
+    crate::kernel::active_kernel().unpack_int4_row(bytes, 0, &mut out);
     out
 }
 
@@ -54,6 +47,10 @@ fn nibble_at(bytes: &[u8], i: usize) -> i8 {
 /// Row-gather for the fused GEMM inner loop: unpack `out.len()` int4
 /// values starting at flat element `start` into caller-owned scratch —
 /// one weight row per call, no full-slice unpack, no allocation.
+///
+/// This is the SCALAR REFERENCE implementation; the GEMM hot path goes
+/// through `crate::kernel` (which dispatches to the AVX2/NEON nibble-LUT
+/// unpack and is property-tested for exact agreement with this one).
 pub fn unpack_int4_row(bytes: &[u8], start: usize, out: &mut [i8]) {
     if start % 2 == 0 {
         // aligned fast path: whole bytes, two lanes at a time

@@ -371,6 +371,7 @@ fn matmul_ab(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
+    let kr = crate::kernel::active_kernel();
     for r in 0..m {
         let orow = &mut out[r * n..(r + 1) * n];
         orow.fill(0.0);
@@ -379,10 +380,7 @@ fn matmul_ab(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]
             if xv == 0.0 {
                 continue;
             }
-            let wr = &w[kk * n..(kk + 1) * n];
-            for c in 0..n {
-                orow[c] += xv * wr[c];
-            }
+            kr.axpy_f32(orow, xv, &w[kk * n..(kk + 1) * n]);
         }
     }
 }
@@ -411,6 +409,7 @@ fn matmul_at_b(x: &[f32], y: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(y.len(), m * n);
     debug_assert_eq!(dw.len(), k * n);
+    let kr = crate::kernel::active_kernel();
     for r in 0..m {
         let yr = &y[r * n..(r + 1) * n];
         for kk in 0..k {
@@ -418,10 +417,7 @@ fn matmul_at_b(x: &[f32], y: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32
             if xv == 0.0 {
                 continue;
             }
-            let dwr = &mut dw[kk * n..(kk + 1) * n];
-            for c in 0..n {
-                dwr[c] += xv * yr[c];
-            }
+            kr.axpy_f32(&mut dw[kk * n..(kk + 1) * n], xv, yr);
         }
     }
 }

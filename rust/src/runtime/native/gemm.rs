@@ -14,10 +14,16 @@
 //! Output rows are distributed over threads (`util::parallel`), but every
 //! output element is accumulated by exactly one thread, sequentially in
 //! K-index order — so results are bit-identical for any thread count,
-//! the same contract the update kernels in `opt::kernels` obey.
+//! the same contract the update kernels in `opt::kernels` obey. The
+//! inner loops dispatch to the SIMD microkernels (`crate::kernel`),
+//! which vectorize along the N (output-column) axis with unfused
+//! mul+add — each element's op sequence is unchanged, so results are
+//! additionally bit-identical across kernel backends (scalar/AVX2/NEON,
+//! i.e. `QES_KERNEL` never changes a forward output).
 
 use std::borrow::Cow;
 
+use crate::kernel::{self, DotKernel};
 use crate::quant::pack::{pack_int4, unpack_int4_row};
 use crate::quant::Format;
 use crate::util::parallel;
@@ -91,9 +97,23 @@ impl<'v> Lin<'v> {
     }
 }
 
-/// `out[M,N] = x[M,K] @ W` with fused dequantization. Bit-identical for
-/// any `threads` (see module docs).
+/// `out[M,N] = x[M,K] @ W` with fused dequantization, on the
+/// process-wide dispatched microkernel. Bit-identical for any `threads`
+/// and any kernel backend (see module docs).
 pub fn matmul(x: &[f32], m: usize, lin: &Lin<'_>, out: &mut [f32], threads: usize) {
+    matmul_with(x, m, lin, out, threads, kernel::active_kernel());
+}
+
+/// [`matmul`] on an explicit microkernel backend — what the conformance
+/// tests and benches use to pin scalar vs SIMD against each other.
+pub fn matmul_with(
+    x: &[f32],
+    m: usize,
+    lin: &Lin<'_>,
+    out: &mut [f32],
+    threads: usize,
+    kr: &dyn DotKernel,
+) {
     let (k, n) = (lin.rows(), lin.cols());
     assert_eq!(x.len(), m * k, "gemm: x is {} elems, want {}x{}", x.len(), m, k);
     assert_eq!(out.len(), m * n, "gemm: out is {} elems, want {}x{}", out.len(), m, n);
@@ -102,15 +122,15 @@ pub fn matmul(x: &[f32], m: usize, lin: &Lin<'_>, out: &mut [f32], threads: usiz
     }
     match lin {
         Lin::Fp { w, .. } => {
-            par_rows(x, m, k, n, out, threads, 0, |xr, or, _| fp_row(xr, w, n, or));
+            par_rows(x, m, k, n, out, threads, 0, |xr, or, _| fp_row(kr, xr, w, n, or));
         }
         Lin::Quant { q, scale, a8: false, .. } => match q {
             QData::I8(qv) => par_rows(x, m, k, n, out, threads, 0, |xr, or, _| {
-                i8_row(xr, qv, n, or);
+                i8_row(kr, xr, qv, n, or);
                 apply_scale(or, scale, 1.0);
             }),
             QData::PackedInt4(bytes) => par_rows(x, m, k, n, out, threads, n, |xr, or, sc| {
-                packed_row(xr, bytes, n, or, sc);
+                packed_row(kr, xr, bytes, n, or, sc);
                 apply_scale(or, scale, 1.0);
             }),
         },
@@ -120,12 +140,12 @@ pub fn matmul(x: &[f32], m: usize, lin: &Lin<'_>, out: &mut [f32], threads: usiz
             let (xq, xs) = quantize_act(x);
             match q {
                 QData::I8(qv) => par_rows(&xq, m, k, n, out, threads, 0, |xr, or, _| {
-                    i8_row(xr, qv, n, or);
+                    i8_row(kr, xr, qv, n, or);
                     apply_scale(or, scale, xs);
                 }),
                 QData::PackedInt4(bytes) => {
                     par_rows(&xq, m, k, n, out, threads, n, |xr, or, sc| {
-                        packed_row(xr, bytes, n, or, sc);
+                        packed_row(kr, xr, bytes, n, or, sc);
                         apply_scale(or, scale, xs);
                     })
                 }
@@ -142,14 +162,20 @@ pub fn dequant_then_matmul(x: &[f32], m: usize, lin: &Lin<'_>, out: &mut [f32]) 
     let (k, n) = (lin.rows(), lin.cols());
     assert_eq!(x.len(), m * k);
     assert_eq!(out.len(), m * n);
+    // follows the SAME dispatched microkernel as the fused path, so the
+    // long-tracked dequant-vs-fused BENCH speedup keeps measuring fusion
+    // alone (the ISA dimension has its own forward_gemm/simd records);
+    // as the property-test reference this is equally valid on any
+    // backend — axpy is bit-identical across them by contract
+    let kr = kernel::active_kernel();
     match lin {
         Lin::Fp { w, .. } => {
-            par_rows(x, m, k, n, out, 1, 0, |xr, or, _| fp_row(xr, w, n, or));
+            par_rows(x, m, k, n, out, 1, 0, |xr, or, _| fp_row(kr, xr, w, n, or));
         }
         Lin::Quant { q, scale, rows, cols, a8 } => {
             assert!(!a8, "dequant_then_matmul is the weight-only reference");
             let wf = dequant_full(q, scale, *rows, *cols);
-            par_rows(x, m, k, n, out, 1, 0, |xr, or, _| fp_row(xr, &wf, n, or));
+            par_rows(x, m, k, n, out, 1, 0, |xr, or, _| fp_row(kr, xr, &wf, n, or));
         }
     }
 }
@@ -238,33 +264,32 @@ fn par_rows<F>(
     });
 }
 
-fn fp_row(xrow: &[f32], w: &[f32], n: usize, orow: &mut [f32]) {
+fn fp_row(kr: &dyn DotKernel, xrow: &[f32], w: &[f32], n: usize, orow: &mut [f32]) {
     orow.fill(0.0);
     for (r, &xv) in xrow.iter().enumerate() {
-        let wr = &w[r * n..(r + 1) * n];
-        for c in 0..n {
-            orow[c] += xv * wr[c];
-        }
+        kr.axpy_f32(orow, xv, &w[r * n..(r + 1) * n]);
     }
 }
 
-fn i8_row(xrow: &[f32], q: &[i8], n: usize, orow: &mut [f32]) {
+fn i8_row(kr: &dyn DotKernel, xrow: &[f32], q: &[i8], n: usize, orow: &mut [f32]) {
     orow.fill(0.0);
     for (r, &xv) in xrow.iter().enumerate() {
-        let wr = &q[r * n..(r + 1) * n];
-        for c in 0..n {
-            orow[c] += xv * wr[c] as f32;
-        }
+        kr.axpy_i8(orow, xv, &q[r * n..(r + 1) * n]);
     }
 }
 
-fn packed_row(xrow: &[f32], bytes: &[u8], n: usize, orow: &mut [f32], scratch: &mut [i8]) {
+fn packed_row(
+    kr: &dyn DotKernel,
+    xrow: &[f32],
+    bytes: &[u8],
+    n: usize,
+    orow: &mut [f32],
+    scratch: &mut [i8],
+) {
     orow.fill(0.0);
     for (r, &xv) in xrow.iter().enumerate() {
-        unpack_int4_row(bytes, r * n, scratch);
-        for c in 0..n {
-            orow[c] += xv * scratch[c] as f32;
-        }
+        kr.unpack_int4_row(bytes, r * n, scratch);
+        kr.axpy_i8(orow, xv, scratch);
     }
 }
 
@@ -278,6 +303,7 @@ fn apply_scale(orow: &mut [f32], scale: &[f32], extra: f32) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernel::KernelKind;
     use crate::util::prop::{prop_check, Gen};
 
     fn rand_quant(g: &mut Gen, rows: usize, cols: usize, qmax: i8) -> (Vec<i8>, Vec<f32>) {
@@ -354,6 +380,55 @@ mod tests {
                     threads
                 );
             }
+        }
+    }
+
+    #[test]
+    fn bit_identical_across_kernel_backends() {
+        // The SIMD extension of the determinism contract: every detected
+        // microkernel backend must produce the very same forward bits as
+        // the scalar one, for every format, at lane-unaligned geometry
+        // (tails shorter than 8) and under threading. m*k*n must clear
+        // PAR_THRESHOLD so the threads=2 leg really runs the row-block
+        // scheduling path, not the inline fallback.
+        let mut g = Gen::from_seed(23);
+        let (m, k, n) = (24, 37, 53);
+        assert!(m * k * n >= PAR_THRESHOLD);
+        let x = g.vec_f32(m * k, -2.0, 2.0);
+        let scalar = kernel::by_kind(KernelKind::Scalar);
+        for fmt in [Format::Int4, Format::Int8, Format::W8A8] {
+            let (q, scale) = rand_quant(&mut g, k, n, fmt.qmax());
+            let lin = Lin::from_lattice(Cow::Borrowed(&q), &scale, k, n, fmt);
+            let mut base = vec![0.0f32; m * n];
+            matmul_with(&x, m, &lin, &mut base, 1, scalar);
+            for kind in kernel::available() {
+                for threads in [1usize, 2] {
+                    let mut out = vec![0.0f32; m * n];
+                    matmul_with(&x, m, &lin, &mut out, threads, kernel::by_kind(kind));
+                    assert_eq!(
+                        base.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{:?} kernel={} threads={}",
+                        fmt,
+                        kind.name(),
+                        threads
+                    );
+                }
+            }
+        }
+        let w = g.vec_f32(k * n, -0.5, 0.5);
+        let lin = Lin::Fp { w: &w, rows: k, cols: n };
+        let mut base = vec![0.0f32; m * n];
+        matmul_with(&x, m, &lin, &mut base, 1, scalar);
+        for kind in kernel::available() {
+            let mut out = vec![0.0f32; m * n];
+            matmul_with(&x, m, &lin, &mut out, 2, kernel::by_kind(kind));
+            assert_eq!(
+                base.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "fp kernel={}",
+                kind.name()
+            );
         }
     }
 

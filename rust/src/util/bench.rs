@@ -16,6 +16,10 @@ use std::time::{Duration, Instant};
 
 pub struct CaseResult {
     pub name: String,
+    /// ISA microkernel dispatched while this case ran (captured at `run`
+    /// time, so benches that toggle `kernel::force` label each case with
+    /// the backend that actually executed it).
+    pub kernel: &'static str,
     pub iters: u64,
     pub mean: Duration,
     pub p50: Duration,
@@ -63,6 +67,7 @@ impl Bench {
         let total: Duration = samples.iter().sum();
         let res = CaseResult {
             name: name.to_string(),
+            kernel: crate::kernel::active().name(),
             iters: target_iters,
             mean: total / target_iters as u32,
             p50: samples[samples.len() / 2],
@@ -92,13 +97,16 @@ impl Bench {
 
     /// Emit one `BENCH {json}` line per case — the machine-readable record
     /// perf tracking greps out of bench logs (see PERF.md). Keys:
-    /// group, case, iters, mean_ns, p50_ns, p95_ns.
+    /// group, case, kernel (the dispatched ISA microkernel — what makes
+    /// records comparable across machines), iters, mean_ns, p50_ns,
+    /// p95_ns.
     pub fn report_json(&self) {
         for r in &self.results {
             println!(
-                "BENCH {{\"group\":{},\"case\":{},\"iters\":{},\"mean_ns\":{},\"p50_ns\":{},\"p95_ns\":{}}}",
+                "BENCH {{\"group\":{},\"case\":{},\"kernel\":{},\"iters\":{},\"mean_ns\":{},\"p50_ns\":{},\"p95_ns\":{}}}",
                 json_str(&self.group),
                 json_str(&r.name),
+                json_str(r.kernel),
                 r.iters,
                 r.mean.as_nanos(),
                 r.p50.as_nanos(),
@@ -119,13 +127,23 @@ impl Bench {
 }
 
 /// Emit a `BENCH` speedup record comparing a baseline case to an optimized
-/// one (ratio > 1 means the optimized case is faster).
-pub fn report_speedup(group: &str, case: &str, baseline_ns: u128, optimized_ns: u128) {
+/// one (ratio > 1 means the optimized case is faster). `kernel` names the
+/// microkernel backend the OPTIMIZED leg executed on — passed explicitly
+/// because speedup records print after the cases ran, when the ambient
+/// dispatch may have been restored to something else.
+pub fn report_speedup(
+    group: &str,
+    case: &str,
+    kernel: &str,
+    baseline_ns: u128,
+    optimized_ns: u128,
+) {
     let ratio = baseline_ns as f64 / optimized_ns.max(1) as f64;
     println!(
-        "BENCH {{\"group\":{},\"case\":{},\"baseline_ns\":{},\"optimized_ns\":{},\"speedup\":{:.3}}}",
+        "BENCH {{\"group\":{},\"case\":{},\"kernel\":{},\"baseline_ns\":{},\"optimized_ns\":{},\"speedup\":{:.3}}}",
         json_str(group),
         json_str(case),
+        json_str(kernel),
         baseline_ns,
         optimized_ns,
         ratio

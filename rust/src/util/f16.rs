@@ -49,27 +49,32 @@ pub fn f32_to_f16_bits(x: f32) -> u16 {
         };
         return sign | rounded;
     }
+    if e == -25 && mant != 0 {
+        // (2^-25, 2^-24): closer to the smallest subnormal than to zero,
+        // so round-to-nearest lands on 0x0001 (exactly 2^-25 ties to the
+        // even candidate, zero). Matches hardware vcvtps2ph bit-for-bit.
+        return sign | 1;
+    }
     sign // underflow to zero
 }
 
 /// Decode a slice of f16 bit patterns into an f32 buffer of equal length.
-/// The batch form of [`f16_bits_to_f32`] — the update kernels decode one
-/// residual chunk at a time so the conversion stays in cache with the
-/// fused gradient/gating pass that consumes it.
+/// The batch form of [`f16_bits_to_f32`] — dispatches to the active SIMD
+/// microkernel (`crate::kernel`; hardware `vcvtph2ps` on AVX2 hosts),
+/// bit-identical to the per-element converter on every backend.
 pub fn f16_decode_slice(bits: &[u16], out: &mut [f32]) {
     assert_eq!(bits.len(), out.len(), "f16 decode length mismatch");
-    for (o, &h) in out.iter_mut().zip(bits.iter()) {
-        *o = f16_bits_to_f32(h);
-    }
+    crate::kernel::active_kernel().f16_decode(bits, out);
 }
 
 /// Encode a slice of f32 values into f16 bit patterns of equal length
-/// (round-to-nearest-even, like [`f32_to_f16_bits`]).
+/// (round-to-nearest-even, like [`f32_to_f16_bits`]) — dispatches to the
+/// active SIMD microkernel (hardware `vcvtps2ph` on AVX2 hosts); the
+/// conversion is uniquely defined by IEEE 754, so every backend produces
+/// the same bits for non-NaN inputs.
 pub fn f16_encode_slice(xs: &[f32], out: &mut [u16]) {
     assert_eq!(xs.len(), out.len(), "f16 encode length mismatch");
-    for (o, &x) in out.iter_mut().zip(xs.iter()) {
-        *o = f32_to_f16_bits(x);
-    }
+    crate::kernel::active_kernel().f16_encode(xs, out);
 }
 
 /// f16 bits -> f32.
@@ -128,6 +133,24 @@ mod tests {
     fn nan_preserved() {
         let h = f32_to_f16_bits(f32::NAN);
         assert!(f16_bits_to_f32(h).is_nan());
+    }
+
+    #[test]
+    fn tiny_subnormal_boundary_rounds_to_nearest() {
+        // IEEE round-to-nearest-even at the bottom of the f16 range
+        // (matches hardware vcvtps2ph bit-for-bit): values in
+        // (2^-25, 2^-24) round to the smallest subnormal 0x0001;
+        // exactly 2^-25 ties to the even candidate (zero); below that
+        // underflows to zero.
+        let q = 2f32.powi(-25);
+        assert_eq!(f32_to_f16_bits(1.5 * q), 0x0001);
+        assert_eq!(f32_to_f16_bits(-1.5 * q), 0x8001);
+        assert_eq!(f32_to_f16_bits(1.0001 * q), 0x0001);
+        assert_eq!(f32_to_f16_bits(q), 0x0000); // tie -> even (zero)
+        assert_eq!(f32_to_f16_bits(0.9 * q), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.9 * q), 0x8000);
+        // and the smallest subnormal decodes back to 2^-24
+        assert_eq!(f16_bits_to_f32(0x0001), 2f32.powi(-24));
     }
 
     #[test]

@@ -1,18 +1,23 @@
 //! Chunked ↔ scalar bit-equivalence: the determinism contract of
-//! `opt::kernels`, extended to the sharded COW parameter plane.
+//! `opt::kernels`, extended to the sharded COW parameter plane and the
+//! ISA microkernel dispatch.
 //!
 //! Every fused chunk-parallel kernel must produce results bit-identical to
-//! the sequential scalar path for ANY chunk size, thread count AND shard
-//! count — the seed-replay correctness story (paper Algorithm 2) depends
-//! on a lattice evolved on 8 threads over 8 shards being
-//! re-materializable on 1 thread over 1 shard. The reference
-//! implementations below are verbatim ports of the pre-kernel scalar
-//! update loops over plain per-tensor stores; each optimizer is then
-//! driven through multi-generation trajectories on sharded planes under
-//! shard counts {1, 2, 8} × chunk sizes {1, 64, 4096} × thread counts
-//! {1, 2, 8} and compared field-for-field, bit-for-bit. Snapshot
-//! publication semantics (COW isolation) are pinned here too.
+//! the sequential scalar path for ANY chunk size, thread count, shard
+//! count AND microkernel backend — the seed-replay correctness story
+//! (paper Algorithm 2) depends on a lattice evolved on 8 threads over 8
+//! shards with AVX2 microkernels being re-materializable on 1 scalar
+//! thread over 1 shard. The reference implementations below are verbatim
+//! ports of the pre-kernel scalar update loops over plain per-tensor
+//! stores; each optimizer is then driven through multi-generation
+//! trajectories on sharded planes under shard counts {1, 2, 8} × chunk
+//! sizes {1, 64, 4096} × thread counts {1, 2, 8} × every microkernel
+//! this CPU supports (`qes::kernel::available()`, pinned explicitly via
+//! `KernelPolicy::with_kernel`) and compared field-for-field,
+//! bit-for-bit. Snapshot publication semantics (COW isolation) are
+//! pinned here too.
 
+use qes::kernel;
 use qes::model::{init::init_fp, AsParams, ParamStore, ShardedParamStore};
 use qes::opt::{
     accumulate_grad, apply_perturbation, apply_perturbation_into, normalize_fitness,
@@ -33,6 +38,15 @@ fn policies() -> Vec<KernelPolicy> {
         }
     }
     out.push(KernelPolicy::default());
+    // the ISA microkernel dimension: pin every backend this CPU can run
+    // explicitly (the grid above follows the process-wide dispatch), over
+    // a representative topology sub-grid — lattices, residuals and stats
+    // must stay bit-identical under {scalar, simd} × threads {1, 8}
+    for kind in kernel::available() {
+        for &threads in &[1usize, 8] {
+            out.push(KernelPolicy::new(4096, threads).with_kernel(Some(kind)));
+        }
+    }
     out
 }
 
@@ -262,21 +276,22 @@ fn full_residual_bitwise_equivalence_across_policies() {
             assert_eq!(
                 flat_sharded(&s),
                 ref_lattice,
-                "lattice diverged: shards={} chunk={} threads={}",
+                "lattice diverged: shards={} chunk={} threads={} kernel={}",
                 shards,
                 policy.chunk_size,
-                policy.threads
+                policy.threads,
+                policy.kernel_name()
             );
             let e_bits: Vec<u32> = opt.residual().iter().map(|x| x.to_bits()).collect();
             assert_eq!(
                 e_bits, ref_bits,
-                "residual diverged: shards={} chunk={} threads={}",
-                shards, policy.chunk_size, policy.threads
+                "residual diverged: shards={} chunk={} threads={} kernel={}",
+                shards, policy.chunk_size, policy.threads, policy.kernel_name()
             );
             assert_eq!(
                 stats, ref_stats,
-                "stats diverged: shards={} chunk={} threads={}",
-                shards, policy.chunk_size, policy.threads
+                "stats diverged: shards={} chunk={} threads={} kernel={}",
+                shards, policy.chunk_size, policy.threads, policy.kernel_name()
             );
         }
     }
@@ -317,22 +332,23 @@ fn seed_replay_bitwise_equivalence_across_policies() {
             assert_eq!(
                 flat_sharded(&s),
                 ref_lattice,
-                "lattice diverged: shards={} chunk={} threads={}",
+                "lattice diverged: shards={} chunk={} threads={} kernel={}",
                 shards,
                 policy.chunk_size,
-                policy.threads
+                policy.threads,
+                policy.kernel_name()
             );
             let proxy_bits: Vec<u32> =
                 opt.proxy_residual().iter().map(|x| x.to_bits()).collect();
             assert_eq!(
                 proxy_bits, ref_proxy_bits,
-                "proxy residual diverged: shards={} chunk={} threads={}",
-                shards, policy.chunk_size, policy.threads
+                "proxy residual diverged: shards={} chunk={} threads={} kernel={}",
+                shards, policy.chunk_size, policy.threads, policy.kernel_name()
             );
             assert_eq!(
                 stats, ref_stats,
-                "stats diverged: shards={} chunk={} threads={}",
-                shards, policy.chunk_size, policy.threads
+                "stats diverged: shards={} chunk={} threads={} kernel={}",
+                shards, policy.chunk_size, policy.threads, policy.kernel_name()
             );
         }
     }
@@ -374,10 +390,11 @@ fn quzo_bitwise_equivalence_across_policies() {
             assert_eq!(
                 flat_sharded(&s),
                 ref_lattice,
-                "lattice diverged: shards={} chunk={} threads={}",
+                "lattice diverged: shards={} chunk={} threads={} kernel={}",
                 shards,
                 policy.chunk_size,
-                policy.threads
+                policy.threads,
+                policy.kernel_name()
             );
             assert_eq!(stats, ref_stats, "stats diverged: shards={}", shards);
         }
@@ -411,8 +428,8 @@ fn perturbation_bitwise_equivalence_across_policies() {
             apply_perturbation_into(&s, &spec, member, 7, &mut out, policy);
             assert_eq!(
                 out, reference,
-                "member {} chunk={} threads={}",
-                member, policy.chunk_size, policy.threads
+                "member {} chunk={} threads={} kernel={}",
+                member, policy.chunk_size, policy.threads, policy.kernel_name()
             );
         }
         // and identically from shard-segmented sources (plane + snapshot)
@@ -537,8 +554,8 @@ fn mezo_bitwise_equivalence_across_policies() {
             .collect();
         assert_eq!(
             got_bits, ref_bits,
-            "MeZO diverged from sequential sweep: chunk={} threads={}",
-            policy.chunk_size, policy.threads
+            "MeZO diverged from sequential sweep: chunk={} threads={} kernel={}",
+            policy.chunk_size, policy.threads, policy.kernel_name()
         );
     }
 }

@@ -160,6 +160,46 @@ fn native_forward_bit_identical_across_thread_counts() {
 }
 
 #[test]
+fn simd_gemm_bit_identical_across_kernels_and_threads() {
+    // The SIMD extension of the forward determinism contract: for every
+    // microkernel backend this CPU supports, the fused dequant-GEMM must
+    // be bit-identical across thread counts {1, 2, 8} AND bit-identical
+    // to the scalar backend — `QES_KERNEL` is pure wall-clock tuning.
+    // Geometry clears the inline-execution threshold so row-block
+    // threading really engages, with N % 8 != 0 to cover lane tails.
+    use std::borrow::Cow;
+
+    use qes::kernel;
+    use qes::runtime::native::gemm::{self, Lin};
+
+    let mut rng = SplitMix64::new(31);
+    let (m, k, n) = (48usize, 64usize, 77usize);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.uniform01() * 2.0 - 1.0).collect();
+    for fmt in [Format::Int4, Format::Int8, Format::W8A8] {
+        let q: Vec<i8> =
+            (0..k * n).map(|_| (rng.next_u64() % 15) as i8 - 7).collect();
+        let scale: Vec<f32> = (0..n).map(|_| 0.005 + 0.002 * rng.uniform01()).collect();
+        let lin = Lin::from_lattice(Cow::Borrowed(&q), &scale, k, n, fmt);
+        let mut base = vec![0.0f32; m * n];
+        gemm::matmul_with(&x, m, &lin, &mut base, 1, kernel::by_kind(kernel::KernelKind::Scalar));
+        for kind in kernel::available() {
+            for threads in [1usize, 2, 8] {
+                let mut out = vec![0.0f32; m * n];
+                gemm::matmul_with(&x, m, &lin, &mut out, threads, kernel::by_kind(kind));
+                assert_eq!(
+                    base.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{:?} kernel={} threads={}",
+                    fmt,
+                    kind.name(),
+                    threads
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn native_and_pjrt_agree_on_logits_and_tokens() {
     // Cross-backend parity: the native interpreter and the compiled HLO
     // graphs must produce the same greedy tokens and near-identical
