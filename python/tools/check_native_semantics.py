@@ -6,11 +6,14 @@ rust/src/runtime/native/{mod,autograd}.rs to NumPy and diffing:
   2. cls graph (wq):   scores [B, 8]
   3. gen graph (wq):   decoded tokens, greedy AND gumbel-sampled
   4. grad graph (fp):  per-tensor gradients vs jax.grad
+  5. continuous-batching scheduler (rust/src/sched): slot-arena greedy
+     decode must reproduce gen_fn's greedy tokens (up to EOS retirement)
+     and be invariant to slot count and admission order
 
 A pass means the Rust implementation's semantics (left-pad geometry,
 cache slots, bias construction, GELU/LN variants, argmax ties, backward
-derivation) match the compiled model; remaining risk is Rust-level
-transcription only.
+derivation, arena bookkeeping) match the compiled model; remaining risk
+is Rust-level transcription only.
 """
 import os
 import sys
@@ -229,6 +232,105 @@ for tau, gseed in ((0.0, None), (0.7, 3)):
     match = (jtoks == ntoks).mean()
     assert match == 1.0, (tau, match, jtoks[:2], ntoks[:2])
     print(f"gen[wq]    OK   tau={tau} tokens exact-match")
+
+# ---- 5: continuous-batching scheduler (port of rust/src/sched) --------------
+def sched_gen(p, fmt, prompt, lens, slots, max_new, order):
+    """Port of sched::Scheduler: slot KV arena + free-list, batched prefill
+    over the newly admitted, one batched decode across all live slots, EOS
+    retirement with slot recycling. Greedy. Returns {request: tokens}."""
+    sp, EOS = cfg.s_prompt, 20
+    s_max = sp + max_new
+    kc = [np.zeros((slots, s_max, D), np.float32) for _ in range(L)]
+    vc = [np.zeros((slots, s_max, D), np.float32) for _ in range(L)]
+    keymask = np.zeros((slots, s_max), np.float32)
+    free = list(range(slots))[::-1]
+    waiting = [dict(t=t, plen=int(lens[t])) for t in order]
+    live, done = [], {}
+    while waiting or live:
+        newly = []
+        while waiting and free:
+            slot = free.pop()
+            lv = waiting.pop(0)
+            lv.update(slot=slot, toks=[], logits=None)
+            keymask[slot] = 0.0
+            live.append(lv)
+            newly.append(lv)
+        if newly:
+            b = len(newly)
+            toks = np.zeros((b, sp), np.int32)
+            pos = np.zeros((b, sp), np.int32)
+            mask = np.zeros((b, sp), np.float32)
+            for i, lv in enumerate(newly):
+                pad = sp - lv["plen"]
+                toks[i] = prompt[lv["t"]]
+                pos[i, pad:] = np.arange(lv["plen"])
+                mask[i, pad:] = 1.0
+            h, kvs = forward_full(p, fmt, toks, pos, mask, want_kv=True)
+            last = head(p, h)[:, -1, :]
+            for i, lv in enumerate(newly):
+                s = lv["slot"]
+                for li in range(L):
+                    kc[li][s, :sp] = kvs[li][0][i]
+                    vc[li][s, :sp] = kvs[li][1][i]
+                keymask[s, :sp] = mask[i]
+                lv["logits"] = last[i]
+        nxt = []
+        for lv in live:
+            tok = int(lv["logits"].argmax())
+            lv["toks"].append(tok)
+            if tok == EOS or len(lv["toks"]) >= max_new:
+                done[lv["t"]] = lv["toks"]
+                free.append(lv["slot"])
+            else:
+                nxt.append(lv)
+        live = nxt
+        if not live:
+            continue
+        m = len(live)
+        h1 = np.zeros((m, D), np.float32)
+        for i, lv in enumerate(live):
+            h1[i] = p["tok_emb"][lv["toks"][-1]] + p["pos_emb"][lv["plen"] + len(lv["toks"]) - 1]
+        for li in range(L):
+            pre = f"layers.{li}."
+            x = layernorm(h1, p[pre + "ln1.g"], p[pre + "ln1.b"])
+            qh = lin(x, p[pre + "attn.wq"], fmt)
+            kh = lin(x, p[pre + "attn.wk"], fmt)
+            vh = lin(x, p[pre + "attn.wv"], fmt)
+            a = np.zeros((m, D), np.float32)
+            for i, lv in enumerate(live):
+                s, pos_slot = lv["slot"], sp + len(lv["toks"]) - 1
+                kc[li][s, pos_slot] = kh[i]
+                vc[li][s, pos_slot] = vh[i]
+                keymask[s, pos_slot] = 1.0
+            for i, lv in enumerate(live):
+                st, s = sp + len(lv["toks"]), lv["slot"]
+                q4 = qh[i].reshape(H, 1, DH)
+                k4 = kc[li][s, :st].reshape(st, H, DH).transpose(1, 0, 2)
+                v4 = vc[li][s, :st].reshape(st, H, DH).transpose(1, 0, 2)
+                lg = (q4 @ k4.transpose(0, 2, 1))[:, 0, :] / np.sqrt(np.float32(DH))
+                bias = np.where(keymask[s, :st] > 0, 0.0, NEG_INF)
+                att = softmax(lg + bias)
+                a[i] = (att[:, None, :] @ v4).reshape(D)
+            h1 = h1 + lin(a, p[pre + "attn.wo"], fmt)
+            x = layernorm(h1, p[pre + "ln2.g"], p[pre + "ln2.b"])
+            h1 = h1 + lin(gelu(lin(x, p[pre + "mlp.w1"], fmt)), p[pre + "mlp.w2"], fmt)
+        last = head(p, h1[:, None, :])[:, 0, :]
+        for i, lv in enumerate(live):
+            lv["logits"] = last[i]
+    return done
+
+
+greedy = native_gen(p, "wq", prompt, lens, np.float32(0.0), np.zeros((bg, td, V), np.float32))
+ref = sched_gen(p, "wq", prompt, lens, slots=bg, max_new=td, order=list(range(bg)))
+for t in range(bg):
+    full = list(int(x) for x in greedy[t])
+    want = full[: full.index(20) + 1] if 20 in full else full
+    assert ref[t] == want, (t, ref[t], want)
+for slots in (1, 2, 3, bg):
+    for order in (list(range(bg)), list(range(bg))[::-1], list(range(1, bg)) + [0]):
+        got = sched_gen(p, "wq", prompt, lens, slots, td, order)
+        assert got == ref, ("sched divergence", slots, order)
+print("sched[wq]  OK   continuous batching == gen_fn greedy, slot/order-invariant")
 
 # ---- 4: grads (port of runtime/native/autograd.rs) -------------------------
 def native_grads(p, tokens, pos_ids, mask, targets, loss_mask):

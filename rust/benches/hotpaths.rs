@@ -18,7 +18,7 @@ use std::borrow::Cow;
 
 use qes::coordinator::{eval_problems, ClsBatch, EngineSet, GenBatch, Session};
 use qes::kernel::{self, KernelKind};
-use qes::model::{init::init_fp, ParamStore, ShardedParamStore};
+use qes::model::{init::init_fp, AsParams, ParamStore, ShardedParamStore};
 use qes::opt::{
     accumulate_grad, accumulate_grad_chunked, apply_perturbation, apply_perturbation_into,
     EsHyper, KernelPolicy, LatticeOptimizer, PopulationSpec, QesFullResidual, QuzoOptimizer,
@@ -26,8 +26,9 @@ use qes::opt::{
 };
 use qes::quant::Format;
 use qes::rng::{NoiseStream, SplitMix64};
-use qes::runtime::native::gemm::{self, Lin};
+use qes::runtime::native::{build_emb_t, gemm::{self, Lin}};
 use qes::runtime::Manifest;
+use qes::sched;
 use qes::tasks::{cls_task, gen_task};
 use qes::util::bench::{black_box, report_speedup, Bench};
 use qes::util::f16::{f16_decode_slice, f16_encode_slice};
@@ -293,6 +294,33 @@ fn main() {
         }
     }
 
+    // decode-step GEMM (M = live slots, often 1): the axpy row form vs
+    // the K-major transposed pack routed through dot_packed_int4 — one
+    // cache-resident dot per output channel (the ROADMAP's K-major
+    // decode GEMM item, wired under the scheduler's batched decode)
+    {
+        let (gk, gn) = (256usize, 512usize);
+        let mut grng = SplitMix64::new(13);
+        let q: Vec<i8> = (0..gk * gn).map(|_| (grng.next_u64() % 15) as i8 - 7).collect();
+        let scale: Vec<f32> = (0..gn).map(|_| 0.01 + 0.001 * grng.uniform01()).collect();
+        let lin = Lin::from_lattice(Cow::Borrowed(&q), &scale, gk, gn, Format::Int4)
+            .with_decode_pack();
+        let kr = kernel::active_kernel();
+        for m in [1usize, 8] {
+            let x: Vec<f32> = (0..m * gk).map(|_| grng.uniform01() - 0.5).collect();
+            let mut out = vec![0.0f32; m * gn];
+            let geom = format!("int4 {}x{}x{}", m, gk, gn);
+            b.run(&format!("decode_gemm/axpy/{}", geom), || {
+                gemm::matmul_with(&x, m, &lin, &mut out, 1, kr);
+                black_box(out[0]);
+            });
+            b.run(&format!("decode_gemm/kmajor/{}", geom), || {
+                gemm::matmul_decode(&x, m, &lin, &mut out, 1, kr);
+                black_box(out[0]);
+            });
+        }
+    }
+
     // whole-rollout member evaluation on the auto-resolved backend
     // (native on the offline build): what one population member costs.
     {
@@ -318,6 +346,48 @@ fn main() {
         let cb = ClsBatch::build(&session.cfg, &exs, &ct.verbalizers());
         b.run(&format!("rollout_eval/cls/{}/nano/int4", be), || {
             black_box(session.cls_eval(&store4, None, &cb).unwrap());
+        });
+
+        // the rollout phase at population scale: 8 members × 2 batches,
+        // sequential per-batch generate() (the historical path, one
+        // resolve+pack + fresh KV caches per generate call) vs the
+        // continuous-batching scheduler (one resolve+pack per member per
+        // ROUND, shared head transpose, persistent KV arena, EOS
+        // retirement; the kernel-bit-exact axpy decode, same as seq)
+        let nb = session.backend().as_native().expect("native on the offline build");
+        let pop = 8usize;
+        let round_problems = eval_problems(task.as_ref(), 2 * session.cfg.b_gen, 7);
+        let batches: Vec<GenBatch> = round_problems
+            .chunks(session.cfg.b_gen)
+            .map(|c| GenBatch::build(&session.cfg, c.to_vec()))
+            .collect();
+        let spec8 = PopulationSpec { gen_seed: 11, pairs: pop / 2, sigma: 0.02 };
+        let pol = KernelPolicy::default();
+        let mut ov: Vec<Vec<i8>> = Vec::new();
+        b.run(&format!("rollout_eval/seq_pop{}/nano/int4", pop), || {
+            for member in 0..pop {
+                apply_perturbation_into(&store4, &spec8, member, 7, &mut ov, pol);
+                for gb in &batches {
+                    black_box(session.generate(&store4, Some(&ov), gb, 0.0, None).unwrap());
+                }
+            }
+        });
+        let emb_t = build_emb_t(&store4).unwrap();
+        let view = store4.params_view();
+        b.run(&format!("rollout_batched/pop{}/nano/int4", pop), || {
+            for member in 0..pop {
+                apply_perturbation_into(&store4, &spec8, member, 7, &mut ov, pol);
+                let r = sched::rollout_round(
+                    nb,
+                    &view,
+                    Some(&ov),
+                    Some(&emb_t),
+                    &batches,
+                    0.0,
+                    None,
+                );
+                black_box(r.unwrap());
+            }
         });
     }
 
@@ -365,6 +435,16 @@ fn main() {
             "forward_gemm/int8",
             "forward_gemm/dequant_then_matmul/int8 64x256x512".to_string(),
             "forward_gemm/fused/int8 64x256x512".to_string(),
+        ),
+        (
+            "decode_gemm/int4",
+            "decode_gemm/axpy/int4 1x256x512".to_string(),
+            "decode_gemm/kmajor/int4 1x256x512".to_string(),
+        ),
+        (
+            "rollout_batched/pop8",
+            "rollout_eval/seq_pop8/nano/int4".to_string(),
+            "rollout_batched/pop8/nano/int4".to_string(),
         ),
     ] {
         // both legs of these records ran under the ambient dispatch

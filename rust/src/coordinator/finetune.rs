@@ -194,16 +194,17 @@ pub fn finetune(
             Some(p) if p.n_workers() > 1 => {
                 let snapshot = store.snapshot();
                 let w = p.n_workers();
-                let jobs: Vec<Job> = (0..w)
-                    .map(|i| Job::Eval {
-                        snapshot: snapshot.clone(),
-                        gen_seed,
-                        pairs: spec.pairs,
-                        sigma: spec.sigma,
-                        members: (0..n_members).filter(|m| m % w == i).collect(),
-                        round: round.clone(),
-                    })
-                    .collect();
+                // jobs stream straight into the worker channels — no
+                // leader-side Vec<Job>, and the round/snapshot payloads
+                // are Arc bumps, never data clones
+                let jobs = (0..w).map(|i| Job::Eval {
+                    snapshot: snapshot.clone(),
+                    gen_seed,
+                    pairs: spec.pairs,
+                    sigma: spec.sigma,
+                    members: (0..n_members).filter(|m| m % w == i).collect(),
+                    round: round.clone(),
+                });
                 for r in p.run_round(jobs, n_members)? {
                     raw[r.member] = r.reward?;
                 }

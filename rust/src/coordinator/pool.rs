@@ -102,13 +102,22 @@ impl WorkerPool {
         self.senders.len()
     }
 
-    /// Dispatch jobs (already member-partitioned, one per worker) and
-    /// collect exactly `expect` member results. A worker that dies
-    /// mid-round (error or panic) surfaces as `Err` here instead of a
-    /// leader that blocks forever on a short result stream.
-    pub fn run_round(&self, jobs: Vec<Job>, expect: usize) -> Result<Vec<MemberResult>> {
-        anyhow::ensure!(jobs.len() <= self.senders.len(), "more jobs than workers");
-        for (tx, job) in self.senders.iter().zip(jobs) {
+    /// Dispatch jobs (member-partitioned, one per worker, built lazily —
+    /// the leader never materializes a `Vec<Job>` or clones round data
+    /// per worker beyond what each job itself holds) and collect exactly
+    /// `expect` member results. A worker that dies mid-round (error or
+    /// panic) surfaces as `Err` here instead of a leader that blocks
+    /// forever on a short result stream.
+    pub fn run_round<I>(&self, jobs: I, expect: usize) -> Result<Vec<MemberResult>>
+    where
+        I: IntoIterator<Item = Job>,
+    {
+        // bound the buffer at workers+1: enough to detect oversupply
+        // BEFORE anything is dispatched (a partial dispatch would leave
+        // in-flight results to poison the next round's collection)
+        let batch: Vec<Job> = jobs.into_iter().take(self.senders.len() + 1).collect();
+        anyhow::ensure!(batch.len() <= self.senders.len(), "more jobs than workers");
+        for (tx, job) in self.senders.iter().zip(batch) {
             tx.send(job).map_err(|_| anyhow::anyhow!("worker channel closed"))?;
         }
         let mut out = Vec::with_capacity(expect);

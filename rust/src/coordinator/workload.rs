@@ -26,11 +26,12 @@ use anyhow::Result;
 
 use crate::coordinator::finetune::FinetuneCfg;
 use crate::coordinator::session::{EngineSet, Session};
-use crate::runtime::encode::{ClsBatch, GenBatch};
-use crate::model::ParamsView;
+use crate::model::{ParamStore, ParamsView};
 use crate::opt::{apply_perturbation_into, KernelPolicy, PopulationSpec};
 use crate::rng::SplitMix64;
+use crate::runtime::encode::{ClsBatch, GenBatch};
 use crate::runtime::ModelConfig;
+use crate::sched;
 use crate::tasks::{is_cls_task, ClsTask, GenProblem, GenTask};
 
 /// Salt separating decode-sampling noise from perturbation noise.
@@ -50,14 +51,34 @@ const GUMBEL_SALT: u64 = 0x6465_636f_6465_5f67;
 pub struct MemberScratch {
     pub overrides: Vec<Vec<i8>>,
     pub policy: KernelPolicy,
+    /// Shared weight-tied-head operand (`tok_emb` transposed) for the
+    /// scheduler rollout: `tok_emb` is not a lattice tensor, so ES
+    /// fine-tuning never changes it — ONE transpose serves every member
+    /// and round this scratch touches. Rebuilt if the model shape
+    /// changes (length mismatch).
+    pub emb_t: Vec<f32>,
 }
 
 impl MemberScratch {
     /// Scratch whose perturbation fill runs inline on the calling thread
     /// — for callers that are themselves one of many parallel workers.
     pub fn sequential() -> Self {
-        MemberScratch { overrides: Vec::new(), policy: KernelPolicy::scalar() }
+        MemberScratch {
+            overrides: Vec::new(),
+            policy: KernelPolicy::scalar(),
+            emb_t: Vec::new(),
+        }
     }
+}
+
+/// Fill the scratch's shared head transpose for `store` (no-op when the
+/// cached one already matches the shape).
+fn ensure_emb_t(cache: &mut Vec<f32>, store: &ParamStore) -> Result<()> {
+    let numel = store.get("tok_emb").map(|e| e.numel()).unwrap_or(0);
+    if cache.len() != numel {
+        *cache = crate::runtime::native::build_emb_t(store)?;
+    }
+    Ok(())
 }
 
 /// One generation's rollout payload. Scenario-specific contents live
@@ -214,6 +235,34 @@ impl Workload for GenWorkload {
         } else {
             None
         };
+        // Native sessions roll out through the continuous-batching
+        // scheduler: one resolve+pack per member per ROUND (not per
+        // batch), a shared head transpose across members, real rows only,
+        // EOS retirement. Rewards are a pure function of (weights, round,
+        // seeds) — identical on any worker topology, slot count or thread
+        // count, which the pool-vs-inline test pins.
+        if let Some(nb) = session.backend().as_native() {
+            ensure_emb_t(&mut scratch.emb_t, params.store)?;
+            let texts = sched::rollout_round(
+                nb,
+                params,
+                Some(&scratch.overrides),
+                Some(&scratch.emb_t),
+                &round.batches,
+                self.tau,
+                gumbel_seed,
+            )?;
+            let mut total = 0.0f32;
+            for (batch, comps) in round.batches.iter().zip(&texts) {
+                let mut batch_total = 0.0f32;
+                for (i, c) in comps.iter().enumerate() {
+                    batch_total += self.task.reward(&batch.problems[i].key, c);
+                }
+                total += batch_total / batch.n_real as f32;
+            }
+            return Ok(total / round.batches.len() as f32);
+        }
+        // PJRT sessions keep the per-batch compiled-graph path.
         let mut total = 0.0f32;
         for batch in &round.batches {
             let completions = session.generate(
@@ -233,17 +282,30 @@ impl Workload for GenWorkload {
     }
 
     fn eval_accuracy(&self, session: &Session, params: &ParamsView<'_>) -> Result<f32> {
-        let cfg = &session.cfg;
         let mut correct = 0usize;
         let mut total = 0usize;
-        for chunk in self.evalset.chunks(cfg.b_gen) {
-            let batch = GenBatch::build(cfg, chunk.to_vec());
-            let completions = session.generate(params, None, &batch, 0.0, None)?;
-            for (i, c) in completions.iter().enumerate() {
-                if self.task.reward(&batch.problems[i].key, c) >= 1.0 {
+        if let Some(nb) = session.backend().as_native() {
+            // greedy eval through the scheduler: ONE resolve+pack serves
+            // the whole eval set as a single continuous batch
+            let prompts: Vec<&str> = self.evalset.iter().map(|p| p.prompt.as_str()).collect();
+            let texts = sched::greedy_texts(nb, params, &prompts)?;
+            for (p, c) in self.evalset.iter().zip(&texts) {
+                if self.task.reward(&p.key, c) >= 1.0 {
                     correct += 1;
                 }
                 total += 1;
+            }
+        } else {
+            let cfg = &session.cfg;
+            for chunk in self.evalset.chunks(cfg.b_gen) {
+                let batch = GenBatch::build(cfg, chunk.to_vec());
+                let completions = session.generate(params, None, &batch, 0.0, None)?;
+                for (i, c) in completions.iter().enumerate() {
+                    if self.task.reward(&batch.problems[i].key, c) >= 1.0 {
+                        correct += 1;
+                    }
+                    total += 1;
+                }
             }
         }
         Ok(100.0 * correct as f32 / total.max(1) as f32)

@@ -3,7 +3,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::coordinator::{
     finetune_store, pretrain_cls, pretrain_gen, workload_for, EngineSet, FinetuneCfg,
@@ -12,9 +12,11 @@ use crate::coordinator::{
 use crate::model::{checkpoint, init::init_fp, AsParams, ParamStore};
 use crate::opt::EsHyper;
 use crate::quant::Format;
-use crate::runtime::{BackendPolicy, Manifest};
+use crate::runtime::{BackendPolicy, Manifest, NativeBackend};
+use crate::sched::{serve, SchedCfg, Scheduler};
 use crate::tasks::{cls_task, gen_task, is_cls_task};
 use crate::util::args::Args;
+use crate::util::parallel;
 
 pub fn run_dir(size: &str, task: &str) -> PathBuf {
     PathBuf::from("runs").join(format!("{}_{}", size, task))
@@ -249,6 +251,132 @@ pub fn cmd_finetune(mut args: Args) -> Result<()> {
         ckpt,
         csv
     );
+    Ok(())
+}
+
+/// `qes serve`: line-delimited JSON over stdin (default) or a TCP
+/// listener (`--tcp addr:port`), driving the continuous-batching
+/// scheduler against a checkpoint (`--ckpt`, or the cached quantized
+/// model for `--size`/`--task`). Responses stream to stdout (or the
+/// connection) as sequences finish; diagnostics go to stderr.
+pub fn cmd_serve(mut args: Args) -> Result<()> {
+    use std::io::BufRead;
+
+    let manifest = args.get_or("manifest", "artifacts/manifest.json");
+    let size = args.get_or("size", "nano");
+    let task = args.get_or("task", "countdown");
+    let format = Format::parse(&args.get_or("format", "int4"))?;
+    let ckpt = args.opt("ckpt");
+    let slots = args.get_usize("slots", 0)?; // 0 = model default (b_gen)
+    let max_new = args.get_usize("max-new", 0)?; // 0 = model default (t_dec)
+    let threads = args.get_usize("threads", 0)?; // 0 = all cores
+    let no_kmajor = args.get_bool("no-kmajor");
+    let tcp = args.opt("tcp");
+    let kernel_choice = crate::kernel::KernelKind::parse_choice(&args.get_or("kernel", "auto"))?;
+    let pretrain_steps = args.get_usize("pretrain-steps", 400)?;
+    args.finish()?;
+    let kernel = crate::kernel::force(kernel_choice)?;
+    let man = Manifest::load(&manifest)?;
+    let store = match &ckpt {
+        Some(p) => checkpoint::load(&man, Path::new(p))?,
+        None => ensure_quantized(&man, &size, &task, format, pretrain_steps, true)?,
+    };
+    let backend = NativeBackend::with_engine_set(&man, &size, store.format, EngineSet::gen_only())?;
+    let mut scfg = SchedCfg::for_model(man.config(&size)?);
+    if slots > 0 {
+        scfg.slots = slots;
+    }
+    if max_new > 0 {
+        scfg.t_max = max_new;
+    }
+    scfg.threads = if threads > 0 { threads } else { parallel::default_threads() };
+    scfg.kmajor = !no_kmajor;
+    let view = store.params_view();
+    let mcfg = backend.cfg();
+    let s_max = scfg.s_prompt + scfg.t_max;
+    // bytes/slot = n_layers * 2 (K+V) * s_max * d * 4 — the KvArena
+    // memory model, reported before the arena itself is allocated
+    let slot_bytes = mcfg.n_layers * 2 * s_max * mcfg.d_model * 4;
+    eprintln!(
+        "[serve] native backend | kernel {} | format {} | {} slots x {} rows ({}/slot, {} arena) | K-major {}",
+        kernel.name(),
+        store.format.name(),
+        scfg.slots,
+        s_max,
+        crate::util::human_bytes(slot_bytes as u64),
+        crate::util::human_bytes((scfg.slots * slot_bytes) as u64),
+        if scfg.kmajor { "on" } else { "off" },
+    );
+    match tcp {
+        None => {
+            let (tx, rx) = std::sync::mpsc::channel::<String>();
+            std::thread::spawn(move || {
+                let stdin = std::io::stdin();
+                for line in stdin.lock().lines() {
+                    match line {
+                        Ok(l) => {
+                            if tx.send(l).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
+            });
+            let mut sched = Scheduler::new(&backend, &view, None, None, scfg)?;
+            let mut out = std::io::stdout();
+            let stats = serve::serve_loop(&mut sched, &rx, &mut out)?;
+            let s = sched.stats();
+            eprintln!(
+                "[serve] done: {} responses, {} errors | {} steps, {} decode rows, max live {}",
+                stats.served, stats.errors, s.steps, s.decode_rows, s.max_live
+            );
+        }
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(&addr)
+                .with_context(|| format!("cannot bind {}", addr))?;
+            eprintln!("[serve] listening on {} (one connection at a time)", addr);
+            for conn in listener.incoming() {
+                // transient accept failures (ECONNABORTED, EMFILE, a
+                // client resetting mid-handshake) must not kill the
+                // server — log and keep accepting
+                let stream = match conn {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("[serve] accept failed: {}", e);
+                        continue;
+                    }
+                };
+                let peer =
+                    stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+                eprintln!("[serve] connection from {}", peer);
+                let reader = stream.try_clone()?;
+                let (tx, rx) = std::sync::mpsc::channel::<String>();
+                let pump = std::thread::spawn(move || {
+                    for line in std::io::BufReader::new(reader).lines() {
+                        match line {
+                            Ok(l) => {
+                                if tx.send(l).is_err() {
+                                    break;
+                                }
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                });
+                let mut sched = Scheduler::new(&backend, &view, None, None, scfg.clone())?;
+                let mut ws = stream;
+                match serve::serve_loop(&mut sched, &rx, &mut ws) {
+                    Ok(st) => eprintln!(
+                        "[serve] {}: {} responses, {} errors",
+                        peer, st.served, st.errors
+                    ),
+                    Err(e) => eprintln!("[serve] {}: {:#}", peer, e),
+                }
+                let _ = pump.join();
+            }
+        }
+    }
     Ok(())
 }
 

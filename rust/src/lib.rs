@@ -9,6 +9,7 @@
 //! * [`model`] — manifest-mirrored parameter store + checkpoints
 //! * [`runtime`] — PJRT engines over AOT HLO artifacts
 //! * [`kernel`] — runtime-dispatched SIMD microkernels (scalar/AVX2/NEON)
+//! * [`sched`] — continuous-batching generation scheduler + `qes serve`
 //! * [`util`] — offline stand-ins for json/clap/criterion/proptest
 pub mod coordinator;
 pub mod exp;
@@ -18,5 +19,6 @@ pub mod opt;
 pub mod quant;
 pub mod rng;
 pub mod runtime;
+pub mod sched;
 pub mod tasks;
 pub mod util;

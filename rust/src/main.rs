@@ -7,6 +7,8 @@
 //! qes eval      --run <dir> --format int4 ...       greedy accuracy of a ckpt
 //! qes finetune  --run <dir> --format int4 \
 //!               --variant qes|qes-full|quzo ...     ES fine-tuning (the paper)
+//! qes serve     [--ckpt p] [--tcp addr] [--slots n] continuous-batching server
+//!                                                   (line-delimited JSON)
 //! qes exp       table1|table2|table5|table6|        regenerate a paper table
 //!               table7|table8|table9|fig2|fig3 ...  or figure
 //! ```
@@ -21,7 +23,7 @@ use qes::util::args::Args;
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        eprintln!("usage: qes <info|pretrain|quantize|eval|finetune|exp> [--flags]");
+        eprintln!("usage: qes <info|pretrain|quantize|eval|finetune|serve|exp> [--flags]");
         std::process::exit(2);
     }
     let cmd = argv[0].clone();
@@ -38,6 +40,7 @@ fn main() {
         "quantize" => exp::cli::cmd_quantize(args),
         "eval" => exp::cli::cmd_eval(args),
         "finetune" => exp::cli::cmd_finetune(args),
+        "serve" => exp::cli::cmd_serve(args),
         "exp" => exp::cli::cmd_exp(args),
         other => {
             eprintln!("unknown command {:?}", other);

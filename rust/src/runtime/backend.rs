@@ -94,6 +94,14 @@ pub trait ForwardBackend {
 
     fn cfg(&self) -> &ModelConfig;
 
+    /// Downcast to the native interpreter when this backend is one. The
+    /// generation scheduler (`crate::sched`) steps the model directly and
+    /// so only runs natively; callers holding a `dyn ForwardBackend` use
+    /// this to pick between the scheduler and the per-call graph path.
+    fn as_native(&self) -> Option<&crate::runtime::native::NativeBackend> {
+        None
+    }
+
     /// Cap the backend's INTERNAL parallelism (the native GEMM's thread
     /// fan-out). Results are invariant to it — the determinism contract
     /// — so this is pure topology tuning: callers that are themselves

@@ -3,20 +3,22 @@
 //! model.py's `mean_loss`). Powers pretraining and the FO/STE baselines
 //! on the offline build.
 //!
-//! The forward here re-runs the exact op sequence of
-//! [`super::NativeBackend`]'s full-sequence pass while caching every
-//! intermediate the backward needs (layernorm statistics, attention
-//! probabilities, pre-GELU activations). Gradients come back in
+//! The forward IS [`super::forward_full`] in cache-capture mode — one
+//! source of truth for the op sequence; this module adds only the head
+//! (whose layernorm statistics and full logits the backward consumes)
+//! and the hand-derived backward itself. Gradients come back in
 //! store-entry order, ready for `opt::Adam::step`. Single-threaded: the
 //! pretraining sizes are tiny and grad determinism needs no tuning knob.
 
 use anyhow::Result;
 
-use crate::model::ParamStore;
+use crate::kernel;
+use crate::model::{AsParams, ParamStore};
+use crate::quant::Format;
 use crate::runtime::encode::LmBatch;
 use crate::runtime::manifest::ModelConfig;
 
-use super::{gelu, softmax_inplace, LN_EPS, NEG_INF};
+use super::gemm::{self, Lin};
 
 /// `(mean loss, per-entry gradients)` for a teacher-forced LM batch.
 pub fn lm_grads(
@@ -34,60 +36,43 @@ pub fn lm_grads(
     let rows = b * s;
     let w = |i: usize| store.entries[i].data.as_f32();
 
-    // ---- forward with caches -------------------------------------------
-    let tok_emb = w(refs.tok_emb);
-    let pos_emb = w(refs.pos_emb);
-    let mut h = vec![0.0f32; rows * d];
-    for r in 0..rows {
-        let tok = batch.tokens[r] as usize;
-        let pos = batch.pos_ids[r] as usize;
-        for j in 0..d {
-            h[r * d + j] = tok_emb[tok * d + j] + pos_emb[pos * d + j];
-        }
-    }
+    // ---- forward: the shared layer stack in cache-capture mode ---------
+    let view = store.params_view();
+    let p = super::resolve(cfg, Format::Fp32, &view, None, None, false)?;
     let mut caches: Vec<LayerCache> = Vec::with_capacity(refs.layers.len());
-    for lr in &refs.layers {
-        let mut c = LayerCache::new(rows, d, f, b, heads, s);
-        layernorm_fwd(&h, d, w(lr.ln1_g), w(lr.ln1_b), &mut c.x1, &mut c.xhat1, &mut c.rstd1);
-        matmul_ab(&c.x1, w(lr.wq), rows, d, d, &mut c.q);
-        matmul_ab(&c.x1, w(lr.wk), rows, d, d, &mut c.k);
-        matmul_ab(&c.x1, w(lr.wv), rows, d, d, &mut c.v);
-        attend_full_cached(
-            b, s, heads, dh, &c.q, &c.k, &c.v, &batch.mask, &mut c.att, &mut c.amerge,
-        );
-        let mut proj = vec![0.0f32; rows * d];
-        matmul_ab(&c.amerge, w(lr.wo), rows, d, d, &mut proj);
-        for i in 0..rows * d {
-            h[i] += proj[i];
-        }
-        layernorm_fwd(&h, d, w(lr.ln2_g), w(lr.ln2_b), &mut c.x2, &mut c.xhat2, &mut c.rstd2);
-        matmul_ab(&c.x2, w(lr.w1), rows, d, f, &mut c.u);
-        for i in 0..rows * f {
-            c.gu[i] = gelu(c.u[i]);
-        }
-        let mut mlp = vec![0.0f32; rows * d];
-        matmul_ab(&c.gu, w(lr.w2), rows, f, d, &mut mlp);
-        for i in 0..rows * d {
-            h[i] += mlp[i];
-        }
-        caches.push(c);
-    }
-    // final norm + weight-tied head
+    let fw = super::forward_full(
+        cfg,
+        1,
+        kernel::active_kernel(),
+        &p,
+        &batch.tokens,
+        &batch.pos_ids,
+        &batch.mask,
+        b,
+        s,
+        false,
+        Some(&mut caches),
+    );
+    let h = fw.h;
+    let tok_emb = w(refs.tok_emb);
+    // final norm (statistics captured for the backward) + weight-tied head
     let mut hf = vec![0.0f32; rows * d];
     let mut xhatf = vec![0.0f32; rows * d];
     let mut rstdf = vec![0.0f32; rows];
-    layernorm_fwd(&h, d, w(refs.lnf_g), w(refs.lnf_b), &mut hf, &mut xhatf, &mut rstdf);
-    // logits[r, c] = hf[r, :] . tok_emb[c, :]
+    super::layernorm_stats(
+        &h,
+        d,
+        w(refs.lnf_g),
+        w(refs.lnf_b),
+        &mut hf,
+        Some((&mut xhatf, &mut rstdf)),
+    );
+    // weight-tied head on the resolved emb_t operand, through the
+    // dispatched GEMM (lnf statistics were captured above, so this is
+    // logits only — same hf bits the backward consumes)
     let mut logits = vec![0.0f32; rows * v];
-    for r in 0..rows {
-        for c in 0..v {
-            let mut acc = 0.0f32;
-            for j in 0..d {
-                acc += hf[r * d + j] * tok_emb[c * d + j];
-            }
-            logits[r * v + c] = acc;
-        }
-    }
+    let head = Lin::Fp { w: p.emb_t.as_ref(), rows: d, cols: v };
+    gemm::matmul_with(&hf, rows, &head, &mut logits, 1, kernel::active_kernel());
     // masked CE + dlogits in one pass
     let n_tok: f32 = batch.loss_mask.iter().sum();
     let n_tok = n_tok.max(1.0);
@@ -316,25 +301,33 @@ impl ModelRefs {
     }
 }
 
-/// Per-layer forward intermediates the backward pass consumes.
-struct LayerCache {
-    xhat1: Vec<f32>,
-    rstd1: Vec<f32>,
-    x1: Vec<f32>,
-    q: Vec<f32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
-    att: Vec<f32>,
-    amerge: Vec<f32>,
-    xhat2: Vec<f32>,
-    rstd2: Vec<f32>,
-    x2: Vec<f32>,
-    u: Vec<f32>,
-    gu: Vec<f32>,
+/// Per-layer forward intermediates the backward pass consumes, filled by
+/// [`super::forward_full`] in cache-capture mode.
+pub(crate) struct LayerCache {
+    pub(crate) xhat1: Vec<f32>,
+    pub(crate) rstd1: Vec<f32>,
+    pub(crate) x1: Vec<f32>,
+    pub(crate) q: Vec<f32>,
+    pub(crate) k: Vec<f32>,
+    pub(crate) v: Vec<f32>,
+    pub(crate) att: Vec<f32>,
+    pub(crate) amerge: Vec<f32>,
+    pub(crate) xhat2: Vec<f32>,
+    pub(crate) rstd2: Vec<f32>,
+    pub(crate) x2: Vec<f32>,
+    pub(crate) u: Vec<f32>,
+    pub(crate) gu: Vec<f32>,
 }
 
 impl LayerCache {
-    fn new(rows: usize, d: usize, f: usize, b: usize, heads: usize, s: usize) -> LayerCache {
+    pub(crate) fn new(
+        rows: usize,
+        d: usize,
+        f: usize,
+        b: usize,
+        heads: usize,
+        s: usize,
+    ) -> LayerCache {
         LayerCache {
             xhat1: vec![0.0; rows * d],
             rstd1: vec![0.0; rows],
@@ -422,38 +415,6 @@ fn matmul_at_b(x: &[f32], y: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32
     }
 }
 
-/// Layernorm forward caching `xhat` and `rstd` per row.
-fn layernorm_fwd(
-    x: &[f32],
-    d: usize,
-    g: &[f32],
-    b: &[f32],
-    out: &mut [f32],
-    xhat: &mut [f32],
-    rstd: &mut [f32],
-) {
-    for (r, (xr, or)) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)).enumerate() {
-        let mut mu = 0.0f32;
-        for &v in xr {
-            mu += v;
-        }
-        mu /= d as f32;
-        let mut var = 0.0f32;
-        for &v in xr {
-            let c = v - mu;
-            var += c * c;
-        }
-        var /= d as f32;
-        let rs = 1.0 / (var + LN_EPS).sqrt();
-        rstd[r] = rs;
-        for j in 0..d {
-            let xh = (xr[j] - mu) * rs;
-            xhat[r * d + j] = xh;
-            or[j] = xh * g[j] + b[j];
-        }
-    }
-}
-
 /// Layernorm backward: `dg`/`db` accumulate, `dx` accumulates (residual
 /// paths add into an existing gradient).
 fn layernorm_bwd(
@@ -485,58 +446,6 @@ fn layernorm_bwd(
         for j in 0..d {
             let dxh = dyr[j] * g[j];
             dx[r * d + j] += rs * (dxh - m1 - xhr[j] * m2);
-        }
-    }
-}
-
-/// Full-sequence attention that also records the softmax probabilities
-/// (same math as [`super::attend_full`], plus the `att` cache).
-#[allow(clippy::too_many_arguments)]
-fn attend_full_cached(
-    b: usize,
-    s: usize,
-    heads: usize,
-    dh: usize,
-    q: &[f32],
-    k: &[f32],
-    v: &[f32],
-    mask: &[f32],
-    att: &mut [f32],
-    out: &mut [f32],
-) {
-    let d = heads * dh;
-    out.fill(0.0);
-    let scale = 1.0 / (dh as f32).sqrt();
-    for bi in 0..b {
-        for h in 0..heads {
-            for sq in 0..s {
-                let qo = (bi * s + sq) * d + h * dh;
-                let arow =
-                    &mut att[((bi * heads + h) * s + sq) * s..((bi * heads + h) * s + sq + 1) * s];
-                for sk in 0..s {
-                    let bias =
-                        if sk <= sq && mask[bi * s + sk] > 0.0 { 0.0 } else { NEG_INF };
-                    let ko = (bi * s + sk) * d + h * dh;
-                    let mut dot = 0.0f32;
-                    for i in 0..dh {
-                        dot += q[qo + i] * k[ko + i];
-                    }
-                    arow[sk] = dot * scale + bias;
-                }
-                softmax_inplace(arow);
-                // exact op sequence of super::attend_full — the two
-                // forwards must never diverge (cross-pinned by
-                // python/tools/check_native_semantics.py and the
-                // loss_matches_forward_backend test below)
-                let oo = (bi * s + sq) * d + h * dh;
-                for sk in 0..s {
-                    let wgt = arow[sk];
-                    let vo = (bi * s + sk) * d + h * dh;
-                    for i in 0..dh {
-                        out[oo + i] += wgt * v[vo + i];
-                    }
-                }
-            }
         }
     }
 }

@@ -61,6 +61,11 @@ pub enum Lin<'v> {
         cols: usize,
         /// W8A8: additionally quantize activations to INT8 per tensor.
         a8: bool,
+        /// K-major (transposed, `[cols, rows]`) nibble pack for the
+        /// decode path: one cache-resident `dot_packed_int4` per output
+        /// channel instead of streaming N-sized axpy rows K times. Built
+        /// on demand ([`Lin::with_decode_pack`]); INT4 only.
+        kmajor: Option<Vec<u8>>,
     },
 }
 
@@ -81,7 +86,37 @@ impl<'v> Lin<'v> {
             Format::Int4 => QData::PackedInt4(pack_int4(&q)),
             _ => QData::I8(q),
         };
-        Lin::Quant { q: qd, scale, rows, cols, a8: format == Format::W8A8 }
+        Lin::Quant { q: qd, scale, rows, cols, a8: format == Format::W8A8, kmajor: None }
+    }
+
+    /// Additionally build the K-major decode pack (INT4 only; a no-op for
+    /// every other layout). Costs one extra transpose + pack, O(K·N/2)
+    /// bytes — callers that run many decode steps against the same
+    /// weights (the generation scheduler) amortize it; one-shot forwards
+    /// should skip it.
+    pub fn with_decode_pack(mut self) -> Lin<'v> {
+        if let Lin::Quant { q: QData::PackedInt4(bytes), rows, cols, kmajor, .. } = &mut self {
+            if kmajor.is_none() {
+                // unpack row-wise (the packed bytes are the source of
+                // truth), transpose to [N, K], repack
+                let (k, n) = (*rows, *cols);
+                let mut row = vec![0i8; n];
+                let mut qt = vec![0i8; k * n];
+                for r in 0..k {
+                    unpack_int4_row(bytes, r * n, &mut row);
+                    for c in 0..n {
+                        qt[c * k + r] = row[c];
+                    }
+                }
+                *kmajor = Some(pack_int4(&qt));
+            }
+        }
+        self
+    }
+
+    /// Does this layout carry the K-major decode pack?
+    pub fn has_decode_pack(&self) -> bool {
+        matches!(self, Lin::Quant { kmajor: Some(_), .. })
     }
 
     pub fn rows(&self) -> usize {
@@ -154,6 +189,51 @@ pub fn matmul_with(
     }
 }
 
+/// Decode-step GEMM: [`matmul_with`] that routes INT4 layouts carrying a
+/// K-major pack ([`Lin::with_decode_pack`]) through
+/// [`DotKernel::dot_packed_int4`] — one cache-resident dot per output
+/// channel instead of K streaming passes over N-sized axpy rows, which is
+/// the right shape for the small-M decode step (M = live sequences, often
+/// 1). Layouts without a decode pack fall back to the axpy form.
+///
+/// # Determinism
+///
+/// Every output element is still computed by exactly one thread from its
+/// own input row and the fixed weight bytes, so results are bit-identical
+/// for any `m`, row order and thread count. Across KERNEL backends this
+/// path is tolerance-close, not bit-identical: `dot_packed_int4` is the
+/// one reassociating primitive (SIMD reduces K in the pinned 8-lane FMA
+/// layout; the scalar backend keeps the sequential order, which makes
+/// scalar decode bit-identical to the axpy form). The generation
+/// scheduler's batch-invariance contract is therefore stated on output
+/// TOKENS, which the conformance suite pins across kernels.
+pub fn matmul_decode(
+    x: &[f32],
+    m: usize,
+    lin: &Lin<'_>,
+    out: &mut [f32],
+    threads: usize,
+    kr: &dyn DotKernel,
+) {
+    let (k, n) = (lin.rows(), lin.cols());
+    if let Lin::Quant { kmajor: Some(bytes_t), scale, a8, .. } = lin {
+        assert_eq!(x.len(), m * k, "decode gemm: x is {} elems, want {}x{}", x.len(), m, k);
+        assert_eq!(out.len(), m * n, "decode gemm: out is {} elems, want {}x{}", out.len(), m, n);
+        if m == 0 {
+            return;
+        }
+        let (xq, xs) = if *a8 { quantize_act(x) } else { (Vec::new(), 1.0) };
+        let xr = if *a8 { xq.as_slice() } else { x };
+        par_rows(xr, m, k, n, out, threads, 0, |xrow, orow, _| {
+            for (c, o) in orow.iter_mut().enumerate() {
+                *o = kr.dot_packed_int4(bytes_t, c * k, xrow) * (scale[c] * xs);
+            }
+        });
+    } else {
+        matmul_with(x, m, lin, out, threads, kr);
+    }
+}
+
 /// The historical per-member cost the fused path eliminates: materialize
 /// the f32 weight tensor (dequantizing when quantized), then a plain f32
 /// matmul. Benchmark baseline + property-test reference; weight-only
@@ -172,7 +252,7 @@ pub fn dequant_then_matmul(x: &[f32], m: usize, lin: &Lin<'_>, out: &mut [f32]) 
         Lin::Fp { w, .. } => {
             par_rows(x, m, k, n, out, 1, 0, |xr, or, _| fp_row(kr, xr, w, n, or));
         }
-        Lin::Quant { q, scale, rows, cols, a8 } => {
+        Lin::Quant { q, scale, rows, cols, a8, .. } => {
             assert!(!a8, "dequant_then_matmul is the weight-only reference");
             let wf = dequant_full(q, scale, *rows, *cols);
             par_rows(x, m, k, n, out, 1, 0, |xr, or, _| fp_row(kr, xr, &wf, n, or));
@@ -428,6 +508,96 @@ mod tests {
                 out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                 "fp kernel={}",
                 kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn decode_pack_matches_axpy_form() {
+        // K-major decode GEMM vs the row-major axpy form: the scalar
+        // kernel's dot IS the sequential K-order accumulation, i.e. the
+        // exact op sequence of the axpy form — bit-identical. SIMD
+        // backends reduce in the pinned 8-lane layout and must land
+        // within reassociation tolerance.
+        prop_check("kmajor decode gemm vs axpy", 40, |g| {
+            let m = g.usize_in(1, 5);
+            let k = g.usize_in(1, 60);
+            let n = g.usize_in(1, 40);
+            let x = g.vec_f32(m * k, -1.0, 1.0);
+            let (q, scale) = rand_quant(g, k, n, 7);
+            let lin = Lin::from_lattice(Cow::Borrowed(&q), &scale, k, n, Format::Int4)
+                .with_decode_pack();
+            assert!(lin.has_decode_pack());
+            let mut axpy = vec![0.0f32; m * n];
+            matmul_with(&x, m, &lin, &mut axpy, 1, kernel::by_kind(KernelKind::Scalar));
+            let mut dec = vec![0.0f32; m * n];
+            matmul_decode(&x, m, &lin, &mut dec, 1, kernel::by_kind(KernelKind::Scalar));
+            for i in 0..m * n {
+                if dec[i].to_bits() != axpy[i].to_bits() {
+                    return Err(format!(
+                        "scalar kmajor != axpy at {}: {} vs {}",
+                        i, dec[i], axpy[i]
+                    ));
+                }
+            }
+            for kind in kernel::available() {
+                for threads in [1usize, 2] {
+                    let mut out = vec![0.0f32; m * n];
+                    matmul_decode(&x, m, &lin, &mut out, threads, kernel::by_kind(kind));
+                    for i in 0..m * n {
+                        let tol = 1e-4 * axpy[i].abs().max(1.0);
+                        if (out[i] - axpy[i]).abs() > tol {
+                            return Err(format!(
+                                "{} threads={} elem {}: {} vs {}",
+                                kind.name(),
+                                threads,
+                                i,
+                                out[i],
+                                axpy[i]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_pack_thread_invariant_and_fallbacks() {
+        let mut g = Gen::from_seed(17);
+        let (m, k, n) = (8usize, 96, 80);
+        let x = g.vec_f32(m * k, -2.0, 2.0);
+        let (q, scale) = rand_quant(&mut g, k, n, 7);
+        let lin =
+            Lin::from_lattice(Cow::Borrowed(&q), &scale, k, n, Format::Int4).with_decode_pack();
+        let kr = kernel::active_kernel();
+        let mut base = vec![0.0f32; m * n];
+        matmul_decode(&x, m, &lin, &mut base, 1, kr);
+        for threads in [2usize, 8] {
+            let mut out = vec![0.0f32; m * n];
+            matmul_decode(&x, m, &lin, &mut out, threads, kr);
+            assert_eq!(
+                base.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "threads={}",
+                threads
+            );
+        }
+        // non-int4 layouts: with_decode_pack is a no-op and matmul_decode
+        // falls back to the axpy form bit-for-bit
+        for fmt in [Format::Int8, Format::W8A8] {
+            let (q8, s8) = rand_quant(&mut g, k, n, fmt.qmax());
+            let lin8 =
+                Lin::from_lattice(Cow::Borrowed(&q8), &s8, k, n, fmt).with_decode_pack();
+            assert!(!lin8.has_decode_pack());
+            let mut a = vec![0.0f32; m * n];
+            let mut b = vec![0.0f32; m * n];
+            matmul_decode(&x, m, &lin8, &mut a, 1, kr);
+            matmul_with(&x, m, &lin8, &mut b, 1, kr);
+            assert_eq!(
+                a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
             );
         }
     }

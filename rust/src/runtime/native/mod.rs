@@ -26,6 +26,7 @@ use std::borrow::Cow;
 
 use anyhow::{Context, Result};
 
+use crate::kernel::{self, DotKernel};
 use crate::model::{ParamStore, ParamsView};
 use crate::quant::Format;
 use crate::runtime::backend::{EngineSet, ForwardBackend};
@@ -33,6 +34,7 @@ use crate::runtime::encode::{gumbel_noise, ClsBatch, GenBatch, LmBatch};
 use crate::runtime::manifest::{Manifest, ModelConfig};
 use crate::util::parallel;
 
+use autograd::LayerCache;
 use gemm::Lin;
 
 /// Matches model.py's additive attention-bias constant.
@@ -93,6 +95,29 @@ impl NativeBackend {
         Ok(())
     }
 
+    /// The run's weight format.
+    pub fn format(&self) -> Format {
+        self.format
+    }
+
+    /// The configured GEMM thread fan-out (results are invariant to it).
+    pub fn gemm_threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Resolve the full model against a view for direct stepping (the
+    /// generation scheduler): optional member overrides, optional shared
+    /// head operand, optional K-major decode packs.
+    pub(crate) fn resolve_params<'v>(
+        &self,
+        view: &ParamsView<'v>,
+        overrides: Option<&'v [Vec<i8>]>,
+        emb_t: Option<&'v [f32]>,
+        decode_pack: bool,
+    ) -> Result<NativeParams<'v>> {
+        resolve(&self.cfg, self.format, view, overrides, emb_t, decode_pack)
+    }
+
     fn forward_full(
         &self,
         p: &NativeParams<'_>,
@@ -103,64 +128,169 @@ impl NativeBackend {
         s: usize,
         want_kv: bool,
     ) -> Forward {
-        let cfg = &self.cfg;
-        let d = cfg.d_model;
-        let rows = b * s;
-        let mut h = vec![0.0f32; rows * d];
-        for r in 0..rows {
-            let tok = tokens[r] as usize;
-            let pos = pos_ids[r] as usize;
-            for j in 0..d {
-                h[r * d + j] = p.tok_emb[tok * d + j] + p.pos_emb[pos * d + j];
-            }
-        }
-        let mut x = vec![0.0f32; rows * d];
-        let mut qb = vec![0.0f32; rows * d];
-        let mut kb = vec![0.0f32; rows * d];
-        let mut vb = vec![0.0f32; rows * d];
-        let mut ab = vec![0.0f32; rows * d];
-        let mut pj = vec![0.0f32; rows * d];
-        let mut ff = vec![0.0f32; rows * cfg.d_ff];
-        let mut ff2 = vec![0.0f32; rows * d];
-        let mut kvs = Vec::new();
-        for layer in &p.layers {
-            layernorm(&h, d, layer.ln1_g, layer.ln1_b, &mut x);
-            gemm::matmul(&x, rows, &layer.wq, &mut qb, self.threads);
-            gemm::matmul(&x, rows, &layer.wk, &mut kb, self.threads);
-            gemm::matmul(&x, rows, &layer.wv, &mut vb, self.threads);
-            attend_full(b, s, cfg.n_heads, d / cfg.n_heads, &qb, &kb, &vb, mask, &mut ab);
-            gemm::matmul(&ab, rows, &layer.wo, &mut pj, self.threads);
-            for i in 0..rows * d {
-                h[i] += pj[i];
-            }
-            layernorm(&h, d, layer.ln2_g, layer.ln2_b, &mut x);
-            gemm::matmul(&x, rows, &layer.w1, &mut ff, self.threads);
-            for fv in ff.iter_mut() {
-                *fv = gelu(*fv);
-            }
-            gemm::matmul(&ff, rows, &layer.w2, &mut ff2, self.threads);
-            for i in 0..rows * d {
-                h[i] += ff2[i];
-            }
-            if want_kv {
-                kvs.push((kb.clone(), vb.clone()));
-            }
-        }
-        Forward { h, kvs }
+        forward_full(
+            &self.cfg,
+            self.threads,
+            kernel::active_kernel(),
+            p,
+            tokens,
+            pos_ids,
+            mask,
+            b,
+            s,
+            want_kv,
+            None,
+        )
     }
 
-    /// Final layernorm + weight-tied LM head over the selected rows of
-    /// `h`: `out[[i], :] = lnf(h[rows[i]]) @ tok_emb^T`.
     fn head_rows(&self, p: &NativeParams<'_>, h: &[f32], rows: &[usize], out: &mut [f32]) {
-        let d = self.cfg.d_model;
-        let v = self.cfg.vocab;
-        let mut hf = vec![0.0f32; rows.len() * d];
-        for (ri, &r) in rows.iter().enumerate() {
-            layernorm(&h[r * d..(r + 1) * d], d, p.lnf_g, p.lnf_b, &mut hf[ri * d..(ri + 1) * d]);
-        }
-        let lin = Lin::Fp { w: &p.emb_t, rows: d, cols: v };
-        gemm::matmul(&hf, rows.len(), &lin, out, self.threads);
+        head_rows(&self.cfg, self.threads, kernel::active_kernel(), p, h, rows, out);
     }
+}
+
+/// ONE full-sequence pass of the layer stack — the single source of truth
+/// for the forward op sequence, shared by every consumer: the backend's
+/// gen/cls/loss graphs (`capture: None`), the generation scheduler's
+/// batched prefill, and the autograd backward (`capture: Some`, which
+/// additionally records every per-layer intermediate — layernorm
+/// statistics, attention probabilities, pre-GELU activations — the
+/// backward pass needs). Capture changes WHERE results are written, never
+/// what is computed: both modes execute the identical float op sequence,
+/// so captured and plain forwards agree bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_full(
+    cfg: &ModelConfig,
+    threads: usize,
+    kr: &dyn DotKernel,
+    p: &NativeParams<'_>,
+    tokens: &[i32],
+    pos_ids: &[i32],
+    mask: &[f32],
+    b: usize,
+    s: usize,
+    want_kv: bool,
+    mut capture: Option<&mut Vec<LayerCache>>,
+) -> Forward {
+    let d = cfg.d_model;
+    let heads = cfg.n_heads;
+    let dh = d / heads;
+    let rows = b * s;
+    let mut h = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let tok = tokens[r] as usize;
+        let pos = pos_ids[r] as usize;
+        for j in 0..d {
+            h[r * d + j] = p.tok_emb[tok * d + j] + p.pos_emb[pos * d + j];
+        }
+    }
+    let mut x = vec![0.0f32; rows * d];
+    let mut qb = vec![0.0f32; rows * d];
+    let mut kb = vec![0.0f32; rows * d];
+    let mut vb = vec![0.0f32; rows * d];
+    let mut ab = vec![0.0f32; rows * d];
+    let mut pj = vec![0.0f32; rows * d];
+    let mut ff = vec![0.0f32; rows * cfg.d_ff];
+    let mut ff2 = vec![0.0f32; rows * d];
+    let mut kvs = Vec::new();
+    for layer in &p.layers {
+        match &mut capture {
+            None => {
+                layernorm(&h, d, layer.ln1_g, layer.ln1_b, &mut x);
+                gemm::matmul_with(&x, rows, &layer.wq, &mut qb, threads, kr);
+                gemm::matmul_with(&x, rows, &layer.wk, &mut kb, threads, kr);
+                gemm::matmul_with(&x, rows, &layer.wv, &mut vb, threads, kr);
+                attend_full(b, s, heads, dh, &qb, &kb, &vb, mask, None, &mut ab);
+                gemm::matmul_with(&ab, rows, &layer.wo, &mut pj, threads, kr);
+                for i in 0..rows * d {
+                    h[i] += pj[i];
+                }
+                layernorm(&h, d, layer.ln2_g, layer.ln2_b, &mut x);
+                gemm::matmul_with(&x, rows, &layer.w1, &mut ff, threads, kr);
+                for fv in ff.iter_mut() {
+                    *fv = gelu(*fv);
+                }
+                gemm::matmul_with(&ff, rows, &layer.w2, &mut ff2, threads, kr);
+                for i in 0..rows * d {
+                    h[i] += ff2[i];
+                }
+                if want_kv {
+                    kvs.push((kb.clone(), vb.clone()));
+                }
+            }
+            Some(caches) => {
+                let mut c = LayerCache::new(rows, d, cfg.d_ff, b, heads, s);
+                layernorm_stats(
+                    &h,
+                    d,
+                    layer.ln1_g,
+                    layer.ln1_b,
+                    &mut c.x1,
+                    Some((&mut c.xhat1, &mut c.rstd1)),
+                );
+                gemm::matmul_with(&c.x1, rows, &layer.wq, &mut c.q, threads, kr);
+                gemm::matmul_with(&c.x1, rows, &layer.wk, &mut c.k, threads, kr);
+                gemm::matmul_with(&c.x1, rows, &layer.wv, &mut c.v, threads, kr);
+                attend_full(
+                    b,
+                    s,
+                    heads,
+                    dh,
+                    &c.q,
+                    &c.k,
+                    &c.v,
+                    mask,
+                    Some(&mut c.att),
+                    &mut c.amerge,
+                );
+                gemm::matmul_with(&c.amerge, rows, &layer.wo, &mut pj, threads, kr);
+                for i in 0..rows * d {
+                    h[i] += pj[i];
+                }
+                layernorm_stats(
+                    &h,
+                    d,
+                    layer.ln2_g,
+                    layer.ln2_b,
+                    &mut c.x2,
+                    Some((&mut c.xhat2, &mut c.rstd2)),
+                );
+                gemm::matmul_with(&c.x2, rows, &layer.w1, &mut c.u, threads, kr);
+                for (gv, &uv) in c.gu.iter_mut().zip(c.u.iter()) {
+                    *gv = gelu(uv);
+                }
+                gemm::matmul_with(&c.gu, rows, &layer.w2, &mut ff2, threads, kr);
+                for i in 0..rows * d {
+                    h[i] += ff2[i];
+                }
+                if want_kv {
+                    kvs.push((c.k.clone(), c.v.clone()));
+                }
+                caches.push(c);
+            }
+        }
+    }
+    Forward { h, kvs }
+}
+
+/// Final layernorm + weight-tied LM head over the selected rows of `h`:
+/// `out[[i], :] = lnf(h[rows[i]]) @ tok_emb^T`.
+pub(crate) fn head_rows(
+    cfg: &ModelConfig,
+    threads: usize,
+    kr: &dyn DotKernel,
+    p: &NativeParams<'_>,
+    h: &[f32],
+    rows: &[usize],
+    out: &mut [f32],
+) {
+    let d = cfg.d_model;
+    let v = cfg.vocab;
+    let mut hf = vec![0.0f32; rows.len() * d];
+    for (ri, &r) in rows.iter().enumerate() {
+        layernorm(&h[r * d..(r + 1) * d], d, p.lnf_g, p.lnf_b, &mut hf[ri * d..(ri + 1) * d]);
+    }
+    let lin = Lin::Fp { w: p.emb_t.as_ref(), rows: d, cols: v };
+    gemm::matmul_with(&hf, rows.len(), &lin, out, threads, kr);
 }
 
 impl ForwardBackend for NativeBackend {
@@ -170,6 +300,10 @@ impl ForwardBackend for NativeBackend {
 
     fn cfg(&self) -> &ModelConfig {
         &self.cfg
+    }
+
+    fn as_native(&self) -> Option<&NativeBackend> {
+        Some(self)
     }
 
     fn set_threads(&mut self, threads: usize) {
@@ -185,7 +319,7 @@ impl ForwardBackend for NativeBackend {
         gumbel_seed: Option<u64>,
     ) -> Result<Vec<i32>> {
         self.want(self.set.gen, "gen")?;
-        let p = resolve(&self.cfg, self.format, view, overrides)?;
+        let p = resolve(&self.cfg, self.format, view, overrides, None, false)?;
         let cfg = &self.cfg;
         let (b, sp, t_dec) = (cfg.b_gen, cfg.s_prompt, cfg.t_dec);
         let st = sp + t_dec;
@@ -311,7 +445,7 @@ impl ForwardBackend for NativeBackend {
         batch: &ClsBatch,
     ) -> Result<Vec<f32>> {
         self.want(self.set.cls, "cls")?;
-        let p = resolve(&self.cfg, self.format, view, overrides)?;
+        let p = resolve(&self.cfg, self.format, view, overrides, None, false)?;
         let cfg = &self.cfg;
         let (b, s) = (cfg.b_train, cfg.s_train);
         let v = cfg.vocab;
@@ -336,7 +470,7 @@ impl ForwardBackend for NativeBackend {
         batch: &LmBatch,
     ) -> Result<(f32, f32, f32)> {
         self.want(self.set.loss, "loss")?;
-        let p = resolve(&self.cfg, self.format, view, overrides)?;
+        let p = resolve(&self.cfg, self.format, view, overrides, None, false)?;
         let cfg = &self.cfg;
         let (b, s) = (cfg.b_train, cfg.s_train);
         let v = cfg.vocab;
@@ -386,36 +520,61 @@ impl ForwardBackend for NativeBackend {
 
 /// One full-sequence pass: final hidden states plus (optionally) each
 /// layer's k/v rows for cache priming.
-struct Forward {
-    h: Vec<f32>,
-    kvs: Vec<(Vec<f32>, Vec<f32>)>,
+pub(crate) struct Forward {
+    pub(crate) h: Vec<f32>,
+    pub(crate) kvs: Vec<(Vec<f32>, Vec<f32>)>,
 }
 
 /// Weights of one transformer block, resolved to slices/GEMM operands.
-struct LayerParams<'v> {
-    ln1_g: &'v [f32],
-    ln1_b: &'v [f32],
-    ln2_g: &'v [f32],
-    ln2_b: &'v [f32],
-    wq: Lin<'v>,
-    wk: Lin<'v>,
-    wv: Lin<'v>,
-    wo: Lin<'v>,
-    w1: Lin<'v>,
-    w2: Lin<'v>,
+pub(crate) struct LayerParams<'v> {
+    pub(crate) ln1_g: &'v [f32],
+    pub(crate) ln1_b: &'v [f32],
+    pub(crate) ln2_g: &'v [f32],
+    pub(crate) ln2_b: &'v [f32],
+    pub(crate) wq: Lin<'v>,
+    pub(crate) wk: Lin<'v>,
+    pub(crate) wv: Lin<'v>,
+    pub(crate) wo: Lin<'v>,
+    pub(crate) w1: Lin<'v>,
+    pub(crate) w2: Lin<'v>,
 }
 
 /// The full model resolved against one parameter view (+ optional member
-/// overrides). Lives for one backend call.
-struct NativeParams<'v> {
-    tok_emb: &'v [f32],
-    pos_emb: &'v [f32],
-    lnf_g: &'v [f32],
-    lnf_b: &'v [f32],
-    layers: Vec<LayerParams<'v>>,
+/// overrides). Lives for one backend call — or for a whole scheduler
+/// round, which is the point: the resolve+pack cost is paid once per
+/// member per round instead of once per generate call.
+pub(crate) struct NativeParams<'v> {
+    pub(crate) tok_emb: &'v [f32],
+    pub(crate) pos_emb: &'v [f32],
+    pub(crate) lnf_g: &'v [f32],
+    pub(crate) lnf_b: &'v [f32],
+    pub(crate) layers: Vec<LayerParams<'v>>,
     /// `tok_emb` transposed to `[d_model, vocab]` for the weight-tied LM
-    /// head GEMM (materialized once per call; d*vocab floats).
-    emb_t: Vec<f32>,
+    /// head GEMM: materialized per resolve, or borrowed from a caller's
+    /// cache (`tok_emb` never changes during ES fine-tuning, so one
+    /// transpose can serve every member and round — see [`build_emb_t`]).
+    pub(crate) emb_t: Cow<'v, [f32]>,
+}
+
+/// Materialize the weight-tied LM head operand (`tok_emb` transposed to
+/// `[d_model, vocab]`) for sharing across [`resolve`] calls.
+pub fn build_emb_t(store: &ParamStore) -> Result<Vec<f32>> {
+    let e = store
+        .get("tok_emb")
+        .ok_or_else(|| anyhow::anyhow!("param \"tok_emb\" missing from store"))?;
+    Ok(transpose_emb(e.data.as_f32(), e.shape[0], e.shape[1]))
+}
+
+/// `[vocab, d]` -> `[d, vocab]` — the ONE transpose loop behind both
+/// [`build_emb_t`] and [`resolve`]'s uncached path.
+fn transpose_emb(tok_emb: &[f32], v: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; d * v];
+    for vi in 0..v {
+        for j in 0..d {
+            out[j * v + vi] = tok_emb[vi * d + j];
+        }
+    }
+    out
 }
 
 fn fp_slice<'v>(store: &'v ParamStore, name: &str) -> Result<&'v [f32]> {
@@ -428,12 +587,15 @@ fn fp_slice<'v>(store: &'v ParamStore, name: &str) -> Result<&'v [f32]> {
 
 /// Resolve the lattice tensor named `<base>.q` through the view (shard
 /// slabs gathered per tensor) or the member's override buffer, paired
-/// with its `.s` scales, into a GEMM operand.
+/// with its `.s` scales, into a GEMM operand. `decode_pack` additionally
+/// builds the K-major transposed pack for the decode-step GEMM (INT4
+/// only; see [`Lin::with_decode_pack`]).
 fn lattice_lin<'v>(
     view: &ParamsView<'v>,
     overrides: Option<&'v [Vec<i8>]>,
     base: &str,
     format: Format,
+    decode_pack: bool,
 ) -> Result<Lin<'v>> {
     let store = view.store;
     if format == Format::Fp32 {
@@ -466,14 +628,17 @@ fn lattice_lin<'v>(
         e.numel()
     );
     let scale = fp_slice(store, &format!("{}.s", base))?;
-    Ok(Lin::from_lattice(q, scale, e.shape[0], e.shape[1], format))
+    let lin = Lin::from_lattice(q, scale, e.shape[0], e.shape[1], format);
+    Ok(if decode_pack { lin.with_decode_pack() } else { lin })
 }
 
-fn resolve<'v>(
+pub(crate) fn resolve<'v>(
     cfg: &ModelConfig,
     format: Format,
     view: &ParamsView<'v>,
     overrides: Option<&'v [Vec<i8>]>,
+    emb_t: Option<&'v [f32]>,
+    decode_pack: bool,
 ) -> Result<NativeParams<'v>> {
     let store = view.store;
     anyhow::ensure!(
@@ -495,12 +660,18 @@ fn resolve<'v>(
     let pos_emb = fp_slice(store, "pos_emb")?;
     let emb = store.get("tok_emb").expect("checked above");
     let (v, d) = (emb.shape[0], emb.shape[1]);
-    let mut emb_t = vec![0.0f32; d * v];
-    for vi in 0..v {
-        for j in 0..d {
-            emb_t[j * v + vi] = tok_emb[vi * d + j];
+    let emb_t: Cow<'v, [f32]> = match emb_t {
+        Some(t) => {
+            anyhow::ensure!(
+                t.len() == d * v,
+                "shared emb_t cache has {} elems, want {}",
+                t.len(),
+                d * v
+            );
+            Cow::Borrowed(t)
         }
-    }
+        None => Cow::Owned(transpose_emb(tok_emb, v, d)),
+    };
     // cfg drives the layer count; a store missing a layer surfaces as a
     // descriptive missing-param error from fp_slice/lattice_lin below
     // instead of an index panic in the KV-priming loop.
@@ -512,12 +683,12 @@ fn resolve<'v>(
             ln1_b: fp_slice(store, &format!("{}ln1.b", pre))?,
             ln2_g: fp_slice(store, &format!("{}ln2.g", pre))?,
             ln2_b: fp_slice(store, &format!("{}ln2.b", pre))?,
-            wq: lattice_lin(view, overrides, &format!("{}attn.wq", pre), format)?,
-            wk: lattice_lin(view, overrides, &format!("{}attn.wk", pre), format)?,
-            wv: lattice_lin(view, overrides, &format!("{}attn.wv", pre), format)?,
-            wo: lattice_lin(view, overrides, &format!("{}attn.wo", pre), format)?,
-            w1: lattice_lin(view, overrides, &format!("{}mlp.w1", pre), format)?,
-            w2: lattice_lin(view, overrides, &format!("{}mlp.w2", pre), format)?,
+            wq: lattice_lin(view, overrides, &format!("{}attn.wq", pre), format, decode_pack)?,
+            wk: lattice_lin(view, overrides, &format!("{}attn.wk", pre), format, decode_pack)?,
+            wv: lattice_lin(view, overrides, &format!("{}attn.wv", pre), format, decode_pack)?,
+            wo: lattice_lin(view, overrides, &format!("{}attn.wo", pre), format, decode_pack)?,
+            w1: lattice_lin(view, overrides, &format!("{}mlp.w1", pre), format, decode_pack)?,
+            w2: lattice_lin(view, overrides, &format!("{}mlp.w2", pre), format, decode_pack)?,
         });
     }
     Ok(NativeParams {
@@ -532,7 +703,21 @@ fn resolve<'v>(
 
 /// Row-wise layernorm over `[rows, d]`.
 pub(crate) fn layernorm(x: &[f32], d: usize, g: &[f32], b: &[f32], out: &mut [f32]) {
-    for (xr, or) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+    layernorm_stats(x, d, g, b, out, None);
+}
+
+/// [`layernorm`] that optionally records per-row normalization state
+/// (`xhat`, `rstd`) for the backward pass. The float op sequence is
+/// identical with and without capture.
+pub(crate) fn layernorm_stats(
+    x: &[f32],
+    d: usize,
+    g: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    mut stats: Option<(&mut [f32], &mut [f32])>,
+) {
+    for (r, (xr, or)) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)).enumerate() {
         let mut mu = 0.0f32;
         for &v in xr {
             mu += v;
@@ -546,7 +731,14 @@ pub(crate) fn layernorm(x: &[f32], d: usize, g: &[f32], b: &[f32], out: &mut [f3
         var /= d as f32;
         let rstd = 1.0 / (var + LN_EPS).sqrt();
         for j in 0..d {
-            or[j] = (xr[j] - mu) * rstd * g[j] + b[j];
+            let xh = (xr[j] - mu) * rstd;
+            or[j] = xh * g[j] + b[j];
+            if let Some((xhat, _)) = &mut stats {
+                xhat[r * d + j] = xh;
+            }
+        }
+        if let Some((_, rs)) = &mut stats {
+            rs[r] = rstd;
         }
     }
 }
@@ -567,6 +759,10 @@ pub(crate) fn softmax_inplace(l: &mut [f32]) {
 /// Full-sequence multi-head attention with causal + key masking. `q`,
 /// `k`, `v`, `out` are `[b, s, heads*dh]` row-major; `mask` is `[b, s]`
 /// (1 = real key). Matches model.py `_attend` + the `_block_full` bias.
+/// When `att` is `Some` (`[b, heads, s, s]`), the softmax probabilities
+/// are computed in place there — the backward pass's cache — with the
+/// identical op sequence.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn attend_full(
     b: usize,
     s: usize,
@@ -576,16 +772,24 @@ pub(crate) fn attend_full(
     k: &[f32],
     v: &[f32],
     mask: &[f32],
+    mut att: Option<&mut [f32]>,
     out: &mut [f32],
 ) {
     let d = heads * dh;
     out.fill(0.0);
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut logits = vec![0.0f32; s];
+    let mut local = vec![0.0f32; s];
     for bi in 0..b {
         for h in 0..heads {
             for sq in 0..s {
                 let qo = (bi * s + sq) * d + h * dh;
+                let logits: &mut [f32] = match &mut att {
+                    Some(a) => {
+                        let base = ((bi * heads + h) * s + sq) * s;
+                        &mut a[base..base + s]
+                    }
+                    None => &mut local,
+                };
                 for sk in 0..s {
                     let bias =
                         if sk <= sq && mask[bi * s + sk] > 0.0 { 0.0 } else { NEG_INF };
@@ -596,7 +800,7 @@ pub(crate) fn attend_full(
                     }
                     logits[sk] = dot * scale + bias;
                 }
-                softmax_inplace(&mut logits);
+                softmax_inplace(logits);
                 let oo = (bi * s + sq) * d + h * dh;
                 for sk in 0..s {
                     let w = logits[sk];

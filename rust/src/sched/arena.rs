@@ -1,0 +1,237 @@
+//! Slot-based KV arena: the scheduler's cache memory.
+//!
+//! Per layer, one `[slots, s_max, d]` f32 slab for keys and one for
+//! values, plus a `[slots, s_max]` key mask — the same `[b, st, d]`
+//! geometry `NativeBackend::generate` allocates per call, except the
+//! slots outlive any single request: a free-list hands them to admitted
+//! sequences and recycles them the moment a sequence retires, so a
+//! long-running scheduler serves an unbounded request stream from a
+//! fixed-size arena (`bytes_per_slot` = `n_layers · 2 · s_max · d · 4`).
+//!
+//! Recycling never needs to zero the K/V rows: allocation clears only
+//! the slot's key mask, and the scheduler attends exclusively to
+//! positions it has written for the CURRENT occupant (masked positions
+//! contribute exactly zero attention weight), so stale rows from a
+//! previous occupant are unreachable — the aliasing property the unit
+//! tests pin.
+
+/// Fixed-size slot arena holding per-layer KV slabs and key masks.
+pub struct KvArena {
+    n_layers: usize,
+    slots: usize,
+    s_max: usize,
+    d: usize,
+    /// Per layer: `[slots * s_max * d]` keys.
+    k: Vec<Vec<f32>>,
+    /// Per layer: `[slots * s_max * d]` values.
+    v: Vec<Vec<f32>>,
+    /// `[slots * s_max]`, 1.0 = attendable position of the current
+    /// occupant (left-pad positions inside the prompt stay 0).
+    keymask: Vec<f32>,
+    /// LIFO free-list (lowest slot ids surface first from a fresh arena).
+    free: Vec<usize>,
+    live: Vec<bool>,
+    high_water: usize,
+}
+
+impl KvArena {
+    pub fn new(n_layers: usize, slots: usize, s_max: usize, d: usize) -> KvArena {
+        assert!(n_layers > 0 && slots > 0 && s_max > 0 && d > 0, "degenerate arena geometry");
+        KvArena {
+            n_layers,
+            slots,
+            s_max,
+            d,
+            k: (0..n_layers).map(|_| vec![0.0f32; slots * s_max * d]).collect(),
+            v: (0..n_layers).map(|_| vec![0.0f32; slots * s_max * d]).collect(),
+            keymask: vec![0.0f32; slots * s_max],
+            free: (0..slots).rev().collect(),
+            live: vec![false; slots],
+            high_water: 0,
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn s_max(&self) -> usize {
+        self.s_max
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.slots - self.free.len()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Most slots ever simultaneously live (telemetry; tests use it to
+    /// prove exhaustion queues rather than over-allocating).
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    pub fn is_live(&self, slot: usize) -> bool {
+        self.live[slot]
+    }
+
+    /// Claim a slot for a new sequence, clearing its key mask. `None`
+    /// when every slot is occupied — callers queue the request rather
+    /// than erroring; a later [`KvArena::release`] unblocks it.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        debug_assert!(!self.live[slot], "free-list handed out a live slot");
+        self.live[slot] = true;
+        self.keymask[slot * self.s_max..(slot + 1) * self.s_max].fill(0.0);
+        self.high_water = self.high_water.max(self.live_count());
+        Some(slot)
+    }
+
+    /// Recycle a finished sequence's slot back onto the free list.
+    pub fn release(&mut self, slot: usize) {
+        assert!(self.live[slot], "released slot {} is not live", slot);
+        self.live[slot] = false;
+        self.free.push(slot);
+    }
+
+    /// Write one position's key/value rows for `slot` at layer `layer`.
+    pub fn write_kv(&mut self, layer: usize, slot: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
+        debug_assert!(pos < self.s_max, "position {} outside s_max {}", pos, self.s_max);
+        debug_assert!(self.live[slot], "write into a slot that is not live");
+        let d = self.d;
+        let off = (slot * self.s_max + pos) * d;
+        self.k[layer][off..off + d].copy_from_slice(krow);
+        self.v[layer][off..off + d].copy_from_slice(vrow);
+    }
+
+    pub fn set_mask(&mut self, slot: usize, pos: usize, m: f32) {
+        self.keymask[slot * self.s_max + pos] = m;
+    }
+
+    pub fn k_slab(&self, layer: usize) -> &[f32] {
+        &self.k[layer]
+    }
+
+    pub fn v_slab(&self, layer: usize) -> &[f32] {
+        &self.v[layer]
+    }
+
+    pub fn keymask(&self) -> &[f32] {
+        &self.keymask
+    }
+
+    /// Cache bytes one slot pins across all layers (K + V).
+    pub fn bytes_per_slot(&self) -> usize {
+        self.n_layers * 2 * self.s_max * self.d * 4
+    }
+
+    /// Total arena footprint (slabs + key masks).
+    pub fn bytes(&self) -> usize {
+        self.slots * self.bytes_per_slot() + self.keymask.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    fn fill_slot(a: &mut KvArena, slot: usize, tag: f32) {
+        for layer in 0..a.n_layers {
+            for pos in 0..a.s_max {
+                let row: Vec<f32> = (0..a.d).map(|j| tag + j as f32).collect();
+                a.write_kv(layer, slot, pos, &row, &row);
+                a.set_mask(slot, pos, 1.0);
+            }
+        }
+    }
+
+    fn slot_tag_intact(a: &KvArena, slot: usize, tag: f32) -> bool {
+        (0..a.n_layers).all(|layer| {
+            let base = slot * a.s_max * a.d;
+            a.k_slab(layer)[base] == tag && a.v_slab(layer)[base] == tag
+        })
+    }
+
+    #[test]
+    fn alloc_exhausts_then_queues_and_release_unblocks() {
+        let mut a = KvArena::new(2, 4, 8, 4);
+        let got: Vec<usize> = (0..4).map(|_| a.alloc().expect("4 slots")).collect();
+        assert_eq!(a.live_count(), 4);
+        assert!(a.alloc().is_none(), "exhausted arena must return None, not panic");
+        assert!(a.alloc().is_none(), "exhaustion is stable");
+        a.release(got[2]);
+        assert_eq!(a.alloc(), Some(got[2]), "released slot is reusable");
+        assert_eq!(a.high_water(), 4);
+    }
+
+    #[test]
+    fn alloc_never_returns_a_live_slot() {
+        // random alloc/release storm: the free list must never hand out a
+        // slot that is currently live, and ids stay in range
+        let mut a = KvArena::new(1, 8, 4, 2);
+        let mut rng = SplitMix64::new(9);
+        let mut held: Vec<usize> = Vec::new();
+        for _ in 0..500 {
+            if !held.is_empty() && rng.below(2) == 0 {
+                let i = rng.below(held.len() as u64) as usize;
+                let s = held.swap_remove(i);
+                a.release(s);
+            } else if let Some(s) = a.alloc() {
+                assert!(s < a.slots());
+                assert!(!held.contains(&s), "slot {} double-allocated", s);
+                held.push(s);
+            }
+            assert_eq!(a.live_count(), held.len());
+        }
+    }
+
+    #[test]
+    fn recycling_never_aliases_live_sequences() {
+        // fill every slot with a distinguishable pattern, retire half,
+        // overwrite the recycled slots — survivors must be untouched
+        let mut a = KvArena::new(2, 6, 5, 3);
+        let slots: Vec<usize> = (0..6).map(|_| a.alloc().unwrap()).collect();
+        for (i, &s) in slots.iter().enumerate() {
+            fill_slot(&mut a, s, 100.0 * (i + 1) as f32);
+        }
+        for &s in slots.iter().step_by(2) {
+            a.release(s);
+        }
+        let recycled: Vec<usize> = (0..3).map(|_| a.alloc().unwrap()).collect();
+        for &s in &recycled {
+            assert!(slots.iter().step_by(2).any(|&r| r == s), "recycled {} was never freed", s);
+            fill_slot(&mut a, s, 9999.0);
+        }
+        for (i, &s) in slots.iter().enumerate().skip(1).step_by(2) {
+            assert!(
+                slot_tag_intact(&a, s, 100.0 * (i + 1) as f32),
+                "live slot {} clobbered by recycling",
+                s
+            );
+        }
+    }
+
+    #[test]
+    fn alloc_clears_keymask_but_not_kv() {
+        let mut a = KvArena::new(1, 2, 4, 2);
+        let s = a.alloc().unwrap();
+        fill_slot(&mut a, s, 7.0);
+        a.release(s);
+        let s2 = a.alloc().unwrap();
+        assert_eq!(s2, s);
+        let base = s * a.s_max();
+        assert!(a.keymask()[base..base + a.s_max()].iter().all(|&m| m == 0.0));
+        // K/V intentionally keeps stale data — masked out by contract
+        assert!(slot_tag_intact(&a, s, 7.0));
+    }
+
+    #[test]
+    fn memory_model_identities() {
+        let a = KvArena::new(3, 4, 10, 8);
+        assert_eq!(a.bytes_per_slot(), 3 * 2 * 10 * 8 * 4);
+        assert_eq!(a.bytes(), 4 * a.bytes_per_slot() + 4 * 10 * 4);
+    }
+}

@@ -1,0 +1,685 @@
+//! Continuous-batching generation scheduler — the serving-shaped rollout
+//! engine.
+//!
+//! The per-call `NativeBackend::generate` path pays, for every member ×
+//! every batch: a full `resolve` (+ INT4 repack), a prompt prefill over
+//! `b_gen` fixed rows (padding duplicates included), and `t_dec` decode
+//! steps for every row whether or not it already emitted EOS. This module
+//! replaces that with a slot-based engine:
+//!
+//! * [`GenRequest`]/[`GenTicket`] — submit prompts individually (variable
+//!   length, per-request decode budget, greedy or per-request-seeded
+//!   sampled decode) and collect each completion as it finishes;
+//! * [`KvArena`] — per-layer `[slots, s_max, d]` KV slabs with a
+//!   free-list: prompt priming writes the prefill rows, decode appends
+//!   one row per step, and retirement recycles the slot without touching
+//!   the rest of the batch;
+//! * [`Scheduler::step`] — admit waiting requests into free slots, run
+//!   ONE batched prefill over the newly admitted and ONE batched decode
+//!   GEMM per step across ALL live slots (K-major
+//!   `DotKernel::dot_packed_int4` per output channel for INT4 — see
+//!   `gemm::matmul_decode`), and retire finished sequences mid-batch.
+//!
+//! # Determinism: batch invariance
+//!
+//! Every per-sequence result depends only on that sequence's request:
+//! the GEMMs compute each output element from its own input row in fixed
+//! K order, attention reads only the slot's own arena rows, sampling
+//! noise is a per-request stream indexed by step (never by slot or batch
+//! position). Greedy decode is therefore **batch-invariant** — output
+//! tokens are bit-identical for any slot count × admission order ×
+//! thread count, extending the repo's determinism contract
+//! (`tests/scheduler.rs` enforces the matrix). Across KERNEL backends
+//! the same bit-identity holds on the axpy decode path
+//! (`SchedCfg::kmajor = false`); the K-major path inherits
+//! `dot_packed_int4`'s documented reassociation tolerance, with the
+//! scalar backend bit-identical to the axpy form by construction.
+//!
+//! One resolve+pack per member serves a whole generation round, and the
+//! weight-tied-head transpose can be shared across members/rounds
+//! ([`crate::runtime::native::build_emb_t`]): `tok_emb` never changes
+//! during ES fine-tuning. `GenWorkload` routes rollout and greedy eval
+//! through [`rollout_round`]/[`greedy_texts`]; `qes serve` ([`serve`])
+//! drives the same engine over line-delimited JSON.
+
+pub mod arena;
+pub mod serve;
+
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::{Context, Result};
+
+use crate::kernel::{self, DotKernel, KernelKind};
+use crate::model::ParamsView;
+use crate::quant::Format;
+use crate::rng::SplitMix64;
+use crate::runtime::encode::GenBatch;
+use crate::runtime::native::{self, gemm, NativeBackend, NativeParams};
+use crate::runtime::ModelConfig;
+use crate::tasks::tokenizer;
+
+pub use arena::KvArena;
+
+/// Salt separating per-request decode-sampling streams from every other
+/// consumer of the RNG substrate.
+const REQ_GUMBEL_SALT: u64 = 0x7363_6865_645f_6774;
+/// Odd multiplier decorrelating (request, step) stream seeds.
+const STEP_MIX: u64 = 0x9e37_79b9_7f4a_7c15;
+const EOS_TOK: i32 = tokenizer::EOS as i32;
+
+/// One generation request: prompt tokens plus its decode policy.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<u8>,
+    /// Decode budget; generation also stops at the first EOS token.
+    pub max_new: usize,
+    /// Sampling temperature (0 = greedy regardless of `seed`).
+    pub tau: f32,
+    /// Per-request decode-sampling stream (rollout passes the member's
+    /// seed-override here). `None` decodes greedily.
+    pub seed: Option<u64>,
+}
+
+impl GenRequest {
+    /// Greedy request from prompt text (panics on out-of-vocabulary
+    /// chars; serving front ends use `tokenizer::try_encode` first).
+    pub fn greedy(prompt: &str, max_new: usize) -> GenRequest {
+        GenRequest { prompt: tokenizer::encode(prompt), max_new, tau: 0.0, seed: None }
+    }
+}
+
+/// Handle for one submitted request; redeem with [`Scheduler::take`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct GenTicket(usize);
+
+impl GenTicket {
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// A finished generation: raw emitted tokens (EOS included when one was
+/// emitted) and the decoded text up to EOS.
+#[derive(Debug, Clone)]
+pub struct GenOutput {
+    pub tokens: Vec<i32>,
+    pub text: String,
+}
+
+/// Scheduler geometry + execution knobs. Results are invariant to
+/// `slots` and `threads` (the batch-invariance contract); they are pure
+/// memory/wall-clock tuning.
+#[derive(Debug, Clone)]
+pub struct SchedCfg {
+    /// KV arena slots = maximum simultaneously live sequences.
+    pub slots: usize,
+    /// Prompt budget: prompts are left-padded to this width (the fixed
+    /// geometry that makes per-sequence prefill grouping-invariant).
+    pub s_prompt: usize,
+    /// Per-sequence decode budget; arena rows per slot = s_prompt + t_max.
+    pub t_max: usize,
+    /// GEMM thread fan-out.
+    pub threads: usize,
+    /// Route decode GEMMs through the K-major transposed pack (INT4
+    /// only). Off = the axpy form, bit-identical across kernel backends.
+    pub kmajor: bool,
+    /// Pin the microkernel backend (None = the process-wide dispatch).
+    pub kernel: Option<KernelKind>,
+}
+
+impl SchedCfg {
+    /// Model-shaped defaults: `b_gen` slots, the model's prompt/decode
+    /// widths, single-threaded GEMMs, K-major decode on.
+    pub fn for_model(mcfg: &ModelConfig) -> SchedCfg {
+        SchedCfg {
+            slots: mcfg.b_gen,
+            s_prompt: mcfg.s_prompt,
+            t_max: mcfg.t_dec,
+            threads: 1,
+            kmajor: true,
+            kernel: None,
+        }
+    }
+}
+
+/// Run telemetry (tests use `max_live` to prove exhaustion queues).
+#[derive(Debug, Clone, Default)]
+pub struct SchedStats {
+    pub steps: u64,
+    pub prefill_rows: u64,
+    pub decode_rows: u64,
+    pub retired: u64,
+    pub max_live: usize,
+}
+
+/// A sequence currently occupying an arena slot.
+struct Live {
+    ticket: usize,
+    slot: usize,
+    prompt: Vec<u8>,
+    max_new: usize,
+    tau: f32,
+    seed: Option<u64>,
+    /// Tokens emitted so far.
+    tokens: Vec<i32>,
+    /// Next-token logits for the position fed last (prefill's final row,
+    /// then each decode step's head output).
+    logits: Vec<f32>,
+}
+
+/// Per-step batch buffers, reused across steps (capacity sticks).
+#[derive(Default)]
+struct StepScratch {
+    h: Vec<f32>,
+    x: Vec<f32>,
+    qb: Vec<f32>,
+    kb: Vec<f32>,
+    vb: Vec<f32>,
+    ab: Vec<f32>,
+    pj: Vec<f32>,
+    ff: Vec<f32>,
+    ff2: Vec<f32>,
+    logits: Vec<f32>,
+    att: Vec<f32>,
+}
+
+fn resize(buf: &mut Vec<f32>, n: usize) {
+    buf.clear();
+    buf.resize(n, 0.0);
+}
+
+/// The continuous-batching engine. Borrows one resolved model (a member's
+/// weights) for its lifetime; submit any number of requests against it.
+pub struct Scheduler<'v> {
+    mcfg: ModelConfig,
+    scfg: SchedCfg,
+    kr: &'static dyn DotKernel,
+    p: NativeParams<'v>,
+    arena: KvArena,
+    waiting: VecDeque<(usize, GenRequest)>,
+    live: Vec<Live>,
+    done: BTreeMap<usize, GenOutput>,
+    next_ticket: usize,
+    stats: SchedStats,
+    scratch: StepScratch,
+}
+
+impl<'v> Scheduler<'v> {
+    /// Resolve `view` (+ optional member overrides, optional shared head
+    /// transpose) once and build the arena. The resolve+pack cost is paid
+    /// here, then amortized over every request this scheduler serves.
+    pub fn new(
+        backend: &NativeBackend,
+        view: &ParamsView<'v>,
+        overrides: Option<&'v [Vec<i8>]>,
+        emb_t: Option<&'v [f32]>,
+        scfg: SchedCfg,
+    ) -> Result<Scheduler<'v>> {
+        anyhow::ensure!(scfg.slots > 0, "scheduler needs at least one KV slot");
+        anyhow::ensure!(scfg.t_max > 0 && scfg.s_prompt > 0, "degenerate scheduler geometry");
+        let mcfg = backend.cfg().clone();
+        let kr = match scfg.kernel {
+            Some(kind) => kernel::by_kind(kind),
+            None => kernel::active_kernel(),
+        };
+        // The K-major pack pays off where dot_packed_int4 is the 8-lane
+        // FMA reduction (vector backends). On the scalar backend that dot
+        // IS the sequential axpy op sequence — identical bits, slower
+        // per-element nibble access — so skip the pack there. Pure
+        // wall-clock tuning, like thread counts.
+        let kmajor = scfg.kmajor
+            && backend.format() == Format::Int4
+            && kr.kind() != KernelKind::Scalar;
+        let p = backend.resolve_params(view, overrides, emb_t, kmajor)?;
+        let d = mcfg.d_model;
+        let max_pos = p.pos_emb.len() / d;
+        anyhow::ensure!(
+            scfg.s_prompt + scfg.t_max <= max_pos,
+            "arena rows {} + {} exceed the model's {} positions",
+            scfg.s_prompt,
+            scfg.t_max,
+            max_pos
+        );
+        let arena = KvArena::new(mcfg.n_layers, scfg.slots, scfg.s_prompt + scfg.t_max, d);
+        Ok(Scheduler {
+            mcfg,
+            scfg,
+            kr,
+            p,
+            arena,
+            waiting: VecDeque::new(),
+            live: Vec::new(),
+            done: BTreeMap::new(),
+            next_ticket: 0,
+            stats: SchedStats::default(),
+            scratch: StepScratch::default(),
+        })
+    }
+
+    pub fn cfg(&self) -> &SchedCfg {
+        &self.scfg
+    }
+
+    pub fn stats(&self) -> &SchedStats {
+        &self.stats
+    }
+
+    pub fn arena(&self) -> &KvArena {
+        &self.arena
+    }
+
+    /// Nothing in flight and nothing waiting.
+    pub fn idle(&self) -> bool {
+        self.live.is_empty() && self.waiting.is_empty()
+    }
+
+    /// Queue a request. Oversized prompts/budgets error here (the serving
+    /// front end maps that to an error response); a full arena does NOT —
+    /// the request waits for a recycled slot.
+    pub fn submit(&mut self, req: GenRequest) -> Result<GenTicket> {
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            req.prompt.len() <= self.scfg.s_prompt,
+            "prompt of {} tokens exceeds the {}-token budget",
+            req.prompt.len(),
+            self.scfg.s_prompt
+        );
+        anyhow::ensure!(
+            req.max_new <= self.scfg.t_max,
+            "max_new {} exceeds the decode budget {}",
+            req.max_new,
+            self.scfg.t_max
+        );
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        if req.max_new == 0 {
+            self.done.insert(ticket, GenOutput { tokens: Vec::new(), text: String::new() });
+        } else {
+            self.waiting.push_back((ticket, req));
+        }
+        Ok(GenTicket(ticket))
+    }
+
+    /// One scheduler iteration: admit → batched prefill (new slots) →
+    /// sample + retire (recycling slots without draining the batch) →
+    /// one batched decode across all survivors. Returns `false` once
+    /// idle.
+    pub fn step(&mut self) -> Result<bool> {
+        if self.idle() {
+            return Ok(false);
+        }
+        self.stats.steps += 1;
+        // --- admit waiting requests into free slots ---
+        let mut newly: Vec<usize> = Vec::new();
+        while !self.waiting.is_empty() {
+            let Some(slot) = self.arena.alloc() else { break };
+            let (ticket, req) = self.waiting.pop_front().expect("nonempty queue");
+            self.live.push(Live {
+                ticket,
+                slot,
+                prompt: req.prompt,
+                max_new: req.max_new,
+                tau: req.tau,
+                seed: req.seed,
+                tokens: Vec::new(),
+                logits: vec![0.0f32; self.mcfg.vocab],
+            });
+            newly.push(self.live.len() - 1);
+        }
+        self.stats.max_live = self.stats.max_live.max(self.live.len());
+        // --- one batched prefill over the newly admitted ---
+        if !newly.is_empty() {
+            self.prefill(&newly);
+        }
+        // --- sample one token per live sequence; retire finished ---
+        let mut i = 0;
+        while i < self.live.len() {
+            let lv = &mut self.live[i];
+            let tok = next_token(lv);
+            lv.tokens.push(tok);
+            if tok == EOS_TOK || lv.tokens.len() >= lv.max_new {
+                let lv = self.live.swap_remove(i);
+                self.arena.release(lv.slot);
+                self.stats.retired += 1;
+                self.done.insert(
+                    lv.ticket,
+                    GenOutput { text: tokenizer::decode_to_eos(&lv.tokens), tokens: lv.tokens },
+                );
+            } else {
+                i += 1;
+            }
+        }
+        // --- one batched decode across all survivors ---
+        if !self.live.is_empty() {
+            self.decode_step();
+        }
+        Ok(true)
+    }
+
+    /// Drive [`Scheduler::step`] until idle.
+    pub fn run(&mut self) -> Result<()> {
+        while self.step()? {}
+        Ok(())
+    }
+
+    /// Redeem a finished ticket (None until its sequence completes).
+    pub fn take(&mut self, ticket: GenTicket) -> Option<GenOutput> {
+        self.done.remove(&ticket.0)
+    }
+
+    /// Remove and return every finished generation, in ticket order.
+    pub fn drain_finished(&mut self) -> Vec<(GenTicket, GenOutput)> {
+        std::mem::take(&mut self.done).into_iter().map(|(t, o)| (GenTicket(t), o)).collect()
+    }
+
+    /// Batched full-sequence prefill for the newly admitted sequences:
+    /// left-pad each prompt to the fixed `s_prompt` width (the geometry
+    /// that makes per-sequence results independent of the grouping), run
+    /// the shared layer stack once, prime the arena slots, and read each
+    /// sequence's first next-token logits.
+    fn prefill(&mut self, newly: &[usize]) {
+        let sp = self.scfg.s_prompt;
+        let d = self.mcfg.d_model;
+        let v = self.mcfg.vocab;
+        let b = newly.len();
+        let mut tokens = vec![tokenizer::PAD as i32; b * sp];
+        let mut pos_ids = vec![0i32; b * sp];
+        let mut mask = vec![0.0f32; b * sp];
+        for (i, &li) in newly.iter().enumerate() {
+            let lv = &self.live[li];
+            let pad = sp - lv.prompt.len();
+            for (j, &t) in lv.prompt.iter().enumerate() {
+                tokens[i * sp + pad + j] = t as i32;
+                pos_ids[i * sp + pad + j] = j as i32;
+                mask[i * sp + pad + j] = 1.0;
+            }
+        }
+        let fw = native::forward_full(
+            &self.mcfg,
+            self.scfg.threads,
+            self.kr,
+            &self.p,
+            &tokens,
+            &pos_ids,
+            &mask,
+            b,
+            sp,
+            true,
+            None,
+        );
+        for (i, &li) in newly.iter().enumerate() {
+            let slot = self.live[li].slot;
+            for (layer, (kf, vf)) in fw.kvs.iter().enumerate() {
+                for s0 in 0..sp {
+                    let src = (i * sp + s0) * d;
+                    self.arena.write_kv(layer, slot, s0, &kf[src..src + d], &vf[src..src + d]);
+                }
+            }
+            for s0 in 0..sp {
+                self.arena.set_mask(slot, s0, mask[i * sp + s0]);
+            }
+        }
+        let rows: Vec<usize> = (0..b).map(|i| i * sp + sp - 1).collect();
+        resize(&mut self.scratch.logits, b * v);
+        native::head_rows(
+            &self.mcfg,
+            self.scfg.threads,
+            self.kr,
+            &self.p,
+            &fw.h,
+            &rows,
+            &mut self.scratch.logits,
+        );
+        for (i, &li) in newly.iter().enumerate() {
+            self.live[li].logits.copy_from_slice(&self.scratch.logits[i * v..(i + 1) * v]);
+        }
+        self.stats.prefill_rows += (b * sp) as u64;
+    }
+
+    /// One decode forward over all live sequences: one batched GEMM per
+    /// linear layer with M = live slots (K-major for INT4), per-slot
+    /// attention against the arena, one batched head.
+    fn decode_step(&mut self) {
+        let Scheduler { mcfg, scfg, kr, p, arena, live, stats, scratch, .. } = self;
+        let kr = *kr;
+        let m = live.len();
+        let d = mcfg.d_model;
+        let v = mcfg.vocab;
+        let heads = mcfg.n_heads;
+        let dh = d / heads;
+        let sp = scfg.s_prompt;
+        let threads = scfg.threads;
+        resize(&mut scratch.h, m * d);
+        resize(&mut scratch.x, m * d);
+        resize(&mut scratch.qb, m * d);
+        resize(&mut scratch.kb, m * d);
+        resize(&mut scratch.vb, m * d);
+        resize(&mut scratch.ab, m * d);
+        resize(&mut scratch.pj, m * d);
+        resize(&mut scratch.ff, m * mcfg.d_ff);
+        resize(&mut scratch.ff2, m * d);
+        resize(&mut scratch.logits, m * v);
+        resize(&mut scratch.att, arena.s_max());
+        // embed the token each sequence just emitted, at its own position
+        for (i, lv) in live.iter().enumerate() {
+            let tok = *lv.tokens.last().expect("decode_step after sampling") as usize;
+            let pos = lv.prompt.len() + lv.tokens.len() - 1;
+            for j in 0..d {
+                scratch.h[i * d + j] = p.tok_emb[tok * d + j] + p.pos_emb[pos * d + j];
+            }
+        }
+        for (layer_i, layer) in p.layers.iter().enumerate() {
+            native::layernorm(&scratch.h, d, layer.ln1_g, layer.ln1_b, &mut scratch.x);
+            gemm::matmul_decode(&scratch.x, m, &layer.wq, &mut scratch.qb, threads, kr);
+            gemm::matmul_decode(&scratch.x, m, &layer.wk, &mut scratch.kb, threads, kr);
+            gemm::matmul_decode(&scratch.x, m, &layer.wv, &mut scratch.vb, threads, kr);
+            for (i, lv) in live.iter().enumerate() {
+                let pos = sp + lv.tokens.len() - 1;
+                arena.write_kv(
+                    layer_i,
+                    lv.slot,
+                    pos,
+                    &scratch.kb[i * d..(i + 1) * d],
+                    &scratch.vb[i * d..(i + 1) * d],
+                );
+                arena.set_mask(lv.slot, pos, 1.0);
+            }
+            attend_arena(
+                arena,
+                live,
+                sp,
+                heads,
+                dh,
+                layer_i,
+                &scratch.qb,
+                &mut scratch.att,
+                &mut scratch.ab,
+            );
+            gemm::matmul_decode(&scratch.ab, m, &layer.wo, &mut scratch.pj, threads, kr);
+            for i in 0..m * d {
+                scratch.h[i] += scratch.pj[i];
+            }
+            native::layernorm(&scratch.h, d, layer.ln2_g, layer.ln2_b, &mut scratch.x);
+            gemm::matmul_decode(&scratch.x, m, &layer.w1, &mut scratch.ff, threads, kr);
+            for fv in scratch.ff.iter_mut() {
+                *fv = native::gelu(*fv);
+            }
+            gemm::matmul_decode(&scratch.ff, m, &layer.w2, &mut scratch.ff2, threads, kr);
+            for i in 0..m * d {
+                scratch.h[i] += scratch.ff2[i];
+            }
+        }
+        let rows: Vec<usize> = (0..m).collect();
+        native::head_rows(mcfg, threads, kr, p, &scratch.h, &rows, &mut scratch.logits);
+        for (i, lv) in live.iter_mut().enumerate() {
+            lv.logits.copy_from_slice(&scratch.logits[i * v..(i + 1) * v]);
+        }
+        stats.decode_rows += m as u64;
+    }
+}
+
+/// Single-position attention for every live sequence against its own
+/// arena slot — the exact per-row op sequence of
+/// `native::attend_decode`, bounded to the positions the current
+/// occupant has written (so recycled slots can never leak a previous
+/// sequence's rows into a result).
+#[allow(clippy::too_many_arguments)]
+fn attend_arena(
+    arena: &KvArena,
+    live: &[Live],
+    sp: usize,
+    heads: usize,
+    dh: usize,
+    layer: usize,
+    q: &[f32],
+    logits: &mut [f32],
+    out: &mut [f32],
+) {
+    let d = heads * dh;
+    out.fill(0.0);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let kc = arena.k_slab(layer);
+    let vc = arena.v_slab(layer);
+    let keymask = arena.keymask();
+    let s_max = arena.s_max();
+    for (i, lv) in live.iter().enumerate() {
+        // positions 0..st belong to this occupant (last written at st-1)
+        let st = sp + lv.tokens.len();
+        let base = lv.slot * s_max;
+        for h in 0..heads {
+            let qo = i * d + h * dh;
+            for sk in 0..st {
+                let bias = if keymask[base + sk] > 0.0 { 0.0 } else { native::NEG_INF };
+                let ko = (base + sk) * d + h * dh;
+                let mut dot = 0.0f32;
+                for j in 0..dh {
+                    dot += q[qo + j] * kc[ko + j];
+                }
+                logits[sk] = dot * scale + bias;
+            }
+            native::softmax_inplace(&mut logits[..st]);
+            let oo = i * d + h * dh;
+            for sk in 0..st {
+                let w = logits[sk];
+                let vo = (base + sk) * d + h * dh;
+                for j in 0..dh {
+                    out[oo + j] += w * vc[vo + j];
+                }
+            }
+        }
+    }
+}
+
+/// Pick the next token from a sequence's logits: first-max argmax over
+/// `logit + tau * gumbel`, with the gumbel stream keyed by (request
+/// seed, step index) — never by slot or batch position, which is what
+/// makes sampled decode admission-order-invariant.
+fn next_token(lv: &Live) -> i32 {
+    let step = lv.tokens.len() as u64;
+    let mut grng = if lv.tau > 0.0 {
+        lv.seed.map(|s| {
+            SplitMix64::new(s ^ REQ_GUMBEL_SALT ^ step.wrapping_add(1).wrapping_mul(STEP_MIX))
+        })
+    } else {
+        None
+    };
+    let mut best = 0usize;
+    let mut bestv = f32::NEG_INFINITY;
+    for (c, &l) in lv.logits.iter().enumerate() {
+        let g = match &mut grng {
+            Some(r) => r.gumbel(),
+            None => 0.0,
+        };
+        let val = l + lv.tau * g;
+        if val > bestv {
+            bestv = val;
+            best = c;
+        }
+    }
+    best as i32
+}
+
+/// Submit a request list against one resolved model and run to
+/// completion, returning outputs in request order.
+pub fn run_requests<'v>(
+    backend: &NativeBackend,
+    view: &ParamsView<'v>,
+    overrides: Option<&'v [Vec<i8>]>,
+    emb_t: Option<&'v [f32]>,
+    scfg: SchedCfg,
+    reqs: Vec<GenRequest>,
+) -> Result<Vec<GenOutput>> {
+    let mut sched = Scheduler::new(backend, view, overrides, emb_t, scfg)?;
+    let tickets: Vec<GenTicket> =
+        reqs.into_iter().map(|r| sched.submit(r)).collect::<Result<_>>()?;
+    sched.run()?;
+    tickets.into_iter().map(|t| sched.take(t).context("scheduler lost a ticket")).collect()
+}
+
+/// One member's whole-round rollout through the scheduler: ONE
+/// resolve+pack serves every batch, only REAL rows are submitted (no
+/// padding-duplicate compute), and sequences retire at EOS instead of
+/// burning the full decode budget. Returns completion strings grouped
+/// per input batch.
+pub fn rollout_round<'v>(
+    backend: &NativeBackend,
+    view: &ParamsView<'v>,
+    overrides: Option<&'v [Vec<i8>]>,
+    emb_t: Option<&'v [f32]>,
+    batches: &[GenBatch],
+    tau: f32,
+    member_seed: Option<u64>,
+) -> Result<Vec<Vec<String>>> {
+    let mut scfg = SchedCfg::for_model(backend.cfg());
+    // match the per-call generate() path's GEMM fan-out: pool workers set
+    // 1 (they are the parallelism axis), the inline leader all cores
+    scfg.threads = backend.gemm_threads();
+    // TRAINING stays on the axpy decode form: fine-tuning results must be
+    // bit-identical for any QES_KERNEL (the repo-wide contract — a
+    // lattice evolved under AVX2 must re-materialize under scalar), and
+    // only the axpy path is bit-exact across kernels. K-major decode
+    // serves the serving path (`qes serve`), where the tolerance contract
+    // is acceptable and wall-clock is king.
+    scfg.kmajor = false;
+    let t_max = scfg.t_max;
+    let mut reqs = Vec::new();
+    let mut spans = Vec::with_capacity(batches.len());
+    for (bi, batch) in batches.iter().enumerate() {
+        spans.push(batch.n_real);
+        for ri in 0..batch.n_real {
+            reqs.push(GenRequest {
+                prompt: tokenizer::encode(&batch.problems[ri].prompt),
+                max_new: t_max,
+                tau,
+                seed: member_seed.map(|s| {
+                    s ^ (((bi as u64) << 20) | ri as u64).wrapping_add(1).wrapping_mul(STEP_MIX)
+                }),
+            });
+        }
+    }
+    let outs = run_requests(backend, view, overrides, emb_t, scfg, reqs)?;
+    let mut it = outs.into_iter();
+    Ok(spans.iter().map(|&n| it.by_ref().take(n).map(|o| o.text).collect()).collect())
+}
+
+/// Greedy completions for a prompt list (accuracy eval): the whole set
+/// flows through one scheduler — one resolve+pack total, sequences
+/// admitted as slots free up.
+pub fn greedy_texts(
+    backend: &NativeBackend,
+    view: &ParamsView<'_>,
+    prompts: &[&str],
+) -> Result<Vec<String>> {
+    let mut scfg = SchedCfg::for_model(backend.cfg());
+    scfg.threads = backend.gemm_threads();
+    // same rationale as rollout_round: eval accuracies must not move
+    // with the dispatched kernel
+    scfg.kmajor = false;
+    let t_max = scfg.t_max;
+    let reqs: Vec<GenRequest> =
+        prompts.iter().map(|p| GenRequest::greedy(p, t_max)).collect();
+    Ok(run_requests(backend, view, None, None, scfg, reqs)?
+        .into_iter()
+        .map(|o| o.text)
+        .collect())
+}

@@ -1,0 +1,232 @@
+//! `qes serve` — a line-delimited JSON front end over the
+//! continuous-batching scheduler: one request object per input line, one
+//! response object per completed generation, emitted the moment the
+//! sequence retires (admission order never gates emission).
+//!
+//! ```text
+//! request:  {"prompt": "3,4,5=17:", "max_new": 12, "tau": 0.7, "seed": 9, "id": "r1"}
+//! response: {"id": "r1", "text": "3*4+5", "tokens": 6}
+//! error:    {"id": "r1", "error": "..."}
+//! ```
+//!
+//! `prompt` is required; `max_new` defaults to the scheduler's decode
+//! budget, `tau`/`seed` default to greedy, `id` (string or number)
+//! defaults to the submission index. Malformed lines and oversized
+//! prompts produce an error RESPONSE, never a dead server.
+//!
+//! The pump ([`serve_loop`]) interleaves intake with decoding: it drains
+//! whatever lines are already queued, steps the scheduler once, writes
+//! finished responses, and only blocks on input when nothing is in
+//! flight — so a request arriving mid-batch joins the next admission
+//! wave instead of waiting for a drain. The CLI (`qes serve`) feeds it
+//! from stdin or a TCP connection through an mpsc channel.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::Write;
+use std::sync::mpsc::{Receiver, TryRecvError};
+
+use anyhow::{Context, Result};
+
+use crate::sched::{GenOutput, GenRequest, Scheduler};
+use crate::tasks::tokenizer;
+use crate::util::json::Json;
+
+/// A decoded request line: the request plus its response id.
+pub struct ParsedRequest {
+    pub id: String,
+    pub req: GenRequest,
+}
+
+/// Parse one request line. `default_max_new` fills an absent `max_new`;
+/// `default_id` names the response when the line carries no `id`.
+pub fn parse_request(
+    line: &str,
+    default_id: usize,
+    default_max_new: usize,
+) -> Result<ParsedRequest> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {}", e))?;
+    let id = match j.get("id") {
+        Some(Json::Str(s)) => s.clone(),
+        Some(Json::Num(n)) => Json::Num(*n).to_string_compact(),
+        _ => default_id.to_string(),
+    };
+    let prompt_text = j
+        .get("prompt")
+        .and_then(Json::as_str)
+        .context("request needs a string \"prompt\"")?;
+    let prompt = tokenizer::try_encode(prompt_text)
+        .map_err(|c| anyhow::anyhow!("prompt char {:?} not in the vocabulary", c))?;
+    let max_new = j.get("max_new").and_then(Json::as_usize).unwrap_or(default_max_new);
+    let tau = j.get("tau").and_then(Json::as_f64).unwrap_or(0.0) as f32;
+    let seed = j.get("seed").and_then(Json::as_f64).map(|s| s as u64);
+    Ok(ParsedRequest { id, req: GenRequest { prompt, max_new, tau, seed } })
+}
+
+/// Serialize a completed generation.
+pub fn response_line(id: &str, out: &GenOutput) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Str(id.to_string()));
+    m.insert("text".to_string(), Json::Str(out.text.clone()));
+    m.insert("tokens".to_string(), Json::Num(out.tokens.len() as f64));
+    Json::Obj(m).to_string_compact()
+}
+
+/// Serialize a request failure.
+pub fn error_line(id: &str, err: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Str(id.to_string()));
+    m.insert("error".to_string(), Json::Str(err.to_string()));
+    Json::Obj(m).to_string_compact()
+}
+
+/// Pump outcome counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    pub served: u64,
+    pub errors: u64,
+}
+
+/// Drive the scheduler against a line channel until the channel closes
+/// AND every accepted request has completed, writing one response line
+/// per finished generation (and one error line per rejected request).
+pub fn serve_loop<W: Write>(
+    sched: &mut Scheduler<'_>,
+    lines: &Receiver<String>,
+    out: &mut W,
+) -> Result<ServeStats> {
+    let default_max_new = sched.cfg().t_max;
+    let mut ids: HashMap<usize, String> = HashMap::new();
+    let mut next_id = 0usize;
+    let mut stats = ServeStats::default();
+    let mut open = true;
+    loop {
+        // intake: everything already queued, without blocking the batch
+        while open {
+            match lines.try_recv() {
+                Ok(line) => submit_line(
+                    sched,
+                    &line,
+                    default_max_new,
+                    &mut ids,
+                    &mut next_id,
+                    out,
+                    &mut stats,
+                )?,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => open = false,
+            }
+        }
+        // emit everything finished so far (zero-budget requests complete
+        // at submit time, before any step runs)
+        for (ticket, o) in sched.drain_finished() {
+            let id = ids
+                .remove(&ticket.index())
+                .unwrap_or_else(|| ticket.index().to_string());
+            writeln!(out, "{}", response_line(&id, &o))?;
+            stats.served += 1;
+        }
+        out.flush().ok();
+        if sched.idle() {
+            if !open {
+                break;
+            }
+            // nothing in flight: block for the next request
+            match lines.recv() {
+                Ok(line) => submit_line(
+                    sched,
+                    &line,
+                    default_max_new,
+                    &mut ids,
+                    &mut next_id,
+                    out,
+                    &mut stats,
+                )?,
+                Err(_) => open = false,
+            }
+            continue;
+        }
+        sched.step()?;
+    }
+    Ok(stats)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn submit_line<W: Write>(
+    sched: &mut Scheduler<'_>,
+    line: &str,
+    default_max_new: usize,
+    ids: &mut HashMap<usize, String>,
+    next_id: &mut usize,
+    out: &mut W,
+    stats: &mut ServeStats,
+) -> Result<()> {
+    let line = line.trim();
+    if line.is_empty() {
+        return Ok(());
+    }
+    let default_id = *next_id;
+    *next_id += 1;
+    match parse_request(line, default_id, default_max_new) {
+        Ok(pr) => match sched.submit(pr.req) {
+            Ok(ticket) => {
+                ids.insert(ticket.index(), pr.id);
+            }
+            Err(e) => {
+                writeln!(out, "{}", error_line(&pr.id, &format!("{:#}", e)))?;
+                stats.errors += 1;
+            }
+        },
+        Err(e) => {
+            writeln!(out, "{}", error_line(&default_id.to_string(), &format!("{:#}", e)))?;
+            stats.errors += 1;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_defaults_and_errors() {
+        let pr = parse_request(r#"{"prompt": "3,4,5=17:"}"#, 7, 12).unwrap();
+        assert_eq!(pr.id, "7");
+        assert_eq!(pr.req.max_new, 12);
+        assert_eq!(pr.req.tau, 0.0);
+        assert_eq!(pr.req.seed, None);
+        assert_eq!(pr.req.prompt, tokenizer::encode("3,4,5=17:"));
+
+        let pr = parse_request(
+            r#"{"prompt": "1+2=", "max_new": 4, "tau": 0.5, "seed": 9, "id": "abc"}"#,
+            0,
+            12,
+        )
+        .unwrap();
+        assert_eq!(pr.id, "abc");
+        assert_eq!(pr.req.max_new, 4);
+        assert!((pr.req.tau - 0.5).abs() < 1e-6);
+        assert_eq!(pr.req.seed, Some(9));
+
+        // numeric ids stringify
+        assert_eq!(parse_request(r#"{"prompt": "1", "id": 3}"#, 0, 8).unwrap().id, "3");
+        // malformed json / missing prompt / OOV chars are Err, not panics
+        assert!(parse_request("not json", 0, 8).is_err());
+        assert!(parse_request(r#"{"max_new": 4}"#, 0, 8).is_err());
+        let e = parse_request(r#"{"prompt": "héllo"}"#, 0, 8).unwrap_err();
+        assert!(format!("{}", e).contains("vocabulary"), "{}", e);
+    }
+
+    #[test]
+    fn response_and_error_lines_roundtrip() {
+        let out = GenOutput { tokens: vec![3, 4, 20], text: "12".to_string() };
+        let r = response_line("r1", &out);
+        let j = Json::parse(&r).unwrap();
+        assert_eq!(j.get("id").unwrap().as_str(), Some("r1"));
+        assert_eq!(j.get("text").unwrap().as_str(), Some("12"));
+        assert_eq!(j.get("tokens").unwrap().as_usize(), Some(3));
+        let e = error_line("r2", "boom");
+        let j = Json::parse(&e).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("boom"));
+    }
+}

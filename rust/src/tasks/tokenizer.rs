@@ -32,6 +32,15 @@ pub fn encode(s: &str) -> Vec<u8> {
     s.chars().map(tok).collect()
 }
 
+/// Encode, rejecting the first out-of-vocabulary char instead of
+/// panicking — the right failure mode for serving front ends fed
+/// untrusted input.
+pub fn try_encode(s: &str) -> Result<Vec<u8>, char> {
+    s.chars()
+        .map(|c| CHARS.iter().position(|&x| x == c).map(|i| i as u8).ok_or(c))
+        .collect()
+}
+
 /// Decode ids to a string; PAD renders as nothing, unknown ids as '#'.
 pub fn decode(ids: &[i32]) -> String {
     ids.iter()
