@@ -15,8 +15,12 @@
 //! variant — the perf trajectory tracked in PERF.md.
 
 use std::borrow::Cow;
+use std::sync::Arc;
 
-use qes::coordinator::{eval_problems, ClsBatch, EngineSet, GenBatch, Session};
+use qes::coordinator::{
+    eval_problems, ClsBatch, EngineSet, FinetuneCfg, GenBatch, GenWorkload, Job, Session,
+    SupervisorCfg, WorkerPool, Workload,
+};
 use qes::kernel::{self, KernelKind};
 use qes::model::{init::init_fp, AsParams, ParamStore, ShardedParamStore};
 use qes::opt::{
@@ -27,11 +31,12 @@ use qes::opt::{
 use qes::quant::Format;
 use qes::rng::{NoiseStream, SplitMix64};
 use qes::runtime::native::{build_emb_t, gemm::{self, Lin}};
-use qes::runtime::Manifest;
+use qes::runtime::{BackendPolicy, Manifest};
 use qes::sched;
 use qes::tasks::{cls_task, gen_task};
 use qes::util::bench::{black_box, report_speedup, Bench};
 use qes::util::f16::{f16_decode_slice, f16_encode_slice};
+use qes::util::fault::FaultPlan;
 use qes::util::parallel;
 
 fn quant_store(size: &str) -> ParamStore {
@@ -391,6 +396,72 @@ fn main() {
         });
     }
 
+    // round dispatch: the supervised leader loop (deadlines, retry
+    // bookkeeping, reap polling) vs the bare dispatch/collect it
+    // replaced, pushing the SAME real rollout work through the SAME
+    // 2-worker pool — the fault-tolerance tax on the fault-free path,
+    // which the acceptance criterion pins at ~zero
+    {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        let store4 = quant_store("nano");
+        let mcfg = man.config("nano").unwrap().clone();
+        let ft_cfg = FinetuneCfg {
+            train_pool: 16,
+            eval_n: 4,
+            tau: 0.0,
+            batches_per_gen: 1,
+            ..Default::default()
+        };
+        let workload: Arc<dyn Workload> = Arc::new(GenWorkload::new(
+            gen_task("countdown", mcfg.s_prompt, mcfg.t_dec).unwrap(),
+            &mcfg,
+            &ft_cfg,
+        ));
+        let pool = WorkerPool::spawn_with(
+            2,
+            "artifacts/manifest.json",
+            "nano",
+            Format::Int4,
+            BackendPolicy::Auto,
+            workload.clone(),
+            SupervisorCfg::default(),
+            FaultPlan::default(),
+        )
+        .unwrap();
+        let mut plane = ShardedParamStore::with_default_shards(store4.clone()).unwrap();
+        let spec4 = PopulationSpec { gen_seed: 21, pairs: 2, sigma: 0.02 };
+        let n = spec4.n_members();
+        let round = workload.build_round(21).unwrap();
+        let mut round_id = 0u64;
+        let mut make_jobs = |plane: &mut ShardedParamStore, round_id: u64| {
+            let snapshot = plane.snapshot();
+            (0..2usize)
+                .map(|i| Job::Eval {
+                    snapshot: snapshot.clone(),
+                    gen_seed: 21,
+                    pairs: 2,
+                    sigma: 0.02,
+                    members: (0..n).filter(|m| m % 2 == i).map(|m| (m, 0)).collect(),
+                    round: round.clone(),
+                    round_id,
+                })
+                .collect::<Vec<Job>>()
+        };
+        b.run("round_dispatch/bare/nano pop4", || {
+            let jobs = make_jobs(&mut plane, round_id);
+            round_id += 1;
+            black_box(pool.run_round_bare(jobs, n).unwrap());
+        });
+        b.run("round_dispatch/supervised/nano pop4", || {
+            let jobs = make_jobs(&mut plane, round_id);
+            round_id += 1;
+            let outcome = pool.run_round(jobs, n).unwrap();
+            assert!(outcome.failed.is_empty());
+            black_box(outcome);
+        });
+        pool.shutdown().unwrap();
+    }
+
     b.report();
     b.report_json();
 
@@ -445,6 +516,12 @@ fn main() {
             "rollout_batched/pop8",
             "rollout_eval/seq_pop8/nano/int4".to_string(),
             "rollout_batched/pop8/nano/int4".to_string(),
+        ),
+        // supervision tax on the fault-free path — expected ~1.00x
+        (
+            "round_dispatch/pop4",
+            "round_dispatch/bare/nano pop4".to_string(),
+            "round_dispatch/supervised/nano pop4".to_string(),
         ),
     ] {
         // both legs of these records ran under the ambient dispatch

@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         eval_n: 8,
         seed: 42,
         verbose: false,
+        ..Default::default()
     };
 
     let workload = GenWorkload::new(

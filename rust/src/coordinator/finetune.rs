@@ -8,6 +8,7 @@
 //! (gen_seed, fitness) to the optimizer. Rollout and update wall-clock
 //! are measured separately — they are Table 9's two columns.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -15,12 +16,14 @@ use anyhow::Result;
 use crate::coordinator::pool::{Job, WorkerPool};
 use crate::coordinator::session::Session;
 use crate::coordinator::workload::{ClsWorkload, MemberScratch, Workload};
+use crate::model::checkpoint::{self, TrainState};
 use crate::model::{AsParams, ParamStore, ShardedParamStore};
 use crate::opt::{
-    normalize_fitness, EsHyper, LatticeOptimizer, MezoOptimizer, PopulationSpec,
+    quorum_fitness, EsHyper, LatticeOptimizer, MezoOptimizer, PopulationSpec,
     QesFullResidual, QuzoOptimizer, SeedReplayQes,
 };
 use crate::rng::SplitMix64;
+use crate::util::fault::{FaultPlan, DEFAULT_MAX_RETRIES};
 
 /// Which optimizer drives the run (paper method names).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -46,6 +49,16 @@ impl Variant {
                 anyhow::bail!("unknown variant {:?} (qes|qes-full|quzo|qes-adaptive)", other)
             }
         })
+    }
+
+    /// Canonical CLI/checkpoint name (inverse of [`Variant::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Qes => "qes",
+            Variant::QesFullResidual => "qes-full",
+            Variant::Quzo => "quzo",
+            Variant::QesAdaptive => "qes-adaptive",
+        }
     }
 
     pub fn build(self, d: usize, qmax: i8, hyper: EsHyper) -> Box<dyn LatticeOptimizer> {
@@ -78,6 +91,9 @@ pub struct GenLog {
     pub boundary_ratio: f64,
     pub rollout_ms: f64,
     pub update_ms: f64,
+    /// Members that exhausted their retry budget this generation (the
+    /// round committed degraded when > 0).
+    pub failed_members: usize,
 }
 
 #[derive(Debug, Default)]
@@ -99,10 +115,10 @@ impl RunLog {
 
     /// Dump the reward/eval curves as CSV (Fig. 2 series).
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("gen,mean_reward,best_reward,eval_acc,update_ratio,boundary_ratio,rollout_ms,update_ms\n");
+        let mut s = String::from("gen,mean_reward,best_reward,eval_acc,update_ratio,boundary_ratio,rollout_ms,update_ms,failed_members\n");
         for e in &self.entries {
             s.push_str(&format!(
-                "{},{:.4},{:.4},{},{:.6},{:.6},{:.2},{:.2}\n",
+                "{},{:.4},{:.4},{},{:.6},{:.6},{:.2},{:.2},{}\n",
                 e.gen,
                 e.mean_reward,
                 e.best_reward,
@@ -110,7 +126,8 @@ impl RunLog {
                 e.update_ratio,
                 e.boundary_ratio,
                 e.rollout_ms,
-                e.update_ms
+                e.update_ms,
+                e.failed_members
             ));
         }
         s
@@ -136,6 +153,14 @@ pub struct FinetuneCfg {
     pub eval_n: usize,
     pub seed: u64,
     pub verbose: bool,
+    /// Minimum fraction of antithetic pairs that must score for a round
+    /// to commit (degraded); below this the run errors (`opt::quorum_fitness`).
+    pub min_quorum: f32,
+    /// Deterministic fault-injection plan (inert by default). On the
+    /// inline path this simulates exactly the permanently-failed member
+    /// set a pool run would commit — `FaultPlan::member_fails` with the
+    /// shared `DEFAULT_MAX_RETRIES` budget.
+    pub faults: FaultPlan,
 }
 
 impl Default for FinetuneCfg {
@@ -150,8 +175,20 @@ impl Default for FinetuneCfg {
             eval_n: 64,
             seed: 42,
             verbose: false,
+            min_quorum: 0.5,
+            faults: FaultPlan::default(),
         }
     }
+}
+
+/// Periodic crash-consistent training checkpoints for
+/// [`finetune_resumable`].
+#[derive(Debug, Clone)]
+pub struct TrainCkptCfg {
+    pub path: PathBuf,
+    /// Checkpoint every N generations (and always after the last one).
+    /// 0 disables periodic saves entirely.
+    pub every: usize,
 }
 
 /// Fine-tune the sharded parameter plane with an ES-family optimizer on
@@ -173,25 +210,83 @@ pub fn finetune(
     cfg: &FinetuneCfg,
     pool: Option<&WorkerPool>,
 ) -> Result<RunLog> {
+    finetune_resumable(session, workload, store, variant, cfg, pool, None, None)
+}
+
+/// [`finetune`] with crash-consistent checkpointing and resume.
+///
+/// * `ckpt` — write an atomic training checkpoint (lattice + optimizer
+///   state blob + round/RNG counters) every `ckpt.every` generations and
+///   after the final one.
+/// * `resume` — continue a run from a [`TrainState`]: the caller must
+///   have built `store` from `resume.store`; this function validates
+///   seed/variant, restores the optimizer state, fast-forwards the
+///   master RNG by `rounds_done` draws (one per generation — the
+///   SplitMix64 Weyl sequence makes that O(1)), and runs the remaining
+///   generations. The continued run is bit-identical to an
+///   uninterrupted one.
+///
+/// Degraded rounds: when a pool reports permanently-failed members (or
+/// the inline path simulates them from `cfg.faults`), fitness is
+/// renormalized over the pairs actually scored (`opt::quorum_fitness`)
+/// subject to `cfg.min_quorum`. Given the same failed-member set the
+/// committed lattice is bit-identical regardless of topology, retries
+/// or arrival order.
+#[allow(clippy::too_many_arguments)]
+pub fn finetune_resumable(
+    session: &Session,
+    workload: &dyn Workload,
+    store: &mut ShardedParamStore,
+    variant: Variant,
+    cfg: &FinetuneCfg,
+    pool: Option<&WorkerPool>,
+    ckpt: Option<&TrainCkptCfg>,
+    resume: Option<&TrainState>,
+) -> Result<RunLog> {
     let qmax = store.format().qmax();
     let d = store.lattice_dim();
     let mut opt = variant.build(d, qmax, cfg.hyper.clone());
     let mut master = SplitMix64::new(cfg.seed);
+    let mut start_gen = 0usize;
+    if let Some(ts) = resume {
+        anyhow::ensure!(
+            ts.seed == cfg.seed,
+            "cannot resume: checkpoint seed {} != configured seed {}",
+            ts.seed,
+            cfg.seed
+        );
+        anyhow::ensure!(
+            ts.variant == variant.name(),
+            "cannot resume: checkpoint variant {:?} != configured {:?}",
+            ts.variant,
+            variant.name()
+        );
+        anyhow::ensure!(
+            ts.rounds_done as usize <= cfg.gens,
+            "cannot resume: checkpoint has {} rounds, run wants {}",
+            ts.rounds_done,
+            cfg.gens
+        );
+        opt.load_state(&mut ts.opt_state.as_slice())?;
+        // The master RNG draws exactly one u64 per generation.
+        master.jump(ts.rounds_done);
+        start_gen = ts.rounds_done as usize;
+    }
     let mut log = RunLog::default();
     // perturbation buffers reused across every inline member evaluation
     let mut scratch = MemberScratch::default();
 
-    for gen in 0..cfg.gens {
+    for gen in start_gen..cfg.gens {
         let gen_seed = master.next_u64();
         let spec = PopulationSpec { gen_seed, pairs: cfg.hyper.pairs, sigma: cfg.hyper.sigma };
         let n_members = spec.n_members();
         let round = workload.build_round(gen_seed)?;
+        let round_id = gen as u64;
 
         // --- rollout phase ---
         let t0 = Instant::now();
-        let mut raw = vec![0.0f32; n_members];
-        match pool {
-            Some(p) if p.n_workers() > 1 => {
+        let rewards: Vec<Option<f32>> = match pool {
+            Some(p) => {
                 let snapshot = store.snapshot();
                 let w = p.n_workers();
                 // jobs stream straight into the worker channels — no
@@ -202,25 +297,47 @@ pub fn finetune(
                     gen_seed,
                     pairs: spec.pairs,
                     sigma: spec.sigma,
-                    members: (0..n_members).filter(|m| m % w == i).collect(),
+                    members: (0..n_members)
+                        .filter(|m| m % w == i)
+                        .map(|m| (m, 0))
+                        .collect(),
                     round: round.clone(),
+                    round_id,
                 });
-                for r in p.run_round(jobs, n_members)? {
-                    raw[r.member] = r.reward?;
-                }
+                p.run_round(jobs, n_members)?.rewards
             }
-            _ => {
+            None => {
                 let view = store.params_view();
-                for (m, slot) in raw.iter_mut().enumerate() {
-                    *slot = workload
-                        .eval_member(session, &view, &spec, m, round.as_ref(), &mut scratch)?;
+                let mut rewards = Vec::with_capacity(n_members);
+                for m in 0..n_members {
+                    // Inline replica of the pool's failure semantics:
+                    // a member whose every scoring attempt faults under
+                    // the plan is permanently failed — the same pure
+                    // function of (plan, round, member) the supervised
+                    // pool converges to.
+                    if cfg.faults.is_active()
+                        && cfg.faults.member_fails(round_id, m, DEFAULT_MAX_RETRIES)
+                    {
+                        rewards.push(None);
+                    } else {
+                        rewards.push(Some(workload.eval_member(
+                            session,
+                            &view,
+                            &spec,
+                            m,
+                            round.as_ref(),
+                            &mut scratch,
+                        )?));
+                    }
                 }
+                rewards
             }
-        }
+        };
         let rollout_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let failed_members = rewards.iter().filter(|r| r.is_none()).count();
 
         // --- update phase ---
-        let fitness = normalize_fitness(&raw);
+        let fitness = quorum_fitness(&rewards, cfg.min_quorum)?;
         let t1 = Instant::now();
         let stats = opt.update(store, &spec, &fitness)?;
         let update_ms = t1.elapsed().as_secs_f64() * 1e3;
@@ -230,19 +347,21 @@ pub fn finetune(
         } else {
             None
         };
+        let scored: Vec<f32> = rewards.iter().filter_map(|r| *r).collect();
         let entry = GenLog {
             gen,
-            mean_reward: crate::util::mean(&raw),
-            best_reward: raw.iter().cloned().fold(f32::MIN, f32::max),
+            mean_reward: crate::util::mean(&scored),
+            best_reward: scored.iter().cloned().fold(f32::MIN, f32::max),
             eval_acc,
             update_ratio: stats.update_ratio(),
             boundary_ratio: stats.boundary_hit_ratio(),
             rollout_ms,
             update_ms,
+            failed_members,
         };
         if cfg.verbose {
             println!(
-                "[{} gen {:>4}] reward {:.3} (best {:.3}) upd {:.4}% roll {:.0}ms upd {:.0}ms{}",
+                "[{} gen {:>4}] reward {:.3} (best {:.3}) upd {:.4}% roll {:.0}ms upd {:.0}ms{}{}",
                 opt.name(),
                 gen,
                 entry.mean_reward,
@@ -250,10 +369,32 @@ pub fn finetune(
                 100.0 * entry.update_ratio,
                 rollout_ms,
                 update_ms,
-                entry.eval_acc.map(|a| format!(" eval {:.1}%", a)).unwrap_or_default()
+                entry.eval_acc.map(|a| format!(" eval {:.1}%", a)).unwrap_or_default(),
+                if failed_members > 0 {
+                    format!(" DEGRADED ({} members failed)", failed_members)
+                } else {
+                    String::new()
+                }
             );
         }
         log.entries.push(entry);
+
+        // --- crash-consistent checkpoint ---
+        if let Some(c) = ckpt {
+            if c.every > 0 && ((gen + 1) % c.every == 0 || gen + 1 == cfg.gens) {
+                let mut blob = Vec::new();
+                opt.save_state(&mut blob)?;
+                let plain = store.materialize();
+                checkpoint::save_train(
+                    &c.path,
+                    &plain,
+                    (gen + 1) as u64,
+                    cfg.seed,
+                    variant.name(),
+                    &blob,
+                )?;
+            }
+        }
     }
     log.final_acc = workload.eval_accuracy(session, &store.params_view())?;
     log.optimizer_state_bytes = opt.state_bytes();
@@ -326,6 +467,7 @@ pub fn finetune_mezo(
             boundary_ratio: 0.0,
             rollout_ms,
             update_ms,
+            failed_members: 0,
         });
     }
     log.final_acc = workload.eval_accuracy(session, &store.params_view())?;

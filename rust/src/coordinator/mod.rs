@@ -24,9 +24,10 @@ pub mod workload;
 // historical import paths.
 pub use crate::runtime::encode::{ClsBatch, GenBatch, LmBatch};
 pub use finetune::{
-    finetune, finetune_mezo, finetune_store, FinetuneCfg, GenLog, RunLog, Variant,
+    finetune, finetune_mezo, finetune_resumable, finetune_store, FinetuneCfg, GenLog, RunLog,
+    TrainCkptCfg, Variant,
 };
-pub use pool::{Job, MemberResult, WorkerPool};
+pub use pool::{Job, MemberResult, RoundOutcome, SupervisorCfg, WorkerPool};
 pub use pretrain::{pretrain_cls, pretrain_gen, PretrainCfg};
 pub use session::{EngineSet, Session};
 pub use workload::{

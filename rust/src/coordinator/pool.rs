@@ -1,24 +1,38 @@
-//! Worker pool: the leader/worker topology of the paper's rollout phase.
+//! Supervised worker pool: the fault-tolerant leader/worker topology of
+//! the paper's rollout phase.
 //!
 //! Each worker thread owns its own PJRT client + compiled engines (the
 //! `xla` client is `Rc`-based and cannot cross threads) and evaluates the
 //! population members assigned to it against a broadcast `Snapshot` of
 //! the leader's sharded parameter plane (O(shards) to publish, immune to
 //! subsequent leader updates). The scenario is a shared `Arc<dyn
-//! Workload>` — the pool never branches on Gen vs Cls. On the single-core
-//! CI testbed the default is one worker; the topology is exercised by
-//! tests with `workers = 2`.
+//! Workload>` — the pool never branches on Gen vs Cls.
 //!
-//! Worker failures are surfaced, not swallowed: each thread's
-//! `JoinHandle<Result<()>>` is reaped when the result stream stalls or
-//! closes, so a worker that errored or panicked turns into an `Err` on
-//! the leader instead of a hung `run_round`.
+//! Supervision exploits the paper's central property: a rollout job is a
+//! pure, idempotent function of `(snapshot, gen_seed, member)`, so a
+//! lost worker costs nothing but a re-dispatch and duplicate results are
+//! harmless (first result per member wins). The leader tracks
+//! outstanding `(round_id, member)` pairs under a per-round deadline
+//! with exponential backoff, re-dispatches unscored members to surviving
+//! workers, retries members whose scoring errored up to
+//! `SupervisorCfg::max_retries`, and respawns workers that panic or
+//! error (bounded by `max_respawns`). When retries are exhausted the
+//! member is reported in `RoundOutcome::failed` and the round completes
+//! degraded — the quorum decision belongs to the optimizer layer
+//! (`opt::quorum_fitness`), not the pool.
+//!
+//! Determinism: eval retries carry an explicit attempt counter and the
+//! injected-fault plan keys eval faults on `(round_id, member, attempt)`
+//! only, so the set of permanently failed members is a pure function of
+//! the `FaultPlan` — independent of worker count, respawns, drops,
+//! delays or arrival order.
 
 use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -28,31 +42,124 @@ use crate::model::{AsParams, Snapshot};
 use crate::opt::PopulationSpec;
 use crate::quant::Format;
 use crate::runtime::{BackendPolicy, Manifest};
+use crate::util::fault::FaultPlan;
 
 /// Work order broadcast to a worker for one generation. One variant for
-/// every scenario — the payload is the workload's own `Round`.
+/// every scenario — the payload is the workload's own `Round`. Members
+/// carry their retry attempt so re-dispatched work is distinguishable
+/// from first-try work (the fault plan and the leader's bookkeeping both
+/// key on it).
 pub enum Job {
     Eval {
         snapshot: Snapshot,
         gen_seed: u64,
         pairs: usize,
         sigma: f32,
-        members: Vec<usize>,
+        /// `(member, attempt)` — attempt is 0 on first dispatch.
+        members: Vec<(usize, u32)>,
         round: Arc<dyn Round>,
+        round_id: u64,
     },
     Shutdown,
 }
 
 pub struct MemberResult {
+    pub round_id: u64,
     pub member: usize,
+    pub attempt: u32,
     pub reward: Result<f32>,
 }
 
+/// Supervision policy for `run_round`. Defaults are tuned for local
+/// thread workers (milliseconds of latency); a future TCP transport
+/// would raise the deadlines.
+#[derive(Debug, Clone, Copy)]
+pub struct SupervisorCfg {
+    /// Retry budget per member: a member whose scoring errors more than
+    /// this many times is reported failed. Must match the inline
+    /// simulation path (`fault::DEFAULT_MAX_RETRIES`) for the two
+    /// topologies to commit identical degraded rounds.
+    pub max_retries: u32,
+    /// Initial per-round progress deadline: if no result arrives for
+    /// this long, all outstanding members are re-dispatched.
+    pub deadline_ms: u64,
+    /// Deadline cap for the exponential backoff between waves.
+    pub max_deadline_ms: u64,
+    /// Result-channel poll granularity (also the reap cadence).
+    pub poll_ms: u64,
+    /// Respawn workers that die (panic, error, or premature exit).
+    pub respawn: bool,
+    /// Total respawn budget over the pool's lifetime.
+    pub max_respawns: u32,
+    /// Bail out ("round stalled") after this many deadline waves in a
+    /// single round.
+    pub max_waves: u32,
+}
+
+impl Default for SupervisorCfg {
+    fn default() -> Self {
+        SupervisorCfg {
+            max_retries: crate::util::fault::DEFAULT_MAX_RETRIES,
+            deadline_ms: 1000,
+            max_deadline_ms: 8000,
+            poll_ms: 50,
+            respawn: true,
+            max_respawns: 8,
+            max_waves: 32,
+        }
+    }
+}
+
+/// What a supervised round committed: per-member rewards (`None` =
+/// permanently failed after retries), the failed set, and recovery
+/// counters for logging/inspection.
+#[derive(Debug)]
+pub struct RoundOutcome {
+    pub rewards: Vec<Option<f32>>,
+    pub failed: Vec<usize>,
+    /// Eval errors observed (each consumes one retry of some member).
+    pub retries: u32,
+    /// Jobs re-sent: single-member retry dispatches + wave re-dispatches.
+    pub redispatches: u32,
+    /// Workers respawned while this round was in flight.
+    pub respawns: u32,
+}
+
+struct SpawnCfg {
+    manifest_path: String,
+    size: String,
+    format: Format,
+    policy: BackendPolicy,
+    workload: Arc<dyn Workload>,
+    faults: FaultPlan,
+}
+
+struct WorkerSlot {
+    /// `None` once the worker is known dead and was not respawned.
+    tx: Option<Sender<Job>>,
+    handle: Option<JoinHandle<Result<()>>>,
+    incarnation: u32,
+}
+
+struct PoolState {
+    slots: Vec<WorkerSlot>,
+    respawns_used: u32,
+    /// Round-robin dispatch cursor.
+    rr: usize,
+    /// Most recent worker failure, kept for the all-dead error message.
+    last_failure: Option<String>,
+}
+
 pub struct WorkerPool {
-    senders: Vec<Sender<Job>>,
+    spawn_cfg: SpawnCfg,
+    sup: SupervisorCfg,
+    state: Mutex<PoolState>,
     results: Receiver<MemberResult>,
-    /// Slots are taken as handles are reaped (on failure or shutdown).
-    handles: Mutex<Vec<Option<JoinHandle<Result<()>>>>>,
+    /// Kept so respawned workers can be handed a live result sender.
+    /// Consequence: the results channel never disconnects while the
+    /// pool is alive — stalls are caught by deadlines, not by
+    /// `Disconnected`.
+    res_tx: Sender<MemberResult>,
 }
 
 fn panic_message(p: &(dyn Any + Send)) -> String {
@@ -65,11 +172,44 @@ fn panic_message(p: &(dyn Any + Send)) -> String {
     }
 }
 
+fn spawn_worker(
+    cfg: &SpawnCfg,
+    res_tx: Sender<MemberResult>,
+    w: usize,
+    incarnation: u32,
+) -> Result<(Sender<Job>, JoinHandle<Result<()>>)> {
+    let (tx, rx) = channel::<Job>();
+    let mpath = cfg.manifest_path.clone();
+    let size = cfg.size.clone();
+    let format = cfg.format;
+    let policy = cfg.policy;
+    let workload = cfg.workload.clone();
+    let faults = cfg.faults;
+    let handle = std::thread::Builder::new()
+        .name(format!("qes-worker-{}.{}", w, incarnation))
+        .spawn(move || {
+            worker_main(
+                &mpath,
+                &size,
+                format,
+                policy,
+                workload.as_ref(),
+                rx,
+                res_tx,
+                faults,
+                w,
+                incarnation,
+            )
+        })?;
+    Ok((tx, handle))
+}
+
 impl WorkerPool {
-    /// Spawn `n` workers, each building its own forward backend for
-    /// (size, format) per `policy` (native by default, PJRT engines per
-    /// `workload.engines()` when available) and scoring members with the
-    /// shared workload.
+    /// Spawn `n` workers with default supervision and the fault plan
+    /// from `QES_FAULTS` (inert when unset). Each worker builds its own
+    /// forward backend for (size, format) per `policy` (native by
+    /// default, PJRT engines per `workload.engines()` when available)
+    /// and scores members with the shared workload.
     pub fn spawn(
         n: usize,
         manifest_path: &str,
@@ -78,55 +218,354 @@ impl WorkerPool {
         policy: BackendPolicy,
         workload: Arc<dyn Workload>,
     ) -> Result<WorkerPool> {
+        let faults = FaultPlan::from_env()?;
+        Self::spawn_with(
+            n,
+            manifest_path,
+            size,
+            format,
+            policy,
+            workload,
+            SupervisorCfg::default(),
+            faults,
+        )
+    }
+
+    /// Spawn with explicit supervision policy and fault plan (tests,
+    /// chaos harness, CLI `--faults`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_with(
+        n: usize,
+        manifest_path: &str,
+        size: &str,
+        format: Format,
+        policy: BackendPolicy,
+        workload: Arc<dyn Workload>,
+        sup: SupervisorCfg,
+        faults: FaultPlan,
+    ) -> Result<WorkerPool> {
         let (res_tx, res_rx) = channel::<MemberResult>();
-        let mut senders = Vec::with_capacity(n);
-        let mut handles = Vec::with_capacity(n);
+        let spawn_cfg = SpawnCfg {
+            manifest_path: manifest_path.to_string(),
+            size: size.to_string(),
+            format,
+            policy,
+            workload,
+            faults,
+        };
+        let mut slots = Vec::with_capacity(n);
         for w in 0..n {
-            let (tx, rx) = channel::<Job>();
-            senders.push(tx);
-            let res_tx = res_tx.clone();
-            let mpath = manifest_path.to_string();
-            let size = size.to_string();
-            let workload = workload.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("qes-worker-{}", w))
-                .spawn(move || {
-                    worker_main(&mpath, &size, format, policy, workload.as_ref(), rx, res_tx)
-                })?;
-            handles.push(Some(handle));
+            let (tx, handle) = spawn_worker(&spawn_cfg, res_tx.clone(), w, 0)?;
+            slots.push(WorkerSlot { tx: Some(tx), handle: Some(handle), incarnation: 0 });
         }
-        Ok(WorkerPool { senders, results: res_rx, handles: Mutex::new(handles) })
+        Ok(WorkerPool {
+            spawn_cfg,
+            sup,
+            state: Mutex::new(PoolState { slots, respawns_used: 0, rr: 0, last_failure: None }),
+            results: res_rx,
+            res_tx,
+        })
     }
 
     pub fn n_workers(&self) -> usize {
-        self.senders.len()
+        self.state.lock().expect("worker state lock poisoned").slots.len()
     }
 
-    /// Dispatch jobs (member-partitioned, one per worker, built lazily —
-    /// the leader never materializes a `Vec<Job>` or clones round data
-    /// per worker beyond what each job itself holds) and collect exactly
-    /// `expect` member results. A worker that dies mid-round (error or
-    /// panic) surfaces as `Err` here instead of a leader that blocks
-    /// forever on a short result stream.
-    pub fn run_round<I>(&self, jobs: I, expect: usize) -> Result<Vec<MemberResult>>
+    fn n_live(&self) -> usize {
+        let state = self.state.lock().expect("worker state lock poisoned");
+        state.slots.iter().filter(|s| s.tx.is_some()).count()
+    }
+
+    /// Send one job to the next live worker (round-robin). A send that
+    /// fails marks the slot dead (its receiver is gone) and moves on.
+    fn dispatch(&self, mut job: Job) -> Result<()> {
+        let mut state = self.state.lock().expect("worker state lock poisoned");
+        let n = state.slots.len();
+        for i in 0..n {
+            let w = (state.rr + i) % n;
+            if let Some(tx) = state.slots[w].tx.as_ref() {
+                match tx.send(job) {
+                    Ok(()) => {
+                        state.rr = (w + 1) % n;
+                        return Ok(());
+                    }
+                    Err(std::sync::mpsc::SendError(j)) => {
+                        state.slots[w].tx = None;
+                        job = j;
+                    }
+                }
+            }
+        }
+        anyhow::bail!("no live worker to dispatch to")
+    }
+
+    /// Join finished worker threads and (budget permitting) respawn
+    /// them. Returns the number of workers respawned by this call. When
+    /// every worker is dead and none could be respawned, bails with the
+    /// most recent failure so the leader never blocks on a stream that
+    /// cannot fill.
+    fn reap_and_respawn(&self) -> Result<u32> {
+        let mut state = self.state.lock().expect("worker state lock poisoned");
+        let mut respawned = 0u32;
+        for w in 0..state.slots.len() {
+            let finished = state.slots[w].handle.as_ref().is_some_and(|h| h.is_finished());
+            if !finished {
+                continue;
+            }
+            let handle = state.slots[w].handle.take().expect("handle checked above");
+            let failure = match handle.join() {
+                Ok(Ok(())) => format!("worker {} exited before shutdown", w),
+                Ok(Err(e)) => format!("worker {} failed: {:#}", w, e),
+                Err(p) => format!("worker {} panicked: {}", w, panic_message(&*p)),
+            };
+            state.slots[w].tx = None;
+            state.last_failure = Some(failure);
+            if self.sup.respawn && state.respawns_used < self.sup.max_respawns {
+                let incarnation = state.slots[w].incarnation + 1;
+                let (tx, handle) =
+                    spawn_worker(&self.spawn_cfg, self.res_tx.clone(), w, incarnation)?;
+                state.slots[w] =
+                    WorkerSlot { tx: Some(tx), handle: Some(handle), incarnation };
+                state.respawns_used += 1;
+                respawned += 1;
+            }
+        }
+        let live = state.slots.iter().filter(|s| s.tx.is_some()).count();
+        if live == 0 {
+            let detail = state
+                .last_failure
+                .clone()
+                .unwrap_or_else(|| "no worker failure recorded".to_string());
+            anyhow::bail!("all workers dead ({})", detail);
+        }
+        Ok(respawned)
+    }
+
+    /// Dispatch jobs (member-partitioned, at most one per worker) and
+    /// supervise the round to completion: collect results for all
+    /// `n_members` members, retrying errored members up to
+    /// `max_retries`, re-dispatching outstanding members on deadline
+    /// waves with exponential backoff, and respawning dead workers. The
+    /// round either completes (possibly degraded — see
+    /// `RoundOutcome::failed`) or errors when the pool cannot make
+    /// progress (all workers dead past the respawn budget, or
+    /// `max_waves` deadlines with no result).
+    pub fn run_round<I>(&self, jobs: I, n_members: usize) -> Result<RoundOutcome>
     where
         I: IntoIterator<Item = Job>,
     {
+        let n_workers = self.n_workers();
         // bound the buffer at workers+1: enough to detect oversupply
         // BEFORE anything is dispatched (a partial dispatch would leave
         // in-flight results to poison the next round's collection)
-        let batch: Vec<Job> = jobs.into_iter().take(self.senders.len() + 1).collect();
-        anyhow::ensure!(batch.len() <= self.senders.len(), "more jobs than workers");
-        for (tx, job) in self.senders.iter().zip(batch) {
-            tx.send(job).map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+        let batch: Vec<Job> = jobs.into_iter().take(n_workers + 1).collect();
+        anyhow::ensure!(batch.len() <= n_workers, "more jobs than workers");
+
+        // Validate the batch and capture the shared payload needed to
+        // re-dispatch members later. `Snapshot`/`Arc<dyn Round>` clones
+        // are O(shards) reference bumps.
+        struct Payload {
+            snapshot: Snapshot,
+            gen_seed: u64,
+            pairs: usize,
+            sigma: f32,
+            round: Arc<dyn Round>,
+            round_id: u64,
+        }
+        let mut payload: Option<Payload> = None;
+        let mut rewards: Vec<Option<f32>> = vec![None; n_members];
+        let mut failed = vec![false; n_members];
+        let mut attempts = vec![0u32; n_members];
+        let mut seen = vec![false; n_members];
+        for job in &batch {
+            match job {
+                Job::Shutdown => anyhow::bail!("cannot dispatch Shutdown through run_round"),
+                Job::Eval { snapshot, gen_seed, pairs, sigma, members, round, round_id } => {
+                    if let Some(p) = payload.as_ref() {
+                        anyhow::ensure!(
+                            p.round_id == *round_id,
+                            "jobs in one round must share round_id"
+                        );
+                    } else {
+                        payload = Some(Payload {
+                            snapshot: snapshot.clone(),
+                            gen_seed: *gen_seed,
+                            pairs: *pairs,
+                            sigma: *sigma,
+                            round: round.clone(),
+                            round_id: *round_id,
+                        });
+                    }
+                    for &(m, a) in members {
+                        anyhow::ensure!(m < n_members, "member {} out of range", m);
+                        anyhow::ensure!(!seen[m], "member {} dispatched twice", m);
+                        seen[m] = true;
+                        attempts[m] = a;
+                    }
+                }
+            }
+        }
+
+        for job in batch {
+            self.dispatch(job)?;
+        }
+
+        let round_id = payload.as_ref().map(|p| p.round_id).unwrap_or(0);
+        let make_job = |p: &Payload, members: Vec<(usize, u32)>| Job::Eval {
+            snapshot: p.snapshot.clone(),
+            gen_seed: p.gen_seed,
+            pairs: p.pairs,
+            sigma: p.sigma,
+            members,
+            round: p.round.clone(),
+            round_id: p.round_id,
+        };
+
+        let mut pending = n_members;
+        let mut retries = 0u32;
+        let mut redispatches = 0u32;
+        let mut respawns = 0u32;
+        let mut wave = 0u32;
+        let mut deadline = Duration::from_millis(self.sup.deadline_ms);
+        let max_deadline =
+            Duration::from_millis(self.sup.max_deadline_ms.max(self.sup.deadline_ms));
+        let mut last_progress = Instant::now();
+
+        while pending > 0 {
+            match self.results.recv_timeout(Duration::from_millis(self.sup.poll_ms)) {
+                Ok(r) => {
+                    if r.round_id != round_id {
+                        continue; // straggler from an abandoned round
+                    }
+                    let m = r.member;
+                    if m >= n_members || rewards[m].is_some() || failed[m] {
+                        continue; // duplicate — first result per member wins
+                    }
+                    match r.reward {
+                        Ok(v) => {
+                            rewards[m] = Some(v);
+                            pending -= 1;
+                            last_progress = Instant::now();
+                        }
+                        Err(_) => {
+                            // Only the attempt currently outstanding may
+                            // consume a retry — a duplicate error from a
+                            // wave re-dispatch of an older attempt must
+                            // not skip the retry ladder, or the failed
+                            // set would depend on timing.
+                            if r.attempt != attempts[m] {
+                                continue;
+                            }
+                            retries += 1;
+                            attempts[m] += 1;
+                            last_progress = Instant::now();
+                            if attempts[m] > self.sup.max_retries {
+                                failed[m] = true;
+                                pending -= 1;
+                            } else if let Some(p) = &payload {
+                                redispatches += 1;
+                                self.dispatch(make_job(p, vec![(m, attempts[m])]))
+                                    .or_else(|_| {
+                                        respawns += self.reap_and_respawn()?;
+                                        self.dispatch(make_job(p, vec![(m, attempts[m])]))
+                                    })?;
+                            }
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    respawns += self.reap_and_respawn()?;
+                    if last_progress.elapsed() >= deadline {
+                        wave += 1;
+                        anyhow::ensure!(
+                            wave <= self.sup.max_waves,
+                            "round {} stalled: {}/{} members unscored after {} deadline waves",
+                            round_id,
+                            pending,
+                            n_members,
+                            wave - 1
+                        );
+                        if let Some(p) = &payload {
+                            let outstanding: Vec<(usize, u32)> = (0..n_members)
+                                .filter(|&m| rewards[m].is_none() && !failed[m])
+                                .map(|m| (m, attempts[m]))
+                                .collect();
+                            let live = self.n_live().max(1);
+                            let per = ((outstanding.len() + live - 1) / live).max(1);
+                            for chunk in outstanding.chunks(per) {
+                                redispatches += 1;
+                                self.dispatch(make_job(p, chunk.to_vec())).or_else(|_| {
+                                    respawns += self.reap_and_respawn()?;
+                                    self.dispatch(make_job(p, chunk.to_vec()))
+                                })?;
+                            }
+                        }
+                        deadline = (deadline * 2).min(max_deadline);
+                        last_progress = Instant::now();
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // Unreachable while `self.res_tx` is held, but keep
+                    // the old contract anyway.
+                    anyhow::bail!(
+                        "result channel closed with {}/{} members unscored",
+                        pending,
+                        n_members
+                    );
+                }
+            }
+        }
+
+        let failed: Vec<usize> =
+            (0..n_members).filter(|&m| failed[m]).collect();
+        Ok(RoundOutcome { rewards, failed, retries, redispatches, respawns })
+    }
+
+    /// Unsupervised dispatch/collect, preserved for overhead
+    /// benchmarking against `run_round` on the fault-free path: send
+    /// jobs, block for exactly `expect` results, no retry/deadline/
+    /// respawn bookkeeping. Dead workers still surface as `Err`.
+    pub fn run_round_bare<I>(&self, jobs: I, expect: usize) -> Result<Vec<MemberResult>>
+    where
+        I: IntoIterator<Item = Job>,
+    {
+        let n_workers = self.n_workers();
+        let batch: Vec<Job> = jobs.into_iter().take(n_workers + 1).collect();
+        anyhow::ensure!(batch.len() <= n_workers, "more jobs than workers");
+        for job in batch {
+            self.dispatch(job)?;
         }
         let mut out = Vec::with_capacity(expect);
         while out.len() < expect {
             match self.results.recv_timeout(Duration::from_millis(200)) {
                 Ok(r) => out.push(r),
-                Err(RecvTimeoutError::Timeout) => self.reap_failed()?,
+                Err(RecvTimeoutError::Timeout) => {
+                    // Reap without respawn: a dead worker fails the bare
+                    // round like the pre-supervision pool did.
+                    let mut state = self.state.lock().expect("worker state lock poisoned");
+                    for w in 0..state.slots.len() {
+                        let finished =
+                            state.slots[w].handle.as_ref().is_some_and(|h| h.is_finished());
+                        if finished {
+                            let handle = state.slots[w].handle.take().expect("checked above");
+                            state.slots[w].tx = None;
+                            match handle.join() {
+                                Ok(Ok(())) => {
+                                    anyhow::bail!("worker {} exited before shutdown", w)
+                                }
+                                Ok(Err(e)) => {
+                                    return Err(e.context(format!("worker {} failed", w)))
+                                }
+                                Err(p) => anyhow::bail!(
+                                    "worker {} panicked: {}",
+                                    w,
+                                    panic_message(&*p)
+                                ),
+                            }
+                        }
+                    }
+                }
                 Err(RecvTimeoutError::Disconnected) => {
-                    self.reap_failed()?;
                     anyhow::bail!(
                         "result channel closed with {}/{} member results",
                         out.len(),
@@ -138,37 +577,22 @@ impl WorkerPool {
         Ok(out)
     }
 
-    /// Join any finished worker threads; a worker that exited before
-    /// shutdown — cleanly, with an error, or by panicking — is a failure.
-    fn reap_failed(&self) -> Result<()> {
-        let mut handles = self.handles.lock().expect("worker handle lock poisoned");
-        for (w, slot) in handles.iter_mut().enumerate() {
-            if slot.as_ref().is_some_and(|h| h.is_finished()) {
-                match slot.take().expect("slot checked above").join() {
-                    Ok(Ok(())) => anyhow::bail!("worker {} exited before shutdown", w),
-                    Ok(Err(e)) => {
-                        return Err(e.context(format!("worker {} failed", w)));
-                    }
-                    Err(p) => anyhow::bail!("worker {} panicked: {}", w, panic_message(&*p)),
-                }
+    /// Orderly shutdown that PROPAGATES worker failures (Drop can only
+    /// log them): send Shutdown to every live worker and join all
+    /// threads.
+    pub fn shutdown(self) -> Result<()> {
+        let slots: Vec<WorkerSlot> = {
+            let mut state = self.state.lock().expect("worker state lock poisoned");
+            std::mem::take(&mut state.slots)
+        };
+        for slot in &slots {
+            if let Some(tx) = &slot.tx {
+                let _ = tx.send(Job::Shutdown);
             }
         }
-        Ok(())
-    }
-
-    /// Orderly shutdown that PROPAGATES worker failures (Drop can only
-    /// log them): send Shutdown to every worker and join all threads.
-    pub fn shutdown(self) -> Result<()> {
-        for tx in &self.senders {
-            let _ = tx.send(Job::Shutdown);
-        }
-        let slots: Vec<Option<JoinHandle<Result<()>>>> = {
-            let mut handles = self.handles.lock().expect("worker handle lock poisoned");
-            handles.iter_mut().map(|s| s.take()).collect()
-        };
         let mut first: Option<anyhow::Error> = None;
         for (w, slot) in slots.into_iter().enumerate() {
-            if let Some(h) = slot {
+            if let Some(h) = slot.handle {
                 let failure = match h.join() {
                     Ok(Ok(())) => None,
                     Ok(Err(e)) => Some(e.context(format!("worker {} failed", w))),
@@ -190,12 +614,14 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        for tx in &self.senders {
-            let _ = tx.send(Job::Shutdown);
+        let mut state = self.state.lock().expect("worker state lock poisoned");
+        for slot in state.slots.iter() {
+            if let Some(tx) = &slot.tx {
+                let _ = tx.send(Job::Shutdown);
+            }
         }
-        let mut handles = self.handles.lock().expect("worker handle lock poisoned");
-        for (w, slot) in handles.iter_mut().enumerate() {
-            if let Some(h) = slot.take() {
+        for (w, slot) in state.slots.iter_mut().enumerate() {
+            if let Some(h) = slot.handle.take() {
                 match h.join() {
                     Ok(Ok(())) => {}
                     Ok(Err(e)) => eprintln!("worker {} failed: {:#}", w, e),
@@ -206,6 +632,7 @@ impl Drop for WorkerPool {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_main(
     manifest_path: &str,
     size: &str,
@@ -214,6 +641,9 @@ fn worker_main(
     workload: &dyn Workload,
     rx: Receiver<Job>,
     res_tx: Sender<MemberResult>,
+    faults: FaultPlan,
+    worker: usize,
+    incarnation: u32,
 ) -> Result<()> {
     let man = Manifest::load(manifest_path)?;
     let mut session = Session::with_policy(&man, size, format, workload.engines(), policy)?;
@@ -222,16 +652,59 @@ fn worker_main(
     // workers never nest n × cores thread fan-outs.
     session.set_backend_threads(1);
     let mut scratch = MemberScratch::sequential();
+    let mut jobs_seen: u64 = 0;
+    let mut sent: u64 = 0;
     while let Ok(job) = rx.recv() {
         match job {
             Job::Shutdown => break,
-            Job::Eval { snapshot, gen_seed, pairs, sigma, members, round } => {
+            Job::Eval { snapshot, gen_seed, pairs, sigma, members, round, round_id } => {
+                jobs_seen += 1;
+                if faults.worker_kill(worker, incarnation, jobs_seen) {
+                    panic!("injected worker kill (worker {} inc {})", worker, incarnation);
+                }
                 let spec = PopulationSpec { gen_seed, pairs, sigma };
                 let view = snapshot.params_view();
-                for m in members {
-                    let reward = workload
-                        .eval_member(&session, &view, &spec, m, round.as_ref(), &mut scratch);
-                    res_tx.send(MemberResult { member: m, reward }).ok();
+                for (m, attempt) in members {
+                    let reward = if faults.eval_fault(round_id, m, attempt) {
+                        Err(anyhow::anyhow!(
+                            "injected eval fault (round {} member {} attempt {})",
+                            round_id,
+                            m,
+                            attempt
+                        ))
+                    } else {
+                        // A panicking workload must cost one retry, not
+                        // the worker (and its compiled engines).
+                        match catch_unwind(AssertUnwindSafe(|| {
+                            workload.eval_member(
+                                &session,
+                                &view,
+                                &spec,
+                                m,
+                                round.as_ref(),
+                                &mut scratch,
+                            )
+                        })) {
+                            Ok(r) => r,
+                            Err(p) => Err(anyhow::anyhow!(
+                                "workload panicked scoring member {}: {}",
+                                m,
+                                panic_message(&*p)
+                            )),
+                        }
+                    };
+                    sent += 1;
+                    if faults.drop_result(worker, incarnation, sent) {
+                        continue;
+                    }
+                    if let Some(d) = faults.delay(worker, incarnation, sent) {
+                        std::thread::sleep(d);
+                    }
+                    let res = MemberResult { round_id, member: m, attempt, reward };
+                    if res_tx.send(res).is_err() {
+                        // Leader gone: stop scoring into the void.
+                        return Ok(());
+                    }
                 }
             }
         }
@@ -246,28 +719,61 @@ mod tests {
     use crate::coordinator::workload::GenWorkload;
     use crate::tasks::gen_task;
 
-    /// A worker whose setup fails (here: unreadable manifest) must turn
-    /// into an `Err` from `run_round`, not a leader blocked forever on a
-    /// result channel that will never fill. Runs with or without a PJRT
-    /// backend — the failure happens before engine compilation.
-    #[test]
-    fn worker_failure_surfaces_as_err() {
+    fn test_workload() -> Arc<dyn Workload> {
         let man = Manifest::load("artifacts/manifest.json").unwrap();
         let mcfg = man.config("nano").unwrap().clone();
         let task = gen_task("countdown", mcfg.s_prompt, mcfg.t_dec).unwrap();
         let cfg = FinetuneCfg { train_pool: 8, eval_n: 4, ..Default::default() };
-        let workload: Arc<dyn Workload> = Arc::new(GenWorkload::new(task, &mcfg, &cfg));
-        let pool = WorkerPool::spawn(
+        Arc::new(GenWorkload::new(task, &mcfg, &cfg))
+    }
+
+    /// A worker whose setup fails (here: unreadable manifest) must turn
+    /// into an `Err` from `run_round`, not a leader blocked forever on a
+    /// result channel that will never fill — even though the supervisor
+    /// burns its respawn budget trying to bring replacements up. Runs
+    /// with or without a PJRT backend — the failure happens before
+    /// engine compilation.
+    #[test]
+    fn worker_failure_surfaces_as_err() {
+        let sup = SupervisorCfg {
+            deadline_ms: 100,
+            poll_ms: 10,
+            max_respawns: 4,
+            ..SupervisorCfg::default()
+        };
+        let pool = WorkerPool::spawn_with(
             2,
             "artifacts/does_not_exist.json",
             "nano",
             Format::Int4,
             BackendPolicy::Auto,
-            workload,
+            test_workload(),
+            sup,
+            FaultPlan::default(),
         )
         .unwrap();
         let err = pool.run_round(Vec::new(), 1);
         assert!(err.is_err(), "dead workers must fail the round");
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("worker"), "unhelpful error: {}", msg);
+    }
+
+    /// Same failure mode through the unsupervised path.
+    #[test]
+    fn bare_round_surfaces_worker_failure() {
+        let pool = WorkerPool::spawn_with(
+            1,
+            "artifacts/does_not_exist.json",
+            "nano",
+            Format::Int4,
+            BackendPolicy::Auto,
+            test_workload(),
+            SupervisorCfg::default(),
+            FaultPlan::default(),
+        )
+        .unwrap();
+        let err = pool.run_round_bare(Vec::new(), 1);
+        assert!(err.is_err(), "dead worker must fail the bare round");
         let msg = format!("{:#}", err.unwrap_err());
         assert!(msg.contains("worker"), "unhelpful error: {}", msg);
     }

@@ -6,16 +6,17 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::coordinator::{
-    finetune_store, pretrain_cls, pretrain_gen, workload_for, EngineSet, FinetuneCfg,
-    PretrainCfg, Session, Variant, Workload,
+    finetune_resumable, pretrain_cls, pretrain_gen, workload_for, EngineSet, FinetuneCfg,
+    PretrainCfg, Session, TrainCkptCfg, Variant, Workload, WorkerPool,
 };
-use crate::model::{checkpoint, init::init_fp, AsParams, ParamStore};
+use crate::model::{checkpoint, init::init_fp, AsParams, ParamStore, ShardedParamStore};
 use crate::opt::EsHyper;
 use crate::quant::Format;
 use crate::runtime::{BackendPolicy, Manifest, NativeBackend};
 use crate::sched::{serve, SchedCfg, Scheduler};
 use crate::tasks::{cls_task, gen_task, is_cls_task};
 use crate::util::args::Args;
+use crate::util::fault::FaultPlan;
 use crate::util::parallel;
 
 pub fn run_dir(size: &str, task: &str) -> PathBuf {
@@ -168,6 +169,13 @@ pub struct FtArgs {
     pub cfg: FinetuneCfg,
     pub pretrain_steps: usize,
     pub k_shot: usize,
+    /// Rollout worker processes (`--workers`, 0 = inline on the leader).
+    pub workers: usize,
+    /// Training-checkpoint cadence in generations (`--ckpt-every`,
+    /// 0 disables crash-consistent checkpoints).
+    pub ckpt_every: usize,
+    /// Resume from the run's training checkpoint (`--resume`).
+    pub resume: bool,
 }
 
 pub fn parse_ft_args(args: &mut Args) -> Result<FtArgs> {
@@ -185,6 +193,12 @@ pub fn parse_ft_args(args: &mut Args) -> Result<FtArgs> {
         pairs: args.get_usize("pairs", 8)?,
         k_window: args.get_usize("k", 8)?,
     };
+    // fault plan: explicit --faults wins, else the QES_FAULTS env var,
+    // else inert
+    let faults = match args.opt("faults") {
+        Some(spec) => FaultPlan::parse(&spec)?,
+        None => FaultPlan::from_env()?,
+    };
     let cfg = FinetuneCfg {
         hyper,
         gens: args.get_usize("gens", 60)?,
@@ -195,9 +209,14 @@ pub fn parse_ft_args(args: &mut Args) -> Result<FtArgs> {
         eval_n: args.get_usize("eval-n", 64)?,
         seed: args.get_u64("seed", 42)?,
         verbose: !args.get_bool("quiet"),
+        min_quorum: args.get_f32("quorum", 0.5)?,
+        faults,
     };
     let pretrain_steps = args.get_usize("pretrain-steps", 400)?;
     let k_shot = args.get_usize("k-shot", 16)?;
+    let workers = args.get_usize("workers", 0)?;
+    let ckpt_every = args.get_usize("ckpt-every", 1)?;
+    let resume = args.get_bool("resume");
     // apply the process-wide dispatch only after every flag THIS function
     // parses has succeeded, so an argument error can't leave the global
     // kernel repinned (the caller's trailing `args.finish()` can still
@@ -215,6 +234,9 @@ pub fn parse_ft_args(args: &mut Args) -> Result<FtArgs> {
         cfg,
         pretrain_steps,
         k_shot,
+        workers,
+        ckpt_every,
+        resume,
     })
 }
 
@@ -222,13 +244,26 @@ pub fn cmd_finetune(mut args: Args) -> Result<()> {
     let fa = parse_ft_args(&mut args)?;
     args.finish()?;
     let man = Manifest::load(&fa.manifest)?;
-    let store0 =
-        ensure_quantized(&man, &fa.size, &fa.task, fa.format, fa.pretrain_steps, true)?;
-    let variant_name = match fa.variant {
-        Variant::Qes => "qes",
-        Variant::QesFullResidual => "qes-full",
-        Variant::Quzo => "quzo",
-        Variant::QesAdaptive => "qes-adaptive",
+    let variant_name = fa.variant.name();
+    let dir = run_dir(&fa.size, &fa.task);
+    let train_ckpt = dir.join(format!("{}_{}.train.ckpt", fa.format.name(), variant_name));
+
+    // --resume continues from the run's training checkpoint: the lattice
+    // comes from the checkpoint, not from the cached quantized base.
+    let resume_state = if fa.resume {
+        Some(checkpoint::load_train(&man, &train_ckpt)?)
+    } else {
+        None
+    };
+    let store0 = match &resume_state {
+        Some(ts) => {
+            println!(
+                "[finetune] resuming {:?} at round {} ({})",
+                train_ckpt, ts.rounds_done, ts.variant
+            );
+            ts.store.clone()
+        }
+        None => ensure_quantized(&man, &fa.size, &fa.task, fa.format, fa.pretrain_steps, true)?,
     };
     // ONE loop for every scenario: the task name picks the Workload impl
     // and --backend picks the runtime (native default on offline builds).
@@ -237,9 +272,54 @@ pub fn cmd_finetune(mut args: Args) -> Result<()> {
     let session =
         Session::with_policy(&man, &fa.size, fa.format, workload.engines(), fa.backend)?;
     println!("[finetune] backend: {} | kernel: {}", session.backend_name(), fa.kernel.name());
-    let (log, store) =
-        finetune_store(&session, workload.as_ref(), store0, fa.variant, &fa.cfg, None)?;
-    let dir = run_dir(&fa.size, &fa.task);
+    if fa.cfg.faults.is_active() {
+        println!("[finetune] fault injection active: {:?}", fa.cfg.faults);
+    }
+
+    // supervised worker pool (--workers N); 0 = inline on the leader
+    let pool = if fa.workers > 0 {
+        let workload_arc: std::sync::Arc<dyn Workload> = std::sync::Arc::from(workload_for(
+            &fa.task, &mcfg, &fa.cfg, fa.k_shot,
+        )?);
+        Some(WorkerPool::spawn_with(
+            fa.workers,
+            &fa.manifest,
+            &fa.size,
+            fa.format,
+            fa.backend,
+            workload_arc,
+            Default::default(),
+            fa.cfg.faults,
+        )?)
+    } else {
+        None
+    };
+
+    let ckpt_cfg = (fa.ckpt_every > 0)
+        .then(|| TrainCkptCfg { path: train_ckpt.clone(), every: fa.ckpt_every });
+    let mut sharded = ShardedParamStore::with_default_shards(store0)?;
+    let log = finetune_resumable(
+        &session,
+        workload.as_ref(),
+        &mut sharded,
+        fa.variant,
+        &fa.cfg,
+        pool.as_ref(),
+        ckpt_cfg.as_ref(),
+        resume_state.as_ref(),
+    )?;
+    let store = sharded.materialize();
+    if let Some(p) = pool {
+        // with injected worker kills, unreaped panics surface at
+        // shutdown — the run itself already committed, so warn, don't fail
+        if let Err(e) = p.shutdown() {
+            if fa.cfg.faults.is_active() {
+                eprintln!("[finetune] pool shutdown after fault injection: {:#}", e);
+            } else {
+                return Err(e);
+            }
+        }
+    }
     let ckpt = dir.join(format!("{}_{}.ckpt", fa.format.name(), variant_name));
     checkpoint::save(&store, &ckpt)?;
     let csv = dir.join(format!("{}_{}.csv", fa.format.name(), variant_name));
@@ -260,8 +340,6 @@ pub fn cmd_finetune(mut args: Args) -> Result<()> {
 /// model for `--size`/`--task`). Responses stream to stdout (or the
 /// connection) as sequences finish; diagnostics go to stderr.
 pub fn cmd_serve(mut args: Args) -> Result<()> {
-    use std::io::BufRead;
-
     let manifest = args.get_or("manifest", "artifacts/manifest.json");
     let size = args.get_or("size", "nano");
     let task = args.get_or("task", "countdown");
@@ -274,6 +352,11 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
     let tcp = args.opt("tcp");
     let kernel_choice = crate::kernel::KernelKind::parse_choice(&args.get_or("kernel", "auto"))?;
     let pretrain_steps = args.get_usize("pretrain-steps", 400)?;
+    // intake hardening: per-line byte cap (oversized lines are answered
+    // with an error response, excess bytes discarded at the socket) and
+    // a TCP read deadline so a silent client cannot pin the server
+    let max_line = args.get_usize("max-line", 65536)?;
+    let read_timeout_ms = args.get_u64("read-timeout-ms", 30_000)?;
     args.finish()?;
     let kernel = crate::kernel::force(kernel_choice)?;
     let man = Manifest::load(&manifest)?;
@@ -309,19 +392,9 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
     );
     match tcp {
         None => {
-            let (tx, rx) = std::sync::mpsc::channel::<String>();
+            let (tx, rx) = std::sync::mpsc::channel::<serve::Intake>();
             std::thread::spawn(move || {
-                let stdin = std::io::stdin();
-                for line in stdin.lock().lines() {
-                    match line {
-                        Ok(l) => {
-                            if tx.send(l).is_err() {
-                                break;
-                            }
-                        }
-                        Err(_) => break,
-                    }
-                }
+                serve::pump_lines(std::io::stdin().lock(), max_line, &tx);
             });
             let mut sched = Scheduler::new(&backend, &view, None, None, scfg)?;
             let mut out = std::io::stdout();
@@ -350,19 +423,18 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
                 let peer =
                     stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
                 eprintln!("[serve] connection from {}", peer);
+                if read_timeout_ms > 0 {
+                    // a deadline on the read half: the pump thread exits
+                    // (ending the connection) instead of blocking forever
+                    // on a client that went silent mid-stream
+                    stream
+                        .set_read_timeout(Some(std::time::Duration::from_millis(read_timeout_ms)))
+                        .context("cannot set read deadline")?;
+                }
                 let reader = stream.try_clone()?;
-                let (tx, rx) = std::sync::mpsc::channel::<String>();
+                let (tx, rx) = std::sync::mpsc::channel::<serve::Intake>();
                 let pump = std::thread::spawn(move || {
-                    for line in std::io::BufReader::new(reader).lines() {
-                        match line {
-                            Ok(l) => {
-                                if tx.send(l).is_err() {
-                                    break;
-                                }
-                            }
-                            Err(_) => break,
-                        }
-                    }
+                    serve::pump_lines(reader, max_line, &tx);
                 });
                 let mut sched = Scheduler::new(&backend, &view, None, None, scfg.clone())?;
                 let mut ws = stream;

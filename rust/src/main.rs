@@ -6,15 +6,24 @@
 //! qes quantize  --run <dir> --format int4 [--gptq]  PTQ/GPTQ the base model
 //! qes eval      --run <dir> --format int4 ...       greedy accuracy of a ckpt
 //! qes finetune  --run <dir> --format int4 \
-//!               --variant qes|qes-full|quzo ...     ES fine-tuning (the paper)
+//!               --variant qes|qes-full|quzo \
+//!               [--workers n] [--quorum f] \
+//!               [--faults spec] [--ckpt-every n] \
+//!               [--resume]                          ES fine-tuning (the paper) on a
+//!                                                   supervised fault-tolerant pool,
+//!                                                   with crash-consistent resume
 //! qes serve     [--ckpt p] [--tcp addr] [--slots n] continuous-batching server
-//!                                                   (line-delimited JSON)
+//!               [--max-line bytes]                  (line-delimited JSON)
+//!               [--read-timeout-ms t]
 //! qes exp       table1|table2|table5|table6|        regenerate a paper table
 //!               table7|table8|table9|fig2|fig3 ...  or figure
 //! ```
 //!
 //! Runs live under `runs/<size>_<task>/`: `fp.ckpt` (pretrained base),
-//! `<format>.ckpt` (quantized), `<format>_<variant>.ckpt` (+ `.csv` log).
+//! `<format>.ckpt` (quantized), `<format>_<variant>.ckpt` (+ `.csv` log),
+//! `<format>_<variant>.train.ckpt` (crash-consistent training state for
+//! `--resume`). Fault injection reads `--faults` or the `QES_FAULTS` env
+//! var (e.g. `seed=7,eval=0.1,kill=0.05,drop=0.05,delay=0.2,delay_ms=10`).
 
 use anyhow::Result;
 use qes::exp;

@@ -15,15 +15,30 @@
 //! INT4 lattices are written nibble-packed (dtype=2), so an INT4 checkpoint
 //! on disk really is half the size of the INT8 one — the artifact the
 //! paper's Table 8 accounting assumes.
+//!
+//! All writes are crash-consistent: the payload goes to a temp file in
+//! the destination directory, is fsynced, and is atomically renamed
+//! over the target — a reader never observes a torn checkpoint, only
+//! the old file or the new one.
+//!
+//! Training checkpoints (`save_train`/`load_train`, magic b"QESTRAIN")
+//! embed a param checkpoint plus everything `qes finetune --resume`
+//! needs to continue bit-identically: round counter, master RNG seed,
+//! variant name and the optimizer's `save_state` blob (residual slabs /
+//! replay history / step counters).
 
 use std::io::{Read, Write};
 use std::path::Path;
+
+use anyhow::Context;
 
 use crate::model::{ParamKind, ParamStore, TensorData};
 use crate::quant::{pack_int4, unpack_int4, Format};
 use crate::runtime::manifest::Manifest;
 
 const MAGIC: &[u8; 8] = b"QESCKPT1";
+const TRAIN_MAGIC: &[u8; 8] = b"QESTRAIN";
+const TRAIN_VERSION: u32 = 1;
 
 fn kind_byte(k: ParamKind) -> u8 {
     match k {
@@ -34,11 +49,58 @@ fn kind_byte(k: ParamKind) -> u8 {
     }
 }
 
-pub fn save(store: &ParamStore, path: &Path) -> anyhow::Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
+/// Write `path` via temp-file + fsync + atomic rename: `f` streams the
+/// payload into a `.tmp` sibling, which replaces `path` only after its
+/// contents are durable. A crash at any point leaves either the old
+/// file or the new one — never a torn mix.
+fn atomic_write<F>(path: &Path, f: F) -> anyhow::Result<()>
+where
+    F: FnOnce(&mut std::io::BufWriter<std::fs::File>) -> anyhow::Result<()>,
+{
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => {
+            std::fs::create_dir_all(d)?;
+            Some(d.to_path_buf())
+        }
+        _ => None,
+    };
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| anyhow::anyhow!("checkpoint path {:?} has no file name", path))?;
+    let tmp = path.with_file_name(format!(".{}.{}.tmp", name, std::process::id()));
+    let result = (|| -> anyhow::Result<()> {
+        let mut w = std::io::BufWriter::new(
+            std::fs::File::create(&tmp)
+                .with_context(|| format!("cannot create temp checkpoint {:?}", tmp))?,
+        );
+        f(&mut w)?;
+        w.flush()?;
+        w.get_ref().sync_all()?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("cannot rename {:?} over {:?}", tmp, path))?;
+        Ok(())
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+        return result;
     }
-    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    // Make the rename itself durable (best-effort: not every
+    // filesystem lets you fsync a directory handle).
+    if let Some(d) = dir {
+        if let Ok(dh) = std::fs::File::open(&d) {
+            let _ = dh.sync_all();
+        }
+    }
+    Ok(())
+}
+
+pub fn save(store: &ParamStore, path: &Path) -> anyhow::Result<()> {
+    atomic_write(path, |w| write_store(store, w))
+}
+
+/// Stream a param checkpoint body (magic through last payload) to `w`.
+fn write_store<W: Write>(store: &ParamStore, w: &mut W) -> anyhow::Result<()> {
     w.write_all(MAGIC)?;
     write_str(&mut w, &store.size)?;
     write_str(&mut w, store.format.name())?;
@@ -71,10 +133,21 @@ pub fn save(store: &ParamStore, path: &Path) -> anyhow::Result<()> {
 }
 
 pub fn load(man: &Manifest, path: &Path) -> anyhow::Result<ParamStore> {
-    let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("cannot open checkpoint {:?}", path))?,
+    );
+    read_store(man, &mut r)
+        .with_context(|| format!("corrupt or truncated checkpoint {:?}", path))
+}
+
+/// Parse a param checkpoint body from `r` (counterpart of
+/// `write_store`). Short reads surface as errors from `read_exact` and
+/// get the file-level context attached by the callers.
+fn read_store<R: Read>(man: &Manifest, mut r: R) -> anyhow::Result<ParamStore> {
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic in {:?}", path);
+    r.read_exact(&mut magic).context("short read in checkpoint magic")?;
+    anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic");
     let size = read_str(&mut r)?;
     let fmt = Format::parse(&read_str(&mut r)?)?;
     let n = read_u32(&mut r)? as usize;
@@ -123,6 +196,70 @@ pub fn load(man: &Manifest, path: &Path) -> anyhow::Result<ParamStore> {
         };
     }
     Ok(store)
+}
+
+/// Everything `qes finetune --resume` needs to continue a run
+/// bit-identically to an uninterrupted one.
+pub struct TrainState {
+    /// Generations already committed (the master RNG has drawn exactly
+    /// this many gen_seeds).
+    pub rounds_done: u64,
+    /// The run's master seed — resume validates it against the config.
+    pub seed: u64,
+    /// Optimizer variant name (`Variant::name()`).
+    pub variant: String,
+    /// Opaque `LatticeOptimizer::save_state` blob.
+    pub opt_state: Vec<u8>,
+    /// The committed parameter plane at `rounds_done`.
+    pub store: ParamStore,
+}
+
+/// Atomically write a training checkpoint: round/RNG counters, variant,
+/// optimizer-state blob, then the full param checkpoint embedded.
+pub fn save_train(
+    path: &Path,
+    store: &ParamStore,
+    rounds_done: u64,
+    seed: u64,
+    variant: &str,
+    opt_state: &[u8],
+) -> anyhow::Result<()> {
+    atomic_write(path, |w| {
+        w.write_all(TRAIN_MAGIC)?;
+        w.write_all(&TRAIN_VERSION.to_le_bytes())?;
+        w.write_all(&rounds_done.to_le_bytes())?;
+        w.write_all(&seed.to_le_bytes())?;
+        write_str(w, variant)?;
+        w.write_all(&(opt_state.len() as u64).to_le_bytes())?;
+        w.write_all(opt_state)?;
+        write_store(store, w)
+    })
+}
+
+pub fn load_train(man: &Manifest, path: &Path) -> anyhow::Result<TrainState> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("cannot open training checkpoint {:?}", path))?,
+    );
+    (|| -> anyhow::Result<TrainState> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic).context("short read in training checkpoint magic")?;
+        anyhow::ensure!(&magic == TRAIN_MAGIC, "bad training checkpoint magic");
+        let version = read_u32(&mut r)?;
+        anyhow::ensure!(
+            version == TRAIN_VERSION,
+            "training checkpoint version {} (expected {})",
+            version,
+            TRAIN_VERSION
+        );
+        let rounds_done = read_u64(&mut r)?;
+        let seed = read_u64(&mut r)?;
+        let variant = read_str(&mut r)?;
+        let opt_state = read_payload(&mut r)?;
+        let store = read_store(man, &mut r)?;
+        Ok(TrainState { rounds_done, seed, variant, opt_state, store })
+    })()
+    .with_context(|| format!("corrupt or truncated training checkpoint {:?}", path))
 }
 
 fn write_str<W: Write>(w: &mut W, s: &str) -> std::io::Result<()> {
@@ -220,5 +357,83 @@ mod tests {
         std::fs::write(&p, b"NOTAMAGIC").unwrap();
         let man = Manifest::load("artifacts/manifest.json").unwrap();
         assert!(load(&man, &p).is_err());
+    }
+
+    #[test]
+    fn save_leaves_no_temp_files() {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
+        init_fp(&mut fp, 12);
+        let dir = std::env::temp_dir().join("qes_ckpt_atomic_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = dir.join("fp.ckpt");
+        save(&fp, &p).unwrap();
+        save(&fp, &p).unwrap(); // overwrite goes through rename too
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "stray temp files: {:?}", leftovers);
+        assert!(load(&man, &p).is_ok());
+    }
+
+    #[test]
+    fn short_read_reports_context() {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
+        init_fp(&mut fp, 13);
+        let dir = std::env::temp_dir().join("qes_ckpt_trunc_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = dir.join("fp.ckpt");
+        save(&fp, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let cut = dir.join("cut.ckpt");
+        std::fs::write(&cut, &bytes[..bytes.len() / 2]).unwrap();
+        let err = load(&man, &cut);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("corrupt or truncated"), "no context in: {}", msg);
+        assert!(msg.contains("cut.ckpt"), "no path in: {}", msg);
+    }
+
+    #[test]
+    fn train_checkpoint_roundtrip_and_truncation() {
+        let man = Manifest::load("artifacts/manifest.json").unwrap();
+        let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32).unwrap();
+        init_fp(&mut fp, 14);
+        let q = ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap();
+        let dir = std::env::temp_dir().join("qes_ckpt_train_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = dir.join("run.train.ckpt");
+        let blob = vec![3u8, 1, 4, 1, 5, 9, 2, 6];
+        save_train(&p, &q, 17, 42, "qes", &blob).unwrap();
+        let ts = load_train(&man, &p).unwrap();
+        assert_eq!(ts.rounds_done, 17);
+        assert_eq!(ts.seed, 42);
+        assert_eq!(ts.variant, "qes");
+        assert_eq!(ts.opt_state, blob);
+        for &li in q.lattice_indices() {
+            let name = q.entries[li].name.clone();
+            assert_eq!(
+                q.get(&name).unwrap().data.as_i8(),
+                ts.store.get(&name).unwrap().data.as_i8(),
+                "{}",
+                name
+            );
+        }
+        // Truncated file errors with context, never panics.
+        let bytes = std::fs::read(&p).unwrap();
+        let cut = dir.join("cut.train.ckpt");
+        std::fs::write(&cut, &bytes[..bytes.len() - 7]).unwrap();
+        let err = load_train(&man, &cut);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("corrupt or truncated training checkpoint"), "{}", msg);
+        // A param checkpoint is not a training checkpoint.
+        let pp = dir.join("plain.ckpt");
+        save(&q, &pp).unwrap();
+        assert!(load_train(&man, &pp).is_err());
     }
 }

@@ -107,6 +107,46 @@ impl LatticeOptimizer for AdaptiveReplayQes {
     fn name(&self) -> &'static str {
         "qes-adaptive-k"
     }
+
+    /// Inner replay state plus the controller's own evolution: the
+    /// current K, the step counter (phase of the adjust cadence) and
+    /// the pending spread window — all of it feeds future K decisions,
+    /// so a resumed run must see the same controller trajectory.
+    fn save_state(&self, w: &mut dyn std::io::Write) -> anyhow::Result<()> {
+        use crate::opt::state_io::*;
+        write_u8(w, crate::opt::state_tag::ADAPTIVE)?;
+        self.inner.save_state(w)?;
+        write_u32(w, self.inner.hyper.k_window as u32)?;
+        write_u64(w, self.step as u64)?;
+        write_u32(w, self.recent_spread.len() as u32)?;
+        for &s in &self.recent_spread {
+            write_f32(w, s)?;
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut dyn std::io::Read) -> anyhow::Result<()> {
+        use crate::opt::state_io::*;
+        expect_tag(r, crate::opt::state_tag::ADAPTIVE, "qes-adaptive-k")?;
+        self.inner.load_state(r)?;
+        let k = read_u32(r)? as usize;
+        anyhow::ensure!(
+            (self.k_min..=self.k_max).contains(&k),
+            "restored K={} outside [{}, {}]",
+            k,
+            self.k_min,
+            self.k_max
+        );
+        self.inner.hyper.k_window = k;
+        self.step = read_u64(r)? as usize;
+        let n = read_u32(r)? as usize;
+        anyhow::ensure!(n <= 1 << 16, "absurd spread window length {}", n);
+        self.recent_spread.clear();
+        for _ in 0..n {
+            self.recent_spread.push(read_f32(r)?);
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -69,6 +69,23 @@ impl LatticeOptimizer for QuzoOptimizer {
     fn name(&self) -> &'static str {
         "quzo"
     }
+
+    /// "Stateless" refers to the d-sized residual; the step counter
+    /// still salts the rounding stream and must survive resume for the
+    /// continued run to be bit-identical.
+    fn save_state(&self, w: &mut dyn std::io::Write) -> anyhow::Result<()> {
+        use crate::opt::state_io::*;
+        write_u8(w, crate::opt::state_tag::QUZO)?;
+        write_u64(w, self.step)?;
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut dyn std::io::Read) -> anyhow::Result<()> {
+        use crate::opt::state_io::*;
+        expect_tag(r, crate::opt::state_tag::QUZO, "quzo")?;
+        self.step = read_u64(r)?;
+        Ok(())
+    }
 }
 
 /// Salt decorrelating QuZO's update-rounding stream from perturbation

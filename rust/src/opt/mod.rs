@@ -104,6 +104,61 @@ pub fn normalize_fitness(raw: &[f32]) -> Vec<f32> {
     fit
 }
 
+/// Degraded-round fitness (fault-tolerant rollout plane): rank-normalize
+/// over the members actually scored. `rewards[m] = None` marks a member
+/// that permanently failed scoring; an antithetic pair counts only when
+/// BOTH halves scored (a surviving half alone would bias the gradient
+/// estimate, so incomplete pairs contribute exactly zero). Scored
+/// members are rank-normalized among themselves and rescaled by
+/// `n / n_scored`, which turns the update rule's fixed `1/(n·σ)`
+/// normalization into an effective `1/(n_scored·σ)`.
+///
+/// Determinism: the output is a pure function of the failed-member SET
+/// and the scored rewards (themselves pure functions of seeds), so a
+/// degraded round commits bit-identical deltas regardless of which
+/// worker, retry attempt, or arrival order produced the survivors. A
+/// fully-scored round returns exactly [`normalize_fitness`].
+///
+/// Errors when fewer than `ceil(min_quorum * pairs)` pairs scored.
+pub fn quorum_fitness(rewards: &[Option<f32>], min_quorum: f32) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(rewards.len() % 2 == 0, "population size must be even");
+    let pairs = rewards.len() / 2;
+    if pairs == 0 {
+        return Ok(Vec::new());
+    }
+    let complete: Vec<usize> = (0..pairs)
+        .filter(|&p| rewards[2 * p].is_some() && rewards[2 * p + 1].is_some())
+        .collect();
+    anyhow::ensure!(
+        complete.len() as f32 + 1e-6 >= min_quorum * pairs as f32,
+        "round below quorum: {}/{} antithetic pairs scored (min quorum {:.2})",
+        complete.len(),
+        pairs,
+        min_quorum
+    );
+    if complete.len() == pairs {
+        let raw: Vec<f32> = rewards.iter().map(|r| r.expect("all pairs complete")).collect();
+        return Ok(normalize_fitness(&raw));
+    }
+    let scored: Vec<f32> = complete
+        .iter()
+        .flat_map(|&p| {
+            [
+                rewards[2 * p].expect("pair checked complete"),
+                rewards[2 * p + 1].expect("pair checked complete"),
+            ]
+        })
+        .collect();
+    let norm = normalize_fitness(&scored);
+    let scale = rewards.len() as f32 / scored.len() as f32;
+    let mut out = vec![0.0f32; rewards.len()];
+    for (i, &p) in complete.iter().enumerate() {
+        out[2 * p] = norm[2 * i] * scale;
+        out[2 * p + 1] = norm[2 * i + 1] * scale;
+    }
+    Ok(out)
+}
+
 /// Per-step update statistics (paper Table 7 bottom: update ratio and
 /// boundary-hit ratio rho).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -151,6 +206,90 @@ pub trait LatticeOptimizer {
     fn state_bytes(&self) -> u64;
 
     fn name(&self) -> &'static str;
+
+    /// Serialize the optimizer's mutable state (residual slabs, replay
+    /// history, step counters — everything `update` evolves) for the
+    /// crash-consistent training checkpoint. Hyperparameters are NOT
+    /// included: a resumed run reconstructs the optimizer from config
+    /// and then restores state on top.
+    fn save_state(&self, w: &mut dyn std::io::Write) -> anyhow::Result<()>;
+
+    /// Restore state written by `save_state` of the same optimizer
+    /// type. Errors (rather than corrupting the run) on a tag or shape
+    /// mismatch.
+    fn load_state(&mut self, r: &mut dyn std::io::Read) -> anyhow::Result<()>;
+}
+
+/// One-byte discriminants guarding `save_state`/`load_state` blobs
+/// against cross-optimizer restores.
+pub(crate) mod state_tag {
+    pub const QUZO: u8 = 1;
+    pub const FULL_RESIDUAL: u8 = 2;
+    pub const SEED_REPLAY: u8 = 3;
+    pub const ADAPTIVE: u8 = 4;
+}
+
+/// Little-endian primitives for optimizer-state blobs. Deliberately
+/// minimal: the blob is embedded inside the training checkpoint, whose
+/// framing (magic, lengths, atomicity) lives in `model::checkpoint`.
+pub(crate) mod state_io {
+    use std::io::{Read, Write};
+
+    pub fn write_u8(w: &mut dyn Write, v: u8) -> anyhow::Result<()> {
+        w.write_all(&[v])?;
+        Ok(())
+    }
+
+    pub fn write_u32(w: &mut dyn Write, v: u32) -> anyhow::Result<()> {
+        w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn write_u64(w: &mut dyn Write, v: u64) -> anyhow::Result<()> {
+        w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn write_f32(w: &mut dyn Write, v: f32) -> anyhow::Result<()> {
+        w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn read_u8(r: &mut dyn Read) -> anyhow::Result<u8> {
+        let mut b = [0u8; 1];
+        r.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+
+    pub fn read_u32(r: &mut dyn Read) -> anyhow::Result<u32> {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn read_u64(r: &mut dyn Read) -> anyhow::Result<u64> {
+        let mut b = [0u8; 8];
+        r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn read_f32(r: &mut dyn Read) -> anyhow::Result<f32> {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        Ok(f32::from_le_bytes(b))
+    }
+
+    pub fn expect_tag(r: &mut dyn Read, want: u8, name: &str) -> anyhow::Result<()> {
+        let got = read_u8(r)?;
+        anyhow::ensure!(
+            got == want,
+            "optimizer state tag mismatch: expected {} ({}), found {}",
+            want,
+            name,
+            got
+        );
+        Ok(())
+    }
 }
 
 /// Evaluate the boundary gate for one lattice element without mutating it.
@@ -234,6 +373,55 @@ mod tests {
         let (_, boundary) = gate_apply(&mut w, 1, 7);
         assert!(boundary);
         assert_eq!(w, 7);
+    }
+
+    #[test]
+    fn quorum_full_round_matches_normalize() {
+        let raw = [3.0f32, 1.0, 2.0, 0.0, 5.0, 4.0];
+        let wrapped: Vec<Option<f32>> = raw.iter().map(|&r| Some(r)).collect();
+        let q = quorum_fitness(&wrapped, 0.5).unwrap();
+        assert_eq!(q, normalize_fitness(&raw), "fault-free path must be bit-identical");
+    }
+
+    #[test]
+    fn quorum_degraded_zeroes_incomplete_pairs_and_rescales() {
+        // pair 1 lost one half -> whole pair contributes zero
+        let rewards = vec![Some(3.0), Some(1.0), None, Some(9.0), Some(2.0), Some(0.0)];
+        let q = quorum_fitness(&rewards, 0.5).unwrap();
+        assert_eq!(q[2], 0.0);
+        assert_eq!(q[3], 0.0);
+        // scored members: ranks over [3,1,2,0] scaled by 6/4
+        let expect = normalize_fitness(&[3.0, 1.0, 2.0, 0.0]);
+        let scale = 6.0 / 4.0;
+        assert_eq!(q[0], expect[0] * scale);
+        assert_eq!(q[1], expect[1] * scale);
+        assert_eq!(q[4], expect[2] * scale);
+        assert_eq!(q[5], expect[3] * scale);
+        // degraded fitness still sums to ~0 (centered ranks)
+        assert!(q.iter().sum::<f32>().abs() < 1e-5);
+    }
+
+    #[test]
+    fn quorum_is_a_function_of_the_failed_set() {
+        // Same failed set, different hypothetical arrival stories — the
+        // input is the same, so this documents that nothing else (order,
+        // retries, workers) can influence the result.
+        let a = vec![Some(1.0), Some(2.0), None, None, Some(5.0), Some(3.0)];
+        let b = a.clone();
+        assert_eq!(quorum_fitness(&a, 0.5).unwrap(), quorum_fitness(&b, 0.5).unwrap());
+    }
+
+    #[test]
+    fn quorum_violation_errors() {
+        let rewards = vec![Some(1.0), Some(2.0), None, None, None, Some(3.0)];
+        // only 1/3 pairs complete; quorum 0.5 -> error
+        let err = quorum_fitness(&rewards, 0.5);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("quorum"));
+        // quorum 1/3 passes
+        assert!(quorum_fitness(&rewards, 0.33).is_ok());
+        // odd population rejected
+        assert!(quorum_fitness(&[Some(1.0)], 0.0).is_err());
     }
 
     #[test]

@@ -107,6 +107,54 @@ impl LatticeOptimizer for QesFullResidual {
     fn name(&self) -> &'static str {
         "qes-full-residual"
     }
+
+    /// State = the FP16 residual slabs, raw bits, one slab per shard.
+    /// An unshaped optimizer (no update run yet) writes zero shards.
+    fn save_state(&self, w: &mut dyn std::io::Write) -> anyhow::Result<()> {
+        use crate::opt::state_io::*;
+        write_u8(w, crate::opt::state_tag::FULL_RESIDUAL)?;
+        write_u32(w, self.e.len() as u32)?;
+        for slab in &self.e {
+            write_u64(w, slab.len() as u64)?;
+            for &h in slab {
+                w.write_all(&h.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut dyn std::io::Read) -> anyhow::Result<()> {
+        use crate::opt::state_io::*;
+        expect_tag(r, crate::opt::state_tag::FULL_RESIDUAL, "qes-full-residual")?;
+        let n_shards = read_u32(r)? as usize;
+        anyhow::ensure!(n_shards <= 1 << 20, "absurd residual shard count {}", n_shards);
+        let mut e = Vec::with_capacity(n_shards);
+        let mut total = 0usize;
+        for _ in 0..n_shards {
+            let len = read_u64(r)? as usize;
+            total = total
+                .checked_add(len)
+                .filter(|&t| t <= self.d)
+                .ok_or_else(|| anyhow::anyhow!("residual slabs exceed lattice dim {}", self.d))?;
+            let mut slab = vec![0u16; len];
+            let mut buf = [0u8; 2];
+            for h in slab.iter_mut() {
+                r.read_exact(&mut buf)?;
+                *h = u16::from_le_bytes(buf);
+            }
+            e.push(slab);
+        }
+        anyhow::ensure!(
+            e.is_empty() || total == self.d,
+            "residual covers {}/{} lattice elements",
+            total,
+            self.d
+        );
+        // `ensure_shards` on the next update re-validates the slab
+        // shapes against the live store's plan.
+        self.e = e;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

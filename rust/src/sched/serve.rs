@@ -22,8 +22,8 @@
 //! from stdin or a TCP connection through an mpsc channel.
 
 use std::collections::{BTreeMap, HashMap};
-use std::io::Write;
-use std::sync::mpsc::{Receiver, TryRecvError};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 
 use anyhow::{Context, Result};
 
@@ -86,12 +86,83 @@ pub struct ServeStats {
     pub errors: u64,
 }
 
-/// Drive the scheduler against a line channel until the channel closes
-/// AND every accepted request has completed, writing one response line
-/// per finished generation (and one error line per rejected request).
+/// One unit of intake from a connection pump: either a complete line or
+/// a marker that a line blew past the reader's length cap (the payload
+/// is the cap, for the error message — the excess bytes were discarded
+/// at the socket, never buffered).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Intake {
+    Line(String),
+    Oversized(usize),
+}
+
+/// Read `reader` to EOF, splitting on `\n` and sending each line as
+/// [`Intake::Line`]. A line longer than `max_line` bytes is discarded as
+/// it streams past (bounded memory) and reported once as
+/// [`Intake::Oversized`]. A read error — including a socket read
+/// deadline firing (`WouldBlock`/`TimedOut`) — ends the pump; a
+/// trailing unterminated line at EOF is still delivered.
+pub fn pump_lines<R: Read>(reader: R, max_line: usize, tx: &Sender<Intake>) {
+    let mut r = BufReader::new(reader);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut over = false;
+    let mut eof = false;
+    while !eof {
+        let mut events: Vec<Intake> = Vec::new();
+        let data = {
+            let chunk = match r.fill_buf() {
+                Ok(c) => c,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                // read deadline or hard I/O error: drop any partial line
+                Err(_) => return,
+            };
+            if chunk.is_empty() {
+                eof = true;
+            }
+            chunk.to_vec()
+        };
+        let mut start = 0usize;
+        while let Some(pos) = data[start..].iter().position(|&b| b == b'\n') {
+            let part = &data[start..start + pos];
+            if over || buf.len() + part.len() > max_line {
+                events.push(Intake::Oversized(max_line));
+            } else {
+                buf.extend_from_slice(part);
+                events.push(Intake::Line(String::from_utf8_lossy(&buf).into_owned()));
+            }
+            buf.clear();
+            over = false;
+            start += pos + 1;
+        }
+        let tail = &data[start..];
+        if over || buf.len() + tail.len() > max_line {
+            over = true;
+            buf.clear();
+        } else {
+            buf.extend_from_slice(tail);
+        }
+        r.consume(data.len());
+        for ev in events {
+            if tx.send(ev).is_err() {
+                return; // consumer gone
+            }
+        }
+    }
+    // unterminated final line
+    if over {
+        let _ = tx.send(Intake::Oversized(max_line));
+    } else if !buf.is_empty() {
+        let _ = tx.send(Intake::Line(String::from_utf8_lossy(&buf).into_owned()));
+    }
+}
+
+/// Drive the scheduler against an intake channel until the channel
+/// closes AND every accepted request has completed, writing one response
+/// line per finished generation (and one error line per rejected or
+/// oversized request).
 pub fn serve_loop<W: Write>(
     sched: &mut Scheduler<'_>,
-    lines: &Receiver<String>,
+    lines: &Receiver<Intake>,
     out: &mut W,
 ) -> Result<ServeStats> {
     let default_max_new = sched.cfg().t_max;
@@ -103,9 +174,9 @@ pub fn serve_loop<W: Write>(
         // intake: everything already queued, without blocking the batch
         while open {
             match lines.try_recv() {
-                Ok(line) => submit_line(
+                Ok(intake) => submit_intake(
                     sched,
-                    &line,
+                    intake,
                     default_max_new,
                     &mut ids,
                     &mut next_id,
@@ -132,9 +203,9 @@ pub fn serve_loop<W: Write>(
             }
             // nothing in flight: block for the next request
             match lines.recv() {
-                Ok(line) => submit_line(
+                Ok(intake) => submit_intake(
                     sched,
-                    &line,
+                    intake,
                     default_max_new,
                     &mut ids,
                     &mut next_id,
@@ -148,6 +219,37 @@ pub fn serve_loop<W: Write>(
         sched.step()?;
     }
     Ok(stats)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn submit_intake<W: Write>(
+    sched: &mut Scheduler<'_>,
+    intake: Intake,
+    default_max_new: usize,
+    ids: &mut HashMap<usize, String>,
+    next_id: &mut usize,
+    out: &mut W,
+    stats: &mut ServeStats,
+) -> Result<()> {
+    match intake {
+        Intake::Line(line) => {
+            submit_line(sched, &line, default_max_new, ids, next_id, out, stats)
+        }
+        Intake::Oversized(cap) => {
+            let default_id = *next_id;
+            *next_id += 1;
+            writeln!(
+                out,
+                "{}",
+                error_line(
+                    &default_id.to_string(),
+                    &format!("request line exceeds {} bytes", cap),
+                )
+            )?;
+            stats.errors += 1;
+            Ok(())
+        }
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -215,6 +317,39 @@ mod tests {
         assert!(parse_request(r#"{"max_new": 4}"#, 0, 8).is_err());
         let e = parse_request(r#"{"prompt": "héllo"}"#, 0, 8).unwrap_err();
         assert!(format!("{}", e).contains("vocabulary"), "{}", e);
+    }
+
+    #[test]
+    fn pump_lines_splits_caps_and_flushes_tail() {
+        use std::sync::mpsc::channel;
+        // normal lines split on \n, oversized line reported once, excess
+        // discarded, unterminated tail flushed at EOF
+        let input = format!("short\n{}\nafter\ntail", "x".repeat(100));
+        let (tx, rx) = channel();
+        pump_lines(input.as_bytes(), 16, &tx);
+        drop(tx);
+        let got: Vec<Intake> = rx.iter().collect();
+        assert_eq!(
+            got,
+            vec![
+                Intake::Line("short".to_string()),
+                Intake::Oversized(16),
+                Intake::Line("after".to_string()),
+                Intake::Line("tail".to_string()),
+            ]
+        );
+
+        // a line straddling the cap exactly at the boundary still fits
+        let (tx, rx) = channel();
+        pump_lines("abcd\n".as_bytes(), 4, &tx);
+        drop(tx);
+        assert_eq!(rx.iter().collect::<Vec<_>>(), vec![Intake::Line("abcd".to_string())]);
+
+        // oversized unterminated tail is reported, not silently dropped
+        let (tx, rx) = channel();
+        pump_lines("yyyyyy".as_bytes(), 3, &tx);
+        drop(tx);
+        assert_eq!(rx.iter().collect::<Vec<_>>(), vec![Intake::Oversized(3)]);
     }
 
     #[test]

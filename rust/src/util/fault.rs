@@ -1,0 +1,272 @@
+//! Deterministic fault-injection plan for the rollout plane.
+//!
+//! A `FaultPlan` is a pure function from *logical counters* to fault
+//! decisions — no wall clock, no global state. Every decision hashes
+//! `(seed, salt, key…)` through [`SplitMix64`](crate::rng::SplitMix64)
+//! and compares a uniform draw against the configured probability, so a
+//! plan replays identically across runs, worker counts and thread
+//! interleavings.
+//!
+//! Two fault families with deliberately different keying:
+//!
+//! * **Eval faults** are keyed on `(round_id, member, attempt)` only.
+//!   Whether member `m` of round `r` fails its `a`-th scoring attempt
+//!   does not depend on which worker ran it — so the set of
+//!   *permanently failed* members (all attempts faulted) is a pure
+//!   function of the plan, independent of scheduling. This is what
+//!   makes degraded rounds reproducible inline (no pool at all).
+//! * **Transient faults** (worker kills, dropped sends, delays) are
+//!   keyed on `(worker, incarnation, counter)`. They perturb
+//!   scheduling and delivery but never the committed results; a
+//!   respawned worker is a fresh incarnation and draws fresh
+//!   decisions, so with p < 1 the pool always makes progress.
+
+use std::time::Duration;
+
+use crate::rng::SplitMix64;
+
+const SALT_EVAL: u64 = 0x6f61_5f65_7661_6c21;
+const SALT_KILL: u64 = 0x6b69_6c6c_5f77_6b72;
+const SALT_DROP: u64 = 0x6472_6f70_5f73_6e64;
+const SALT_DELAY: u64 = 0x6465_6c61_795f_7278;
+
+/// Retry budget shared by the supervised pool and the inline
+/// fault-simulation path in `finetune` — both must agree on how many
+/// attempts a member gets before it is declared permanently failed, or
+/// the failed-member set (and therefore the committed lattice) would
+/// differ between the two execution topologies.
+pub const DEFAULT_MAX_RETRIES: u32 = 3;
+
+/// Seeded, counter-keyed fault injection plan. All probabilities are
+/// in `[0, 1]`; a default plan (all zero) injects nothing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Probability a member-scoring attempt errors (keyed on
+    /// round/member/attempt — worker-independent).
+    pub p_eval: f32,
+    /// Probability a worker panics before running a received job.
+    pub p_kill: f32,
+    /// Probability a scored result is silently dropped before send.
+    pub p_drop: f32,
+    /// Probability a result send is delayed by `delay_ms`.
+    pub p_delay: f32,
+    pub delay_ms: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            p_eval: 0.0,
+            p_kill: 0.0,
+            p_drop: 0.0,
+            p_delay: 0.0,
+            delay_ms: 10,
+        }
+    }
+}
+
+impl FaultPlan {
+    pub fn is_active(&self) -> bool {
+        self.p_eval > 0.0 || self.p_kill > 0.0 || self.p_drop > 0.0 || self.p_delay > 0.0
+    }
+
+    fn decide(&self, salt: u64, keys: &[u64], p: f32) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        let mut h = SplitMix64::new(self.seed ^ salt);
+        let mut acc = h.next_u64();
+        for &k in keys {
+            let mut m = SplitMix64::new(acc ^ k);
+            acc = m.next_u64();
+        }
+        let mut draw = SplitMix64::new(acc);
+        draw.uniform01() < p as f64
+    }
+
+    /// Does scoring attempt `attempt` of `member` in round `round_id`
+    /// fail? Worker-independent by construction.
+    pub fn eval_fault(&self, round_id: u64, member: usize, attempt: u32) -> bool {
+        self.decide(
+            SALT_EVAL,
+            &[round_id, member as u64, attempt as u64],
+            self.p_eval,
+        )
+    }
+
+    /// Is `member` of `round_id` permanently failed under this plan —
+    /// i.e. do ALL attempts `0..=max_retries` fault? Pure function of
+    /// the plan; the inline execution path in `finetune` uses this to
+    /// reproduce exactly the degraded rounds a pool run commits.
+    pub fn member_fails(&self, round_id: u64, member: usize, max_retries: u32) -> bool {
+        (0..=max_retries).all(|a| self.eval_fault(round_id, member, a))
+    }
+
+    /// Does worker `worker` (incarnation `incarnation`) panic upon
+    /// receiving its `jobs_seen`-th job?
+    pub fn worker_kill(&self, worker: usize, incarnation: u32, jobs_seen: u64) -> bool {
+        self.decide(
+            SALT_KILL,
+            &[worker as u64, incarnation as u64, jobs_seen],
+            self.p_kill,
+        )
+    }
+
+    /// Is the `sent`-th result of worker `worker` silently dropped?
+    pub fn drop_result(&self, worker: usize, incarnation: u32, sent: u64) -> bool {
+        self.decide(
+            SALT_DROP,
+            &[worker as u64, incarnation as u64, sent],
+            self.p_drop,
+        )
+    }
+
+    /// Delay (if any) before sending the `sent`-th result of `worker`.
+    pub fn delay(&self, worker: usize, incarnation: u32, sent: u64) -> Option<Duration> {
+        if self.decide(
+            SALT_DELAY,
+            &[worker as u64, incarnation as u64, sent],
+            self.p_delay,
+        ) {
+            Some(Duration::from_millis(self.delay_ms))
+        } else {
+            None
+        }
+    }
+
+    /// Parse a spec like `seed=7,eval=0.2,kill=0.1,drop=0.1,delay=0.1,delay_ms=20`.
+    /// Unknown keys error; omitted keys keep their defaults.
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault spec entry {:?} is not key=value", part))?;
+            let fv = || -> anyhow::Result<f32> {
+                let f: f32 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad value {:?} for fault key {:?}", v, k))?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&f),
+                    "fault probability {}={} out of [0,1]",
+                    k,
+                    f
+                );
+                Ok(f)
+            };
+            match k {
+                "seed" => {
+                    plan.seed = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad value {:?} for fault key seed", v))?
+                }
+                "eval" => plan.p_eval = fv()?,
+                "kill" => plan.p_kill = fv()?,
+                "drop" => plan.p_drop = fv()?,
+                "delay" => plan.p_delay = fv()?,
+                "delay_ms" => {
+                    plan.delay_ms = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad value {:?} for fault key delay_ms", v))?
+                }
+                _ => anyhow::bail!("unknown fault key {:?} in QES_FAULTS spec", k),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Read a plan from the `QES_FAULTS` environment variable; an unset
+    /// or empty variable yields the inert default plan.
+    pub fn from_env() -> anyhow::Result<FaultPlan> {
+        match std::env::var("QES_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => FaultPlan::parse(&s),
+            _ => Ok(FaultPlan::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic() {
+        let p = FaultPlan {
+            seed: 42,
+            p_eval: 0.3,
+            p_kill: 0.2,
+            p_drop: 0.2,
+            p_delay: 0.5,
+            delay_ms: 7,
+        };
+        for m in 0..64usize {
+            assert_eq!(p.eval_fault(3, m, 1), p.eval_fault(3, m, 1));
+            assert_eq!(p.worker_kill(1, 2, m as u64), p.worker_kill(1, 2, m as u64));
+            assert_eq!(p.drop_result(0, 0, m as u64), p.drop_result(0, 0, m as u64));
+            assert_eq!(p.delay(2, 1, m as u64), p.delay(2, 1, m as u64));
+        }
+        // Different seeds must decorrelate at least one decision over a
+        // reasonable key range.
+        let q = FaultPlan { seed: 43, ..p };
+        assert!((0..256usize).any(|m| p.eval_fault(0, m, 0) != q.eval_fault(0, m, 0)));
+    }
+
+    #[test]
+    fn inert_plan_never_fires() {
+        let p = FaultPlan::default();
+        assert!(!p.is_active());
+        for m in 0..128usize {
+            assert!(!p.eval_fault(0, m, 0));
+            assert!(!p.worker_kill(0, 0, m as u64));
+            assert!(!p.drop_result(0, 0, m as u64));
+            assert!(p.delay(0, 0, m as u64).is_none());
+        }
+    }
+
+    #[test]
+    fn member_fails_matches_attempt_conjunction() {
+        let p = FaultPlan { seed: 9, p_eval: 0.6, ..FaultPlan::default() };
+        for r in 0..4u64 {
+            for m in 0..32usize {
+                let manual = (0..=2u32).all(|a| p.eval_fault(r, m, a));
+                assert_eq!(p.member_fails(r, m, 2), manual);
+            }
+        }
+        // With p=0.6 and 3 attempts, some members fail and some don't
+        // over a modest sweep — the plan is neither all-pass nor
+        // all-fail.
+        let fails = (0..64usize).filter(|&m| p.member_fails(0, m, 2)).count();
+        assert!(fails > 0 && fails < 64, "fails={}", fails);
+    }
+
+    #[test]
+    fn empirical_rate_tracks_probability() {
+        let p = FaultPlan { seed: 1234, p_eval: 0.25, ..FaultPlan::default() };
+        let n = 4000usize;
+        let hits = (0..n).filter(|&m| p.eval_fault(0, m, 0)).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.05, "rate={}", rate);
+    }
+
+    #[test]
+    fn parse_roundtrip_and_errors() {
+        let p = FaultPlan::parse("seed=7,eval=0.2,kill=0.1,drop=0.05,delay=0.3,delay_ms=20")
+            .unwrap();
+        assert_eq!(p.seed, 7);
+        assert!((p.p_eval - 0.2).abs() < 1e-6);
+        assert!((p.p_kill - 0.1).abs() < 1e-6);
+        assert!((p.p_drop - 0.05).abs() < 1e-6);
+        assert!((p.p_delay - 0.3).abs() < 1e-6);
+        assert_eq!(p.delay_ms, 20);
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        assert!(FaultPlan::parse("eval=2.0").is_err());
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("eval").is_err());
+    }
+}

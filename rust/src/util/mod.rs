@@ -7,6 +7,7 @@
 pub mod args;
 pub mod bench;
 pub mod f16;
+pub mod fault;
 pub mod json;
 pub mod parallel;
 pub mod prop;

@@ -1,0 +1,371 @@
+//! Chaos suite for the fault-tolerant rollout plane (tier-2; the CI
+//! chaos leg also re-runs tier-1 under a `QES_FAULTS` matrix).
+//!
+//! The properties under test are the PR's determinism contract:
+//!
+//! 1. Transient faults (worker kills, dropped sends, delays) may cost
+//!    retries and respawns but NEVER change the committed lattice — it
+//!    stays bit-identical to a fault-free inline run, for any worker
+//!    count.
+//! 2. Eval faults commit a degraded round whose failed-member set is a
+//!    pure function of the `FaultPlan` — inline and pool topologies
+//!    agree bit-for-bit, for any worker count and arrival order.
+//! 3. Below-quorum rounds error identically on both topologies.
+//! 4. A run interrupted at a checkpoint and resumed is bit-identical to
+//!    an uninterrupted one, for every optimizer variant.
+
+use std::sync::Arc;
+
+use qes::coordinator::{
+    finetune_resumable, EngineSet, FinetuneCfg, GenWorkload, Session, SupervisorCfg,
+    TrainCkptCfg, Variant, WorkerPool, Workload,
+};
+use qes::model::{checkpoint, init::init_fp, ParamStore, ShardedParamStore};
+use qes::opt::EsHyper;
+use qes::quant::Format;
+use qes::rng::SplitMix64;
+use qes::runtime::{BackendPolicy, Manifest};
+use qes::tasks::gen_task;
+use qes::util::fault::{FaultPlan, DEFAULT_MAX_RETRIES};
+
+const GENS: usize = 3;
+const PAIRS: usize = 2;
+
+fn manifest() -> Manifest {
+    Manifest::load("artifacts/manifest.json").expect("run `make artifacts` first")
+}
+
+fn quant_store(man: &Manifest, seed: u64) -> ParamStore {
+    let mut fp = ParamStore::from_manifest(man, "nano", Format::Fp32).unwrap();
+    init_fp(&mut fp, seed);
+    ParamStore::quantize_from(&fp, man, Format::Int4, None).unwrap()
+}
+
+fn base_cfg() -> FinetuneCfg {
+    FinetuneCfg {
+        hyper: EsHyper { sigma: 0.05, alpha: 0.3, gamma: 0.9, pairs: PAIRS, k_window: 3 },
+        gens: GENS,
+        tau: 0.0,
+        batches_per_gen: 1,
+        train_pool: 16,
+        eval_every: 0,
+        eval_n: 4,
+        seed: 5,
+        verbose: false,
+        ..Default::default()
+    }
+}
+
+/// Supervision tuned for injected faults in a test: short deadlines, a
+/// deep respawn budget.
+fn chaos_sup() -> SupervisorCfg {
+    SupervisorCfg {
+        deadline_ms: 200,
+        max_deadline_ms: 1600,
+        poll_ms: 20,
+        max_respawns: 64,
+        ..SupervisorCfg::default()
+    }
+}
+
+fn flat_lattice(store: &ParamStore) -> Vec<i8> {
+    store.lattice_i8().iter().flat_map(|t| t.iter().copied()).collect()
+}
+
+/// One fine-tuning run: inline when `workers == 0`, on a supervised
+/// pool (spawned with `pool_faults`) otherwise. Returns the per-round
+/// failed-member counts and the committed lattice.
+fn run(
+    man: &Manifest,
+    q: &ParamStore,
+    cfg: &FinetuneCfg,
+    variant: Variant,
+    workers: usize,
+    pool_faults: FaultPlan,
+) -> anyhow::Result<(Vec<usize>, Vec<i8>)> {
+    let session = Session::new(man, "nano", Format::Int4, EngineSet::gen_only())?;
+    let workload: Arc<dyn Workload> = Arc::new(GenWorkload::new(
+        gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec)?,
+        &session.cfg,
+        cfg,
+    ));
+    let pool = if workers > 0 {
+        Some(WorkerPool::spawn_with(
+            workers,
+            "artifacts/manifest.json",
+            "nano",
+            Format::Int4,
+            BackendPolicy::Auto,
+            workload.clone(),
+            chaos_sup(),
+            pool_faults,
+        )?)
+    } else {
+        None
+    };
+    let mut sharded = ShardedParamStore::with_default_shards(q.clone())?;
+    let res = finetune_resumable(
+        &session,
+        workload.as_ref(),
+        &mut sharded,
+        variant,
+        cfg,
+        pool.as_ref(),
+        None,
+        None,
+    );
+    // Drop (don't `shutdown()`) the pool: with injected kills, workers
+    // that panicked after their last result would fail an orderly
+    // shutdown even though the run itself committed correctly.
+    drop(pool);
+    let log = res?;
+    let fails = log.entries.iter().map(|e| e.failed_members).collect();
+    Ok((fails, flat_lattice(&sharded.materialize())))
+}
+
+/// The failed-member set the plan dictates, per round — the ground
+/// truth both topologies must converge to.
+fn expected_failures(plan: &FaultPlan) -> Vec<usize> {
+    (0..GENS as u64)
+        .map(|r| (0..2 * PAIRS).filter(|&m| plan.member_fails(r, m, DEFAULT_MAX_RETRIES)).count())
+        .collect()
+}
+
+/// Find a plan seed whose eval faults permanently fail at least one
+/// member (so the degraded-round tests can't pass vacuously) while
+/// leaving at least one complete pair per round (so min_quorum 0.5
+/// still commits).
+fn degrading_plan() -> FaultPlan {
+    for seed in 1..500u64 {
+        let plan = FaultPlan { seed, p_eval: 0.6, ..FaultPlan::default() };
+        let per_round = expected_failures(&plan);
+        let quorate = (0..GENS as u64).all(|r| {
+            (0..PAIRS).any(|p| {
+                !plan.member_fails(r, 2 * p, DEFAULT_MAX_RETRIES)
+                    && !plan.member_fails(r, 2 * p + 1, DEFAULT_MAX_RETRIES)
+            })
+        });
+        if per_round.iter().sum::<usize>() > 0 && quorate {
+            return plan;
+        }
+    }
+    panic!("no seed in 1..500 yields a degraded-but-quorate plan");
+}
+
+#[test]
+fn transient_faults_never_change_the_committed_lattice() {
+    let man = manifest();
+    let q = quant_store(&man, 12);
+    let cfg = base_cfg();
+    let (fail0, want) = run(&man, &q, &cfg, Variant::Qes, 0, FaultPlan::default()).unwrap();
+    assert_eq!(fail0, vec![0; GENS]);
+
+    // kills, drops and delays only — no eval faults, so no member may
+    // permanently fail and recovery must reproduce the exact lattice
+    let plan = FaultPlan {
+        seed: 3,
+        p_kill: 0.08,
+        p_drop: 0.10,
+        p_delay: 0.15,
+        delay_ms: 5,
+        ..FaultPlan::default()
+    };
+    for workers in [1usize, 2, 4] {
+        let (fails, got) = run(&man, &q, &cfg, Variant::Qes, workers, plan).unwrap();
+        assert_eq!(fails, vec![0; GENS], "transient faults failed a member ({} workers)", workers);
+        assert_eq!(got, want, "lattice diverged under transient faults ({} workers)", workers);
+    }
+}
+
+#[test]
+fn degraded_rounds_commit_identically_across_topologies() {
+    let man = manifest();
+    let q = quant_store(&man, 12);
+    let plan = degrading_plan();
+    let expected = expected_failures(&plan);
+    assert!(expected.iter().sum::<usize>() > 0);
+
+    let mut cfg = base_cfg();
+    cfg.min_quorum = 0.5;
+    cfg.faults = plan;
+    // inline: the leader simulates exactly the plan's failed set
+    let (fail_inline, want) = run(&man, &q, &cfg, Variant::Qes, 0, plan).unwrap();
+    assert_eq!(fail_inline, expected, "inline failed set diverged from the plan");
+
+    // pool: retries/re-dispatch/arrival order must converge to the same
+    // set and the same bits, for any worker count
+    for workers in [1usize, 2, 4] {
+        let (fails, got) = run(&man, &q, &cfg, Variant::Qes, workers, plan).unwrap();
+        assert_eq!(fails, expected, "pool failed set diverged ({} workers)", workers);
+        assert_eq!(got, want, "degraded lattice diverged ({} workers)", workers);
+    }
+}
+
+#[test]
+fn below_quorum_rounds_error_on_every_topology() {
+    let man = manifest();
+    let q = quant_store(&man, 12);
+    let plan = degrading_plan();
+    let mut cfg = base_cfg();
+    // full quorum demanded + a plan that certainly fails members
+    cfg.min_quorum = 1.0;
+    cfg.faults = plan;
+    for workers in [0usize, 2] {
+        let err = run(&man, &q, &cfg, Variant::Qes, workers, plan);
+        let msg = format!("{:#}", err.expect_err("degraded round must violate min_quorum=1"));
+        assert!(msg.contains("below quorum"), "unhelpful quorum error: {}", msg);
+    }
+}
+
+#[test]
+fn interrupted_and_resumed_runs_are_bit_identical() {
+    let man = manifest();
+    let q = quant_store(&man, 20);
+    let dir = std::env::temp_dir().join(format!("qes_chaos_{}", std::process::id()));
+    let session = Session::new(&man, "nano", Format::Int4, EngineSet::gen_only()).unwrap();
+    let mut cfg = base_cfg();
+    cfg.gens = 4;
+    let workload = GenWorkload::new(
+        gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec).unwrap(),
+        &session.cfg,
+        &cfg,
+    );
+
+    for variant in [Variant::Qes, Variant::QesFullResidual, Variant::Quzo] {
+        let full_path = dir.join(format!("{}_full.train.ckpt", variant.name()));
+        let part_path = dir.join(format!("{}_part.train.ckpt", variant.name()));
+
+        // uninterrupted reference, checkpointing every round
+        let mut s_full = ShardedParamStore::with_default_shards(q.clone()).unwrap();
+        finetune_resumable(
+            &session,
+            &workload,
+            &mut s_full,
+            variant,
+            &cfg,
+            None,
+            Some(&TrainCkptCfg { path: full_path.clone(), every: 1 }),
+            None,
+        )
+        .unwrap();
+
+        // "crash" after round 2 — run only half the generations
+        let cfg_half = FinetuneCfg { gens: 2, ..cfg.clone() };
+        let mut s_part = ShardedParamStore::with_default_shards(q.clone()).unwrap();
+        finetune_resumable(
+            &session,
+            &workload,
+            &mut s_part,
+            variant,
+            &cfg_half,
+            None,
+            Some(&TrainCkptCfg { path: part_path.clone(), every: 1 }),
+            None,
+        )
+        .unwrap();
+
+        // resume from the surviving checkpoint and finish the run
+        let ts = checkpoint::load_train(&man, &part_path).unwrap();
+        assert_eq!(ts.rounds_done, 2);
+        assert_eq!(ts.variant, variant.name());
+        let mut s_res = ShardedParamStore::with_default_shards(ts.store.clone()).unwrap();
+        finetune_resumable(
+            &session,
+            &workload,
+            &mut s_res,
+            variant,
+            &cfg,
+            None,
+            Some(&TrainCkptCfg { path: part_path.clone(), every: 1 }),
+            Some(&ts),
+        )
+        .unwrap();
+
+        assert_eq!(
+            flat_lattice(&s_full.materialize()),
+            flat_lattice(&s_res.materialize()),
+            "resumed {} run diverged from uninterrupted run",
+            variant.name()
+        );
+        // the resumed run's final checkpoint equals the reference run's
+        let a = checkpoint::load_train(&man, &full_path).unwrap();
+        let b = checkpoint::load_train(&man, &part_path).unwrap();
+        assert_eq!(a.rounds_done, b.rounds_done);
+        assert_eq!(a.opt_state, b.opt_state);
+        assert_eq!(flat_lattice(&a.store), flat_lattice(&b.store));
+    }
+
+    // crash consistency: the checkpoint directory holds no stray temp
+    // files after all those atomic saves
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let name = entry.unwrap().file_name().to_string_lossy().into_owned();
+        assert!(!name.contains(".tmp"), "stray temp file {}", name);
+    }
+}
+
+#[test]
+fn resume_rejects_mismatched_configuration() {
+    let man = manifest();
+    let q = quant_store(&man, 20);
+    let dir = std::env::temp_dir().join(format!("qes_chaos_guard_{}", std::process::id()));
+    let session = Session::new(&man, "nano", Format::Int4, EngineSet::gen_only()).unwrap();
+    let mut cfg = base_cfg();
+    cfg.gens = 2;
+    let workload = GenWorkload::new(
+        gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec).unwrap(),
+        &session.cfg,
+        &cfg,
+    );
+    let path = dir.join("guard.train.ckpt");
+    let mut s = ShardedParamStore::with_default_shards(q.clone()).unwrap();
+    finetune_resumable(
+        &session,
+        &workload,
+        &mut s,
+        Variant::Qes,
+        &cfg,
+        None,
+        Some(&TrainCkptCfg { path: path.clone(), every: 1 }),
+        None,
+    )
+    .unwrap();
+    let ts = checkpoint::load_train(&man, &path).unwrap();
+
+    // wrong seed
+    let mut bad = cfg.clone();
+    bad.seed = 6;
+    let mut s2 = ShardedParamStore::with_default_shards(ts.store.clone()).unwrap();
+    let err = finetune_resumable(
+        &session, &workload, &mut s2, Variant::Qes, &bad, None, None, Some(&ts),
+    );
+    assert!(format!("{:#}", err.unwrap_err()).contains("seed"));
+
+    // wrong variant
+    let mut s3 = ShardedParamStore::with_default_shards(ts.store.clone()).unwrap();
+    let err = finetune_resumable(
+        &session, &workload, &mut s3, Variant::Quzo, &cfg, None, None, Some(&ts),
+    );
+    assert!(format!("{:#}", err.unwrap_err()).contains("variant"));
+
+    // a torn write (truncated file) is a contextual error, not a panic
+    let bytes = std::fs::read(&path).unwrap();
+    let cut = dir.join("torn.train.ckpt");
+    std::fs::write(&cut, &bytes[..bytes.len() / 2]).unwrap();
+    let err = checkpoint::load_train(&man, &cut).unwrap_err();
+    assert!(format!("{:#}", err).contains("corrupt or truncated"));
+}
+
+/// The inline fault simulation must agree with a direct evaluation of
+/// the plan — a pure-function sanity check that needs no model at all.
+#[test]
+fn failed_set_is_a_pure_function_of_the_plan() {
+    let plan = FaultPlan { seed: 41, p_eval: 0.5, ..FaultPlan::default() };
+    let mut rng = SplitMix64::new(7);
+    for _ in 0..200 {
+        let r = rng.next_u64() % 64;
+        let m = (rng.next_u64() % 16) as usize;
+        let a = plan.member_fails(r, m, DEFAULT_MAX_RETRIES);
+        let b = (0..=DEFAULT_MAX_RETRIES).all(|att| plan.eval_fault(r, m, att));
+        assert_eq!(a, b);
+    }
+}

@@ -303,24 +303,33 @@ fn perturbed_rollouts_match_between_inline_and_pool_topology() {
             gen_seed: 77,
             pairs: 2,
             sigma: 0.05,
-            members: vec![0, 2],
+            members: vec![(0, 0), (2, 0)],
             round: round.clone(),
+            round_id: 0,
         },
         qes::coordinator::Job::Eval {
             snapshot,
             gen_seed: 77,
             pairs: 2,
             sigma: 0.05,
-            members: vec![1, 3],
+            members: vec![(1, 0), (3, 0)],
             round,
+            round_id: 0,
         },
     ];
-    let mut pooled = vec![0.0f32; 4];
-    for r in pool.run_round(jobs, 4).unwrap() {
-        pooled[r.member] = r.reward.unwrap();
-    }
+    let outcome = pool.run_round(jobs, 4).unwrap();
+    assert!(outcome.failed.is_empty(), "round reported permanently failed members");
+    let pooled: Vec<f32> = outcome.rewards.iter().map(|r| r.unwrap()).collect();
     assert_eq!(inline, pooled, "pool topology changed rewards");
-    pool.shutdown().unwrap();
+    // `spawn` (vs `spawn_with`) reads QES_FAULTS: under the CI chaos
+    // matrix this same test doubles as a recovery check — rewards above
+    // must STILL match bit-for-bit, but injected worker kills make an
+    // orderly shutdown legitimately report the panic
+    let faults_active = qes::util::fault::FaultPlan::from_env().unwrap().is_active();
+    match pool.shutdown() {
+        Ok(()) => {}
+        Err(e) => assert!(faults_active, "clean pool shutdown failed: {:#}", e),
+    }
 }
 
 #[test]
@@ -339,6 +348,7 @@ fn finetune_smoke_all_variants_respect_lattice_and_log() {
         eval_n: 8,
         seed: 5,
         verbose: false,
+        ..Default::default()
     };
     let workload = GenWorkload::new(
         gen_task("countdown", session.cfg.s_prompt, session.cfg.t_dec).unwrap(),

@@ -356,24 +356,29 @@ fn serve_loop_end_to_end() {
     scfg.kernel = Some(KernelKind::Scalar);
     let mut sched = Scheduler::new(&nb, &view, None, None, scfg).unwrap();
 
-    let (tx, rx) = std::sync::mpsc::channel::<String>();
+    let (tx, rx) = std::sync::mpsc::channel::<serve::Intake>();
     for (i, p) in probs.iter().enumerate() {
-        tx.send(format!(r#"{{"prompt": "{}", "id": "req-{}"}}"#, p.prompt, i)).unwrap();
+        tx.send(serve::Intake::Line(format!(r#"{{"prompt": "{}", "id": "req-{}"}}"#, p.prompt, i)))
+            .unwrap();
     }
-    tx.send("this is not json".to_string()).unwrap();
-    tx.send(r#"{"prompt": "héllo"}"#.to_string()).unwrap();
-    tx.send(String::new()).unwrap(); // blank lines are ignored
+    tx.send(serve::Intake::Line("this is not json".to_string())).unwrap();
+    tx.send(serve::Intake::Line(r#"{"prompt": "héllo"}"#.to_string())).unwrap();
+    tx.send(serve::Intake::Line(String::new())).unwrap(); // blank lines are ignored
+    // a pump-reported oversized line is answered, not fatal
+    tx.send(serve::Intake::Oversized(64)).unwrap();
     // zero-budget request: completes at submit time, must still respond
-    tx.send(r#"{"prompt": "1", "max_new": 0, "id": "zero"}"#.to_string()).unwrap();
+    tx.send(serve::Intake::Line(r#"{"prompt": "1", "max_new": 0, "id": "zero"}"#.to_string()))
+        .unwrap();
     drop(tx);
     let mut out = Vec::new();
     let stats = serve::serve_loop(&mut sched, &rx, &mut out).unwrap();
     assert_eq!(stats.served, 4);
-    assert_eq!(stats.errors, 2);
+    assert_eq!(stats.errors, 3);
 
     let text = String::from_utf8(out).unwrap();
     let lines: Vec<&str> = text.lines().collect();
-    assert_eq!(lines.len(), 6, "4 responses + 2 errors:\n{}", text);
+    assert_eq!(lines.len(), 7, "4 responses + 3 errors:\n{}", text);
+    assert!(text.contains("exceeds 64 bytes"), "oversized error response:\n{}", text);
     assert!(text.contains(r#""id":"zero","text":"""#), "zero-budget response:\n{}", text);
     // every served id appears exactly once, with the same text the
     // generate() path produces
@@ -389,7 +394,7 @@ fn serve_loop_end_to_end() {
         let j = qes::util::json::Json::parse(line).unwrap();
         assert_eq!(j.get("text").unwrap().as_str(), Some(w.as_str()), "{}", id);
     }
-    assert_eq!(text.matches("\"error\"").count(), 2);
+    assert_eq!(text.matches("\"error\"").count(), 3);
 }
 
 #[test]
