@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Collect `BENCH {json}` records from bench logs into one JSON artifact.
+
+The bench harness (rust/src/util/bench.rs) prints one machine-readable
+line per case and per speedup record:
+
+    BENCH {"group":"L3 hot paths","case":"rollout_grouped/pop8/nano/int4",...}
+    BENCH {"group":"speedup","case":"rollout_grouped/pop8","kernel":"avx2",...}
+
+CI pipes bench output through this script to publish a perf artifact
+(e.g. BENCH_PR7.json) that tracks the perf trajectory across PRs without
+anyone re-grepping raw logs.
+
+Usage:
+    cargo bench --bench hotpaths | python python/tools/collect_bench.py \
+        --out BENCH_PR7.json [--require rollout_grouped/pop8 ...]
+
+Reads stdin (or files passed as positional args), writes a JSON document:
+
+    {"records": [...], "speedups": {case: ratio, ...}}
+
+`--require CASE` fails (exit 1) when no speedup record for CASE was seen
+— the CI gate that a bench refactor can't silently drop a tracked case.
+`--min CASE:RATIO` additionally enforces a floor on a speedup record.
+"""
+
+import argparse
+import fileinput
+import json
+import sys
+
+PREFIX = "BENCH "
+
+
+def parse_lines(lines):
+    records = []
+    for line in lines:
+        line = line.strip()
+        if not line.startswith(PREFIX):
+            continue
+        payload = line[len(PREFIX):]
+        try:
+            records.append(json.loads(payload))
+        except json.JSONDecodeError as e:
+            print(f"collect_bench: unparseable BENCH line ({e}): {payload}",
+                  file=sys.stderr)
+            return None
+    return records
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*",
+                    help="bench logs (default: stdin)")
+    ap.add_argument("--out", required=True, help="output JSON path")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="CASE",
+                    help="fail unless a speedup record for CASE exists")
+    ap.add_argument("--min", action="append", default=[],
+                    metavar="CASE:RATIO",
+                    help="fail unless speedup[CASE] >= RATIO")
+    args = ap.parse_args()
+
+    records = parse_lines(fileinput.input(args.files))
+    if records is None:
+        return 1
+    if not records:
+        print("collect_bench: no BENCH lines found in input", file=sys.stderr)
+        return 1
+
+    speedups = {
+        r["case"]: r["speedup"]
+        for r in records
+        if r.get("group") == "speedup" and "speedup" in r
+    }
+
+    ok = True
+    for case in args.require:
+        if case not in speedups:
+            print(f"collect_bench: REQUIRED speedup record missing: {case}",
+                  file=sys.stderr)
+            ok = False
+    for spec in args.min:
+        case, _, floor = spec.rpartition(":")
+        if not case:
+            print(f"collect_bench: bad --min spec {spec!r} (want CASE:RATIO)",
+                  file=sys.stderr)
+            ok = False
+            continue
+        if case not in speedups:
+            print(f"collect_bench: --min case missing: {case}", file=sys.stderr)
+            ok = False
+        elif speedups[case] < float(floor):
+            print(f"collect_bench: speedup[{case}] = {speedups[case]:.3f} "
+                  f"< required {float(floor):.3f}", file=sys.stderr)
+            ok = False
+
+    with open(args.out, "w") as f:
+        json.dump({"records": records, "speedups": speedups}, f, indent=1,
+                  sort_keys=True)
+        f.write("\n")
+    print(f"collect_bench: wrote {len(records)} records "
+          f"({len(speedups)} speedups) to {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,8 +25,8 @@ use qes::kernel::{self, KernelKind};
 use qes::model::{init::init_fp, AsParams, ParamStore, ShardedParamStore};
 use qes::opt::{
     accumulate_grad, accumulate_grad_chunked, apply_perturbation, apply_perturbation_into,
-    EsHyper, KernelPolicy, LatticeOptimizer, PopulationSpec, QesFullResidual, QuzoOptimizer,
-    SeedReplayQes,
+    apply_population_into, EsHyper, KernelPolicy, LatticeOptimizer, PopulationSpec,
+    QesFullResidual, QuzoOptimizer, SeedReplayQes,
 };
 use qes::quant::Format;
 use qes::rng::{NoiseStream, SplitMix64};
@@ -394,6 +394,32 @@ fn main() {
                 black_box(r.unwrap());
             }
         });
+
+        // cross-member grouped rollout (the PR 7 tentpole): ONE scheduler
+        // serves the whole population — one resolve pass per round and
+        // one batched GEMM per weight matrix per layer per step across
+        // all members — vs the per-member scheduler loop above. Results
+        // are bit-identical (tests/scheduler.rs pins it); this measures
+        // the weight-stream amortization only.
+        let mut povs: Vec<Vec<Vec<i8>>> = Vec::new();
+        for gpop in [8usize, 16, 64] {
+            let specp = PopulationSpec { gen_seed: 11, pairs: gpop / 2, sigma: 0.02 };
+            let members: Vec<usize> = (0..gpop).collect();
+            let seeds: Vec<Option<u64>> = vec![None; gpop];
+            b.run(&format!("rollout_grouped/pop{}/nano/int4", gpop), || {
+                apply_population_into(&store4, &specp, &members, 7, &mut povs, pol);
+                let r = sched::rollout_round_grouped(
+                    nb,
+                    &view,
+                    &povs,
+                    Some(&emb_t),
+                    &batches,
+                    0.0,
+                    &seeds,
+                );
+                black_box(r.unwrap());
+            });
+        }
     }
 
     // round dispatch: the supervised leader loop (deadlines, retry
@@ -517,6 +543,13 @@ fn main() {
             "rollout_eval/seq_pop8/nano/int4".to_string(),
             "rollout_batched/pop8/nano/int4".to_string(),
         ),
+        // the tentpole record: grouped round vs the per-member scheduler
+        // loop at the same population — CI gates this at >= 1.0x
+        (
+            "rollout_grouped/pop8",
+            "rollout_batched/pop8/nano/int4".to_string(),
+            "rollout_grouped/pop8/nano/int4".to_string(),
+        ),
         // supervision tax on the fault-free path — expected ~1.00x
         (
             "round_dispatch/pop4",
@@ -526,6 +559,23 @@ fn main() {
     ] {
         // both legs of these records ran under the ambient dispatch
         report_speedup("speedup", label, auto_kind.name(), b.mean_ns(&base), b.mean_ns(&opt));
+    }
+
+    // grouped-rollout population scaling: the per-member scheduler loop
+    // repeats identical work per member, so its cost is linear in the
+    // population by construction — the pop-16/64 baselines extrapolate
+    // the MEASURED pop-8 loop instead of burning minutes re-measuring a
+    // longer loop of the same iteration. The pop-8 record above is the
+    // directly-measured, CI-gated pair.
+    let batched8 = b.mean_ns("rollout_batched/pop8/nano/int4");
+    for pop in [16u128, 64] {
+        report_speedup(
+            "speedup",
+            &format!("rollout_grouped/pop{}", pop),
+            auto_kind.name(),
+            batched8 * pop / 8,
+            b.mean_ns(&format!("rollout_grouped/pop{}/nano/int4", pop)),
+        );
     }
 
     // scalar -> SIMD microkernel records (same fused algorithm, different

@@ -161,6 +161,12 @@ pub struct FinetuneCfg {
     /// set a pool run would commit — `FaultPlan::member_fails` with the
     /// shared `DEFAULT_MAX_RETRIES` budget.
     pub faults: FaultPlan,
+    /// Cross-member grouped rollout: score whole member subsets through
+    /// ONE scheduler/resolve pass per round (`Workload::eval_members`)
+    /// instead of one per member. Rewards are bit-identical either way —
+    /// this is pure wall-clock. Defaults from `QES_GROUPED` (on unless
+    /// `0|off|false`); tests flip it programmatically.
+    pub grouped: bool,
 }
 
 impl Default for FinetuneCfg {
@@ -177,6 +183,7 @@ impl Default for FinetuneCfg {
             verbose: false,
             min_quorum: 0.5,
             faults: FaultPlan::default(),
+            grouped: crate::coordinator::workload::grouped_rollout_enabled(),
         }
     }
 }
@@ -308,26 +315,33 @@ pub fn finetune_resumable(
             }
             None => {
                 let view = store.params_view();
-                let mut rewards = Vec::with_capacity(n_members);
-                for m in 0..n_members {
-                    // Inline replica of the pool's failure semantics:
-                    // a member whose every scoring attempt faults under
-                    // the plan is permanently failed — the same pure
-                    // function of (plan, round, member) the supervised
-                    // pool converges to.
-                    if cfg.faults.is_active()
-                        && cfg.faults.member_fails(round_id, m, DEFAULT_MAX_RETRIES)
-                    {
-                        rewards.push(None);
-                    } else {
-                        rewards.push(Some(workload.eval_member(
-                            session,
-                            &view,
-                            &spec,
-                            m,
-                            round.as_ref(),
-                            &mut scratch,
-                        )?));
+                // Inline replica of the pool's failure semantics: a
+                // member whose every scoring attempt faults under the
+                // plan is permanently failed — the same pure function of
+                // (plan, round, member) the supervised pool converges
+                // to. Survivors are scored through the round-level
+                // grouped entry the pool workers use too (ONE
+                // resolve+pack and one weight pass per layer per step
+                // across the whole surviving population when
+                // `cfg.grouped` is on).
+                let survivors: Vec<usize> = (0..n_members)
+                    .filter(|&m| {
+                        !(cfg.faults.is_active()
+                            && cfg.faults.member_fails(round_id, m, DEFAULT_MAX_RETRIES))
+                    })
+                    .collect();
+                let mut rewards: Vec<Option<f32>> = vec![None; n_members];
+                if !survivors.is_empty() {
+                    let scored = workload.eval_members(
+                        session,
+                        &view,
+                        &spec,
+                        &survivors,
+                        round.as_ref(),
+                        &mut scratch,
+                    );
+                    for (&m, r) in survivors.iter().zip(scored) {
+                        rewards[m] = Some(r?);
                     }
                 }
                 rewards

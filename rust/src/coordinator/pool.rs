@@ -27,7 +27,6 @@
 //! the `FaultPlan` — independent of worker count, respawns, drops,
 //! delays or arrival order.
 
-use std::any::Any;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -37,7 +36,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::session::Session;
-use crate::coordinator::workload::{MemberScratch, Round, Workload};
+use crate::coordinator::workload::{panic_message, MemberScratch, Round, Workload};
 use crate::model::{AsParams, Snapshot};
 use crate::opt::PopulationSpec;
 use crate::quant::Format;
@@ -160,16 +159,6 @@ pub struct WorkerPool {
     /// pool is alive — stalls are caught by deadlines, not by
     /// `Disconnected`.
     res_tx: Sender<MemberResult>,
-}
-
-fn panic_message(p: &(dyn Any + Send)) -> String {
-    if let Some(s) = p.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = p.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "non-string panic payload".to_string()
-    }
 }
 
 fn spawn_worker(
@@ -664,35 +653,73 @@ fn worker_main(
                 }
                 let spec = PopulationSpec { gen_seed, pairs, sigma };
                 let view = snapshot.params_view();
-                for (m, attempt) in members {
-                    let reward = if faults.eval_fault(round_id, m, attempt) {
-                        Err(anyhow::anyhow!(
-                            "injected eval fault (round {} member {} attempt {})",
-                            round_id,
-                            m,
-                            attempt
-                        ))
-                    } else {
-                        // A panicking workload must cost one retry, not
-                        // the worker (and its compiled engines).
-                        match catch_unwind(AssertUnwindSafe(|| {
-                            workload.eval_member(
-                                &session,
-                                &view,
-                                &spec,
+                // Fault-injected members error individually FIRST — the
+                // plan keys on (round_id, member, attempt) and must
+                // produce the same failed set whether or not the clean
+                // members are scored grouped. The clean subset then goes
+                // through ONE `eval_members` call (the workload decides
+                // whether to fuse it into a grouped rollout); a
+                // panicking workload still costs one retry per member,
+                // never the worker (and its compiled engines).
+                let mut rewards: Vec<Option<Result<f32>>> = members
+                    .iter()
+                    .map(|&(m, attempt)| {
+                        faults.eval_fault(round_id, m, attempt).then(|| {
+                            Err(anyhow::anyhow!(
+                                "injected eval fault (round {} member {} attempt {})",
+                                round_id,
                                 m,
-                                round.as_ref(),
-                                &mut scratch,
-                            )
-                        })) {
-                            Ok(r) => r,
-                            Err(p) => Err(anyhow::anyhow!(
-                                "workload panicked scoring member {}: {}",
-                                m,
-                                panic_message(&*p)
-                            )),
+                                attempt
+                            ))
+                        })
+                    })
+                    .collect();
+                let clean: Vec<usize> = members
+                    .iter()
+                    .zip(&rewards)
+                    .filter(|(_, r)| r.is_none())
+                    .map(|(&(m, _), _)| m)
+                    .collect();
+                if !clean.is_empty() {
+                    let scored = match catch_unwind(AssertUnwindSafe(|| {
+                        workload.eval_members(
+                            &session,
+                            &view,
+                            &spec,
+                            &clean,
+                            round.as_ref(),
+                            &mut scratch,
+                        )
+                    })) {
+                        Ok(rs) => rs,
+                        Err(p) => {
+                            let msg = panic_message(&*p);
+                            clean
+                                .iter()
+                                .map(|&m| {
+                                    Err(anyhow::anyhow!(
+                                        "workload panicked scoring member {}: {}",
+                                        m,
+                                        msg
+                                    ))
+                                })
+                                .collect()
                         }
                     };
+                    let mut it = scored.into_iter();
+                    for slot in rewards.iter_mut().filter(|s| s.is_none()) {
+                        *slot = Some(it.next().unwrap_or_else(|| {
+                            Err(anyhow::anyhow!("workload returned too few member results"))
+                        }));
+                    }
+                }
+                // Emit per-member results in the job's member order: the
+                // fault plan's drop/delay sequences key on this worker's
+                // cumulative `sent` counter, so grouping must not
+                // reorder it.
+                for (&(m, attempt), reward) in members.iter().zip(rewards) {
+                    let reward =
+                        reward.expect("every member scored or fault-injected above");
                     sent += 1;
                     if faults.drop_result(worker, incarnation, sent) {
                         continue;

@@ -20,6 +20,7 @@
 //! and shared with worker threads via `Arc<dyn Workload>`.
 
 use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -27,7 +28,9 @@ use anyhow::Result;
 use crate::coordinator::finetune::FinetuneCfg;
 use crate::coordinator::session::{EngineSet, Session};
 use crate::model::{ParamStore, ParamsView};
-use crate::opt::{apply_perturbation_into, KernelPolicy, PopulationSpec};
+use crate::opt::{
+    apply_perturbation_into, apply_population_into, KernelPolicy, PopulationSpec,
+};
 use crate::rng::SplitMix64;
 use crate::runtime::encode::{ClsBatch, GenBatch};
 use crate::runtime::ModelConfig;
@@ -36,6 +39,31 @@ use crate::tasks::{is_cls_task, ClsTask, GenProblem, GenTask};
 
 /// Salt separating decode-sampling noise from perturbation noise.
 const GUMBEL_SALT: u64 = 0x6465_636f_6465_5f67;
+
+/// Round-level grouped rollout toggle (the `QES_KERNEL`-style env knob):
+/// `QES_GROUPED=0|off|false` forces the per-member sequential path —
+/// CI's equivalence legs run the suites both ways — anything else,
+/// including unset, leaves cross-member grouping ON. Read once at
+/// [`FinetuneCfg`] construction (workloads carry the resolved flag), so
+/// tests flip the field programmatically instead of racing on the
+/// process environment.
+pub fn grouped_rollout_enabled() -> bool {
+    match std::env::var("QES_GROUPED") {
+        Ok(v) => !matches!(v.trim(), "0" | "off" | "false"),
+        Err(_) => true,
+    }
+}
+
+/// Render a `catch_unwind` payload (shared with the worker pool).
+pub(crate) fn panic_message(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// Reusable per-worker buffers for member evaluation: the perturbed
 /// lattice is materialized into `overrides` in place, so a generation's
@@ -50,6 +78,11 @@ const GUMBEL_SALT: u64 = 0x6465_636f_6465_5f67;
 #[derive(Default)]
 pub struct MemberScratch {
     pub overrides: Vec<Vec<i8>>,
+    /// Per-member perturbed lattices for the grouped round path
+    /// ([`Workload::eval_members`]): `member_overrides[j]` is the j-th
+    /// grouped member's slab, filled by `opt::apply_population_into` and
+    /// reused across rounds like `overrides`.
+    pub member_overrides: Vec<Vec<Vec<i8>>>,
     pub policy: KernelPolicy,
     /// Shared weight-tied-head operand (`tok_emb` transposed) for the
     /// scheduler rollout: `tok_emb` is not a lattice tensor, so ES
@@ -65,6 +98,7 @@ impl MemberScratch {
     pub fn sequential() -> Self {
         MemberScratch {
             overrides: Vec::new(),
+            member_overrides: Vec::new(),
             policy: KernelPolicy::scalar(),
             emb_t: Vec::new(),
         }
@@ -112,8 +146,76 @@ pub trait Workload: Send + Sync {
         scratch: &mut MemberScratch,
     ) -> Result<f32>;
 
+    /// Score a whole member subset against `round` in one call — the
+    /// round-level grouped entry point both rollout topologies (inline
+    /// leader loop, pool workers) go through. Returns one result per
+    /// member of `members`, in order; a panicking evaluation surfaces as
+    /// that member's `Err`, never as the caller's unwind.
+    ///
+    /// The default walks members sequentially through
+    /// [`Workload::eval_member`]. Workloads with a grouped fast path
+    /// (Gen, Cls on the native backend) override it to batch every
+    /// member's rows through ONE resolve pass and ONE weight-stream walk
+    /// per layer per step — with rewards bit-identical to this default
+    /// (the grouped GEMM's per-row member routing preserves the exact
+    /// per-element op sequence).
+    fn eval_members(
+        &self,
+        session: &Session,
+        params: &ParamsView<'_>,
+        spec: &PopulationSpec,
+        members: &[usize],
+        round: &dyn Round,
+        scratch: &mut MemberScratch,
+    ) -> Vec<Result<f32>> {
+        eval_members_seq(self, session, params, spec, members, round, scratch)
+    }
+
     /// Unperturbed greedy accuracy (%) on the workload's held-out set.
     fn eval_accuracy(&self, session: &Session, params: &ParamsView<'_>) -> Result<f32>;
+}
+
+/// The sequential member walk behind the [`Workload::eval_members`]
+/// default: one `eval_member` per member with per-member panic isolation
+/// (a panicking evaluation costs that member an `Err`, not the caller's
+/// thread). Grouped overrides fall back to this when grouping is
+/// disabled, the subset is a singleton, or the backend has no grouped
+/// path.
+fn eval_members_seq<W: Workload + ?Sized>(
+    w: &W,
+    session: &Session,
+    params: &ParamsView<'_>,
+    spec: &PopulationSpec,
+    members: &[usize],
+    round: &dyn Round,
+    scratch: &mut MemberScratch,
+) -> Vec<Result<f32>> {
+    members
+        .iter()
+        .map(|&m| {
+            match catch_unwind(AssertUnwindSafe(|| {
+                w.eval_member(session, params, spec, m, round, scratch)
+            })) {
+                Ok(r) => r,
+                Err(p) => Err(anyhow::anyhow!(
+                    "workload panicked scoring member {}: {}",
+                    m,
+                    panic_message(&*p)
+                )),
+            }
+        })
+        .collect()
+}
+
+/// Spread one whole-group failure over every member of the group: the
+/// grouped paths evaluate all members in one fused pass, so a grouped
+/// error (or panic) has no single culprit — each member consumes one
+/// retry, exactly as if its own evaluation had failed.
+fn group_errs(members: &[usize], what: &str, msg: &str) -> Vec<Result<f32>> {
+    members
+        .iter()
+        .map(|&m| Err(anyhow::anyhow!("{} scoring member {}: {}", what, m, msg)))
+        .collect()
 }
 
 /// Sample a fixed eval problem set (disjoint seed space from training).
@@ -168,6 +270,10 @@ pub struct GenWorkload {
     /// direction across generations.
     pool: Vec<GenProblem>,
     evalset: Vec<GenProblem>,
+    /// Cross-member grouped rollout (`FinetuneCfg::grouped`): score whole
+    /// member subsets through ONE scheduler per round instead of one per
+    /// member. Rewards are bit-identical either way.
+    grouped: bool,
 }
 
 impl GenWorkload {
@@ -183,11 +289,38 @@ impl GenWorkload {
             batches_per_gen: cfg.batches_per_gen.max(1),
             pool,
             evalset,
+            grouped: cfg.grouped,
         }
     }
 
     pub fn task(&self) -> &dyn GenTask {
         self.task.as_ref()
+    }
+
+    /// Member seed for decode sampling (`None` = greedy) — the one
+    /// formula both the sequential and grouped rollout paths use, so
+    /// grouped decode draws the exact same gumbel streams.
+    fn gumbel_seed(&self, spec: &PopulationSpec, member: usize) -> Option<u64> {
+        if self.tau > 0.0 {
+            Some(spec.gen_seed ^ GUMBEL_SALT ^ (member as u64) << 17)
+        } else {
+            None
+        }
+    }
+
+    /// Mean per-batch reward of one member's completions — the single
+    /// aggregation both `eval_member` and the grouped path share, so the
+    /// float sum order is identical.
+    fn round_reward(&self, round: &GenRound, texts: &[Vec<String>]) -> f32 {
+        let mut total = 0.0f32;
+        for (batch, comps) in round.batches.iter().zip(texts) {
+            let mut batch_total = 0.0f32;
+            for (i, c) in comps.iter().enumerate() {
+                batch_total += self.task.reward(&batch.problems[i].key, c);
+            }
+            total += batch_total / batch.n_real as f32;
+        }
+        total / round.batches.len() as f32
     }
 }
 
@@ -230,11 +363,7 @@ impl Workload for GenWorkload {
             .ok_or_else(|| anyhow::anyhow!("gen workload got a foreign round payload"))?;
         let qmax = params.store.format.qmax();
         apply_perturbation_into(params, spec, member, qmax, &mut scratch.overrides, scratch.policy);
-        let gumbel_seed = if self.tau > 0.0 {
-            Some(spec.gen_seed ^ GUMBEL_SALT ^ (member as u64) << 17)
-        } else {
-            None
-        };
+        let gumbel_seed = self.gumbel_seed(spec, member);
         // Native sessions roll out through the continuous-batching
         // scheduler: one resolve+pack per member per ROUND (not per
         // batch), a shared head transpose across members, real rows only,
@@ -252,15 +381,7 @@ impl Workload for GenWorkload {
                 self.tau,
                 gumbel_seed,
             )?;
-            let mut total = 0.0f32;
-            for (batch, comps) in round.batches.iter().zip(&texts) {
-                let mut batch_total = 0.0f32;
-                for (i, c) in comps.iter().enumerate() {
-                    batch_total += self.task.reward(&batch.problems[i].key, c);
-                }
-                total += batch_total / batch.n_real as f32;
-            }
-            return Ok(total / round.batches.len() as f32);
+            return Ok(self.round_reward(round, &texts));
         }
         // PJRT sessions keep the per-batch compiled-graph path.
         let mut total = 0.0f32;
@@ -279,6 +400,63 @@ impl Workload for GenWorkload {
             total += batch_total / batch.n_real as f32;
         }
         Ok(total / round.batches.len() as f32)
+    }
+
+    /// Tentpole fast path: ONE grouped scheduler round serves the whole
+    /// member subset — one resolve pass, one batched prefill and one
+    /// batched decode GEMM per layer per step across the population —
+    /// with rewards bit-identical to the sequential default (per-row
+    /// member routing in the grouped GEMM preserves each member's exact
+    /// per-element op sequence, and the request/gumbel seed maps are
+    /// shared with `rollout_round`).
+    fn eval_members(
+        &self,
+        session: &Session,
+        params: &ParamsView<'_>,
+        spec: &PopulationSpec,
+        members: &[usize],
+        round: &dyn Round,
+        scratch: &mut MemberScratch,
+    ) -> Vec<Result<f32>> {
+        let nb = match session.backend().as_native() {
+            Some(nb) if self.grouped && members.len() > 1 => nb,
+            _ => return eval_members_seq(self, session, params, spec, members, round, scratch),
+        };
+        let run = AssertUnwindSafe(|| -> Result<Vec<f32>> {
+            let round = round
+                .as_any()
+                .downcast_ref::<GenRound>()
+                .ok_or_else(|| anyhow::anyhow!("gen workload got a foreign round payload"))?;
+            let qmax = params.store.format.qmax();
+            apply_population_into(
+                params,
+                spec,
+                members,
+                qmax,
+                &mut scratch.member_overrides,
+                scratch.policy,
+            );
+            ensure_emb_t(&mut scratch.emb_t, params.store)?;
+            let member_seeds: Vec<Option<u64>> =
+                members.iter().map(|&m| self.gumbel_seed(spec, m)).collect();
+            let texts = sched::rollout_round_grouped(
+                nb,
+                params,
+                &scratch.member_overrides,
+                Some(&scratch.emb_t),
+                &round.batches,
+                self.tau,
+                &member_seeds,
+            )?;
+            Ok(texts.iter().map(|t| self.round_reward(round, t)).collect())
+        });
+        // A grouped failure has no single culprit: every member of the
+        // group eats one retry (same budget the sequential walk charges).
+        match catch_unwind(run) {
+            Ok(Ok(rs)) => rs.into_iter().map(Ok).collect(),
+            Ok(Err(e)) => group_errs(members, "grouped rollout failed", &format!("{:#}", e)),
+            Err(p) => group_errs(members, "grouped rollout panicked", &panic_message(&*p)),
+        }
     }
 
     fn eval_accuracy(&self, session: &Session, params: &ParamsView<'_>) -> Result<f32> {
@@ -335,6 +513,10 @@ pub struct ClsWorkload {
     task: Box<dyn ClsTask>,
     round: Arc<ClsRound>,
     eval_batches: Vec<ClsBatch>,
+    /// Cross-member grouped scoring (`FinetuneCfg::grouped`): one
+    /// resolve pass + one grouped forward per batch for the whole member
+    /// subset. Losses are bit-identical either way.
+    grouped: bool,
 }
 
 impl ClsWorkload {
@@ -361,7 +543,12 @@ impl ClsWorkload {
         let eval: Vec<_> = (0..cfg.eval_n).map(|_| task.sample(&mut rng, false)).collect();
         let eval_batches: Vec<ClsBatch> =
             eval.chunks(mcfg.b_train).map(|c| ClsBatch::build(mcfg, c, &verb)).collect();
-        ClsWorkload { task, round: Arc::new(ClsRound { batches: train_batches }), eval_batches }
+        ClsWorkload {
+            task,
+            round: Arc::new(ClsRound { batches: train_batches }),
+            eval_batches,
+            grouped: cfg.grouped,
+        }
     }
 
     /// The k-shot train batches (the MeZO fp baseline scores these
@@ -373,6 +560,26 @@ impl ClsWorkload {
     pub fn eval_batches(&self) -> &[ClsBatch] {
         &self.eval_batches
     }
+}
+
+/// Mean CE over a batch's REAL rows from per-row class scores — a
+/// verbatim copy of the host-side loop in `Session::cls_eval` (same
+/// float op order), so the grouped path's losses are bit-identical to
+/// the sequential `cls_eval` walk.
+fn cls_ce(scores: &[f32], batch: &ClsBatch) -> f32 {
+    let c = 8usize;
+    let mut sum_ce = 0.0f32;
+    for i in 0..batch.n_real {
+        let row = &scores[i * c..(i + 1) * c];
+        let label = batch.labels[i] as usize;
+        let n_cls = row
+            .len()
+            .min(batch.class_ids.iter().collect::<std::collections::BTreeSet<_>>().len());
+        let m = row[..n_cls].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let logz = m + row[..n_cls].iter().map(|&s| (s - m).exp()).sum::<f32>().ln();
+        sum_ce += logz - row[label];
+    }
+    sum_ce / batch.n_real as f32
 }
 
 impl Workload for ClsWorkload {
@@ -411,6 +618,63 @@ impl Workload for ClsWorkload {
             loss += ce;
         }
         Ok(-loss / round.batches.len() as f32)
+    }
+
+    /// Grouped Cls scoring: ONE resolve pass + one grouped forward per
+    /// batch for the whole member subset, with the CE recomputed
+    /// host-side by the same loop `Session::cls_eval` runs — losses are
+    /// bit-identical to the sequential default.
+    fn eval_members(
+        &self,
+        session: &Session,
+        params: &ParamsView<'_>,
+        spec: &PopulationSpec,
+        members: &[usize],
+        round: &dyn Round,
+        scratch: &mut MemberScratch,
+    ) -> Vec<Result<f32>> {
+        let nb = match session.backend().as_native() {
+            Some(nb) if self.grouped && members.len() > 1 => nb,
+            _ => return eval_members_seq(self, session, params, spec, members, round, scratch),
+        };
+        let run = AssertUnwindSafe(|| -> Result<Vec<f32>> {
+            let round = round
+                .as_any()
+                .downcast_ref::<ClsRound>()
+                .ok_or_else(|| anyhow::anyhow!("cls workload got a foreign round payload"))?;
+            let qmax = params.store.format.qmax();
+            apply_population_into(
+                params,
+                spec,
+                members,
+                qmax,
+                &mut scratch.member_overrides,
+                scratch.policy,
+            );
+            ensure_emb_t(&mut scratch.emb_t, params.store)?;
+            let scores = crate::runtime::native::cls_scores_grouped(
+                nb,
+                params,
+                &scratch.member_overrides,
+                Some(&scratch.emb_t),
+                &round.batches,
+            )?;
+            Ok(scores
+                .iter()
+                .map(|member_scores| {
+                    let mut loss = 0.0f32;
+                    for (b, s) in round.batches.iter().zip(member_scores) {
+                        loss += cls_ce(s, b);
+                    }
+                    -loss / round.batches.len() as f32
+                })
+                .collect())
+        });
+        match catch_unwind(run) {
+            Ok(Ok(rs)) => rs.into_iter().map(Ok).collect(),
+            Ok(Err(e)) => group_errs(members, "grouped cls eval failed", &format!("{:#}", e)),
+            Err(p) => group_errs(members, "grouped cls eval panicked", &panic_message(&*p)),
+        }
     }
 
     fn eval_accuracy(&self, session: &Session, params: &ParamsView<'_>) -> Result<f32> {

@@ -211,6 +211,10 @@ pub fn parse_ft_args(args: &mut Args) -> Result<FtArgs> {
         verbose: !args.get_bool("quiet"),
         min_quorum: args.get_f32("quorum", 0.5)?,
         faults,
+        // `--no-grouped` (or QES_GROUPED=0) forces the per-member
+        // sequential rollout; rewards are bit-identical either way.
+        grouped: !args.get_bool("no-grouped")
+            && crate::coordinator::workload::grouped_rollout_enabled(),
     };
     let pretrain_steps = args.get_usize("pretrain-steps", 400)?;
     let k_shot = args.get_usize("k-shot", 16)?;

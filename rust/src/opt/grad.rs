@@ -56,6 +56,30 @@ pub fn apply_perturbation_into<P: AsParams + ?Sized>(
     kernels::fill_perturbation(lattice, dst, spec, member, qmax, policy);
 }
 
+/// Materialize perturbed lattices for a whole member subset at once —
+/// the grouped rollout's regeneration hook. `outs[j]` receives member
+/// `members[j]`'s override tensors, each filled by the same
+/// [`apply_perturbation_into`] walk the sequential path uses, so every
+/// member's slab is bit-identical to its per-member materialization.
+/// Outer and inner buffers are reused across rounds like the per-member
+/// scratch.
+pub fn apply_population_into<P: AsParams + ?Sized>(
+    params: &P,
+    spec: &PopulationSpec,
+    members: &[usize],
+    qmax: i8,
+    outs: &mut Vec<Vec<Vec<i8>>>,
+    policy: KernelPolicy,
+) {
+    if outs.len() < members.len() {
+        outs.resize_with(members.len(), Vec::new);
+    }
+    outs.truncate(members.len());
+    for (out, &m) in outs.iter_mut().zip(members.iter()) {
+        apply_perturbation_into(params, spec, m, qmax, out, policy);
+    }
+}
+
 /// Accumulate the ES gradient estimate (Eq. 5):
 ///   g_hat = 1 / (N * sigma) * sum_i F_i * delta_i
 /// over all 2*pairs members, into `out` (length = lattice dim d).
@@ -132,6 +156,23 @@ mod tests {
         apply_perturbation_into(&store, &spec, 0, 7, &mut scratch, KernelPolicy::scalar());
         apply_perturbation_into(&store, &spec, 1, 7, &mut scratch, KernelPolicy::default());
         assert_eq!(scratch, fresh);
+    }
+
+    #[test]
+    fn population_matches_per_member_application() {
+        let (_man, store) = quant_store();
+        let spec = PopulationSpec { gen_seed: 19, pairs: 2, sigma: 0.6 };
+        let members = [3usize, 0, 2];
+        let mut outs: Vec<Vec<Vec<i8>>> = Vec::new();
+        apply_population_into(&store, &spec, &members, 7, &mut outs, KernelPolicy::default());
+        assert_eq!(outs.len(), members.len());
+        for (out, &m) in outs.iter().zip(members.iter()) {
+            assert_eq!(*out, apply_perturbation(&store, &spec, m, 7));
+        }
+        // shrink: buffers truncate to the subset (retry singletons)
+        apply_population_into(&store, &spec, &[1], 7, &mut outs, KernelPolicy::scalar());
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0], apply_perturbation(&store, &spec, 1, 7));
     }
 
     #[test]

@@ -23,7 +23,9 @@ pub mod replay;
 pub use adam::{Adam, AdamConfig};
 pub use adaptive::AdaptiveReplayQes;
 pub use baselines::{MezoOptimizer, QuzoOptimizer};
-pub use grad::{accumulate_grad, apply_perturbation, apply_perturbation_into};
+pub use grad::{
+    accumulate_grad, apply_perturbation, apply_perturbation_into, apply_population_into,
+};
 pub use kernels::{accumulate_grad_chunked, KernelPolicy, WeightDeltas, DEFAULT_CHUNK};
 pub use qes::QesFullResidual;
 pub use replay::SeedReplayQes;

@@ -189,6 +189,116 @@ pub fn matmul_with(
     }
 }
 
+/// Cross-member grouped GEMM: `out[r] = x[r] @ lins[assign[r]]` — ONE
+/// call serves every population member's rows, so per-call overheads
+/// (dispatch, thread-block setup, activation-grid scan) and the
+/// resolve/pack that produced `lins` are paid once per round instead of
+/// once per member. All `lins` must share shape and layout (they come
+/// from one [`Lin::from_lattice`] resolve over the same snapshot).
+///
+/// # Determinism
+///
+/// Bit-identical to the per-member sequential path BY CONSTRUCTION: each
+/// output row is computed from its own input row and its own member's
+/// weights through the very same row helpers (`fp_row`/`i8_row`/
+/// `packed_row` + `apply_scale`) in the same K order, on one thread. The
+/// W8A8 activation grid is computed PER MEMBER over exactly that
+/// member's rows (f32 absmax is order-independent), so even the a8 form
+/// matches the per-member call whenever the member's row set matches.
+/// K-major decode packs are deliberately ignored here: grouping is the
+/// contracted training form, and the reassociating K-major fast form
+/// stays serving-only (single-member `matmul_decode`).
+pub fn matmul_grouped_with(
+    x: &[f32],
+    m: usize,
+    lins: &[&Lin<'_>],
+    assign: &[usize],
+    out: &mut [f32],
+    threads: usize,
+    kr: &dyn DotKernel,
+) {
+    assert!(!lins.is_empty(), "grouped gemm: no members");
+    let (k, n) = (lins[0].rows(), lins[0].cols());
+    assert_eq!(x.len(), m * k, "grouped gemm: x is {} elems, want {}x{}", x.len(), m, k);
+    assert_eq!(out.len(), m * n, "grouped gemm: out is {} elems, want {}x{}", out.len(), m, n);
+    assert_eq!(assign.len(), m, "grouped gemm: assign len {} != m {}", assign.len(), m);
+    for lin in lins {
+        assert_eq!((lin.rows(), lin.cols()), (k, n), "grouped gemm: mixed member shapes");
+    }
+    assert!(assign.iter().all(|&a| a < lins.len()), "grouped gemm: member id out of range");
+    if m == 0 {
+        return;
+    }
+    if lins.len() == 1 {
+        // degenerate population: exactly the single-member path
+        return matmul_with(x, m, lins[0], out, threads, kr);
+    }
+    let a8 = matches!(lins[0], Lin::Quant { a8: true, .. });
+    // per-member dynamic activation grids (identity extras when !a8)
+    let (xq, extras) = if a8 {
+        quantize_act_grouped(x, m, k, assign, lins.len())
+    } else {
+        (Vec::new(), vec![1.0f32; lins.len()])
+    };
+    let xa = if a8 { xq.as_slice() } else { x };
+    match lins[0] {
+        Lin::Fp { .. } => par_rows_idx(x, m, k, n, out, threads, 0, |r, xr, or, _| {
+            let Lin::Fp { w, .. } = lins[assign[r]] else {
+                unreachable!("grouped gemm: mixed member layouts")
+            };
+            fp_row(kr, xr, w, n, or);
+        }),
+        Lin::Quant { q: QData::I8(_), .. } => {
+            par_rows_idx(xa, m, k, n, out, threads, 0, |r, xr, or, _| {
+                let mi = assign[r];
+                let Lin::Quant { q: QData::I8(qv), scale, .. } = lins[mi] else {
+                    unreachable!("grouped gemm: mixed member layouts")
+                };
+                i8_row(kr, xr, qv, n, or);
+                apply_scale(or, scale, extras[mi]);
+            })
+        }
+        Lin::Quant { q: QData::PackedInt4(_), .. } => {
+            par_rows_idx(xa, m, k, n, out, threads, n, |r, xr, or, sc| {
+                let mi = assign[r];
+                let Lin::Quant { q: QData::PackedInt4(bytes), scale, .. } = lins[mi] else {
+                    unreachable!("grouped gemm: mixed member layouts")
+                };
+                packed_row(kr, xr, bytes, n, or, sc);
+                apply_scale(or, scale, extras[mi]);
+            })
+        }
+    }
+}
+
+/// Per-member W8A8 activation grids for the grouped path: member `j`'s
+/// scale is computed from the absmax over exactly the rows assigned to
+/// `j`, so each member's grid matches what the per-member sequential
+/// call would have produced over the same rows (f32 max is
+/// order-independent, `round_ties_even` is element-local).
+fn quantize_act_grouped(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    assign: &[usize],
+    n_members: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut absmax = vec![0.0f32; n_members];
+    for r in 0..m {
+        let am = &mut absmax[assign[r]];
+        *am = x[r * k..(r + 1) * k].iter().fold(*am, |a, &v| a.max(v.abs()));
+    }
+    let scales: Vec<f32> = absmax.iter().map(|&am| am.max(1e-8) / A8_QMAX).collect();
+    let mut q = vec![0.0f32; m * k];
+    for r in 0..m {
+        let s = scales[assign[r]];
+        for (qv, &v) in q[r * k..(r + 1) * k].iter_mut().zip(&x[r * k..(r + 1) * k]) {
+            *qv = round_ties_even(v / s).clamp(-A8_QMAX, A8_QMAX);
+        }
+    }
+    (q, scales)
+}
+
 /// Decode-step GEMM: [`matmul_with`] that routes INT4 layouts carrying a
 /// K-major pack ([`Lin::with_decode_pack`]) through
 /// [`DotKernel::dot_packed_int4`] — one cache-resident dot per output
@@ -323,11 +433,30 @@ fn par_rows<F>(
 ) where
     F: Fn(&[f32], &mut [f32], &mut [i8]) + Sync,
 {
+    par_rows_idx(x, m, k, n, out, threads, scratch_len, |_, xr, or, sc| f(xr, or, sc));
+}
+
+/// [`par_rows`] whose closure additionally receives the global row index
+/// — the grouped path uses it to look up the row's member assignment.
+/// Same blocking, same per-row op order, same thread-count invariance.
+#[allow(clippy::too_many_arguments)]
+fn par_rows_idx<F>(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    threads: usize,
+    scratch_len: usize,
+    f: F,
+) where
+    F: Fn(usize, &[f32], &mut [f32], &mut [i8]) + Sync,
+{
     let threads = if m * k * n < PAR_THRESHOLD { 1 } else { threads.clamp(1, m) };
     if threads <= 1 {
         let mut scratch = vec![0i8; scratch_len];
         for r in 0..m {
-            f(&x[r * k..(r + 1) * k], &mut out[r * n..(r + 1) * n], &mut scratch);
+            f(r, &x[r * k..(r + 1) * k], &mut out[r * n..(r + 1) * n], &mut scratch);
         }
         return;
     }
@@ -339,7 +468,7 @@ fn par_rows<F>(
         let r0 = bi * block;
         for (ri, orow) in oblk.chunks_mut(n).enumerate() {
             let r = r0 + ri;
-            fref(&x[r * k..(r + 1) * k], orow, &mut scratch);
+            fref(r, &x[r * k..(r + 1) * k], orow, &mut scratch);
         }
     });
 }
@@ -648,6 +777,162 @@ mod tests {
         ] {
             assert_eq!(round_ties_even(x), want, "x={}", x);
         }
+    }
+
+    /// Per-member reference for the grouped entry: gather each member's
+    /// rows, run the single-member path on them, scatter back.
+    fn per_member_reference(
+        x: &[f32],
+        m: usize,
+        lins: &[&Lin<'_>],
+        assign: &[usize],
+        kr: &dyn DotKernel,
+    ) -> Vec<f32> {
+        let (k, n) = (lins[0].rows(), lins[0].cols());
+        let mut out = vec![0.0f32; m * n];
+        for (mi, lin) in lins.iter().enumerate() {
+            let rows: Vec<usize> = (0..m).filter(|&r| assign[r] == mi).collect();
+            let mut xm = Vec::with_capacity(rows.len() * k);
+            for &r in &rows {
+                xm.extend_from_slice(&x[r * k..(r + 1) * k]);
+            }
+            let mut om = vec![0.0f32; rows.len() * n];
+            matmul_with(&xm, rows.len(), lin, &mut om, 1, kr);
+            for (i, &r) in rows.iter().enumerate() {
+                out[r * n..(r + 1) * n].copy_from_slice(&om[i * n..(i + 1) * n]);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn grouped_matches_per_member_reference() {
+        // The tentpole equivalence: ONE grouped call over every member's
+        // rows must reproduce the per-member sequential calls bit-for-bit
+        // — every format (incl. the per-member W8A8 activation grids),
+        // every kernel backend, any thread count, odd shapes, uneven and
+        // empty member row sets.
+        prop_check("grouped gemm vs per-member sequential", 25, |g| {
+            let members = g.usize_in(1, 5);
+            let m = g.usize_in(1, 13);
+            let k = g.usize_in(1, 40);
+            let n = g.usize_in(1, 40);
+            let x = g.vec_f32(m * k, -1.0, 1.0);
+            // random assignment: some members may own zero rows
+            let assign: Vec<usize> = (0..m).map(|_| g.usize_in(0, members - 1)).collect();
+            let scalar = kernel::by_kind(KernelKind::Scalar);
+            for fmt in [Format::Int4, Format::Int8, Format::W8A8] {
+                let qs: Vec<(Vec<i8>, Vec<f32>)> =
+                    (0..members).map(|_| rand_quant(g, k, n, fmt.qmax())).collect();
+                let lins: Vec<Lin> = qs
+                    .iter()
+                    .map(|(q, s)| Lin::from_lattice(Cow::Borrowed(q), s, k, n, fmt))
+                    .collect();
+                let refs: Vec<&Lin> = lins.iter().collect();
+                let want = per_member_reference(&x, m, &refs, &assign, scalar);
+                for kind in kernel::available() {
+                    for threads in [1usize, 3] {
+                        let mut got = vec![0.0f32; m * n];
+                        matmul_grouped_with(
+                            &x,
+                            m,
+                            &refs,
+                            &assign,
+                            &mut got,
+                            threads,
+                            kernel::by_kind(kind),
+                        );
+                        for i in 0..m * n {
+                            if got[i].to_bits() != want[i].to_bits() {
+                                return Err(format!(
+                                    "{:?} kernel={} threads={} members={} elem {}: {} vs {}",
+                                    fmt,
+                                    kind.name(),
+                                    threads,
+                                    members,
+                                    i,
+                                    got[i],
+                                    want[i]
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grouped_bit_identical_above_par_threshold() {
+        // Same equivalence at a geometry that clears PAR_THRESHOLD, so
+        // the threaded row-block scheduling path really runs, plus the
+        // fp32 layout (shared LN/embedding tensors go through it).
+        let mut g = Gen::from_seed(31);
+        let (members, m, k, n) = (3usize, 24usize, 37usize, 53usize);
+        assert!(m * k * n >= PAR_THRESHOLD);
+        let x = g.vec_f32(m * k, -2.0, 2.0);
+        let assign: Vec<usize> = (0..m).map(|r| r % members).collect();
+        let scalar = kernel::by_kind(KernelKind::Scalar);
+        for fmt in [Format::Int4, Format::Int8, Format::W8A8] {
+            let qs: Vec<(Vec<i8>, Vec<f32>)> =
+                (0..members).map(|_| rand_quant(&mut g, k, n, fmt.qmax())).collect();
+            let lins: Vec<Lin> = qs
+                .iter()
+                .map(|(q, s)| Lin::from_lattice(Cow::Borrowed(q), s, k, n, fmt))
+                .collect();
+            let refs: Vec<&Lin> = lins.iter().collect();
+            let want = per_member_reference(&x, m, &refs, &assign, scalar);
+            for kind in kernel::available() {
+                for threads in [1usize, 2, 8] {
+                    let mut got = vec![0.0f32; m * n];
+                    matmul_grouped_with(&x, m, &refs, &assign, &mut got, threads, kernel::by_kind(kind));
+                    assert_eq!(
+                        want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{:?} kernel={} threads={}",
+                        fmt,
+                        kind.name(),
+                        threads
+                    );
+                }
+            }
+        }
+        // fp32 members (grouped LN-adjacent layers share one fp tensor,
+        // but the entry must still honor per-member fp weights)
+        let ws: Vec<Vec<f32>> = (0..members).map(|_| g.vec_f32(k * n, -0.5, 0.5)).collect();
+        let lins: Vec<Lin> = ws.iter().map(|w| Lin::Fp { w, rows: k, cols: n }).collect();
+        let refs: Vec<&Lin> = lins.iter().collect();
+        let want = per_member_reference(&x, m, &refs, &assign, scalar);
+        for kind in kernel::available() {
+            let mut got = vec![0.0f32; m * n];
+            matmul_grouped_with(&x, m, &refs, &assign, &mut got, 2, kernel::by_kind(kind));
+            assert_eq!(
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "fp kernel={}",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn grouped_single_member_is_exactly_matmul_with() {
+        let mut g = Gen::from_seed(41);
+        let (m, k, n) = (6usize, 33, 29);
+        let x = g.vec_f32(m * k, -1.0, 1.0);
+        let (q, scale) = rand_quant(&mut g, k, n, 7);
+        let lin = Lin::from_lattice(Cow::Borrowed(&q), &scale, k, n, Format::Int4);
+        let assign = vec![0usize; m];
+        let mut a = vec![0.0f32; m * n];
+        let mut b = vec![0.0f32; m * n];
+        let kr = kernel::active_kernel();
+        matmul_grouped_with(&x, m, &[&lin], &assign, &mut a, 2, kr);
+        matmul_with(&x, m, &lin, &mut b, 2, kr);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

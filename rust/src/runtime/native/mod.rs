@@ -118,6 +118,20 @@ impl NativeBackend {
         resolve(&self.cfg, self.format, view, overrides, emb_t, decode_pack)
     }
 
+    /// ONE resolve pass serving a whole population: every member's
+    /// lattice overrides against the same snapshot view, shared fp
+    /// tensors (embeddings, LN, scales, head operand) borrowed once.
+    /// Never builds K-major decode packs — grouping is the contracted
+    /// training form and the reassociating pack stays serving-only.
+    pub(crate) fn resolve_params_grouped<'v>(
+        &self,
+        view: &ParamsView<'v>,
+        member_overrides: &'v [Vec<Vec<i8>>],
+        emb_t: Option<&'v [f32]>,
+    ) -> Result<Vec<NativeParams<'v>>> {
+        resolve_grouped(&self.cfg, self.format, view, member_overrides, emb_t)
+    }
+
     fn forward_full(
         &self,
         p: &NativeParams<'_>,
@@ -267,6 +281,97 @@ pub(crate) fn forward_full(
                 }
                 caches.push(c);
             }
+        }
+    }
+    Forward { h, kvs }
+}
+
+/// Cross-member grouped full-sequence pass: one walk over the layer
+/// stack serving every population member at once. `assign[bi]` names the
+/// member whose weights sequence `bi` runs under; the six lattice
+/// matmuls per layer go through [`gemm::matmul_grouped_with`] so each
+/// weight set is applied only to its own member's rows, while the shared
+/// fp32 tensors (embeddings, layernorm gains/biases) are read from
+/// `ps[0]` — [`resolve_grouped`] guarantees they are the same store
+/// slices for every member.
+///
+/// # Determinism
+///
+/// Per-sequence ops (embedding, layernorm, attention, residuals, GELU)
+/// are independent across rows, and the grouped GEMM computes each row
+/// with its member's weights in the identical K-order op sequence — so
+/// outputs are bit-identical to running [`forward_full`] per member over
+/// that member's sequences, for any member count, thread count or kernel
+/// backend.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_full_grouped(
+    cfg: &ModelConfig,
+    threads: usize,
+    kr: &dyn DotKernel,
+    ps: &[NativeParams<'_>],
+    assign: &[usize],
+    tokens: &[i32],
+    pos_ids: &[i32],
+    mask: &[f32],
+    b: usize,
+    s: usize,
+    want_kv: bool,
+) -> Forward {
+    assert!(!ps.is_empty(), "grouped forward: no members");
+    assert_eq!(assign.len(), b, "grouped forward: assign len {} != b {}", assign.len(), b);
+    assert!(assign.iter().all(|&a| a < ps.len()), "grouped forward: member id out of range");
+    let p0 = &ps[0];
+    let d = cfg.d_model;
+    let heads = cfg.n_heads;
+    let dh = d / heads;
+    let rows = b * s;
+    let row_assign: Vec<usize> = (0..rows).map(|r| assign[r / s]).collect();
+    let mut h = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let tok = tokens[r] as usize;
+        let pos = pos_ids[r] as usize;
+        for j in 0..d {
+            h[r * d + j] = p0.tok_emb[tok * d + j] + p0.pos_emb[pos * d + j];
+        }
+    }
+    let mut x = vec![0.0f32; rows * d];
+    let mut qb = vec![0.0f32; rows * d];
+    let mut kb = vec![0.0f32; rows * d];
+    let mut vb = vec![0.0f32; rows * d];
+    let mut ab = vec![0.0f32; rows * d];
+    let mut pj = vec![0.0f32; rows * d];
+    let mut ff = vec![0.0f32; rows * cfg.d_ff];
+    let mut ff2 = vec![0.0f32; rows * d];
+    let mut kvs = Vec::new();
+    for li in 0..p0.layers.len() {
+        // ONE pass over each weight matrix's member set per layer
+        macro_rules! mm_grouped {
+            ($field:ident, $x:expr, $out:expr) => {{
+                let lins: Vec<&Lin> = ps.iter().map(|p| &p.layers[li].$field).collect();
+                gemm::matmul_grouped_with($x, rows, &lins, &row_assign, $out, threads, kr);
+            }};
+        }
+        let layer = &p0.layers[li];
+        layernorm(&h, d, layer.ln1_g, layer.ln1_b, &mut x);
+        mm_grouped!(wq, &x, &mut qb);
+        mm_grouped!(wk, &x, &mut kb);
+        mm_grouped!(wv, &x, &mut vb);
+        attend_full(b, s, heads, dh, &qb, &kb, &vb, mask, None, &mut ab);
+        mm_grouped!(wo, &ab, &mut pj);
+        for i in 0..rows * d {
+            h[i] += pj[i];
+        }
+        layernorm(&h, d, layer.ln2_g, layer.ln2_b, &mut x);
+        mm_grouped!(w1, &x, &mut ff);
+        for fv in ff.iter_mut() {
+            *fv = gelu(*fv);
+        }
+        mm_grouped!(w2, &ff, &mut ff2);
+        for i in 0..rows * d {
+            h[i] += ff2[i];
+        }
+        if want_kv {
+            kvs.push((kb.clone(), vb.clone()));
         }
     }
     Forward { h, kvs }
@@ -699,6 +804,96 @@ pub(crate) fn resolve<'v>(
         layers,
         emb_t,
     })
+}
+
+/// Resolve a whole population against ONE snapshot view: member `j` gets
+/// the base model with its own lattice overrides. Shared fp32 tensors
+/// (embeddings, layernorms, scales) resolve to the SAME store slices for
+/// every member — only the 6 lattice matrices per layer differ — which
+/// is what lets [`forward_full_grouped`] read them from `ps[0]`. Each
+/// member's lattice slabs still pack individually (their weights differ
+/// elementwise); the amortization is one resolve PASS per round instead
+/// of one per member, plus everything downstream of it (one scheduler,
+/// one weight-stream walk per layer per step).
+pub(crate) fn resolve_grouped<'v>(
+    cfg: &ModelConfig,
+    format: Format,
+    view: &ParamsView<'v>,
+    member_overrides: &'v [Vec<Vec<i8>>],
+    emb_t: Option<&'v [f32]>,
+) -> Result<Vec<NativeParams<'v>>> {
+    anyhow::ensure!(!member_overrides.is_empty(), "grouped resolve: zero members");
+    member_overrides
+        .iter()
+        .map(|ov| resolve(cfg, format, view, Some(ov), emb_t, false))
+        .collect()
+}
+
+/// Grouped Cls scoring: ONE resolve pass + ONE grouped forward per batch
+/// serve every member — each member's copy of the batch rows runs under
+/// its own weights in the same op sequence as a per-member
+/// [`ForwardBackend::cls_scores`] call, so the returned
+/// `[member][batch][b*c]` scores are bit-identical to the sequential
+/// path (the W8A8 activation grid is per member: a member's grouped row
+/// set IS the full per-call tensor the sequential path quantizes over).
+pub(crate) fn cls_scores_grouped(
+    backend: &NativeBackend,
+    view: &ParamsView<'_>,
+    member_overrides: &[Vec<Vec<i8>>],
+    emb_t: Option<&[f32]>,
+    batches: &[ClsBatch],
+) -> Result<Vec<Vec<Vec<f32>>>> {
+    backend.want(backend.set.cls, "cls")?;
+    let cfg = &backend.cfg;
+    let ps = resolve_grouped(cfg, backend.format, view, member_overrides, emb_t)?;
+    let n_members = ps.len();
+    let (b, s) = (cfg.b_train, cfg.s_train);
+    let v = cfg.vocab;
+    let kr = kernel::active_kernel();
+    let assign: Vec<usize> = (0..n_members * b).map(|i| i / b).collect();
+    let mut out = vec![Vec::with_capacity(batches.len()); n_members];
+    let mut tokens = Vec::with_capacity(n_members * b * s);
+    let mut pos_ids = Vec::with_capacity(n_members * b * s);
+    let mut mask = Vec::with_capacity(n_members * b * s);
+    for batch in batches {
+        tokens.clear();
+        pos_ids.clear();
+        mask.clear();
+        for _ in 0..n_members {
+            tokens.extend_from_slice(&batch.tokens);
+            pos_ids.extend_from_slice(&batch.pos_ids);
+            mask.extend_from_slice(&batch.mask);
+        }
+        let fw = forward_full_grouped(
+            cfg,
+            backend.threads,
+            kr,
+            &ps,
+            &assign,
+            &tokens,
+            &pos_ids,
+            &mask,
+            n_members * b,
+            s,
+            false,
+        );
+        let rows: Vec<usize> = (0..n_members * b)
+            .map(|i| i * s + batch.cls_pos[i % b] as usize)
+            .collect();
+        let mut at = vec![0.0f32; n_members * b * v];
+        head_rows(cfg, backend.threads, kr, &ps[0], &fw.h, &rows, &mut at);
+        let c = batch.class_ids.len();
+        for (j, member_out) in out.iter_mut().enumerate() {
+            let mut scores = vec![0.0f32; b * c];
+            for bi in 0..b {
+                for (ci, &cid) in batch.class_ids.iter().enumerate() {
+                    scores[bi * c + ci] = at[(j * b + bi) * v + cid as usize];
+                }
+            }
+            member_out.push(scores);
+        }
+    }
+    Ok(out)
 }
 
 /// Row-wise layernorm over `[rows, d]`.

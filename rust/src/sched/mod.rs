@@ -35,12 +35,31 @@
 //! `dot_packed_int4`'s documented reassociation tolerance, with the
 //! scalar backend bit-identical to the axpy form by construction.
 //!
+//! # Cross-member grouping: the population as one batch
+//!
+//! ES rollout evaluates a whole population of members that differ from
+//! the shared base snapshot only by seeded perturbations. The grouped
+//! path ([`Scheduler::new_grouped`], [`rollout_round_grouped`]) resolves
+//! EVERY member against one snapshot view in ONE pass and tags each
+//! slot with its member id: prefill and decode then run ONE grouped
+//! GEMM per layer per step across the whole population
+//! (`gemm::matmul_grouped_with` — each row computed under its own
+//! member's weights in the identical K-order op sequence), instead of
+//! one scheduler, one resolve and 6 GEMM calls per layer per step PER
+//! MEMBER. Results are bit-identical to the per-member sequential
+//! rollout — grouping is the contracted training form, so it always
+//! stays on the axpy decode (the K-major reassociating pack remains
+//! serving-only). [`SchedStats::resolves`] counts resolve+pack passes:
+//! exactly 1 per scheduler lifetime, i.e. 1 per grouped ROUND versus
+//! one per member per round on the sequential path.
+//!
 //! One resolve+pack per member serves a whole generation round, and the
 //! weight-tied-head transpose can be shared across members/rounds
 //! ([`crate::runtime::native::build_emb_t`]): `tok_emb` never changes
 //! during ES fine-tuning. `GenWorkload` routes rollout and greedy eval
-//! through [`rollout_round`]/[`greedy_texts`]; `qes serve` ([`serve`])
-//! drives the same engine over line-delimited JSON.
+//! through [`rollout_round`]/[`greedy_texts`] (grouped rounds through
+//! [`rollout_round_grouped`]); `qes serve` ([`serve`]) drives the same
+//! engine over line-delimited JSON.
 
 pub mod arena;
 pub mod serve;
@@ -140,9 +159,19 @@ impl SchedCfg {
             kernel: None,
         }
     }
+
+    /// Round-shaped geometry for the grouped rollout: enough slots to
+    /// keep the WHOLE population resident (`b_gen` per member — the
+    /// point of grouping is that every member's rows ride the same
+    /// weight pass), axpy decode (the training contract; grouped
+    /// schedulers force this off anyway), single-threaded GEMMs.
+    pub fn for_round(mcfg: &ModelConfig, members: usize) -> SchedCfg {
+        SchedCfg { slots: mcfg.b_gen * members.max(1), kmajor: false, ..SchedCfg::for_model(mcfg) }
+    }
 }
 
-/// Run telemetry (tests use `max_live` to prove exhaustion queues).
+/// Run telemetry (tests use `max_live` to prove exhaustion queues and
+/// `resolves` to pin the one-resolve-per-round invariant).
 #[derive(Debug, Clone, Default)]
 pub struct SchedStats {
     pub steps: u64,
@@ -150,12 +179,23 @@ pub struct SchedStats {
     pub decode_rows: u64,
     pub retired: u64,
     pub max_live: usize,
+    /// Resolve+pack passes over the snapshot performed for this
+    /// scheduler: always exactly 1 (paid at construction). A grouped
+    /// round therefore costs 1 TOTAL, where the per-member sequential
+    /// round costs one per member (one scheduler each).
+    pub resolves: u64,
+    /// Population members this scheduler serves (1 = single-member).
+    pub members: usize,
 }
 
 /// A sequence currently occupying an arena slot.
 struct Live {
     ticket: usize,
     slot: usize,
+    /// Index into the scheduler's resolved member set (0 on the
+    /// single-member path): which member's weights this sequence runs
+    /// under.
+    member: usize,
     prompt: Vec<u8>,
     max_new: usize,
     tau: f32,
@@ -188,15 +228,19 @@ fn resize(buf: &mut Vec<f32>, n: usize) {
     buf.resize(n, 0.0);
 }
 
-/// The continuous-batching engine. Borrows one resolved model (a member's
-/// weights) for its lifetime; submit any number of requests against it.
+/// The continuous-batching engine. Borrows one resolved model per member
+/// (ONE on the classic path, the whole population on the grouped path)
+/// for its lifetime; submit any number of requests against it.
 pub struct Scheduler<'v> {
     mcfg: ModelConfig,
     scfg: SchedCfg,
     kr: &'static dyn DotKernel,
-    p: NativeParams<'v>,
+    /// Resolved member models. `ps[0]` additionally provides the shared
+    /// fp32 tensors (embeddings, layernorms, head operand) — identical
+    /// store slices for every member by construction.
+    ps: Vec<NativeParams<'v>>,
     arena: KvArena,
-    waiting: VecDeque<(usize, GenRequest)>,
+    waiting: VecDeque<(usize, usize, GenRequest)>,
     live: Vec<Live>,
     done: BTreeMap<usize, GenOutput>,
     next_ticket: usize,
@@ -215,8 +259,7 @@ impl<'v> Scheduler<'v> {
         emb_t: Option<&'v [f32]>,
         scfg: SchedCfg,
     ) -> Result<Scheduler<'v>> {
-        anyhow::ensure!(scfg.slots > 0, "scheduler needs at least one KV slot");
-        anyhow::ensure!(scfg.t_max > 0 && scfg.s_prompt > 0, "degenerate scheduler geometry");
+        Self::check_geometry(&scfg)?;
         let mcfg = backend.cfg().clone();
         let kr = match scfg.kernel {
             Some(kind) => kernel::by_kind(kind),
@@ -231,8 +274,48 @@ impl<'v> Scheduler<'v> {
             && backend.format() == Format::Int4
             && kr.kind() != KernelKind::Scalar;
         let p = backend.resolve_params(view, overrides, emb_t, kmajor)?;
+        Self::build(mcfg, scfg, kr, vec![p])
+    }
+
+    /// The grouped-population scheduler: ONE resolve pass serves every
+    /// member of the round, and every submitted request carries a member
+    /// id ([`Scheduler::submit_member`]) naming the weight set its rows
+    /// run under. Always uses the axpy decode form regardless of
+    /// `scfg.kmajor` — grouping is the contracted training path, and the
+    /// reassociating K-major pack stays serving-only.
+    pub fn new_grouped(
+        backend: &NativeBackend,
+        view: &ParamsView<'v>,
+        member_overrides: &'v [Vec<Vec<i8>>],
+        emb_t: Option<&'v [f32]>,
+        mut scfg: SchedCfg,
+    ) -> Result<Scheduler<'v>> {
+        Self::check_geometry(&scfg)?;
+        anyhow::ensure!(!member_overrides.is_empty(), "grouped scheduler: zero members");
+        let mcfg = backend.cfg().clone();
+        let kr = match scfg.kernel {
+            Some(kind) => kernel::by_kind(kind),
+            None => kernel::active_kernel(),
+        };
+        scfg.kmajor = false;
+        let ps = backend.resolve_params_grouped(view, member_overrides, emb_t)?;
+        Self::build(mcfg, scfg, kr, ps)
+    }
+
+    fn check_geometry(scfg: &SchedCfg) -> Result<()> {
+        anyhow::ensure!(scfg.slots > 0, "scheduler needs at least one KV slot");
+        anyhow::ensure!(scfg.t_max > 0 && scfg.s_prompt > 0, "degenerate scheduler geometry");
+        Ok(())
+    }
+
+    fn build(
+        mcfg: ModelConfig,
+        scfg: SchedCfg,
+        kr: &'static dyn DotKernel,
+        ps: Vec<NativeParams<'v>>,
+    ) -> Result<Scheduler<'v>> {
         let d = mcfg.d_model;
-        let max_pos = p.pos_emb.len() / d;
+        let max_pos = ps[0].pos_emb.len() / d;
         anyhow::ensure!(
             scfg.s_prompt + scfg.t_max <= max_pos,
             "arena rows {} + {} exceed the model's {} positions",
@@ -241,17 +324,20 @@ impl<'v> Scheduler<'v> {
             max_pos
         );
         let arena = KvArena::new(mcfg.n_layers, scfg.slots, scfg.s_prompt + scfg.t_max, d);
+        // the ONE resolve+pack pass this scheduler will ever perform
+        // happened in the constructor, serving all `ps.len()` members
+        let stats = SchedStats { resolves: 1, members: ps.len(), ..SchedStats::default() };
         Ok(Scheduler {
             mcfg,
             scfg,
             kr,
-            p,
+            ps,
             arena,
             waiting: VecDeque::new(),
             live: Vec::new(),
             done: BTreeMap::new(),
             next_ticket: 0,
-            stats: SchedStats::default(),
+            stats,
             scratch: StepScratch::default(),
         })
     }
@@ -277,6 +363,18 @@ impl<'v> Scheduler<'v> {
     /// front end maps that to an error response); a full arena does NOT —
     /// the request waits for a recycled slot.
     pub fn submit(&mut self, req: GenRequest) -> Result<GenTicket> {
+        self.submit_member(0, req)
+    }
+
+    /// [`Scheduler::submit`] against a specific member's weights (grouped
+    /// schedulers; member 0 is the only valid id on the classic path).
+    pub fn submit_member(&mut self, member: usize, req: GenRequest) -> Result<GenTicket> {
+        anyhow::ensure!(
+            member < self.ps.len(),
+            "member {} out of range for a {}-member scheduler",
+            member,
+            self.ps.len()
+        );
         anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
         anyhow::ensure!(
             req.prompt.len() <= self.scfg.s_prompt,
@@ -295,7 +393,7 @@ impl<'v> Scheduler<'v> {
         if req.max_new == 0 {
             self.done.insert(ticket, GenOutput { tokens: Vec::new(), text: String::new() });
         } else {
-            self.waiting.push_back((ticket, req));
+            self.waiting.push_back((ticket, member, req));
         }
         Ok(GenTicket(ticket))
     }
@@ -313,10 +411,11 @@ impl<'v> Scheduler<'v> {
         let mut newly: Vec<usize> = Vec::new();
         while !self.waiting.is_empty() {
             let Some(slot) = self.arena.alloc() else { break };
-            let (ticket, req) = self.waiting.pop_front().expect("nonempty queue");
+            let (ticket, member, req) = self.waiting.pop_front().expect("nonempty queue");
             self.live.push(Live {
                 ticket,
                 slot,
+                member,
                 prompt: req.prompt,
                 max_new: req.max_new,
                 tau: req.tau,
@@ -375,8 +474,9 @@ impl<'v> Scheduler<'v> {
     /// Batched full-sequence prefill for the newly admitted sequences:
     /// left-pad each prompt to the fixed `s_prompt` width (the geometry
     /// that makes per-sequence results independent of the grouping), run
-    /// the shared layer stack once, prime the arena slots, and read each
-    /// sequence's first next-token logits.
+    /// the shared layer stack once — across ALL members at once on the
+    /// grouped path — prime the arena slots, and read each sequence's
+    /// first next-token logits.
     fn prefill(&mut self, newly: &[usize]) {
         let sp = self.scfg.s_prompt;
         let d = self.mcfg.d_model;
@@ -394,19 +494,38 @@ impl<'v> Scheduler<'v> {
                 mask[i * sp + pad + j] = 1.0;
             }
         }
-        let fw = native::forward_full(
-            &self.mcfg,
-            self.scfg.threads,
-            self.kr,
-            &self.p,
-            &tokens,
-            &pos_ids,
-            &mask,
-            b,
-            sp,
-            true,
-            None,
-        );
+        let fw = if self.ps.len() == 1 {
+            native::forward_full(
+                &self.mcfg,
+                self.scfg.threads,
+                self.kr,
+                &self.ps[0],
+                &tokens,
+                &pos_ids,
+                &mask,
+                b,
+                sp,
+                true,
+                None,
+            )
+        } else {
+            // ONE member-grouped prefill: each admitted sequence's rows
+            // run under its own member's weights in the same pass
+            let assign: Vec<usize> = newly.iter().map(|&li| self.live[li].member).collect();
+            native::forward_full_grouped(
+                &self.mcfg,
+                self.scfg.threads,
+                self.kr,
+                &self.ps,
+                &assign,
+                &tokens,
+                &pos_ids,
+                &mask,
+                b,
+                sp,
+                true,
+            )
+        };
         for (i, &li) in newly.iter().enumerate() {
             let slot = self.live[li].slot;
             for (layer, (kf, vf)) in fw.kvs.iter().enumerate() {
@@ -421,11 +540,12 @@ impl<'v> Scheduler<'v> {
         }
         let rows: Vec<usize> = (0..b).map(|i| i * sp + sp - 1).collect();
         resize(&mut self.scratch.logits, b * v);
+        // the weight-tied head is fp32 and shared across members
         native::head_rows(
             &self.mcfg,
             self.scfg.threads,
             self.kr,
-            &self.p,
+            &self.ps[0],
             &fw.h,
             &rows,
             &mut self.scratch.logits,
@@ -437,10 +557,12 @@ impl<'v> Scheduler<'v> {
     }
 
     /// One decode forward over all live sequences: one batched GEMM per
-    /// linear layer with M = live slots (K-major for INT4), per-slot
-    /// attention against the arena, one batched head.
+    /// linear layer with M = live slots (K-major for INT4 on the
+    /// single-member serving path; member-grouped axpy on the population
+    /// path — ONE weight-stream pass per layer per step serving every
+    /// member), per-slot attention against the arena, one batched head.
     fn decode_step(&mut self) {
-        let Scheduler { mcfg, scfg, kr, p, arena, live, stats, scratch, .. } = self;
+        let Scheduler { mcfg, scfg, kr, ps, arena, live, stats, scratch, .. } = self;
         let kr = *kr;
         let m = live.len();
         let d = mcfg.d_model;
@@ -449,6 +571,9 @@ impl<'v> Scheduler<'v> {
         let dh = d / heads;
         let sp = scfg.s_prompt;
         let threads = scfg.threads;
+        let grouped = ps.len() > 1;
+        let assign: Vec<usize> =
+            if grouped { live.iter().map(|lv| lv.member).collect() } else { Vec::new() };
         resize(&mut scratch.h, m * d);
         resize(&mut scratch.x, m * d);
         resize(&mut scratch.qb, m * d);
@@ -461,18 +586,35 @@ impl<'v> Scheduler<'v> {
         resize(&mut scratch.logits, m * v);
         resize(&mut scratch.att, arena.s_max());
         // embed the token each sequence just emitted, at its own position
+        // (embeddings are fp32 and shared across members)
+        let p0 = &ps[0];
         for (i, lv) in live.iter().enumerate() {
             let tok = *lv.tokens.last().expect("decode_step after sampling") as usize;
             let pos = lv.prompt.len() + lv.tokens.len() - 1;
             for j in 0..d {
-                scratch.h[i * d + j] = p.tok_emb[tok * d + j] + p.pos_emb[pos * d + j];
+                scratch.h[i * d + j] = p0.tok_emb[tok * d + j] + p0.pos_emb[pos * d + j];
             }
         }
-        for (layer_i, layer) in p.layers.iter().enumerate() {
+        for layer_i in 0..p0.layers.len() {
+            // single-member: K-major-capable decode GEMM, untouched.
+            // grouped: ONE pass over each matrix's member set, every row
+            // under its own member's weights (contracted axpy op order).
+            macro_rules! mm {
+                ($field:ident, $x:expr, $out:expr) => {{
+                    if grouped {
+                        let lins: Vec<&gemm::Lin> =
+                            ps.iter().map(|p| &p.layers[layer_i].$field).collect();
+                        gemm::matmul_grouped_with($x, m, &lins, &assign, $out, threads, kr);
+                    } else {
+                        gemm::matmul_decode($x, m, &ps[0].layers[layer_i].$field, $out, threads, kr);
+                    }
+                }};
+            }
+            let layer = &ps[0].layers[layer_i];
             native::layernorm(&scratch.h, d, layer.ln1_g, layer.ln1_b, &mut scratch.x);
-            gemm::matmul_decode(&scratch.x, m, &layer.wq, &mut scratch.qb, threads, kr);
-            gemm::matmul_decode(&scratch.x, m, &layer.wk, &mut scratch.kb, threads, kr);
-            gemm::matmul_decode(&scratch.x, m, &layer.wv, &mut scratch.vb, threads, kr);
+            mm!(wq, &scratch.x, &mut scratch.qb);
+            mm!(wk, &scratch.x, &mut scratch.kb);
+            mm!(wv, &scratch.x, &mut scratch.vb);
             for (i, lv) in live.iter().enumerate() {
                 let pos = sp + lv.tokens.len() - 1;
                 arena.write_kv(
@@ -495,22 +637,22 @@ impl<'v> Scheduler<'v> {
                 &mut scratch.att,
                 &mut scratch.ab,
             );
-            gemm::matmul_decode(&scratch.ab, m, &layer.wo, &mut scratch.pj, threads, kr);
+            mm!(wo, &scratch.ab, &mut scratch.pj);
             for i in 0..m * d {
                 scratch.h[i] += scratch.pj[i];
             }
             native::layernorm(&scratch.h, d, layer.ln2_g, layer.ln2_b, &mut scratch.x);
-            gemm::matmul_decode(&scratch.x, m, &layer.w1, &mut scratch.ff, threads, kr);
+            mm!(w1, &scratch.x, &mut scratch.ff);
             for fv in scratch.ff.iter_mut() {
                 *fv = native::gelu(*fv);
             }
-            gemm::matmul_decode(&scratch.ff, m, &layer.w2, &mut scratch.ff2, threads, kr);
+            mm!(w2, &scratch.ff, &mut scratch.ff2);
             for i in 0..m * d {
                 scratch.h[i] += scratch.ff2[i];
             }
         }
         let rows: Vec<usize> = (0..m).collect();
-        native::head_rows(mcfg, threads, kr, p, &scratch.h, &rows, &mut scratch.logits);
+        native::head_rows(mcfg, threads, kr, &ps[0], &scratch.h, &rows, &mut scratch.logits);
         for (i, lv) in live.iter_mut().enumerate() {
             lv.logits.copy_from_slice(&scratch.logits[i * v..(i + 1) * v]);
         }
@@ -660,6 +802,78 @@ pub fn rollout_round<'v>(
     let outs = run_requests(backend, view, overrides, emb_t, scfg, reqs)?;
     let mut it = outs.into_iter();
     Ok(spans.iter().map(|&n| it.by_ref().take(n).map(|o| o.text).collect()).collect())
+}
+
+/// A whole POPULATION's round rollout through one grouped scheduler:
+/// ONE resolve pass and one weight-stream walk per layer per step serve
+/// every member. `member_overrides[j]` / `member_seeds[j]` are member
+/// `j`'s perturbed lattices and decode-sampling seed; returns
+/// completions as `[member][batch][row]`.
+///
+/// Bit-identical to calling [`rollout_round`] once per member with the
+/// same overrides/seed: per-request seeds use the identical formula, the
+/// grouped GEMM preserves each row's per-element op sequence under its
+/// own member's weights, and per-sequence results are batch-invariant —
+/// so interleaving members changes nothing (enforced across member
+/// counts × slots × threads × kernels by `tests/scheduler.rs`).
+pub fn rollout_round_grouped<'v>(
+    backend: &NativeBackend,
+    view: &ParamsView<'v>,
+    member_overrides: &'v [Vec<Vec<i8>>],
+    emb_t: Option<&'v [f32]>,
+    batches: &[GenBatch],
+    tau: f32,
+    member_seeds: &[Option<u64>],
+) -> Result<Vec<Vec<Vec<String>>>> {
+    let members = member_overrides.len();
+    anyhow::ensure!(members > 0, "grouped rollout: zero members");
+    anyhow::ensure!(
+        member_seeds.len() == members,
+        "grouped rollout: {} seeds for {} members",
+        member_seeds.len(),
+        members
+    );
+    let mut scfg = SchedCfg::for_round(backend.cfg(), members);
+    scfg.threads = backend.gemm_threads();
+    let t_max = scfg.t_max;
+    let mut sched = Scheduler::new_grouped(backend, view, member_overrides, emb_t, scfg)?;
+    let mut tickets = Vec::new();
+    for (j, &seed) in member_seeds.iter().enumerate() {
+        for (bi, batch) in batches.iter().enumerate() {
+            for ri in 0..batch.n_real {
+                // the same (member seed, batch, row) -> request-seed map
+                // as rollout_round, so sampled decode draws the exact
+                // same gumbel streams as the sequential path
+                let req = GenRequest {
+                    prompt: tokenizer::encode(&batch.problems[ri].prompt),
+                    max_new: t_max,
+                    tau,
+                    seed: seed.map(|s| {
+                        s ^ (((bi as u64) << 20) | ri as u64)
+                            .wrapping_add(1)
+                            .wrapping_mul(STEP_MIX)
+                    }),
+                };
+                tickets.push(sched.submit_member(j, req)?);
+            }
+        }
+    }
+    sched.run()?;
+    let mut it = tickets.into_iter();
+    let mut out = Vec::with_capacity(members);
+    for _ in 0..members {
+        let mut per_batch = Vec::with_capacity(batches.len());
+        for batch in batches {
+            let mut texts = Vec::with_capacity(batch.n_real);
+            for _ in 0..batch.n_real {
+                let t = it.next().expect("ticket arithmetic is exact");
+                texts.push(sched.take(t).context("scheduler lost a ticket")?.text);
+            }
+            per_batch.push(texts);
+        }
+        out.push(per_batch);
+    }
+    Ok(out)
 }
 
 /// Greedy completions for a prompt list (accuracy eval): the whole set

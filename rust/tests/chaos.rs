@@ -13,6 +13,9 @@
 //! 3. Below-quorum rounds error identically on both topologies.
 //! 4. A run interrupted at a checkpoint and resumed is bit-identical to
 //!    an uninterrupted one, for every optimizer variant.
+//! 5. Cross-member grouped rollout (PR 7) is invisible to all of the
+//!    above: the same plan yields the same failed-member set and the
+//!    same committed lattice with grouping forced on or off.
 
 use std::sync::Arc;
 
@@ -198,6 +201,40 @@ fn degraded_rounds_commit_identically_across_topologies() {
         let (fails, got) = run(&man, &q, &cfg, Variant::Qes, workers, plan).unwrap();
         assert_eq!(fails, expected, "pool failed set diverged ({} workers)", workers);
         assert_eq!(got, want, "degraded lattice diverged ({} workers)", workers);
+    }
+}
+
+#[test]
+fn fault_plan_determinism_survives_grouped_rollout() {
+    // PR 6's contract under PR 7's grouping: the committed failed-member
+    // set and lattice are a pure function of the FaultPlan whether a
+    // round evaluates per member sequentially or through grouped
+    // member-batch jobs. Eval faults are charged per member BEFORE the
+    // clean subset enters the one grouped evaluation, and results are
+    // emitted in the original member order, so retry accounting and the
+    // drop/delay fault keys are identical on both paths.
+    let man = manifest();
+    let q = quant_store(&man, 12);
+    let plan = degrading_plan();
+    let expected = expected_failures(&plan);
+    assert!(expected.iter().sum::<usize>() > 0);
+
+    let mut cfg = base_cfg();
+    cfg.min_quorum = 0.5;
+    cfg.faults = plan;
+    // reference: grouping forced OFF (per-member sequential evaluation)
+    cfg.grouped = false;
+    let (fail_seq, want) = run(&man, &q, &cfg, Variant::Qes, 0, plan).unwrap();
+    assert_eq!(fail_seq, expected, "sequential failed set diverged from the plan");
+
+    // grouping forced ON: inline round-level grouped eval (0 workers)
+    // and grouped member-batch pool jobs (1/2 workers) must converge to
+    // the same set and the same bits
+    cfg.grouped = true;
+    for workers in [0usize, 1, 2] {
+        let (fails, got) = run(&man, &q, &cfg, Variant::Qes, workers, plan).unwrap();
+        assert_eq!(fails, expected, "grouped failed set diverged ({} workers)", workers);
+        assert_eq!(got, want, "grouped lattice diverged from sequential ({} workers)", workers);
     }
 }
 

@@ -9,7 +9,7 @@
 use std::sync::Arc;
 
 use qes::coordinator::{
-    eval_problems, finetune_store, pretrain_gen, EngineSet, FinetuneCfg, GenBatch,
+    eval_problems, finetune_store, pretrain_gen, ClsWorkload, EngineSet, FinetuneCfg, GenBatch,
     GenWorkload, LmBatch, MemberScratch, PretrainCfg, Session, Variant, WorkerPool, Workload,
 };
 use qes::model::{checkpoint, init::init_fp, AsParams, ParamStore, ShardedParamStore};
@@ -329,6 +329,71 @@ fn perturbed_rollouts_match_between_inline_and_pool_topology() {
     match pool.shutdown() {
         Ok(()) => {}
         Err(e) => assert!(faults_active, "clean pool shutdown failed: {:#}", e),
+    }
+}
+
+#[test]
+fn grouped_round_eval_matches_per_member_for_gen_and_cls() {
+    // Round-level grouped evaluation (`FinetuneCfg::grouped`) must be
+    // bit-identical to the per-member sequential walk for BOTH workload
+    // families: Gen rollouts (greedy and sampled) and Cls CE scoring.
+    // The scheduler-layer equivalence matrix lives in tests/scheduler.rs;
+    // this pins the coordinator layer on top of it (population expansion,
+    // gumbel-seed derivation, reward/CE reduction).
+    let man = manifest();
+    let fp = fp_store(&man, 12);
+    let q = ParamStore::quantize_from(&fp, &man, Format::Int4, None).unwrap();
+    let view = q.params_view();
+    let spec = PopulationSpec { gen_seed: 91, pairs: 2, sigma: 0.05 };
+    let members: Vec<usize> = (0..4).collect();
+
+    let gen_session = Session::new(&man, "nano", Format::Int4, EngineSet::gen_only()).unwrap();
+    for tau in [0.0f32, 0.7] {
+        let cfg =
+            FinetuneCfg { tau, train_pool: 16, eval_n: 4, grouped: true, ..Default::default() };
+        let wl = GenWorkload::new(
+            gen_task("countdown", gen_session.cfg.s_prompt, gen_session.cfg.t_dec).unwrap(),
+            &gen_session.cfg,
+            &cfg,
+        );
+        let round = wl.build_round(7).unwrap();
+        let mut scratch = MemberScratch::default();
+        let grouped =
+            wl.eval_members(&gen_session, &view, &spec, &members, round.as_ref(), &mut scratch);
+        // prove the grouped fast path actually ran (it fills the
+        // per-member override scratch; the sequential walk never does)
+        assert_eq!(scratch.member_overrides.len(), members.len());
+        for (&m, g) in members.iter().zip(grouped) {
+            let want = wl
+                .eval_member(&gen_session, &view, &spec, m, round.as_ref(), &mut scratch)
+                .unwrap();
+            assert_eq!(
+                want.to_bits(),
+                g.unwrap().to_bits(),
+                "gen reward moved under grouping (member {} tau {})",
+                m,
+                tau
+            );
+        }
+    }
+
+    let cls_session = Session::new(&man, "nano", Format::Int4, EngineSet::cls_only()).unwrap();
+    let cfg = FinetuneCfg { eval_n: 4, grouped: true, ..Default::default() };
+    let wl = ClsWorkload::new(qes::tasks::cls_task("snli").unwrap(), &cls_session.cfg, &cfg, 2);
+    let round = wl.build_round(0).unwrap();
+    let mut scratch = MemberScratch::default();
+    let grouped =
+        wl.eval_members(&cls_session, &view, &spec, &members, round.as_ref(), &mut scratch);
+    assert_eq!(scratch.member_overrides.len(), members.len());
+    for (&m, g) in members.iter().zip(grouped) {
+        let want =
+            wl.eval_member(&cls_session, &view, &spec, m, round.as_ref(), &mut scratch).unwrap();
+        assert_eq!(
+            want.to_bits(),
+            g.unwrap().to_bits(),
+            "cls loss moved under grouping (member {})",
+            m
+        );
     }
 }
 

@@ -12,6 +12,7 @@
 use qes::coordinator::{eval_problems, EngineSet, GenBatch, Session};
 use qes::kernel::{self, KernelKind};
 use qes::model::{init::init_fp, AsParams, ParamStore};
+use qes::opt::{apply_population_into, KernelPolicy, PopulationSpec};
 use qes::quant::Format;
 use qes::runtime::{Manifest, NativeBackend};
 use qes::sched::{self, serve, GenRequest, SchedCfg, Scheduler};
@@ -421,4 +422,173 @@ fn scheduler_reuses_one_resolve_for_many_requests() {
     for t in tickets {
         assert!(sched.take(t).is_some());
     }
+}
+
+/// Per-member perturbed lattices for a `pop`-member population (the
+/// exact overrides the training loop would hand the grouped rollout).
+fn population_overrides(q: &ParamStore, pop: usize, gen_seed: u64) -> Vec<Vec<Vec<i8>>> {
+    let spec = PopulationSpec { gen_seed, pairs: (pop + 1) / 2, sigma: 0.02 };
+    let members: Vec<usize> = (0..pop).collect();
+    let mut ovs: Vec<Vec<Vec<i8>>> = Vec::new();
+    apply_population_into(q, &spec, &members, 7, &mut ovs, KernelPolicy::default());
+    ovs
+}
+
+#[test]
+fn grouped_rollout_bit_identical_to_per_member_sequential() {
+    // The tentpole contract: a whole population evaluated through ONE
+    // grouped scheduler must reproduce the per-member sequential rollout
+    // bit-for-bit — for greedy AND sampled decode, across population
+    // sizes, on batches with padding rows. Each grouped row computes
+    // under its own member's weights in the same per-element op order,
+    // and request seeds use the identical (member seed, batch, row) map,
+    // so equality is exact by construction.
+    let (man, q) = quant_store(83);
+    let cfg = man.config("nano").unwrap().clone();
+    let nb = NativeBackend::new(&man, "nano", Format::Int4).unwrap();
+    let view = q.params_view();
+    let all = problems(&man, cfg.b_gen + 3, 21);
+    let full = GenBatch::build(&cfg, all[..cfg.b_gen].to_vec());
+    let ragged = GenBatch::build(&cfg, all[cfg.b_gen..].to_vec()); // n_real = 3 < b_gen
+    let batches = vec![full, ragged];
+
+    for &pop in &[1usize, 2, 4] {
+        let ovs = population_overrides(&q, pop, 0xA5A5 + pop as u64);
+        let mut by_tau = Vec::new();
+        for tau in [0.0f32, 0.7] {
+            let seeds: Vec<Option<u64>> = (0..pop)
+                .map(|m| (tau > 0.0).then(|| 0xbeef_u64 ^ (m as u64) << 17))
+                .collect();
+            let grouped =
+                sched::rollout_round_grouped(&nb, &view, &ovs, None, &batches, tau, &seeds)
+                    .unwrap();
+            assert_eq!(grouped.len(), pop);
+            for (m, &seed) in seeds.iter().enumerate() {
+                let want =
+                    sched::rollout_round(&nb, &view, Some(&ovs[m]), None, &batches, tau, seed)
+                        .unwrap();
+                assert_eq!(
+                    want, grouped[m],
+                    "grouped rollout diverged from sequential (pop={} member={} tau={})",
+                    pop, m, tau
+                );
+            }
+            by_tau.push(grouped);
+        }
+        // sanity: the sampled leg actually sampled
+        assert_ne!(by_tau[0], by_tau[1], "tau=0.7 must differ from greedy (pop={})", pop);
+    }
+}
+
+#[test]
+fn grouped_decode_invariant_slots_threads_kernels_orders() {
+    // Member-tagged batch invariance: with sequences from DIFFERENT
+    // members sharing the decode batch, output tokens stay bit-identical
+    // across slot counts × submission orders × thread counts × every
+    // detected microkernel (axpy decode form — the training contract).
+    let (man, q) = quant_store(47);
+    let cfg = man.config("nano").unwrap().clone();
+    let nb = NativeBackend::new(&man, "nano", Format::Int4).unwrap();
+    let view = q.params_view();
+    let pop = 3usize;
+    let ovs = population_overrides(&q, pop, 77);
+    let probs = problems(&man, 2, 9);
+    let reqs = requests(&probs, cfg.t_dec, 0.0, None);
+
+    // reference: each member alone through a single-slot scalar scheduler
+    let base_cfg = SchedCfg {
+        slots: 1,
+        s_prompt: cfg.s_prompt,
+        t_max: cfg.t_dec,
+        threads: 1,
+        kmajor: false,
+        kernel: Some(KernelKind::Scalar),
+    };
+    let mut reference: Vec<Vec<Vec<i32>>> = Vec::new(); // [member][request] -> tokens
+    for ov in &ovs {
+        let outs =
+            sched::run_requests(&nb, &view, Some(ov), None, base_cfg.clone(), reqs.clone())
+                .unwrap();
+        reference.push(outs.into_iter().map(|o| o.tokens).collect());
+    }
+
+    let work: Vec<(usize, usize)> =
+        (0..pop).flat_map(|m| (0..reqs.len()).map(move |r| (m, r))).collect();
+    for kind in kernel::available() {
+        for &slots in &[1usize, 3, 8] {
+            for &threads in &[1usize, 4] {
+                for ord in orders(work.len()) {
+                    let scfg = SchedCfg { slots, threads, kernel: Some(kind), ..base_cfg.clone() };
+                    let mut sched = Scheduler::new_grouped(&nb, &view, &ovs, None, scfg).unwrap();
+                    let tickets: Vec<_> = ord
+                        .iter()
+                        .map(|&i| {
+                            let (m, r) = work[i];
+                            sched.submit_member(m, reqs[r].clone()).unwrap()
+                        })
+                        .collect();
+                    sched.run().unwrap();
+                    for (j, t) in tickets.into_iter().enumerate() {
+                        let (m, r) = work[ord[j]];
+                        let out = sched.take(t).unwrap();
+                        assert_eq!(
+                            reference[m][r],
+                            out.tokens,
+                            "grouped tokens diverged: kernel={} slots={} threads={} order={:?} \
+                             member={} req={}",
+                            kind.name(),
+                            slots,
+                            threads,
+                            ord,
+                            m,
+                            r
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn grouped_round_performs_exactly_one_resolve() {
+    // The whole point of grouping: a full population round pays ONE
+    // resolve+pack pass total, where the sequential shape pays one PER
+    // MEMBER (one scheduler each). `SchedStats.resolves` counts passes.
+    let (man, q) = quant_store(97);
+    let cfg = man.config("nano").unwrap().clone();
+    let nb = NativeBackend::new(&man, "nano", Format::Int4).unwrap();
+    let view = q.params_view();
+    let pop = 4usize;
+    let ovs = population_overrides(&q, pop, 13);
+    let probs = problems(&man, 3, 15);
+    let reqs = requests(&probs, cfg.t_dec, 0.0, None);
+
+    let mut sched = Scheduler::new_grouped(&nb, &view, &ovs, None, SchedCfg::for_round(&cfg, pop))
+        .unwrap();
+    // the single pass is paid at construction, before any submission
+    assert_eq!(sched.stats().resolves, 1);
+    assert_eq!(sched.stats().members, pop);
+    let tickets: Vec<_> = (0..pop)
+        .flat_map(|m| reqs.iter().map(move |r| (m, r.clone())))
+        .map(|(m, r)| sched.submit_member(m, r).unwrap())
+        .collect();
+    sched.run().unwrap();
+    // an entire round (every member × every request) still cost ONE pass
+    assert_eq!(sched.stats().resolves, 1, "grouped round must resolve+pack exactly once");
+    assert_eq!(sched.stats().retired as usize, pop * reqs.len());
+    for t in tickets {
+        assert!(sched.take(t).is_some());
+    }
+
+    // the sequential shape this replaces: one resolve per member
+    let seq_total: u64 = ovs
+        .iter()
+        .map(|ov| {
+            let s = Scheduler::new(&nb, &view, Some(ov), None, SchedCfg::for_model(&cfg)).unwrap();
+            assert_eq!(s.stats().members, 1);
+            s.stats().resolves
+        })
+        .sum();
+    assert_eq!(seq_total, pop as u64);
 }
