@@ -81,13 +81,39 @@ fn main() -> anyhow::Result<()> {
             human_bytes(plan.shard_len as u64),
         );
         println!(
-            "  snapshot publish: {} Arc bumps (~{}) + {}/{} dirty shards COW-copied ({}) — vs full clone {}\n",
+            "  snapshot publish: {} Arc bumps (~{}) + {}/{} dirty shards COW-copied ({}) — vs full clone {}",
             plan.n_shards,
             human_bytes(publish_bytes),
             dirty,
             plan.n_shards,
             human_bytes(cow_bytes),
             human_bytes(full_clone_bytes),
+        );
+
+        // --- serving-side KV arena: paged vs dense (per size) ---
+        // the paged arena allocates bytes/page on demand, so resident KV
+        // tracks occupancy; the dense model reserved bytes/slot x slots
+        // up front whatever the sequences actually used
+        let c = man.config(size)?;
+        let s_max = c.s_prompt + c.t_dec;
+        let page_rows = match qes::sched::default_page_rows() {
+            0 => s_max,
+            p => p.min(s_max),
+        };
+        let slot_bytes = c.n_layers * 2 * s_max * c.d_model * 4;
+        let page_bytes = c.n_layers * 2 * page_rows * c.d_model * 4;
+        // a typical half-occupancy sequence (prompt + some decode)
+        let half_pages = (s_max / 2 + page_rows - 1) / page_rows;
+        println!(
+            "  kv arena({}): dense bound {}/slot x {} slots = {} | paged {}/page ({} rows); a half-length sequence holds {} pages = {}\n",
+            size,
+            human_bytes(slot_bytes as u64),
+            c.b_gen,
+            human_bytes((slot_bytes * c.b_gen) as u64),
+            human_bytes(page_bytes as u64),
+            page_rows,
+            half_pages,
+            human_bytes((half_pages * page_bytes) as u64),
         );
     }
     println!(

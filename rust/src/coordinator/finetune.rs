@@ -94,6 +94,14 @@ pub struct GenLog {
     /// Members that exhausted their retry budget this generation (the
     /// round committed degraded when > 0).
     pub failed_members: usize,
+    /// KV-plane telemetry drained from the schedulers this generation
+    /// retired (`sched::telemetry` — inline path only; pool workers are
+    /// separate processes and keep their own counters): pages-in-use
+    /// high-water, prefix-cache hits, and copy-on-write page forks.
+    /// Observability, never part of the determinism contract.
+    pub kv_pages_hw: u64,
+    pub kv_prefix_hits: u64,
+    pub kv_cow_forks: u64,
 }
 
 #[derive(Debug, Default)]
@@ -115,10 +123,10 @@ impl RunLog {
 
     /// Dump the reward/eval curves as CSV (Fig. 2 series).
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("gen,mean_reward,best_reward,eval_acc,update_ratio,boundary_ratio,rollout_ms,update_ms,failed_members\n");
+        let mut s = String::from("gen,mean_reward,best_reward,eval_acc,update_ratio,boundary_ratio,rollout_ms,update_ms,failed_members,kv_pages_hw,kv_prefix_hits,kv_cow_forks\n");
         for e in &self.entries {
             s.push_str(&format!(
-                "{},{:.4},{:.4},{},{:.6},{:.6},{:.2},{:.2},{}\n",
+                "{},{:.4},{:.4},{},{:.6},{:.6},{:.2},{:.2},{},{},{},{}\n",
                 e.gen,
                 e.mean_reward,
                 e.best_reward,
@@ -127,7 +135,10 @@ impl RunLog {
                 e.boundary_ratio,
                 e.rollout_ms,
                 e.update_ms,
-                e.failed_members
+                e.failed_members,
+                e.kv_pages_hw,
+                e.kv_prefix_hits,
+                e.kv_cow_forks
             ));
         }
         s
@@ -362,6 +373,10 @@ pub fn finetune_resumable(
             None
         };
         let scored: Vec<f32> = rewards.iter().filter_map(|r| *r).collect();
+        // drain the KV-plane counters the generation's schedulers left
+        // behind (rollout + any eval pass; inline path best-effort)
+        let (kv_pages_hw, kv_prefix_hits, _kv_misses, kv_cow_forks) =
+            crate::sched::telemetry::take();
         let entry = GenLog {
             gen,
             mean_reward: crate::util::mean(&scored),
@@ -372,6 +387,9 @@ pub fn finetune_resumable(
             rollout_ms,
             update_ms,
             failed_members,
+            kv_pages_hw,
+            kv_prefix_hits,
+            kv_cow_forks,
         };
         if cfg.verbose {
             println!(
@@ -482,6 +500,9 @@ pub fn finetune_mezo(
             rollout_ms,
             update_ms,
             failed_members: 0,
+            kv_pages_hw: 0,
+            kv_prefix_hits: 0,
+            kv_cow_forks: 0,
         });
     }
     log.final_acc = workload.eval_accuracy(session, &store.params_view())?;

@@ -353,6 +353,10 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
     let max_new = args.get_usize("max-new", 0)?; // 0 = model default (t_dec)
     let threads = args.get_usize("threads", 0)?; // 0 = all cores
     let no_kmajor = args.get_bool("no-kmajor");
+    // paged-KV knobs: rows per page (default = QES_PAGE / 16; "0" means
+    // one dense-equivalent page per slot) and prefix-cache entries
+    let page = args.get_usize("page", crate::sched::default_page_rows())?;
+    let prefix_cache = args.get_usize("prefix-cache", 32)?;
     let tcp = args.opt("tcp");
     let kernel_choice = crate::kernel::KernelKind::parse_choice(&args.get_or("kernel", "auto"))?;
     let pretrain_steps = args.get_usize("pretrain-steps", 400)?;
@@ -378,20 +382,29 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
     }
     scfg.threads = if threads > 0 { threads } else { parallel::default_threads() };
     scfg.kmajor = !no_kmajor;
+    scfg.page = page;
+    scfg.prefix_cache = prefix_cache;
     let view = store.params_view();
     let mcfg = backend.cfg();
     let s_max = scfg.s_prompt + scfg.t_max;
-    // bytes/slot = n_layers * 2 (K+V) * s_max * d * 4 — the KvArena
-    // memory model, reported before the arena itself is allocated
+    // the paged KvArena memory model: bytes/page = n_layers * 2 (K+V) *
+    // page * d * 4, allocated on demand as sequences grow; the dense
+    // bytes/slot number (x s_max rows) survives as the worst-case bound
+    // one slot can reach
+    let page_rows = if page == 0 { s_max } else { page.min(s_max) };
     let slot_bytes = mcfg.n_layers * 2 * s_max * mcfg.d_model * 4;
+    let page_bytes = mcfg.n_layers * 2 * page_rows * mcfg.d_model * 4;
     eprintln!(
-        "[serve] native backend | kernel {} | format {} | {} slots x {} rows ({}/slot, {} arena) | K-major {}",
+        "[serve] native backend | kernel {} | format {} | {} slots x {} rows | paged kv: {}/page x {} rows/page, on demand ({}/slot dense bound, {} arena cap) | prefix cache {} | K-major {}",
         kernel.name(),
         store.format.name(),
         scfg.slots,
         s_max,
+        crate::util::human_bytes(page_bytes as u64),
+        page_rows,
         crate::util::human_bytes(slot_bytes as u64),
         crate::util::human_bytes((scfg.slots * slot_bytes) as u64),
+        scfg.prefix_cache,
         if scfg.kmajor { "on" } else { "off" },
     );
     match tcp {
@@ -403,10 +416,20 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
             let mut sched = Scheduler::new(&backend, &view, None, None, scfg)?;
             let mut out = std::io::stdout();
             let stats = serve::serve_loop(&mut sched, &rx, &mut out)?;
+            let bpp = sched.arena().bytes_per_page();
             let s = sched.stats();
             eprintln!(
-                "[serve] done: {} responses, {} errors | {} steps, {} decode rows, max live {}",
-                stats.served, stats.errors, s.steps, s.decode_rows, s.max_live
+                "[serve] done: {} responses, {} errors | {} steps, {} decode rows, max live {} | kv pages hw {} ({}) | prefix {}/{} hit, {} cow forks",
+                stats.served,
+                stats.errors,
+                s.steps,
+                s.decode_rows,
+                s.max_live,
+                s.pages_high_water,
+                crate::util::human_bytes((s.pages_high_water * bpp) as u64),
+                s.prefix_hits,
+                s.prefix_hits + s.prefix_misses,
+                s.cow_forks
             );
         }
         Some(addr) => {

@@ -83,6 +83,23 @@ fn cmd_info(mut args: Args) -> Result<()> {
             name, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.vocab, c.s_prompt, c.t_dec,
             c.s_train, c.lattice_params
         );
+        // serving-side KV memory: the paged arena allocates bytes/page on
+        // demand, so the dense bytes/slot number is a worst-case bound
+        let s_max = c.s_prompt + c.t_dec;
+        let page_rows = match qes::sched::default_page_rows() {
+            0 => s_max,
+            p => p.min(s_max),
+        };
+        let slot_bytes = c.n_layers * 2 * s_max * c.d_model * 4;
+        let page_bytes = c.n_layers * 2 * page_rows * c.d_model * 4;
+        println!(
+            "         kv: paged {}/page ({} rows, on demand) | dense bound {}/slot x b_gen={} = {}",
+            qes::util::human_bytes(page_bytes as u64),
+            page_rows,
+            qes::util::human_bytes(slot_bytes as u64),
+            c.b_gen,
+            qes::util::human_bytes((slot_bytes * c.b_gen) as u64),
+        );
     }
     println!("\nartifacts ({}):", man.artifacts().len());
     for a in man.artifacts() {

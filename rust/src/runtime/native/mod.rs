@@ -398,6 +398,150 @@ pub(crate) fn head_rows(
     gemm::matmul_with(&hf, rows.len(), &lin, out, threads, kr);
 }
 
+/// One layer's read-only view of a sequence's cached prefix K/V rows,
+/// resolved through the scheduler's paged arena: logical position `pos`
+/// (< `len`) lives at `(table[pos / page] * page + pos % page) * d` in
+/// `k`/`v`. Keeps the suffix forward free of any arena dependency.
+pub(crate) struct PrefixKv<'a> {
+    pub(crate) k: &'a [f32],
+    pub(crate) v: &'a [f32],
+    pub(crate) table: &'a [u32],
+    pub(crate) page: usize,
+    pub(crate) len: usize,
+}
+
+/// A suffix-only prefill pass: final hidden states and per-layer k/v
+/// rows for positions `lc..prompt.len()` only.
+pub(crate) struct SuffixForward {
+    pub(crate) h: Vec<f32>,
+    pub(crate) kvs: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+/// Prefill continuation for a prefix-cache hit: compute ONLY rows
+/// `lc..prompt.len()` of one sequence, attending to the `lc` cached
+/// prefix rows through `prefix` (one [`PrefixKv`] per layer) and to the
+/// locally-computed suffix rows.
+///
+/// # Bit-identity with the cold batched prefill
+///
+/// Every op a suffix row runs here is the op [`forward_full`] runs for
+/// that row: the GEMMs go through the same `matmul_with` (each output
+/// row accumulated independently in K order, so the row set in the call
+/// doesn't matter), layernorm/GELU/residuals are row-wise, and the
+/// attention walks keys in the same logical order with the same
+/// scale/softmax/V-accumulate sequence — the left-pad and causal-future
+/// positions the cold path biases to `NEG_INF` contribute EXACT zeros
+/// there (`exp` underflows to +0.0, and adding ±0.0 never changes an
+/// accumulator that starts at +0.0), so simply omitting them is
+/// bit-identical. Cached prefix rows are bit-identical to a cold
+/// recompute because a causal row depends only on the tokens at and
+/// before its logical position. The one exception is W8A8, whose
+/// per-call activation grid spans all rows of a call — the scheduler
+/// disables prefix adoption for that format.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_suffix(
+    cfg: &ModelConfig,
+    threads: usize,
+    kr: &dyn DotKernel,
+    p: &NativeParams<'_>,
+    prompt: &[u8],
+    lc: usize,
+    prefix: &[PrefixKv<'_>],
+) -> SuffixForward {
+    let d = cfg.d_model;
+    let heads = cfg.n_heads;
+    let dh = d / heads;
+    let l = prompt.len();
+    debug_assert!(lc < l, "suffix forward needs at least one live row");
+    debug_assert_eq!(prefix.len(), p.layers.len());
+    let rows = l - lc;
+    let mut h = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let tok = prompt[lc + r] as usize;
+        let pos = lc + r;
+        for j in 0..d {
+            h[r * d + j] = p.tok_emb[tok * d + j] + p.pos_emb[pos * d + j];
+        }
+    }
+    let mut x = vec![0.0f32; rows * d];
+    let mut qb = vec![0.0f32; rows * d];
+    let mut kb = vec![0.0f32; rows * d];
+    let mut vb = vec![0.0f32; rows * d];
+    let mut ab = vec![0.0f32; rows * d];
+    let mut pj = vec![0.0f32; rows * d];
+    let mut ff = vec![0.0f32; rows * cfg.d_ff];
+    let mut ff2 = vec![0.0f32; rows * d];
+    let mut att = vec![0.0f32; l];
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut kvs = Vec::with_capacity(p.layers.len());
+    for (li, layer) in p.layers.iter().enumerate() {
+        layernorm(&h, d, layer.ln1_g, layer.ln1_b, &mut x);
+        gemm::matmul_with(&x, rows, &layer.wq, &mut qb, threads, kr);
+        gemm::matmul_with(&x, rows, &layer.wk, &mut kb, threads, kr);
+        gemm::matmul_with(&x, rows, &layer.wv, &mut vb, threads, kr);
+        let px = &prefix[li];
+        debug_assert_eq!(px.len, lc);
+        ab.fill(0.0);
+        for sq in 0..rows {
+            for hh in 0..heads {
+                let qo = sq * d + hh * dh;
+                // keys: cached prefix rows through the page table, then
+                // the local suffix rows, in logical order
+                for sk in 0..lc {
+                    let pid = px.table[sk / px.page] as usize;
+                    let ko = (pid * px.page + sk % px.page) * d + hh * dh;
+                    let mut dot = 0.0f32;
+                    for j in 0..dh {
+                        dot += qb[qo + j] * px.k[ko + j];
+                    }
+                    att[sk] = dot * scale;
+                }
+                for sk in lc..=lc + sq {
+                    let ko = (sk - lc) * d + hh * dh;
+                    let mut dot = 0.0f32;
+                    for j in 0..dh {
+                        dot += qb[qo + j] * kb[ko + j];
+                    }
+                    att[sk] = dot * scale;
+                }
+                let st = lc + sq + 1;
+                softmax_inplace(&mut att[..st]);
+                let oo = sq * d + hh * dh;
+                for sk in 0..lc {
+                    let w = att[sk];
+                    let pid = px.table[sk / px.page] as usize;
+                    let vo = (pid * px.page + sk % px.page) * d + hh * dh;
+                    for j in 0..dh {
+                        ab[oo + j] += w * px.v[vo + j];
+                    }
+                }
+                for sk in lc..st {
+                    let w = att[sk];
+                    let vo = (sk - lc) * d + hh * dh;
+                    for j in 0..dh {
+                        ab[oo + j] += w * vb[vo + j];
+                    }
+                }
+            }
+        }
+        gemm::matmul_with(&ab, rows, &layer.wo, &mut pj, threads, kr);
+        for i in 0..rows * d {
+            h[i] += pj[i];
+        }
+        layernorm(&h, d, layer.ln2_g, layer.ln2_b, &mut x);
+        gemm::matmul_with(&x, rows, &layer.w1, &mut ff, threads, kr);
+        for fv in ff.iter_mut() {
+            *fv = gelu(*fv);
+        }
+        gemm::matmul_with(&ff, rows, &layer.w2, &mut ff2, threads, kr);
+        for i in 0..rows * d {
+            h[i] += ff2[i];
+        }
+        kvs.push((kb.clone(), vb.clone()));
+    }
+    SuffixForward { h, kvs }
+}
+
 impl ForwardBackend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"

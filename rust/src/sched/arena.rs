@@ -1,53 +1,119 @@
-//! Slot-based KV arena: the scheduler's cache memory.
+//! Paged KV arena: the scheduler's cache memory.
 //!
-//! Per layer, one `[slots, s_max, d]` f32 slab for keys and one for
-//! values, plus a `[slots, s_max]` key mask — the same `[b, st, d]`
-//! geometry `NativeBackend::generate` allocates per call, except the
-//! slots outlive any single request: a free-list hands them to admitted
-//! sequences and recycles them the moment a sequence retires, so a
-//! long-running scheduler serves an unbounded request stream from a
-//! fixed-size arena (`bytes_per_slot` = `n_layers · 2 · s_max · d · 4`).
+//! Storage is a pool of fixed-size PAGES (`page` rows × `d` floats, K and
+//! V across all layers) handed out on demand, with a per-slot PAGE TABLE
+//! mapping logical positions to pages: `pid = table[pos / page]`, row
+//! offset `(pid * page + pos % page) * d`. A slot no longer reserves the
+//! worst-case `s_max` rows — pages materialize as a sequence grows and
+//! return to the pool the moment it retires, so [`KvArena::bytes`] tracks
+//! ACTUAL occupancy instead of `slots × s_max` (the dense model survives
+//! as [`KvArena::bytes_per_slot`], the worst-case bound one slot can
+//! reach).
 //!
-//! Recycling never needs to zero the K/V rows: allocation clears only
-//! the slot's key mask, and the scheduler attends exclusively to
-//! positions it has written for the CURRENT occupant (masked positions
-//! contribute exactly zero attention weight), so stale rows from a
-//! previous occupant are unreachable — the aliasing property the unit
-//! tests pin.
+//! Rows live at their LOGICAL positions (prompt token `j` at row `j`,
+//! decode step `t` at row `len + t`): no left-pad rows are stored and no
+//! key mask exists — the scheduler attends to exactly the `0..st` rows it
+//! wrote for the current occupant, so recycled pages never need zeroing
+//! (stale rows are unreachable; the property tests pin this at page
+//! granularity). Logical addressing is also what makes a prefix row's
+//! CONTENT independent of the total prompt length, the invariant behind:
+//!
+//! # Shared-prefix caching (copy-on-write)
+//!
+//! [`KvArena::publish_prefix`] pins a primed prompt's full pages into a
+//! small FIFO cache (refcount +1 per page, keyed by `(member, tokens)` —
+//! sharing never crosses perturbed members). A later request whose token
+//! prefix matches ([`KvArena::adopt_prefix`]) maps its leading page-table
+//! entries to the SAME pages and skips recomputing those rows; the first
+//! write into a page whose refcount exceeds 1 forks a private copy at the
+//! divergence point ([`KvArena::write_kv`]) — the identical copy-on-write
+//! discipline `model/sharded.rs` applies to parameter shards. Shared
+//! pages are therefore read-only for as long as they are shared
+//! (fork-before-write, property-tested), and eviction/release simply
+//! decrement refcounts, freeing a page only when its last reader drops.
 
-/// Fixed-size slot arena holding per-layer KV slabs and key masks.
+/// Sentinel for an unmapped page-table entry.
+pub const PAGE_NONE: u32 = u32::MAX;
+
+/// One published prefix: the prompt that primed it and the full pages
+/// (refcounted) covering its leading `pages.len() * page` rows.
+struct PrefixEntry {
+    member: usize,
+    tokens: Vec<u8>,
+    pages: Vec<u32>,
+}
+
+/// Paged slot arena: page pool + per-slot page tables + prefix cache.
 pub struct KvArena {
     n_layers: usize,
     slots: usize,
     s_max: usize,
     d: usize,
-    /// Per layer: `[slots * s_max * d]` keys.
+    /// Rows per page (1..=s_max; s_max = dense-equivalent one-page slots).
+    page: usize,
+    /// Page-table entries per slot: `ceil(s_max / page)`.
+    pages_per_slot: usize,
+    /// Per layer: `[n_pages * page * d]` keys, grown on demand.
     k: Vec<Vec<f32>>,
-    /// Per layer: `[slots * s_max * d]` values.
+    /// Per layer: `[n_pages * page * d]` values.
     v: Vec<Vec<f32>>,
-    /// `[slots * s_max]`, 1.0 = attendable position of the current
-    /// occupant (left-pad positions inside the prompt stay 0).
-    keymask: Vec<f32>,
-    /// LIFO free-list (lowest slot ids surface first from a fresh arena).
+    /// Pages materialized in the pool (slab rows exist for all of them).
+    n_pages: usize,
+    /// Readers per page (slot tables + prefix-cache entries). 0 = free.
+    refcount: Vec<u32>,
+    /// LIFO pool of materialized-but-free pages.
+    free_pages: Vec<u32>,
+    /// `[slots * pages_per_slot]` page table, `PAGE_NONE` = unmapped.
+    table: Vec<u32>,
+    /// LIFO slot free-list (lowest ids surface first from a fresh arena).
     free: Vec<usize>,
     live: Vec<bool>,
     high_water: usize,
+    pages_high_water: usize,
+    /// FIFO prefix cache (capacity `prefix_cap`; 0 disables caching).
+    prefix: Vec<PrefixEntry>,
+    prefix_cap: usize,
+    prefix_hits: u64,
+    prefix_misses: u64,
+    cow_forks: u64,
 }
 
 impl KvArena {
-    pub fn new(n_layers: usize, slots: usize, s_max: usize, d: usize) -> KvArena {
+    /// `page` is clamped to `[1, s_max]`; `prefix_cap` = max cached
+    /// prefixes (0 = caching off).
+    pub fn new(
+        n_layers: usize,
+        slots: usize,
+        s_max: usize,
+        d: usize,
+        page: usize,
+        prefix_cap: usize,
+    ) -> KvArena {
         assert!(n_layers > 0 && slots > 0 && s_max > 0 && d > 0, "degenerate arena geometry");
+        let page = page.clamp(1, s_max);
+        let pages_per_slot = (s_max + page - 1) / page;
         KvArena {
             n_layers,
             slots,
             s_max,
             d,
-            k: (0..n_layers).map(|_| vec![0.0f32; slots * s_max * d]).collect(),
-            v: (0..n_layers).map(|_| vec![0.0f32; slots * s_max * d]).collect(),
-            keymask: vec![0.0f32; slots * s_max],
+            page,
+            pages_per_slot,
+            k: (0..n_layers).map(|_| Vec::new()).collect(),
+            v: (0..n_layers).map(|_| Vec::new()).collect(),
+            n_pages: 0,
+            refcount: Vec::new(),
+            free_pages: Vec::new(),
+            table: vec![PAGE_NONE; slots * pages_per_slot],
             free: (0..slots).rev().collect(),
             live: vec![false; slots],
             high_water: 0,
+            pages_high_water: 0,
+            prefix: Vec::new(),
+            prefix_cap,
+            prefix_hits: 0,
+            prefix_misses: 0,
+            cow_forks: 0,
         }
     }
 
@@ -57,6 +123,15 @@ impl KvArena {
 
     pub fn s_max(&self) -> usize {
         self.s_max
+    }
+
+    /// Rows per page (after clamping).
+    pub fn page(&self) -> usize {
+        self.page
+    }
+
+    pub fn pages_per_slot(&self) -> usize {
+        self.pages_per_slot
     }
 
     pub fn live_count(&self) -> usize {
@@ -73,63 +148,274 @@ impl KvArena {
         self.high_water
     }
 
+    /// Pages currently pinned by slot tables or the prefix cache.
+    pub fn pages_in_use(&self) -> usize {
+        self.n_pages - self.free_pages.len()
+    }
+
+    /// Most pages ever simultaneously in use.
+    pub fn pages_high_water(&self) -> usize {
+        self.pages_high_water
+    }
+
+    pub fn prefix_hits(&self) -> u64 {
+        self.prefix_hits
+    }
+
+    pub fn prefix_misses(&self) -> u64 {
+        self.prefix_misses
+    }
+
+    /// Copy-on-write page forks performed (first write into a shared page).
+    pub fn cow_forks(&self) -> u64 {
+        self.cow_forks
+    }
+
+    /// Is prefix caching configured on this arena?
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix_cap > 0
+    }
+
     pub fn is_live(&self, slot: usize) -> bool {
         self.live[slot]
     }
 
-    /// Claim a slot for a new sequence, clearing its key mask. `None`
-    /// when every slot is occupied — callers queue the request rather
-    /// than erroring; a later [`KvArena::release`] unblocks it.
+    /// Claim a slot for a new sequence. Its page table starts unmapped —
+    /// pages materialize on first write per position range. `None` when
+    /// every slot is occupied — callers queue the request rather than
+    /// erroring; a later [`KvArena::release`] unblocks it.
     pub fn alloc(&mut self) -> Option<usize> {
         let slot = self.free.pop()?;
         debug_assert!(!self.live[slot], "free-list handed out a live slot");
+        debug_assert!(
+            self.table_of(slot).iter().all(|&p| p == PAGE_NONE),
+            "freed slot kept mapped pages"
+        );
         self.live[slot] = true;
-        self.keymask[slot * self.s_max..(slot + 1) * self.s_max].fill(0.0);
         self.high_water = self.high_water.max(self.live_count());
         Some(slot)
     }
 
-    /// Recycle a finished sequence's slot back onto the free list.
+    /// Retire a finished sequence: unmap its pages (each returns to the
+    /// pool when its LAST reader drops — pages shared with the prefix
+    /// cache or other slots survive) and recycle the slot.
     pub fn release(&mut self, slot: usize) {
         assert!(self.live[slot], "released slot {} is not live", slot);
+        for ti in slot * self.pages_per_slot..(slot + 1) * self.pages_per_slot {
+            let pid = self.table[ti];
+            if pid != PAGE_NONE {
+                self.table[ti] = PAGE_NONE;
+                self.decref(pid);
+            }
+        }
         self.live[slot] = false;
         self.free.push(slot);
     }
 
-    /// Write one position's key/value rows for `slot` at layer `layer`.
+    /// Write one logical position's key/value rows for `slot` at layer
+    /// `layer`. Unmapped position ranges get a page from the pool;
+    /// writing into a SHARED page (refcount > 1) first forks a private
+    /// copy across all layers — adopted prefix pages are never written
+    /// through while shared.
     pub fn write_kv(&mut self, layer: usize, slot: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
         debug_assert!(pos < self.s_max, "position {} outside s_max {}", pos, self.s_max);
         debug_assert!(self.live[slot], "write into a slot that is not live");
+        let ti = slot * self.pages_per_slot + pos / self.page;
+        let mut pid = self.table[ti];
+        if pid == PAGE_NONE {
+            pid = self.alloc_page();
+            self.table[ti] = pid;
+        } else if self.refcount[pid as usize] > 1 {
+            pid = self.fork_page(pid);
+            self.table[ti] = pid;
+        }
         let d = self.d;
-        let off = (slot * self.s_max + pos) * d;
+        let off = (pid as usize * self.page + pos % self.page) * d;
         self.k[layer][off..off + d].copy_from_slice(krow);
         self.v[layer][off..off + d].copy_from_slice(vrow);
     }
 
-    pub fn set_mask(&mut self, slot: usize, pos: usize, m: f32) {
-        self.keymask[slot * self.s_max + pos] = m;
+    /// This slot's page table (`pages_per_slot` entries, `PAGE_NONE` =
+    /// unmapped). The attention gather walks it: position `pos` lives in
+    /// page `table[pos / page]` at in-page row `pos % page`.
+    pub fn table_of(&self, slot: usize) -> &[u32] {
+        &self.table[slot * self.pages_per_slot..(slot + 1) * self.pages_per_slot]
     }
 
+    /// Layer `layer`'s pooled key slab (`[n_pages * page * d]`).
     pub fn k_slab(&self, layer: usize) -> &[f32] {
         &self.k[layer]
     }
 
+    /// Layer `layer`'s pooled value slab.
     pub fn v_slab(&self, layer: usize) -> &[f32] {
         &self.v[layer]
     }
 
-    pub fn keymask(&self) -> &[f32] {
-        &self.keymask
+    /// Find the best cached prefix for `(member, prompt)` and map this
+    /// slot's leading page-table entries onto its pages (refcount +1
+    /// each). Returns the number of leading rows the slot can REUSE —
+    /// capped at `prompt.len() - 1` so at least one suffix row is always
+    /// computed live (its logits feed the first sampled token). The
+    /// caller computes rows `lc..len` and writes them via
+    /// [`KvArena::write_kv`], which forks the last adopted page at the
+    /// divergence point if the match ends mid-page.
+    pub fn adopt_prefix(&mut self, slot: usize, member: usize, prompt: &[u8]) -> usize {
+        if self.prefix_cap == 0 {
+            return 0;
+        }
+        debug_assert!(self.live[slot], "adopt into a slot that is not live");
+        let mut best: Option<(usize, usize)> = None; // (entry, reusable rows)
+        for (ei, e) in self.prefix.iter().enumerate() {
+            if e.member != member {
+                continue;
+            }
+            let m = e
+                .tokens
+                .iter()
+                .zip(prompt.iter())
+                .take_while(|(a, b)| a == b)
+                .count();
+            let lc = m.min(prompt.len().saturating_sub(1)).min(e.pages.len() * self.page);
+            if lc > best.map_or(0, |(_, b)| b) {
+                best = Some((ei, lc));
+            }
+        }
+        let Some((ei, lc)) = best else {
+            self.prefix_misses += 1;
+            return 0;
+        };
+        if lc == 0 {
+            self.prefix_misses += 1;
+            return 0;
+        }
+        let n_adopt = (lc + self.page - 1) / self.page;
+        let pages: Vec<u32> = self.prefix[ei].pages[..n_adopt].to_vec();
+        for (pi, &pid) in pages.iter().enumerate() {
+            self.refcount[pid as usize] += 1;
+            self.table[slot * self.pages_per_slot + pi] = pid;
+        }
+        self.prefix_hits += 1;
+        lc
     }
 
-    /// Cache bytes one slot pins across all layers (K + V).
+    /// Pin this slot's fully-covered prompt pages (`prompt.len() / page`
+    /// of them) into the prefix cache under `(member, prompt)`. No-op if
+    /// caching is off, the prompt spans no full page, or an identical
+    /// entry exists. At capacity the OLDEST entry is evicted first
+    /// (refcounts drop; its pages free once unshared). Call only after
+    /// every layer's rows `0..prompt.len()` are written.
+    pub fn publish_prefix(&mut self, slot: usize, member: usize, prompt: &[u8]) {
+        if self.prefix_cap == 0 {
+            return;
+        }
+        let n = prompt.len() / self.page;
+        if n == 0 {
+            return;
+        }
+        if self.prefix.iter().any(|e| e.member == member && e.tokens == prompt) {
+            return;
+        }
+        let base = slot * self.pages_per_slot;
+        let pages: Vec<u32> = self.table[base..base + n].to_vec();
+        debug_assert!(
+            pages.iter().all(|&p| p != PAGE_NONE),
+            "publishing a prompt whose pages are not all written"
+        );
+        for &pid in &pages {
+            self.refcount[pid as usize] += 1;
+        }
+        if self.prefix.len() == self.prefix_cap {
+            let evicted = self.prefix.remove(0);
+            for pid in evicted.pages {
+                self.decref(pid);
+            }
+        }
+        self.prefix.push(PrefixEntry { member, tokens: prompt.to_vec(), pages });
+    }
+
+    /// Cached prefix entries currently pinned.
+    pub fn prefix_len(&self) -> usize {
+        self.prefix.len()
+    }
+
+    fn decref(&mut self, pid: u32) {
+        let rc = &mut self.refcount[pid as usize];
+        debug_assert!(*rc > 0, "decref on a free page");
+        *rc -= 1;
+        if *rc == 0 {
+            // back to the pool UNZEROED: stale rows are unreachable (the
+            // scheduler attends only to rows written for the occupant)
+            self.free_pages.push(pid);
+        }
+    }
+
+    /// Hand out a free page, materializing a new one when the pool is dry
+    /// (the slabs grow; arena bytes track the high-water page count).
+    fn alloc_page(&mut self) -> u32 {
+        let pid = match self.free_pages.pop() {
+            Some(p) => p,
+            None => {
+                let pid = self.n_pages as u32;
+                self.n_pages += 1;
+                let pd = self.page * self.d;
+                for l in 0..self.n_layers {
+                    self.k[l].resize(self.n_pages * pd, 0.0);
+                    self.v[l].resize(self.n_pages * pd, 0.0);
+                }
+                self.refcount.push(0);
+                pid
+            }
+        };
+        debug_assert_eq!(self.refcount[pid as usize], 0, "pool handed out a pinned page");
+        self.refcount[pid as usize] = 1;
+        self.pages_high_water = self.pages_high_water.max(self.pages_in_use());
+        pid
+    }
+
+    /// Copy-on-write: clone `pid`'s rows (all layers, K and V) into a
+    /// fresh page for the writer, dropping one reference to the shared
+    /// original. Rows before the divergence point stay valid in the copy;
+    /// the shared page is never touched.
+    fn fork_page(&mut self, pid: u32) -> u32 {
+        let npid = self.alloc_page();
+        let pd = self.page * self.d;
+        let (src, dst) = (pid as usize * pd, npid as usize * pd);
+        for l in 0..self.n_layers {
+            self.k[l].copy_within(src..src + pd, dst);
+            self.v[l].copy_within(src..src + pd, dst);
+        }
+        self.decref(pid);
+        self.cow_forks += 1;
+        npid
+    }
+
+    /// Bytes one page pins across all layers (K + V).
+    pub fn bytes_per_page(&self) -> usize {
+        self.n_layers * 2 * self.page * self.d * 4
+    }
+
+    /// The DENSE worst-case bound: bytes one slot would pin if it grew to
+    /// `s_max` rows with no sharing — the pre-paging per-slot model,
+    /// reported next to the paged numbers by `qes info` / `qes serve`.
     pub fn bytes_per_slot(&self) -> usize {
         self.n_layers * 2 * self.s_max * self.d * 4
     }
 
-    /// Total arena footprint (slabs + key masks).
+    /// Total arena footprint: materialized page slabs PLUS bookkeeping —
+    /// page tables, refcounts, both free-lists and the prefix cache
+    /// (entry prompts + page lists) — so the number callers see is what
+    /// the arena actually holds, not just the f32 payload.
     pub fn bytes(&self) -> usize {
-        self.slots * self.bytes_per_slot() + self.keymask.len() * 4
+        let slabs = self.n_pages * self.bytes_per_page();
+        let meta = self.table.len() * 4
+            + self.refcount.len() * 4
+            + self.free_pages.len() * 4
+            + self.free.len() * 8
+            + self.live.len();
+        let cache: usize =
+            self.prefix.iter().map(|e| e.tokens.len() + e.pages.len() * 4).sum();
+        slabs + meta + cache
     }
 }
 
@@ -138,26 +424,31 @@ mod tests {
     use super::*;
     use crate::rng::SplitMix64;
 
-    fn fill_slot(a: &mut KvArena, slot: usize, tag: f32) {
+    /// Write `len` rows of a recognizable per-position pattern.
+    fn fill_rows(a: &mut KvArena, slot: usize, len: usize, tag: f32) {
         for layer in 0..a.n_layers {
-            for pos in 0..a.s_max {
-                let row: Vec<f32> = (0..a.d).map(|j| tag + j as f32).collect();
+            for pos in 0..len {
+                let row: Vec<f32> = (0..a.d).map(|j| tag + pos as f32 + j as f32).collect();
                 a.write_kv(layer, slot, pos, &row, &row);
-                a.set_mask(slot, pos, 1.0);
             }
         }
     }
 
-    fn slot_tag_intact(a: &KvArena, slot: usize, tag: f32) -> bool {
+    fn read_row(a: &KvArena, layer: usize, slot: usize, pos: usize) -> Vec<f32> {
+        let pid = a.table_of(slot)[pos / a.page()] as usize;
+        let off = (pid * a.page() + pos % a.page()) * a.d;
+        a.k_slab(layer)[off..off + a.d].to_vec()
+    }
+
+    fn rows_intact(a: &KvArena, slot: usize, len: usize, tag: f32) -> bool {
         (0..a.n_layers).all(|layer| {
-            let base = slot * a.s_max * a.d;
-            a.k_slab(layer)[base] == tag && a.v_slab(layer)[base] == tag
+            (0..len).all(|pos| read_row(a, layer, slot, pos)[0] == tag + pos as f32)
         })
     }
 
     #[test]
     fn alloc_exhausts_then_queues_and_release_unblocks() {
-        let mut a = KvArena::new(2, 4, 8, 4);
+        let mut a = KvArena::new(2, 4, 8, 4, 4, 0);
         let got: Vec<usize> = (0..4).map(|_| a.alloc().expect("4 slots")).collect();
         assert_eq!(a.live_count(), 4);
         assert!(a.alloc().is_none(), "exhausted arena must return None, not panic");
@@ -171,7 +462,7 @@ mod tests {
     fn alloc_never_returns_a_live_slot() {
         // random alloc/release storm: the free list must never hand out a
         // slot that is currently live, and ids stay in range
-        let mut a = KvArena::new(1, 8, 4, 2);
+        let mut a = KvArena::new(1, 8, 4, 2, 2, 0);
         let mut rng = SplitMix64::new(9);
         let mut held: Vec<usize> = Vec::new();
         for _ in 0..500 {
@@ -182,6 +473,7 @@ mod tests {
             } else if let Some(s) = a.alloc() {
                 assert!(s < a.slots());
                 assert!(!held.contains(&s), "slot {} double-allocated", s);
+                fill_rows(&mut a, s, a.s_max(), 100.0);
                 held.push(s);
             }
             assert_eq!(a.live_count(), held.len());
@@ -189,49 +481,132 @@ mod tests {
     }
 
     #[test]
-    fn recycling_never_aliases_live_sequences() {
-        // fill every slot with a distinguishable pattern, retire half,
-        // overwrite the recycled slots — survivors must be untouched
-        let mut a = KvArena::new(2, 6, 5, 3);
+    fn page_recycling_never_aliases_live_sequences() {
+        // the page-granular extension of the old keymask non-aliasing
+        // pin: fill every slot, retire half (their pages return to the
+        // pool), regrow into recycled pages — survivors' rows must be
+        // bit-intact even though pages recycle unzeroed
+        let mut a = KvArena::new(2, 6, 6, 3, 2, 0);
         let slots: Vec<usize> = (0..6).map(|_| a.alloc().unwrap()).collect();
         for (i, &s) in slots.iter().enumerate() {
-            fill_slot(&mut a, s, 100.0 * (i + 1) as f32);
+            fill_rows(&mut a, s, 6, 100.0 * (i + 1) as f32);
         }
+        let full = a.pages_in_use();
         for &s in slots.iter().step_by(2) {
             a.release(s);
         }
+        assert_eq!(a.pages_in_use(), full / 2, "released pages return to the pool");
         let recycled: Vec<usize> = (0..3).map(|_| a.alloc().unwrap()).collect();
         for &s in &recycled {
             assert!(slots.iter().step_by(2).any(|&r| r == s), "recycled {} was never freed", s);
-            fill_slot(&mut a, s, 9999.0);
+            fill_rows(&mut a, s, 6, 9999.0);
         }
+        assert_eq!(a.pages_in_use(), full, "regrow reuses pooled pages, no net growth");
+        assert_eq!(a.pages_high_water(), full);
         for (i, &s) in slots.iter().enumerate().skip(1).step_by(2) {
             assert!(
-                slot_tag_intact(&a, s, 100.0 * (i + 1) as f32),
-                "live slot {} clobbered by recycling",
+                rows_intact(&a, s, 6, 100.0 * (i + 1) as f32),
+                "live slot {} clobbered by page recycling",
                 s
             );
         }
     }
 
     #[test]
-    fn alloc_clears_keymask_but_not_kv() {
-        let mut a = KvArena::new(1, 2, 4, 2);
+    fn pages_materialize_on_demand_and_bytes_track_occupancy() {
+        let mut a = KvArena::new(3, 4, 10, 8, 2, 0);
+        assert_eq!(a.bytes_per_page(), 3 * 2 * 2 * 8 * 4);
+        assert_eq!(a.bytes_per_slot(), 3 * 2 * 10 * 8 * 4);
+        assert_eq!(a.pages_per_slot(), 5);
+        let empty = a.bytes();
+        assert!(empty < a.bytes_per_page(), "empty arena holds metadata only");
         let s = a.alloc().unwrap();
-        fill_slot(&mut a, s, 7.0);
+        let base = a.bytes();
+        fill_rows(&mut a, s, 3, 5.0); // 3 rows @ page=2 -> 2 pages
+        assert_eq!(a.pages_in_use(), 2);
+        // each materialized page costs its slab bytes + one refcount cell
+        assert_eq!(a.bytes(), base + 2 * (a.bytes_per_page() + 4));
+        // growing to s_max costs exactly the dense bound in slab bytes
+        fill_rows(&mut a, s, 10, 5.0);
+        assert_eq!(a.pages_in_use(), 5);
+        assert_eq!(a.bytes(), base + 5 * (a.bytes_per_page() + 4));
+        assert_eq!(5 * a.bytes_per_page(), a.bytes_per_slot());
+    }
+
+    #[test]
+    fn prefix_adoption_shares_pages_and_forks_before_write() {
+        // the fork-before-write pin: adopted prefix pages are read-only
+        // while shared — the adopter's first write forks a private copy
+        // and the publisher's rows stay bit-intact
+        let mut a = KvArena::new(2, 4, 8, 3, 4, 8);
+        let owner = a.alloc().unwrap();
+        let prompt: Vec<u8> = vec![1, 2, 3, 4, 5, 6];
+        fill_rows(&mut a, owner, 6, 100.0);
+        a.publish_prefix(owner, 0, &prompt);
+        assert_eq!(a.prefix_len(), 1);
+        let before = a.pages_in_use();
+
+        // same member, shared 5-token prefix, divergent tail
+        let adopter = a.alloc().unwrap();
+        let p2: Vec<u8> = vec![1, 2, 3, 4, 5, 9];
+        let lc = a.adopt_prefix(adopter, 0, &p2);
+        assert_eq!(lc, 4, "match 5 rows, capped to the published 1 full page (4 rows)");
+        assert_eq!(a.prefix_hits(), 1);
+        assert_eq!(a.pages_in_use(), before, "adoption maps pages, allocates none");
+        assert_eq!(a.table_of(adopter)[0], a.table_of(owner)[0], "page is shared");
+        // the adopter computes + writes rows lc.. — page 1 is fresh here
+        // (lc == page boundary), but overwriting a SHARED row must fork
+        let forks0 = a.cow_forks();
+        fill_rows(&mut a, adopter, 6, 200.0);
+        assert!(a.cow_forks() > forks0, "write into a shared page must fork");
+        assert_ne!(a.table_of(adopter)[0], a.table_of(owner)[0], "fork unshared the page");
+        assert!(rows_intact(&a, owner, 6, 100.0), "publisher rows written through the share");
+        assert!(rows_intact(&a, adopter, 6, 200.0), "fork lost the adopter's writes");
+
+        // different member must NEVER share (perturbed weights)
+        let other = a.alloc().unwrap();
+        assert_eq!(a.adopt_prefix(other, 1, &prompt), 0);
+        assert_eq!(a.prefix_misses(), 1);
+    }
+
+    #[test]
+    fn cached_pages_survive_owner_release_and_evict_fifo() {
+        let mut a = KvArena::new(1, 2, 8, 2, 2, 2);
+        let s = a.alloc().unwrap();
+        let prompt: Vec<u8> = vec![7, 7, 7, 7];
+        fill_rows(&mut a, s, 4, 10.0);
+        a.publish_prefix(s, 0, &prompt);
         a.release(s);
+        assert_eq!(a.pages_in_use(), 2, "cache pins pages past the owner's retirement");
+        // a new request still adopts from the cache
         let s2 = a.alloc().unwrap();
-        assert_eq!(s2, s);
-        let base = s * a.s_max();
-        assert!(a.keymask()[base..base + a.s_max()].iter().all(|&m| m == 0.0));
-        // K/V intentionally keeps stale data — masked out by contract
-        assert!(slot_tag_intact(&a, s, 7.0));
+        assert_eq!(a.adopt_prefix(s2, 0, &prompt), 3, "capped at len-1 rows");
+        // publishing identical (member, prompt) again is a no-op
+        fill_rows(&mut a, s2, 4, 11.0);
+        a.publish_prefix(s2, 0, &prompt);
+        assert_eq!(a.prefix_len(), 1);
+        a.release(s2);
+        // FIFO eviction at capacity drops the oldest entry's pins
+        let s3 = a.alloc().unwrap();
+        fill_rows(&mut a, s3, 4, 12.0);
+        a.publish_prefix(s3, 0, &[1, 1, 1, 1]);
+        a.release(s3);
+        let s4 = a.alloc().unwrap();
+        fill_rows(&mut a, s4, 4, 13.0);
+        a.publish_prefix(s4, 0, &[2, 2, 2, 2]);
+        a.release(s4);
+        assert_eq!(a.prefix_len(), 2, "capacity holds");
+        let s5 = a.alloc().unwrap();
+        assert_eq!(a.adopt_prefix(s5, 0, &prompt), 0, "oldest entry was evicted first");
     }
 
     #[test]
     fn memory_model_identities() {
-        let a = KvArena::new(3, 4, 10, 8);
-        assert_eq!(a.bytes_per_slot(), 3 * 2 * 10 * 8 * 4);
-        assert_eq!(a.bytes(), 4 * a.bytes_per_slot() + 4 * 10 * 4);
+        let a = KvArena::new(3, 4, 10, 8, 0, 0); // page=0 clamps to 1
+        assert_eq!(a.page(), 1);
+        let b = KvArena::new(3, 4, 10, 8, 99, 0); // page>s_max clamps to s_max
+        assert_eq!(b.page(), 10);
+        assert_eq!(b.pages_per_slot(), 1);
+        assert_eq!(b.bytes_per_page(), b.bytes_per_slot(), "full-page slots are dense");
     }
 }

@@ -10,10 +10,13 @@
 //! * [`GenRequest`]/[`GenTicket`] — submit prompts individually (variable
 //!   length, per-request decode budget, greedy or per-request-seeded
 //!   sampled decode) and collect each completion as it finishes;
-//! * [`KvArena`] — per-layer `[slots, s_max, d]` KV slabs with a
-//!   free-list: prompt priming writes the prefill rows, decode appends
-//!   one row per step, and retirement recycles the slot without touching
-//!   the rest of the batch;
+//! * [`KvArena`] — PAGED per-layer KV storage: each slot holds a page
+//!   table over fixed-size pages drawn from a shared pool, pages
+//!   materialize on demand as a sequence grows (bytes track occupancy,
+//!   not `slots × s_max`), retirement returns them to the pool, and a
+//!   same-member shared-prefix cache maps matching prompt prefixes onto
+//!   refcounted read-only pages, copy-on-write-forked at the divergence
+//!   point (the `model/sharded.rs` COW discipline applied to KV);
 //! * [`Scheduler::step`] — admit waiting requests into free slots, run
 //!   ONE batched prefill over the newly admitted and ONE batched decode
 //!   GEMM per step across ALL live slots (K-major
@@ -34,6 +37,18 @@
 //! (`SchedCfg::kmajor = false`); the K-major path inherits
 //! `dot_packed_int4`'s documented reassociation tolerance, with the
 //! scalar backend bit-identical to the axpy form by construction.
+//!
+//! Paging adds two more free dimensions to the contract: **page size**
+//! ([`SchedCfg::page`], CI-forced via `QES_PAGE`) is pure memory layout —
+//! KV rows live at the same logical positions whatever the page
+//! geometry — and a **prefix-cache hit** is bit-identical to cold
+//! priming, because arena rows are stored at LOGICAL positions (prompt
+//! token `j` at row `j`, no pad rows), which makes a causal prefix row's
+//! content independent of anything after it; the warm path
+//! (`native::forward_suffix`) recomputes only the suffix with the exact
+//! cold op sequence (see its bit-identity note for why dropping the
+//! padded attention terms is exact, and why W8A8 — whose activation
+//! grids are per-call — has the cache forced off).
 //!
 //! # Cross-member grouping: the population as one batch
 //!
@@ -86,6 +101,32 @@ const REQ_GUMBEL_SALT: u64 = 0x7363_6865_645f_6774;
 const STEP_MIX: u64 = 0x9e37_79b9_7f4a_7c15;
 const EOS_TOK: i32 = tokenizer::EOS as i32;
 
+/// Stock KV page granularity (rows per page): 16 rows keeps per-page
+/// bytes small enough that short sequences strand little capacity while
+/// the page-table walk stays a cheap shift-free index per row.
+pub const DEFAULT_PAGE_ROWS: usize = 16;
+
+/// Resolve the `QES_PAGE` env knob into the [`SchedCfg::page`] value the
+/// stock configs start from: unset → [`DEFAULT_PAGE_ROWS`], an integer →
+/// that many rows per page, `full`/`0` → one page spanning the whole
+/// slot (the dense-equivalent layout; resolved to `s_max` at build
+/// time). Results are invariant to this knob — it is how CI forces the
+/// page-size matrix over the whole test surface, mirroring
+/// `QES_KERNEL`/`QES_GROUPED`.
+pub fn default_page_rows() -> usize {
+    match std::env::var("QES_PAGE") {
+        Ok(v) => {
+            let v = v.trim().to_string();
+            if v.eq_ignore_ascii_case("full") {
+                0
+            } else {
+                v.parse::<usize>().unwrap_or(DEFAULT_PAGE_ROWS)
+            }
+        }
+        Err(_) => DEFAULT_PAGE_ROWS,
+    }
+}
+
 /// One generation request: prompt tokens plus its decode policy.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
@@ -123,6 +164,10 @@ impl GenTicket {
 pub struct GenOutput {
     pub tokens: Vec<i32>,
     pub text: String,
+    /// KV rows adopted from the shared-prefix cache at admission
+    /// (0 = cold-primed). Observability only: hits are bit-identical to
+    /// cold priming, so this never affects `tokens`/`text`.
+    pub cached: usize,
 }
 
 /// Scheduler geometry + execution knobs. Results are invariant to
@@ -144,6 +189,20 @@ pub struct SchedCfg {
     pub kmajor: bool,
     /// Pin the microkernel backend (None = the process-wide dispatch).
     pub kernel: Option<KernelKind>,
+    /// KV page granularity in rows. Pages materialize on demand as a
+    /// sequence grows, so arena bytes track occupancy instead of
+    /// `slots × s_max`; `0` = one page spanning the whole slot (the
+    /// dense-equivalent layout, resolved to `s_max` at build time).
+    /// Results are invariant to this knob — the paging dimension of the
+    /// batch-invariance contract.
+    pub page: usize,
+    /// Shared-prefix cache capacity in entries (`0` = off): primed
+    /// prompts pin their full KV pages for SAME-MEMBER reuse, refcounted
+    /// read-only, copy-on-write-forked at the divergence point. Hits are
+    /// bit-identical to cold priming, so this too is pure wall-clock
+    /// tuning (forced off for W8A8, whose per-call activation grids
+    /// break the per-row independence the identity needs).
+    pub prefix_cache: usize,
 }
 
 impl SchedCfg {
@@ -157,6 +216,8 @@ impl SchedCfg {
             threads: 1,
             kmajor: true,
             kernel: None,
+            page: default_page_rows(),
+            prefix_cache: 32,
         }
     }
 
@@ -166,7 +227,16 @@ impl SchedCfg {
     /// weight pass), axpy decode (the training contract; grouped
     /// schedulers force this off anyway), single-threaded GEMMs.
     pub fn for_round(mcfg: &ModelConfig, members: usize) -> SchedCfg {
-        SchedCfg { slots: mcfg.b_gen * members.max(1), kmajor: false, ..SchedCfg::for_model(mcfg) }
+        // prefix caching stays OFF on the training path: bit-identity
+        // holds regardless, but training rollouts keep the exact
+        // submitted-work shape so perf deltas never masquerade as
+        // training effects
+        SchedCfg {
+            slots: mcfg.b_gen * members.max(1),
+            kmajor: false,
+            prefix_cache: 0,
+            ..SchedCfg::for_model(mcfg)
+        }
     }
 }
 
@@ -186,6 +256,15 @@ pub struct SchedStats {
     pub resolves: u64,
     /// Population members this scheduler serves (1 = single-member).
     pub members: usize,
+    /// Most KV pages ever simultaneously in use (occupancy high-water;
+    /// resident KV bytes ≈ this × [`KvArena::bytes_per_page`]).
+    pub pages_high_water: usize,
+    /// Prefill admissions that adopted cached prefix pages.
+    pub prefix_hits: u64,
+    /// Prefill admissions that found no reusable prefix (cache enabled).
+    pub prefix_misses: u64,
+    /// Copy-on-write page forks (first write into a still-shared page).
+    pub cow_forks: u64,
 }
 
 /// A sequence currently occupying an arena slot.
@@ -200,6 +279,8 @@ struct Live {
     max_new: usize,
     tau: f32,
     seed: Option<u64>,
+    /// KV rows adopted from the prefix cache at admission (0 = cold).
+    cached: usize,
     /// Tokens emitted so far.
     tokens: Vec<i32>,
     /// Next-token logits for the position fed last (prefill's final row,
@@ -257,7 +338,7 @@ impl<'v> Scheduler<'v> {
         view: &ParamsView<'v>,
         overrides: Option<&'v [Vec<i8>]>,
         emb_t: Option<&'v [f32]>,
-        scfg: SchedCfg,
+        mut scfg: SchedCfg,
     ) -> Result<Scheduler<'v>> {
         Self::check_geometry(&scfg)?;
         let mcfg = backend.cfg().clone();
@@ -265,6 +346,14 @@ impl<'v> Scheduler<'v> {
             Some(kind) => kernel::by_kind(kind),
             None => kernel::active_kernel(),
         };
+        // W8A8 quantizes ACTIVATIONS on a per-call grid (absmax over all
+        // rows of the call — gemm::quantize_act), so a row's bits depend
+        // on what it was batched with and a cached prefix row could
+        // differ from its cold recompute. Every other format reads each
+        // row independently; for W8A8 the cache is simply off.
+        if backend.format() == Format::W8A8 {
+            scfg.prefix_cache = 0;
+        }
         // The K-major pack pays off where dot_packed_int4 is the 8-lane
         // FMA reduction (vector backends). On the scalar backend that dot
         // IS the sequential axpy op sequence — identical bits, slower
@@ -298,6 +387,10 @@ impl<'v> Scheduler<'v> {
             None => kernel::active_kernel(),
         };
         scfg.kmajor = false;
+        // same W8A8 gating as `Scheduler::new` (see the note there)
+        if backend.format() == Format::W8A8 {
+            scfg.prefix_cache = 0;
+        }
         let ps = backend.resolve_params_grouped(view, member_overrides, emb_t)?;
         Self::build(mcfg, scfg, kr, ps)
     }
@@ -310,7 +403,7 @@ impl<'v> Scheduler<'v> {
 
     fn build(
         mcfg: ModelConfig,
-        scfg: SchedCfg,
+        mut scfg: SchedCfg,
         kr: &'static dyn DotKernel,
         ps: Vec<NativeParams<'v>>,
     ) -> Result<Scheduler<'v>> {
@@ -323,7 +416,11 @@ impl<'v> Scheduler<'v> {
             scfg.t_max,
             max_pos
         );
-        let arena = KvArena::new(mcfg.n_layers, scfg.slots, scfg.s_prompt + scfg.t_max, d);
+        let s_max = scfg.s_prompt + scfg.t_max;
+        // resolve the page knob: 0 = one dense-equivalent page per slot
+        scfg.page = if scfg.page == 0 { s_max } else { scfg.page.min(s_max) };
+        let arena =
+            KvArena::new(mcfg.n_layers, scfg.slots, s_max, d, scfg.page, scfg.prefix_cache);
         // the ONE resolve+pack pass this scheduler will ever perform
         // happened in the constructor, serving all `ps.len()` members
         let stats = SchedStats { resolves: 1, members: ps.len(), ..SchedStats::default() };
@@ -391,7 +488,8 @@ impl<'v> Scheduler<'v> {
         let ticket = self.next_ticket;
         self.next_ticket += 1;
         if req.max_new == 0 {
-            self.done.insert(ticket, GenOutput { tokens: Vec::new(), text: String::new() });
+            self.done
+                .insert(ticket, GenOutput { tokens: Vec::new(), text: String::new(), cached: 0 });
         } else {
             self.waiting.push_back((ticket, member, req));
         }
@@ -420,6 +518,7 @@ impl<'v> Scheduler<'v> {
                 max_new: req.max_new,
                 tau: req.tau,
                 seed: req.seed,
+                cached: 0,
                 tokens: Vec::new(),
                 logits: vec![0.0f32; self.mcfg.vocab],
             });
@@ -442,7 +541,11 @@ impl<'v> Scheduler<'v> {
                 self.stats.retired += 1;
                 self.done.insert(
                     lv.ticket,
-                    GenOutput { text: tokenizer::decode_to_eos(&lv.tokens), tokens: lv.tokens },
+                    GenOutput {
+                        text: tokenizer::decode_to_eos(&lv.tokens),
+                        cached: lv.cached,
+                        tokens: lv.tokens,
+                    },
                 );
             } else {
                 i += 1;
@@ -452,7 +555,18 @@ impl<'v> Scheduler<'v> {
         if !self.live.is_empty() {
             self.decode_step();
         }
+        self.sync_kv_stats();
         Ok(true)
+    }
+
+    /// Mirror the arena's paging/prefix counters into the stats block so
+    /// `stats()` is current after every step (and at retirement — the
+    /// `Drop` impl folds the final values into [`telemetry`]).
+    fn sync_kv_stats(&mut self) {
+        self.stats.pages_high_water = self.arena.pages_high_water();
+        self.stats.prefix_hits = self.arena.prefix_hits();
+        self.stats.prefix_misses = self.arena.prefix_misses();
+        self.stats.cow_forks = self.arena.cow_forks();
     }
 
     /// Drive [`Scheduler::step`] until idle.
@@ -471,89 +585,155 @@ impl<'v> Scheduler<'v> {
         std::mem::take(&mut self.done).into_iter().map(|(t, o)| (GenTicket(t), o)).collect()
     }
 
-    /// Batched full-sequence prefill for the newly admitted sequences:
-    /// left-pad each prompt to the fixed `s_prompt` width (the geometry
-    /// that makes per-sequence results independent of the grouping), run
-    /// the shared layer stack once — across ALL members at once on the
-    /// grouped path — prime the arena slots, and read each sequence's
-    /// first next-token logits.
+    /// Batched full-sequence prefill for the newly admitted sequences.
+    ///
+    /// Each sequence first tries the arena's prefix cache
+    /// ([`KvArena::adopt_prefix`] — SAME member only; perturbed members
+    /// never share KV). Misses are left-padded to the fixed `s_prompt`
+    /// width (the geometry that makes per-sequence results independent
+    /// of the grouping) and run through ONE batched forward — across ALL
+    /// members at once on the grouped path; hits run a per-sequence
+    /// `native::forward_suffix` that computes ONLY the rows past the
+    /// adopted prefix, attending to the cached pages through the page
+    /// table. Either way the arena receives REAL rows only, at their
+    /// LOGICAL positions (pad rows are never stored — their attention
+    /// terms are exact zeros, see `forward_suffix`'s bit-identity note),
+    /// and every newly primed prompt is then published back to the
+    /// cache. Adoption is bit-identical to cold priming, so the cache is
+    /// pure wall-clock tuning.
     fn prefill(&mut self, newly: &[usize]) {
-        let sp = self.scfg.s_prompt;
-        let d = self.mcfg.d_model;
-        let v = self.mcfg.vocab;
-        let b = newly.len();
-        let mut tokens = vec![tokenizer::PAD as i32; b * sp];
-        let mut pos_ids = vec![0i32; b * sp];
-        let mut mask = vec![0.0f32; b * sp];
-        for (i, &li) in newly.iter().enumerate() {
-            let lv = &self.live[li];
-            let pad = sp - lv.prompt.len();
-            for (j, &t) in lv.prompt.iter().enumerate() {
-                tokens[i * sp + pad + j] = t as i32;
-                pos_ids[i * sp + pad + j] = j as i32;
-                mask[i * sp + pad + j] = 1.0;
+        let Scheduler { mcfg, scfg, kr, ps, arena, live, stats, scratch, .. } = self;
+        let kr = *kr;
+        let sp = scfg.s_prompt;
+        let d = mcfg.d_model;
+        let v = mcfg.vocab;
+        // split the admission wave: cold (batched full prefill) vs warm
+        // (adopted a cached prefix; suffix-only prefill)
+        let mut cold: Vec<usize> = Vec::new();
+        let mut warm: Vec<(usize, usize)> = Vec::new();
+        for &li in newly {
+            let lv = &live[li];
+            let lc = arena.adopt_prefix(lv.slot, lv.member, &lv.prompt);
+            live[li].cached = lc;
+            if lc == 0 {
+                cold.push(li);
+            } else {
+                warm.push((li, lc));
             }
         }
-        let fw = if self.ps.len() == 1 {
-            native::forward_full(
-                &self.mcfg,
-                self.scfg.threads,
-                self.kr,
-                &self.ps[0],
-                &tokens,
-                &pos_ids,
-                &mask,
-                b,
-                sp,
-                true,
-                None,
-            )
-        } else {
-            // ONE member-grouped prefill: each admitted sequence's rows
-            // run under its own member's weights in the same pass
-            let assign: Vec<usize> = newly.iter().map(|&li| self.live[li].member).collect();
-            native::forward_full_grouped(
-                &self.mcfg,
-                self.scfg.threads,
-                self.kr,
-                &self.ps,
-                &assign,
-                &tokens,
-                &pos_ids,
-                &mask,
-                b,
-                sp,
-                true,
-            )
-        };
-        for (i, &li) in newly.iter().enumerate() {
-            let slot = self.live[li].slot;
-            for (layer, (kf, vf)) in fw.kvs.iter().enumerate() {
-                for s0 in 0..sp {
-                    let src = (i * sp + s0) * d;
-                    self.arena.write_kv(layer, slot, s0, &kf[src..src + d], &vf[src..src + d]);
+        if !cold.is_empty() {
+            let b = cold.len();
+            let mut tokens = vec![tokenizer::PAD as i32; b * sp];
+            let mut pos_ids = vec![0i32; b * sp];
+            let mut mask = vec![0.0f32; b * sp];
+            for (i, &li) in cold.iter().enumerate() {
+                let lv = &live[li];
+                let pad = sp - lv.prompt.len();
+                for (j, &t) in lv.prompt.iter().enumerate() {
+                    tokens[i * sp + pad + j] = t as i32;
+                    pos_ids[i * sp + pad + j] = j as i32;
+                    mask[i * sp + pad + j] = 1.0;
                 }
             }
-            for s0 in 0..sp {
-                self.arena.set_mask(slot, s0, mask[i * sp + s0]);
+            let fw = if ps.len() == 1 {
+                native::forward_full(
+                    mcfg,
+                    scfg.threads,
+                    kr,
+                    &ps[0],
+                    &tokens,
+                    &pos_ids,
+                    &mask,
+                    b,
+                    sp,
+                    true,
+                    None,
+                )
+            } else {
+                // ONE member-grouped prefill: each admitted sequence's
+                // rows run under its own member's weights in the same pass
+                let assign: Vec<usize> = cold.iter().map(|&li| live[li].member).collect();
+                native::forward_full_grouped(
+                    mcfg,
+                    scfg.threads,
+                    kr,
+                    ps,
+                    &assign,
+                    &tokens,
+                    &pos_ids,
+                    &mask,
+                    b,
+                    sp,
+                    true,
+                )
+            };
+            for (i, &li) in cold.iter().enumerate() {
+                let (slot, len) = (live[li].slot, live[li].prompt.len());
+                let pad = sp - len;
+                // store REAL rows only, at LOGICAL positions: row j holds
+                // prompt token j whatever the padded batch geometry was,
+                // which is exactly what makes the row shareable with
+                // later prompts of different lengths
+                for (layer, (kf, vf)) in fw.kvs.iter().enumerate() {
+                    for j in 0..len {
+                        let src = (i * sp + pad + j) * d;
+                        arena.write_kv(layer, slot, j, &kf[src..src + d], &vf[src..src + d]);
+                    }
+                }
             }
+            let rows: Vec<usize> = (0..b).map(|i| i * sp + sp - 1).collect();
+            resize(&mut scratch.logits, b * v);
+            // the weight-tied head is fp32 and shared across members
+            native::head_rows(mcfg, scfg.threads, kr, &ps[0], &fw.h, &rows, &mut scratch.logits);
+            for (i, &li) in cold.iter().enumerate() {
+                live[li].logits.copy_from_slice(&scratch.logits[i * v..(i + 1) * v]);
+            }
+            stats.prefill_rows += (b * sp) as u64;
         }
-        let rows: Vec<usize> = (0..b).map(|i| i * sp + sp - 1).collect();
-        resize(&mut self.scratch.logits, b * v);
-        // the weight-tied head is fp32 and shared across members
-        native::head_rows(
-            &self.mcfg,
-            self.scfg.threads,
-            self.kr,
-            &self.ps[0],
-            &fw.h,
-            &rows,
-            &mut self.scratch.logits,
-        );
-        for (i, &li) in newly.iter().enumerate() {
-            self.live[li].logits.copy_from_slice(&self.scratch.logits[i * v..(i + 1) * v]);
+        // warm sequences: per-sequence suffix forward over just the rows
+        // past the adopted prefix — the compute the cache saved
+        for &(li, lc) in &warm {
+            let (slot, member, plen) = {
+                let lv = &live[li];
+                (lv.slot, lv.member, lv.prompt.len())
+            };
+            let prefix: Vec<native::PrefixKv<'_>> = (0..mcfg.n_layers)
+                .map(|l| native::PrefixKv {
+                    k: arena.k_slab(l),
+                    v: arena.v_slab(l),
+                    table: arena.table_of(slot),
+                    page: arena.page(),
+                    len: lc,
+                })
+                .collect();
+            let sf = native::forward_suffix(
+                mcfg,
+                scfg.threads,
+                kr,
+                &ps[member],
+                &live[li].prompt,
+                lc,
+                &prefix,
+            );
+            drop(prefix);
+            for (layer, (kf, vf)) in sf.kvs.iter().enumerate() {
+                for (r, pos) in (lc..plen).enumerate() {
+                    let src = r * d;
+                    arena.write_kv(layer, slot, pos, &kf[src..src + d], &vf[src..src + d]);
+                }
+            }
+            resize(&mut scratch.logits, v);
+            let last = [plen - lc - 1];
+            native::head_rows(mcfg, scfg.threads, kr, &ps[0], &sf.h, &last, &mut scratch.logits);
+            live[li].logits.copy_from_slice(&scratch.logits[..v]);
+            stats.prefill_rows += (plen - lc) as u64;
         }
-        self.stats.prefill_rows += (b * sp) as u64;
+        // publish every newly primed prompt (full pages only; identical
+        // entries dedupe inside the arena) so later admissions can adopt
+        for &li in newly {
+            let lv = &live[li];
+            arena.publish_prefix(lv.slot, lv.member, &lv.prompt);
+        }
     }
 
     /// One decode forward over all live sequences: one batched GEMM per
@@ -569,7 +749,6 @@ impl<'v> Scheduler<'v> {
         let v = mcfg.vocab;
         let heads = mcfg.n_heads;
         let dh = d / heads;
-        let sp = scfg.s_prompt;
         let threads = scfg.threads;
         let grouped = ps.len() > 1;
         let assign: Vec<usize> =
@@ -616,7 +795,9 @@ impl<'v> Scheduler<'v> {
             mm!(wk, &scratch.x, &mut scratch.kb);
             mm!(wv, &scratch.x, &mut scratch.vb);
             for (i, lv) in live.iter().enumerate() {
-                let pos = sp + lv.tokens.len() - 1;
+                // LOGICAL position: decode rows continue directly after
+                // the prompt rows, whatever the page geometry
+                let pos = lv.prompt.len() + lv.tokens.len() - 1;
                 arena.write_kv(
                     layer_i,
                     lv.slot,
@@ -624,12 +805,10 @@ impl<'v> Scheduler<'v> {
                     &scratch.kb[i * d..(i + 1) * d],
                     &scratch.vb[i * d..(i + 1) * d],
                 );
-                arena.set_mask(lv.slot, pos, 1.0);
             }
             attend_arena(
                 arena,
                 live,
-                sp,
                 heads,
                 dh,
                 layer_i,
@@ -660,16 +839,64 @@ impl<'v> Scheduler<'v> {
     }
 }
 
+impl Drop for Scheduler<'_> {
+    fn drop(&mut self) {
+        self.sync_kv_stats();
+        telemetry::record(&self.stats);
+    }
+}
+
+/// Process-global KV-plane telemetry, folded in as schedulers retire
+/// (`Scheduler`'s `Drop`). The finetune loop runs MANY short-lived
+/// schedulers deep inside the workload plumbing (one per grouped round,
+/// one per member otherwise, plus eval passes); these counters let the
+/// run log report paging/prefix-cache behaviour without threading a
+/// handle through every layer. Inline-path best effort by design: pool
+/// WORKERS are separate processes and keep their own counters.
+pub mod telemetry {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static PAGES_HW: AtomicU64 = AtomicU64::new(0);
+    static PREFIX_HITS: AtomicU64 = AtomicU64::new(0);
+    static PREFIX_MISSES: AtomicU64 = AtomicU64::new(0);
+    static COW_FORKS: AtomicU64 = AtomicU64::new(0);
+
+    pub(super) fn record(stats: &super::SchedStats) {
+        PAGES_HW.fetch_max(stats.pages_high_water as u64, Ordering::Relaxed);
+        PREFIX_HITS.fetch_add(stats.prefix_hits, Ordering::Relaxed);
+        PREFIX_MISSES.fetch_add(stats.prefix_misses, Ordering::Relaxed);
+        COW_FORKS.fetch_add(stats.cow_forks, Ordering::Relaxed);
+    }
+
+    /// Drain the counters accumulated since the last call: (pages
+    /// high-water, prefix hits, prefix misses, COW forks). The
+    /// high-water is a maximum across the schedulers that retired in
+    /// the interval; the rest are sums.
+    pub fn take() -> (u64, u64, u64, u64) {
+        (
+            PAGES_HW.swap(0, Ordering::Relaxed),
+            PREFIX_HITS.swap(0, Ordering::Relaxed),
+            PREFIX_MISSES.swap(0, Ordering::Relaxed),
+            COW_FORKS.swap(0, Ordering::Relaxed),
+        )
+    }
+}
+
 /// Single-position attention for every live sequence against its own
-/// arena slot — the exact per-row op sequence of
-/// `native::attend_decode`, bounded to the positions the current
-/// occupant has written (so recycled slots can never leak a previous
-/// sequence's rows into a result).
+/// slot's PAGED KV rows — the exact per-row op sequence of
+/// `native::attend_decode`, walking the slot's page table over the
+/// logical rows `0..st` the current occupant owns. There is no key mask
+/// any more: pad rows are never stored (rows live at logical positions),
+/// and stale rows in recycled pages are unreachable because the walk is
+/// bounded by the occupant's own length (pinned at page granularity by
+/// the arena's aliasing property tests). Dropping the old
+/// NEG_INF-masked pad terms is bit-identical: a `-1e9`-biased logit
+/// underflows to an exact `+0.0` softmax weight whose V-term cannot
+/// change the accumulator (see `forward_suffix`'s bit-identity note).
 #[allow(clippy::too_many_arguments)]
 fn attend_arena(
     arena: &KvArena,
     live: &[Live],
-    sp: usize,
     heads: usize,
     dh: usize,
     layer: usize,
@@ -682,28 +909,27 @@ fn attend_arena(
     let scale = 1.0 / (dh as f32).sqrt();
     let kc = arena.k_slab(layer);
     let vc = arena.v_slab(layer);
-    let keymask = arena.keymask();
-    let s_max = arena.s_max();
+    let page = arena.page();
     for (i, lv) in live.iter().enumerate() {
-        // positions 0..st belong to this occupant (last written at st-1)
-        let st = sp + lv.tokens.len();
-        let base = lv.slot * s_max;
+        // logical rows 0..st belong to this occupant (last written at
+        // st-1: the prompt rows plus one KV row per emitted token)
+        let st = lv.prompt.len() + lv.tokens.len();
+        let table = arena.table_of(lv.slot);
         for h in 0..heads {
             let qo = i * d + h * dh;
             for sk in 0..st {
-                let bias = if keymask[base + sk] > 0.0 { 0.0 } else { native::NEG_INF };
-                let ko = (base + sk) * d + h * dh;
+                let ko = (table[sk / page] as usize * page + sk % page) * d + h * dh;
                 let mut dot = 0.0f32;
                 for j in 0..dh {
                     dot += q[qo + j] * kc[ko + j];
                 }
-                logits[sk] = dot * scale + bias;
+                logits[sk] = dot * scale;
             }
             native::softmax_inplace(&mut logits[..st]);
             let oo = i * d + h * dh;
             for sk in 0..st {
                 let w = logits[sk];
-                let vo = (base + sk) * d + h * dh;
+                let vo = (table[sk / page] as usize * page + sk % page) * d + h * dh;
                 for j in 0..dh {
                     out[oo + j] += w * vc[vo + j];
                 }
@@ -783,6 +1009,10 @@ pub fn rollout_round<'v>(
     // serves the serving path (`qes serve`), where the tolerance contract
     // is acceptable and wall-clock is king.
     scfg.kmajor = false;
+    // training rollouts keep the exact submitted-work shape (same
+    // rationale as SchedCfg::for_round): adoption is bit-identical
+    // anyway, but the cache stays a serving/eval optimization
+    scfg.prefix_cache = 0;
     let t_max = scfg.t_max;
     let mut reqs = Vec::new();
     let mut spans = Vec::with_capacity(batches.len());

@@ -62,12 +62,15 @@ pub fn parse_request(
     Ok(ParsedRequest { id, req: GenRequest { prompt, max_new, tau, seed } })
 }
 
-/// Serialize a completed generation.
+/// Serialize a completed generation. `cached` reports the KV rows the
+/// prefix cache reused at admission (0 = cold-primed) — observability
+/// only, the text is bit-identical either way.
 pub fn response_line(id: &str, out: &GenOutput) -> String {
     let mut m = BTreeMap::new();
     m.insert("id".to_string(), Json::Str(id.to_string()));
     m.insert("text".to_string(), Json::Str(out.text.clone()));
     m.insert("tokens".to_string(), Json::Num(out.tokens.len() as f64));
+    m.insert("cached".to_string(), Json::Num(out.cached as f64));
     Json::Obj(m).to_string_compact()
 }
 
@@ -354,12 +357,13 @@ mod tests {
 
     #[test]
     fn response_and_error_lines_roundtrip() {
-        let out = GenOutput { tokens: vec![3, 4, 20], text: "12".to_string() };
+        let out = GenOutput { tokens: vec![3, 4, 20], text: "12".to_string(), cached: 7 };
         let r = response_line("r1", &out);
         let j = Json::parse(&r).unwrap();
         assert_eq!(j.get("id").unwrap().as_str(), Some("r1"));
         assert_eq!(j.get("text").unwrap().as_str(), Some("12"));
         assert_eq!(j.get("tokens").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("cached").unwrap().as_usize(), Some(7));
         let e = error_line("r2", "boom");
         let j = Json::parse(&e).unwrap();
         assert_eq!(j.get("error").unwrap().as_str(), Some("boom"));

@@ -4,10 +4,14 @@
 //! **batch-invariant** — output tokens bit-identical for any slot count ×
 //! admission order × thread count (and × microkernel backend on the
 //! axpy decode path; the K-major path is additionally pinned per kernel,
-//! with the scalar kernel bit-identical to the axpy form). The scheduler
-//! must also reproduce `NativeBackend::generate`'s greedy completions,
-//! queue on arena exhaustion instead of erroring, and keep the
-//! serving front end's line protocol honest.
+//! with the scalar kernel bit-identical to the axpy form). Paging adds
+//! two more free dimensions: KV page size (`SchedCfg::page`; the
+//! literals below default it from `QES_PAGE`, which CI forces over
+//! {1, 16, full}) and prefix-cache hits vs cold priming — both pinned
+//! bit-identical here. The scheduler must also reproduce
+//! `NativeBackend::generate`'s greedy completions, queue on arena
+//! exhaustion instead of erroring, and keep the serving front end's
+//! line protocol honest.
 
 use qes::coordinator::{eval_problems, EngineSet, GenBatch, Session};
 use qes::kernel::{self, KernelKind};
@@ -109,6 +113,8 @@ fn greedy_scheduler_matches_generate() {
             threads: 1,
             kmajor,
             kernel: Some(KernelKind::Scalar),
+            page: sched::default_page_rows(),
+            prefix_cache: 0,
         };
         let got: Vec<String> = sched::run_requests(nb, &view, None, None, scfg, reqs.clone())
             .unwrap()
@@ -143,6 +149,8 @@ fn greedy_batch_invariance_slots_orders_threads_kernels() {
         threads: 1,
         kmajor: false,
         kernel: Some(KernelKind::Scalar),
+        page: sched::default_page_rows(),
+        prefix_cache: 0,
     };
     let reference = run_permuted(&nb, &q, base_cfg.clone(), &reqs, &orders(8)[0]);
 
@@ -189,6 +197,8 @@ fn kmajor_decode_batch_invariant_and_scalar_exact() {
         threads: 1,
         kmajor: false,
         kernel: Some(KernelKind::Scalar),
+        page: sched::default_page_rows(),
+        prefix_cache: 0,
     };
     let axpy_ref = run_permuted(&nb, &q, axpy_scalar.clone(), &reqs, &orders(8)[0]);
 
@@ -234,6 +244,8 @@ fn sampled_decode_is_admission_order_invariant() {
         threads: 1,
         kmajor: true,
         kernel: None,
+        page: sched::default_page_rows(),
+        prefix_cache: 0,
     };
     let reference = run_permuted(&nb, &q, scfg0.clone(), &reqs, &orders(6)[0]);
     // sanity: sampling actually sampled (differs from greedy somewhere)
@@ -269,6 +281,8 @@ fn arena_exhaustion_queues_and_all_requests_complete() {
         threads: 1,
         kmajor: true,
         kernel: None,
+        page: sched::default_page_rows(),
+        prefix_cache: 0,
     };
     let mut sched = Scheduler::new(&nb, &view, None, None, scfg).unwrap();
     let tickets: Vec<_> = reqs.into_iter().map(|r| sched.submit(r).unwrap()).collect();
@@ -503,6 +517,8 @@ fn grouped_decode_invariant_slots_threads_kernels_orders() {
         threads: 1,
         kmajor: false,
         kernel: Some(KernelKind::Scalar),
+        page: sched::default_page_rows(),
+        prefix_cache: 0,
     };
     let mut reference: Vec<Vec<Vec<i32>>> = Vec::new(); // [member][request] -> tokens
     for ov in &ovs {
@@ -591,4 +607,152 @@ fn grouped_round_performs_exactly_one_resolve() {
         })
         .sum();
     assert_eq!(seq_total, pop as u64);
+}
+
+#[test]
+fn greedy_invariant_across_page_sizes() {
+    // Paging must be invisible to the numerics: K/V rows live at the
+    // same LOGICAL positions whatever the physical page layout, and the
+    // page walk only changes where a row is stored, never what it holds
+    // or the order attention reads it. Output tokens must therefore be
+    // bit-identical for every page size (1 row/page up to one full-slot
+    // page) × slot count × admission order, on both decode forms.
+    let (man, q) = quant_store(47);
+    let cfg = man.config("nano").unwrap().clone();
+    let probs = problems(&man, 6, 9);
+    let reqs = requests(&probs, cfg.t_dec, 0.0, None);
+    let nb = NativeBackend::new(&man, "nano", Format::Int4).unwrap();
+    let base_cfg = SchedCfg {
+        slots: 1,
+        s_prompt: cfg.s_prompt,
+        t_max: cfg.t_dec,
+        threads: 1,
+        kmajor: false,
+        kernel: Some(KernelKind::Scalar),
+        page: 0, // one full-slot page: the dense pre-paging layout
+        prefix_cache: 0,
+    };
+    for kmajor in [false, true] {
+        let base = SchedCfg { kmajor, ..base_cfg.clone() };
+        let reference = run_permuted(&nb, &q, base.clone(), &reqs, &orders(6)[0]);
+        for &page in &[1usize, 3, 16] {
+            for &slots in &[2usize, 6] {
+                for ord in orders(6) {
+                    let scfg = SchedCfg { page, slots, ..base.clone() };
+                    let got = run_permuted(&nb, &q, scfg, &reqs, &ord);
+                    assert_eq!(
+                        reference, got,
+                        "tokens diverged: kmajor={} page={} slots={} order={:?}",
+                        kmajor, page, slots, ord
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prefix_cache_hits_bit_identical_to_cold_priming() {
+    // Shared-prefix adoption replays CACHED K/V pages instead of
+    // recomputing them. Causal attention makes a prefix row's content
+    // independent of anything after it, so a cache-hit completion must
+    // be bit-identical to cold priming — while paying measurably fewer
+    // prefill rows.
+    let (man, q) = quant_store(31);
+    let cfg = man.config("nano").unwrap().clone();
+    let nb = NativeBackend::new(&man, "nano", Format::Int4).unwrap();
+    let view = q.params_view();
+    // four prompts sharing all but the last character, built from a real
+    // problem's charset so every char is in-vocab
+    let p0 = problems(&man, 1, 19)[0].prompt.clone();
+    let stem: String = p0.chars().cycle().take(cfg.s_prompt - 2).collect();
+    let reqs: Vec<GenRequest> = (0..4u8)
+        .map(|i| GenRequest {
+            prompt: tokenizer::encode(&format!("{}{}", stem, char::from(b'0' + i))),
+            max_new: cfg.t_dec,
+            tau: 0.0,
+            seed: None,
+        })
+        .collect();
+    // slots=1 serializes admission so requests 1..3 adopt request 0's
+    // published pages (same-wave admissions all prime cold by design)
+    let base = SchedCfg {
+        slots: 1,
+        s_prompt: cfg.s_prompt,
+        t_max: cfg.t_dec,
+        threads: 1,
+        kmajor: false,
+        kernel: Some(KernelKind::Scalar),
+        page: 4,
+        prefix_cache: 0,
+    };
+    let cold = sched::run_requests(&nb, &view, None, None, base.clone(), reqs.clone()).unwrap();
+
+    let scfg = SchedCfg { prefix_cache: 8, ..base };
+    let mut sched = Scheduler::new(&nb, &view, None, None, scfg).unwrap();
+    let tickets: Vec<_> = reqs.iter().map(|r| sched.submit(r.clone()).unwrap()).collect();
+    sched.run().unwrap();
+    let stats = sched.stats().clone();
+    assert!(stats.prefix_hits >= 3, "expected >=3 prefix hits, got {}", stats.prefix_hits);
+    // a hit skips the cached rows entirely: total prefill work must be
+    // strictly less than the cold shape's four padded prompt passes
+    assert!(
+        stats.prefill_rows < (4 * cfg.s_prompt) as u64,
+        "prefill rows {} not reduced by prefix cache",
+        stats.prefill_rows
+    );
+    for (i, t) in tickets.into_iter().enumerate() {
+        let out = sched.take(t).unwrap();
+        if i > 0 {
+            assert!(out.cached > 0, "request {} should have adopted a prefix", i);
+        }
+        assert_eq!(cold[i].tokens, out.tokens, "cache-hit tokens diverged (request {})", i);
+    }
+}
+
+#[test]
+fn grouped_rollout_invariant_to_page_size() {
+    // The training-plane guarantee: grouped population rollout produces
+    // bit-identical tokens whether the arena pages at 1 row, 16 rows, or
+    // one full-slot page — paging is a memory-layout decision, never a
+    // numerics decision.
+    let (man, q) = quant_store(47);
+    let cfg = man.config("nano").unwrap().clone();
+    let nb = NativeBackend::new(&man, "nano", Format::Int4).unwrap();
+    let view = q.params_view();
+    let pop = 2usize;
+    let ovs = population_overrides(&q, pop, 55);
+    let probs = problems(&man, 3, 23);
+    let reqs = requests(&probs, cfg.t_dec, 0.0, None);
+
+    let base = SchedCfg {
+        slots: 4,
+        s_prompt: cfg.s_prompt,
+        t_max: cfg.t_dec,
+        threads: 1,
+        kmajor: false,
+        kernel: Some(KernelKind::Scalar),
+        page: 0,
+        prefix_cache: 0,
+    };
+    let mut runs: Vec<(usize, Vec<Vec<i32>>)> = Vec::new();
+    for &page in &[0usize, 1, 16] {
+        let scfg = SchedCfg { page, ..base.clone() };
+        let mut sched = Scheduler::new_grouped(&nb, &view, &ovs, None, scfg).unwrap();
+        let tickets: Vec<_> = (0..pop)
+            .flat_map(|m| reqs.iter().map(move |r| (m, r.clone())))
+            .map(|(m, r)| sched.submit_member(m, r).unwrap())
+            .collect();
+        sched.run().unwrap();
+        let toks: Vec<Vec<i32>> =
+            tickets.into_iter().map(|t| sched.take(t).unwrap().tokens).collect();
+        runs.push((page, toks));
+    }
+    for w in runs.windows(2) {
+        assert_eq!(
+            w[0].1, w[1].1,
+            "grouped tokens diverged between page={} and page={}",
+            w[0].0, w[1].0
+        );
+    }
 }
