@@ -19,8 +19,10 @@ Reads stdin (or files passed as positional args), writes a JSON document:
 
     {"records": [...], "speedups": {case: ratio, ...}}
 
-`--require CASE` fails (exit 1) when no speedup record for CASE was seen
-— the CI gate that a bench refactor can't silently drop a tracked case.
+`--require CASE` fails (exit 1) when no record for CASE was seen — a
+speedup record (matched on its case name) or a plain measurement record
+(matched on "group/case", e.g. serve_saturation/c8). This is the CI gate
+that a bench refactor can't silently drop a tracked case.
 `--min CASE:RATIO` additionally enforces a floor on a speedup record.
 """
 
@@ -55,7 +57,8 @@ def main():
     ap.add_argument("--out", required=True, help="output JSON path")
     ap.add_argument("--require", action="append", default=[],
                     metavar="CASE",
-                    help="fail unless a speedup record for CASE exists")
+                    help="fail unless a record for CASE exists (speedup "
+                         "case name, or group/case for plain records)")
     ap.add_argument("--min", action="append", default=[],
                     metavar="CASE:RATIO",
                     help="fail unless speedup[CASE] >= RATIO")
@@ -74,10 +77,17 @@ def main():
         if r.get("group") == "speedup" and "speedup" in r
     }
 
+    # plain (non-speedup) records are addressable as "group/case"
+    plain = {
+        f"{r['group']}/{r['case']}"
+        for r in records
+        if r.get("group") != "speedup" and "group" in r and "case" in r
+    }
+
     ok = True
     for case in args.require:
-        if case not in speedups:
-            print(f"collect_bench: REQUIRED speedup record missing: {case}",
+        if case not in speedups and case not in plain:
+            print(f"collect_bench: REQUIRED record missing: {case}",
                   file=sys.stderr)
             ok = False
     for spec in args.min:

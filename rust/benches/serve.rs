@@ -1,0 +1,196 @@
+//! Serving-plane saturation bench: N concurrent clients against ONE
+//! scheduler through the connection mux (`qes::sched::mux`).
+//!
+//! Per client count the bench pre-queues every client's requests on the
+//! shared mux channel (the same event discipline the TCP accept loops
+//! produce), runs [`mux_loop`](qes::sched::mux::mux_loop) to
+//! completion, and timestamps each response as its writer channel
+//! receives it. Reported per case:
+//!
+//! * `p50_ns` / `p99_ns` — time-to-completion latency under load,
+//!   measured from serving start to response emission;
+//! * `tokens_per_s` — total generated tokens over the wall time.
+//!
+//! The `speedup` record `serve_saturation/mux8` compares the mux (8
+//! clients sharing one continuous batch) against the naive alternative
+//! — serving each connection's requests to completion one connection
+//! after another — so CI can gate on multi-tenant batching actually
+//! paying for itself (>= 1.0x).
+//!
+//! Run: `cargo bench --bench serve`
+
+use std::time::Instant;
+
+use qes::coordinator::eval_problems;
+use qes::model::{init::init_fp, AsParams, ParamStore, ParamsView};
+use qes::quant::Format;
+use qes::runtime::{Manifest, NativeBackend};
+use qes::sched::mux::{self, ConnId, MuxCfg, MuxEvent, MuxIn, Proto};
+use qes::sched::{self, GenRequest, SchedCfg, Scheduler};
+use qes::tasks::{gen_task, tokenizer};
+use qes::util::bench::report_speedup;
+use qes::util::json::Json;
+
+struct Saturation {
+    total_ns: u128,
+    p50_ns: u128,
+    p99_ns: u128,
+    tokens_per_s: f64,
+    served: u64,
+}
+
+/// Serve `reqs` spread round-robin over `nconn` connections through one
+/// mux'd scheduler, timing each response at its writer channel.
+fn saturate(
+    nb: &NativeBackend,
+    view: &ParamsView<'_>,
+    scfg: &SchedCfg,
+    reqs: &[(String, GenRequest)],
+    nconn: usize,
+) -> Saturation {
+    let (tx, rx) = std::sync::mpsc::channel::<MuxEvent>();
+    let t0 = Instant::now();
+    let mut collectors = Vec::new();
+    for c in 0..nconn {
+        let (wtx, wrx) = std::sync::mpsc::channel::<Vec<u8>>();
+        tx.send(MuxEvent { conn: ConnId(c as u64), ev: MuxIn::Open(Proto::Line, wtx) })
+            .unwrap();
+        // one collector per connection: timestamp each response line the
+        // moment it lands on the writer channel (what a client sees)
+        collectors.push(std::thread::spawn(move || {
+            let mut out: Vec<(u128, usize)> = Vec::new();
+            while let Ok(bytes) = wrx.recv() {
+                let at = t0.elapsed().as_nanos();
+                for line in String::from_utf8_lossy(&bytes).lines() {
+                    let j = Json::parse(line).expect("response json");
+                    assert!(j.get("error").is_none(), "unexpected error: {}", line);
+                    let toks = j.get("tokens").and_then(Json::as_usize).unwrap_or(0);
+                    out.push((at, toks));
+                }
+            }
+            out
+        }));
+    }
+    for (k, (prompt, req)) in reqs.iter().enumerate() {
+        let line = format!(
+            "{{\"prompt\": {}, \"max_new\": {}, \"id\": \"r{}\"}}",
+            Json::Str(prompt.clone()).to_string_compact(),
+            req.max_new,
+            k
+        );
+        tx.send(MuxEvent { conn: ConnId((k % nconn) as u64), ev: MuxIn::Line(line) }).unwrap();
+    }
+    for c in 0..nconn {
+        tx.send(MuxEvent { conn: ConnId(c as u64), ev: MuxIn::HalfClosed }).unwrap();
+    }
+    drop(tx);
+    let mut sched = Scheduler::new(nb, view, None, None, scfg.clone()).unwrap();
+    let stats = mux::mux_loop(&mut sched, &rx, &MuxCfg::default()).unwrap();
+    let total_ns = t0.elapsed().as_nanos();
+    assert_eq!(stats.served as usize, reqs.len(), "every request must be answered");
+
+    let mut latencies: Vec<u128> = Vec::new();
+    let mut tokens = 0usize;
+    for c in collectors {
+        for (at, toks) in c.join().expect("collector panicked") {
+            latencies.push(at);
+            tokens += toks;
+        }
+    }
+    latencies.sort_unstable();
+    let pct = |p: f64| latencies[((latencies.len() as f64 * p) as usize).min(latencies.len() - 1)];
+    Saturation {
+        total_ns,
+        p50_ns: pct(0.50),
+        p99_ns: pct(0.99),
+        tokens_per_s: tokens as f64 / (total_ns as f64 / 1e9),
+        served: stats.served,
+    }
+}
+
+/// The naive baseline: the same requests, but each connection's batch is
+/// served to completion before the next connection's begins (one
+/// scheduler run per connection).
+fn serial_per_conn(
+    nb: &NativeBackend,
+    view: &ParamsView<'_>,
+    scfg: &SchedCfg,
+    reqs: &[(String, GenRequest)],
+    nconn: usize,
+) -> u128 {
+    let t0 = Instant::now();
+    for c in 0..nconn {
+        let mine: Vec<GenRequest> = reqs
+            .iter()
+            .enumerate()
+            .filter(|(k, _)| k % nconn == c)
+            .map(|(_, (_, r))| r.clone())
+            .collect();
+        let outs = sched::run_requests(nb, view, None, None, scfg.clone(), mine).unwrap();
+        assert!(!outs.is_empty());
+    }
+    t0.elapsed().as_nanos()
+}
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::load("artifacts/manifest.json")?;
+    let cfg = man.config("nano")?.clone();
+    let mut fp = ParamStore::from_manifest(&man, "nano", Format::Fp32)?;
+    init_fp(&mut fp, 3);
+    let q = ParamStore::quantize_from(&fp, &man, Format::Int4, None)?;
+    let nb = NativeBackend::new(&man, "nano", Format::Int4)?;
+    let view = q.params_view();
+
+    let mut scfg = SchedCfg::for_model(&cfg);
+    scfg.slots = 8;
+    let task = gen_task("countdown", cfg.s_prompt, cfg.t_dec)?;
+    let probs = eval_problems(task.as_ref(), 16, 7);
+    let reqs: Vec<(String, GenRequest)> = probs
+        .iter()
+        .map(|p| {
+            let req = GenRequest {
+                prompt: tokenizer::encode(&p.prompt),
+                max_new: cfg.t_dec,
+                tau: 0.0,
+                seed: None,
+            };
+            (p.prompt.clone(), req)
+        })
+        .collect();
+
+    // warmup: one full serving pass before anything is timed
+    let _ = saturate(&nb, &view, &scfg, &reqs, 2);
+
+    println!("\n== bench group: serve_saturation ==");
+    println!(
+        "{:<10} {:>8} {:>12} {:>12} {:>12} {:>14}",
+        "case", "served", "total", "p50", "p99", "tokens/s"
+    );
+    let kernel = qes::kernel::active().name();
+    let mut mux8_ns = 0u128;
+    for nconn in [1usize, 4, 8] {
+        let s = saturate(&nb, &view, &scfg, &reqs, nconn);
+        if nconn == 8 {
+            mux8_ns = s.total_ns;
+        }
+        println!(
+            "{:<10} {:>8} {:>12} {:>12} {:>12} {:>14.1}",
+            format!("c{}", nconn),
+            s.served,
+            qes::util::bench::fmt_dur(std::time::Duration::from_nanos(s.total_ns as u64)),
+            qes::util::bench::fmt_dur(std::time::Duration::from_nanos(s.p50_ns as u64)),
+            qes::util::bench::fmt_dur(std::time::Duration::from_nanos(s.p99_ns as u64)),
+            s.tokens_per_s,
+        );
+        println!(
+            "BENCH {{\"group\":\"serve_saturation\",\"case\":\"c{}\",\"kernel\":\"{}\",\"clients\":{},\"requests\":{},\"total_ns\":{},\"p50_ns\":{},\"p99_ns\":{},\"tokens_per_s\":{:.1}}}",
+            nconn, kernel, nconn, s.served, s.total_ns, s.p50_ns, s.p99_ns, s.tokens_per_s,
+        );
+    }
+
+    // 8 clients through ONE mux'd scheduler vs serving each connection
+    // serially to completion — the value of cross-connection batching
+    let serial_ns = serial_per_conn(&nb, &view, &scfg, &reqs, 8);
+    report_speedup("speedup", "serve_saturation/mux8", kernel, serial_ns, mux8_ns);
+    Ok(())
+}

@@ -13,7 +13,7 @@ use crate::model::{checkpoint, init::init_fp, AsParams, ParamStore, ShardedParam
 use crate::opt::EsHyper;
 use crate::quant::Format;
 use crate::runtime::{BackendPolicy, Manifest, NativeBackend};
-use crate::sched::{serve, SchedCfg, Scheduler};
+use crate::sched::{mux, serve, SchedCfg, Scheduler};
 use crate::tasks::{cls_task, gen_task, is_cls_task};
 use crate::util::args::Args;
 use crate::util::fault::FaultPlan;
@@ -338,11 +338,17 @@ pub fn cmd_finetune(mut args: Args) -> Result<()> {
     Ok(())
 }
 
-/// `qes serve`: line-delimited JSON over stdin (default) or a TCP
-/// listener (`--tcp addr:port`), driving the continuous-batching
-/// scheduler against a checkpoint (`--ckpt`, or the cached quantized
-/// model for `--size`/`--task`). Responses stream to stdout (or the
-/// connection) as sequences finish; diagnostics go to stderr.
+/// `qes serve`: line-delimited JSON over stdin (default), a TCP
+/// listener (`--tcp addr:port`, line protocol), and/or an HTTP listener
+/// (`--http addr:port`, OpenAI-compatible `POST /v1/completions`),
+/// driving the continuous-batching scheduler against a checkpoint
+/// (`--ckpt`, or the cached quantized model for `--size`/`--task`).
+/// TCP and HTTP accept CONCURRENT connections multiplexed onto ONE
+/// shared scheduler (`sched/mux.rs`); admission control sheds load past
+/// `--max-inflight` pending requests globally or `--conn-queue`
+/// outstanding per connection with explicit `"overloaded"` responses.
+/// Responses stream to stdout (or the connection) as sequences finish;
+/// diagnostics go to stderr.
 pub fn cmd_serve(mut args: Args) -> Result<()> {
     let manifest = args.get_or("manifest", "artifacts/manifest.json");
     let size = args.get_or("size", "nano");
@@ -358,6 +364,7 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
     let page = args.get_usize("page", crate::sched::default_page_rows())?;
     let prefix_cache = args.get_usize("prefix-cache", 32)?;
     let tcp = args.opt("tcp");
+    let http = args.opt("http");
     let kernel_choice = crate::kernel::KernelKind::parse_choice(&args.get_or("kernel", "auto"))?;
     let pretrain_steps = args.get_usize("pretrain-steps", 400)?;
     // intake hardening: per-line byte cap (oversized lines are answered
@@ -365,6 +372,11 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
     // a TCP read deadline so a silent client cannot pin the server
     let max_line = args.get_usize("max-line", 65536)?;
     let read_timeout_ms = args.get_u64("read-timeout-ms", 30_000)?;
+    // multi-tenant backpressure: global pending cap and per-connection
+    // outstanding bound (0 = unbounded); past either, requests are shed
+    // with an explicit "overloaded" error response / HTTP 429
+    let max_inflight = args.get_usize("max-inflight", 256)?;
+    let conn_queue = args.get_usize("conn-queue", 64)?;
     args.finish()?;
     let kernel = crate::kernel::force(kernel_choice)?;
     let man = Manifest::load(&manifest)?;
@@ -407,76 +419,138 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
         scfg.prefix_cache,
         if scfg.kmajor { "on" } else { "off" },
     );
-    match tcp {
-        None => {
-            let (tx, rx) = std::sync::mpsc::channel::<serve::Intake>();
-            std::thread::spawn(move || {
-                serve::pump_lines(std::io::stdin().lock(), max_line, &tx);
-            });
-            let mut sched = Scheduler::new(&backend, &view, None, None, scfg)?;
-            let mut out = std::io::stdout();
-            let stats = serve::serve_loop(&mut sched, &rx, &mut out)?;
-            let bpp = sched.arena().bytes_per_page();
-            let s = sched.stats();
-            eprintln!(
-                "[serve] done: {} responses, {} errors | {} steps, {} decode rows, max live {} | kv pages hw {} ({}) | prefix {}/{} hit, {} cow forks",
-                stats.served,
-                stats.errors,
-                s.steps,
-                s.decode_rows,
-                s.max_live,
-                s.pages_high_water,
-                crate::util::human_bytes((s.pages_high_water * bpp) as u64),
-                s.prefix_hits,
-                s.prefix_hits + s.prefix_misses,
-                s.cow_forks
-            );
-        }
-        Some(addr) => {
-            let listener = std::net::TcpListener::bind(&addr)
-                .with_context(|| format!("cannot bind {}", addr))?;
-            eprintln!("[serve] listening on {} (one connection at a time)", addr);
-            for conn in listener.incoming() {
-                // transient accept failures (ECONNABORTED, EMFILE, a
-                // client resetting mid-handshake) must not kill the
-                // server — log and keep accepting
-                let stream = match conn {
-                    Ok(s) => s,
-                    Err(e) => {
-                        eprintln!("[serve] accept failed: {}", e);
-                        continue;
-                    }
-                };
-                let peer =
-                    stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
-                eprintln!("[serve] connection from {}", peer);
-                if read_timeout_ms > 0 {
-                    // a deadline on the read half: the pump thread exits
-                    // (ending the connection) instead of blocking forever
-                    // on a client that went silent mid-stream
-                    stream
-                        .set_read_timeout(Some(std::time::Duration::from_millis(read_timeout_ms)))
-                        .context("cannot set read deadline")?;
-                }
-                let reader = stream.try_clone()?;
-                let (tx, rx) = std::sync::mpsc::channel::<serve::Intake>();
-                let pump = std::thread::spawn(move || {
-                    serve::pump_lines(reader, max_line, &tx);
-                });
-                let mut sched = Scheduler::new(&backend, &view, None, None, scfg.clone())?;
-                let mut ws = stream;
-                match serve::serve_loop(&mut sched, &rx, &mut ws) {
-                    Ok(st) => eprintln!(
-                        "[serve] {}: {} responses, {} errors",
-                        peer, st.served, st.errors
-                    ),
-                    Err(e) => eprintln!("[serve] {}: {:#}", peer, e),
-                }
-                let _ = pump.join();
-            }
-        }
+    if tcp.is_none() && http.is_none() {
+        // stdin: one implicit connection, the classic single-tenant pump
+        let (tx, rx) = std::sync::mpsc::channel::<serve::Intake>();
+        std::thread::spawn(move || {
+            serve::pump_lines(std::io::stdin().lock(), max_line, &tx);
+        });
+        let mut sched = Scheduler::new(&backend, &view, None, None, scfg)?;
+        let mut out = std::io::stdout();
+        let stats = serve::serve_loop(&mut sched, &rx, &mut out)?;
+        let bpp = sched.arena().bytes_per_page();
+        let s = sched.stats();
+        eprintln!(
+            "[serve] done: {} responses, {} errors{} | {} steps, {} decode rows, max live {} | kv pages hw {} ({}) | prefix {}/{} hit, {} cow forks",
+            stats.served,
+            stats.errors,
+            if stats.write_failed { " (output sink died)" } else { "" },
+            s.steps,
+            s.decode_rows,
+            s.max_live,
+            s.pages_high_water,
+            crate::util::human_bytes((s.pages_high_water * bpp) as u64),
+            s.prefix_hits,
+            s.prefix_hits + s.prefix_misses,
+            s.cow_forks
+        );
+        return Ok(());
     }
+    // TCP/HTTP: concurrent accept loops feeding ONE scheduler through
+    // the connection mux — every connection's pump tags its events with
+    // a ConnId onto one shared channel; the mux owns the scheduler here
+    // on the main thread and routes each finished sequence back to its
+    // connection's writer the moment it retires.
+    let (tx, rx) = std::sync::mpsc::channel::<mux::MuxEvent>();
+    let conn_ids = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let mux_cfg = mux::MuxCfg {
+        max_inflight,
+        conn_queue,
+        model: format!("qes-{}-{}", size, store.format.name()),
+    };
+    if let Some(addr) = tcp {
+        let listener = std::net::TcpListener::bind(&addr)
+            .with_context(|| format!("cannot bind {}", addr))?;
+        eprintln!("[serve] line protocol on {} (multi-tenant)", addr);
+        let (ptx, pids) = (tx.clone(), conn_ids.clone());
+        spawn_accept_loop(listener, mux::Proto::Line, ptx, pids, max_line, read_timeout_ms);
+    }
+    if let Some(addr) = http {
+        let listener = std::net::TcpListener::bind(&addr)
+            .with_context(|| format!("cannot bind {}", addr))?;
+        eprintln!("[serve] http on {} (POST /v1/completions, multi-tenant)", addr);
+        let (ptx, pids) = (tx.clone(), conn_ids.clone());
+        spawn_accept_loop(listener, mux::Proto::Http, ptx, pids, max_line, read_timeout_ms);
+    }
+    drop(tx); // the accept loops hold the only remaining senders
+    let mut sched = Scheduler::new(&backend, &view, None, None, scfg)?;
+    let stats = mux::mux_loop(&mut sched, &rx, &mux_cfg)?;
+    eprintln!(
+        "[serve] done: {} conns, {} served, {} errors, {} shed, {} cancelled, {} orphaned, {} write-failed",
+        stats.conns,
+        stats.served,
+        stats.errors,
+        stats.shed,
+        stats.cancelled,
+        stats.orphaned,
+        stats.write_failed,
+    );
     Ok(())
+}
+
+/// Accept connections forever, wiring each one into the shared mux
+/// channel: a writer thread owning the socket (write half) fed by a
+/// per-connection byte channel, and a pump thread parsing the read half
+/// into tagged [`mux::MuxEvent`]s. Transient accept failures
+/// (ECONNABORTED, EMFILE, a client resetting mid-handshake) are logged
+/// and skipped, never fatal.
+fn spawn_accept_loop(
+    listener: std::net::TcpListener,
+    proto: mux::Proto,
+    tx: std::sync::mpsc::Sender<mux::MuxEvent>,
+    conn_ids: std::sync::Arc<std::sync::atomic::AtomicU64>,
+    max_line: usize,
+    read_timeout_ms: u64,
+) {
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let stream = match conn {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("[serve] accept failed: {}", e);
+                    continue;
+                }
+            };
+            let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+            let conn = mux::ConnId(conn_ids.fetch_add(1, std::sync::atomic::Ordering::Relaxed));
+            let pname = match proto {
+                mux::Proto::Line => "line",
+                mux::Proto::Http => "http",
+            };
+            eprintln!("[serve] conn {} from {} ({})", conn.0, peer, pname);
+            let _ = stream.set_nodelay(true);
+            if read_timeout_ms > 0 {
+                // a deadline on the read half: the pump thread exits
+                // (half-closing the connection) instead of blocking
+                // forever on a client that went silent mid-stream
+                if let Err(e) = stream
+                    .set_read_timeout(Some(std::time::Duration::from_millis(read_timeout_ms)))
+                {
+                    eprintln!("[serve] conn {}: cannot set read deadline: {}", conn.0, e);
+                    continue;
+                }
+            }
+            let reader = match stream.try_clone() {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("[serve] conn {}: clone failed: {}", conn.0, e);
+                    continue;
+                }
+            };
+            let (wtx, wrx) = std::sync::mpsc::channel::<Vec<u8>>();
+            std::thread::spawn(move || mux::writer_thread(stream, wrx));
+            // Open must be enqueued before the pump can race its first
+            // line in: send it HERE, then spawn the pump
+            if tx.send(mux::MuxEvent { conn, ev: mux::MuxIn::Open(proto, wtx) }).is_err() {
+                return; // mux gone
+            }
+            let ptx = tx.clone();
+            std::thread::spawn(move || match proto {
+                mux::Proto::Line => mux::pump_conn_lines(reader, conn, max_line, &ptx),
+                mux::Proto::Http => mux::pump_conn_http(reader, conn, 16 * 1024, max_line, &ptx),
+            });
+        }
+    });
 }
 
 pub fn cmd_exp(mut args: Args) -> Result<()> {

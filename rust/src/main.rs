@@ -12,9 +12,11 @@
 //!               [--resume]                          ES fine-tuning (the paper) on a
 //!                                                   supervised fault-tolerant pool,
 //!                                                   with crash-consistent resume
-//! qes serve     [--ckpt p] [--tcp addr] [--slots n] continuous-batching server
-//!               [--max-line bytes]                  (line-delimited JSON)
-//!               [--read-timeout-ms t]
+//! qes serve     [--ckpt p] [--tcp addr] [--slots n] multi-tenant continuous-batching
+//!               [--http addr]                       server: concurrent connections on
+//!               [--max-inflight n] [--conn-queue n] ONE scheduler; line-delimited JSON
+//!               [--max-line bytes]                  on stdin/--tcp, OpenAI-compatible
+//!               [--read-timeout-ms t]               POST /v1/completions on --http
 //! qes exp       table1|table2|table5|table6|        regenerate a paper table
 //!               table7|table8|table9|fig2|fig3 ...  or figure
 //! ```

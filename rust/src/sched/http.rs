@@ -1,0 +1,357 @@
+//! Minimal HTTP/1.1 front end for the connection mux — just enough
+//! protocol to put an OpenAI-compatible `POST /v1/completions` surface
+//! over the shared scheduler so standard load-generation tooling works
+//! against `qes serve --http`.
+//!
+//! ```text
+//! POST /v1/completions
+//! {"model": "qes", "prompt": "3,4,5=17:", "max_tokens": 12,
+//!  "temperature": 0.0, "seed": 7}
+//!
+//! 200 OK
+//! {"id": "cmpl-0", "object": "text_completion", "model": "qes",
+//!  "choices": [{"index": 0, "text": "3*4+5", "finish_reason": "stop"}],
+//!  "usage": {"prompt_tokens": 9, "completion_tokens": 6, "total_tokens": 15}}
+//! ```
+//!
+//! Also served: `GET /health` and `GET /v1/models`. Errors come back as
+//! `{"error": {"message": ..., "type": ...}}` with 400/404/429.
+//! Connections are keep-alive by default; `Connection: close` is
+//! honored after the response to the request that carried it. Requests
+//! on one connection are answered in request order (the mux stashes
+//! out-of-order completions), while different connections never gate
+//! each other.
+//!
+//! The reader ([`read_request`]) supports exactly what the surface
+//! needs: request line + headers + `Content-Length` body. No chunked
+//! encoding, no continuations — anything else is a 400.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Read};
+
+use anyhow::{Context, Result};
+
+use crate::sched::serve::{parse_max_new, parse_seed, parse_tau};
+use crate::sched::{GenOutput, GenRequest};
+use crate::tasks::tokenizer;
+use crate::util::json::Json;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct HttpReq {
+    pub method: String,
+    pub path: String,
+    /// Header names lowercased.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpReq {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Did the client ask to end the connection after this exchange?
+    pub fn close_requested(&self) -> bool {
+        self.header("connection").map(|v| v.eq_ignore_ascii_case("close")).unwrap_or(false)
+    }
+}
+
+/// What one read attempt produced.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    Req(HttpReq),
+    /// Clean EOF at a request boundary.
+    Eof,
+    /// Malformed request on the wire (answer 400 and stop reading).
+    Bad(String),
+    /// Read error (deadline / reset) mid-request.
+    IoErr,
+}
+
+/// Read one HTTP/1.1 request. `max_head` bounds the request line plus
+/// headers, `max_body` bounds `Content-Length` — both reject with
+/// [`ReadOutcome::Bad`] instead of buffering unboundedly.
+pub fn read_request<R: BufRead>(r: &mut R, max_head: usize, max_body: usize) -> ReadOutcome {
+    let line = match read_crlf_line(r, max_head) {
+        LineOutcome::Line(l) => l,
+        LineOutcome::Eof => return ReadOutcome::Eof,
+        LineOutcome::TooLong => return ReadOutcome::Bad("request line too long".into()),
+        LineOutcome::IoErr => return ReadOutcome::IoErr,
+    };
+    if line.is_empty() {
+        // tolerate a stray blank line between pipelined requests
+        return read_request(r, max_head, max_body);
+    }
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if parts.next().is_none() => (m, p, v),
+        _ => return ReadOutcome::Bad(format!("malformed request line {:?}", line)),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return ReadOutcome::Bad(format!("unsupported version {:?}", version));
+    }
+    let method = method.to_string();
+    let path = path.to_string();
+    let mut headers: Vec<(String, String)> = Vec::new();
+    let mut head_bytes = line.len();
+    loop {
+        let line = match read_crlf_line(r, max_head) {
+            LineOutcome::Line(l) => l,
+            LineOutcome::Eof => return ReadOutcome::Bad("eof inside headers".into()),
+            LineOutcome::TooLong => return ReadOutcome::Bad("header line too long".into()),
+            LineOutcome::IoErr => return ReadOutcome::IoErr,
+        };
+        if line.is_empty() {
+            break;
+        }
+        head_bytes += line.len();
+        if head_bytes > max_head {
+            return ReadOutcome::Bad("headers too large".into());
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return ReadOutcome::Bad(format!("malformed header {:?}", line));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let len = match headers.iter().find(|(n, _)| n == "content-length") {
+        None => 0usize,
+        Some((_, v)) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => return ReadOutcome::Bad(format!("bad content-length {:?}", v)),
+        },
+    };
+    if len > max_body {
+        return ReadOutcome::Bad(format!("body exceeds {} bytes", max_body));
+    }
+    let chunked = headers
+        .iter()
+        .any(|(n, v)| n == "transfer-encoding" && !v.eq_ignore_ascii_case("identity"));
+    if chunked {
+        return ReadOutcome::Bad("chunked transfer encoding unsupported".into());
+    }
+    let mut body = vec![0u8; len];
+    if len > 0 && r.read_exact(&mut body).is_err() {
+        return ReadOutcome::IoErr;
+    }
+    ReadOutcome::Req(HttpReq { method, path, headers, body })
+}
+
+enum LineOutcome {
+    Line(String),
+    Eof,
+    TooLong,
+    IoErr,
+}
+
+/// Read one `\r\n`- (or `\n`-) terminated line, bounded by `cap`.
+fn read_crlf_line<R: BufRead>(r: &mut R, cap: usize) -> LineOutcome {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) => {
+                return if buf.is_empty() { LineOutcome::Eof } else { LineOutcome::IoErr };
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                    return LineOutcome::Line(String::from_utf8_lossy(&buf).into_owned());
+                }
+                if buf.len() >= cap {
+                    return LineOutcome::TooLong;
+                }
+                buf.push(byte[0]);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return LineOutcome::IoErr,
+        }
+    }
+}
+
+/// Parse an OpenAI-style completions body into a [`GenRequest`].
+/// `prompt` is required; `max_tokens` defaults to the scheduler's
+/// decode budget; `temperature`/`seed` default to greedy and go through
+/// the same validation as the line protocol (exact integer seed, finite
+/// non-negative temperature).
+pub fn parse_completions(body: &str, default_max_new: usize) -> Result<GenRequest> {
+    let j = Json::parse(body).map_err(|e| anyhow::anyhow!("bad json body: {}", e))?;
+    let prompt_text =
+        j.get("prompt").and_then(Json::as_str).context("body needs a string \"prompt\"")?;
+    let prompt = tokenizer::try_encode(prompt_text)
+        .map_err(|c| anyhow::anyhow!("prompt char {:?} not in the vocabulary", c))?;
+    let max_new = parse_max_new(j.get("max_tokens"), default_max_new, "max_tokens")?;
+    let tau = parse_tau(j.get("temperature"), "temperature")?;
+    let seed = parse_seed(j.get("seed"))?;
+    Ok(GenRequest { prompt, max_new, tau, seed })
+}
+
+/// `finish_reason` for a completion: `"stop"` when the sequence emitted
+/// EOS inside its budget, `"length"` when the decode budget cut it off.
+pub fn finish_reason(out: &GenOutput) -> &'static str {
+    if out.tokens.last() == Some(&(tokenizer::EOS as i32)) {
+        "stop"
+    } else {
+        "length"
+    }
+}
+
+/// OpenAI-compatible `text_completion` response body.
+pub fn completion_body(id: &str, model: &str, out: &GenOutput, prompt_tokens: usize) -> String {
+    let mut choice = BTreeMap::new();
+    choice.insert("index".to_string(), Json::Num(0.0));
+    choice.insert("text".to_string(), Json::Str(out.text.clone()));
+    choice.insert("finish_reason".to_string(), Json::Str(finish_reason(out).to_string()));
+    let completion_tokens = out.tokens.len();
+    let mut usage = BTreeMap::new();
+    usage.insert("prompt_tokens".to_string(), Json::Num(prompt_tokens as f64));
+    usage.insert("completion_tokens".to_string(), Json::Num(completion_tokens as f64));
+    usage.insert("total_tokens".to_string(), Json::Num((prompt_tokens + completion_tokens) as f64));
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Str(id.to_string()));
+    m.insert("object".to_string(), Json::Str("text_completion".to_string()));
+    m.insert("model".to_string(), Json::Str(model.to_string()));
+    m.insert("choices".to_string(), Json::Arr(vec![Json::Obj(choice)]));
+    m.insert("usage".to_string(), Json::Obj(usage));
+    Json::Obj(m).to_string_compact()
+}
+
+/// OpenAI-compatible error body: `{"error": {"message", "type"}}`.
+pub fn error_body(message: &str, etype: &str) -> String {
+    let mut e = BTreeMap::new();
+    e.insert("message".to_string(), Json::Str(message.to_string()));
+    e.insert("type".to_string(), Json::Str(etype.to_string()));
+    let mut m = BTreeMap::new();
+    m.insert("error".to_string(), Json::Obj(e));
+    Json::Obj(m).to_string_compact()
+}
+
+/// `GET /v1/models` body: the one model this server resolves.
+pub fn models_body(model: &str) -> String {
+    let mut entry = BTreeMap::new();
+    entry.insert("id".to_string(), Json::Str(model.to_string()));
+    entry.insert("object".to_string(), Json::Str("model".to_string()));
+    entry.insert("owned_by".to_string(), Json::Str("qes".to_string()));
+    let mut m = BTreeMap::new();
+    m.insert("object".to_string(), Json::Str("list".to_string()));
+    m.insert("data".to_string(), Json::Arr(vec![Json::Obj(entry)]));
+    Json::Obj(m).to_string_compact()
+}
+
+/// Frame a full HTTP/1.1 response (status line + headers + JSON body).
+pub fn response(status: u16, reason: &str, body: &str, close: bool) -> Vec<u8> {
+    let conn = if close { "close" } else { "keep-alive" };
+    format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
+        status,
+        reason,
+        body.len(),
+        conn,
+    )
+    .into_bytes()
+    .into_iter()
+    .chain(body.bytes())
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn read_request_parses_and_rejects() {
+        let wire = b"POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcdGET /health HTTP/1.1\r\n\r\n";
+        let mut r = BufReader::new(&wire[..]);
+        let ReadOutcome::Req(req) = read_request(&mut r, 4096, 1 << 16) else {
+            panic!("expected request")
+        };
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body, b"abcd");
+        assert!(!req.close_requested());
+        // pipelined second request on the same buffer
+        let ReadOutcome::Req(req) = read_request(&mut r, 4096, 1 << 16) else {
+            panic!("expected request")
+        };
+        assert_eq!((req.method.as_str(), req.path.as_str()), ("GET", "/health"));
+        assert!(req.body.is_empty());
+        assert!(matches!(read_request(&mut r, 4096, 1 << 16), ReadOutcome::Eof));
+
+        // bare-\n framing and Connection: close
+        let wire = b"GET /health HTTP/1.1\nConnection: close\n\n";
+        let mut r = BufReader::new(&wire[..]);
+        let ReadOutcome::Req(req) = read_request(&mut r, 4096, 1 << 16) else {
+            panic!("expected request")
+        };
+        assert!(req.close_requested());
+
+        // malformed request line / oversized body / chunked → Bad
+        let mut r = BufReader::new(&b"NOT-HTTP\r\n\r\n"[..]);
+        assert!(matches!(read_request(&mut r, 4096, 16), ReadOutcome::Bad(_)));
+        let mut r = BufReader::new(&b"POST / HTTP/1.1\r\nContent-Length: 99\r\n\r\n"[..]);
+        assert!(matches!(read_request(&mut r, 4096, 16), ReadOutcome::Bad(_)));
+        let mut r =
+            BufReader::new(&b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"[..]);
+        assert!(matches!(read_request(&mut r, 4096, 1 << 16), ReadOutcome::Bad(_)));
+        // truncated mid-headers → Bad (eof inside headers)
+        let mut r = BufReader::new(&b"GET / HTTP/1.1\r\nHost"[..]);
+        let got = read_request(&mut r, 4096, 1 << 16);
+        assert!(matches!(got, ReadOutcome::IoErr | ReadOutcome::Bad(_)));
+    }
+
+    #[test]
+    fn parse_completions_validates_like_line_protocol() {
+        let g = parse_completions(r#"{"prompt": "1+2=", "max_tokens": 4}"#, 12).unwrap();
+        assert_eq!(g.prompt, tokenizer::encode("1+2="));
+        assert_eq!(g.max_new, 4);
+        assert_eq!(g.tau, 0.0);
+        assert_eq!(g.seed, None);
+        let g = parse_completions(r#"{"prompt": "1", "temperature": 0.5, "seed": 9}"#, 12).unwrap();
+        assert!((g.tau - 0.5).abs() < 1e-6);
+        assert_eq!(g.seed, Some(9));
+        assert_eq!(g.max_new, 12);
+        // same validation failures as the line protocol
+        assert!(parse_completions(r#"{"prompt": "1", "seed": -1}"#, 12).is_err());
+        assert!(parse_completions(r#"{"prompt": "1", "temperature": -0.5}"#, 12).is_err());
+        assert!(parse_completions(r#"{"prompt": "1", "max_tokens": -3}"#, 12).is_err());
+        assert!(parse_completions(r#"{"max_tokens": 3}"#, 12).is_err());
+        assert!(parse_completions("nope", 12).is_err());
+    }
+
+    #[test]
+    fn bodies_and_framing_roundtrip() {
+        let out = GenOutput { tokens: vec![3, 4, 20], text: "12".into(), cached: 0 };
+        let body = completion_body("cmpl-7", "qes-s", &out, 5);
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("id").unwrap().as_str(), Some("cmpl-7"));
+        assert_eq!(j.get("object").unwrap().as_str(), Some("text_completion"));
+        let choice = j.get("choices").unwrap().idx(0).unwrap();
+        assert_eq!(choice.get("text").unwrap().as_str(), Some("12"));
+        assert_eq!(choice.get("finish_reason").unwrap().as_str(), Some("stop"));
+        let usage = j.get("usage").unwrap();
+        assert_eq!(usage.get("prompt_tokens").unwrap().as_usize(), Some(5));
+        assert_eq!(usage.get("completion_tokens").unwrap().as_usize(), Some(3));
+        assert_eq!(usage.get("total_tokens").unwrap().as_usize(), Some(8));
+
+        // budget-capped sequence (no EOS) reports "length"
+        let out = GenOutput { tokens: vec![3, 4], text: "12".into(), cached: 0 };
+        assert_eq!(finish_reason(&out), "length");
+
+        let body = error_body("overloaded", "overloaded_error");
+        let bytes = response(429, "Too Many Requests", &body, false);
+        let s = String::from_utf8(bytes).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{}", s);
+        assert!(s.contains("Connection: keep-alive"));
+        let body_at = s.find("\r\n\r\n").unwrap() + 4;
+        let j = Json::parse(&s[body_at..]).unwrap();
+        assert_eq!(j.get("error").unwrap().get("message").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(s[body_at..].len().to_string(), {
+            let cl = s.lines().find(|l| l.starts_with("Content-Length:")).unwrap();
+            cl.split(':').nth(1).unwrap().trim().to_string()
+        });
+    }
+}

@@ -77,6 +77,8 @@
 //! engine over line-delimited JSON.
 
 pub mod arena;
+pub mod http;
+pub mod mux;
 pub mod serve;
 
 use std::collections::{BTreeMap, VecDeque};
@@ -583,6 +585,26 @@ impl<'v> Scheduler<'v> {
     /// Remove and return every finished generation, in ticket order.
     pub fn drain_finished(&mut self) -> Vec<(GenTicket, GenOutput)> {
         std::mem::take(&mut self.done).into_iter().map(|(t, o)| (GenTicket(t), o)).collect()
+    }
+
+    /// Cancel a still-queued request that has never been admitted into a
+    /// slot. Returns `true` if the ticket was waiting and is now gone;
+    /// `false` if it is unknown, already in flight, or already finished —
+    /// those are deliberately left untouched (the serving mux cancels a
+    /// closed connection's queue without disturbing in-flight slots).
+    pub fn cancel_waiting(&mut self, ticket: GenTicket) -> bool {
+        if let Some(pos) = self.waiting.iter().position(|(t, _, _)| *t == ticket.0) {
+            self.waiting.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Accepted requests not yet completed (in flight + queued) — the
+    /// quantity admission control bounds with its global in-flight cap.
+    pub fn pending(&self) -> usize {
+        self.live.len() + self.waiting.len()
     }
 
     /// Batched full-sequence prefill for the newly admitted sequences.

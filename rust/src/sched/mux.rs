@@ -1,0 +1,649 @@
+//! Connection multiplexer — N concurrent clients, ONE scheduler.
+//!
+//! [`serve_loop`](crate::sched::serve::serve_loop) drives the scheduler
+//! for a single connection; this module generalizes it to many. Every
+//! connection gets a pump thread (reusing the
+//! [`Intake`](crate::sched::serve::Intake) line discipline or the HTTP
+//! reader in [`http`](crate::sched::http)) that tags its events with a
+//! [`ConnId`] and sends them over ONE shared channel into [`mux_loop`],
+//! which owns the scheduler on a single thread:
+//!
+//! ```text
+//! conn 0 pump ─┐                       ┌─ writer 0 (owns write half)
+//! conn 1 pump ─┼→ mpsc<MuxEvent> → mux ┼─ writer 1
+//! conn 2 pump ─┘        │              └─ writer 2
+//!                   Scheduler (one, shared, single-threaded)
+//! ```
+//!
+//! The mux routes each finished generation back through a tagged
+//! `(conn, request)` table the moment the sequence retires — admission
+//! order never gates emission, and a slow connection never blocks
+//! another's responses. Writer threads own the socket write halves and
+//! receive framed bytes over per-connection channels; a writer dying
+//! (broken pipe) surfaces to the mux as a send failure and tears the
+//! connection down.
+//!
+//! # Batch invariance under multi-tenancy
+//!
+//! Every per-sequence result depends only on that sequence's request
+//! (see the module docs on [`crate::sched`]), so greedy tokens are
+//! bit-identical for any connection count × interleaving × admission
+//! order — which connection a request arrived on is just one more free
+//! dimension of the determinism contract. `tests/scheduler.rs` pins the
+//! matrix.
+//!
+//! # Admission control / backpressure
+//!
+//! Two bounds, both shed with an explicit `"overloaded"` error response
+//! (line protocol: `{"id":...,"error":"overloaded"}`; HTTP: `429`)
+//! instead of stalling or crashing:
+//!
+//! * **global in-flight cap** ([`MuxCfg::max_inflight`]): requests
+//!   pending in the scheduler (live slots + waiting queue) across ALL
+//!   connections;
+//! * **per-connection queue depth** ([`MuxCfg::conn_queue`]): one
+//!   client cannot monopolize the waiting queue past its bound.
+//!
+//! # Teardown
+//!
+//! A half-closed connection (client sent EOF but keeps reading —
+//! [`MuxIn::HalfClosed`]) stays registered until its last response
+//! flushes. A dead connection ([`MuxIn::Gone`] from a pump read error,
+//! or any writer failure) is torn down immediately: its
+//! queued-but-unadmitted requests are cancelled
+//! ([`Scheduler::cancel_waiting`]) without touching in-flight slots,
+//! and any output that retires afterwards is dropped as orphaned.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+
+use anyhow::Result;
+
+use crate::sched::http::{self, HttpReq};
+use crate::sched::serve::{self, Intake};
+use crate::sched::{GenOutput, GenTicket, Scheduler};
+
+/// Connection identity — allocated by the accept loop, unique per
+/// server lifetime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ConnId(pub u64);
+
+/// Response framing a connection speaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Proto {
+    /// Line-delimited JSON (`qes serve` classic protocol). Responses
+    /// are id-tagged and emitted the moment a sequence retires.
+    Line,
+    /// HTTP/1.1. Responses go back in request order per connection
+    /// (pipelining discipline) — completed out of order, stashed until
+    /// their turn.
+    Http,
+}
+
+/// One event from a connection pump.
+#[derive(Debug)]
+pub enum MuxIn {
+    /// Connection established: register its protocol and the channel
+    /// feeding its writer thread.
+    Open(Proto, Sender<Vec<u8>>),
+    /// One request line (line protocol).
+    Line(String),
+    /// A line blew past the reader's cap (payload = the cap).
+    Oversized(usize),
+    /// One parsed HTTP request.
+    Http(HttpReq),
+    /// Unparseable HTTP on the wire: answer 400 and tear down.
+    BadHttp(String),
+    /// Clean read-side EOF: no more requests, but responses still flow;
+    /// the mux closes the connection once nothing is outstanding.
+    HalfClosed,
+    /// Hard disconnect (read error): tear down now, cancelling this
+    /// connection's queued-but-unadmitted requests.
+    Gone,
+}
+
+/// A tagged event on the shared mux channel.
+#[derive(Debug)]
+pub struct MuxEvent {
+    pub conn: ConnId,
+    pub ev: MuxIn,
+}
+
+/// Mux policy knobs.
+#[derive(Debug, Clone)]
+pub struct MuxCfg {
+    /// Global in-flight cap: shed when `Scheduler::pending()` reaches
+    /// this (0 = unbounded).
+    pub max_inflight: usize,
+    /// Per-connection outstanding-request bound (0 = unbounded).
+    pub conn_queue: usize,
+    /// Model name echoed in OpenAI-compatible responses.
+    pub model: String,
+}
+
+impl Default for MuxCfg {
+    fn default() -> MuxCfg {
+        MuxCfg { max_inflight: 0, conn_queue: 0, model: "qes".to_string() }
+    }
+}
+
+/// Mux outcome counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MuxStats {
+    /// Connections ever registered.
+    pub conns: u64,
+    /// Completions delivered.
+    pub served: u64,
+    /// Error responses delivered (bad JSON, OOV prompts, oversized
+    /// lines, submit rejections, HTTP 4xx) — sheds counted separately.
+    pub errors: u64,
+    /// Requests shed by admission control (counted in addition to the
+    /// `"overloaded"` error response each one gets).
+    pub shed: u64,
+    /// Queued-but-unadmitted requests cancelled at teardown.
+    pub cancelled: u64,
+    /// Finished generations dropped because their connection was gone.
+    pub orphaned: u64,
+    /// Connections torn down by a writer failure (broken pipe).
+    pub write_failed: u64,
+}
+
+/// Where a finished generation goes.
+struct Route {
+    ticket: GenTicket,
+    conn: ConnId,
+    /// Line protocol: response id. HTTP: completion id (`cmpl-<id>`).
+    id: String,
+    /// HTTP only: per-connection pipeline sequence number.
+    seq: Option<u64>,
+    /// HTTP only: prompt token count for the `usage` block.
+    prompt_tokens: usize,
+}
+
+struct Conn {
+    proto: Proto,
+    writer: Sender<Vec<u8>>,
+    /// Requests submitted (line) / enqueued (HTTP) and not yet answered.
+    outstanding: usize,
+    /// Line protocol: default response id for id-less requests.
+    next_id: usize,
+    half_closed: bool,
+    /// HTTP pipeline: next sequence number to assign.
+    next_seq: u64,
+    /// HTTP pipeline: sequence numbers awaiting emission, in order.
+    order: VecDeque<u64>,
+    /// HTTP pipeline: responses completed out of order.
+    ready: HashMap<u64, Vec<u8>>,
+    /// HTTP: close the connection after flushing this sequence number.
+    close_at: Option<u64>,
+}
+
+impl Conn {
+    fn new(proto: Proto, writer: Sender<Vec<u8>>) -> Conn {
+        Conn {
+            proto,
+            writer,
+            outstanding: 0,
+            next_id: 0,
+            half_closed: false,
+            next_seq: 0,
+            order: VecDeque::new(),
+            ready: HashMap::new(),
+            close_at: None,
+        }
+    }
+}
+
+struct Mux {
+    cfg: MuxCfg,
+    conns: HashMap<ConnId, Conn>,
+    routes: HashMap<usize, Route>,
+    stats: MuxStats,
+}
+
+/// Drive ONE scheduler for every connection feeding `rx` until the
+/// channel closes (all pumps gone) and every accepted request has
+/// completed. This is [`serve_loop`](serve::serve_loop)'s discipline —
+/// drain queued events without blocking, emit everything finished,
+/// step, block on intake only when idle — lifted over tagged
+/// multi-connection events.
+pub fn mux_loop(
+    sched: &mut Scheduler<'_>,
+    rx: &Receiver<MuxEvent>,
+    cfg: &MuxCfg,
+) -> Result<MuxStats> {
+    let mut m = Mux {
+        cfg: cfg.clone(),
+        conns: HashMap::new(),
+        routes: HashMap::new(),
+        stats: MuxStats::default(),
+    };
+    let mut open = true;
+    loop {
+        // intake: everything already queued, without blocking the batch
+        while open {
+            match rx.try_recv() {
+                Ok(ev) => m.handle(sched, ev),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => open = false,
+            }
+        }
+        // route everything finished so far (zero-budget requests
+        // complete at submit time, before any step runs)
+        for (ticket, out) in sched.drain_finished() {
+            m.deliver(sched, ticket, out);
+        }
+        if sched.idle() {
+            if !open {
+                break;
+            }
+            match rx.recv() {
+                Ok(ev) => m.handle(sched, ev),
+                Err(_) => open = false,
+            }
+            continue;
+        }
+        sched.step()?;
+    }
+    Ok(m.stats)
+}
+
+impl Mux {
+    fn handle(&mut self, sched: &mut Scheduler<'_>, event: MuxEvent) {
+        let conn = event.conn;
+        match event.ev {
+            MuxIn::Open(proto, writer) => {
+                self.stats.conns += 1;
+                self.conns.insert(conn, Conn::new(proto, writer));
+            }
+            MuxIn::Line(line) => self.on_line(sched, conn, &line),
+            MuxIn::Oversized(cap) => {
+                if !self.conns.contains_key(&conn) {
+                    return;
+                }
+                let id = self.next_line_id(conn).to_string();
+                self.stats.errors += 1;
+                self.send_line(
+                    sched,
+                    conn,
+                    serve::error_line(&id, &format!("request line exceeds {} bytes", cap)),
+                );
+            }
+            MuxIn::Http(req) => self.on_http(sched, conn, req),
+            MuxIn::BadHttp(msg) => {
+                if !self.conns.contains_key(&conn) {
+                    return;
+                }
+                self.stats.errors += 1;
+                let body =
+                    http::error_body(&format!("bad request: {}", msg), "invalid_request_error");
+                self.http_immediate(sched, conn, 400, "Bad Request", &body, true);
+            }
+            MuxIn::HalfClosed => {
+                let drained = match self.conns.get_mut(&conn) {
+                    Some(c) => {
+                        c.half_closed = true;
+                        c.outstanding == 0
+                    }
+                    None => false,
+                };
+                if drained {
+                    self.close(conn);
+                }
+            }
+            MuxIn::Gone => self.teardown(sched, conn),
+        }
+    }
+
+    /// Route one finished generation back to its connection (or drop it
+    /// as orphaned when the connection died mid-flight).
+    fn deliver(&mut self, sched: &mut Scheduler<'_>, ticket: GenTicket, out: GenOutput) {
+        let Some(route) = self.routes.remove(&ticket.index()) else {
+            self.stats.orphaned += 1;
+            return;
+        };
+        if !self.conns.contains_key(&route.conn) {
+            self.stats.orphaned += 1;
+            return;
+        }
+        match route.seq {
+            None => {
+                let line = serve::response_line(&route.id, &out);
+                if self.send_line(sched, route.conn, line) {
+                    self.stats.served += 1;
+                    self.after_line_response(route.conn);
+                }
+            }
+            Some(seq) => {
+                let body =
+                    http::completion_body(&route.id, &self.cfg.model, &out, route.prompt_tokens);
+                let bytes = http::response(200, "OK", &body, false);
+                self.stats.served += 1;
+                self.http_stash(sched, route.conn, seq, bytes);
+            }
+        }
+    }
+
+    // ---- line protocol ----
+
+    fn on_line(&mut self, sched: &mut Scheduler<'_>, conn: ConnId, line: &str) {
+        if !self.conns.contains_key(&conn) {
+            return; // teardown raced the pump
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            return;
+        }
+        let default_id = self.next_line_id(conn);
+        let default_max_new = sched.cfg().t_max;
+        let pr = match serve::parse_request(line, default_id, default_max_new) {
+            Ok(pr) => pr,
+            Err(e) => {
+                self.stats.errors += 1;
+                self.send_line(
+                    sched,
+                    conn,
+                    serve::error_line(&default_id.to_string(), &format!("{:#}", e)),
+                );
+                return;
+            }
+        };
+        if self.shed(sched, conn) {
+            self.stats.shed += 1;
+            self.send_line(sched, conn, serve::error_line(&pr.id, "overloaded"));
+            return;
+        }
+        match sched.submit(pr.req) {
+            Ok(ticket) => {
+                self.routes.insert(
+                    ticket.index(),
+                    Route { ticket, conn, id: pr.id, seq: None, prompt_tokens: 0 },
+                );
+                if let Some(c) = self.conns.get_mut(&conn) {
+                    c.outstanding += 1;
+                }
+            }
+            Err(e) => {
+                self.stats.errors += 1;
+                self.send_line(sched, conn, serve::error_line(&pr.id, &format!("{:#}", e)));
+            }
+        }
+    }
+
+    /// Allocate the per-connection default response id.
+    fn next_line_id(&mut self, conn: ConnId) -> usize {
+        let c = self.conns.get_mut(&conn).expect("known conn");
+        let id = c.next_id;
+        c.next_id += 1;
+        id
+    }
+
+    /// Emit one line-protocol response; a dead writer (broken pipe)
+    /// tears the connection down and returns `false`.
+    fn send_line(&mut self, sched: &mut Scheduler<'_>, conn: ConnId, line: String) -> bool {
+        let Some(c) = self.conns.get(&conn) else { return false };
+        let mut bytes = line.into_bytes();
+        bytes.push(b'\n');
+        if c.writer.send(bytes).is_err() {
+            self.stats.write_failed += 1;
+            self.teardown(sched, conn);
+            return false;
+        }
+        true
+    }
+
+    /// Bookkeeping after a routed line response: one fewer outstanding;
+    /// a drained half-closed connection closes.
+    fn after_line_response(&mut self, conn: ConnId) {
+        let drained = match self.conns.get_mut(&conn) {
+            Some(c) => {
+                if c.outstanding > 0 {
+                    c.outstanding -= 1;
+                }
+                c.half_closed && c.outstanding == 0
+            }
+            None => false,
+        };
+        if drained {
+            self.close(conn);
+        }
+    }
+
+    // ---- HTTP ----
+
+    fn on_http(&mut self, sched: &mut Scheduler<'_>, conn: ConnId, req: HttpReq) {
+        if !self.conns.contains_key(&conn) {
+            return;
+        }
+        let close = req.close_requested();
+        match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/v1/completions") => self.on_completions(sched, conn, &req, close),
+            ("GET", "/health") => {
+                self.http_immediate(sched, conn, 200, "OK", "{\"ok\":true}", close)
+            }
+            ("GET", "/v1/models") => {
+                let body = http::models_body(&self.cfg.model);
+                self.http_immediate(sched, conn, 200, "OK", &body, close)
+            }
+            _ => {
+                self.stats.errors += 1;
+                let body = http::error_body(
+                    &format!("no route for {} {}", req.method, req.path),
+                    "invalid_request_error",
+                );
+                self.http_immediate(sched, conn, 404, "Not Found", &body, close)
+            }
+        }
+    }
+
+    fn on_completions(
+        &mut self,
+        sched: &mut Scheduler<'_>,
+        conn: ConnId,
+        req: &HttpReq,
+        close: bool,
+    ) {
+        let default_max_new = sched.cfg().t_max;
+        let body = String::from_utf8_lossy(&req.body).into_owned();
+        let gen = match http::parse_completions(&body, default_max_new) {
+            Ok(g) => g,
+            Err(e) => {
+                self.stats.errors += 1;
+                let body = http::error_body(&format!("{:#}", e), "invalid_request_error");
+                self.http_immediate(sched, conn, 400, "Bad Request", &body, close);
+                return;
+            }
+        };
+        if self.shed(sched, conn) {
+            self.stats.shed += 1;
+            let body = http::error_body("overloaded", "overloaded_error");
+            self.http_immediate(sched, conn, 429, "Too Many Requests", &body, close);
+            return;
+        }
+        let prompt_tokens = gen.prompt.len();
+        match sched.submit(gen) {
+            Ok(ticket) => {
+                let Some(c) = self.conns.get_mut(&conn) else { return };
+                let seq = c.next_seq;
+                c.next_seq += 1;
+                c.order.push_back(seq);
+                c.outstanding += 1;
+                if close {
+                    c.close_at = Some(seq);
+                }
+                let id = format!("cmpl-{}", ticket.index());
+                let route = Route { ticket, conn, id, seq: Some(seq), prompt_tokens };
+                self.routes.insert(ticket.index(), route);
+            }
+            Err(e) => {
+                self.stats.errors += 1;
+                let body = http::error_body(&format!("{:#}", e), "invalid_request_error");
+                self.http_immediate(sched, conn, 400, "Bad Request", &body, close);
+            }
+        }
+    }
+
+    /// Enqueue a response that is ready NOW (errors, health, models) at
+    /// the back of the connection's pipeline and flush whatever is due.
+    fn http_immediate(
+        &mut self,
+        sched: &mut Scheduler<'_>,
+        conn: ConnId,
+        status: u16,
+        reason: &str,
+        body: &str,
+        close: bool,
+    ) {
+        let Some(c) = self.conns.get_mut(&conn) else { return };
+        let seq = c.next_seq;
+        c.next_seq += 1;
+        c.order.push_back(seq);
+        c.outstanding += 1;
+        if close {
+            c.close_at = Some(seq);
+        }
+        let bytes = http::response(status, reason, body, close);
+        self.http_stash(sched, conn, seq, bytes);
+    }
+
+    /// Record a completed HTTP response and flush the pipeline head —
+    /// responses leave in request order per connection, whatever order
+    /// they completed in.
+    fn http_stash(&mut self, sched: &mut Scheduler<'_>, conn: ConnId, seq: u64, bytes: Vec<u8>) {
+        let Some(c) = self.conns.get_mut(&conn) else { return };
+        c.ready.insert(seq, bytes);
+        let mut do_close = false;
+        let mut dead = false;
+        while let Some(&head) = c.order.front() {
+            let Some(bytes) = c.ready.remove(&head) else { break };
+            c.order.pop_front();
+            if c.outstanding > 0 {
+                c.outstanding -= 1;
+            }
+            if c.writer.send(bytes).is_err() {
+                dead = true;
+                break;
+            }
+            if c.close_at == Some(head) {
+                do_close = true;
+                break;
+            }
+        }
+        if dead {
+            self.stats.write_failed += 1;
+            self.teardown(sched, conn);
+            return;
+        }
+        let drained = do_close
+            || self
+                .conns
+                .get(&conn)
+                .map(|c| c.half_closed && c.outstanding == 0)
+                .unwrap_or(false);
+        if drained {
+            self.close(conn);
+        }
+    }
+
+    // ---- admission control / lifecycle ----
+
+    /// Shed this request? Global in-flight cap first, then the
+    /// per-connection queue bound.
+    fn shed(&self, sched: &Scheduler<'_>, conn: ConnId) -> bool {
+        if self.cfg.max_inflight > 0 && sched.pending() >= self.cfg.max_inflight {
+            return true;
+        }
+        if self.cfg.conn_queue > 0 {
+            if let Some(c) = self.conns.get(&conn) {
+                return c.outstanding >= self.cfg.conn_queue;
+            }
+        }
+        false
+    }
+
+    /// Graceful close: drop the writer (its thread exits, closing the
+    /// socket write half). Routes already emptied by the caller.
+    fn close(&mut self, conn: ConnId) {
+        self.conns.remove(&conn);
+    }
+
+    /// Hard teardown: cancel this connection's queued-but-unadmitted
+    /// requests; in-flight slots keep decoding and their outputs are
+    /// dropped as orphaned at drain time.
+    fn teardown(&mut self, sched: &mut Scheduler<'_>, conn: ConnId) {
+        self.conns.remove(&conn);
+        let mine: Vec<usize> = self
+            .routes
+            .iter()
+            .filter(|(_, r)| r.conn == conn)
+            .map(|(&idx, _)| idx)
+            .collect();
+        for idx in mine {
+            let ticket = self.routes[&idx].ticket;
+            if sched.cancel_waiting(ticket) {
+                self.routes.remove(&idx);
+                self.stats.cancelled += 1;
+            }
+            // else: already admitted — leave the route; deliver() will
+            // drop the finished output as orphaned.
+        }
+    }
+}
+
+/// Writer-thread body: own the connection's write half, drain framed
+/// responses until the mux drops the sender (graceful close) or a write
+/// fails (the mux learns via its next send failing).
+pub fn writer_thread<W: Write>(mut w: W, rx: Receiver<Vec<u8>>) {
+    while let Ok(bytes) = rx.recv() {
+        if w.write_all(&bytes).is_err() || w.flush().is_err() {
+            return;
+        }
+    }
+}
+
+/// Feed one connection's read half into the shared mux channel with the
+/// line-protocol framing; reports `HalfClosed` on clean EOF and `Gone`
+/// on a read error. Returns when the connection stops producing.
+pub fn pump_conn_lines<R: std::io::Read>(
+    reader: R,
+    conn: ConnId,
+    max_line: usize,
+    tx: &Sender<MuxEvent>,
+) {
+    let clean = serve::pump_lines_with(reader, max_line, |ev| {
+        let ev = match ev {
+            Intake::Line(l) => MuxIn::Line(l),
+            Intake::Oversized(cap) => MuxIn::Oversized(cap),
+        };
+        tx.send(MuxEvent { conn, ev }).is_ok()
+    });
+    let _ = tx.send(MuxEvent { conn, ev: if clean { MuxIn::HalfClosed } else { MuxIn::Gone } });
+}
+
+/// Feed one connection's read half into the shared mux channel with
+/// HTTP framing; reports `BadHttp` (then stops reading — the mux
+/// answers 400 and closes), `HalfClosed` on clean EOF, `Gone` on a
+/// read error.
+pub fn pump_conn_http<R: std::io::Read>(
+    reader: R,
+    conn: ConnId,
+    max_head: usize,
+    max_body: usize,
+    tx: &Sender<MuxEvent>,
+) {
+    let mut r = std::io::BufReader::new(reader);
+    loop {
+        let ev = match http::read_request(&mut r, max_head, max_body) {
+            http::ReadOutcome::Req(req) => MuxIn::Http(req),
+            http::ReadOutcome::Eof => MuxIn::HalfClosed,
+            http::ReadOutcome::Bad(msg) => MuxIn::BadHttp(msg),
+            http::ReadOutcome::IoErr => MuxIn::Gone,
+        };
+        let terminal =
+            matches!(ev, MuxIn::HalfClosed | MuxIn::Gone | MuxIn::BadHttp(_));
+        if tx.send(MuxEvent { conn, ev }).is_err() || terminal {
+            return;
+        }
+    }
+}

@@ -19,7 +19,12 @@
 //! finished responses, and only blocks on input when nothing is in
 //! flight — so a request arriving mid-batch joins the next admission
 //! wave instead of waiting for a drain. The CLI (`qes serve`) feeds it
-//! from stdin or a TCP connection through an mpsc channel.
+//! from stdin through an mpsc channel; `--tcp`/`--http` serve MANY
+//! concurrent connections against one scheduler through the connection
+//! mux ([`mux`](crate::sched::mux)), which reuses this module's parse /
+//! response / pump machinery per connection (the OpenAI-compatible
+//! `POST /v1/completions` surface in [`http`](crate::sched::http)
+//! validates through the same `parse_max_new`/`parse_tau`/`parse_seed`).
 
 use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Read, Write};
@@ -35,6 +40,53 @@ use crate::util::json::Json;
 pub struct ParsedRequest {
     pub id: String,
     pub req: GenRequest,
+}
+
+/// Validate a decode budget field (`max_new` / OpenAI `max_tokens`):
+/// absent or `null` takes the default; anything else must be an exact
+/// non-negative integer (a negative number must NOT saturate to 0 —
+/// that silently turns a malformed request into an instant empty
+/// completion).
+pub fn parse_max_new(v: Option<&Json>, default_max_new: usize, field: &str) -> Result<usize> {
+    match v {
+        None | Some(Json::Null) => Ok(default_max_new),
+        Some(j) => j
+            .as_usize()
+            .with_context(|| format!("\"{}\" must be a non-negative integer", field)),
+    }
+}
+
+/// Validate a sampling temperature (`tau` / OpenAI `temperature`):
+/// absent or `null` decodes greedily; negative, NaN or infinite values
+/// are rejected instead of flowing into sampled decode (a NaN tau makes
+/// every gumbel-perturbed logit NaN and argmax degenerates to token 0).
+pub fn parse_tau(v: Option<&Json>, field: &str) -> Result<f32> {
+    match v {
+        None | Some(Json::Null) => Ok(0.0),
+        Some(j) => {
+            let t = j.as_f64().with_context(|| format!("\"{}\" must be a number", field))?;
+            anyhow::ensure!(
+                t.is_finite() && t >= 0.0,
+                "\"{}\" must be a finite non-negative number",
+                field
+            );
+            Ok(t as f32)
+        }
+    }
+}
+
+/// Validate a sampling seed: absent or `null` means none; anything else
+/// must be an exact non-negative integer below 2^53. The old path went
+/// through `as_f64() as u64`, so `{"seed": -1}` silently saturated to
+/// seed 0 and integer seeds at/above 2^53 lost precision — both now get
+/// an error response instead.
+pub fn parse_seed(v: Option<&Json>) -> Result<Option<u64>> {
+    match v {
+        None | Some(Json::Null) => Ok(None),
+        Some(j) => Ok(Some(j.as_u64_exact().context(
+            "\"seed\" must be a non-negative integer below 2^53 (f64-exact)",
+        )?)),
+    }
 }
 
 /// Parse one request line. `default_max_new` fills an absent `max_new`;
@@ -56,9 +108,9 @@ pub fn parse_request(
         .context("request needs a string \"prompt\"")?;
     let prompt = tokenizer::try_encode(prompt_text)
         .map_err(|c| anyhow::anyhow!("prompt char {:?} not in the vocabulary", c))?;
-    let max_new = j.get("max_new").and_then(Json::as_usize).unwrap_or(default_max_new);
-    let tau = j.get("tau").and_then(Json::as_f64).unwrap_or(0.0) as f32;
-    let seed = j.get("seed").and_then(Json::as_f64).map(|s| s as u64);
+    let max_new = parse_max_new(j.get("max_new"), default_max_new, "max_new")?;
+    let tau = parse_tau(j.get("tau"), "tau")?;
+    let seed = parse_seed(j.get("seed"))?;
     Ok(ParsedRequest { id, req: GenRequest { prompt, max_new, tau, seed } })
 }
 
@@ -87,6 +139,11 @@ pub fn error_line(id: &str, err: &str) -> String {
 pub struct ServeStats {
     pub served: u64,
     pub errors: u64,
+    /// The output sink died (broken pipe / failed flush). The loop stops
+    /// driving the scheduler the moment this happens — a disconnected
+    /// client must end the connection, not leave the server decoding
+    /// into a dead sink.
+    pub write_failed: bool,
 }
 
 /// One unit of intake from a connection pump: either a complete line or
@@ -104,8 +161,23 @@ pub enum Intake {
 /// it streams past (bounded memory) and reported once as
 /// [`Intake::Oversized`]. A read error — including a socket read
 /// deadline firing (`WouldBlock`/`TimedOut`) — ends the pump; a
-/// trailing unterminated line at EOF is still delivered.
+/// trailing unterminated line (at EOF *or* at a read error — a deadline
+/// firing after a complete buffered request must not discard it) is
+/// still delivered.
 pub fn pump_lines<R: Read>(reader: R, max_line: usize, tx: &Sender<Intake>) {
+    pump_lines_with(reader, max_line, |ev| tx.send(ev).is_ok());
+}
+
+/// [`pump_lines`] over an arbitrary sink — the connection mux feeds a
+/// shared tagged channel through this. `sink` returns `false` when the
+/// consumer is gone, which stops the pump. Returns `true` on a clean
+/// EOF, `false` on a read error or a dead sink — the mux maps that onto
+/// half-close (keep delivering responses) vs teardown.
+pub fn pump_lines_with<R: Read, F: FnMut(Intake) -> bool>(
+    reader: R,
+    max_line: usize,
+    mut sink: F,
+) -> bool {
     let mut r = BufReader::new(reader);
     let mut buf: Vec<u8> = Vec::new();
     let mut over = false;
@@ -116,8 +188,16 @@ pub fn pump_lines<R: Read>(reader: R, max_line: usize, tx: &Sender<Intake>) {
             let chunk = match r.fill_buf() {
                 Ok(c) => c,
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-                // read deadline or hard I/O error: drop any partial line
-                Err(_) => return,
+                // read deadline or hard I/O error: the pump ends, but a
+                // complete non-oversized buffered line is flushed first
+                // (a deadline firing right after "req\n…req2" arrived
+                // must deliver req2, not silently drop it)
+                Err(_) => {
+                    if !over && !buf.is_empty() {
+                        sink(Intake::Line(String::from_utf8_lossy(&buf).into_owned()));
+                    }
+                    return false;
+                }
             };
             if chunk.is_empty() {
                 eof = true;
@@ -146,23 +226,27 @@ pub fn pump_lines<R: Read>(reader: R, max_line: usize, tx: &Sender<Intake>) {
         }
         r.consume(data.len());
         for ev in events {
-            if tx.send(ev).is_err() {
-                return; // consumer gone
+            if !sink(ev) {
+                return false; // consumer gone
             }
         }
     }
     // unterminated final line
     if over {
-        let _ = tx.send(Intake::Oversized(max_line));
+        sink(Intake::Oversized(max_line));
     } else if !buf.is_empty() {
-        let _ = tx.send(Intake::Line(String::from_utf8_lossy(&buf).into_owned()));
+        sink(Intake::Line(String::from_utf8_lossy(&buf).into_owned()));
     }
+    true
 }
 
 /// Drive the scheduler against an intake channel until the channel
 /// closes AND every accepted request has completed, writing one response
 /// line per finished generation (and one error line per rejected or
-/// oversized request).
+/// oversized request). A failed write or flush — a broken-pipe client —
+/// ends the connection immediately: the loop returns with
+/// [`ServeStats::write_failed`] set instead of stepping the scheduler
+/// into a dead sink.
 pub fn serve_loop<W: Write>(
     sched: &mut Scheduler<'_>,
     lines: &Receiver<Intake>,
@@ -173,19 +257,26 @@ pub fn serve_loop<W: Write>(
     let mut next_id = 0usize;
     let mut stats = ServeStats::default();
     let mut open = true;
-    loop {
+    'conn: loop {
         // intake: everything already queued, without blocking the batch
         while open {
             match lines.try_recv() {
-                Ok(intake) => submit_intake(
-                    sched,
-                    intake,
-                    default_max_new,
-                    &mut ids,
-                    &mut next_id,
-                    out,
-                    &mut stats,
-                )?,
+                Ok(intake) => {
+                    if submit_intake(
+                        sched,
+                        intake,
+                        default_max_new,
+                        &mut ids,
+                        &mut next_id,
+                        out,
+                        &mut stats,
+                    )
+                    .is_err()
+                    {
+                        stats.write_failed = true;
+                        break 'conn;
+                    }
+                }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => open = false,
             }
@@ -196,25 +287,38 @@ pub fn serve_loop<W: Write>(
             let id = ids
                 .remove(&ticket.index())
                 .unwrap_or_else(|| ticket.index().to_string());
-            writeln!(out, "{}", response_line(&id, &o))?;
+            if writeln!(out, "{}", response_line(&id, &o)).is_err() {
+                stats.write_failed = true;
+                break 'conn;
+            }
             stats.served += 1;
         }
-        out.flush().ok();
+        if out.flush().is_err() {
+            stats.write_failed = true;
+            break 'conn;
+        }
         if sched.idle() {
             if !open {
                 break;
             }
             // nothing in flight: block for the next request
             match lines.recv() {
-                Ok(intake) => submit_intake(
-                    sched,
-                    intake,
-                    default_max_new,
-                    &mut ids,
-                    &mut next_id,
-                    out,
-                    &mut stats,
-                )?,
+                Ok(intake) => {
+                    if submit_intake(
+                        sched,
+                        intake,
+                        default_max_new,
+                        &mut ids,
+                        &mut next_id,
+                        out,
+                        &mut stats,
+                    )
+                    .is_err()
+                    {
+                        stats.write_failed = true;
+                        break 'conn;
+                    }
+                }
                 Err(_) => open = false,
             }
             continue;
@@ -224,6 +328,11 @@ pub fn serve_loop<W: Write>(
     Ok(stats)
 }
 
+/// Feed one intake event to the scheduler, writing any error response.
+/// `Err` is an I/O failure on `out` — the caller treats that as the end
+/// of the connection; request-level failures (bad JSON, OOV prompts,
+/// oversized lines, submit rejections) are answered inline and counted,
+/// never returned.
 #[allow(clippy::too_many_arguments)]
 fn submit_intake<W: Write>(
     sched: &mut Scheduler<'_>,
@@ -233,7 +342,7 @@ fn submit_intake<W: Write>(
     next_id: &mut usize,
     out: &mut W,
     stats: &mut ServeStats,
-) -> Result<()> {
+) -> std::io::Result<()> {
     match intake {
         Intake::Line(line) => {
             submit_line(sched, &line, default_max_new, ids, next_id, out, stats)
@@ -264,7 +373,7 @@ fn submit_line<W: Write>(
     next_id: &mut usize,
     out: &mut W,
     stats: &mut ServeStats,
-) -> Result<()> {
+) -> std::io::Result<()> {
     let line = line.trim();
     if line.is_empty() {
         return Ok(());
@@ -353,6 +462,89 @@ mod tests {
         pump_lines("yyyyyy".as_bytes(), 3, &tx);
         drop(tx);
         assert_eq!(rx.iter().collect::<Vec<_>>(), vec![Intake::Oversized(3)]);
+    }
+
+    #[test]
+    fn parse_request_rejects_bad_seed_tau_and_budget() {
+        // seed went through `as_f64() as u64` before: -1 saturated to
+        // seed 0 and values at/above 2^53 lost precision silently — all
+        // must be error responses now
+        assert!(parse_request(r#"{"prompt": "1", "seed": -1}"#, 0, 8).is_err());
+        assert!(parse_request(r#"{"prompt": "1", "seed": 1.5}"#, 0, 8).is_err());
+        assert!(parse_request(r#"{"prompt": "1", "seed": 9007199254740992}"#, 0, 8).is_err());
+        assert!(parse_request(r#"{"prompt": "1", "seed": 1e300}"#, 0, 8).is_err());
+        let e = parse_request(r#"{"prompt": "1", "seed": -1}"#, 0, 8).unwrap_err();
+        assert!(format!("{:#}", e).contains("non-negative integer"), "{:#}", e);
+        // the largest f64-exact seed still parses
+        let pr = parse_request(r#"{"prompt": "1", "seed": 9007199254740991}"#, 0, 8).unwrap();
+        assert_eq!(pr.req.seed, Some((1u64 << 53) - 1));
+        // null means "absent", not an error
+        let pr = parse_request(r#"{"prompt": "1", "seed": null, "tau": null}"#, 0, 8).unwrap();
+        assert_eq!(pr.req.seed, None);
+        assert_eq!(pr.req.tau, 0.0);
+
+        // tau: negative / infinite / non-numeric flowed straight into
+        // sampled decode before — now rejected
+        assert!(parse_request(r#"{"prompt": "1", "tau": -0.5}"#, 0, 8).is_err());
+        assert!(parse_request(r#"{"prompt": "1", "tau": 1e999}"#, 0, 8).is_err());
+        assert!(parse_request(r#"{"prompt": "1", "tau": "hot"}"#, 0, 8).is_err());
+        assert!(parse_request(r#"{"prompt": "1", "tau": 0.0}"#, 0, 8).is_ok());
+
+        // max_new: -1 used to saturate to 0 (an instant empty
+        // completion for a malformed request)
+        assert!(parse_request(r#"{"prompt": "1", "max_new": -1}"#, 0, 8).is_err());
+        assert!(parse_request(r#"{"prompt": "1", "max_new": 2.5}"#, 0, 8).is_err());
+        assert_eq!(parse_request(r#"{"prompt": "1", "max_new": 0}"#, 0, 8).unwrap().req.max_new, 0);
+    }
+
+    /// Reader that yields some chunks, then fails like a socket read
+    /// deadline firing (`WouldBlock`).
+    struct DeadlineReader {
+        chunks: Vec<Vec<u8>>,
+    }
+
+    impl Read for DeadlineReader {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.chunks.is_empty() {
+                return Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "deadline"));
+            }
+            let chunk = self.chunks.remove(0);
+            out[..chunk.len()].copy_from_slice(&chunk);
+            Ok(chunk.len())
+        }
+    }
+
+    #[test]
+    fn pump_lines_flushes_buffered_line_when_deadline_fires() {
+        use std::sync::mpsc::channel;
+        // a complete request buffered without its trailing newline must
+        // be delivered when the read deadline fires, not dropped
+        let r = DeadlineReader { chunks: vec![b"a\n".to_vec(), b"{\"prompt\":\"1\"}".to_vec()] };
+        let (tx, rx) = channel();
+        assert!(!pump_lines_with(r, 64, |ev| tx.send(ev).is_ok()), "deadline is not a clean EOF");
+        drop(tx);
+        let got: Vec<Intake> = rx.iter().collect();
+        assert_eq!(
+            got,
+            vec![
+                Intake::Line("a".to_string()),
+                Intake::Line("{\"prompt\":\"1\"}".to_string()),
+            ]
+        );
+
+        // an OVERSIZED partial buffer is still discarded on a deadline
+        let r = DeadlineReader { chunks: vec![b"xxxxxxxx".to_vec()] };
+        let (tx, rx) = channel();
+        pump_lines(r, 4, &tx);
+        drop(tx);
+        assert_eq!(rx.iter().count(), 0, "oversized partial must not be flushed");
+
+        // an empty buffer on a deadline delivers nothing
+        let r = DeadlineReader { chunks: vec![b"done\n".to_vec()] };
+        let (tx, rx) = channel();
+        pump_lines(r, 64, &tx);
+        drop(tx);
+        assert_eq!(rx.iter().collect::<Vec<_>>(), vec![Intake::Line("done".to_string())]);
     }
 
     #[test]

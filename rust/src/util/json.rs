@@ -69,8 +69,25 @@ impl Json {
         }
     }
 
+    /// Exact non-negative integer value, if this number is one. Numbers
+    /// arrive through an `f64`, so this rejects negatives, fractions,
+    /// and magnitudes at or above 2^53 — past that the float cannot
+    /// represent every integer, so the original digits can't be trusted
+    /// (a cast would silently return a *different* integer; 2^53 itself
+    /// is excluded because 2^53+1 rounds onto it during parsing).
+    pub fn as_u64_exact(&self) -> Option<u64> {
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n < MAX_EXACT => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    /// Exact non-negative integer as `usize` (same rules as
+    /// [`Json::as_u64_exact`] — a negative or fractional number is None,
+    /// never a saturated cast).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|n| n as usize)
+        self.as_u64_exact().map(|n| n as usize)
     }
 
     pub fn as_arr(&self) -> Option<&[Json]> {
@@ -369,6 +386,26 @@ mod tests {
         let j = Json::parse(src).unwrap();
         let s = j.to_string_compact();
         assert_eq!(Json::parse(&s).unwrap(), j);
+    }
+
+    #[test]
+    fn exact_integer_extraction() {
+        // negatives and fractions are None, never a saturating cast
+        assert_eq!(Json::parse("-1").unwrap().as_u64_exact(), None);
+        assert_eq!(Json::parse("-1").unwrap().as_usize(), None);
+        assert_eq!(Json::parse("1.5").unwrap().as_u64_exact(), None);
+        assert_eq!(Json::parse("0").unwrap().as_u64_exact(), Some(0));
+        assert_eq!(Json::parse("42").unwrap().as_usize(), Some(42));
+        // from 2^53 up the f64 path loses integer precision (2^53+1
+        // already rounds onto 2^53 during parsing), so extraction refuses
+        assert_eq!(
+            Json::parse("9007199254740991").unwrap().as_u64_exact(),
+            Some(9007199254740991)
+        );
+        assert_eq!(Json::parse("9007199254740992").unwrap().as_u64_exact(), None);
+        assert_eq!(Json::parse("9007199254740993").unwrap().as_u64_exact(), None);
+        assert_eq!(Json::parse("1e300").unwrap().as_u64_exact(), None);
+        assert_eq!(Json::parse("\"7\"").unwrap().as_u64_exact(), None);
     }
 
     #[test]

@@ -384,15 +384,27 @@ fn serve_loop_end_to_end() {
     // zero-budget request: completes at submit time, must still respond
     tx.send(serve::Intake::Line(r#"{"prompt": "1", "max_new": 0, "id": "zero"}"#.to_string()))
         .unwrap();
+    // submit-time rejection (budget past the scheduler's t_max): an
+    // error RESPONSE, not a dead server
+    tx.send(serve::Intake::Line(
+        r#"{"prompt": "1", "max_new": 999999, "id": "big"}"#.to_string(),
+    ))
+    .unwrap();
     drop(tx);
     let mut out = Vec::new();
     let stats = serve::serve_loop(&mut sched, &rx, &mut out).unwrap();
     assert_eq!(stats.served, 4);
-    assert_eq!(stats.errors, 3);
+    assert_eq!(stats.errors, 4);
+    assert!(!stats.write_failed);
 
     let text = String::from_utf8(out).unwrap();
     let lines: Vec<&str> = text.lines().collect();
-    assert_eq!(lines.len(), 7, "4 responses + 3 errors:\n{}", text);
+    assert_eq!(lines.len(), 8, "4 responses + 4 errors:\n{}", text);
+    assert!(
+        lines.iter().any(|l| l.contains(r#""id":"big""#) && l.contains("\"error\"")),
+        "submit rejection must answer with an error response:\n{}",
+        text
+    );
     assert!(text.contains("exceeds 64 bytes"), "oversized error response:\n{}", text);
     assert!(text.contains(r#""id":"zero","text":"""#), "zero-budget response:\n{}", text);
     // every served id appears exactly once, with the same text the
@@ -409,7 +421,7 @@ fn serve_loop_end_to_end() {
         let j = qes::util::json::Json::parse(line).unwrap();
         assert_eq!(j.get("text").unwrap().as_str(), Some(w.as_str()), "{}", id);
     }
-    assert_eq!(text.matches("\"error\"").count(), 3);
+    assert_eq!(text.matches("\"error\"").count(), 4);
 }
 
 #[test]
@@ -755,4 +767,417 @@ fn grouped_rollout_invariant_to_page_size() {
             w[0].0, w[1].0
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-tenant serving plane: the connection mux (sched/mux.rs).
+// CI runs this block standalone via `cargo test --test scheduler mux` under
+// QES_PAGE={16,full}.
+// ---------------------------------------------------------------------------
+
+use qes::sched::http::HttpReq;
+use qes::sched::mux::{self, ConnId, MuxCfg, MuxEvent, MuxIn, Proto};
+use qes::util::json::Json;
+
+fn open(
+    tx: &std::sync::mpsc::Sender<MuxEvent>,
+    conn: u64,
+    proto: Proto,
+) -> std::sync::mpsc::Receiver<Vec<u8>> {
+    let (wtx, wrx) = std::sync::mpsc::channel::<Vec<u8>>();
+    tx.send(MuxEvent { conn: ConnId(conn), ev: MuxIn::Open(proto, wtx) }).unwrap();
+    wrx
+}
+
+fn line(tx: &std::sync::mpsc::Sender<MuxEvent>, conn: u64, l: String) {
+    tx.send(MuxEvent { conn: ConnId(conn), ev: MuxIn::Line(l) }).unwrap();
+}
+
+fn half_close(tx: &std::sync::mpsc::Sender<MuxEvent>, conn: u64) {
+    tx.send(MuxEvent { conn: ConnId(conn), ev: MuxIn::HalfClosed }).unwrap();
+}
+
+fn drain_str(wrx: &std::sync::mpsc::Receiver<Vec<u8>>) -> String {
+    String::from_utf8(wrx.try_iter().flatten().collect()).unwrap()
+}
+
+/// Parse a writer stream of concatenated HTTP responses into
+/// (status, body) pairs using the Content-Length framing.
+fn split_http(stream: &str) -> Vec<(u16, String)> {
+    let mut out = Vec::new();
+    let mut rest = stream;
+    while !rest.is_empty() {
+        let head_end = rest.find("\r\n\r\n").expect("header terminator") + 4;
+        let head = &rest[..head_end];
+        let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let cl: usize = head
+            .lines()
+            .find(|l| l.starts_with("Content-Length:"))
+            .unwrap()
+            .split(':')
+            .nth(1)
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        out.push((status, rest[head_end..head_end + cl].to_string()));
+        rest = &rest[head_end + cl..];
+    }
+    out
+}
+
+#[test]
+fn mux_multi_tenant_bit_identical_any_conn_count_interleaving_order() {
+    // The tentpole contract: N connections feeding ONE scheduler get
+    // greedy tokens bit-identical to the single-tenant engine for any
+    // connection count x interleaving x admission order — which
+    // connection a request arrives on is a free dimension of the
+    // batch-invariance contract.
+    let (man, q) = quant_store(91);
+    let cfg = man.config("nano").unwrap().clone();
+    let nb = NativeBackend::new(&man, "nano", Format::Int4).unwrap();
+    let view = q.params_view();
+    let probs = problems(&man, 6, 33);
+    let mut scfg = SchedCfg::for_model(&cfg);
+    scfg.slots = 2;
+    scfg.kernel = Some(KernelKind::Scalar);
+    let reqs = requests(&probs, cfg.t_dec, 0.0, None);
+    let want: Vec<(String, usize)> =
+        sched::run_requests(&nb, &view, None, None, scfg.clone(), reqs.clone())
+            .unwrap()
+            .into_iter()
+            .map(|o| (o.text, o.tokens.len()))
+            .collect();
+
+    for &nconn in &[1usize, 2, 4] {
+        for ord in orders(6) {
+            let (tx, rx) = std::sync::mpsc::channel::<MuxEvent>();
+            let writers: Vec<_> = (0..nconn).map(|c| open(&tx, c as u64, Proto::Line)).collect();
+            // admission order `ord`, interleaved round-robin across conns
+            for (k, &i) in ord.iter().enumerate() {
+                line(
+                    &tx,
+                    (k % nconn) as u64,
+                    format!(r#"{{"prompt": "{}", "id": "r{}"}}"#, probs[i].prompt, i),
+                );
+            }
+            for c in 0..nconn {
+                half_close(&tx, c as u64);
+            }
+            drop(tx);
+            let mut sched = Scheduler::new(&nb, &view, None, None, scfg.clone()).unwrap();
+            let stats = mux::mux_loop(&mut sched, &rx, &MuxCfg::default()).unwrap();
+            assert_eq!(stats.served, 6, "nconn={} ord={:?}", nconn, ord);
+            assert_eq!(stats.errors, 0);
+            assert_eq!(stats.shed, 0);
+            assert_eq!(stats.orphaned, 0);
+            assert_eq!(stats.conns, nconn as u64);
+            let mut seen = 0usize;
+            for (c, wrx) in writers.iter().enumerate() {
+                for resp in drain_str(wrx).lines() {
+                    let j = Json::parse(resp).unwrap();
+                    let id = j.get("id").unwrap().as_str().unwrap().to_string();
+                    let i: usize = id.strip_prefix('r').unwrap().parse().unwrap();
+                    // routed to the connection that submitted it
+                    let k = ord.iter().position(|&x| x == i).unwrap();
+                    assert_eq!(k % nconn, c, "response {} on the wrong connection", id);
+                    // bit-identical to the single-tenant reference
+                    assert_eq!(
+                        j.get("text").unwrap().as_str(),
+                        Some(want[i].0.as_str()),
+                        "nconn={} ord={:?} {}",
+                        nconn,
+                        ord,
+                        id
+                    );
+                    assert_eq!(j.get("tokens").unwrap().as_usize(), Some(want[i].1), "{}", id);
+                    seen += 1;
+                }
+            }
+            assert_eq!(seen, 6, "every request answered exactly once");
+        }
+    }
+}
+
+#[test]
+fn mux_overload_sheds_with_explicit_errors() {
+    let (man, q) = quant_store(71);
+    let cfg = man.config("nano").unwrap().clone();
+    let nb = NativeBackend::new(&man, "nano", Format::Int4).unwrap();
+    let view = q.params_view();
+    let probs = problems(&man, 5, 17);
+    let mut scfg = SchedCfg::for_model(&cfg);
+    scfg.slots = 2;
+
+    // global in-flight cap: the first 2 admit, the rest shed with an
+    // explicit "overloaded" error response instead of stalling
+    let (tx, rx) = std::sync::mpsc::channel::<MuxEvent>();
+    let wrx = open(&tx, 0, Proto::Line);
+    for (i, p) in probs.iter().enumerate() {
+        line(&tx, 0, format!(r#"{{"prompt": "{}", "id": "g{}"}}"#, p.prompt, i));
+    }
+    half_close(&tx, 0);
+    drop(tx);
+    let mut sched = Scheduler::new(&nb, &view, None, None, scfg.clone()).unwrap();
+    let mcfg = MuxCfg { max_inflight: 2, conn_queue: 0, model: "m".into() };
+    let stats = mux::mux_loop(&mut sched, &rx, &mcfg).unwrap();
+    assert_eq!(stats.served, 2);
+    assert_eq!(stats.shed, 3);
+    assert_eq!(stats.errors, 0, "sheds are counted apart from request errors");
+    let text = drain_str(&wrx);
+    let mut shed_ids = Vec::new();
+    for l in text.lines() {
+        let j = Json::parse(l).unwrap();
+        if let Some(e) = j.get("error") {
+            assert_eq!(e.as_str(), Some("overloaded"), "{}", l);
+            shed_ids.push(j.get("id").unwrap().as_str().unwrap().to_string());
+        }
+    }
+    assert_eq!(shed_ids, vec!["g2", "g3", "g4"], "later requests shed, earlier admitted");
+
+    // per-connection queue bound: conn 0's second request sheds while
+    // conn 1 (same scheduler, under the global cap) is untouched
+    let (tx, rx) = std::sync::mpsc::channel::<MuxEvent>();
+    let wrx0 = open(&tx, 0, Proto::Line);
+    let wrx1 = open(&tx, 1, Proto::Line);
+    line(&tx, 0, format!(r#"{{"prompt": "{}", "id": "a0"}}"#, probs[0].prompt));
+    line(&tx, 0, format!(r#"{{"prompt": "{}", "id": "a1"}}"#, probs[1].prompt));
+    line(&tx, 1, format!(r#"{{"prompt": "{}", "id": "b0"}}"#, probs[2].prompt));
+    half_close(&tx, 0);
+    half_close(&tx, 1);
+    drop(tx);
+    let mut sched = Scheduler::new(&nb, &view, None, None, scfg).unwrap();
+    let mcfg = MuxCfg { max_inflight: 0, conn_queue: 1, model: "m".into() };
+    let stats = mux::mux_loop(&mut sched, &rx, &mcfg).unwrap();
+    assert_eq!(stats.served, 2);
+    assert_eq!(stats.shed, 1);
+    let t0 = drain_str(&wrx0);
+    assert!(t0.contains(r#""id":"a1""#) && t0.contains("overloaded"), "{}", t0);
+    assert!(t0.lines().any(|l| l.contains(r#""id":"a0""#) && l.contains("\"text\"")), "{}", t0);
+    let t1 = drain_str(&wrx1);
+    assert!(t1.lines().any(|l| l.contains(r#""id":"b0""#) && l.contains("\"text\"")), "{}", t1);
+    assert!(!t1.contains("overloaded"), "conn 1 must not be shed: {}", t1);
+}
+
+#[test]
+fn mux_teardown_cancels_queued_and_orphans_finished() {
+    let (man, q) = quant_store(61);
+    let cfg = man.config("nano").unwrap().clone();
+    let nb = NativeBackend::new(&man, "nano", Format::Int4).unwrap();
+    let view = q.params_view();
+    let probs = problems(&man, 4, 13);
+    let mut scfg = SchedCfg::for_model(&cfg);
+    scfg.slots = 1;
+
+    // conn 0 queues two requests plus a zero-budget one (which finishes
+    // AT SUBMIT), then disconnects hard before any step runs; conn 1's
+    // request must be unaffected
+    let (tx, rx) = std::sync::mpsc::channel::<MuxEvent>();
+    let wrx0 = open(&tx, 0, Proto::Line);
+    let wrx1 = open(&tx, 1, Proto::Line);
+    line(&tx, 0, format!(r#"{{"prompt": "{}", "id": "a0"}}"#, probs[0].prompt));
+    line(&tx, 0, format!(r#"{{"prompt": "{}", "id": "a1"}}"#, probs[1].prompt));
+    line(&tx, 0, r#"{"prompt": "1", "max_new": 0, "id": "a2"}"#.to_string());
+    line(&tx, 1, format!(r#"{{"prompt": "{}", "id": "b0"}}"#, probs[2].prompt));
+    tx.send(MuxEvent { conn: ConnId(0), ev: MuxIn::Gone }).unwrap();
+    half_close(&tx, 1);
+    drop(tx);
+    let mut sched = Scheduler::new(&nb, &view, None, None, scfg.clone()).unwrap();
+    let stats = mux::mux_loop(&mut sched, &rx, &MuxCfg::default()).unwrap();
+    // a0/a1 were still waiting -> cancelled; a2 had already finished ->
+    // its output is dropped as orphaned; b0 served normally
+    assert_eq!(stats.cancelled, 2);
+    assert_eq!(stats.orphaned, 1);
+    assert_eq!(stats.served, 1);
+    assert_eq!(sched.stats().retired, 1, "cancelled requests never decode");
+    assert!(drain_str(&wrx0).is_empty(), "torn-down conn receives nothing");
+    let t1 = drain_str(&wrx1);
+    assert!(t1.lines().any(|l| l.contains(r#""id":"b0""#) && l.contains("\"text\"")), "{}", t1);
+
+    // cancel_waiting semantics under the mux's feet: an ADMITTED ticket
+    // is not cancellable and still completes
+    let mut s2 = Scheduler::new(&nb, &view, None, None, scfg).unwrap();
+    let r = requests(&probs[..2], cfg.t_dec, 0.0, None);
+    let t1 = s2.submit(r[0].clone()).unwrap();
+    let t2 = s2.submit(r[1].clone()).unwrap();
+    s2.step().unwrap(); // admits t1 into the only slot
+    assert!(!s2.cancel_waiting(t1), "in-flight tickets are not cancellable");
+    assert!(s2.cancel_waiting(t2), "waiting tickets are");
+    assert!(!s2.cancel_waiting(t2), "a cancelled ticket is gone");
+    s2.run().unwrap();
+    assert!(s2.take(t1).is_some(), "the in-flight sequence still completes");
+    assert!(s2.take(t2).is_none());
+    assert_eq!(s2.stats().retired, 1);
+}
+
+#[test]
+fn mux_http_end_to_end_openai_surface() {
+    let (man, q) = quant_store(91);
+    let cfg = man.config("nano").unwrap().clone();
+    let nb = NativeBackend::new(&man, "nano", Format::Int4).unwrap();
+    let view = q.params_view();
+    let probs = problems(&man, 2, 33);
+    let mut scfg = SchedCfg::for_model(&cfg);
+    scfg.slots = 2;
+    scfg.kernel = Some(KernelKind::Scalar);
+    let reqs = requests(&probs, cfg.t_dec, 0.0, None);
+    let want: Vec<String> = sched::run_requests(&nb, &view, None, None, scfg.clone(), reqs)
+        .unwrap()
+        .into_iter()
+        .map(|o| o.text)
+        .collect();
+
+    let post = |body: String| MuxIn::Http(HttpReq {
+        method: "POST".into(),
+        path: "/v1/completions".into(),
+        headers: Vec::new(),
+        body: body.into_bytes(),
+    });
+    let get = |path: &str| MuxIn::Http(HttpReq {
+        method: "GET".into(),
+        path: path.into(),
+        headers: Vec::new(),
+        body: Vec::new(),
+    });
+
+    let (tx, rx) = std::sync::mpsc::channel::<MuxEvent>();
+    let wrx = open(&tx, 0, Proto::Http);
+    let send = |ev: MuxIn| tx.send(MuxEvent { conn: ConnId(0), ev }).unwrap();
+    send(post(format!(r#"{{"prompt": "{}"}}"#, probs[0].prompt)));
+    send(get("/health"));
+    send(post("not json".into()));
+    send(post(format!(r#"{{"prompt": "{}"}}"#, probs[1].prompt)));
+    send(get("/v1/models"));
+    send(get("/nope"));
+    send(post(r#"{"prompt": "1", "seed": -1}"#.into()));
+    send(MuxIn::HalfClosed);
+    drop(tx);
+    let mut sched = Scheduler::new(&nb, &view, None, None, scfg.clone()).unwrap();
+    let mcfg = MuxCfg { max_inflight: 0, conn_queue: 0, model: "qes-test".into() };
+    let stats = mux::mux_loop(&mut sched, &rx, &mcfg).unwrap();
+    assert_eq!(stats.served, 2);
+    assert_eq!(stats.errors, 3, "bad body + 404 + bad seed");
+
+    let responses = split_http(&drain_str(&wrx));
+    let statuses: Vec<u16> = responses.iter().map(|(s, _)| *s).collect();
+    // responses come back in REQUEST order (pipelining discipline):
+    // /health completed instantly but still waits for completion 0
+    assert_eq!(statuses, vec![200, 200, 400, 200, 200, 404, 400], "{:?}", responses);
+    let c0 = Json::parse(&responses[0].1).unwrap();
+    assert_eq!(c0.get("object").unwrap().as_str(), Some("text_completion"));
+    assert_eq!(c0.get("model").unwrap().as_str(), Some("qes-test"));
+    let choice = c0.get("choices").unwrap().idx(0).unwrap();
+    assert_eq!(choice.get("text").unwrap().as_str(), Some(want[0].as_str()));
+    let usage = c0.get("usage").unwrap();
+    assert_eq!(
+        usage.get("prompt_tokens").unwrap().as_usize(),
+        Some(tokenizer::encode(&probs[0].prompt).len())
+    );
+    let c1 = Json::parse(&responses[3].1).unwrap();
+    let choice = c1.get("choices").unwrap().idx(0).unwrap();
+    assert_eq!(choice.get("text").unwrap().as_str(), Some(want[1].as_str()));
+    assert!(Json::parse(&responses[1].1).unwrap().get("ok").is_some(), "health body");
+    let models = Json::parse(&responses[4].1).unwrap();
+    assert_eq!(
+        models.get("data").unwrap().idx(0).unwrap().get("id").unwrap().as_str(),
+        Some("qes-test")
+    );
+    for i in [2usize, 5, 6] {
+        let e = Json::parse(&responses[i].1).unwrap();
+        assert!(e.get("error").unwrap().get("message").is_some(), "{:?}", responses[i]);
+    }
+
+    // Connection: close is honored after the response that carried it;
+    // later pipelined requests on that connection are dropped with it
+    let (tx, rx) = std::sync::mpsc::channel::<MuxEvent>();
+    let wrx = open(&tx, 0, Proto::Http);
+    tx.send(MuxEvent {
+        conn: ConnId(0),
+        ev: MuxIn::Http(HttpReq {
+            method: "POST".into(),
+            path: "/v1/completions".into(),
+            headers: vec![("connection".into(), "close".into())],
+            body: format!(r#"{{"prompt": "{}"}}"#, probs[0].prompt).into_bytes(),
+        }),
+    })
+    .unwrap();
+    tx.send(MuxEvent {
+        conn: ConnId(0),
+        ev: MuxIn::Http(HttpReq {
+            method: "GET".into(),
+            path: "/health".into(),
+            headers: Vec::new(),
+            body: Vec::new(),
+        }),
+    })
+    .unwrap();
+    drop(tx);
+    let mut sched = Scheduler::new(&nb, &view, None, None, scfg).unwrap();
+    mux::mux_loop(&mut sched, &rx, &mcfg).unwrap();
+    let stream = drain_str(&wrx);
+    let responses = split_http(&stream);
+    assert_eq!(responses.len(), 1, "connection closed after the close-flagged exchange");
+    assert!(stream.contains("Connection: close"), "{}", stream);
+}
+
+#[test]
+fn mux_writer_failure_tears_down_connection() {
+    let (man, q) = quant_store(71);
+    let cfg = man.config("nano").unwrap().clone();
+    let nb = NativeBackend::new(&man, "nano", Format::Int4).unwrap();
+    let view = q.params_view();
+    let probs = problems(&man, 2, 17);
+    let mut scfg = SchedCfg::for_model(&cfg);
+    scfg.slots = 2;
+
+    let (tx, rx) = std::sync::mpsc::channel::<MuxEvent>();
+    let wrx0 = open(&tx, 0, Proto::Line);
+    drop(wrx0); // conn 0's client is a broken pipe from the start
+    let wrx1 = open(&tx, 1, Proto::Line);
+    line(&tx, 0, format!(r#"{{"prompt": "{}", "id": "a0"}}"#, probs[0].prompt));
+    line(&tx, 1, format!(r#"{{"prompt": "{}", "id": "b0"}}"#, probs[1].prompt));
+    half_close(&tx, 0);
+    half_close(&tx, 1);
+    drop(tx);
+    let mut sched = Scheduler::new(&nb, &view, None, None, scfg).unwrap();
+    let stats = mux::mux_loop(&mut sched, &rx, &MuxCfg::default()).unwrap();
+    assert_eq!(stats.write_failed, 1);
+    assert_eq!(stats.served, 1, "only the healthy connection's response counts");
+    let t1 = drain_str(&wrx1);
+    assert!(t1.lines().any(|l| l.contains(r#""id":"b0""#) && l.contains("\"text\"")), "{}", t1);
+}
+
+/// Sink that fails every write, like a client that closed its socket.
+struct BrokenPipe;
+
+impl std::io::Write for BrokenPipe {
+    fn write(&mut self, _buf: &[u8]) -> std::io::Result<usize> {
+        Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "client gone"))
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn serve_loop_write_failure_ends_connection() {
+    let (man, q) = quant_store(61);
+    let cfg = man.config("nano").unwrap().clone();
+    let nb = NativeBackend::new(&man, "nano", Format::Int4).unwrap();
+    let view = q.params_view();
+    let probs = problems(&man, 2, 13);
+    let mut sched =
+        Scheduler::new(&nb, &view, None, None, SchedCfg::for_model(&cfg)).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel::<serve::Intake>();
+    for (i, p) in probs.iter().enumerate() {
+        tx.send(serve::Intake::Line(format!(r#"{{"prompt": "{}", "id": "w{}"}}"#, p.prompt, i)))
+            .unwrap();
+    }
+    // the channel stays OPEN (a live client still typing): before the
+    // fix the loop flushed into the dead sink forever; now the first
+    // failed write ends the connection immediately
+    let stats = serve::serve_loop(&mut sched, &rx, &mut BrokenPipe).unwrap();
+    assert!(stats.write_failed, "broken pipe must surface in ServeStats");
+    assert_eq!(stats.served, 0, "nothing was actually delivered");
+    drop(tx);
 }
