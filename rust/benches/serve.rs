@@ -8,8 +8,15 @@
 //! receives it. Reported per case:
 //!
 //! * `p50_ns` / `p99_ns` — time-to-completion latency under load,
-//!   measured from serving start to response emission;
+//!   measured from serving start to response emission, reported from the
+//!   registry's log-linear latency histogram (`qes::obs::Histogram`), so
+//!   the bench exercises the same quantile path `/metrics` serves;
 //! * `tokens_per_s` — total generated tokens over the wall time.
+//!
+//! The `speedup` record `obs_overhead` compares a saturation pass with
+//! trace spans off vs on (metrics are always-on in both legs) so CI can
+//! gate the observability plane's cost: off/on >= 0.95x means tracing
+//! costs at most ~5% of serving throughput.
 //!
 //! The `speedup` record `serve_saturation/mux8` compares the mux (8
 //! clients sharing one continuous batch) against the naive alternative
@@ -89,20 +96,20 @@ fn saturate(
     let total_ns = t0.elapsed().as_nanos();
     assert_eq!(stats.served as usize, reqs.len(), "every request must be answered");
 
-    let mut latencies: Vec<u128> = Vec::new();
+    // the same log-linear histogram the registry serves on /metrics:
+    // quantiles come back as bucket upper bounds, not exact order stats
+    let lat = qes::obs::Histogram::latency_ns();
     let mut tokens = 0usize;
     for c in collectors {
         for (at, toks) in c.join().expect("collector panicked") {
-            latencies.push(at);
+            lat.observe(at as u64);
             tokens += toks;
         }
     }
-    latencies.sort_unstable();
-    let pct = |p: f64| latencies[((latencies.len() as f64 * p) as usize).min(latencies.len() - 1)];
     Saturation {
         total_ns,
-        p50_ns: pct(0.50),
-        p99_ns: pct(0.99),
+        p50_ns: lat.quantile(0.50) as u128,
+        p99_ns: lat.quantile(0.99) as u128,
         tokens_per_s: tokens as f64 / (total_ns as f64 / 1e9),
         served: stats.served,
     }
@@ -192,5 +199,25 @@ fn main() -> anyhow::Result<()> {
     // serially to completion — the value of cross-connection batching
     let serial_ns = serial_per_conn(&nb, &view, &scfg, &reqs, 8);
     report_speedup("speedup", "serve_saturation/mux8", kernel, serial_ns, mux8_ns);
+
+    // observability overhead: the same saturation pass with trace spans
+    // off vs on (counters/gauges/histograms are always-on in BOTH legs).
+    // Best-of-3 each side to shave scheduler jitter; CI gates the ratio
+    // off/on at >= 0.95x, i.e. tracing may cost at most ~5%.
+    qes::obs::set_trace(false);
+    let mut off_ns = u128::MAX;
+    for _ in 0..3 {
+        off_ns = off_ns.min(saturate(&nb, &view, &scfg, &reqs, 8).total_ns);
+    }
+    qes::obs::set_trace(true);
+    let mut on_ns = u128::MAX;
+    for _ in 0..3 {
+        on_ns = on_ns.min(saturate(&nb, &view, &scfg, &reqs, 8).total_ns);
+        // drain between passes so the bounded ring never saturates and
+        // every traced leg pays the full record cost
+        let _ = qes::obs::drain_spans();
+    }
+    qes::obs::reset_trace_from_env();
+    report_speedup("speedup", "obs_overhead", kernel, off_ns, on_ns);
     Ok(())
 }

@@ -18,6 +18,7 @@ use crate::coordinator::session::Session;
 use crate::coordinator::workload::{ClsWorkload, MemberScratch, Workload};
 use crate::model::checkpoint::{self, TrainState};
 use crate::model::{AsParams, ParamStore, ShardedParamStore};
+use crate::obs;
 use crate::opt::{
     quorum_fitness, EsHyper, LatticeOptimizer, MezoOptimizer, PopulationSpec,
     QesFullResidual, QuzoOptimizer, SeedReplayQes,
@@ -94,11 +95,13 @@ pub struct GenLog {
     /// Members that exhausted their retry budget this generation (the
     /// round committed degraded when > 0).
     pub failed_members: usize,
-    /// KV-plane telemetry drained from the schedulers this generation
-    /// retired (`sched::telemetry` — inline path only; pool workers are
-    /// separate processes and keep their own counters): pages-in-use
-    /// high-water, prefix-cache hits, and copy-on-write page forks.
-    /// Observability, never part of the determinism contract.
+    /// KV-plane telemetry read from the metrics registry
+    /// ([`crate::obs::KvDelta`] over the `qes_kv_*` counters fed by the
+    /// schedulers this generation ran): prefix-cache hits and
+    /// copy-on-write page forks as per-generation deltas, pages-in-use
+    /// high-water as the PROCESS-lifetime running maximum (the
+    /// `qes_kv_pages_high_water` gauge). Observability, never part of
+    /// the determinism contract.
     pub kv_pages_hw: u64,
     pub kv_prefix_hits: u64,
     pub kv_cow_forks: u64,
@@ -293,6 +296,10 @@ pub fn finetune_resumable(
     let mut log = RunLog::default();
     // perturbation buffers reused across every inline member evaluation
     let mut scratch = MemberScratch::default();
+    // non-destructive per-generation reader over the registry's KV
+    // counters — other readers (a serve summary in the same process)
+    // see the same totals, nothing is stolen
+    let mut kv = obs::KvDelta::new();
 
     for gen in start_gen..cfg.gens {
         let gen_seed = master.next_u64();
@@ -302,6 +309,8 @@ pub fn finetune_resumable(
         let round_id = gen as u64;
 
         // --- rollout phase ---
+        let trace = obs::trace_enabled();
+        let tr0 = if trace { obs::now_ns() } else { 0 };
         let t0 = Instant::now();
         let rewards: Vec<Option<f32>> = match pool {
             Some(p) => {
@@ -360,12 +369,37 @@ pub fn finetune_resumable(
         };
         let rollout_ms = t0.elapsed().as_secs_f64() * 1e3;
         let failed_members = rewards.iter().filter(|r| r.is_none()).count();
+        obs::m().train_rollout_ns.observe((rollout_ms * 1e6) as u64);
+        if trace {
+            obs::record_span(obs::Span {
+                request: gen as u64,
+                conn: None,
+                member: None,
+                phase: obs::Phase::Rollout,
+                t_start_ns: tr0,
+                t_end_ns: obs::now_ns(),
+                tokens: n_members as u64,
+            });
+        }
 
         // --- update phase ---
         let fitness = quorum_fitness(&rewards, cfg.min_quorum)?;
+        let tu0 = if trace { obs::now_ns() } else { 0 };
         let t1 = Instant::now();
         let stats = opt.update(store, &spec, &fitness)?;
         let update_ms = t1.elapsed().as_secs_f64() * 1e3;
+        obs::m().train_update_ns.observe((update_ms * 1e6) as u64);
+        if trace {
+            obs::record_span(obs::Span {
+                request: gen as u64,
+                conn: None,
+                member: None,
+                phase: obs::Phase::Update,
+                t_start_ns: tu0,
+                t_end_ns: obs::now_ns(),
+                tokens: n_members as u64,
+            });
+        }
 
         let eval_acc = if cfg.eval_every > 0 && (gen + 1) % cfg.eval_every == 0 {
             Some(workload.eval_accuracy(session, &store.params_view())?)
@@ -373,10 +407,10 @@ pub fn finetune_resumable(
             None
         };
         let scored: Vec<f32> = rewards.iter().filter_map(|r| *r).collect();
-        // drain the KV-plane counters the generation's schedulers left
-        // behind (rollout + any eval pass; inline path best-effort)
-        let (kv_pages_hw, kv_prefix_hits, _kv_misses, kv_cow_forks) =
-            crate::sched::telemetry::take();
+        // per-generation KV deltas straight off the registry counters
+        // (rollout + any eval pass; pages_hw is the process-lifetime
+        // high-water gauge)
+        let (kv_pages_hw, kv_prefix_hits, _kv_misses, kv_cow_forks) = kv.delta();
         let entry = GenLog {
             gen,
             mean_reward: crate::util::mean(&scored),
@@ -410,10 +444,26 @@ pub fn finetune_resumable(
             );
         }
         log.entries.push(entry);
+        obs::m().train_rounds.inc();
+        if trace {
+            // generation committed: the lattice update is applied and the
+            // round's entry is logged
+            let t = obs::now_ns();
+            obs::record_span(obs::Span {
+                request: gen as u64,
+                conn: None,
+                member: None,
+                phase: obs::Phase::Commit,
+                t_start_ns: t,
+                t_end_ns: t,
+                tokens: failed_members as u64,
+            });
+        }
 
         // --- crash-consistent checkpoint ---
         if let Some(c) = ckpt {
             if c.every > 0 && ((gen + 1) % c.every == 0 || gen + 1 == cfg.gens) {
+                let tc0 = if trace { obs::now_ns() } else { 0 };
                 let mut blob = Vec::new();
                 opt.save_state(&mut blob)?;
                 let plain = store.materialize();
@@ -425,6 +475,17 @@ pub fn finetune_resumable(
                     variant.name(),
                     &blob,
                 )?;
+                if trace {
+                    obs::record_span(obs::Span {
+                        request: gen as u64,
+                        conn: None,
+                        member: None,
+                        phase: obs::Phase::Checkpoint,
+                        t_start_ns: tc0,
+                        t_end_ns: obs::now_ns(),
+                        tokens: (gen + 1) as u64,
+                    });
+                }
             }
         }
     }

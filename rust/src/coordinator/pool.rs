@@ -507,6 +507,12 @@ impl WorkerPool {
 
         let failed: Vec<usize> =
             (0..n_members).filter(|&m| failed[m]).collect();
+        // mirror the round's fault-plane outcome into the registry
+        let mm = crate::obs::m();
+        mm.pool_retries.add(retries as u64);
+        mm.pool_redispatches.add(redispatches as u64);
+        mm.pool_respawns.add(respawns as u64);
+        mm.pool_failed_members.add(failed.len() as u64);
         Ok(RoundOutcome { rewards, failed, retries, redispatches, respawns })
     }
 

@@ -176,6 +176,9 @@ pub struct FtArgs {
     pub ckpt_every: usize,
     /// Resume from the run's training checkpoint (`--resume`).
     pub resume: bool,
+    /// Dump train-side trace spans as JSONL on exit (`--trace-out`;
+    /// setting it also switches tracing on, same as QES_TRACE=1).
+    pub trace_out: Option<String>,
 }
 
 pub fn parse_ft_args(args: &mut Args) -> Result<FtArgs> {
@@ -221,6 +224,10 @@ pub fn parse_ft_args(args: &mut Args) -> Result<FtArgs> {
     let workers = args.get_usize("workers", 0)?;
     let ckpt_every = args.get_usize("ckpt-every", 1)?;
     let resume = args.get_bool("resume");
+    let trace_out = args.opt("trace-out");
+    if trace_out.is_some() {
+        crate::obs::set_trace(true);
+    }
     // apply the process-wide dispatch only after every flag THIS function
     // parses has succeeded, so an argument error can't leave the global
     // kernel repinned (the caller's trailing `args.finish()` can still
@@ -241,6 +248,7 @@ pub fn parse_ft_args(args: &mut Args) -> Result<FtArgs> {
         workers,
         ckpt_every,
         resume,
+        trace_out,
     })
 }
 
@@ -335,6 +343,10 @@ pub fn cmd_finetune(mut args: Args) -> Result<()> {
         ckpt,
         csv
     );
+    if let Some(p) = &fa.trace_out {
+        let n = crate::obs::dump_trace_jsonl(Path::new(p))?;
+        println!("[finetune] wrote {} trace spans to {}", n, p);
+    }
     Ok(())
 }
 
@@ -377,8 +389,14 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
     // with an explicit "overloaded" error response / HTTP 429
     let max_inflight = args.get_usize("max-inflight", 256)?;
     let conn_queue = args.get_usize("conn-queue", 64)?;
+    // --trace-out FILE: switch per-request trace spans on (same switch
+    // as QES_TRACE=1) and dump the span ring as JSONL on exit
+    let trace_out = args.opt("trace-out");
     args.finish()?;
     let kernel = crate::kernel::force(kernel_choice)?;
+    if trace_out.is_some() {
+        crate::obs::set_trace(true);
+    }
     let man = Manifest::load(&manifest)?;
     let store = match &ckpt {
         Some(p) => checkpoint::load(&man, Path::new(p))?,
@@ -429,21 +447,26 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
         let mut out = std::io::stdout();
         let stats = serve::serve_loop(&mut sched, &rx, &mut out)?;
         let bpp = sched.arena().bytes_per_page();
-        let s = sched.stats();
+        drop(sched); // Drop mirrors the final kv deltas into the registry
+        let mm = crate::obs::m();
         eprintln!(
             "[serve] done: {} responses, {} errors{} | {} steps, {} decode rows, max live {} | kv pages hw {} ({}) | prefix {}/{} hit, {} cow forks",
-            stats.served,
-            stats.errors,
+            mm.serve_served.get(),
+            mm.serve_errors.get(),
             if stats.write_failed { " (output sink died)" } else { "" },
-            s.steps,
-            s.decode_rows,
-            s.max_live,
-            s.pages_high_water,
-            crate::util::human_bytes((s.pages_high_water * bpp) as u64),
-            s.prefix_hits,
-            s.prefix_hits + s.prefix_misses,
-            s.cow_forks
+            mm.sched_steps.get(),
+            mm.sched_decode_rows.get(),
+            mm.sched_max_live.get(),
+            mm.kv_pages_high_water.get(),
+            crate::util::human_bytes(mm.kv_pages_high_water.get() * bpp as u64),
+            mm.kv_prefix_hits.get(),
+            mm.kv_prefix_hits.get() + mm.kv_prefix_misses.get(),
+            mm.kv_cow_forks.get()
         );
+        if let Some(p) = &trace_out {
+            let n = crate::obs::dump_trace_jsonl(Path::new(p))?;
+            eprintln!("[serve] wrote {} trace spans to {}", n, p);
+        }
         return Ok(());
     }
     // TCP/HTTP: concurrent accept loops feeding ONE scheduler through
@@ -474,17 +497,23 @@ pub fn cmd_serve(mut args: Args) -> Result<()> {
     }
     drop(tx); // the accept loops hold the only remaining senders
     let mut sched = Scheduler::new(&backend, &view, None, None, scfg)?;
-    let stats = mux::mux_loop(&mut sched, &rx, &mux_cfg)?;
+    mux::mux_loop(&mut sched, &rx, &mux_cfg)?;
+    drop(sched); // Drop mirrors the final kv deltas into the registry
+    let mm = crate::obs::m();
     eprintln!(
         "[serve] done: {} conns, {} served, {} errors, {} shed, {} cancelled, {} orphaned, {} write-failed",
-        stats.conns,
-        stats.served,
-        stats.errors,
-        stats.shed,
-        stats.cancelled,
-        stats.orphaned,
-        stats.write_failed,
+        mm.serve_conns.get(),
+        mm.serve_served.get(),
+        mm.serve_errors.get(),
+        mm.serve_shed.get(),
+        mm.serve_cancelled.get(),
+        mm.serve_orphaned.get(),
+        mm.serve_write_failed.get(),
     );
+    if let Some(p) = &trace_out {
+        let n = crate::obs::dump_trace_jsonl(Path::new(p))?;
+        eprintln!("[serve] wrote {} trace spans to {}", n, p);
+    }
     Ok(())
 }
 

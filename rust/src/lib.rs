@@ -10,11 +10,13 @@
 //! * [`runtime`] — PJRT engines over AOT HLO artifacts
 //! * [`kernel`] — runtime-dispatched SIMD microkernels (scalar/AVX2/NEON)
 //! * [`sched`] — continuous-batching generation scheduler + `qes serve`
+//! * [`obs`] — metrics registry, Prometheus `/metrics`, trace spans
 //! * [`util`] — offline stand-ins for json/clap/criterion/proptest
 pub mod coordinator;
 pub mod exp;
 pub mod kernel;
 pub mod model;
+pub mod obs;
 pub mod opt;
 pub mod quant;
 pub mod rng;

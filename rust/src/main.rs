@@ -1,7 +1,7 @@
 //! `qes` — the QES launcher.
 //!
 //! ```text
-//! qes info                                          manifest / artifact summary
+//! qes info                                          manifest / artifact / metric summary
 //! qes pretrain  --size nano --task countdown ...    produce a base fp model
 //! qes quantize  --run <dir> --format int4 [--gptq]  PTQ/GPTQ the base model
 //! qes eval      --run <dir> --format int4 ...       greedy accuracy of a ckpt
@@ -9,14 +9,18 @@
 //!               --variant qes|qes-full|quzo \
 //!               [--workers n] [--quorum f] \
 //!               [--faults spec] [--ckpt-every n] \
-//!               [--resume]                          ES fine-tuning (the paper) on a
+//!               [--resume] [--trace-out f]          ES fine-tuning (the paper) on a
 //!                                                   supervised fault-tolerant pool,
 //!                                                   with crash-consistent resume
 //! qes serve     [--ckpt p] [--tcp addr] [--slots n] multi-tenant continuous-batching
 //!               [--http addr]                       server: concurrent connections on
 //!               [--max-inflight n] [--conn-queue n] ONE scheduler; line-delimited JSON
 //!               [--max-line bytes]                  on stdin/--tcp, OpenAI-compatible
-//!               [--read-timeout-ms t]               POST /v1/completions on --http
+//!               [--read-timeout-ms t]               POST /v1/completions on --http;
+//!               [--trace-out f]                     GET /metrics serves Prometheus text,
+//!                                                   a "stats" line returns a JSON metric
+//!                                                   snapshot, --trace-out (or QES_TRACE=1)
+//!                                                   records trace spans, dumped as JSONL
 //! qes exp       table1|table2|table5|table6|        regenerate a paper table
 //!               table7|table8|table9|fig2|fig3 ...  or figure
 //! ```
@@ -107,6 +111,14 @@ fn cmd_info(mut args: Args) -> Result<()> {
     for a in man.artifacts() {
         println!("  {:<28} {:>2} data inputs, {:>3} param inputs, {} outputs",
             a.file, a.data_inputs.len(), a.n_param_inputs, a.outputs.len());
+    }
+    // the observability catalog: every built-in metric family, as served
+    // by `GET /metrics` / the `stats` command (register them first)
+    let _ = qes::obs::m();
+    let catalog = qes::obs::registry().catalog();
+    println!("\nmetrics ({}):", catalog.len());
+    for (name, kind, help) in catalog {
+        println!("  {:<32} {:<9} {}", name, kind, help);
     }
     Ok(())
 }

@@ -1,0 +1,995 @@
+//! Unified observability plane: metrics registry + trace spans.
+//!
+//! Zero-dependency (pure `std::sync::atomic`) telemetry shared by the
+//! serving plane and the training plane so there is ONE source of truth
+//! for every counter that used to live in an ad-hoc struct
+//! (`SchedStats`, `MuxStats`, `RoundOutcome`, the old process-global
+//! `sched::telemetry`). Three primitives:
+//!
+//! * [`Counter`] — monotone `AtomicU64`, relaxed ordering.
+//! * [`Gauge`] — last-value or high-water `AtomicU64` (`set`/`max`).
+//! * [`Histogram`] — log-linear buckets ({1,2,5}×10^e) with lock-free
+//!   `observe` and p50/p90/p99 summaries; the ONE latency definition
+//!   used by `/metrics`, `benches/serve.rs`, and the `stats` command.
+//!
+//! All process-wide metrics register in the global [`registry()`] and
+//! render as Prometheus text exposition format 0.0.4 (`GET /metrics`
+//! on the HTTP front end), as a JSON snapshot (the `stats` line-protocol
+//! command), and as a catalog listing (`qes info`). The well-known
+//! handles are pre-registered in [`Metrics`], reachable via [`m()`].
+//!
+//! The trace side records per-request spans `{request, conn, member,
+//! phase, t_start, t_end, tokens}` covering queued → admitted →
+//! prefill → decode-step → retired on the serve path and resolve /
+//! rollout / update / commit / checkpoint on the train path, into a
+//! bounded ring buffer ([`TRACE_CAP`]) behind a single `AtomicBool`
+//! gate (`QES_TRACE=1` or `--trace-out`). Disabled, a span site costs
+//! one relaxed load.
+//!
+//! Contract neutrality: nothing in this module feeds back into compute.
+//! Wall-clock time is read only to fill observation records, so every
+//! equivalence/scheduler/chaos suite passes bit-identically with
+//! telemetry and tracing fully enabled.
+
+use std::collections::VecDeque;
+use std::io::Write as IoWrite;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Primitives
+// ---------------------------------------------------------------------------
+
+/// Monotonically increasing counter.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        if n > 0 {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value / high-water gauge.
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    /// High-water update: keep the maximum ever seen.
+    pub fn max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn sub(&self, n: u64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-linear-bucket histogram with lock-free observation.
+///
+/// Bucket upper bounds follow the {1, 2, 5} × 10^e pattern so relative
+/// quantile error is bounded (~2.5×) at every scale with ~3 buckets per
+/// decade. A value lands in the first bucket whose bound is >= it;
+/// values above the top bound land in a dedicated overflow bucket whose
+/// reported quantile is the exact maximum observed.
+pub struct Histogram {
+    bounds: Vec<u64>,
+    /// `bounds.len() + 1` slots; the last is the overflow bucket.
+    counts: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histogram {
+    /// Histogram over explicit bucket upper bounds (strictly increasing).
+    pub fn with_bounds(bounds: Vec<u64>) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must be strictly increasing");
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            bounds,
+            counts,
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// {1, 2, 5} × 10^e for e in 0..=max_exp.
+    pub fn log_linear(max_exp: u32) -> Histogram {
+        let mut bounds = Vec::new();
+        for e in 0..=max_exp {
+            let p = 10u64.pow(e);
+            bounds.extend_from_slice(&[p, 2 * p, 5 * p]);
+        }
+        Histogram::with_bounds(bounds)
+    }
+
+    /// The standard latency scale: 1 ns .. 50 s (5×10^10 ns).
+    pub fn latency_ns() -> Histogram {
+        Histogram::log_linear(10)
+    }
+
+    pub fn observe(&self, v: u64) {
+        let i = self.bounds.partition_point(|&b| b < v);
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+    pub fn bounds(&self) -> &[u64] {
+        &self.bounds
+    }
+    /// Per-bucket counts snapshot (overflow bucket last).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Quantile estimate: the upper bound of the bucket holding the
+    /// q-th observation (the exact max for the overflow bucket), so
+    /// `exact_q <= quantile(q) <= smallest bound >= exact_q`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.max.load(Ordering::Relaxed)
+                };
+            }
+        }
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p90(&self) -> u64 {
+        self.quantile(0.90)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+enum Handle {
+    C(&'static Counter),
+    G(&'static Gauge),
+    H(&'static Histogram),
+}
+
+impl Handle {
+    fn kind(&self) -> &'static str {
+        match self {
+            Handle::C(_) => "counter",
+            Handle::G(_) => "gauge",
+            Handle::H(_) => "histogram",
+        }
+    }
+}
+
+struct Entry {
+    name: String,
+    help: String,
+    labels: Vec<(String, String)>,
+    h: Handle,
+}
+
+/// Metric registry: named handles plus Prometheus/JSON/catalog views.
+///
+/// Instantiable for tests; production code uses the process-global
+/// [`registry()`]. Handles are `&'static` (leaked once at registration)
+/// so hot paths touch plain atomics with no locking; the registry lock
+/// is taken only to register and to render.
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+fn labels_eq(a: &[(String, String)], b: &[(&str, &str)]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.0 == y.0 && x.1 == y.1)
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { entries: Mutex::new(Vec::new()) }
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> &'static Counter {
+        self.counter_labeled(name, help, &[])
+    }
+
+    pub fn counter_labeled(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> &'static Counter {
+        let mut es = self.entries.lock().unwrap();
+        for e in es.iter() {
+            if e.name == name && labels_eq(&e.labels, labels) {
+                if let Handle::C(c) = e.h {
+                    return c;
+                }
+            }
+        }
+        let c: &'static Counter = Box::leak(Box::new(Counter::new()));
+        es.push(Entry {
+            name: name.to_string(),
+            help: help.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            h: Handle::C(c),
+        });
+        c
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> &'static Gauge {
+        self.gauge_labeled(name, help, &[])
+    }
+
+    pub fn gauge_labeled(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> &'static Gauge {
+        let mut es = self.entries.lock().unwrap();
+        for e in es.iter() {
+            if e.name == name && labels_eq(&e.labels, labels) {
+                if let Handle::G(g) = e.h {
+                    return g;
+                }
+            }
+        }
+        let g: &'static Gauge = Box::leak(Box::new(Gauge::new()));
+        es.push(Entry {
+            name: name.to_string(),
+            help: help.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            h: Handle::G(g),
+        });
+        g
+    }
+
+    pub fn histogram(&self, name: &str, help: &str, hist: Histogram) -> &'static Histogram {
+        self.histogram_labeled(name, help, &[], hist)
+    }
+
+    pub fn histogram_labeled(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        hist: Histogram,
+    ) -> &'static Histogram {
+        let mut es = self.entries.lock().unwrap();
+        for e in es.iter() {
+            if e.name == name && labels_eq(&e.labels, labels) {
+                if let Handle::H(h) = e.h {
+                    return h;
+                }
+            }
+        }
+        let h: &'static Histogram = Box::leak(Box::new(hist));
+        es.push(Entry {
+            name: name.to_string(),
+            help: help.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            h: Handle::H(h),
+        });
+        h
+    }
+
+    /// Prometheus text exposition format 0.0.4.
+    pub fn render_prometheus(&self) -> String {
+        let es = self.entries.lock().unwrap();
+        let mut out = String::new();
+        let mut seen: Vec<&str> = Vec::new();
+        for first in es.iter() {
+            if seen.contains(&first.name.as_str()) {
+                continue;
+            }
+            seen.push(&first.name);
+            out.push_str(&format!("# HELP {} {}\n", first.name, escape_help(&first.help)));
+            out.push_str(&format!("# TYPE {} {}\n", first.name, first.h.kind()));
+            for e in es.iter().filter(|e| e.name == first.name) {
+                match e.h {
+                    Handle::C(c) => {
+                        out.push_str(&format!(
+                            "{}{} {}\n",
+                            e.name,
+                            label_block(&e.labels, None),
+                            c.get()
+                        ));
+                    }
+                    Handle::G(g) => {
+                        out.push_str(&format!(
+                            "{}{} {}\n",
+                            e.name,
+                            label_block(&e.labels, None),
+                            g.get()
+                        ));
+                    }
+                    Handle::H(h) => {
+                        let counts = h.bucket_counts();
+                        let mut cum = 0u64;
+                        for (i, &b) in h.bounds().iter().enumerate() {
+                            cum += counts[i];
+                            out.push_str(&format!(
+                                "{}_bucket{} {}\n",
+                                e.name,
+                                label_block(&e.labels, Some(&b.to_string())),
+                                cum
+                            ));
+                        }
+                        cum += counts[h.bounds().len()];
+                        out.push_str(&format!(
+                            "{}_bucket{} {}\n",
+                            e.name,
+                            label_block(&e.labels, Some("+Inf")),
+                            cum
+                        ));
+                        out.push_str(&format!(
+                            "{}_sum{} {}\n",
+                            e.name,
+                            label_block(&e.labels, None),
+                            h.sum()
+                        ));
+                        out.push_str(&format!(
+                            "{}_count{} {}\n",
+                            e.name,
+                            label_block(&e.labels, None),
+                            h.count()
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot for the line-protocol `stats` command. Counters and
+    /// gauges map to their value; histograms to {count, sum, p50, p90, p99}.
+    pub fn snapshot_json(&self) -> Json {
+        let es = self.entries.lock().unwrap();
+        let mut m = std::collections::BTreeMap::new();
+        for e in es.iter() {
+            let key = if e.labels.is_empty() {
+                e.name.clone()
+            } else {
+                format!("{}{}", e.name, label_block(&e.labels, None))
+            };
+            let v = match e.h {
+                Handle::C(c) => Json::Num(c.get() as f64),
+                Handle::G(g) => Json::Num(g.get() as f64),
+                Handle::H(h) => {
+                    let mut o = std::collections::BTreeMap::new();
+                    o.insert("count".to_string(), Json::Num(h.count() as f64));
+                    o.insert("sum".to_string(), Json::Num(h.sum() as f64));
+                    o.insert("p50".to_string(), Json::Num(h.p50() as f64));
+                    o.insert("p90".to_string(), Json::Num(h.p90() as f64));
+                    o.insert("p99".to_string(), Json::Num(h.p99() as f64));
+                    Json::Obj(o)
+                }
+            };
+            m.insert(key, v);
+        }
+        Json::Obj(m)
+    }
+
+    /// (name, kind, help) per metric family, registration order.
+    pub fn catalog(&self) -> Vec<(String, &'static str, String)> {
+        let es = self.entries.lock().unwrap();
+        let mut out: Vec<(String, &'static str, String)> = Vec::new();
+        for e in es.iter() {
+            if !out.iter().any(|(n, _, _)| n == &e.name) {
+                out.push((e.name.clone(), e.h.kind(), e.help.clone()));
+            }
+        }
+        out
+    }
+}
+
+/// Escape a label value per the exposition format: `\` `"` and newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// HELP text escaping: `\` and newline (quotes are legal there).
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// `{k="v",...}` (with optional trailing `le`), or "" when empty.
+fn label_block(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{}=\"{}\"", k, escape_label(v))).collect();
+    if let Some(b) = le {
+        parts.push(format!("le=\"{}\"", b));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+/// The process-global registry backing `/metrics`, `stats`, and `qes info`.
+pub fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::new)
+}
+
+// ---------------------------------------------------------------------------
+// Well-known metrics
+// ---------------------------------------------------------------------------
+
+/// Every built-in metric, pre-registered in the global registry.
+/// Centralizing the handles keeps hot paths to a single `m()` call
+/// (OnceLock fast path: one atomic load) + plain atomic ops.
+pub struct Metrics {
+    // scheduler
+    pub sched_steps: &'static Counter,
+    pub sched_prefill_rows: &'static Counter,
+    pub sched_decode_rows: &'static Counter,
+    pub sched_retired: &'static Counter,
+    pub sched_tokens: &'static Counter,
+    pub sched_resolves: &'static Counter,
+    pub sched_slots: &'static Gauge,
+    pub sched_max_live: &'static Gauge,
+    // paged KV arena
+    pub kv_pages_high_water: &'static Gauge,
+    pub kv_prefix_hits: &'static Counter,
+    pub kv_prefix_misses: &'static Counter,
+    pub kv_cow_forks: &'static Counter,
+    // serving plane (stdin serve_loop and the connection mux share these)
+    pub serve_conns: &'static Counter,
+    pub serve_served: &'static Counter,
+    pub serve_errors: &'static Counter,
+    pub serve_shed: &'static Counter,
+    pub serve_cancelled: &'static Counter,
+    pub serve_orphaned: &'static Counter,
+    pub serve_write_failed: &'static Counter,
+    pub serve_active_conns: &'static Gauge,
+    pub serve_inflight: &'static Gauge,
+    pub serve_conn_queue_depth: &'static Histogram,
+    pub serve_latency_ns: &'static Histogram,
+    // worker pool
+    pub pool_retries: &'static Counter,
+    pub pool_redispatches: &'static Counter,
+    pub pool_respawns: &'static Counter,
+    pub pool_failed_members: &'static Counter,
+    // finetune loop
+    pub train_rounds: &'static Counter,
+    pub train_rollout_ns: &'static Histogram,
+    pub train_update_ns: &'static Histogram,
+}
+
+/// Built-in metric handles (registered on first use).
+pub fn m() -> &'static Metrics {
+    static M: OnceLock<Metrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = registry();
+        Metrics {
+            sched_steps: r.counter("qes_sched_steps_total", "Scheduler steps executed"),
+            sched_prefill_rows: r
+                .counter("qes_sched_prefill_rows_total", "Prompt rows prefilled"),
+            sched_decode_rows: r
+                .counter("qes_sched_decode_rows_total", "Decode rows executed (live seqs x steps)"),
+            sched_retired: r.counter("qes_sched_retired_total", "Requests retired (EOS or budget)"),
+            sched_tokens: r.counter("qes_sched_tokens_total", "Tokens emitted by decode"),
+            sched_resolves: r
+                .counter("qes_sched_resolves_total", "Weight resolves (scheduler constructions)"),
+            sched_slots: r.gauge("qes_sched_slots", "Decode slots of the latest scheduler"),
+            sched_max_live: r
+                .gauge("qes_sched_max_live", "High-water concurrent live sequences"),
+            kv_pages_high_water: r
+                .gauge("qes_kv_pages_high_water", "High-water KV pages allocated"),
+            kv_prefix_hits: r
+                .counter("qes_kv_prefix_hits_total", "Prefix-cache hits (shared-prefix adoptions)"),
+            kv_prefix_misses: r.counter("qes_kv_prefix_misses_total", "Prefix-cache misses"),
+            kv_cow_forks: r
+                .counter("qes_kv_cow_forks_total", "Copy-on-write page forks on divergence"),
+            serve_conns: r.counter("qes_serve_conns_total", "Connections accepted"),
+            serve_served: r.counter("qes_serve_served_total", "Responses delivered"),
+            serve_errors: r.counter("qes_serve_errors_total", "Request errors returned"),
+            serve_shed: r.counter("qes_serve_shed_total", "Requests shed by admission control"),
+            serve_cancelled: r
+                .counter("qes_serve_cancelled_total", "Queued requests cancelled at teardown"),
+            serve_orphaned: r
+                .counter("qes_serve_orphaned_total", "Finished outputs dropped (conn gone)"),
+            serve_write_failed: r
+                .counter("qes_serve_write_failed_total", "Connections torn down on failed write"),
+            serve_active_conns: r.gauge("qes_serve_active_conns", "Currently open connections"),
+            serve_inflight: r
+                .gauge("qes_serve_inflight", "Requests in flight (waiting + live)"),
+            serve_conn_queue_depth: r.histogram(
+                "qes_serve_conn_queue_depth",
+                "Per-connection outstanding-request depth at admission",
+                Histogram::log_linear(4),
+            ),
+            serve_latency_ns: r.histogram(
+                "qes_serve_latency_ns",
+                "Request latency submit -> response delivered (ns)",
+                Histogram::latency_ns(),
+            ),
+            pool_retries: r.counter("qes_pool_retries_total", "Member evals retried in place"),
+            pool_redispatches: r
+                .counter("qes_pool_redispatches_total", "Member evals redispatched to peers"),
+            pool_respawns: r.counter("qes_pool_respawns_total", "Workers respawned after death"),
+            pool_failed_members: r
+                .counter("qes_pool_failed_members_total", "Members failed after all retries"),
+            train_rounds: r.counter("qes_train_rounds_total", "Finetune generations completed"),
+            train_rollout_ns: r.histogram(
+                "qes_train_rollout_ns",
+                "Rollout (population eval) wall time per generation (ns)",
+                Histogram::latency_ns(),
+            ),
+            train_update_ns: r.histogram(
+                "qes_train_update_ns",
+                "Optimizer update wall time per generation (ns)",
+                Histogram::latency_ns(),
+            ),
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// KV telemetry reader (replaces the old destructive sched::telemetry::take)
+// ---------------------------------------------------------------------------
+
+/// Non-destructive per-interval reader over the KV counters.
+///
+/// The old `sched::telemetry::take()` swapped the process globals to
+/// zero, so two readers (serve summary + finetune CSV in one process)
+/// silently stole each other's counts. A `KvDelta` snapshots the
+/// registry counters at construction and [`KvDelta::delta`] returns
+/// what accrued since the previous call — the globals are never reset,
+/// and any number of independent readers coexist.
+pub struct KvDelta {
+    hits: u64,
+    misses: u64,
+    forks: u64,
+}
+
+impl KvDelta {
+    pub fn new() -> KvDelta {
+        let mm = m();
+        KvDelta {
+            hits: mm.kv_prefix_hits.get(),
+            misses: mm.kv_prefix_misses.get(),
+            forks: mm.kv_cow_forks.get(),
+        }
+    }
+
+    /// `(pages_high_water, prefix_hits, prefix_misses, cow_forks)` —
+    /// pages as the process-lifetime high-water gauge, the rest as
+    /// deltas since the previous `delta()` (or construction).
+    pub fn delta(&mut self) -> (u64, u64, u64, u64) {
+        let mm = m();
+        let (h, mi, f) =
+            (mm.kv_prefix_hits.get(), mm.kv_prefix_misses.get(), mm.kv_cow_forks.get());
+        let out = (mm.kv_pages_high_water.get(), h - self.hits, mi - self.misses, f - self.forks);
+        self.hits = h;
+        self.misses = mi;
+        self.forks = f;
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace spans
+// ---------------------------------------------------------------------------
+
+/// Ring-buffer capacity: oldest spans are dropped (and counted) beyond this.
+pub const TRACE_CAP: usize = 1 << 16;
+
+/// Lifecycle phase a span describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    // serve path, per request
+    Queued,
+    Admitted,
+    Retired,
+    // serve path, per scheduler step (batch-wide, request = step index)
+    Prefill,
+    DecodeStep,
+    // train path
+    Resolve,
+    Rollout,
+    Update,
+    Commit,
+    Checkpoint,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Queued => "queued",
+            Phase::Admitted => "admitted",
+            Phase::Retired => "retired",
+            Phase::Prefill => "prefill",
+            Phase::DecodeStep => "decode_step",
+            Phase::Resolve => "resolve",
+            Phase::Rollout => "rollout",
+            Phase::Update => "update",
+            Phase::Commit => "commit",
+            Phase::Checkpoint => "checkpoint",
+        }
+    }
+}
+
+/// One trace event. `request` is the scheduler ticket (serve phases),
+/// the step index (batch phases), or the generation (train phases);
+/// `conn`/`member` are `None` where not applicable; `tokens` counts
+/// rows or emitted tokens depending on phase.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub request: u64,
+    pub conn: Option<u64>,
+    pub member: Option<u64>,
+    pub phase: Phase,
+    pub t_start_ns: u64,
+    pub t_end_ns: u64,
+    pub tokens: u64,
+}
+
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+static TRACE_INIT: Once = Once::new();
+
+fn trace_env_default() -> bool {
+    std::env::var("QES_TRACE")
+        .map(|v| matches!(v.trim(), "1" | "on" | "true"))
+        .unwrap_or(false)
+}
+
+/// Is span recording on? First call seeds the gate from `QES_TRACE`;
+/// after that it is one relaxed load — the full cost at a disabled site.
+pub fn trace_enabled() -> bool {
+    TRACE_INIT.call_once(|| TRACE_ON.store(trace_env_default(), Ordering::Relaxed));
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Force the gate (e.g. `--trace-out`, benches, tests).
+pub fn set_trace(on: bool) {
+    TRACE_INIT.call_once(|| ()); // claim init so env can't clobber us later
+    TRACE_ON.store(on, Ordering::Relaxed);
+}
+
+/// Restore the gate to its `QES_TRACE` environment default.
+pub fn reset_trace_from_env() {
+    set_trace(trace_env_default());
+}
+
+/// Monotonic nanoseconds since the first observability call in this
+/// process. Only ever written into observation records.
+pub fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+struct Ring {
+    buf: VecDeque<Span>,
+    dropped: u64,
+}
+
+fn ring() -> &'static Mutex<Ring> {
+    static R: OnceLock<Mutex<Ring>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Ring { buf: VecDeque::new(), dropped: 0 }))
+}
+
+/// Append a span to the ring (no-op while tracing is off).
+pub fn record_span(s: Span) {
+    if !trace_enabled() {
+        return;
+    }
+    let mut r = ring().lock().unwrap();
+    if r.buf.len() >= TRACE_CAP {
+        r.buf.pop_front();
+        r.dropped += 1;
+    }
+    r.buf.push_back(s);
+}
+
+/// Take every buffered span, plus how many were dropped to the cap.
+pub fn drain_spans() -> (Vec<Span>, u64) {
+    let mut r = ring().lock().unwrap();
+    let spans = r.buf.drain(..).collect();
+    let dropped = std::mem::take(&mut r.dropped);
+    (spans, dropped)
+}
+
+fn span_json(s: &Span) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("request".to_string(), Json::Num(s.request as f64));
+    o.insert("conn".to_string(), s.conn.map(|c| Json::Num(c as f64)).unwrap_or(Json::Null));
+    o.insert("member".to_string(), s.member.map(|m| Json::Num(m as f64)).unwrap_or(Json::Null));
+    o.insert("phase".to_string(), Json::Str(s.phase.name().to_string()));
+    o.insert("t_start_ns".to_string(), Json::Num(s.t_start_ns as f64));
+    o.insert("t_end_ns".to_string(), Json::Num(s.t_end_ns as f64));
+    o.insert("tokens".to_string(), Json::Num(s.tokens as f64));
+    Json::Obj(o)
+}
+
+/// Drain the ring to a JSONL file (one span object per line); returns
+/// the number of spans written.
+pub fn dump_trace_jsonl(path: &std::path::Path) -> std::io::Result<usize> {
+    let (spans, dropped) = drain_spans();
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for s in &spans {
+        writeln!(f, "{}", span_json(s).to_string_compact())?;
+    }
+    if dropped > 0 {
+        eprintln!("[obs] trace ring dropped {} spans (cap {})", dropped, TRACE_CAP);
+    }
+    f.flush()?;
+    Ok(spans.len())
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// SplitMix64 — deterministic value streams for property tests.
+    fn splitmix(state: &mut u64) -> u64 {
+        *state = state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = *state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    #[test]
+    fn histogram_quantiles_bound_exact_reference() {
+        // Property: for random value sets across many scales,
+        //   exact_q <= hist.quantile(q) <= smallest bound >= exact_q
+        // and bucket counts are non-negative with cumulative sums
+        // monotone and ending at the total count.
+        let mut s = 0x1234_5678u64;
+        for trial in 0..20u64 {
+            let h = Histogram::latency_ns();
+            let n = 1 + (splitmix(&mut s) % 2000) as usize;
+            let mut vals = Vec::with_capacity(n);
+            for _ in 0..n {
+                // span many decades: 1 .. ~1e10
+                let e = splitmix(&mut s) % 10;
+                let v = 1 + splitmix(&mut s) % 10u64.pow(e as u32 + 1);
+                vals.push(v);
+                h.observe(v);
+            }
+            vals.sort_unstable();
+            assert_eq!(h.count(), n as u64);
+            assert_eq!(h.sum(), vals.iter().sum::<u64>());
+
+            // cumulative monotonicity
+            let counts = h.bucket_counts();
+            assert_eq!(counts.iter().sum::<u64>(), n as u64);
+            let mut cum = 0u64;
+            for c in &counts {
+                let prev = cum;
+                cum += c;
+                assert!(cum >= prev);
+            }
+
+            for &q in &[0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let exact = vals[rank - 1];
+                let got = h.quantile(q);
+                let ceil_bound = h
+                    .bounds()
+                    .iter()
+                    .copied()
+                    .find(|&b| b >= exact)
+                    .unwrap_or(*vals.last().unwrap());
+                assert!(
+                    got >= exact && got <= ceil_bound,
+                    "trial {} q={}: exact {} got {} ceil {}",
+                    trial,
+                    q,
+                    exact,
+                    got,
+                    ceil_bound
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_overflow_bucket_reports_exact_max() {
+        let h = Histogram::with_bounds(vec![10, 100]);
+        h.observe(5);
+        h.observe(12345); // above top bound -> overflow bucket
+        assert_eq!(h.quantile(1.0), 12345);
+        assert_eq!(h.quantile(0.5), 10);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        let r = Registry::new();
+        let c = r.counter("t_requests_total", "Requests seen");
+        c.add(7);
+        let g = r.gauge_labeled("t_depth", "Queue depth", &[("conn", "a\"b\\c\nd")]);
+        g.set(3);
+        let h = r.histogram("t_lat_ns", "Latency", Histogram::with_bounds(vec![10, 100]));
+        h.observe(5);
+        h.observe(50);
+        h.observe(500);
+
+        let text = r.render_prometheus();
+        // every family has exactly one HELP and one TYPE line, TYPE names a
+        // valid metric type, and every sample line belongs to a family
+        for fam in ["t_requests_total", "t_depth", "t_lat_ns"] {
+            assert_eq!(
+                text.lines().filter(|l| *l == format!("# HELP {} {}", fam, match fam {
+                    "t_requests_total" => "Requests seen",
+                    "t_depth" => "Queue depth",
+                    _ => "Latency",
+                })).count(),
+                1,
+                "{}",
+                text
+            );
+            let ty: Vec<&str> = text
+                .lines()
+                .filter(|l| l.starts_with(&format!("# TYPE {} ", fam)))
+                .collect();
+            assert_eq!(ty.len(), 1, "{}", text);
+            let kind = ty[0].rsplit(' ').next().unwrap();
+            assert!(matches!(kind, "counter" | "gauge" | "histogram"), "{}", ty[0]);
+        }
+        assert!(text.contains("t_requests_total 7\n"), "{}", text);
+        // label escaping: backslash, quote, newline
+        assert!(text.contains(r#"t_depth{conn="a\"b\\c\nd"} 3"#), "{}", text);
+        // histogram series: cumulative buckets, +Inf == count, sum/count lines
+        assert!(text.contains("t_lat_ns_bucket{le=\"10\"} 1\n"), "{}", text);
+        assert!(text.contains("t_lat_ns_bucket{le=\"100\"} 2\n"), "{}", text);
+        assert!(text.contains("t_lat_ns_bucket{le=\"+Inf\"} 3\n"), "{}", text);
+        assert!(text.contains("t_lat_ns_sum 555\n"), "{}", text);
+        assert!(text.contains("t_lat_ns_count 3\n"), "{}", text);
+        // no sample line precedes its family's TYPE line
+        let type_pos = text.find("# TYPE t_lat_ns ").unwrap();
+        let sample_pos = text.find("t_lat_ns_bucket").unwrap();
+        assert!(type_pos < sample_pos);
+        // registration is idempotent: same (name, labels) -> same handle
+        let c2 = r.counter("t_requests_total", "Requests seen");
+        c2.inc();
+        assert_eq!(c.get(), 8);
+        assert_eq!(
+            r.render_prometheus().lines().filter(|l| l.starts_with("# TYPE t_requests")).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn snapshot_json_and_catalog_cover_all_families() {
+        let r = Registry::new();
+        r.counter("s_a_total", "A").add(2);
+        let h = r.histogram("s_b_ns", "B", Histogram::with_bounds(vec![10]));
+        h.observe(4);
+        let j = r.snapshot_json();
+        assert_eq!(j.get("s_a_total").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(
+            j.get("s_b_ns").and_then(|v| v.get("count")).and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
+        assert_eq!(j.get("s_b_ns").and_then(|v| v.get("p50")).and_then(|v| v.as_f64()), Some(10.0));
+        let cat = r.catalog();
+        assert_eq!(cat.len(), 2);
+        assert_eq!(cat[0], ("s_a_total".to_string(), "counter", "A".to_string()));
+    }
+
+    #[test]
+    fn trace_ring_bounds_and_drains() {
+        // local exercise of gate + ring; use set_trace to avoid QES_TRACE
+        set_trace(true);
+        drain_spans(); // start clean (other tests share the global ring)
+        for i in 0..(TRACE_CAP + 10) as u64 {
+            record_span(Span {
+                request: i,
+                conn: Some(0xFFFF_FF00),
+                member: None,
+                phase: Phase::Queued,
+                t_start_ns: i,
+                t_end_ns: i + 1,
+                tokens: 0,
+            });
+        }
+        let (spans, dropped) = drain_spans();
+        let mine: Vec<&Span> = spans.iter().filter(|s| s.conn == Some(0xFFFF_FF00)).collect();
+        assert!(mine.len() <= TRACE_CAP);
+        assert!(dropped >= 10, "oldest spans dropped and counted, got {}", dropped);
+        // oldest were evicted first: the LAST span must have survived
+        assert_eq!(mine.last().unwrap().request, (TRACE_CAP + 10) as u64 - 1);
+        set_trace(false);
+        record_span(Span {
+            request: 0,
+            conn: Some(0xFFFF_FF00),
+            member: None,
+            phase: Phase::Queued,
+            t_start_ns: 0,
+            t_end_ns: 0,
+            tokens: 0,
+        });
+        let (spans, _) = drain_spans();
+        assert!(
+            !spans.iter().any(|s| s.conn == Some(0xFFFF_FF00)),
+            "disabled gate records nothing"
+        );
+        reset_trace_from_env();
+    }
+
+    #[test]
+    fn kv_delta_is_non_destructive_across_readers() {
+        let mm = m();
+        let mut a = KvDelta::new();
+        let mut b = KvDelta::new();
+        mm.kv_prefix_hits.add(5);
+        mm.kv_cow_forks.add(2);
+        let (_, ha, _, fa) = a.delta();
+        assert_eq!((ha, fa), (5, 2));
+        // reader B sees the SAME counts — nothing was stolen
+        let (_, hb, _, fb) = b.delta();
+        assert_eq!((hb, fb), (5, 2));
+        // and each reader's second read is a clean delta
+        mm.kv_prefix_hits.add(1);
+        assert_eq!(a.delta().1, 1);
+        assert_eq!(b.delta().1, 1);
+    }
+}

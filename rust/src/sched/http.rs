@@ -242,18 +242,29 @@ pub fn models_body(model: &str) -> String {
 
 /// Frame a full HTTP/1.1 response (status line + headers + JSON body).
 pub fn response(status: u16, reason: &str, body: &str, close: bool) -> Vec<u8> {
+    response_typed(status, reason, "application/json", body, close)
+}
+
+/// [`response`] with an explicit Content-Type (the `/metrics` route
+/// serves Prometheus text exposition, not JSON).
+pub fn response_typed(
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &str,
+    close: bool,
+) -> Vec<u8> {
     let conn = if close { "close" } else { "keep-alive" };
     format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
         status,
         reason,
+        content_type,
         body.len(),
         conn,
+        body,
     )
     .into_bytes()
-    .into_iter()
-    .chain(body.bytes())
-    .collect()
 }
 
 #[cfg(test)]

@@ -87,6 +87,7 @@ use anyhow::{Context, Result};
 
 use crate::kernel::{self, DotKernel, KernelKind};
 use crate::model::ParamsView;
+use crate::obs;
 use crate::quant::Format;
 use crate::rng::SplitMix64;
 use crate::runtime::encode::GenBatch;
@@ -269,6 +270,18 @@ pub struct SchedStats {
     pub cow_forks: u64,
 }
 
+/// A request accepted but not yet admitted into an arena slot.
+struct Waiting {
+    ticket: usize,
+    member: usize,
+    req: GenRequest,
+    /// Serving-plane connection tag (None on direct/training submits) —
+    /// carried into trace spans only, never into compute.
+    conn: Option<u64>,
+    /// Submit timestamp for the queued-phase span (0 when tracing off).
+    t_submit_ns: u64,
+}
+
 /// A sequence currently occupying an arena slot.
 struct Live {
     ticket: usize,
@@ -277,6 +290,10 @@ struct Live {
     /// single-member path): which member's weights this sequence runs
     /// under.
     member: usize,
+    /// See [`Waiting::conn`].
+    conn: Option<u64>,
+    /// Admission timestamp for the retired-phase span (0 = tracing off).
+    t_admit_ns: u64,
     prompt: Vec<u8>,
     max_new: usize,
     tau: f32,
@@ -323,7 +340,7 @@ pub struct Scheduler<'v> {
     /// store slices for every member by construction.
     ps: Vec<NativeParams<'v>>,
     arena: KvArena,
-    waiting: VecDeque<(usize, usize, GenRequest)>,
+    waiting: VecDeque<Waiting>,
     live: Vec<Live>,
     done: BTreeMap<usize, GenOutput>,
     next_ticket: usize,
@@ -364,7 +381,19 @@ impl<'v> Scheduler<'v> {
         let kmajor = scfg.kmajor
             && backend.format() == Format::Int4
             && kr.kind() != KernelKind::Scalar;
+        let t0 = if obs::trace_enabled() { obs::now_ns() } else { 0 };
         let p = backend.resolve_params(view, overrides, emb_t, kmajor)?;
+        if obs::trace_enabled() {
+            obs::record_span(obs::Span {
+                request: 0,
+                conn: None,
+                member: None,
+                phase: obs::Phase::Resolve,
+                t_start_ns: t0,
+                t_end_ns: obs::now_ns(),
+                tokens: 1,
+            });
+        }
         Self::build(mcfg, scfg, kr, vec![p])
     }
 
@@ -393,7 +422,19 @@ impl<'v> Scheduler<'v> {
         if backend.format() == Format::W8A8 {
             scfg.prefix_cache = 0;
         }
+        let t0 = if obs::trace_enabled() { obs::now_ns() } else { 0 };
         let ps = backend.resolve_params_grouped(view, member_overrides, emb_t)?;
+        if obs::trace_enabled() {
+            obs::record_span(obs::Span {
+                request: 0,
+                conn: None,
+                member: None,
+                phase: obs::Phase::Resolve,
+                t_start_ns: t0,
+                t_end_ns: obs::now_ns(),
+                tokens: ps.len() as u64,
+            });
+        }
         Self::build(mcfg, scfg, kr, ps)
     }
 
@@ -426,6 +467,8 @@ impl<'v> Scheduler<'v> {
         // the ONE resolve+pack pass this scheduler will ever perform
         // happened in the constructor, serving all `ps.len()` members
         let stats = SchedStats { resolves: 1, members: ps.len(), ..SchedStats::default() };
+        obs::m().sched_resolves.inc();
+        obs::m().sched_slots.set(scfg.slots as u64);
         Ok(Scheduler {
             mcfg,
             scfg,
@@ -468,6 +511,19 @@ impl<'v> Scheduler<'v> {
     /// [`Scheduler::submit`] against a specific member's weights (grouped
     /// schedulers; member 0 is the only valid id on the classic path).
     pub fn submit_member(&mut self, member: usize, req: GenRequest) -> Result<GenTicket> {
+        self.submit_from(member, req, None)
+    }
+
+    /// [`Scheduler::submit_member`] with a serving-plane connection tag.
+    /// The tag feeds trace spans only — it never influences scheduling,
+    /// batching, or numerics (which connection a request arrives on is a
+    /// free dimension of the batch-invariance contract).
+    pub fn submit_from(
+        &mut self,
+        member: usize,
+        req: GenRequest,
+        conn: Option<u64>,
+    ) -> Result<GenTicket> {
         anyhow::ensure!(
             member < self.ps.len(),
             "member {} out of range for a {}-member scheduler",
@@ -493,7 +549,8 @@ impl<'v> Scheduler<'v> {
             self.done
                 .insert(ticket, GenOutput { tokens: Vec::new(), text: String::new(), cached: 0 });
         } else {
-            self.waiting.push_back((ticket, member, req));
+            let t_submit_ns = if obs::trace_enabled() { obs::now_ns() } else { 0 };
+            self.waiting.push_back(Waiting { ticket, member, req, conn, t_submit_ns });
         }
         Ok(GenTicket(ticket))
     }
@@ -507,19 +564,48 @@ impl<'v> Scheduler<'v> {
             return Ok(false);
         }
         self.stats.steps += 1;
+        let mm = obs::m();
+        mm.sched_steps.inc();
+        let trace = obs::trace_enabled();
         // --- admit waiting requests into free slots ---
         let mut newly: Vec<usize> = Vec::new();
         while !self.waiting.is_empty() {
             let Some(slot) = self.arena.alloc() else { break };
-            let (ticket, member, req) = self.waiting.pop_front().expect("nonempty queue");
+            let w = self.waiting.pop_front().expect("nonempty queue");
+            let t_admit_ns = if trace {
+                let t = obs::now_ns();
+                obs::record_span(obs::Span {
+                    request: w.ticket as u64,
+                    conn: w.conn,
+                    member: Some(w.member as u64),
+                    phase: obs::Phase::Queued,
+                    t_start_ns: w.t_submit_ns,
+                    t_end_ns: t,
+                    tokens: 0,
+                });
+                obs::record_span(obs::Span {
+                    request: w.ticket as u64,
+                    conn: w.conn,
+                    member: Some(w.member as u64),
+                    phase: obs::Phase::Admitted,
+                    t_start_ns: t,
+                    t_end_ns: t,
+                    tokens: w.req.prompt.len() as u64,
+                });
+                t
+            } else {
+                0
+            };
             self.live.push(Live {
-                ticket,
+                ticket: w.ticket,
                 slot,
-                member,
-                prompt: req.prompt,
-                max_new: req.max_new,
-                tau: req.tau,
-                seed: req.seed,
+                member: w.member,
+                conn: w.conn,
+                t_admit_ns,
+                prompt: w.req.prompt,
+                max_new: w.req.max_new,
+                tau: w.req.tau,
+                seed: w.req.seed,
                 cached: 0,
                 tokens: Vec::new(),
                 logits: vec![0.0f32; self.mcfg.vocab],
@@ -527,20 +613,49 @@ impl<'v> Scheduler<'v> {
             newly.push(self.live.len() - 1);
         }
         self.stats.max_live = self.stats.max_live.max(self.live.len());
+        mm.sched_max_live.max(self.live.len() as u64);
         // --- one batched prefill over the newly admitted ---
         if !newly.is_empty() {
+            let t0 = if trace { obs::now_ns() } else { 0 };
+            let rows0 = self.stats.prefill_rows;
             self.prefill(&newly);
+            mm.sched_prefill_rows.add(self.stats.prefill_rows - rows0);
+            if trace {
+                obs::record_span(obs::Span {
+                    request: self.stats.steps,
+                    conn: None,
+                    member: None,
+                    phase: obs::Phase::Prefill,
+                    t_start_ns: t0,
+                    t_end_ns: obs::now_ns(),
+                    tokens: self.stats.prefill_rows - rows0,
+                });
+            }
         }
         // --- sample one token per live sequence; retire finished ---
+        let mut emitted = 0u64;
         let mut i = 0;
         while i < self.live.len() {
             let lv = &mut self.live[i];
             let tok = next_token(lv);
             lv.tokens.push(tok);
+            emitted += 1;
             if tok == EOS_TOK || lv.tokens.len() >= lv.max_new {
                 let lv = self.live.swap_remove(i);
                 self.arena.release(lv.slot);
                 self.stats.retired += 1;
+                mm.sched_retired.inc();
+                if trace {
+                    obs::record_span(obs::Span {
+                        request: lv.ticket as u64,
+                        conn: lv.conn,
+                        member: Some(lv.member as u64),
+                        phase: obs::Phase::Retired,
+                        t_start_ns: lv.t_admit_ns,
+                        t_end_ns: obs::now_ns(),
+                        tokens: lv.tokens.len() as u64,
+                    });
+                }
                 self.done.insert(
                     lv.ticket,
                     GenOutput {
@@ -553,22 +668,51 @@ impl<'v> Scheduler<'v> {
                 i += 1;
             }
         }
+        mm.sched_tokens.add(emitted);
         // --- one batched decode across all survivors ---
         if !self.live.is_empty() {
+            let t0 = if trace { obs::now_ns() } else { 0 };
+            let rows = self.live.len() as u64;
             self.decode_step();
+            mm.sched_decode_rows.add(rows);
+            if trace {
+                obs::record_span(obs::Span {
+                    request: self.stats.steps,
+                    conn: None,
+                    member: None,
+                    phase: obs::Phase::DecodeStep,
+                    t_start_ns: t0,
+                    t_end_ns: obs::now_ns(),
+                    tokens: rows,
+                });
+            }
         }
         self.sync_kv_stats();
         Ok(true)
     }
 
     /// Mirror the arena's paging/prefix counters into the stats block so
-    /// `stats()` is current after every step (and at retirement — the
-    /// `Drop` impl folds the final values into [`telemetry`]).
+    /// `stats()` is current after every step, and feed the increments
+    /// into the global registry ([`crate::obs`]). Registry mirroring is
+    /// delta-based against the last synced value, so the call is
+    /// idempotent — the `Drop` impl runs it once more to catch anything
+    /// accrued since the final step without double counting.
     fn sync_kv_stats(&mut self) {
-        self.stats.pages_high_water = self.arena.pages_high_water();
-        self.stats.prefix_hits = self.arena.prefix_hits();
-        self.stats.prefix_misses = self.arena.prefix_misses();
-        self.stats.cow_forks = self.arena.cow_forks();
+        let mm = obs::m();
+        let (ph, h, mi, f) = (
+            self.arena.pages_high_water(),
+            self.arena.prefix_hits(),
+            self.arena.prefix_misses(),
+            self.arena.cow_forks(),
+        );
+        mm.kv_pages_high_water.max(ph as u64);
+        mm.kv_prefix_hits.add(h - self.stats.prefix_hits);
+        mm.kv_prefix_misses.add(mi - self.stats.prefix_misses);
+        mm.kv_cow_forks.add(f - self.stats.cow_forks);
+        self.stats.pages_high_water = ph;
+        self.stats.prefix_hits = h;
+        self.stats.prefix_misses = mi;
+        self.stats.cow_forks = f;
     }
 
     /// Drive [`Scheduler::step`] until idle.
@@ -593,7 +737,7 @@ impl<'v> Scheduler<'v> {
     /// those are deliberately left untouched (the serving mux cancels a
     /// closed connection's queue without disturbing in-flight slots).
     pub fn cancel_waiting(&mut self, ticket: GenTicket) -> bool {
-        if let Some(pos) = self.waiting.iter().position(|(t, _, _)| *t == ticket.0) {
+        if let Some(pos) = self.waiting.iter().position(|w| w.ticket == ticket.0) {
             self.waiting.remove(pos);
             true
         } else {
@@ -863,44 +1007,9 @@ impl<'v> Scheduler<'v> {
 
 impl Drop for Scheduler<'_> {
     fn drop(&mut self) {
+        // final delta-based mirror into the registry — idempotent, so a
+        // scheduler that already synced on its last step adds nothing
         self.sync_kv_stats();
-        telemetry::record(&self.stats);
-    }
-}
-
-/// Process-global KV-plane telemetry, folded in as schedulers retire
-/// (`Scheduler`'s `Drop`). The finetune loop runs MANY short-lived
-/// schedulers deep inside the workload plumbing (one per grouped round,
-/// one per member otherwise, plus eval passes); these counters let the
-/// run log report paging/prefix-cache behaviour without threading a
-/// handle through every layer. Inline-path best effort by design: pool
-/// WORKERS are separate processes and keep their own counters.
-pub mod telemetry {
-    use std::sync::atomic::{AtomicU64, Ordering};
-
-    static PAGES_HW: AtomicU64 = AtomicU64::new(0);
-    static PREFIX_HITS: AtomicU64 = AtomicU64::new(0);
-    static PREFIX_MISSES: AtomicU64 = AtomicU64::new(0);
-    static COW_FORKS: AtomicU64 = AtomicU64::new(0);
-
-    pub(super) fn record(stats: &super::SchedStats) {
-        PAGES_HW.fetch_max(stats.pages_high_water as u64, Ordering::Relaxed);
-        PREFIX_HITS.fetch_add(stats.prefix_hits, Ordering::Relaxed);
-        PREFIX_MISSES.fetch_add(stats.prefix_misses, Ordering::Relaxed);
-        COW_FORKS.fetch_add(stats.cow_forks, Ordering::Relaxed);
-    }
-
-    /// Drain the counters accumulated since the last call: (pages
-    /// high-water, prefix hits, prefix misses, COW forks). The
-    /// high-water is a maximum across the schedulers that retired in
-    /// the interval; the rest are sums.
-    pub fn take() -> (u64, u64, u64, u64) {
-        (
-            PAGES_HW.swap(0, Ordering::Relaxed),
-            PREFIX_HITS.swap(0, Ordering::Relaxed),
-            PREFIX_MISSES.swap(0, Ordering::Relaxed),
-            COW_FORKS.swap(0, Ordering::Relaxed),
-        )
     }
 }
 

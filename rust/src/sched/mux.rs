@@ -60,6 +60,7 @@ use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 
 use anyhow::Result;
 
+use crate::obs;
 use crate::sched::http::{self, HttpReq};
 use crate::sched::serve::{self, Intake};
 use crate::sched::{GenOutput, GenTicket, Scheduler};
@@ -159,6 +160,9 @@ struct Route {
     seq: Option<u64>,
     /// HTTP only: prompt token count for the `usage` block.
     prompt_tokens: usize,
+    /// Submit timestamp feeding the `qes_serve_latency_ns` histogram at
+    /// delivery (observability only — never read by compute).
+    t_submit_ns: u64,
 }
 
 struct Conn {
@@ -255,6 +259,8 @@ impl Mux {
         match event.ev {
             MuxIn::Open(proto, writer) => {
                 self.stats.conns += 1;
+                obs::m().serve_conns.inc();
+                obs::m().serve_active_conns.add(1);
                 self.conns.insert(conn, Conn::new(proto, writer));
             }
             MuxIn::Line(line) => self.on_line(sched, conn, &line),
@@ -264,6 +270,7 @@ impl Mux {
                 }
                 let id = self.next_line_id(conn).to_string();
                 self.stats.errors += 1;
+                obs::m().serve_errors.inc();
                 self.send_line(
                     sched,
                     conn,
@@ -276,6 +283,7 @@ impl Mux {
                     return;
                 }
                 self.stats.errors += 1;
+                obs::m().serve_errors.inc();
                 let body =
                     http::error_body(&format!("bad request: {}", msg), "invalid_request_error");
                 self.http_immediate(sched, conn, 400, "Bad Request", &body, true);
@@ -301,17 +309,21 @@ impl Mux {
     fn deliver(&mut self, sched: &mut Scheduler<'_>, ticket: GenTicket, out: GenOutput) {
         let Some(route) = self.routes.remove(&ticket.index()) else {
             self.stats.orphaned += 1;
+            obs::m().serve_orphaned.inc();
             return;
         };
         if !self.conns.contains_key(&route.conn) {
             self.stats.orphaned += 1;
+            obs::m().serve_orphaned.inc();
             return;
         }
+        obs::m().serve_latency_ns.observe(obs::now_ns().saturating_sub(route.t_submit_ns));
         match route.seq {
             None => {
                 let line = serve::response_line(&route.id, &out);
                 if self.send_line(sched, route.conn, line) {
                     self.stats.served += 1;
+                    obs::m().serve_served.inc();
                     self.after_line_response(route.conn);
                 }
             }
@@ -320,9 +332,11 @@ impl Mux {
                     http::completion_body(&route.id, &self.cfg.model, &out, route.prompt_tokens);
                 let bytes = http::response(200, "OK", &body, false);
                 self.stats.served += 1;
+                obs::m().serve_served.inc();
                 self.http_stash(sched, route.conn, seq, bytes);
             }
         }
+        obs::m().serve_inflight.set(sched.pending() as u64);
     }
 
     // ---- line protocol ----
@@ -336,11 +350,19 @@ impl Mux {
             return;
         }
         let default_id = self.next_line_id(conn);
+        // registry snapshot on demand — `stats` is a control command,
+        // not a generation request, so it skips admission control and
+        // counts as neither served nor error
+        if line == "stats" {
+            self.send_line(sched, conn, serve::stats_line(&default_id.to_string()));
+            return;
+        }
         let default_max_new = sched.cfg().t_max;
         let pr = match serve::parse_request(line, default_id, default_max_new) {
             Ok(pr) => pr,
             Err(e) => {
                 self.stats.errors += 1;
+                obs::m().serve_errors.inc();
                 self.send_line(
                     sched,
                     conn,
@@ -351,21 +373,32 @@ impl Mux {
         };
         if self.shed(sched, conn) {
             self.stats.shed += 1;
+            obs::m().serve_shed.inc();
             self.send_line(sched, conn, serve::error_line(&pr.id, "overloaded"));
             return;
         }
-        match sched.submit(pr.req) {
+        match sched.submit_from(0, pr.req, Some(conn.0)) {
             Ok(ticket) => {
                 self.routes.insert(
                     ticket.index(),
-                    Route { ticket, conn, id: pr.id, seq: None, prompt_tokens: 0 },
+                    Route {
+                        ticket,
+                        conn,
+                        id: pr.id,
+                        seq: None,
+                        prompt_tokens: 0,
+                        t_submit_ns: obs::now_ns(),
+                    },
                 );
                 if let Some(c) = self.conns.get_mut(&conn) {
                     c.outstanding += 1;
+                    obs::m().serve_conn_queue_depth.observe(c.outstanding as u64);
                 }
+                obs::m().serve_inflight.set(sched.pending() as u64);
             }
             Err(e) => {
                 self.stats.errors += 1;
+                obs::m().serve_errors.inc();
                 self.send_line(sched, conn, serve::error_line(&pr.id, &format!("{:#}", e)));
             }
         }
@@ -387,6 +420,7 @@ impl Mux {
         bytes.push(b'\n');
         if c.writer.send(bytes).is_err() {
             self.stats.write_failed += 1;
+            obs::m().serve_write_failed.inc();
             self.teardown(sched, conn);
             return false;
         }
@@ -426,8 +460,32 @@ impl Mux {
                 let body = http::models_body(&self.cfg.model);
                 self.http_immediate(sched, conn, 200, "OK", &body, close)
             }
+            ("GET", "/metrics") => {
+                let body = obs::registry().render_prometheus();
+                self.http_immediate_typed(
+                    sched,
+                    conn,
+                    200,
+                    "OK",
+                    "text/plain; version=0.0.4; charset=utf-8",
+                    &body,
+                    close,
+                )
+            }
+            // known path, wrong method: 405, not a 404 (and not the old
+            // 400) — the resource exists, the verb is what's rejected
+            (_, "/v1/completions" | "/health" | "/v1/models" | "/metrics") => {
+                self.stats.errors += 1;
+                obs::m().serve_errors.inc();
+                let body = http::error_body(
+                    &format!("method {} not allowed for {}", req.method, req.path),
+                    "invalid_request_error",
+                );
+                self.http_immediate(sched, conn, 405, "Method Not Allowed", &body, close)
+            }
             _ => {
                 self.stats.errors += 1;
+                obs::m().serve_errors.inc();
                 let body = http::error_body(
                     &format!("no route for {} {}", req.method, req.path),
                     "invalid_request_error",
@@ -450,6 +508,7 @@ impl Mux {
             Ok(g) => g,
             Err(e) => {
                 self.stats.errors += 1;
+                obs::m().serve_errors.inc();
                 let body = http::error_body(&format!("{:#}", e), "invalid_request_error");
                 self.http_immediate(sched, conn, 400, "Bad Request", &body, close);
                 return;
@@ -457,27 +516,38 @@ impl Mux {
         };
         if self.shed(sched, conn) {
             self.stats.shed += 1;
+            obs::m().serve_shed.inc();
             let body = http::error_body("overloaded", "overloaded_error");
             self.http_immediate(sched, conn, 429, "Too Many Requests", &body, close);
             return;
         }
         let prompt_tokens = gen.prompt.len();
-        match sched.submit(gen) {
+        match sched.submit_from(0, gen, Some(conn.0)) {
             Ok(ticket) => {
                 let Some(c) = self.conns.get_mut(&conn) else { return };
                 let seq = c.next_seq;
                 c.next_seq += 1;
                 c.order.push_back(seq);
                 c.outstanding += 1;
+                obs::m().serve_conn_queue_depth.observe(c.outstanding as u64);
                 if close {
                     c.close_at = Some(seq);
                 }
                 let id = format!("cmpl-{}", ticket.index());
-                let route = Route { ticket, conn, id, seq: Some(seq), prompt_tokens };
+                let route = Route {
+                    ticket,
+                    conn,
+                    id,
+                    seq: Some(seq),
+                    prompt_tokens,
+                    t_submit_ns: obs::now_ns(),
+                };
                 self.routes.insert(ticket.index(), route);
+                obs::m().serve_inflight.set(sched.pending() as u64);
             }
             Err(e) => {
                 self.stats.errors += 1;
+                obs::m().serve_errors.inc();
                 let body = http::error_body(&format!("{:#}", e), "invalid_request_error");
                 self.http_immediate(sched, conn, 400, "Bad Request", &body, close);
             }
@@ -495,6 +565,22 @@ impl Mux {
         body: &str,
         close: bool,
     ) {
+        self.http_immediate_typed(sched, conn, status, reason, "application/json", body, close)
+    }
+
+    /// [`Mux::http_immediate`] with an explicit Content-Type
+    /// (`/metrics` serves Prometheus text, not JSON).
+    #[allow(clippy::too_many_arguments)]
+    fn http_immediate_typed(
+        &mut self,
+        sched: &mut Scheduler<'_>,
+        conn: ConnId,
+        status: u16,
+        reason: &str,
+        content_type: &str,
+        body: &str,
+        close: bool,
+    ) {
         let Some(c) = self.conns.get_mut(&conn) else { return };
         let seq = c.next_seq;
         c.next_seq += 1;
@@ -503,7 +589,7 @@ impl Mux {
         if close {
             c.close_at = Some(seq);
         }
-        let bytes = http::response(status, reason, body, close);
+        let bytes = http::response_typed(status, reason, content_type, body, close);
         self.http_stash(sched, conn, seq, bytes);
     }
 
@@ -532,6 +618,7 @@ impl Mux {
         }
         if dead {
             self.stats.write_failed += 1;
+            obs::m().serve_write_failed.inc();
             self.teardown(sched, conn);
             return;
         }
@@ -565,14 +652,18 @@ impl Mux {
     /// Graceful close: drop the writer (its thread exits, closing the
     /// socket write half). Routes already emptied by the caller.
     fn close(&mut self, conn: ConnId) {
-        self.conns.remove(&conn);
+        if self.conns.remove(&conn).is_some() {
+            obs::m().serve_active_conns.sub(1);
+        }
     }
 
     /// Hard teardown: cancel this connection's queued-but-unadmitted
     /// requests; in-flight slots keep decoding and their outputs are
     /// dropped as orphaned at drain time.
     fn teardown(&mut self, sched: &mut Scheduler<'_>, conn: ConnId) {
-        self.conns.remove(&conn);
+        if self.conns.remove(&conn).is_some() {
+            obs::m().serve_active_conns.sub(1);
+        }
         let mine: Vec<usize> = self
             .routes
             .iter()
@@ -584,10 +675,12 @@ impl Mux {
             if sched.cancel_waiting(ticket) {
                 self.routes.remove(&idx);
                 self.stats.cancelled += 1;
+                obs::m().serve_cancelled.inc();
             }
             // else: already admitted — leave the route; deliver() will
             // drop the finished output as orphaned.
         }
+        obs::m().serve_inflight.set(sched.pending() as u64);
     }
 }
 

@@ -32,6 +32,7 @@ use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 
 use anyhow::{Context, Result};
 
+use crate::obs;
 use crate::sched::{GenOutput, GenRequest, Scheduler};
 use crate::tasks::tokenizer;
 use crate::util::json::Json;
@@ -131,6 +132,16 @@ pub fn error_line(id: &str, err: &str) -> String {
     let mut m = BTreeMap::new();
     m.insert("id".to_string(), Json::Str(id.to_string()));
     m.insert("error".to_string(), Json::Str(err.to_string()));
+    Json::Obj(m).to_string_compact()
+}
+
+/// Response to the `stats` line-protocol command: a JSON snapshot of
+/// the whole metrics registry (counters/gauges as values, histograms as
+/// `{count, sum, p50, p90, p99}`), keyed by metric name.
+pub fn stats_line(id: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Str(id.to_string()));
+    m.insert("stats".to_string(), obs::registry().snapshot_json());
     Json::Obj(m).to_string_compact()
 }
 
@@ -253,7 +264,8 @@ pub fn serve_loop<W: Write>(
     out: &mut W,
 ) -> Result<ServeStats> {
     let default_max_new = sched.cfg().t_max;
-    let mut ids: HashMap<usize, String> = HashMap::new();
+    // ticket -> (response id, submit timestamp for the latency histogram)
+    let mut ids: HashMap<usize, (String, u64)> = HashMap::new();
     let mut next_id = 0usize;
     let mut stats = ServeStats::default();
     let mut open = true;
@@ -284,14 +296,18 @@ pub fn serve_loop<W: Write>(
         // emit everything finished so far (zero-budget requests complete
         // at submit time, before any step runs)
         for (ticket, o) in sched.drain_finished() {
-            let id = ids
+            let (id, t_submit) = ids
                 .remove(&ticket.index())
-                .unwrap_or_else(|| ticket.index().to_string());
+                .unwrap_or_else(|| (ticket.index().to_string(), 0));
+            if t_submit > 0 {
+                obs::m().serve_latency_ns.observe(obs::now_ns().saturating_sub(t_submit));
+            }
             if writeln!(out, "{}", response_line(&id, &o)).is_err() {
                 stats.write_failed = true;
                 break 'conn;
             }
             stats.served += 1;
+            obs::m().serve_served.inc();
         }
         if out.flush().is_err() {
             stats.write_failed = true;
@@ -338,7 +354,7 @@ fn submit_intake<W: Write>(
     sched: &mut Scheduler<'_>,
     intake: Intake,
     default_max_new: usize,
-    ids: &mut HashMap<usize, String>,
+    ids: &mut HashMap<usize, (String, u64)>,
     next_id: &mut usize,
     out: &mut W,
     stats: &mut ServeStats,
@@ -359,6 +375,7 @@ fn submit_intake<W: Write>(
                 )
             )?;
             stats.errors += 1;
+            obs::m().serve_errors.inc();
             Ok(())
         }
     }
@@ -369,7 +386,7 @@ fn submit_line<W: Write>(
     sched: &mut Scheduler<'_>,
     line: &str,
     default_max_new: usize,
-    ids: &mut HashMap<usize, String>,
+    ids: &mut HashMap<usize, (String, u64)>,
     next_id: &mut usize,
     out: &mut W,
     stats: &mut ServeStats,
@@ -380,19 +397,28 @@ fn submit_line<W: Write>(
     }
     let default_id = *next_id;
     *next_id += 1;
+    // registry snapshot on demand (same command the mux understands) —
+    // a control command, counted as neither served nor error
+    if line == "stats" {
+        writeln!(out, "{}", stats_line(&default_id.to_string()))?;
+        return Ok(());
+    }
     match parse_request(line, default_id, default_max_new) {
         Ok(pr) => match sched.submit(pr.req) {
             Ok(ticket) => {
-                ids.insert(ticket.index(), pr.id);
+                ids.insert(ticket.index(), (pr.id, obs::now_ns()));
+                obs::m().serve_inflight.set(sched.pending() as u64);
             }
             Err(e) => {
                 writeln!(out, "{}", error_line(&pr.id, &format!("{:#}", e)))?;
                 stats.errors += 1;
+                obs::m().serve_errors.inc();
             }
         },
         Err(e) => {
             writeln!(out, "{}", error_line(&default_id.to_string(), &format!("{:#}", e)))?;
             stats.errors += 1;
+            obs::m().serve_errors.inc();
         }
     }
     Ok(())

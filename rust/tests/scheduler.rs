@@ -1181,3 +1181,148 @@ fn serve_loop_write_failure_ends_connection() {
     assert_eq!(stats.served, 0, "nothing was actually delivered");
     drop(tx);
 }
+
+#[test]
+fn mux_metrics_endpoint_and_method_not_allowed() {
+    // GET /metrics serves the Prometheus exposition over the shared
+    // registry; a wrong method on a KNOWN path is 405 (the resource
+    // exists, the verb is rejected), never the old 400 or a 404.
+    let (man, q) = quant_store(53);
+    let cfg = man.config("nano").unwrap().clone();
+    let nb = NativeBackend::new(&man, "nano", Format::Int4).unwrap();
+    let view = q.params_view();
+    let probs = problems(&man, 1, 29);
+    let mut scfg = SchedCfg::for_model(&cfg);
+    scfg.slots = 1;
+    scfg.kernel = Some(KernelKind::Scalar);
+
+    let (tx, rx) = std::sync::mpsc::channel::<MuxEvent>();
+    let wrx = open(&tx, 0, Proto::Http);
+    let req = |method: &str, path: &str, body: &str| MuxIn::Http(HttpReq {
+        method: method.into(),
+        path: path.into(),
+        headers: Vec::new(),
+        body: body.as_bytes().to_vec(),
+    });
+    let send = |ev: MuxIn| tx.send(MuxEvent { conn: ConnId(0), ev }).unwrap();
+    send(req("POST", "/v1/completions", &format!(r#"{{"prompt": "{}"}}"#, probs[0].prompt)));
+    send(req("GET", "/metrics", ""));
+    send(req("GET", "/v1/completions", ""));
+    send(req("POST", "/health", ""));
+    send(req("DELETE", "/metrics", ""));
+    send(req("GET", "/nope", ""));
+    send(MuxIn::HalfClosed);
+    drop(tx);
+    let mut sched = Scheduler::new(&nb, &view, None, None, scfg).unwrap();
+    let mcfg = MuxCfg { max_inflight: 0, conn_queue: 0, model: "qes-test".into() };
+    let stats = mux::mux_loop(&mut sched, &rx, &mcfg).unwrap();
+    assert_eq!(stats.served, 1);
+    assert_eq!(stats.errors, 4, "three 405s and one 404");
+
+    let stream = drain_str(&wrx);
+    let responses = split_http(&stream);
+    let statuses: Vec<u16> = responses.iter().map(|(s, _)| *s).collect();
+    assert_eq!(statuses, vec![200, 200, 405, 405, 405, 404], "{:?}", responses);
+    assert!(stream.contains("text/plain; version=0.0.4"), "{}", stream);
+
+    // the exposition carries every serving-plane metric family
+    let metrics = &responses[1].1;
+    for name in [
+        "qes_sched_steps_total",
+        "qes_sched_tokens_total",
+        "qes_sched_retired_total",
+        "qes_sched_slots",
+        "qes_kv_pages_high_water",
+        "qes_kv_prefix_hits_total",
+        "qes_kv_cow_forks_total",
+        "qes_serve_inflight",
+        "qes_serve_shed_total",
+        "qes_serve_write_failed_total",
+        "qes_pool_retries_total",
+        "qes_serve_latency_ns_bucket",
+        "qes_serve_latency_ns_sum",
+        "qes_serve_latency_ns_count",
+    ] {
+        assert!(metrics.contains(name), "metric {} missing from /metrics:\n{}", name, metrics);
+    }
+
+    // 405 bodies are structured errors like the rest of the surface
+    for i in [2usize, 3, 4] {
+        let e = Json::parse(&responses[i].1).unwrap();
+        let msg = e.get("error").unwrap().get("message").unwrap().as_str().unwrap().to_string();
+        assert!(msg.contains("not allowed"), "{:?}", responses[i]);
+    }
+}
+
+#[test]
+fn trace_spans_follow_request_lifecycle_under_teardown_and_shedding() {
+    // Per-request trace discipline: every ADMITTED request produces a
+    // queued -> admitted -> retired chain tagged with its connection;
+    // requests shed by admission control or cancelled by a client
+    // teardown while still waiting must never produce a span at all.
+    let (man, q) = quant_store(67);
+    let cfg = man.config("nano").unwrap().clone();
+    let nb = NativeBackend::new(&man, "nano", Format::Int4).unwrap();
+    let view = q.params_view();
+    let probs = problems(&man, 4, 19);
+    let mut scfg = SchedCfg::for_model(&cfg);
+    scfg.slots = 1;
+    scfg.kernel = Some(KernelKind::Scalar);
+
+    qes::obs::set_trace(true);
+    let _ = qes::obs::drain_spans(); // start from an empty ring
+
+    // conn ids are huge and unique so spans recorded by OTHER tests in
+    // this same process can be filtered out below
+    const C0: u64 = 0xbeef_0000;
+    const C1: u64 = 0xbeef_0001;
+    let (tx, rx) = std::sync::mpsc::channel::<MuxEvent>();
+    let _w0 = open(&tx, C0, Proto::Line);
+    let w1 = open(&tx, C1, Proto::Line);
+    // conn C0 queues two requests then disconnects hard before any step
+    // runs: both are cancelled while waiting
+    line(&tx, C0, format!(r#"{{"prompt": "{}", "id": "a0"}}"#, probs[0].prompt));
+    line(&tx, C0, format!(r#"{{"prompt": "{}", "id": "a1"}}"#, probs[1].prompt));
+    tx.send(MuxEvent { conn: ConnId(C0), ev: MuxIn::Gone }).unwrap();
+    // conn C1 queues three; the global cap of 2 sheds the third
+    line(&tx, C1, format!(r#"{{"prompt": "{}", "id": "b0"}}"#, probs[2].prompt));
+    line(&tx, C1, format!(r#"{{"prompt": "{}", "id": "b1"}}"#, probs[3].prompt));
+    line(&tx, C1, format!(r#"{{"prompt": "{}", "id": "b2"}}"#, probs[0].prompt));
+    half_close(&tx, C1);
+    drop(tx);
+    let mut sched = Scheduler::new(&nb, &view, None, None, scfg).unwrap();
+    let mcfg = MuxCfg { max_inflight: 2, conn_queue: 0, model: "m".into() };
+    let stats = mux::mux_loop(&mut sched, &rx, &mcfg).unwrap();
+    drop(sched);
+    assert_eq!(stats.served, 2);
+    assert_eq!(stats.shed, 1);
+    assert_eq!(stats.cancelled, 2);
+    let t1 = drain_str(&w1);
+    assert!(t1.lines().any(|l| l.contains(r#""id":"b0""#) && l.contains("\"text\"")), "{}", t1);
+
+    let (spans, _dropped) = qes::obs::drain_spans();
+    qes::obs::reset_trace_from_env();
+    let mine: Vec<&qes::obs::Span> =
+        spans.iter().filter(|s| s.conn == Some(C0) || s.conn == Some(C1)).collect();
+    assert!(
+        mine.iter().all(|s| s.conn == Some(C1)),
+        "cancelled/shed requests must not produce spans: {:?}",
+        mine
+    );
+    let by_phase = |ph: qes::obs::Phase| -> std::collections::BTreeSet<u64> {
+        mine.iter().filter(|s| s.phase == ph).map(|s| s.request).collect()
+    };
+    let queued = by_phase(qes::obs::Phase::Queued);
+    let admitted = by_phase(qes::obs::Phase::Admitted);
+    let retired = by_phase(qes::obs::Phase::Retired);
+    assert_eq!(queued.len(), 2, "{:?}", mine);
+    assert_eq!(queued, admitted, "every queued span admits");
+    assert_eq!(admitted, retired, "every admitted request retires exactly once");
+    for s in &mine {
+        assert!(s.t_end_ns >= s.t_start_ns, "spans run forward in time: {:?}", s);
+    }
+    for r in mine.iter().filter(|s| s.phase == qes::obs::Phase::Retired) {
+        assert!(r.tokens > 0, "retired span carries the emitted token count: {:?}", r);
+        assert_eq!(r.member, Some(0));
+    }
+}
